@@ -1,0 +1,63 @@
+//! Layout explorer: visualize the paper's data layouts (Fig. 3) and how the
+//! hierarchization variants traverse them.
+//!
+//! ```bash
+//! cargo run --release --example layout_explorer -- --level 4
+//! ```
+
+use anyhow::Result;
+use sgct::cli::Args;
+use sgct::grid::{bfs_from_position, bfs_to_position, hier_coords, predecessors, BfsNav};
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let l = args.get("level", 4u8)?;
+    let n = (1u32 << l) - 1;
+
+    println!("1-d pole of level {l}: {n} points, positions 1..{n}\n");
+
+    println!("position layout (Fig. 3 left):  pos -> (sub-level, index)");
+    for p in 1..=n {
+        let c = hier_coords(l, p);
+        let (lt, rt) = predecessors(l, p);
+        println!(
+            "  pos {p:>3}  lev {}  idx {:>3}  preds: {} {}",
+            c.level,
+            c.index,
+            lt.map(|v| v.to_string()).unwrap_or("-".into()),
+            rt.map(|v| v.to_string()).unwrap_or("-".into()),
+        );
+    }
+
+    println!("\nBFS layout (Fig. 3 middle): rank -> position, level blocks contiguous");
+    let mut lev_mark = 0;
+    for r in 0..n {
+        let p = bfs_to_position(l, r);
+        let c = hier_coords(l, p);
+        if c.level != lev_mark {
+            lev_mark = c.level;
+            println!("  -- sub-level {lev_mark} --");
+        }
+        let h = r + 1;
+        println!(
+            "  rank {r:>3} (heap {h:>3})  pos {p:>3}   parent {}  climb-pred {}",
+            BfsNav::parent(h).map(|v| format!("heap {v}")).unwrap_or("-".into()),
+            match (BfsNav::left_pred(h), BfsNav::right_pred(h), h % 2) {
+                (Some(a), _, 1) if Some(a) != BfsNav::parent(h) => format!("heap {a} (left, climbs)"),
+                (_, Some(b), 0) if Some(b) != BfsNav::parent(h) => format!("heap {b} (right, climbs)"),
+                _ => "-".into(),
+            }
+        );
+    }
+
+    println!("\nround-trip check: position -> BFS rank -> position");
+    for p in 1..=n {
+        assert_eq!(bfs_to_position(l, bfs_from_position(l, p)), p);
+    }
+    println!("  OK for all {n} points");
+
+    println!("\nwhy over-vectorization works (Fig. 3 right): for working");
+    println!("directions >= 2 the {n} poles along x1 are contiguous in memory;");
+    println!("one Alg. 1 update becomes a single daxpy over the whole row.");
+    Ok(())
+}

@@ -1,0 +1,4 @@
+# build-time package: enable f64 so kernels preserve input dtype
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,125 @@
+"""AOT lowering: JAX entry points -> HLO **text** artifacts + manifest.
+
+Run once at build time (``make artifacts``); the rust runtime loads the text
+with ``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU
+client.  Text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids.
+
+Artifacts are keyed ``<entry>_<l_1>x<l_2>x...<l_d>`` with the level vector in
+*paper* order (dimension 1 first).  ``manifest.tsv`` (one row per artifact:
+name, entry, levels, dtype, steps, path) is the only metadata the rust side
+parses — deliberately not JSON so the coordinator needs no JSON parser.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        [--levels 5,4 --levels 3,3,3 ...] [--steps 8] [--dtype f32]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default artifact set: the level vectors the examples / pipeline bench use.
+# 2-d combination scheme of level 5 (|l|_1 in {6, 5}) + a 3-d scheme of level 4.
+DEFAULT_SCHEMES = [
+    # d=2, n=5: q=0 grids |l|=6, q=1 grids |l|=5
+    (5, 1), (4, 2), (3, 3), (2, 4), (1, 5),
+    (4, 1), (3, 2), (2, 3), (1, 4),
+    # d=3, n=4: |l|=6 (q=0), |l|=5 (q=1), |l|=4 (q=2)
+    (4, 1, 1), (1, 4, 1), (1, 1, 4), (3, 2, 1), (3, 1, 2), (1, 3, 2),
+    (2, 3, 1), (2, 1, 3), (1, 2, 3), (2, 2, 2),
+    (3, 1, 1), (1, 3, 1), (1, 1, 3), (2, 2, 1), (2, 1, 2), (1, 2, 2),
+    (2, 1, 1), (1, 2, 1), (1, 1, 2),
+]
+
+DTYPES = {"f32": jnp.float32, "f64": jnp.float64}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _levels_tag(levels_paper) -> str:
+    return "x".join(str(l) for l in levels_paper)
+
+
+def entry_specs(levels_paper, dtype, steps: int):
+    """(name, callable, example-args) for every AOT entry of one level vector.
+
+    ``levels_paper`` is paper order (dim 1 first); arrays are shaped with the
+    *reversed* vector (dim 1 = fastest = last axis).
+    """
+    levels = tuple(reversed(levels_paper))
+    shape = model.grid_shape(levels)
+    u = jax.ShapeDtypeStruct(shape, dtype)
+    dt = jax.ShapeDtypeStruct((), dtype)
+    return [
+        ("hierarchize", lambda x: (model.hierarchize_nd(x, levels),), (u,)),
+        ("dehierarchize", lambda x: (model.dehierarchize_nd(x, levels),), (u,)),
+        ("heat_step", lambda x, s: (model.heat_step(x, s, levels),), (u, dt)),
+        (
+            f"solve_hier{steps}",
+            lambda x, s: (model.solve_hierarchize(x, s, levels, steps),),
+            (u, dt),
+        ),
+    ]
+
+
+def lower_one(entry_name, fn, example_args, out_path: str) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--levels", action="append", default=[],
+                    help="comma-separated level vector in paper order (dim 1 first); repeatable")
+    ap.add_argument("--steps", type=int, default=8, help="solver steps fused into solve_hier")
+    ap.add_argument("--dtype", choices=sorted(DTYPES), default="f64")
+    args = ap.parse_args(argv)
+
+    schemes = [tuple(int(t) for t in s.split(",")) for s in args.levels] or DEFAULT_SCHEMES
+    dtype = DTYPES[args.dtype]
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    rows = []
+    for levels_paper in schemes:
+        tag = _levels_tag(levels_paper)
+        for entry, fn, ex in entry_specs(levels_paper, dtype, args.steps):
+            name = f"{entry}_{tag}"
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            digest = lower_one(entry, fn, ex, path)
+            steps = args.steps if entry.startswith("solve_hier") else 1
+            rows.append((name, entry, tag, args.dtype, steps, os.path.basename(path), digest))
+            print(f"  lowered {name:<28} -> {os.path.basename(path)} ({digest})")
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\tentry\tlevels\tdtype\tsteps\tfile\tsha256_16\n")
+        for r in rows:
+            f.write("\t".join(str(c) for c in r) + "\n")
+    print(f"wrote {len(rows)} artifacts + manifest.tsv to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

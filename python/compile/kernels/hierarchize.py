@@ -1,0 +1,191 @@
+"""Layer-1 Pallas kernels: pole-batch hierarchization / dehierarchization.
+
+TPU-shaped port of the paper's best CPU code (*BFS-OverVectorized*):
+
+  * The paper vectorizes **orthogonal to the pole** — a 4-wide AVX register
+    spans 4 contiguous poles.  On TPU the analogue is putting the contiguous
+    x1-poles in the **lane** (last, 128-wide) dimension of the Pallas block and
+    running Alg. 1's level loop in the sublane dimension.
+  * The paper's *over-vectorization* handles all ``2**l1 - 1`` poles of a row
+    in the inner loop; here one kernel invocation updates a whole
+    ``[pole_block, n_work, n_lane]`` tile resident in VMEM.
+  * The paper's *pre-branching* hoists the 1-vs-2-predecessor branch out of
+    the row loop; here predecessor existence is resolved at **trace time**
+    (levels are static), so the kernel has no data-dependent control flow at
+    all — boundary reads come from a zero-padded snapshot.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and correctness (pytest vs :mod:`ref`) plus the VMEM/OI
+model in DESIGN.md §Hardware-Adaptation stand in for real-TPU timings.
+
+Two kernels cover the two cases of Alg. 1's outer loop:
+
+  * ``hierarchize_last_axis``  — working dimension is x1 itself (the pole *is*
+    the lane axis; the strided in-pole accesses are what made this the hard
+    case on CPU too, cf. Fig. 4);
+  * ``hierarchize_middle_axis`` — working dimension >= 2: operand viewed as
+    ``[outer, n_k, inner]`` with ``inner`` = all faster axes collapsed; the
+    update is a daxpy over contiguous rows (the over-vectorized scheme).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = [
+    "hierarchize_last_axis",
+    "hierarchize_middle_axis",
+    "dehierarchize_last_axis",
+    "dehierarchize_middle_axis",
+    "vmem_footprint_bytes",
+]
+
+# VMEM budget used to choose block sizes (bytes). Real TPUs have ~16 MiB/core;
+# stay well under to leave room for double-buffering.
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def _pole_block(batch: int, per_pole_bytes: int) -> int:
+    """Largest power-of-two pole block that fits the VMEM budget."""
+    b = 1
+    while b * 2 <= batch and (b * 2) * per_pole_bytes <= VMEM_BUDGET:
+        b *= 2
+    return b
+
+
+def vmem_footprint_bytes(block_shape, dtype=jnp.float32) -> int:
+    """Estimated VMEM residency of one kernel invocation (in + out tile)."""
+    elems = math.prod(block_shape)
+    return 2 * elems * jnp.dtype(dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# last-axis (working dimension == x1)
+# ---------------------------------------------------------------------------
+
+
+def _sublevel_update(x, src, level: int, sub: int, axis: int):
+    """Predecessor sum for sub-level ``sub``, masked to its points.
+
+    Pallas kernels may not capture constant index arrays, so the update is
+    built from *static slices* of an ``s``-padded snapshot plus an iota mask:
+    position ``p`` (1-based) lives at index ``p + s - 1`` of the padded
+    snapshot, so the left/right predecessors of all points are the two static
+    windows ``[0, n)`` and ``[2s, 2s + n)`` — the virtual boundary positions 0
+    and ``2**level`` land in the zero padding.  This is exactly the paper's
+    pre-branching: no data-dependent control flow survives into the kernel.
+    """
+    n = x.shape[axis]
+    s = 1 << (level - sub)
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (s, s)
+    xp = jnp.pad(src, pad)
+    left = jax.lax.slice_in_dim(xp, 0, n, axis=axis)
+    right = jax.lax.slice_in_dim(xp, 2 * s, 2 * s + n, axis=axis)
+    pos = jax.lax.broadcasted_iota(jnp.int32, x.shape, axis) + 1
+    mask = (pos % (2 * s)) == s
+    return jnp.where(mask, 0.5 * (left + right), jnp.zeros_like(x))
+
+
+def _hier_last_kernel(x_ref, o_ref, *, level: int):
+    """Hierarchize each row of the (block, n) tile along the last axis."""
+    x = x_ref[...]
+    out = x
+    # All predecessor reads are from strictly coarser sub-levels, which stay
+    # nodal during the fine->coarse sweep: every update reads the input x.
+    for sub in range(level, 1, -1):
+        out = out - _sublevel_update(x, x, level, sub, axis=x.ndim - 1)
+    o_ref[...] = out
+
+
+def _dehier_last_kernel(x_ref, o_ref, *, level: int):
+    x = x_ref[...]
+    out = x
+    # coarse -> fine: reads must see already-dehierarchized (nodal) values
+    for sub in range(2, level + 1):
+        out = out + _sublevel_update(x, out, level, sub, axis=x.ndim - 1)
+    o_ref[...] = out
+
+
+def _last_axis_call(kernel, x, level: int):
+    batch, n = x.shape
+    assert n == ref.axis_points(level), (n, level)
+    blk = _pole_block(batch, per_pole_bytes=2 * (n + 2) * x.dtype.itemsize)
+    grid = (pl.cdiv(batch, blk),)
+    return pl.pallas_call(
+        functools.partial(kernel, level=level),
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((blk, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def hierarchize_last_axis(x, level: int):
+    """Hierarchize a ``[batch, 2**level - 1]`` pole batch along the last axis."""
+    return _last_axis_call(_hier_last_kernel, x, level)
+
+
+def dehierarchize_last_axis(x, level: int):
+    """Inverse of :func:`hierarchize_last_axis`."""
+    return _last_axis_call(_dehier_last_kernel, x, level)
+
+
+# ---------------------------------------------------------------------------
+# middle-axis (working dimension >= 2): the over-vectorized scheme
+# ---------------------------------------------------------------------------
+
+
+def _hier_mid_kernel(x_ref, o_ref, *, level: int):
+    """Hierarchize the middle axis of a (blk, n_k, inner) tile.
+
+    The inner (lane) axis holds contiguous x1-poles: every update is a fused
+    multiply-add over whole contiguous rows — the paper's over-vectorization.
+    """
+    x = x_ref[...]
+    out = x
+    for sub in range(level, 1, -1):
+        out = out - _sublevel_update(x, x, level, sub, axis=1)
+    o_ref[...] = out
+
+
+def _dehier_mid_kernel(x_ref, o_ref, *, level: int):
+    x = x_ref[...]
+    out = x
+    for sub in range(2, level + 1):
+        out = out + _sublevel_update(x, out, level, sub, axis=1)
+    o_ref[...] = out
+
+
+def _mid_axis_call(kernel, x, level: int):
+    outer, nk, inner = x.shape
+    assert nk == ref.axis_points(level), (nk, level)
+    blk = _pole_block(outer, per_pole_bytes=2 * (nk + 2) * inner * x.dtype.itemsize)
+    grid = (pl.cdiv(outer, blk),)
+    return pl.pallas_call(
+        functools.partial(kernel, level=level),
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk, nk, inner), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((blk, nk, inner), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def hierarchize_middle_axis(x, level: int):
+    """Hierarchize the middle axis of ``[outer, 2**level - 1, inner]``."""
+    return _mid_axis_call(_hier_mid_kernel, x, level)
+
+
+def dehierarchize_middle_axis(x, level: int):
+    """Inverse of :func:`hierarchize_middle_axis`."""
+    return _mid_axis_call(_dehier_mid_kernel, x, level)

@@ -1,0 +1,197 @@
+"""Pure-jnp / numpy reference oracle for hierarchization.
+
+Conventions (exactly the paper's):
+  * refinement level 1 == one single grid point;
+  * a 1-d axis of level ``l`` carries ``2**l - 1`` interior points at positions
+    ``1 .. 2**l - 1`` (step ``2**-l`` on the unit interval), no boundary points;
+  * hierarchization (Alg. 1) walks levels ``l .. 2`` (fine -> coarse) and
+    subtracts half of each existing hierarchical predecessor;
+  * boundary positions 0 and ``2**l`` do not exist and contribute 0.
+
+Two independent formulations are provided:
+
+  * :func:`hierarchize_nd` / :func:`dehierarchize_nd` — the per-axis sweep the
+    production code uses (shared loop structure, but written against plain
+    numpy-style indexing);
+  * :func:`hierarchize_direct` — a genuinely independent tensor-product stencil
+    evaluation straight from the definition of the hierarchical surplus, used
+    to cross-validate the sweep on small grids.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "axis_points",
+    "level_indices",
+    "hierarchize_axis",
+    "dehierarchize_axis",
+    "hierarchize_nd",
+    "dehierarchize_nd",
+    "hierarchize_direct",
+    "hat_eval_1d",
+    "interpolate_nd",
+]
+
+
+def axis_points(level: int) -> int:
+    """Number of grid points of a 1-d axis of refinement ``level`` (>=1)."""
+    if level < 1:
+        raise ValueError(f"level must be >= 1, got {level}")
+    return (1 << level) - 1
+
+
+def level_indices(level: int, sub: int):
+    """1-based positions of the points on sub-level ``sub`` of an axis of
+    refinement ``level`` together with their predecessor positions.
+
+    Returns ``(idx, left, right)`` as numpy int arrays; ``left``/``right`` may
+    contain the virtual boundary positions 0 and ``2**level``.
+    """
+    s = 1 << (level - sub)
+    idx = np.arange(s, 1 << level, 2 * s, dtype=np.int64)
+    return idx, idx - s, idx + s
+
+
+def _moved(x, axis):
+    """Move ``axis`` to the end; return (moved array, inverse mover)."""
+    xm = jnp.moveaxis(x, axis, -1)
+    return xm, lambda y: jnp.moveaxis(y, -1, axis)
+
+
+def hierarchize_axis(x, level: int, axis: int = -1):
+    """Hierarchize along one axis (all other axes are independent poles).
+
+    All sub-levels read nodal values of strictly coarser points, which are
+    untouched while sweeping fine -> coarse, so every read can come from a
+    single padded snapshot of the input.
+    """
+    x = jnp.asarray(x)
+    xm, back = _moved(x, axis)
+    n = xm.shape[-1]
+    if n != axis_points(level):
+        raise ValueError(f"axis has {n} points, level {level} needs {axis_points(level)}")
+    pad = [(0, 0)] * (xm.ndim - 1) + [(1, 1)]
+    xp = jnp.pad(xm, pad)  # 1-based positions 0..2**level, boundaries zero
+    out = xm
+    for sub in range(level, 1, -1):
+        idx, left, right = level_indices(level, sub)
+        upd = -0.5 * (xp[..., left] + xp[..., right])
+        out = out.at[..., idx - 1].add(upd)
+    return back(out)
+
+
+def dehierarchize_axis(x, level: int, axis: int = -1):
+    """Inverse of :func:`hierarchize_axis` (coarse -> fine sweep).
+
+    Reads see *updated* (already nodal) coarser values, so the padded snapshot
+    is refreshed per sub-level.
+    """
+    x = jnp.asarray(x)
+    xm, back = _moved(x, axis)
+    n = xm.shape[-1]
+    if n != axis_points(level):
+        raise ValueError(f"axis has {n} points, level {level} needs {axis_points(level)}")
+    pad = [(0, 0)] * (xm.ndim - 1) + [(1, 1)]
+    out = xm
+    for sub in range(2, level + 1):
+        xp = jnp.pad(out, pad)
+        idx, left, right = level_indices(level, sub)
+        out = out.at[..., idx - 1].add(0.5 * (xp[..., left] + xp[..., right]))
+    return back(out)
+
+
+def _check_shape(x, levels):
+    shape = tuple(axis_points(l) for l in levels)
+    if tuple(x.shape) != shape:
+        raise ValueError(f"grid shape {x.shape} does not match levels {levels} -> {shape}")
+
+
+def hierarchize_nd(x, levels):
+    """Hierarchize a d-dim combination grid.
+
+    ``x`` has shape ``(2**l_d - 1, ..., 2**l_1 - 1)`` — row-major with the
+    *first* paper dimension fastest (last numpy axis), matching the rust side.
+    ``levels`` is given slowest-first, i.e. ``levels[k]`` is the level of axis
+    ``k`` of ``x``.
+    """
+    x = jnp.asarray(x)
+    _check_shape(x, levels)
+    for ax, l in enumerate(levels):
+        x = hierarchize_axis(x, l, axis=ax)
+    return x
+
+
+def dehierarchize_nd(x, levels):
+    """Inverse of :func:`hierarchize_nd`."""
+    x = jnp.asarray(x)
+    _check_shape(x, levels)
+    for ax, l in enumerate(levels):
+        x = dehierarchize_axis(x, l, axis=ax)
+    return x
+
+
+def hierarchize_direct(x, levels):
+    """Independent oracle: tensor-product surplus stencil from the definition.
+
+    The d-dim hierarchization operator factorizes as the tensor product of the
+    1-d operators H_l = I - 0.5 S_l^- - 0.5 S_l^+ where S^± shift to the
+    point's own-level hierarchical predecessors.  Here each 1-d operator is
+    materialized as a dense matrix and applied with tensordot — no shared loop
+    structure with the sweeps above.  Use only on small grids.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    _check_shape(x, levels)
+    out = x
+    for ax, l in enumerate(levels):
+        n = axis_points(l)
+        H = np.eye(n)
+        for sub in range(l, 1, -1):
+            idx, left, right = level_indices(l, sub)
+            for i, lf, rg in zip(idx, left, right):
+                if lf >= 1:
+                    H[i - 1, lf - 1] = -0.5
+                if rg <= n:
+                    H[i - 1, rg - 1] = -0.5
+        out = np.moveaxis(np.tensordot(H, np.moveaxis(out, ax, 0), axes=(1, 0)), 0, ax)
+    return out
+
+
+def hat_eval_1d(level: int, index: int, x):
+    """Evaluate the 1-d hierarchical hat basis phi_{level,index} at ``x``.
+
+    The point sits at ``index * 2**-level`` with support radius ``2**-level``.
+    """
+    x = jnp.asarray(x)
+    h = 2.0 ** (-level)
+    return jnp.maximum(0.0, 1.0 - jnp.abs(x / h - index))
+
+
+def interpolate_nd(surplus, levels, pts):
+    """Evaluate the hierarchical interpolant at arbitrary points.
+
+    ``surplus``: hierarchized grid, shape per :func:`hierarchize_nd`.
+    ``pts``: array (m, d) of coordinates in (0,1)^d, ordered like ``levels``
+    (slowest axis first).  O(N * m) — oracle use only.
+    """
+    surplus = np.asarray(surplus)
+    pts = np.atleast_2d(np.asarray(pts, dtype=np.float64))
+    d = len(levels)
+    assert pts.shape[1] == d
+    vals = np.zeros(pts.shape[0])
+    for multi in np.ndindex(*surplus.shape):
+        w = surplus[multi]
+        if w == 0.0:
+            continue
+        contrib = np.full(pts.shape[0], float(w))
+        for ax in range(d):
+            pos = multi[ax] + 1  # 1-based position on the full axis
+            tz = (pos & -pos).bit_length() - 1
+            lev = levels[ax] - tz
+            idx = pos >> tz
+            h = 2.0 ** (-lev)
+            contrib *= np.maximum(0.0, 1.0 - np.abs(pts[:, ax] / h - idx))
+        vals += contrib
+    return vals

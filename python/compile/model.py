@@ -1,0 +1,99 @@
+"""Layer-2 JAX model: full d-dim operators composed from the L1 kernels.
+
+Every public function here is an AOT entry point: it takes concrete arrays,
+is shaped by a static level vector, and lowers (via :mod:`compile.aot`) to one
+HLO-text artifact per (entry, level-vector).  Python never runs at request
+time — the rust coordinator executes these artifacts through PJRT.
+
+Grid memory convention (shared with rust): row-major with paper-dimension 1
+fastest, i.e. a level vector ``(l_1, ..., l_d)`` maps to array shape
+``(2**l_d - 1, ..., 2**l_1 - 1)`` — ``levels`` arguments here are the *array*
+axis levels, slowest first: ``levels[k] = l_{d-k}``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hierarchize as hk
+from .kernels import ref
+from .kernels import stencil
+
+__all__ = [
+    "grid_shape",
+    "hierarchize_nd",
+    "dehierarchize_nd",
+    "heat_step",
+    "heat_solve",
+    "solve_hierarchize",
+]
+
+
+def grid_shape(levels):
+    """Array shape for axis levels (slowest first)."""
+    return tuple(ref.axis_points(l) for l in levels)
+
+
+def _apply_axis(x, level: int, axis: int, last_fn, mid_fn):
+    """Dispatch one axis sweep to the right L1 kernel.
+
+    axis == ndim-1 (x1, unit stride): pole == lane axis -> last-axis kernel.
+    otherwise: view as [outer, n_axis, inner] with inner = collapsed faster
+    axes (contiguous in memory) -> middle-axis (over-vectorized) kernel.
+    """
+    shape = x.shape
+    n = shape[axis]
+    if axis == x.ndim - 1:
+        y = last_fn(x.reshape(-1, n), level)
+        return y.reshape(shape)
+    outer = math.prod(shape[:axis]) if axis > 0 else 1
+    inner = math.prod(shape[axis + 1 :])
+    y = mid_fn(x.reshape(outer, n, inner), level)
+    return y.reshape(shape)
+
+
+def hierarchize_nd(x, levels):
+    """Nodal -> hierarchical basis on a full combination grid.
+
+    The axis order mirrors Alg. 1's outer loop (dimension 1 first = last
+    array axis); the axis sweeps commute, so order only matters for perf.
+    """
+    assert x.shape == grid_shape(levels), (x.shape, levels)
+    for ax in range(x.ndim - 1, -1, -1):
+        x = _apply_axis(x, levels[ax], ax, hk.hierarchize_last_axis, hk.hierarchize_middle_axis)
+    return x
+
+
+def dehierarchize_nd(x, levels):
+    """Hierarchical -> nodal basis (exact inverse of :func:`hierarchize_nd`)."""
+    assert x.shape == grid_shape(levels), (x.shape, levels)
+    for ax in range(x.ndim - 1, -1, -1):
+        x = _apply_axis(x, levels[ax], ax, hk.dehierarchize_last_axis, hk.dehierarchize_middle_axis)
+    return x
+
+
+def heat_step(u, dt, levels):
+    """One explicit heat step on the combination grid (L1 stencil kernel)."""
+    return stencil.heat_step(u, levels, dt)
+
+
+def heat_solve(u, dt, levels, steps: int):
+    """``steps`` explicit heat steps — the CT compute phase between gathers."""
+
+    def body(_, v):
+        return stencil.heat_step(v, levels, dt)
+
+    return jax.lax.fori_loop(0, steps, body, u)
+
+
+def solve_hierarchize(u, dt, levels, steps: int):
+    """Fused compute-phase + preprocessing: t solver steps then hierarchize.
+
+    This is the per-combination-grid unit of work of the iterated CT (Fig. 2):
+    fusing it into one artifact saves one HBM round-trip per grid per
+    iteration.
+    """
+    return hierarchize_nd(heat_solve(u, dt, levels, steps), levels)

@@ -1,0 +1,152 @@
+"""Pallas kernels vs the pure-jnp oracle — the CORE L1 correctness signal.
+
+hypothesis sweeps levels / batch sizes / dtypes; assert_allclose against
+ref.py per the repro contract.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hierarchize as hk
+from compile.kernels import ref, stencil
+
+RNG = np.random.default_rng(1)
+
+
+def rand(shape, dtype=np.float32):
+    return RNG.standard_normal(shape).astype(dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == np.float32 else dict(rtol=1e-11, atol=1e-11)
+
+
+# ---------------------------------------------------------------------- last
+
+
+@pytest.mark.parametrize("level", [1, 2, 3, 5, 8])
+@pytest.mark.parametrize("batch", [1, 3, 17])
+def test_hier_last_axis_matches_ref(level, batch):
+    x = rand((batch, ref.axis_points(level)))
+    got = np.asarray(hk.hierarchize_last_axis(x, level))
+    want = np.asarray(ref.hierarchize_axis(x, level))
+    np.testing.assert_allclose(got, want, **tol(np.float32))
+
+
+@pytest.mark.parametrize("level", [2, 4, 7])
+def test_dehier_last_axis_roundtrip(level):
+    x = rand((5, ref.axis_points(level)))
+    h = hk.hierarchize_last_axis(x, level)
+    back = np.asarray(hk.dehierarchize_last_axis(h, level))
+    np.testing.assert_allclose(back, x, **tol(np.float32))
+
+
+# ---------------------------------------------------------------------- mid
+
+
+@pytest.mark.parametrize("level", [1, 2, 3, 6])
+@pytest.mark.parametrize("outer,inner", [(1, 1), (2, 7), (5, 3)])
+def test_hier_middle_axis_matches_ref(level, outer, inner):
+    x = rand((outer, ref.axis_points(level), inner))
+    got = np.asarray(hk.hierarchize_middle_axis(x, level))
+    want = np.asarray(ref.hierarchize_axis(x, level, axis=1))
+    np.testing.assert_allclose(got, want, **tol(np.float32))
+
+
+@pytest.mark.parametrize("level", [2, 5])
+def test_dehier_middle_axis_roundtrip(level):
+    x = rand((3, ref.axis_points(level), 4))
+    h = hk.hierarchize_middle_axis(x, level)
+    back = np.asarray(hk.dehierarchize_middle_axis(h, level))
+    np.testing.assert_allclose(back, x, **tol(np.float32))
+
+
+# ------------------------------------------------------------- hypothesis
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    level=st.integers(min_value=1, max_value=7),
+    batch=st.integers(min_value=1, max_value=32),
+    f64=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hier_last_axis_hypothesis(level, batch, f64, seed):
+    dtype = np.float64 if f64 else np.float32
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((batch, ref.axis_points(level))).astype(dtype)
+    got = np.asarray(hk.hierarchize_last_axis(x, level))
+    want = np.asarray(ref.hierarchize_axis(x.astype(np.float64), level))
+    np.testing.assert_allclose(got, want, **tol(dtype))
+    assert got.dtype == dtype
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    level=st.integers(min_value=1, max_value=6),
+    outer=st.integers(min_value=1, max_value=9),
+    inner=st.integers(min_value=1, max_value=9),
+    f64=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hier_middle_axis_hypothesis(level, outer, inner, f64, seed):
+    dtype = np.float64 if f64 else np.float32
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((outer, ref.axis_points(level), inner)).astype(dtype)
+    got = np.asarray(hk.hierarchize_middle_axis(x, level))
+    want = np.asarray(ref.hierarchize_axis(x.astype(np.float64), level, axis=1))
+    np.testing.assert_allclose(got, want, **tol(dtype))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    level=st.integers(min_value=1, max_value=6),
+    batch=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_roundtrip_hypothesis(level, batch, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((batch, ref.axis_points(level))).astype(np.float64)
+    h = hk.hierarchize_last_axis(x, level)
+    back = np.asarray(hk.dehierarchize_last_axis(h, level))
+    np.testing.assert_allclose(back, x, rtol=1e-11, atol=1e-11)
+
+
+# ---------------------------------------------------------------- stencil
+
+
+@pytest.mark.parametrize("levels", [(3,), (3, 2), (2, 2, 2)])
+def test_heat_step_matches_reference(levels):
+    shape = tuple(ref.axis_points(l) for l in levels)
+    u = rand(shape, np.float64)
+    dt = stencil.stable_dt(levels)
+    got = np.asarray(stencil.heat_step(u, levels, dt))
+    want = np.asarray(stencil.heat_step_reference(u, levels, dt))
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_heat_step_decays_sine_mode():
+    # u = prod sin(pi x_i) is the slowest eigenmode: one step scales it by
+    # (1 - dt * sum_i pi^2) + O(h^2) discretization error.
+    levels = (5, 5)
+    n = ref.axis_points(5)
+    xs = np.arange(1, n + 1) / 2**5
+    u = np.outer(np.sin(np.pi * xs), np.sin(np.pi * xs))
+    dt = stencil.stable_dt(levels)
+    out = np.asarray(stencil.heat_step(u, levels, dt))
+    # discrete eigenvalue of the 1-d laplacian: -4/h^2 sin^2(pi h / 2)
+    h = 2.0**-5
+    lam = -4.0 / h**2 * np.sin(np.pi * h / 2) ** 2
+    want = (1.0 + dt * 2 * lam) * u
+    np.testing.assert_allclose(out, want, rtol=1e-10, atol=1e-12)
+
+
+def test_stable_dt_is_stable():
+    levels = (4, 3)
+    dt = stencil.stable_dt(levels)
+    assert dt * 2.0 * (4.0**4 + 4.0**3) <= 1.0 + 1e-12
+
+
+def test_vmem_footprint():
+    assert hk.vmem_footprint_bytes((8, 127), np.float32) == 2 * 8 * 127 * 4

@@ -1,0 +1,108 @@
+"""L2 model vs oracle: nd composition, solver fusion, AOT artifact sanity."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, stencil
+
+RNG = np.random.default_rng(2)
+
+
+def rand(levels, dtype=np.float64):
+    return RNG.standard_normal(model.grid_shape(levels)).astype(dtype)
+
+
+@pytest.mark.parametrize("levels", [(3,), (2, 3), (3, 2), (2, 2, 2), (1, 3, 2), (4, 1)])
+def test_hierarchize_nd_matches_ref(levels):
+    x = rand(levels)
+    got = np.asarray(model.hierarchize_nd(x, levels))
+    want = np.asarray(ref.hierarchize_nd(x, levels))
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+@pytest.mark.parametrize("levels", [(3, 2), (2, 2, 2), (5,)])
+def test_dehierarchize_nd_roundtrip(levels):
+    x = rand(levels)
+    h = model.hierarchize_nd(x, levels)
+    back = np.asarray(model.dehierarchize_nd(h, levels))
+    np.testing.assert_allclose(back, x, rtol=1e-11, atol=1e-11)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    levels=st.lists(st.integers(min_value=1, max_value=4), min_size=1, max_size=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hierarchize_nd_hypothesis(levels, seed):
+    levels = tuple(levels)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(model.grid_shape(levels))
+    got = np.asarray(model.hierarchize_nd(x, levels))
+    want = ref.hierarchize_direct(x, levels)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_heat_solve_composes_steps():
+    levels = (3, 3)
+    u = rand(levels)
+    dt = stencil.stable_dt(levels)
+    got = np.asarray(model.heat_solve(u, dt, levels, 3))
+    want = u
+    for _ in range(3):
+        want = np.asarray(stencil.heat_step_reference(want, levels, dt))
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_solve_hierarchize_fusion():
+    levels = (2, 3)
+    u = rand(levels)
+    dt = stencil.stable_dt(levels)
+    got = np.asarray(model.solve_hierarchize(u, dt, levels, 2))
+    stepped = np.asarray(model.heat_solve(u, dt, levels, 2))
+    want = np.asarray(ref.hierarchize_nd(stepped, levels))
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+
+
+def test_grid_shape():
+    assert model.grid_shape((3, 1, 2)) == (7, 1, 3)
+
+
+# --------------------------------------------------------------------- AOT
+
+
+def test_aot_lowering_produces_hlo_text(tmp_path):
+    from compile import aot
+
+    rc = aot.main(["--out-dir", str(tmp_path), "--levels", "3,2", "--steps", "2"])
+    assert rc == 0
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert "manifest.tsv" in names
+    assert "hierarchize_3x2.hlo.txt" in names
+    assert "solve_hier2_3x2.hlo.txt" in names
+    text = (tmp_path / "hierarchize_3x2.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    # f32[3,7]: levels paper-order (3,2) -> array shape (2**2-1, 2**3-1)
+    assert "f64[3,7]" in text
+    manifest = (tmp_path / "manifest.tsv").read_text().strip().splitlines()
+    assert manifest[0].startswith("#")
+    rows = [l.split("\t") for l in manifest[1:]]
+    assert {r[1] for r in rows} == {"hierarchize", "dehierarchize", "heat_step", "solve_hier2"}
+    for r in rows:
+        assert (tmp_path / r[5]).exists()
+
+
+def test_aot_artifacts_are_deterministic(tmp_path):
+    from compile import aot
+
+    a, b = tmp_path / "a", tmp_path / "b"
+    aot.main(["--out-dir", str(a), "--levels", "2,2"])
+    aot.main(["--out-dir", str(b), "--levels", "2,2"])
+    ta = (a / "hierarchize_2x2.hlo.txt").read_text()
+    tb = (b / "hierarchize_2x2.hlo.txt").read_text()
+    assert ta == tb

@@ -1,0 +1,114 @@
+"""Oracle self-consistency: the per-axis sweep vs the independent dense
+tensor-product operator, round-trips, and interpolation semantics."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand_grid(levels):
+    return RNG.standard_normal(tuple(ref.axis_points(l) for l in levels))
+
+
+@pytest.mark.parametrize("level", [1, 2, 3, 4, 5, 6])
+def test_axis_points(level):
+    assert ref.axis_points(level) == 2**level - 1
+
+
+def test_axis_points_invalid():
+    with pytest.raises(ValueError):
+        ref.axis_points(0)
+
+
+@pytest.mark.parametrize("level,sub", [(3, 3), (3, 2), (5, 4), (5, 2)])
+def test_level_indices_structure(level, sub):
+    idx, left, right = ref.level_indices(level, sub)
+    s = 1 << (level - sub)
+    assert len(idx) == 2 ** (sub - 1)
+    assert idx[0] == s and idx[-1] == (1 << level) - s
+    assert np.all(right - idx == s) and np.all(idx - left == s)
+    # predecessors sit on strictly coarser sub-levels (even multiples of s)
+    assert np.all((left % (2 * s)) == 0) and np.all((right % (2 * s)) == 0)
+
+
+@pytest.mark.parametrize(
+    "levels",
+    [(1,), (2,), (3,), (6,), (2, 2), (3, 2), (1, 4), (2, 3, 2), (3, 1, 2), (2, 2, 2, 2)],
+)
+def test_sweep_matches_direct(levels):
+    x = rand_grid(levels)
+    got = np.asarray(ref.hierarchize_nd(x, levels))
+    want = ref.hierarchize_direct(x, levels)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("levels", [(1,), (4,), (6,), (3, 3), (2, 4), (2, 3, 2), (1, 1, 5)])
+def test_roundtrip_identity(levels):
+    x = rand_grid(levels)
+    h = ref.hierarchize_nd(x, levels)
+    back = np.asarray(ref.dehierarchize_nd(h, levels))
+    np.testing.assert_allclose(back, x, rtol=1e-12, atol=1e-12)
+
+
+def test_level1_axes_are_noops():
+    # level-1 axes have a single (root) point: hierarchization must not touch it
+    x = rand_grid((1, 1, 3))
+    h = np.asarray(ref.hierarchize_nd(x, (1, 1, 3)))
+    want = np.asarray(ref.hierarchize_axis(x, 3, axis=2))
+    np.testing.assert_allclose(h, want)
+
+
+def test_hierarchize_is_linear():
+    levels = (3, 2)
+    a, b = rand_grid(levels), rand_grid(levels)
+    lhs = np.asarray(ref.hierarchize_nd(2.5 * a - b, levels))
+    rhs = 2.5 * np.asarray(ref.hierarchize_nd(a, levels)) - np.asarray(
+        ref.hierarchize_nd(b, levels)
+    )
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-12, atol=1e-12)
+
+
+def test_surpluses_of_multilinear_vanish():
+    # A function linear in each variable is exactly reproduced by the coarsest
+    # basis functions; every surplus on sub-level >= 2 must vanish.
+    levels = (4, 3)
+    ny, nx = ref.axis_points(4), ref.axis_points(3)
+    ys = (np.arange(1, ny + 1) / 2**4)[:, None]
+    xs = (np.arange(1, nx + 1) / 2**3)[None, :]
+    u = 2.0 * xs * ys + 3.0 * ys - xs  # multilinear, zero at... not at boundary
+    # Restrict to a function with zero Dirichlet trace so level-1 reproduction
+    # applies: hat(x)*hat(y) is *bilinear on each cell* of the level-1 grid.
+    u = 16.0 * ys * (1 - ys) * xs * (1 - xs)  # not multilinear -> skip vanish
+    # Instead test the 1-d sharp statement: for f linear on [0,1],
+    # all surpluses except the root's reflect only boundary effects.
+    n = ref.axis_points(5)
+    f = 0.25 + 0.5 * (np.arange(1, n + 1) / 2**5)
+    s = np.asarray(ref.hierarchize_axis(f, 5))
+    # interior points of sub-levels >= 2 are midpoints of their predecessors:
+    # their surplus is exactly 0 for a linear function
+    for sub in range(5, 1, -1):
+        idx, left, right = ref.level_indices(5, sub)
+        interior = (left >= 1) & (right <= n)
+        np.testing.assert_allclose(s[idx[interior] - 1], 0.0, atol=1e-12)
+
+
+def test_interpolation_reproduces_nodal_values():
+    levels = (3, 2)
+    x = rand_grid(levels)
+    s = np.asarray(ref.hierarchize_nd(x, levels))
+    pts = []
+    for i in range(ref.axis_points(3)):
+        for j in range(ref.axis_points(2)):
+            pts.append(((i + 1) / 2**3, (j + 1) / 2**2))
+    vals = ref.interpolate_nd(s, levels, np.array(pts))
+    np.testing.assert_allclose(vals, x.reshape(-1), rtol=1e-12, atol=1e-12)
+
+
+def test_hat_eval_support():
+    assert float(ref.hat_eval_1d(2, 1, 0.25)) == 1.0
+    assert float(ref.hat_eval_1d(2, 1, 0.5)) == 0.0
+    assert float(ref.hat_eval_1d(2, 1, 0.125)) == 0.5
+    assert float(ref.hat_eval_1d(1, 1, 0.75)) == 0.5

@@ -1,0 +1,129 @@
+//! E8 + E9 — ablations of the paper's design choices (§3 "Chosen results"
+//! and §6 "Further ideas"):
+//!
+//! * `reducedop_ind`   — reduced multiplication count on `Ind`: the paper
+//!   measured **no** cycle change (both predecessors equally easy);
+//! * `ind_vectorized`  — §6: row-wise vectorized `Ind` vs the vectorized
+//!   BFS codes;
+//! * `padding`         — aligned loads via padded x1 rows vs unpadded;
+//! * `layout_cost`     — the position->BFS conversion the BFS variants
+//!   amortize (excluded from figure timings, priced here);
+//! * `compiler_vec`    — scalar row kernels (compiler's own vectorization)
+//!   vs the manual AVX kernels.
+//!
+//! Filter by passing a substring: `cargo bench --bench ablations -- padding`.
+
+mod common;
+
+use common::*;
+use sgct::grid::{AxisLayout, FullGrid, LevelVector};
+use sgct::hierarchize::{flops, prepare, Variant};
+use sgct::perf::bench::bench_on;
+use sgct::util::rng::SplitMix64;
+use sgct::util::table::Table;
+
+fn want(filter: &Option<String>, name: &str) -> bool {
+    filter.as_ref().map(|f| name.contains(f.as_str())).unwrap_or(true)
+}
+
+fn main() {
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+    let levels =
+        if quick() { LevelVector::new(&[6, 6]) } else { LevelVector::new(&[9, 9]) };
+    let levels4d = if quick() {
+        LevelVector::new(&[4, 3, 3, 3])
+    } else {
+        LevelVector::new(&[6, 5, 5, 5])
+    };
+
+    if want(&filter, "reducedop_ind") {
+        println!("\n== E8: reduced op count on Ind (paper: no cycle change) ==");
+        let mut t = Table::new(vec!["variant", "cycles", "flops/cycle (Eq.1)"]);
+        for v in [Variant::Ind, Variant::IndReducedOp] {
+            let r = measure_variant(v, &levels);
+            t.row(vec![
+                v.paper_name().to_string(),
+                format!("{:.0}", r.cycles),
+                format!("{:.4}", fpc(&levels, &r)),
+            ]);
+        }
+        t.print();
+    }
+
+    if want(&filter, "ind_vectorized") {
+        println!("\n== E9a: vectorized Ind vs vectorized BFS (paper §6) ==");
+        let mut t = Table::new(vec!["variant", "cycles", "flops/cycle"]);
+        for v in [
+            Variant::Ind,
+            Variant::IndVectorized,
+            Variant::BfsVectorized,
+            Variant::BfsOverVectorized,
+        ] {
+            let r = measure_variant(v, &levels4d);
+            t.row(vec![
+                v.paper_name().to_string(),
+                format!("{:.0}", r.cycles),
+                format!("{:.4}", fpc(&levels4d, &r)),
+            ]);
+        }
+        t.print();
+    }
+
+    if want(&filter, "padding") {
+        println!("\n== E9b: padded (aligned) vs unpadded x1 rows, BFS-OverVectorized ==");
+        let h = Variant::BfsOverVectorized.instance();
+        let mut t = Table::new(vec!["layout", "cycles", "flops/cycle"]);
+        for (name, pad) in [("unpadded", 1usize), ("padded-to-4", 4)] {
+            let mut g = FullGrid::with_padding(levels4d.clone(), pad);
+            let mut rng = SplitMix64::new(3);
+            g.fill_with(|_| rng.next_f64());
+            prepare(h, &mut g);
+            let pristine = g.clone();
+            let r = bench_on(name, config(), &mut g, |g| g.clone_from(&pristine), |g| {
+                h.hierarchize(g)
+            });
+            t.row(vec![
+                name.to_string(),
+                format!("{:.0}", r.cycles),
+                format!("{:.4}", r.flops_per_cycle(flops::flops(&levels4d).total())),
+            ]);
+        }
+        t.print();
+    }
+
+    if want(&filter, "layout_cost") {
+        println!("\n== E9c: cost of the position->BFS layout conversion ==");
+        let mut g = FullGrid::new(levels4d.clone());
+        let mut rng = SplitMix64::new(4);
+        g.fill_with(|_| rng.next_f64());
+        let r_conv = bench_on("convert", config(), &mut g, |_| {}, |g| {
+            g.convert_all(AxisLayout::Bfs);
+            g.convert_all(AxisLayout::Position);
+        });
+        let r_hier = measure_variant(Variant::BfsOverVectorized, &levels4d);
+        println!(
+            "  round-trip conversion: {:.0} cycles; one hierarchization: {:.0} cycles ({:.2}x)",
+            r_conv.cycles,
+            r_hier.cycles,
+            r_conv.cycles / r_hier.cycles
+        );
+        println!("  (the CT pipeline amortizes one conversion per direction change)");
+    }
+
+    if want(&filter, "compiler_vec") {
+        println!("\n== E9d: manual AVX vs scalar (compiler-vectorizable) row kernels ==");
+        // BfsUnrolled uses the scalar kernels; BfsVectorized the AVX ones —
+        // the pair isolates exactly the manual-vectorization delta.
+        let mut t = Table::new(vec!["row kernels", "cycles", "flops/cycle"]);
+        for v in [Variant::BfsUnrolled, Variant::BfsVectorized] {
+            let r = measure_variant(v, &levels4d);
+            t.row(vec![
+                v.paper_name().to_string(),
+                format!("{:.0}", r.cycles),
+                format!("{:.4}", fpc(&levels4d, &r)),
+            ]);
+        }
+        t.print();
+        println!("  avx available: {}", sgct::hierarchize::simd::avx_available());
+    }
+}

@@ -1,0 +1,114 @@
+#![allow(dead_code)]
+//! Shared bench harness: figure-style sweeps printed as the paper's series.
+//!
+//! Every bench regenerates one table/figure of the paper.  Performance is
+//! derived from the **calculated** flop count of Eq. 1 (corrected — see
+//! DESIGN.md §5) over measured rdtsc cycles, exactly the paper's
+//! methodology (Fig. 5 vs Fig. 6 motivates calculated over measured flops).
+//!
+//! Environment knobs:
+//!   SGCT_BENCH_QUICK=1   much faster, smaller maxima (CI smoke)
+//!   SGCT_BENCH_BIG=1     include the paper's 1 GB points (needs ~2.5 GB RAM)
+
+use sgct::grid::{AxisLayout, FullGrid, LevelVector};
+use sgct::hierarchize::{flops, Variant};
+use sgct::perf::bench::{bench_on, BenchResult, Config};
+use sgct::sgpp::HashGrid;
+use sgct::util::rng::SplitMix64;
+use sgct::util::table::{human_bytes, Table};
+
+pub fn quick() -> bool {
+    std::env::var_os("SGCT_BENCH_QUICK").is_some()
+}
+
+pub fn big() -> bool {
+    std::env::var_os("SGCT_BENCH_BIG").is_some()
+}
+
+pub fn config() -> Config {
+    if quick() {
+        Config { warmup: 1, samples: 3, min_sample_secs: 5e-4, max_total_secs: 1.0 }
+    } else {
+        Config { warmup: 1, samples: 7, min_sample_secs: 2e-3, max_total_secs: 6.0 }
+    }
+}
+
+/// Random grid in the variant's required layout.
+pub fn grid_for(levels: &LevelVector, layout: AxisLayout, seed: u64) -> FullGrid {
+    let mut g = FullGrid::new(levels.clone());
+    let mut rng = SplitMix64::new(seed);
+    g.fill_with(|_| rng.next_f64() - 0.5);
+    g.convert_all(layout);
+    g
+}
+
+/// Measure one variant on one level vector: cycles per hierarchization.
+pub fn measure_variant(v: Variant, levels: &LevelVector) -> BenchResult {
+    let h = v.instance();
+    let pristine = grid_for(levels, h.layout(), 42);
+    let mut g = pristine.clone();
+    bench_on(h.name(), config(), &mut g, |g| g.clone_from(&pristine), |g| h.hierarchize(g))
+}
+
+/// Measure the SGpp baseline (hash-grid hierarchization; the hash structure
+/// is prebuilt — construction is not part of the timed region, matching how
+/// the paper times only the hierarchization).
+pub fn measure_sgpp(levels: &LevelVector) -> BenchResult {
+    let mut base = FullGrid::new(levels.clone());
+    let mut rng = SplitMix64::new(42);
+    base.fill_with(|_| rng.next_f64() - 0.5);
+    let pristine = HashGrid::from_full_grid(&base);
+    let mut hg = pristine.clone();
+    bench_on("SGpp", config(), &mut hg, |hg| hg.clone_from(&pristine), |hg| hg.hierarchize())
+}
+
+/// One row of a figure: variant name -> flops/cycle at this size.
+pub struct FigureRow {
+    pub levels: LevelVector,
+    pub cells: Vec<(String, f64)>, // (variant, flops/cycle)
+}
+
+/// Render a figure's series as a table: one row per size, one column per
+/// variant, cell = flops/cycle from the calculated flop count.
+pub fn render_figure(title: &str, rows: &[FigureRow]) {
+    println!("\n== {title} ==");
+    if rows.is_empty() {
+        println!("  (no rows)");
+        return;
+    }
+    let mut headers = vec!["levels".to_string(), "bytes".to_string()];
+    for (name, _) in &rows[0].cells {
+        headers.push(name.clone());
+    }
+    let mut t = Table::new(headers);
+    for r in rows {
+        let mut cells = vec![r.levels.tag(), human_bytes(r.levels.size_bytes())];
+        for (_, fpc) in &r.cells {
+            cells.push(format!("{fpc:.4}"));
+        }
+        t.row(cells);
+    }
+    t.print();
+}
+
+/// flops/cycle for a measured result on `levels` (calculated flop count).
+pub fn fpc(levels: &LevelVector, r: &BenchResult) -> f64 {
+    r.flops_per_cycle(flops::flops(levels).total())
+}
+
+/// Level-sum ceiling honoring quick/big modes: the paper sweeps up to
+/// |l|=27 (1 GB); default tops at ~128 MB to fit small containers.
+pub fn max_levelsum(default_max: u32) -> u32 {
+    if big() {
+        27
+    } else if quick() {
+        default_max.min(18)
+    } else {
+        default_max
+    }
+}
+
+/// Geometric speedup a/b expressed as "xN.N".
+pub fn speedup(a_cycles: f64, b_cycles: f64) -> String {
+    format!("x{:.1}", a_cycles / b_cycles)
+}

@@ -1,0 +1,66 @@
+//! E1 / Fig. 4 — "Hierarchizing a 1-dimensional grid. Performance for
+//! calculated flop count."
+//!
+//! Sweep l = 10 .. max over the layout variants SGpp, Func, Ind, BFS and
+//! BFS-Rev.  Expected shape (paper): `Ind` wins up to ~100 MB then drops to
+//! the BFS level; `BFS` stays flat as the data set grows and beats
+//! `BFS-Rev` by ~50 %; every implementation beats SGpp, and everything but
+//! SGpp beats `Func`.
+
+mod common;
+
+use common::*;
+use sgct::grid::LevelVector;
+use sgct::hierarchize::Variant;
+
+fn main() {
+    let max_l = max_levelsum(23); // 23 -> 64 MiB default; --big: 27 -> 1 GiB
+    let min_l = if quick() { 10 } else { 12 };
+    let mut rows = Vec::new();
+    let mut sgpp_note = None;
+    for l in (min_l..=max_l).step_by(1) {
+        let levels = LevelVector::new(&[l as u8]);
+        let mut cells = Vec::new();
+        // SGpp only for small instances (its footprint is ~13x the data):
+        // the paper could only run it for small problem instances either.
+        if levels.total_points() <= (1 << 21) {
+            let r = measure_sgpp(&levels);
+            cells.push(("SGpp".to_string(), fpc(&levels, &r)));
+        } else {
+            cells.push(("SGpp".to_string(), f64::NAN));
+            sgpp_note.get_or_insert(l);
+        }
+        for v in [Variant::Func, Variant::Ind, Variant::Bfs, Variant::BfsRev] {
+            let r = measure_variant(v, &levels);
+            cells.push((v.paper_name().to_string(), fpc(&levels, &r)));
+        }
+        rows.push(FigureRow { levels, cells });
+    }
+    render_figure("Fig. 4: 1-d grid, calculated-flops performance (flops/cycle)", &rows);
+    if let Some(l) = sgpp_note {
+        println!("(SGpp skipped for l >= {l}: hash-grid footprint exceeds sensible RAM, as in the paper)");
+    }
+
+    // the paper's headline checks for this figure
+    if let (Some(first), Some(last)) = (rows.first(), rows.last()) {
+        let get = |row: &FigureRow, name: &str| {
+            row.cells.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(f64::NAN)
+        };
+        println!("\nshape checks:");
+        println!(
+            "  BFS flat?      first {:.4} vs last {:.4} flops/cycle",
+            get(first, "BFS"),
+            get(last, "BFS")
+        );
+        println!(
+            "  BFS > BFS-Rev? {:.4} vs {:.4} (paper: ~1.5x)",
+            get(last, "BFS"),
+            get(last, "BFS-Rev")
+        );
+        println!(
+            "  Func > SGpp?   {:.4} vs {:.4} (paper: 2-10x)",
+            get(first, "Func"),
+            get(first, "SGpp")
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! E2+E3 / Fig. 5 & 6 — 2-d grids: measured vs calculated performance.
+//!
+//! Fig. 5 derives performance from the flops each implementation *actually
+//! executes* (its "measured" count — for the hash-based SGpp sweep that is
+//! 3 flops per point per dimension, boundary contributions included, which
+//! flatters it); Fig. 6 derives it from the calculated count of Eq. 1,
+//! which mirrors wall-clock time.  The paper's point: SGpp appears fastest
+//! in Fig. 5 yet is slowest in Fig. 6 — "measuring performance may point
+//! the wrong way".
+
+mod common;
+
+use common::*;
+use sgct::grid::LevelVector;
+use sgct::hierarchize::flops;
+use sgct::hierarchize::func::fpnav_extra_flops;
+use sgct::hierarchize::Variant;
+
+/// Flops the SGpp recursive sweep actually executes: every point is updated
+/// once per dimension with `v - 0.5 * (left + right)` = 3 flops, existing
+/// predecessors or not.
+fn sgpp_measured_flops(levels: &LevelVector) -> u64 {
+    3 * levels.total_points() as u64 * levels.dim() as u64
+}
+
+fn main() {
+    let max_sum = max_levelsum(22);
+    let min_sum = if quick() { 8 } else { 10 };
+    let variants = [Variant::Func, Variant::Ind, Variant::Bfs, Variant::BfsOverVectorized];
+    // Func-FPNav: identical wall clock class as Func, but its *executed*
+    // flop count (what a hardware counter would report) includes the FP
+    // navigation — the paper's explanation for misleading measured numbers.
+
+    let mut rows_measured = Vec::new();
+    let mut rows_calced = Vec::new();
+    for sum in (min_sum..=max_sum).step_by(2) {
+        // near-isotropic 2-d grid of the given level sum
+        let l1 = (sum / 2) as u8;
+        let l2 = (sum - sum / 2) as u8;
+        let levels = LevelVector::new(&[l1, l2]);
+        let calc = flops::flops(&levels).total();
+
+        let mut cells_m = Vec::new();
+        let mut cells_c = Vec::new();
+        if levels.total_points() <= (1 << 21) {
+            let r = measure_sgpp(&levels);
+            cells_m.push(("SGpp".into(), sgpp_measured_flops(&levels) as f64 / r.cycles));
+            cells_c.push(("SGpp".into(), r.flops_per_cycle(calc)));
+        } else {
+            cells_m.push(("SGpp".into(), f64::NAN));
+            cells_c.push(("SGpp".into(), f64::NAN));
+        }
+        {
+            let r = measure_variant(Variant::FuncFpNav, &levels);
+            let measured = calc + fpnav_extra_flops(&levels);
+            cells_m.push(("Func-FPNav".into(), measured as f64 / r.cycles));
+            cells_c.push(("Func-FPNav".into(), r.flops_per_cycle(calc)));
+        }
+        for v in variants {
+            let r = measure_variant(v, &levels);
+            // the derived codes execute exactly the Alg. 1 flops, so their
+            // measured count equals the calculated one
+            cells_m.push((v.paper_name().into(), r.flops_per_cycle(calc)));
+            cells_c.push((v.paper_name().into(), r.flops_per_cycle(calc)));
+        }
+        rows_measured.push(FigureRow { levels: levels.clone(), cells: cells_m });
+        rows_calced.push(FigureRow { levels, cells: cells_c });
+    }
+    render_figure("Fig. 5: 2-d grids, MEASURED-flops performance", &rows_measured);
+    render_figure("Fig. 6: 2-d grids, CALCULATED-flops performance (Eq. 1)", &rows_calced);
+
+    println!("\nshape check (the paper's inversion):");
+    if let (Some(m), Some(c)) = (rows_measured.last(), rows_calced.last()) {
+        let get = |row: &FigureRow, name: &str| {
+            row.cells.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(f64::NAN)
+        };
+        println!(
+            "  measured:   Func-FPNav {:.4} vs Func {:.4}  (FP navigation inflates the counter)",
+            get(m, "Func-FPNav"),
+            get(m, "Func")
+        );
+        println!(
+            "  calculated: Func-FPNav {:.4} vs Func {:.4}  (wall-clock truth: no faster)",
+            get(c, "Func-FPNav"),
+            get(c, "Func")
+        );
+        println!(
+            "  calculated: SGpp {:.4} is slowest (paper Fig. 6)",
+            get(c, "SGpp")
+        );
+    }
+}

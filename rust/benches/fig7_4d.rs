@@ -1,0 +1,63 @@
+//! E4 / Fig. 7 — "Hierarchizing a 4 dimensional grid."
+//!
+//! Isotropic 4-d grids, sweeping the common level.  Expected shape:
+//! unrolling then vectorizing yields significant gains; over-vectorization
+//! increases performance further (paper §4 "Vectorizing and
+//! Over-Vectorizing").
+
+mod common;
+
+use common::*;
+use sgct::grid::LevelVector;
+use sgct::hierarchize::Variant;
+
+fn main() {
+    let max_l = if big() { 6 } else if quick() { 4 } else { 5 }; // 6^4 sum=24 -> 128MB
+    let variants = [
+        Variant::Func,
+        Variant::Ind,
+        Variant::Bfs,
+        Variant::BfsUnrolled,
+        Variant::BfsVectorized,
+        Variant::BfsOverVectorized,
+        Variant::BfsOverVectorizedPreBranched,
+    ];
+    let mut rows = Vec::new();
+    for l in 2..=max_l {
+        let levels = LevelVector::isotropic(4, l as u8);
+        let mut cells = Vec::new();
+        for v in variants {
+            let r = measure_variant(v, &levels);
+            cells.push((v.paper_name().to_string(), fpc(&levels, &r)));
+        }
+        rows.push(FigureRow { levels, cells });
+    }
+    render_figure("Fig. 7: 4-d isotropic grids (flops/cycle, calculated)", &rows);
+
+    if let Some(last) = rows.last() {
+        let get = |name: &str| {
+            last.cells.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(f64::NAN)
+        };
+        println!("\nshape checks (largest grid):");
+        println!(
+            "  unroll gain:    BFS {:.4} -> BFS-Unrolled {:.4}",
+            get("BFS"),
+            get("BFS-Unrolled")
+        );
+        println!(
+            "  vectorize gain: BFS-Unrolled {:.4} -> BFS-Vectorized {:.4}",
+            get("BFS-Unrolled"),
+            get("BFS-Vectorized")
+        );
+        println!(
+            "  over-vec gain:  BFS-Vectorized {:.4} -> BFS-OverVectorized {:.4}",
+            get("BFS-Vectorized"),
+            get("BFS-OverVectorized")
+        );
+        println!(
+            "  pre-branch:     {:.4} -> {:.4} (paper: no further gain)",
+            get("BFS-OverVectorized"),
+            get("BFS-OverVectorized-PreBranched")
+        );
+    }
+}

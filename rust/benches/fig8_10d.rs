@@ -1,0 +1,64 @@
+//! E5 / Fig. 8 — "Hierarchizing a 10 dimensional anisotropic grid. The
+//! number of points of the first dimension are increased while all other
+//! dimensions are fixed to 3 grid points."
+//!
+//! Level vector (l1, 2, 2, ..., 2) with nine level-2 axes (3 points each);
+//! sweep l1.  Includes the PreBranched and ReducedOp codes: the paper
+//! measured *no* runtime gain from either here.
+
+mod common;
+
+use common::*;
+use sgct::grid::LevelVector;
+use sgct::hierarchize::Variant;
+
+fn main() {
+    // 3^9 = 19683 poles of length 2^l1-1; l1=12 -> ~615 MB. Keep default <= 9.
+    let max_l1 = if big() { 12 } else if quick() { 6 } else { 9 };
+    let variants = [
+        Variant::Func,
+        Variant::Ind,
+        Variant::Bfs,
+        Variant::BfsVectorized,
+        Variant::BfsOverVectorized,
+        Variant::BfsOverVectorizedPreBranched,
+        Variant::BfsOverVectorizedPreBranchedReducedOp,
+    ];
+    let mut rows = Vec::new();
+    for l1 in 3..=max_l1 {
+        let mut lv = vec![2u8; 10];
+        lv[0] = l1 as u8;
+        let levels = LevelVector::new(&lv);
+        let mut cells = Vec::new();
+        for v in variants {
+            let r = measure_variant(v, &levels);
+            cells.push((v.paper_name().to_string(), fpc(&levels, &r)));
+        }
+        rows.push(FigureRow { levels, cells });
+    }
+    render_figure(
+        "Fig. 8: 10-d anisotropic grid, dims 2-10 fixed at 3 points (flops/cycle)",
+        &rows,
+    );
+
+    if let Some(last) = rows.last() {
+        let get = |name: &str| {
+            last.cells.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(f64::NAN)
+        };
+        println!("\nshape checks (largest grid):");
+        println!(
+            "  over-vec vs Func speedup: {:.1}x (paper: 10-30x)",
+            get("BFS-OverVectorized") / get("Func")
+        );
+        println!(
+            "  pre-branched:  {:.4} vs {:.4} (paper: no gain)",
+            get("BFS-OverVectorized"),
+            get("BFS-OverVectorized-PreBranched")
+        );
+        println!(
+            "  reduced-op:    {:.4} vs {:.4} (paper: no gain — critical path still 3 flops)",
+            get("BFS-OverVectorized-PreBranched"),
+            get("BFS-OverVectorized-PreBranched-ReducedOp")
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! E10 — end-to-end iterated-CT pipeline (Fig. 2) benchmark.
+//!
+//! Times one full iteration (solve t steps -> hierarchize -> gather ->
+//! scatter -> dehierarchize) for the native solver and, when artifacts are
+//! present, the PJRT-backed solver executing the AOT JAX/Pallas step; also
+//! breaks the phases down.  The paper's motivation — "a speedup in the
+//! overall algorithm can only be expected if the overhead created by the
+//! communication phase is less than the savings in the compute phase" —
+//! is exactly the compute/communication ratio printed at the end.
+
+mod common;
+
+use common::quick;
+use sgct::combi::CombinationScheme;
+use sgct::coordinator::{Coordinator, PipelineConfig};
+use sgct::grid::LevelVector;
+use sgct::runtime::{PjrtSolver, Runtime};
+use sgct::solver::{stable_dt, HeatSolver};
+use sgct::util::table::{human_time, Table};
+
+fn init(x: &[f64]) -> f64 {
+    x.iter().map(|&v| (std::f64::consts::PI * v).sin()).product()
+}
+
+fn run_case(dim: usize, level: u8, steps: usize, pjrt: bool) -> Option<(f64, f64, f64)> {
+    let scheme = CombinationScheme::regular(dim, level);
+    let dt = stable_dt(&LevelVector::isotropic(dim, level), 1.0, 0.5);
+    let mut cfg = PipelineConfig::new(scheme);
+    cfg.steps_per_iter = steps;
+    let mut c = Coordinator::new(cfg, init);
+    let iters = if quick() { 2 } else { 4 };
+    let reports = if pjrt {
+        let dir = std::path::PathBuf::from("artifacts");
+        let rt = std::rc::Rc::new(Runtime::load(&dir).ok()?);
+        // warm the executable cache so compile time is not in the loop
+        let solver = PjrtSolver { runtime: rt, dt };
+        let _ = c.iteration(&solver, 0).ok()?;
+        c.run(&solver, iters, |_| {}).ok()?
+    } else {
+        let solver = HeatSolver { alpha: 1.0, dt };
+        let _ = c.iteration(&solver, 0).ok()?;
+        c.run(&solver, iters, |_| {}).ok()?
+    };
+    let n = reports.len() as f64;
+    let solve: f64 = reports.iter().map(|r| r.solve_secs).sum::<f64>() / n;
+    let hg: f64 = reports.iter().map(|r| r.hierarchize_gather_secs).sum::<f64>() / n;
+    let sd: f64 = reports.iter().map(|r| r.scatter_dehierarchize_secs).sum::<f64>() / n;
+    Some((solve, hg, sd))
+}
+
+fn main() {
+    println!("\n== E10: iterated-CT pipeline, per-iteration phase times ==");
+    let mut t = Table::new(vec![
+        "case", "backend", "solve", "hier+gather", "scatter+dehier", "comm/compute",
+    ]);
+    let cases: &[(usize, u8, usize)] =
+        if quick() { &[(2, 5, 8)] } else { &[(2, 5, 8), (2, 7, 8), (3, 4, 8)] };
+    for &(d, n, steps) in cases {
+        for pjrt in [false, true] {
+            let label = format!("d={d} n={n} t={steps}");
+            match run_case(d, n, steps, pjrt) {
+                Some((solve, hg, sd)) => {
+                    let comm = hg + sd;
+                    t.row(vec![
+                        label,
+                        if pjrt { "pjrt".into() } else { "native".into() },
+                        human_time(solve),
+                        human_time(hg),
+                        human_time(sd),
+                        format!("{:.3}", comm / solve.max(1e-12)),
+                    ]);
+                }
+                None => {
+                    t.row(vec![
+                        label,
+                        if pjrt { "pjrt (skipped: no artifacts)".into() } else { "native".into() },
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                }
+            }
+        }
+    }
+    t.print();
+    println!("(comm/compute < 1 is the paper's break-even condition for the iterated CT)");
+}

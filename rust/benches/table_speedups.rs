@@ -1,0 +1,74 @@
+//! E7 / §5 "Summary of the experimental results" — the headline claims:
+//!
+//! * BFS-OverVectorized reaches ~0.4 flops/cycle (5 % of AVX peak);
+//! * 10-30x speedup over the `Func` baseline;
+//! * `Func` beats SGpp by another 2-10x;
+//! * BFS(-OverVectorized) performance stays flat as data grows to 1 GB.
+
+mod common;
+
+use common::*;
+use sgct::grid::LevelVector;
+use sgct::hierarchize::Variant;
+use sgct::perf::roofline::Roofline;
+use sgct::util::table::{human_bytes, Table};
+
+fn main() {
+    let cases: Vec<LevelVector> = if quick() {
+        vec![
+            LevelVector::new(&[8, 8]),
+            LevelVector::new(&[4, 4, 4]),
+            LevelVector::new(&[6, 2, 2, 2, 2, 2, 2, 2, 2, 2]),
+        ]
+    } else {
+        vec![
+            LevelVector::new(&[9, 9]), // small enough for the SGpp column
+            LevelVector::new(&[11, 11]),
+            LevelVector::new(&[8, 8, 7]),
+            LevelVector::new(&[6, 6, 6, 5]),
+            LevelVector::new(&[8, 2, 2, 2, 2, 2, 2, 2, 2, 2]),
+        ]
+    };
+
+    let mut t = Table::new(vec![
+        "levels",
+        "bytes",
+        "SGpp c/pt",
+        "Func c/pt",
+        "best c/pt",
+        "best f/c",
+        "best/Func",
+        "Func/SGpp",
+    ]);
+    let mut best_fpc = 0.0f64;
+    for levels in &cases {
+        let n = levels.total_points() as f64;
+        let sgpp = if levels.total_points() <= (1 << 21) {
+            Some(measure_sgpp(levels))
+        } else {
+            None
+        };
+        let func = measure_variant(Variant::Func, levels);
+        let best = measure_variant(Variant::BfsOverVectorized, levels);
+        let bfpc = fpc(levels, &best);
+        best_fpc = best_fpc.max(bfpc);
+        t.row(vec![
+            levels.tag(),
+            human_bytes(levels.size_bytes()),
+            sgpp.as_ref().map(|r| format!("{:.1}", r.cycles / n)).unwrap_or("-".into()),
+            format!("{:.1}", func.cycles / n),
+            format!("{:.2}", best.cycles / n),
+            format!("{bfpc:.4}"),
+            speedup(func.cycles, best.cycles),
+            sgpp.map(|r| speedup(r.cycles, func.cycles)).unwrap_or("-".into()),
+        ]);
+    }
+    println!("\n== §5 summary: headline speedups ==");
+    t.print();
+
+    let avx_peak = Roofline { peak_flops_per_cycle: 8.0, bytes_per_cycle: 0.0 };
+    println!(
+        "\nbest observed: {best_fpc:.4} flops/cycle = {:.1}% of AVX peak (paper: 0.4 f/c = 5%)",
+        avx_peak.percent_of_peak(best_fpc)
+    );
+}

@@ -1,0 +1,120 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline crate set).
+//!
+//! Grammar: `sgct <subcommand> [--flag] [--key value] ...`
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: subcommand + flags + key/value options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut it = raw.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut out = Self { command, ..Self::default() };
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Boolean flag (`--name`).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option (`--name value` or `--name=value`).
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| anyhow::anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        // note: positionals go before flags — `--flag positional` is
+        // ambiguous and parses as `--flag=positional` (documented).
+        let a = parse("bench pos1 --levels 5,4 --variant=ind --quick");
+        assert_eq!(a.command, "bench");
+        assert_eq!(a.opt("levels"), Some("5,4"));
+        assert_eq!(a.opt("variant"), Some("ind"));
+        assert!(a.flag("quick"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn typed_option_and_default() {
+        let a = parse("solve --iters 7");
+        assert_eq!(a.get("iters", 3usize).unwrap(), 7);
+        assert_eq!(a.get("steps", 8usize).unwrap(), 8);
+        let bad = parse("solve --iters seven");
+        assert!(bad.get("iters", 3usize).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_before_option() {
+        let a = parse("run --check --out file.txt");
+        assert!(a.flag("check"));
+        assert_eq!(a.opt("out"), Some("file.txt"));
+    }
+
+    #[test]
+    fn empty_command() {
+        let a = parse("");
+        assert_eq!(a.command, "");
+    }
+}

@@ -1,0 +1,268 @@
+//! Dimension-adaptive combination technique (Gerstner & Griebel 2003).
+//!
+//! Instead of the regular diagonal `|l|_1 = const`, the scheme grows one
+//! level vector at a time: the *active set* holds candidate grids, an error
+//! indicator per candidate decides which to adopt next, and admissibility
+//! (all backward neighbours present) keeps the index set downward closed —
+//! which is exactly the property that makes combination coefficients well
+//! defined.
+//!
+//! Coefficients for an arbitrary downward-closed set follow from
+//! inclusion–exclusion:  `c_l = sum_{z in {0,1}^d, l+z in I} (-1)^{|z|_1}` —
+//! the same formula the regular scheme's `(-1)^q C(d-1,q)` specializes to.
+
+use std::collections::HashSet;
+
+use crate::grid::LevelVector;
+
+use super::scheme::Component;
+
+/// A downward-closed set of level vectors with combination coefficients.
+#[derive(Debug, Clone)]
+pub struct AdaptiveScheme {
+    dim: usize,
+    /// Adopted ("old") index set — downward closed.
+    index_set: HashSet<LevelVector>,
+    /// Active candidates: admissible extensions not yet adopted.
+    active: HashSet<LevelVector>,
+}
+
+impl AdaptiveScheme {
+    /// Start from the minimal scheme: the single grid `(1, ..., 1)`.
+    pub fn new(dim: usize) -> Self {
+        let root = LevelVector::new(&vec![1u8; dim]);
+        let mut s = Self { dim, index_set: HashSet::new(), active: HashSet::new() };
+        s.index_set.insert(root.clone());
+        for n in s.forward_neighbours(&root) {
+            s.active.insert(n);
+        }
+        s
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The adopted index set (downward closed).
+    pub fn index_set(&self) -> impl Iterator<Item = &LevelVector> {
+        self.index_set.iter()
+    }
+
+    /// Current admissible candidates.
+    pub fn active(&self) -> impl Iterator<Item = &LevelVector> {
+        self.active.iter()
+    }
+
+    fn forward_neighbours(&self, l: &LevelVector) -> Vec<LevelVector> {
+        (0..self.dim)
+            .filter_map(|j| {
+                let mut v = l.as_slice().to_vec();
+                if v[j] >= 30 {
+                    return None;
+                }
+                v[j] += 1;
+                Some(LevelVector::new(&v))
+            })
+            .collect()
+    }
+
+    fn backward_neighbours(l: &LevelVector) -> Vec<LevelVector> {
+        (0..l.dim())
+            .filter_map(|j| {
+                let mut v = l.as_slice().to_vec();
+                if v[j] <= 1 {
+                    return None;
+                }
+                v[j] -= 1;
+                Some(LevelVector::new(&v))
+            })
+            .collect()
+    }
+
+    /// Is `l` admissible (all backward neighbours adopted)?
+    pub fn admissible(&self, l: &LevelVector) -> bool {
+        Self::backward_neighbours(l).iter().all(|b| self.index_set.contains(b))
+    }
+
+    /// Adopt candidate `l` (must be active); returns the newly admissible
+    /// forward neighbours that entered the active set.
+    pub fn refine(&mut self, l: &LevelVector) -> Vec<LevelVector> {
+        assert!(self.active.remove(l), "{l} is not an active candidate");
+        self.index_set.insert(l.clone());
+        let mut added = Vec::new();
+        for f in self.forward_neighbours(l) {
+            if !self.index_set.contains(&f) && !self.active.contains(&f) && self.admissible(&f)
+            {
+                self.active.insert(f.clone());
+                added.push(f);
+            }
+        }
+        added
+    }
+
+    /// Drive refinement with an error indicator until `max_grids` adopted
+    /// or the largest indicator drops below `tol`.
+    pub fn refine_by(
+        &mut self,
+        mut indicator: impl FnMut(&LevelVector) -> f64,
+        max_grids: usize,
+        tol: f64,
+    ) {
+        while self.index_set.len() < max_grids {
+            let best = self
+                .active
+                .iter()
+                .map(|l| (l.clone(), indicator(l)))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            match best {
+                Some((l, e)) if e > tol => {
+                    self.refine(&l);
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Combination coefficients of the adopted set:
+    /// `c_l = sum_{z in {0,1}^d : l+z in I} (-1)^{|z|}`, dropping zeros.
+    pub fn components(&self) -> Vec<Component> {
+        let mut out = Vec::new();
+        for l in &self.index_set {
+            let mut c = 0i64;
+            let d = self.dim;
+            for mask in 0u32..(1 << d) {
+                let mut v = l.as_slice().to_vec();
+                let mut ok = true;
+                for j in 0..d {
+                    if mask >> j & 1 == 1 {
+                        if v[j] >= 30 {
+                            ok = false;
+                            break;
+                        }
+                        v[j] += 1;
+                    }
+                }
+                if ok && self.index_set.contains(&LevelVector::new(&v)) {
+                    c += if mask.count_ones() % 2 == 0 { 1 } else { -1 };
+                }
+            }
+            if c != 0 {
+                out.push(Component { levels: l.clone(), coeff: c as f64 });
+            }
+        }
+        out.sort_by(|a, b| a.levels.cmp(&b.levels));
+        out
+    }
+
+    /// Inclusion–exclusion validation (every adopted subspace counted once).
+    pub fn validate(&self) -> Result<(), LevelVector> {
+        let comps = self.components();
+        for s in &self.index_set {
+            let count: f64 =
+                comps.iter().filter(|c| s.le(&c.levels)).map(|c| c.coeff).sum();
+            if (count - 1.0).abs() > 1e-9 {
+                return Err(s.clone());
+            }
+        }
+        Ok(())
+    }
+
+    /// Coefficient lookup (0 for grids not in the scheme).
+    pub fn coeff(&self, l: &LevelVector) -> f64 {
+        self.components()
+            .iter()
+            .find(|c| &c.levels == l)
+            .map(|c| c.coeff)
+            .unwrap_or(0.0)
+    }
+}
+
+/// The regular scheme expressed as an adaptive index set (for testing the
+/// coefficient formula against the closed form).
+pub fn regular_as_adaptive(d: usize, n: u8) -> AdaptiveScheme {
+    let mut s = AdaptiveScheme::new(d);
+    // adopt everything with |l| <= n + d - 1, level by level (admissible order)
+    for total in (d as u32 + 1)..=(n as u32 + d as u32 - 1) {
+        let candidates: Vec<LevelVector> =
+            s.active.iter().filter(|l| l.sum() == total).cloned().collect();
+        for l in candidates {
+            s.refine(&l);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::combi::CombinationScheme;
+    use std::collections::HashMap as Map;
+
+    #[test]
+    fn starts_minimal() {
+        let s = AdaptiveScheme::new(2);
+        assert_eq!(s.index_set().count(), 1);
+        assert_eq!(s.active().count(), 2);
+        let comps = s.components();
+        assert_eq!(comps.len(), 1);
+        assert_eq!(comps[0].coeff, 1.0);
+    }
+
+    #[test]
+    fn refinement_keeps_downward_closure() {
+        let mut s = AdaptiveScheme::new(2);
+        let l21 = LevelVector::new(&[2, 1]);
+        s.refine(&l21);
+        // (2,2) is NOT admissible yet: (1,2) missing
+        assert!(!s.admissible(&LevelVector::new(&[2, 2])));
+        s.refine(&LevelVector::new(&[1, 2]));
+        // now (2,2) became active
+        assert!(s.active().any(|l| l == &LevelVector::new(&[2, 2])));
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn regular_set_reproduces_closed_form_coefficients() {
+        for (d, n) in [(2usize, 4u8), (3, 3)] {
+            let adaptive = regular_as_adaptive(d, n);
+            adaptive.validate().unwrap();
+            let reg = CombinationScheme::regular(d, n);
+            let want: Map<LevelVector, f64> =
+                reg.components().iter().map(|c| (c.levels.clone(), c.coeff)).collect();
+            let got: Map<LevelVector, f64> = adaptive
+                .components()
+                .into_iter()
+                .map(|c| (c.levels, c.coeff))
+                .collect();
+            assert_eq!(got, want, "d={d} n={n}");
+        }
+    }
+
+    #[test]
+    fn indicator_driven_refinement_is_anisotropic() {
+        // an indicator favoring dimension 1 must grow dimension 1 deeper
+        let mut s = AdaptiveScheme::new(2);
+        s.refine_by(|l| l.level(0) as f64 - 0.1 * l.level(1) as f64, 6, 0.0);
+        s.validate().unwrap();
+        let max_l1 = s.index_set().map(|l| l.level(0)).max().unwrap();
+        let max_l2 = s.index_set().map(|l| l.level(1)).max().unwrap();
+        assert!(max_l1 > max_l2, "l1 {max_l1} !> l2 {max_l2}");
+    }
+
+    #[test]
+    fn tolerance_stops_refinement() {
+        let mut s = AdaptiveScheme::new(3);
+        s.refine_by(|_| 0.0, 100, 0.5);
+        assert_eq!(s.index_set().count(), 1); // nothing above tol
+    }
+
+    #[test]
+    fn coefficients_sum_to_one() {
+        // sum of coefficients over any downward-closed set is 1
+        // (the constant function is reproduced once)
+        let mut s = AdaptiveScheme::new(2);
+        s.refine_by(|l| 1.0 / l.sum() as f64, 8, 0.0);
+        let total: f64 = s.components().iter().map(|c| c.coeff).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,226 @@
+//! Fault-tolerant combination technique (FTCT, Harding/Hegland style).
+//!
+//! The CT's redundancy is an asset at scale (the paper's exascale frame):
+//! if a node dies and some combination-grid solutions are lost, the
+//! remaining grids still cover a downward-closed index set, and *new*
+//! coefficients can be computed for exactly that set — no recomputation of
+//! lost solutions needed, at the price of a slightly coarser sparse grid.
+//!
+//! Algorithm: remove the lost grids from the scheme's index set, restore
+//! downward closure by also dropping every grid whose "upward shadow" made
+//! it reachable only through a lost one is untouched (losing a *maximal*
+//! grid keeps closure; losing an interior grid forces dropping the grids
+//! above it), then recompute coefficients with the general
+//! inclusion–exclusion formula.
+
+use std::collections::HashSet;
+
+use crate::grid::LevelVector;
+
+use super::scheme::{CombinationScheme, Component};
+
+/// Result of a recovery: the surviving components with fresh coefficients.
+#[derive(Debug, Clone)]
+pub struct RecoveredScheme {
+    pub components: Vec<Component>,
+    /// Grids dropped beyond the failed ones to restore downward closure.
+    pub cascaded: Vec<LevelVector>,
+}
+
+/// Recompute combination coefficients after losing `failed` grids.
+///
+/// Returns `None` if nothing survives (all grids lost).
+pub fn recover(scheme: &CombinationScheme, failed: &[LevelVector]) -> Option<RecoveredScheme> {
+    let failed: HashSet<&LevelVector> = failed.iter().collect();
+    // the full downward-closed index set of the scheme
+    let mut index_set: HashSet<LevelVector> =
+        scheme.sparse_subspaces().into_iter().collect();
+    // remove failed grids...
+    for f in &failed {
+        index_set.remove(*f);
+    }
+    // ...and cascade: drop everything above a removed vector (closure)
+    let mut cascaded: Vec<LevelVector> = Vec::new();
+    loop {
+        let violating: Vec<LevelVector> = index_set
+            .iter()
+            .filter(|l| {
+                // a backward neighbour outside the set => not closed
+                (0..l.dim()).any(|j| {
+                    let mut v = l.as_slice().to_vec();
+                    if v[j] <= 1 {
+                        return false;
+                    }
+                    v[j] -= 1;
+                    !index_set.contains(&LevelVector::new(&v))
+                })
+            })
+            .cloned()
+            .collect();
+        if violating.is_empty() {
+            break;
+        }
+        for v in violating {
+            index_set.remove(&v);
+            if !failed.contains(&v) {
+                cascaded.push(v);
+            }
+        }
+    }
+    if index_set.is_empty() {
+        return None;
+    }
+    // general inclusion–exclusion coefficients on the surviving set
+    let d = scheme.dim();
+    let mut components = Vec::new();
+    for l in &index_set {
+        let mut c = 0i64;
+        for mask in 0u32..(1 << d) {
+            let mut v = l.as_slice().to_vec();
+            let mut ok = true;
+            for j in 0..d {
+                if mask >> j & 1 == 1 {
+                    if v[j] >= 30 {
+                        ok = false;
+                        break;
+                    }
+                    v[j] += 1;
+                }
+            }
+            if ok && index_set.contains(&LevelVector::new(&v)) {
+                c += if mask.count_ones() % 2 == 0 { 1 } else { -1 };
+            }
+        }
+        if c != 0 {
+            components.push(Component { levels: l.clone(), coeff: c as f64 });
+        }
+    }
+    components.sort_by(|a, b| a.levels.cmp(&b.levels));
+    cascaded.sort();
+    Some(RecoveredScheme { components, cascaded })
+}
+
+/// Validate a recovered scheme: every subspace of its index set is counted
+/// exactly once.
+pub fn validate(rec: &RecoveredScheme) -> Result<(), LevelVector> {
+    // the index set = union of subspaces of the components
+    let mut subs: HashSet<LevelVector> = HashSet::new();
+    for c in &rec.components {
+        let d = c.levels.dim();
+        let mut s = vec![1u8; d];
+        loop {
+            subs.insert(LevelVector::new(&s));
+            let mut ax = 0;
+            loop {
+                if ax == d {
+                    break;
+                }
+                s[ax] += 1;
+                if s[ax] <= c.levels.level(ax) {
+                    break;
+                }
+                s[ax] = 1;
+                ax += 1;
+            }
+            if ax == d {
+                break;
+            }
+        }
+    }
+    for s in subs {
+        let count: f64 = rec
+            .components
+            .iter()
+            .filter(|c| s.le(&c.levels))
+            .map(|c| c.coeff)
+            .sum();
+        if (count - 1.0).abs() > 1e-9 {
+            return Err(s);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn losing_a_maximal_grid_recovers_cleanly() {
+        let s = CombinationScheme::regular(2, 4);
+        // lose one of the finest grids, e.g. (4,1)
+        let rec = recover(&s, &[LevelVector::new(&[4, 1])]).unwrap();
+        validate(&rec).unwrap();
+        assert!(rec.cascaded.is_empty(), "maximal loss needs no cascade");
+        // (4,1) no longer used
+        assert!(rec.components.iter().all(|c| c.levels != LevelVector::new(&[4, 1])));
+        // coefficients still sum to 1
+        let total: f64 = rec.components.iter().map(|c| c.coeff).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn losing_an_interior_grid_cascades() {
+        let s = CombinationScheme::regular(2, 4);
+        // (3,1) is below (4,1): dropping it forces (4,1) out too
+        let rec = recover(&s, &[LevelVector::new(&[3, 1])]).unwrap();
+        validate(&rec).unwrap();
+        assert!(rec.cascaded.contains(&LevelVector::new(&[4, 1])), "{:?}", rec.cascaded);
+    }
+
+    #[test]
+    fn losing_multiple_grids_still_valid() {
+        let s = CombinationScheme::regular(3, 4);
+        let lost = vec![
+            LevelVector::new(&[4, 1, 1]),
+            LevelVector::new(&[2, 3, 1]),
+            LevelVector::new(&[1, 1, 4]),
+        ];
+        let rec = recover(&s, &lost).unwrap();
+        validate(&rec).unwrap();
+        for l in &lost {
+            assert!(rec.components.iter().all(|c| &c.levels != l));
+        }
+    }
+
+    #[test]
+    fn total_loss_returns_none() {
+        let s = CombinationScheme::regular(1, 2);
+        // 1-d scheme: single grid (2); losing it (and so its closure) kills all
+        let rec = recover(&s, &[LevelVector::new(&[2]), LevelVector::new(&[1])]);
+        assert!(rec.is_none());
+    }
+
+    #[test]
+    fn recovered_interpolation_still_converges() {
+        use crate::coordinator::{Coordinator, PipelineConfig};
+        let f = |x: &[f64]| {
+            x.iter().map(|&v| (std::f64::consts::PI * v).sin()).product::<f64>()
+        };
+        let full = CombinationScheme::regular(2, 5);
+        let rec = recover(&full, &[LevelVector::new(&[5, 1])]).unwrap();
+        validate(&rec).unwrap();
+        // build a scheme-like pipeline over the recovered components by
+        // using the truncated constructor path: emulate via Coordinator on
+        // the full scheme but re-weights — simplest: weight comparison of
+        // error levels between full and recovered interpolation
+        let mut c_full = Coordinator::new(PipelineConfig::new(full.clone()), f);
+        c_full.combine();
+        let e_full = c_full.error_vs(f, 200);
+        // recovered: interpolate on each surviving grid directly
+        use crate::grid::FullGrid;
+        use crate::hierarchize::{Hierarchizer, Variant};
+        use crate::sparse::SparseGrid;
+        let mut sg = SparseGrid::new();
+        for comp in &rec.components {
+            let mut g = FullGrid::new(comp.levels.clone());
+            g.fill_with(f);
+            Variant::Ind.instance().hierarchize(&mut g);
+            sg.gather(&g, comp.coeff);
+        }
+        let e_rec = sg.max_error(f, 2, 200);
+        // the recovered solution is coarser but must stay the same order
+        assert!(e_rec < 10.0 * e_full, "full {e_full} vs recovered {e_rec}");
+        assert!(e_rec < 0.05, "recovered error too large: {e_rec}");
+    }
+}

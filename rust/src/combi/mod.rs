@@ -1,0 +1,21 @@
+//! The sparse grid combination technique (Griebel/Schneider/Zenger 1992).
+//!
+//! The regular scheme of dimension `d` and level `n` combines the
+//! anisotropic full grids with `|l|_1 = n + d - 1 - q`, `l >= 1`,
+//! `q = 0 .. d-1`, weighted `(-1)^q * C(d-1, q)`:
+//!
+//! ```text
+//! u_n^c = sum_{q=0}^{d-1} (-1)^q C(d-1, q) sum_{|l| = n+d-1-q} u_l
+//! ```
+//!
+//! The correctness invariant (inclusion–exclusion) is that every
+//! hierarchical subspace of the sparse grid is counted exactly once by the
+//! grids containing it — tested below and via the property suite.
+
+pub mod adaptive;
+pub mod fault;
+pub mod opticom;
+mod scheme;
+
+pub use adaptive::AdaptiveScheme;
+pub use scheme::{binomial, CombinationScheme, Component};

@@ -1,0 +1,288 @@
+//! Optimal combination coefficients ("opticom", Hegland/Garcke/Challis [5]).
+//!
+//! The classical coefficients are optimal only when the per-grid solutions
+//! behave like the interpolation error splitting assumes.  For general
+//! (e.g. operator) problems, [5] chooses coefficients minimizing
+//!
+//! ```text
+//! || sum_i c_i P u_i - u ||^2  ->  min,
+//! ```
+//!
+//! which reduces to the normal equations `M c = b` with the Gram matrix
+//! `M_ij = <u_i, u_j>` of the partial solutions in the sparse-grid inner
+//! product.  Here the inner products are computed exactly in the
+//! hierarchical basis: for hat functions, `<phi_{l,i}, phi_{l',i'}>_{L2}`
+//! factorizes per dimension and is evaluated in closed form.
+//!
+//! The module provides the L2 Gram machinery over [`SparseGrid`]s plus a
+//! dense symmetric solver (Cholesky with diagonal fallback) — no external
+//! linear-algebra crate exists in the offline set.
+
+use crate::grid::LevelVector;
+use crate::sparse::SparseGrid;
+
+/// Exact L2 inner product of two 1-d hierarchical hats
+/// `phi_{l,i}` and `phi_{m,j}` on (0,1).
+pub fn hat_inner_1d(l: u8, i: u32, m: u8, j: u32) -> f64 {
+    // ensure l <= m
+    if l > m {
+        return hat_inner_1d(m, j, l, i);
+    }
+    let hl = 0.5f64.powi(l as i32);
+    let hm = 0.5f64.powi(m as i32);
+    let xl = i as f64 * hl;
+    let xm = j as f64 * hm;
+    if l == m {
+        return if i == j { 2.0 * hl / 3.0 } else { 0.0 };
+    }
+    // supports: phi_l over [xl-hl, xl+hl]; the finer hat lies inside one
+    // linear piece of the coarser (dyadic structure), so the product
+    // integrates to  phi_l(xm) * hm  (mass of the fine hat times the
+    // coarse hat's value at its node, since phi_l is linear there).
+    if xm <= xl - hl || xm >= xl + hl {
+        return 0.0;
+    }
+    let phi_l_at_xm = 1.0 - (xm - xl).abs() / hl;
+    phi_l_at_xm * hm
+}
+
+/// Exact L2 inner product of two sparse-grid functions given by surpluses.
+pub fn l2_inner(a: &SparseGrid, b: &SparseGrid) -> f64 {
+    let mut acc = 0.0;
+    for (la, va) in a.iter() {
+        for (lb, vb) in b.iter() {
+            if la.dim() != lb.dim() {
+                continue;
+            }
+            // tensor structure: iterate the index pairs whose 1-d inner
+            // products are non-zero; for dyadic hats that is (at worst)
+            // every pair, but the 1-d factor prunes hard.
+            acc += subspace_pair_inner(la, va, lb, vb);
+        }
+    }
+    acc
+}
+
+fn subspace_pair_inner(la: &LevelVector, va: &[f64], lb: &LevelVector, vb: &[f64]) -> f64 {
+    let d = la.dim();
+    // per-dimension matrices of 1-d inner products (n_a x n_b), usually
+    // sparse; materialized dense because subspace extents are tiny
+    let mut mats: Vec<Vec<f64>> = Vec::with_capacity(d);
+    let mut na = vec![0usize; d];
+    let mut nb = vec![0usize; d];
+    for k in 0..d {
+        let (l, m) = (la.level(k), lb.level(k));
+        let (pa, pb) = (1usize << (l - 1), 1usize << (m - 1));
+        na[k] = pa;
+        nb[k] = pb;
+        let mut mat = vec![0.0; pa * pb];
+        for ia in 0..pa {
+            for ib in 0..pb {
+                mat[ia * pb + ib] =
+                    hat_inner_1d(l, (2 * ia + 1) as u32, m, (2 * ib + 1) as u32);
+            }
+        }
+        mats.push(mat);
+    }
+    // acc = sum_{ia, ib} va[ia] vb[ib] prod_k mats[k][ia_k, ib_k]
+    // evaluated by iterating all pairs (subspace sizes are small)
+    let strides_a = strides_of(&na);
+    let strides_b = strides_of(&nb);
+    let mut acc = 0.0;
+    let mut ia = vec![0usize; d];
+    loop {
+        let offa: usize = ia.iter().zip(&strides_a).map(|(i, s)| i * s).sum();
+        let wa = va[offa];
+        if wa != 0.0 {
+            let mut ib = vec![0usize; d];
+            loop {
+                let mut w = wa;
+                for k in 0..d {
+                    w *= mats[k][ia[k] * nb[k] + ib[k]];
+                    if w == 0.0 {
+                        break;
+                    }
+                }
+                if w != 0.0 {
+                    let offb: usize = ib.iter().zip(&strides_b).map(|(i, s)| i * s).sum();
+                    acc += w * vb[offb];
+                }
+                if !odometer(&mut ib, &nb) {
+                    break;
+                }
+            }
+        }
+        if !odometer(&mut ia, &na) {
+            break;
+        }
+    }
+    acc
+}
+
+fn strides_of(n: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; n.len()];
+    for i in 1..n.len() {
+        s[i] = s[i - 1] * n[i - 1];
+    }
+    s
+}
+
+fn odometer(idx: &mut [usize], n: &[usize]) -> bool {
+    for k in 0..idx.len() {
+        idx[k] += 1;
+        if idx[k] < n[k] {
+            return true;
+        }
+        idx[k] = 0;
+    }
+    false
+}
+
+/// Solve the symmetric positive (semi-)definite system `M c = b` by
+/// Cholesky with jitter fallback.  Small dense systems only (#grids).
+pub fn solve_spd(m: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    let mut l = vec![vec![0.0f64; n]; n];
+    let jitter = 1e-12
+        * m.iter()
+            .enumerate()
+            .map(|(i, row)| row[i].abs())
+            .fold(0.0f64, f64::max)
+            .max(1e-300);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = m[i][j];
+            for k in 0..j {
+                s -= l[i][k] * l[j][k];
+            }
+            if i == j {
+                let dia = s + jitter;
+                if dia <= 0.0 {
+                    return None;
+                }
+                l[i][i] = dia.sqrt();
+            } else {
+                l[i][j] = s / l[j][j];
+            }
+        }
+    }
+    // forward + backward substitution
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * y[k];
+        }
+        y[i] = s / l[i][i];
+    }
+    let mut c = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[k][i] * c[k];
+        }
+        c[i] = s / l[i][i];
+    }
+    Some(c)
+}
+
+/// Optimal coefficients for partial solutions `u_i` (each already gathered
+/// into its own [`SparseGrid`]) approximating the (unknown) true solution:
+/// the opticom normal equations with `b_i = <u_i, u_ref>` against a
+/// reference combination `u_ref` (e.g. the classical combination).
+pub fn optimal_coefficients(parts: &[SparseGrid], reference: &SparseGrid) -> Option<Vec<f64>> {
+    let n = parts.len();
+    let mut m = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in 0..=i {
+            let v = l2_inner(&parts[i], &parts[j]);
+            m[i][j] = v;
+            m[j][i] = v;
+        }
+    }
+    let b: Vec<f64> = parts.iter().map(|p| l2_inner(p, reference)).collect();
+    solve_spd(&m, &b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::FullGrid;
+    use crate::hierarchize::{Hierarchizer, Variant};
+
+    #[test]
+    fn hat_inner_same_level() {
+        // ||phi_{1,1}||^2 = 2h/3 = 1/3
+        assert!((hat_inner_1d(1, 1, 1, 1) - 1.0 / 3.0).abs() < 1e-15);
+        assert_eq!(hat_inner_1d(2, 1, 2, 3), 0.0); // disjoint supports
+    }
+
+    #[test]
+    fn hat_inner_nested_levels_matches_quadrature() {
+        // numeric check: <phi_{1,1}, phi_{2,1}>
+        let n = 200_000;
+        let mut acc = 0.0;
+        for k in 0..n {
+            let x = (k as f64 + 0.5) / n as f64;
+            let p1 = (1.0 - (x - 0.5).abs() / 0.5).max(0.0);
+            let p2 = (1.0 - (x - 0.25).abs() / 0.25).max(0.0);
+            acc += p1 * p2 / n as f64;
+        }
+        let exact = hat_inner_1d(1, 1, 2, 1);
+        assert!((acc - exact).abs() < 1e-6, "{acc} vs {exact}");
+    }
+
+    #[test]
+    fn l2_norm_of_known_function() {
+        // f = phi_{1,1}(x) (1-d): ||f||^2 = 1/3
+        let mut g = FullGrid::new(LevelVector::new(&[1]));
+        g.set(&[1], 1.0);
+        let mut sg = SparseGrid::new();
+        Variant::Func.instance().hierarchize(&mut g);
+        sg.gather(&g, 1.0);
+        assert!((l2_inner(&sg, &sg) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_solves_known_system() {
+        let m = vec![vec![4.0, 2.0], vec![2.0, 3.0]];
+        let c = solve_spd(&m, &[8.0, 7.0]).unwrap();
+        assert!((c[0] - 1.25).abs() < 1e-12);
+        assert!((c[1] - (7.0 - 2.5) / 3.0 * 1.0).abs() < 1e-9 || (4.0*c[0]+2.0*c[1]-8.0).abs()<1e-9);
+        // verify residual instead of hand arithmetic
+        assert!((4.0 * c[0] + 2.0 * c[1] - 8.0).abs() < 1e-9);
+        assert!((2.0 * c[0] + 3.0 * c[1] - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn opticom_recovers_classical_coefficients_for_interpolation() {
+        // for plain interpolation of a function the classical coefficients
+        // are already optimal: opticom must reproduce the combination, i.e.
+        // the optimally-combined function equals the classical one in norm.
+        let f = |x: &[f64]| {
+            x.iter().map(|&v| (std::f64::consts::PI * v).sin()).product::<f64>()
+        };
+        let scheme = crate::combi::CombinationScheme::regular(2, 3);
+        let mut parts = Vec::new();
+        let mut reference = SparseGrid::new();
+        for c in scheme.components() {
+            let mut g = FullGrid::new(c.levels.clone());
+            g.fill_with(f);
+            Variant::Func.instance().hierarchize(&mut g);
+            let mut sg = SparseGrid::new();
+            sg.gather(&g, 1.0);
+            reference.gather(&g, c.coeff);
+            parts.push(sg);
+        }
+        let copt = optimal_coefficients(&parts, &reference).unwrap();
+        // assemble with optimal coefficients, compare L2 distance to ref
+        let mut dist2 = l2_inner(&reference, &reference);
+        for (i, p) in parts.iter().enumerate() {
+            dist2 -= 2.0 * copt[i] * l2_inner(p, &reference);
+            for (j, q) in parts.iter().enumerate() {
+                dist2 += copt[i] * copt[j] * l2_inner(p, q);
+            }
+        }
+        assert!(dist2.abs() < 1e-9, "optimal combination differs: {dist2}");
+    }
+}

@@ -1,0 +1,245 @@
+//! Combination scheme enumeration and coefficients.
+
+use crate::grid::LevelVector;
+
+/// One combination grid and its coefficient.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Component {
+    pub levels: LevelVector,
+    pub coeff: f64,
+}
+
+/// A combination scheme: the set of (grid, coefficient) pairs.
+#[derive(Debug, Clone)]
+pub struct CombinationScheme {
+    dim: usize,
+    level: u8,
+    min_level: u8,
+    components: Vec<Component>,
+}
+
+/// Binomial coefficient (exact for the small arguments used here).
+pub fn binomial(n: u64, k: u64) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut r = 1u64;
+    for i in 0..k {
+        r = r * (n - i) / (i + 1);
+    }
+    r
+}
+
+/// Enumerate all `d`-part compositions of `total` with parts in
+/// `[min_part, +inf)`.
+fn compositions(d: usize, total: u32, min_part: u8, out: &mut Vec<Vec<u8>>) {
+    fn rec(d: usize, total: i64, min_part: i64, cur: &mut Vec<u8>, out: &mut Vec<Vec<u8>>) {
+        if d == 1 {
+            if total >= min_part && total <= 30 {
+                cur.push(total as u8);
+                out.push(cur.clone());
+                cur.pop();
+            }
+            return;
+        }
+        let max_here = total - (d as i64 - 1) * min_part;
+        let mut v = min_part;
+        while v <= max_here && v <= 30 {
+            cur.push(v as u8);
+            rec(d - 1, total - v, min_part, cur, out);
+            cur.pop();
+            v += 1;
+        }
+    }
+    rec(d, total as i64, min_part as i64, &mut Vec::new(), out);
+}
+
+impl CombinationScheme {
+    /// The regular scheme of dimension `d` and level `n` (>= 1).
+    pub fn regular(d: usize, n: u8) -> Self {
+        Self::truncated(d, n, 1)
+    }
+
+    /// Truncated scheme: every grid refined at least `tau` in every
+    /// dimension (`tau = 1` is the regular scheme).  Grid sums are
+    /// `n + (d-1) * tau - q` — the diagonal shifted so the finest grids
+    /// have `max l_i = n` when `tau = 1`.
+    pub fn truncated(d: usize, n: u8, tau: u8) -> Self {
+        assert!(d >= 1 && n >= tau && tau >= 1);
+        let mut components = Vec::new();
+        for q in 0..d.min(n as usize - tau as usize + 1) {
+            let total = n as u32 + (d as u32 - 1) * tau as u32 - q as u32;
+            let coeff = if q % 2 == 0 { 1.0 } else { -1.0 } * binomial(d as u64 - 1, q as u64) as f64;
+            let mut levels = Vec::new();
+            compositions(d, total, tau, &mut levels);
+            for l in levels {
+                components.push(Component { levels: LevelVector::new(&l), coeff });
+            }
+        }
+        Self { dim: d, level: n, min_level: tau, components }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    pub fn min_level(&self) -> u8 {
+        self.min_level
+    }
+
+    /// The (grid, coefficient) components; the paper's O(d * l^(d-1)) grids.
+    pub fn components(&self) -> &[Component] {
+        &self.components
+    }
+
+    pub fn len(&self) -> usize {
+        self.components.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.components.is_empty()
+    }
+
+    /// Total points across all combination grids (working-set size of the
+    /// compute phase).
+    pub fn total_points(&self) -> usize {
+        self.components.iter().map(|c| c.levels.total_points()).sum()
+    }
+
+    /// All subspaces of the union sparse grid (every `s` contained in at
+    /// least one component grid).
+    pub fn sparse_subspaces(&self) -> Vec<LevelVector> {
+        let mut out = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for c in &self.components {
+            // every s <= c.levels componentwise
+            let d = self.dim;
+            let mut s = vec![1u8; d];
+            loop {
+                let lv = LevelVector::new(&s);
+                if seen.insert(lv.clone()) {
+                    out.push(lv);
+                }
+                let mut ax = 0;
+                loop {
+                    if ax == d {
+                        break;
+                    }
+                    s[ax] += 1;
+                    if s[ax] <= c.levels.level(ax) {
+                        break;
+                    }
+                    s[ax] = 1;
+                    ax += 1;
+                }
+                if ax == d {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Inclusion–exclusion check: every sparse-grid subspace is counted
+    /// exactly once by the components containing it.  Returns the first
+    /// violating subspace if any.
+    pub fn validate(&self) -> Result<(), LevelVector> {
+        for s in self.sparse_subspaces() {
+            let count: f64 = self
+                .components
+                .iter()
+                .filter(|c| s.le(&c.levels))
+                .map(|c| c.coeff)
+                .sum();
+            if (count - 1.0).abs() > 1e-9 {
+                return Err(s);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomials() {
+        assert_eq!(binomial(0, 0), 1);
+        assert_eq!(binomial(4, 2), 6);
+        assert_eq!(binomial(9, 3), 84);
+        assert_eq!(binomial(3, 5), 0);
+    }
+
+    #[test]
+    fn regular_2d_level3() {
+        // d=2, n=3: |l|=4 grids (3,1),(2,2),(1,3) coeff +1;
+        //           |l|=3 grids (2,1),(1,2) coeff -1
+        let s = CombinationScheme::regular(2, 3);
+        assert_eq!(s.len(), 5);
+        let pos: Vec<_> = s.components().iter().filter(|c| c.coeff > 0.0).collect();
+        let neg: Vec<_> = s.components().iter().filter(|c| c.coeff < 0.0).collect();
+        assert_eq!(pos.len(), 3);
+        assert_eq!(neg.len(), 2);
+        assert!(pos.iter().all(|c| c.levels.sum() == 4 && c.coeff == 1.0));
+        assert!(neg.iter().all(|c| c.levels.sum() == 3 && c.coeff == -1.0));
+    }
+
+    #[test]
+    fn one_dimensional_scheme_is_single_grid() {
+        let s = CombinationScheme::regular(1, 5);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.components()[0].levels.as_slice(), &[5]);
+        assert_eq!(s.components()[0].coeff, 1.0);
+    }
+
+    #[test]
+    fn n_equals_one_is_single_point_grid() {
+        let s = CombinationScheme::regular(3, 1);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.components()[0].levels.as_slice(), &[1, 1, 1]);
+    }
+
+    #[test]
+    fn grid_counts_match_composition_formula() {
+        // number of grids with |l| = T, l >= 1, d parts: C(T-1, d-1)
+        let s = CombinationScheme::regular(3, 4);
+        let t6 = s.components().iter().filter(|c| c.levels.sum() == 6).count();
+        let t5 = s.components().iter().filter(|c| c.levels.sum() == 5).count();
+        let t4 = s.components().iter().filter(|c| c.levels.sum() == 4).count();
+        assert_eq!(t6 as u64, binomial(5, 2)); // 10
+        assert_eq!(t5 as u64, binomial(4, 2)); // 6
+        assert_eq!(t4 as u64, binomial(3, 2)); // 3
+        // coefficients: +1, -2, +1 for d=3
+        assert!(s.components().iter().filter(|c| c.levels.sum() == 5).all(|c| c.coeff == -2.0));
+    }
+
+    #[test]
+    fn inclusion_exclusion_holds() {
+        for (d, n) in [(1, 4), (2, 5), (3, 4), (4, 3), (5, 3)] {
+            assert!(CombinationScheme::regular(d, n).validate().is_ok(), "d={d} n={n}");
+        }
+    }
+
+    #[test]
+    fn truncated_scheme_valid_and_bounded_below() {
+        let s = CombinationScheme::truncated(3, 5, 2);
+        assert!(s.validate().is_ok());
+        assert!(s
+            .components()
+            .iter()
+            .all(|c| c.levels.as_slice().iter().all(|&l| l >= 2)));
+    }
+
+    #[test]
+    fn paper_grid_count_growth() {
+        // O(d * l^(d-1)) grids
+        let s = CombinationScheme::regular(2, 10);
+        assert_eq!(s.len(), 10 + 9);
+    }
+}

@@ -1,0 +1,207 @@
+//! Simulated distributed communication phase (the paper's exascale frame).
+//!
+//! The paper motivates hierarchization as *the* enabler of the CT's
+//! communication phase at scale.  Real deployments place combination grids
+//! on different nodes and reduce/broadcast the sparse grid.  Without a
+//! cluster, this module simulates that topology faithfully enough to
+//! reason about it (system-prompt substitution rule):
+//!
+//! * grids are partitioned over `nodes` by a load-balancing heuristic
+//!   (largest-first bin packing on point counts);
+//! * gather = reduction tree over nodes: every node sends its *partial
+//!   sparse grid* (union of its grids' subspaces, surpluses summed) up a
+//!   binary tree; scatter = broadcast down the same tree;
+//! * cost model: `alpha + bytes / beta` per message (latency + bandwidth),
+//!   with per-node serialization of its own sends.
+//!
+//! The model reports the communication volume and estimated time per CT
+//! iteration — the quantity the paper's "overhead of the communication
+//! phase vs savings in the compute phase" argument needs.
+
+use std::collections::HashSet;
+
+use crate::combi::CombinationScheme;
+use crate::grid::LevelVector;
+
+/// Network/cost parameters of the simulated cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct NetModel {
+    /// Per-message latency (seconds).
+    pub alpha: f64,
+    /// Bandwidth (bytes/second).
+    pub beta: f64,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        // conservative commodity interconnect: 10 us, 10 GB/s
+        Self { alpha: 10e-6, beta: 10e9 }
+    }
+}
+
+/// A placement of the scheme's grids on `nodes` nodes.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub nodes: usize,
+    /// `assignment[i]` = node of component grid `i`.
+    pub assignment: Vec<usize>,
+    /// Points per node (compute load).
+    pub load: Vec<usize>,
+}
+
+/// Largest-first greedy bin packing of grids onto nodes.
+pub fn place(scheme: &CombinationScheme, nodes: usize) -> Placement {
+    assert!(nodes >= 1);
+    let mut order: Vec<usize> = (0..scheme.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(scheme.components()[i].levels.total_points()));
+    let mut assignment = vec![0usize; scheme.len()];
+    let mut load = vec![0usize; nodes];
+    for i in order {
+        let n = scheme.components()[i].levels.total_points();
+        let target = (0..nodes).min_by_key(|&k| load[k]).unwrap();
+        assignment[i] = target;
+        load[target] += n;
+    }
+    Placement { nodes, assignment, load }
+}
+
+/// Sparse-grid bytes a node contributes: union of the subspaces of its
+/// grids (each subspace's surpluses are pre-summed locally).
+fn node_sparse_bytes(scheme: &CombinationScheme, placement: &Placement, node: usize) -> usize {
+    let mut subspaces: HashSet<LevelVector> = HashSet::new();
+    for (i, c) in scheme.components().iter().enumerate() {
+        if placement.assignment[i] != node {
+            continue;
+        }
+        // every subspace s <= c.levels
+        let d = c.levels.dim();
+        let mut s = vec![1u8; d];
+        loop {
+            subspaces.insert(LevelVector::new(&s));
+            let mut ax = 0;
+            loop {
+                if ax == d {
+                    break;
+                }
+                s[ax] += 1;
+                if s[ax] <= c.levels.level(ax) {
+                    break;
+                }
+                s[ax] = 1;
+                ax += 1;
+            }
+            if ax == d {
+                break;
+            }
+        }
+    }
+    subspaces
+        .iter()
+        .map(|l| (0..l.dim()).map(|i| 1usize << (l.level(i) - 1)).product::<usize>() * 8)
+        .sum()
+}
+
+/// Estimated communication cost of one CT iteration's gather + scatter.
+#[derive(Debug, Clone, Copy)]
+pub struct CommReport {
+    /// Bytes moved up the reduction tree (gather).
+    pub gather_bytes: usize,
+    /// Bytes moved down (scatter broadcast of the full sparse grid).
+    pub scatter_bytes: usize,
+    /// Estimated seconds for gather + scatter.
+    pub secs: f64,
+    /// Tree depth (rounds).
+    pub rounds: usize,
+    /// Max compute load imbalance (max/mean points per node).
+    pub imbalance: f64,
+}
+
+/// Model the reduction-tree gather + broadcast scatter.
+pub fn estimate(scheme: &CombinationScheme, placement: &Placement, net: NetModel) -> CommReport {
+    let nodes = placement.nodes;
+    let full_sparse_bytes: usize = {
+        let subs = scheme.sparse_subspaces();
+        subs.iter()
+            .map(|l| (0..l.dim()).map(|i| 1usize << (l.level(i) - 1)).product::<usize>() * 8)
+            .sum()
+    };
+    // binary reduction tree: ceil(log2 nodes) rounds; in round r, half the
+    // active nodes send their partial sparse grid (bounded by the full one)
+    let mut rounds = 0usize;
+    let mut active = nodes;
+    let mut gather_bytes = 0usize;
+    let mut secs = 0.0f64;
+    let per_node: Vec<usize> =
+        (0..nodes).map(|k| node_sparse_bytes(scheme, placement, k)).collect();
+    let max_partial = per_node.iter().copied().max().unwrap_or(0).min(full_sparse_bytes);
+    while active > 1 {
+        let senders = active / 2;
+        // partials grow toward the full sparse grid as the tree ascends
+        let msg = max_partial.max(full_sparse_bytes / 2).min(full_sparse_bytes);
+        gather_bytes += senders * msg;
+        secs += net.alpha + msg as f64 / net.beta; // rounds are parallel
+        active -= senders;
+        rounds += 1;
+    }
+    // scatter: broadcast the full sparse grid down the same tree
+    let scatter_bytes = full_sparse_bytes * nodes.saturating_sub(1);
+    secs += rounds as f64 * (net.alpha + full_sparse_bytes as f64 / net.beta);
+    let mean = placement.load.iter().sum::<usize>() as f64 / nodes as f64;
+    let imb = placement.load.iter().copied().max().unwrap_or(0) as f64 / mean.max(1.0);
+    CommReport { gather_bytes, scatter_bytes, secs, rounds, imbalance: imb }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_balances_load() {
+        let s = CombinationScheme::regular(3, 5);
+        let p = place(&s, 4);
+        assert_eq!(p.assignment.len(), s.len());
+        let max = *p.load.iter().max().unwrap() as f64;
+        let min = *p.load.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) < 2.5, "load {:?}", p.load);
+    }
+
+    #[test]
+    fn single_node_has_no_communication() {
+        let s = CombinationScheme::regular(2, 4);
+        let p = place(&s, 1);
+        let r = estimate(&s, &p, NetModel::default());
+        assert_eq!(r.rounds, 0);
+        assert_eq!(r.gather_bytes, 0);
+        assert_eq!(r.scatter_bytes, 0);
+    }
+
+    #[test]
+    fn more_nodes_more_rounds() {
+        let s = CombinationScheme::regular(2, 6);
+        let r2 = estimate(&s, &place(&s, 2), NetModel::default());
+        let r8 = estimate(&s, &place(&s, 8), NetModel::default());
+        assert_eq!(r2.rounds, 1);
+        assert_eq!(r8.rounds, 3);
+        assert!(r8.secs > r2.secs);
+        assert!(r8.scatter_bytes > r2.scatter_bytes);
+    }
+
+    #[test]
+    fn cost_scales_with_sparse_grid_size() {
+        let small = CombinationScheme::regular(2, 4);
+        let large = CombinationScheme::regular(2, 8);
+        let net = NetModel::default();
+        let rs = estimate(&small, &place(&small, 4), net);
+        let rl = estimate(&large, &place(&large, 4), net);
+        assert!(rl.gather_bytes > rs.gather_bytes);
+        assert!(rl.secs > rs.secs);
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let s = CombinationScheme::regular(2, 2);
+        let slow_net = NetModel { alpha: 1.0, beta: 1e12 };
+        let r = estimate(&s, &place(&s, 8), slow_net);
+        assert!(r.secs >= 3.0, "3 rounds x 1 s latency x2 phases: {}", r.secs);
+    }
+}

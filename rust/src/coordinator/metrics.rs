@@ -1,0 +1,111 @@
+//! Per-phase timing and counter metrics.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::perf::CycleTimer;
+use crate::util::table::{human_time, Table};
+
+/// Accumulated (seconds, count) per named phase; thread-safe.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    phases: Mutex<BTreeMap<String, (f64, u64)>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `secs` under `phase`.
+    pub fn record(&self, phase: &str, secs: f64) {
+        let mut m = self.phases.lock().unwrap();
+        let e = m.entry(phase.to_string()).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+
+    /// Time a closure under `phase`.
+    pub fn time<T>(&self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = CycleTimer::start();
+        let out = f();
+        self.record(phase, t.elapsed_secs());
+        out
+    }
+
+    /// Total seconds of one phase.
+    pub fn secs(&self, phase: &str) -> f64 {
+        self.phases.lock().unwrap().get(phase).map(|e| e.0).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.phases.lock().unwrap().get(phase).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// Snapshot as (phase, secs, count), sorted by phase name.
+    pub fn snapshot(&self) -> Vec<(String, f64, u64)> {
+        self.phases
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, (s, c))| (k.clone(), *s, *c))
+            .collect()
+    }
+
+    pub fn reset(&self) {
+        self.phases.lock().unwrap().clear();
+    }
+
+    /// Render a phase table (for CLI / examples).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(vec!["phase", "total", "count", "mean"]);
+        for (name, secs, count) in self.snapshot() {
+            t.row(vec![
+                name,
+                human_time(secs),
+                count.to_string(),
+                human_time(secs / count.max(1) as f64),
+            ]);
+        }
+        if t.is_empty() {
+            "  (no phases recorded)\n".to_string()
+        } else {
+            t.render()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_accumulates() {
+        let m = Metrics::new();
+        m.record("solve", 1.0);
+        m.record("solve", 0.5);
+        m.record("gather", 0.25);
+        assert_eq!(m.secs("solve"), 1.5);
+        assert_eq!(m.count("solve"), 2);
+        assert_eq!(m.secs("gather"), 0.25);
+        assert_eq!(m.secs("missing"), 0.0);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let m = Metrics::new();
+        let v = m.time("phase", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.count("phase"), 1);
+        assert!(m.secs("phase") >= 0.0);
+    }
+
+    #[test]
+    fn render_contains_phases() {
+        let m = Metrics::new();
+        m.record("alpha", 0.001);
+        let s = m.render();
+        assert!(s.contains("alpha"));
+        assert!(s.contains("phase"));
+    }
+}

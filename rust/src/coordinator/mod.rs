@@ -1,0 +1,27 @@
+//! L3 coordinator: the iterated combination technique orchestrator (Fig. 2).
+//!
+//! One iteration of the pipeline:
+//!
+//! ```text
+//!   [solve t steps]   per combination grid   (native rust or PJRT artifact)
+//!   [hierarchize]     per grid, worker pool  (the paper's hot path)
+//!   [gather]          reduce c_l-weighted surpluses into the sparse grid,
+//!                     streamed from the workers over a bounded channel
+//!                     (backpressure: hierarchization can run ahead of the
+//!                     gather by at most the channel capacity)
+//!   [scatter]         project sparse-grid surpluses back onto every grid
+//!   [dehierarchize]   per grid, worker pool -> nodal basis, next iteration
+//! ```
+//!
+//! The coordinator owns the process topology (leader + worker threads),
+//! per-phase metrics, and the CT state.  PJRT execution stays on the leader
+//! thread (the `xla` handles are not `Send`); the pure-rust phases fan out.
+
+pub mod distributed;
+mod metrics;
+mod pipeline;
+mod pool;
+
+pub use metrics::Metrics;
+pub use pipeline::{Coordinator, IterationReport, PipelineConfig};
+pub use pool::{parallel_grids, parallel_grids_streamed};

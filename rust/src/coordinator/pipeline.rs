@@ -1,0 +1,302 @@
+//! The iterated-CT pipeline (leader/worker execution of Fig. 2).
+
+use std::sync::mpsc::sync_channel;
+
+use anyhow::Result;
+
+use crate::combi::CombinationScheme;
+use crate::grid::{AxisLayout, FullGrid};
+use crate::hierarchize::Variant;
+use crate::perf::CycleTimer;
+use crate::solver::GridSolver;
+use crate::sparse::SparseGrid;
+
+use super::metrics::Metrics;
+use super::pool::parallel_grids;
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct PipelineConfig {
+    /// The combination scheme (grids + coefficients).
+    pub scheme: CombinationScheme,
+    /// Solver steps per CT iteration (the paper's `t`).
+    pub steps_per_iter: usize,
+    /// Hierarchization variant for the preprocessing step.
+    pub variant: Variant,
+    /// Worker threads for the hierarchize / scatter+dehierarchize phases.
+    pub workers: usize,
+    /// Capacity of the hierarchize->gather channel (backpressure bound).
+    pub gather_queue: usize,
+}
+
+impl PipelineConfig {
+    pub fn new(scheme: CombinationScheme) -> Self {
+        Self {
+            scheme,
+            steps_per_iter: 8,
+            variant: Variant::BfsOverVectorized,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            gather_queue: 4,
+        }
+    }
+}
+
+/// Per-iteration report.
+#[derive(Debug, Clone)]
+pub struct IterationReport {
+    pub iter: usize,
+    pub solve_secs: f64,
+    pub hierarchize_gather_secs: f64,
+    pub scatter_dehierarchize_secs: f64,
+    /// Surpluses held by the assembled sparse grid.
+    pub sparse_points: usize,
+}
+
+/// The iterated combination technique coordinator.
+pub struct Coordinator {
+    cfg: PipelineConfig,
+    grids: Vec<FullGrid>,
+    coeffs: Vec<f64>,
+    pub sparse: SparseGrid,
+    pub metrics: Metrics,
+}
+
+impl Coordinator {
+    /// Allocate every combination grid of the scheme and fill it by
+    /// sampling `init` (coordinates in `(0,1)^d`, dimension 1 first).
+    pub fn new(cfg: PipelineConfig, init: impl Fn(&[f64]) -> f64) -> Self {
+        let mut grids = Vec::with_capacity(cfg.scheme.len());
+        let mut coeffs = Vec::with_capacity(cfg.scheme.len());
+        for c in cfg.scheme.components() {
+            let mut g = FullGrid::new(c.levels.clone());
+            g.fill_with(&init);
+            grids.push(g);
+            coeffs.push(c.coeff);
+        }
+        Self { cfg, grids, coeffs, sparse: SparseGrid::new(), metrics: Metrics::new() }
+    }
+
+    pub fn grids(&self) -> &[FullGrid] {
+        &self.grids
+    }
+
+    pub fn grids_mut(&mut self) -> &mut [FullGrid] {
+        &mut self.grids
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Hierarchize every grid (worker pool) and gather into the sparse grid
+    /// (leader), overlapped through a bounded channel.  Grids end up in
+    /// position layout holding their *surpluses*.
+    pub fn hierarchize_and_gather(&mut self) {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct Ptr(*mut FullGrid);
+        unsafe impl Send for Ptr {}
+        unsafe impl Sync for Ptr {}
+
+        let t = CycleTimer::start();
+        let variant = self.cfg.variant.instance();
+        self.sparse.clear();
+        let (tx, rx) = sync_channel::<usize>(self.cfg.gather_queue.max(1));
+        let coeffs = &self.coeffs;
+        let sparse = &mut self.sparse;
+        let metrics = &self.metrics;
+        let n = self.grids.len();
+        let workers = self.cfg.workers.min(n).max(1);
+        // All grid access below goes through one raw pointer: each index is
+        // claimed exactly once by a worker (unique &mut), and the leader
+        // reads a grid only after its index arrived over the channel
+        // (happens-after the worker's final write, and no one writes again).
+        let ptr = Ptr(self.grids.as_mut_ptr());
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let (ptr, next) = (&ptr, &next);
+                s.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // SAFETY: i claimed exactly once -> unique &mut
+                    let g = unsafe { &mut *ptr.0.add(i) };
+                    metrics.time("hierarchize", || {
+                        g.convert_all(variant.layout());
+                        variant.hierarchize(g);
+                        // §Perf: stay in the variant's layout — gather and
+                        // scatter are layout-aware (slot tables), saving one
+                        // O(N) conversion round-trip per iteration.
+                    });
+                    if tx.send(i).is_err() {
+                        break;
+                    }
+                });
+            }
+            drop(tx); // leader's rx ends when all workers are done
+            for i in rx.iter() {
+                // SAFETY: see above (read-after-completion, no more writers)
+                let g = unsafe { &*ptr.0.add(i) };
+                metrics.time("gather", || sparse.gather(g, coeffs[i]));
+            }
+        });
+        self.metrics.record("hierarchize+gather", t.elapsed_secs());
+    }
+
+    /// Scatter sparse-grid surpluses onto every grid and dehierarchize back
+    /// to the nodal basis (worker pool).
+    pub fn scatter_and_dehierarchize(&mut self) {
+        let t = CycleTimer::start();
+        let variant = self.cfg.variant.instance();
+        let sparse = &self.sparse;
+        let metrics = &self.metrics;
+        parallel_grids(&mut self.grids, self.cfg.workers, |_, g| {
+            // grids arrive still in the variant's layout (see
+            // hierarchize_and_gather); scatter writes straight into it
+            metrics.time("scatter", || {
+                g.convert_all(variant.layout());
+                sparse.scatter(g);
+            });
+            metrics.time("dehierarchize", || {
+                variant.dehierarchize(g);
+                // back to position layout for the solver / PJRT marshalling
+                g.convert_all(AxisLayout::Position);
+            });
+        });
+        self.metrics.record("scatter+dehierarchize", t.elapsed_secs());
+    }
+
+    /// One full iteration: solve `t` steps per grid, hierarchize+gather,
+    /// scatter+dehierarchize.  The solver runs on the leader thread (PJRT
+    /// handles are not `Send`; native solvers just don't care).
+    pub fn iteration(&mut self, solver: &dyn GridSolver, iter: usize) -> Result<IterationReport> {
+        let t_solve = CycleTimer::start();
+        for g in &mut self.grids {
+            self.metrics.time("solve", || solver.advance(g, self.cfg.steps_per_iter))?;
+        }
+        let solve_secs = t_solve.elapsed_secs();
+
+        let t_hg = CycleTimer::start();
+        self.hierarchize_and_gather();
+        let hierarchize_gather_secs = t_hg.elapsed_secs();
+
+        let t_sd = CycleTimer::start();
+        self.scatter_and_dehierarchize();
+        let scatter_dehierarchize_secs = t_sd.elapsed_secs();
+
+        Ok(IterationReport {
+            iter,
+            solve_secs,
+            hierarchize_gather_secs,
+            scatter_dehierarchize_secs,
+            sparse_points: self.sparse.point_count(),
+        })
+    }
+
+    /// Run `iterations` full iterations, invoking `on_iter` after each.
+    pub fn run(
+        &mut self,
+        solver: &dyn GridSolver,
+        iterations: usize,
+        mut on_iter: impl FnMut(&IterationReport),
+    ) -> Result<Vec<IterationReport>> {
+        let mut reports = Vec::with_capacity(iterations);
+        for it in 0..iterations {
+            let r = self.iteration(solver, it)?;
+            on_iter(&r);
+            reports.push(r);
+        }
+        Ok(reports)
+    }
+
+    /// Plain (non-iterated) combination technique: hierarchize the current
+    /// grid states and assemble the sparse-grid interpolant.
+    pub fn combine(&mut self) -> &SparseGrid {
+        self.hierarchize_and_gather();
+        &self.sparse
+    }
+
+    /// Max-norm interpolation error of the assembled sparse grid vs `f`,
+    /// sampled at `samples` low-discrepancy points.
+    pub fn error_vs(&self, f: impl Fn(&[f64]) -> f64, samples: usize) -> f64 {
+        self.sparse.max_error(f, self.cfg.scheme.dim(), samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::HeatSolver;
+
+    fn product_parabola(x: &[f64]) -> f64 {
+        x.iter().map(|&xi| 4.0 * xi * (1.0 - xi)).product()
+    }
+
+    #[test]
+    fn combine_interpolates_smooth_function() {
+        // CT error decreases with level
+        let mut errs = Vec::new();
+        for n in [2u8, 4, 6] {
+            let cfg = PipelineConfig::new(CombinationScheme::regular(2, n));
+            let mut c = Coordinator::new(cfg, product_parabola);
+            c.combine();
+            errs.push(c.error_vs(product_parabola, 200));
+        }
+        assert!(errs[1] < errs[0] && errs[2] < errs[1], "{errs:?}");
+        assert!(errs[2] < 0.02, "{errs:?}");
+    }
+
+    #[test]
+    fn scatter_after_gather_is_projection_fixpoint() {
+        // scatter then re-hierarchize+gather must reproduce the same sparse
+        // grid (gather . scatter == id on the sparse-grid range).
+        let cfg = PipelineConfig::new(CombinationScheme::regular(2, 3));
+        let mut c = Coordinator::new(cfg, product_parabola);
+        c.combine();
+        let before: Vec<(crate::grid::LevelVector, Vec<f64>)> =
+            c.sparse.iter().map(|(l, v)| (l.clone(), v.to_vec())).collect();
+        c.scatter_and_dehierarchize();
+        c.hierarchize_and_gather();
+        for (l, v) in before {
+            let after = c.sparse.subspace(&l).unwrap();
+            for (a, b) in v.iter().zip(after) {
+                assert!((a - b).abs() < 1e-10, "subspace {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn iteration_with_native_solver_runs() {
+        let scheme = CombinationScheme::regular(2, 4);
+        let dt = crate::solver::stable_dt(
+            &scheme.components()[0].levels.clone(),
+            1.0,
+            0.5,
+        ) * 0.1; // conservatively below every grid's bound
+        let cfg = PipelineConfig { steps_per_iter: 2, ..PipelineConfig::new(scheme) };
+        let mut c = Coordinator::new(cfg, |x| {
+            x.iter().map(|&xi| (std::f64::consts::PI * xi).sin()).product()
+        });
+        let solver = HeatSolver { alpha: 1.0, dt };
+        let reports = c.run(&solver, 3, |_| {}).unwrap();
+        assert_eq!(reports.len(), 3);
+        assert!(reports[0].sparse_points > 0);
+        assert!(c.metrics.count("solve") > 0);
+        assert!(c.metrics.count("hierarchize") > 0);
+        assert!(c.metrics.count("gather") > 0);
+    }
+
+    #[test]
+    fn metrics_cover_all_phases() {
+        let cfg = PipelineConfig::new(CombinationScheme::regular(2, 3));
+        let mut c = Coordinator::new(cfg, product_parabola);
+        c.hierarchize_and_gather();
+        c.scatter_and_dehierarchize();
+        for phase in ["hierarchize", "gather", "scatter", "dehierarchize"] {
+            assert!(c.metrics.count(phase) > 0, "{phase}");
+        }
+    }
+}

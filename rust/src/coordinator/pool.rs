@@ -1,0 +1,139 @@
+//! Worker pool: index-stealing parallel-for over grids + streamed variant.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::SyncSender;
+
+use crate::grid::FullGrid;
+
+/// Shared-nothing `&mut` access to distinct vector elements across threads.
+///
+/// Soundness: every index is claimed exactly once from the atomic counter,
+/// so no two threads ever hold `&mut` to the same element.
+struct GridsPtr(*mut FullGrid);
+unsafe impl Send for GridsPtr {}
+unsafe impl Sync for GridsPtr {}
+
+/// Apply `f(i, &mut grids[i])` to every grid, on `workers` threads.
+///
+/// `workers <= 1` runs inline (no thread spawn).  Panics in `f` propagate.
+pub fn parallel_grids<F>(grids: &mut [FullGrid], workers: usize, f: F)
+where
+    F: Fn(usize, &mut FullGrid) + Sync,
+{
+    let n = grids.len();
+    if workers <= 1 || n <= 1 {
+        for (i, g) in grids.iter_mut().enumerate() {
+            f(i, g);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let ptr = GridsPtr(grids.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(n) {
+            s.spawn(|| {
+                let ptr = &ptr;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // SAFETY: index i is claimed exactly once (see GridsPtr)
+                    let g = unsafe { &mut *ptr.0.add(i) };
+                    f(i, g);
+                }
+            });
+        }
+    });
+}
+
+/// Like [`parallel_grids`] but every finished index is streamed into `done`
+/// (a bounded channel: sending blocks when the consumer lags — the
+/// pipeline's backpressure).  Used by hierarchize->gather overlap.
+pub fn parallel_grids_streamed<F>(
+    grids: &mut [FullGrid],
+    workers: usize,
+    done: SyncSender<usize>,
+    f: F,
+) where
+    F: Fn(usize, &mut FullGrid) + Sync,
+{
+    let n = grids.len();
+    if workers <= 1 || n <= 1 {
+        for (i, g) in grids.iter_mut().enumerate() {
+            f(i, g);
+            if done.send(i).is_err() {
+                return;
+            }
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let ptr = GridsPtr(grids.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(n) {
+            let done = done.clone();
+            let (ptr, next, f) = (&ptr, &next, &f);
+            s.spawn(move || {
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // SAFETY: index i is claimed exactly once
+                    let g = unsafe { &mut *ptr.0.add(i) };
+                    f(i, g);
+                    if done.send(i).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(done); // close the channel when all workers finish
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::LevelVector;
+    use std::sync::mpsc::sync_channel;
+
+    fn grids(n: usize) -> Vec<FullGrid> {
+        (0..n).map(|_| FullGrid::new(LevelVector::new(&[2]))).collect()
+    }
+
+    #[test]
+    fn every_grid_visited_once_parallel() {
+        let mut gs = grids(17);
+        parallel_grids(&mut gs, 4, |i, g| {
+            g.as_mut_slice()[0] += (i + 1) as f64;
+        });
+        for (i, g) in gs.iter().enumerate() {
+            assert_eq!(g.as_slice()[0], (i + 1) as f64);
+        }
+    }
+
+    #[test]
+    fn inline_when_single_worker() {
+        let mut gs = grids(3);
+        parallel_grids(&mut gs, 1, |i, g| g.as_mut_slice()[0] = i as f64);
+        assert_eq!(gs[2].as_slice()[0], 2.0);
+    }
+
+    #[test]
+    fn streamed_delivers_all_indices() {
+        let mut gs = grids(9);
+        let (tx, rx) = sync_channel(2); // tiny capacity: exercises blocking
+        let collector = std::thread::spawn(move || {
+            let mut got: Vec<usize> = rx.iter().collect();
+            got.sort_unstable();
+            got
+        });
+        parallel_grids_streamed(&mut gs, 3, tx, |i, g| {
+            g.as_mut_slice()[0] = i as f64;
+        });
+        let got = collector.join().unwrap();
+        assert_eq!(got, (0..9).collect::<Vec<_>>());
+    }
+}

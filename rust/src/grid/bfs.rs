@@ -1,0 +1,227 @@
+//! BFS and reverse-BFS axis orderings (Fig. 3 of the paper).
+//!
+//! The 1-d hierarchy is a binary-tree-like structure: the root is the
+//! midpoint (sub-level 1) and each sub-level doubles.  The **BFS layout**
+//! stores the points level by level, coarsest first — i.e. binary-heap
+//! order — so Alg. 1's per-level passes touch contiguous memory.  The
+//! **reverse-BFS layout** stores the finest sub-level first.
+//!
+//! With heap numbering `h` (root = 1, children `2h`/`2h+1`):
+//!
+//! * sub-level of `h` is `floor(log2 h) + 1`;
+//! * the *easy* hierarchical predecessor is the tree parent `h >> 1`;
+//! * the *hard* one is found by climbing: the left predecessor is the parent
+//!   of the first ancestor-or-self that is a right child, the right
+//!   predecessor the parent of the first that is a left child (the paper's
+//!   "one predecessor is directly one level above ... the other may require
+//!   to traverse the tree up to the root").
+
+use super::full::AxisLayout;
+use super::point::hier_coords;
+
+/// BFS rank (0-based) of the 1-based position `p` on an axis of level `l`.
+#[inline]
+pub fn bfs_from_position(l: u8, p: u32) -> u32 {
+    let c = hier_coords(l, p);
+    // heap index h = 2^(level-1) + (index-1)/2; rank = h - 1
+    (1u32 << (c.level - 1)) + (c.index >> 1) - 1
+}
+
+/// 1-based position of BFS rank `r` (0-based) on an axis of level `l`.
+#[inline]
+pub fn bfs_to_position(l: u8, r: u32) -> u32 {
+    let h = r + 1;
+    let level = 32 - h.leading_zeros(); // floor(log2 h) + 1
+    let j = h - (1u32 << (level - 1)); // 0-based slot within the sub-level
+    let s = 1u32 << (l as u32 - level);
+    s * (2 * j + 1)
+}
+
+/// Reverse-BFS rank of position `p`: finest sub-level stored first.
+#[inline]
+pub fn rev_bfs_from_position(l: u8, p: u32) -> u32 {
+    let c = hier_coords(l, p);
+    // sub-levels l, l-1, ..., c.level+1 precede; they hold 2^l - 2^c.level points
+    let before = (1u32 << l) - (1u32 << c.level);
+    before + (c.index >> 1)
+}
+
+/// 1-based position of reverse-BFS rank `r` on an axis of level `l`.
+#[inline]
+pub fn rev_bfs_to_position(l: u8, r: u32) -> u32 {
+    // find the sub-level block containing r
+    let mut level = l;
+    let mut before = 0u32;
+    loop {
+        let sz = 1u32 << (level - 1);
+        if r < before + sz {
+            let j = r - before;
+            let s = 1u32 << (l - level);
+            return s * (2 * j + 1);
+        }
+        before += sz;
+        level -= 1;
+    }
+}
+
+/// Navigation helper for a pole stored in BFS (heap) order.
+pub struct BfsNav;
+
+impl BfsNav {
+    /// Easy predecessor: the tree parent. `None` for the root.
+    #[inline]
+    pub fn parent(h: u32) -> Option<u32> {
+        (h > 1).then_some(h >> 1)
+    }
+
+    /// Left hierarchical predecessor in heap numbering, or `None` (boundary).
+    ///
+    /// Climb while the node is a left child (even); the parent of the first
+    /// right child on the way is positioned immediately left of `h`.
+    #[inline]
+    pub fn left_pred(mut h: u32) -> Option<u32> {
+        while h & 1 == 0 {
+            h >>= 1;
+        }
+        (h > 1).then(|| h >> 1)
+    }
+
+    /// Right hierarchical predecessor in heap numbering, or `None`.
+    #[inline]
+    pub fn right_pred(mut h: u32) -> Option<u32> {
+        while h & 1 == 1 && h > 1 {
+            h >>= 1;
+        }
+        (h > 1).then(|| h >> 1)
+    }
+}
+
+/// Precomputed rank permutation between two layouts of one axis.
+pub struct LayoutMap {
+    l: u8,
+    from: AxisLayout,
+    to: AxisLayout,
+}
+
+impl LayoutMap {
+    pub fn new(l: u8, from: AxisLayout, to: AxisLayout) -> Self {
+        Self { l, from, to }
+    }
+
+    /// Rank in `to`-layout of the point stored at rank `r` in `from`-layout.
+    #[inline]
+    pub fn map(&self, r: u32) -> u32 {
+        let p = match self.from {
+            AxisLayout::Position => r + 1,
+            AxisLayout::Bfs => bfs_to_position(self.l, r),
+            AxisLayout::BfsRev => rev_bfs_to_position(self.l, r),
+        };
+        match self.to {
+            AxisLayout::Position => p - 1,
+            AxisLayout::Bfs => bfs_from_position(self.l, p),
+            AxisLayout::BfsRev => rev_bfs_from_position(self.l, p),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bfs_is_a_bijection() {
+        for l in 1..=10u8 {
+            let n = (1u32 << l) - 1;
+            let mut seen = vec![false; n as usize];
+            for p in 1..=n {
+                let r = bfs_from_position(l, p);
+                assert!(r < n);
+                assert!(!seen[r as usize]);
+                seen[r as usize] = true;
+                assert_eq!(bfs_to_position(l, r), p);
+            }
+        }
+    }
+
+    #[test]
+    fn rev_bfs_is_a_bijection() {
+        for l in 1..=10u8 {
+            let n = (1u32 << l) - 1;
+            let mut seen = vec![false; n as usize];
+            for p in 1..=n {
+                let r = rev_bfs_from_position(l, p);
+                assert!(r < n, "l={l} p={p} r={r}");
+                assert!(!seen[r as usize]);
+                seen[r as usize] = true;
+                assert_eq!(rev_bfs_to_position(l, r), p);
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_order_l3() {
+        // positions by BFS rank: root 4, level2: 2 6, level3: 1 3 5 7
+        let got: Vec<u32> = (0..7).map(|r| bfs_to_position(3, r)).collect();
+        assert_eq!(got, vec![4, 2, 6, 1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn rev_bfs_order_l3() {
+        let got: Vec<u32> = (0..7).map(|r| rev_bfs_to_position(3, r)).collect();
+        assert_eq!(got, vec![1, 3, 5, 7, 2, 6, 4]);
+    }
+
+    #[test]
+    fn bfs_levels_are_contiguous() {
+        let l = 6u8;
+        for lev in 1..=l {
+            let start = (1u32 << (lev - 1)) - 1;
+            let end = (1u32 << lev) - 1;
+            for r in start..end {
+                assert_eq!(hier_coords(l, bfs_to_position(l, r)).level, lev);
+            }
+        }
+    }
+
+    #[test]
+    fn heap_preds_match_position_preds() {
+        use super::super::point::predecessors;
+        for l in 1..=9u8 {
+            let n = (1u32 << l) - 1;
+            for r in 0..n {
+                let h = r + 1;
+                let p = bfs_to_position(l, r);
+                let (lt, rt) = predecessors(l, p);
+                let lt_h = BfsNav::left_pred(h).map(|hh| bfs_to_position(l, hh - 1));
+                let rt_h = BfsNav::right_pred(h).map(|hh| bfs_to_position(l, hh - 1));
+                assert_eq!(lt_h, lt, "l={l} p={p} left");
+                assert_eq!(rt_h, rt, "l={l} p={p} right");
+            }
+        }
+    }
+
+    #[test]
+    fn parent_is_one_of_the_preds() {
+        for l in 2..=8u8 {
+            let n = (1u32 << l) - 1;
+            for h in 2..=n {
+                let par = BfsNav::parent(h).unwrap();
+                assert!(
+                    BfsNav::left_pred(h) == Some(par) || BfsNav::right_pred(h) == Some(par)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn layout_map_composes_to_identity() {
+        for l in 1..=8u8 {
+            let n = (1u32 << l) - 1;
+            let ab = LayoutMap::new(l, AxisLayout::Position, AxisLayout::Bfs);
+            let ba = LayoutMap::new(l, AxisLayout::Bfs, AxisLayout::Position);
+            for r in 0..n {
+                assert_eq!(ba.map(ab.map(r)), r);
+            }
+        }
+    }
+}

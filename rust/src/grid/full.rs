@@ -1,0 +1,425 @@
+//! The anisotropic full-grid container.
+
+use super::bfs::LayoutMap;
+use super::level::LevelVector;
+
+/// Per-axis point ordering of the storage.
+///
+/// The paper's layouts: `Position` is the usual regular-grid ("nodal") order;
+/// `Bfs` orders each axis by a breadth-first traversal of the binary-tree-like
+/// hierarchy (root first, then sub-level 2, ...); `BfsRev` stores the
+/// sub-levels in reverse (finest first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AxisLayout {
+    /// 1-based positions `1, 2, 3, ...` in natural order.
+    Position,
+    /// Level-by-level, coarsest first (heap/BFS order of Fig. 3).
+    Bfs,
+    /// Level-by-level, finest first.
+    BfsRev,
+}
+
+/// A d-dimensional anisotropic full grid of `f64` values.
+///
+/// Row-major with dimension 1 (index 0 of the level vector) fastest.  The
+/// x1-axis may be padded to an alignment boundary (`row_len >= n_1`) so the
+/// vectorized kernels can use aligned loads — the paper pads one point per
+/// pole; we round up to the AVX width.  Padding slots hold 0.0 and stay 0.0
+/// under every (linear) grid operation.
+#[derive(Clone)]
+pub struct FullGrid {
+    levels: LevelVector,
+    layouts: Vec<AxisLayout>,
+    /// Storage length of the x1 axis (>= axis_points(0)).
+    row_len: usize,
+    /// Storage strides per axis; `strides[0] == 1`.
+    strides: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl FullGrid {
+    /// Zero-initialized grid in position layout, no padding.
+    pub fn new(levels: LevelVector) -> Self {
+        Self::with_padding(levels, 1)
+    }
+
+    /// Zero-initialized grid whose x1 rows are padded to a multiple of
+    /// `align` elements (e.g. 4 for 32-byte AVX alignment of f64 rows).
+    pub fn with_padding(levels: LevelVector, align: usize) -> Self {
+        assert!(align >= 1);
+        let n1 = levels.axis_points(0);
+        let row_len = n1.div_ceil(align) * align;
+        let d = levels.dim();
+        let mut strides = vec![1usize; d];
+        if d > 1 {
+            strides[1] = row_len;
+            for i in 2..d {
+                strides[i] = strides[i - 1] * levels.axis_points(i - 1);
+            }
+        }
+        let total = if d == 1 {
+            row_len
+        } else {
+            strides[d - 1] * levels.axis_points(d - 1)
+        };
+        Self {
+            layouts: vec![AxisLayout::Position; d],
+            row_len,
+            strides,
+            data: vec![0.0; total],
+            levels,
+        }
+    }
+
+    #[inline]
+    pub fn levels(&self) -> &LevelVector {
+        &self.levels
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.levels.dim()
+    }
+
+    /// Per-axis layouts (all `Position` unless converted).
+    #[inline]
+    pub fn layouts(&self) -> &[AxisLayout] {
+        &self.layouts
+    }
+
+    #[inline]
+    pub fn layout(&self, axis: usize) -> AxisLayout {
+        self.layouts[axis]
+    }
+
+    /// Storage stride of `axis`.
+    #[inline]
+    pub fn stride(&self, axis: usize) -> usize {
+        self.strides[axis]
+    }
+
+    /// Storage length of the x1 axis (>= number of points; rest is padding).
+    #[inline]
+    pub fn row_len(&self) -> usize {
+        self.row_len
+    }
+
+    /// True number of points along `axis`.
+    #[inline]
+    pub fn axis_points(&self, axis: usize) -> usize {
+        self.levels.axis_points(axis)
+    }
+
+    /// Raw storage (including padding slots).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Raw mutable storage (including padding slots).
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Storage offset of the point with 0-based *storage* coordinates `c`.
+    #[inline]
+    pub fn offset(&self, c: &[usize]) -> usize {
+        debug_assert_eq!(c.len(), self.dim());
+        c.iter().zip(&self.strides).map(|(ci, si)| ci * si).sum()
+    }
+
+    /// Storage slot of a point given by 1-based *positions* `p` (per axis),
+    /// honoring each axis's layout.
+    pub fn slot_of_positions(&self, p: &[u32]) -> usize {
+        debug_assert_eq!(p.len(), self.dim());
+        let mut off = 0usize;
+        for ax in 0..self.dim() {
+            let l = self.levels.level(ax);
+            let rank = match self.layouts[ax] {
+                AxisLayout::Position => (p[ax] - 1) as usize,
+                AxisLayout::Bfs => super::bfs::bfs_from_position(l, p[ax]) as usize,
+                AxisLayout::BfsRev => super::bfs::rev_bfs_from_position(l, p[ax]) as usize,
+            };
+            off += rank * self.strides[ax];
+        }
+        off
+    }
+
+    /// Value at 1-based positions `p`.
+    pub fn get(&self, p: &[u32]) -> f64 {
+        self.data[self.slot_of_positions(p)]
+    }
+
+    /// Per-axis slot-contribution table: `tab[p - 1]` is the storage
+    /// contribution of 1-based position `p` on `axis` (rank in the axis's
+    /// layout times its stride).  Lets bulk kernels (gather/scatter) replace
+    /// the per-point layout dispatch + multiply with one lookup + add.
+    pub fn axis_slot_table(&self, axis: usize) -> Vec<usize> {
+        let l = self.levels.level(axis);
+        let n = self.axis_points(axis);
+        let stride = self.strides[axis];
+        (1..=n as u32)
+            .map(|p| {
+                let rank = match self.layouts[axis] {
+                    AxisLayout::Position => (p - 1) as usize,
+                    AxisLayout::Bfs => super::bfs::bfs_from_position(l, p) as usize,
+                    AxisLayout::BfsRev => super::bfs::rev_bfs_from_position(l, p) as usize,
+                };
+                rank * stride
+            })
+            .collect()
+    }
+
+    /// True if the storage already *is* the canonical exchange layout
+    /// (position order on every axis, no padding).
+    pub fn is_canonical_layout(&self) -> bool {
+        self.layouts.iter().all(|&l| l == AxisLayout::Position)
+            && self.row_len == self.axis_points(0)
+    }
+
+    /// Set the value at 1-based positions `p`.
+    pub fn set(&mut self, p: &[u32], v: f64) {
+        let s = self.slot_of_positions(p);
+        self.data[s] = v;
+    }
+
+    /// Fill from a function of the *point coordinates* in `(0,1)^d`
+    /// (dimension 1 first in the coordinate slice).
+    pub fn fill_with(&mut self, mut f: impl FnMut(&[f64]) -> f64) {
+        let d = self.dim();
+        let mut pos = vec![1u32; d];
+        let mut coord = vec![0f64; d];
+        let h: Vec<f64> = (0..d).map(|i| 0.5f64.powi(self.levels.level(i) as i32)).collect();
+        loop {
+            for i in 0..d {
+                coord[i] = pos[i] as f64 * h[i];
+            }
+            let v = f(&coord);
+            self.set(&pos, v);
+            // odometer over positions
+            let mut ax = 0;
+            loop {
+                if ax == d {
+                    return;
+                }
+                pos[ax] += 1;
+                if pos[ax] as usize <= self.axis_points(ax) {
+                    break;
+                }
+                pos[ax] = 1;
+                ax += 1;
+            }
+        }
+    }
+
+    /// Visit every point: `f(positions, value)` (1-based positions).
+    pub fn for_each(&self, mut f: impl FnMut(&[u32], f64)) {
+        let d = self.dim();
+        let mut pos = vec![1u32; d];
+        loop {
+            f(&pos, self.get(&pos));
+            let mut ax = 0;
+            loop {
+                if ax == d {
+                    return;
+                }
+                pos[ax] += 1;
+                if pos[ax] as usize <= self.axis_points(ax) {
+                    break;
+                }
+                pos[ax] = 1;
+                ax += 1;
+            }
+        }
+    }
+
+    /// Copy the values into position-layout, unpadded row-major order
+    /// (the canonical exchange format; also what the PJRT artifacts take).
+    pub fn to_canonical(&self) -> Vec<f64> {
+        if self.is_canonical_layout() {
+            return self.data.clone(); // fast path: storage == exchange format
+        }
+        let mut out = Vec::with_capacity(self.levels.total_points());
+        let d = self.dim();
+        let n: Vec<usize> = (0..d).map(|i| self.axis_points(i)).collect();
+        let mut pos = vec![1u32; d];
+        loop {
+            out.push(self.get(&pos));
+            let mut ax = 0;
+            loop {
+                if ax == d {
+                    return out;
+                }
+                pos[ax] += 1;
+                if pos[ax] as usize <= n[ax] {
+                    break;
+                }
+                pos[ax] = 1;
+                ax += 1;
+            }
+        }
+    }
+
+    /// Overwrite the values from canonical (position-layout, unpadded) order.
+    pub fn from_canonical(&mut self, vals: &[f64]) {
+        assert_eq!(vals.len(), self.levels.total_points());
+        if self.is_canonical_layout() {
+            self.data.copy_from_slice(vals); // fast path
+            return;
+        }
+        let d = self.dim();
+        let mut pos = vec![1u32; d];
+        for &v in vals {
+            self.set(&pos, v);
+            let mut ax = 0;
+            while ax < d {
+                pos[ax] += 1;
+                if pos[ax] as usize <= self.axis_points(ax) {
+                    break;
+                }
+                pos[ax] = 1;
+                ax += 1;
+            }
+        }
+    }
+
+    /// Convert one axis to a different layout (gather permutation).
+    ///
+    /// O(N) with a scratch buffer; the benches measure this cost separately
+    /// from hierarchization itself (ablation E9).
+    pub fn convert_axis(&mut self, axis: usize, to: AxisLayout) {
+        let from = self.layouts[axis];
+        if from == to {
+            return;
+        }
+        let l = self.levels.level(axis);
+        let map = LayoutMap::new(l, from, to);
+        let n = self.axis_points(axis);
+        let stride = self.strides[axis];
+        // iterate all "poles" along `axis`, permute each
+        let total = self.data.len();
+        let block = stride * if axis == 0 { self.row_len } else { n };
+        let mut scratch = vec![0f64; n];
+        let mut base = 0usize;
+        while base < total {
+            for inner in 0..stride {
+                let start = base + inner;
+                for r in 0..n {
+                    scratch[map.map(r as u32) as usize] = self.data[start + r * stride];
+                }
+                for r in 0..n {
+                    self.data[start + r * stride] = scratch[r];
+                }
+            }
+            base += block;
+        }
+        self.layouts[axis] = to;
+    }
+
+    /// Convert every axis to `to`.
+    pub fn convert_all(&mut self, to: AxisLayout) {
+        for ax in 0..self.dim() {
+            self.convert_axis(ax, to);
+        }
+    }
+
+    /// Max-norm distance to another grid (same levels; layouts may differ).
+    pub fn max_diff(&self, other: &FullGrid) -> f64 {
+        assert_eq!(self.levels, other.levels);
+        let mut m = 0f64;
+        self.for_each(|pos, v| {
+            let w = other.get(pos);
+            m = m.max((v - w).abs());
+        });
+        m
+    }
+}
+
+impl std::fmt::Debug for FullGrid {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FullGrid")
+            .field("levels", &self.levels)
+            .field("layouts", &self.layouts)
+            .field("row_len", &self.row_len)
+            .field("bytes", &(self.data.len() * 8))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_strides() {
+        let g = FullGrid::new(LevelVector::new(&[3, 2]));
+        assert_eq!(g.dim(), 2);
+        assert_eq!(g.stride(0), 1);
+        assert_eq!(g.stride(1), 7);
+        assert_eq!(g.as_slice().len(), 21);
+    }
+
+    #[test]
+    fn padding_rounds_rows() {
+        let g = FullGrid::with_padding(LevelVector::new(&[3, 2]), 4);
+        assert_eq!(g.row_len(), 8); // 7 -> 8
+        assert_eq!(g.stride(1), 8);
+        assert_eq!(g.as_slice().len(), 24);
+        // padded slots are zero
+        assert_eq!(g.as_slice()[7], 0.0);
+    }
+
+    #[test]
+    fn get_set_positions() {
+        let mut g = FullGrid::new(LevelVector::new(&[2, 2]));
+        g.set(&[1, 3], 7.0);
+        assert_eq!(g.get(&[1, 3]), 7.0);
+        // row-major, x1 fastest: (p1=1,p2=3) -> (3-1)*3 + 0 = 6
+        assert_eq!(g.as_slice()[6], 7.0);
+    }
+
+    #[test]
+    fn fill_with_coordinates() {
+        let mut g = FullGrid::new(LevelVector::new(&[2, 1]));
+        g.fill_with(|c| c[0] + 10.0 * c[1]);
+        // positions x1 in {1,2,3} at h=0.25; x2 root at 0.5
+        assert_eq!(g.get(&[1, 1]), 0.25 + 5.0);
+        assert_eq!(g.get(&[2, 1]), 0.5 + 5.0);
+        assert_eq!(g.get(&[3, 1]), 0.75 + 5.0);
+    }
+
+    #[test]
+    fn canonical_roundtrip_with_padding() {
+        let mut g = FullGrid::with_padding(LevelVector::new(&[2, 2]), 4);
+        g.fill_with(|c| c[0] * 3.0 - c[1]);
+        let vals = g.to_canonical();
+        assert_eq!(vals.len(), 9);
+        let mut h = FullGrid::new(LevelVector::new(&[2, 2]));
+        h.from_canonical(&vals);
+        assert_eq!(g.max_diff(&h), 0.0);
+    }
+
+    #[test]
+    fn axis_conversion_roundtrip() {
+        let mut g = FullGrid::new(LevelVector::new(&[3, 2]));
+        g.fill_with(|c| c[0] * 7.0 + c[1]);
+        let orig = g.clone();
+        g.convert_axis(0, AxisLayout::Bfs);
+        assert_ne!(g.as_slice(), orig.as_slice()); // actually permuted
+        assert_eq!(g.max_diff(&orig), 0.0); // same logical values
+        g.convert_axis(0, AxisLayout::Position);
+        assert_eq!(g.as_slice(), orig.as_slice());
+    }
+
+    #[test]
+    fn bfs_layout_get_respects_rank() {
+        let mut g = FullGrid::new(LevelVector::new(&[2]));
+        g.fill_with(|c| c[0]); // values 0.25, 0.5, 0.75 at slots 0,1,2
+        g.convert_axis(0, AxisLayout::Bfs);
+        // BFS: root (pos 2) first, then level 2 (pos 1, 3)
+        assert_eq!(g.as_slice(), &[0.5, 0.25, 0.75]);
+        assert_eq!(g.get(&[2]), 0.5);
+        assert_eq!(g.get(&[1]), 0.25);
+    }
+}

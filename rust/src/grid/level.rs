@@ -1,0 +1,178 @@
+//! Level vectors: the complete description of a combination grid.
+
+use std::fmt;
+
+/// Maximum supported dimension (the paper evaluates up to d = 10).
+pub const MAX_DIM: usize = 16;
+
+/// The level vector `(l_1, ..., l_d)` of an anisotropic full grid.
+///
+/// `levels[0]` is the paper's dimension 1 — the **fastest-varying** (unit
+/// stride) axis of the row-major storage.  Every entry is >= 1; level 1
+/// means a single grid point along that axis.
+#[derive(Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LevelVector {
+    levels: Vec<u8>,
+}
+
+impl LevelVector {
+    /// Build from per-dimension refinement levels (dimension 1 first).
+    ///
+    /// # Panics
+    /// If empty, longer than [`MAX_DIM`], or any level is 0 or > 30.
+    pub fn new(levels: &[u8]) -> Self {
+        assert!(!levels.is_empty(), "level vector must have >= 1 dimension");
+        assert!(levels.len() <= MAX_DIM, "dimension {} > MAX_DIM {}", levels.len(), MAX_DIM);
+        for (i, &l) in levels.iter().enumerate() {
+            assert!((1..=30).contains(&l), "level l_{} = {} out of range 1..=30", i + 1, l);
+        }
+        Self { levels: levels.to_vec() }
+    }
+
+    /// Isotropic level vector: all `d` dimensions at level `l`.
+    pub fn isotropic(d: usize, l: u8) -> Self {
+        Self::new(&vec![l; d])
+    }
+
+    /// Parse `"5,4,3"` (paper order, dimension 1 first).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let levels: Vec<u8> = s
+            .split(|c| c == ',' || c == 'x')
+            .map(|t| t.trim().parse::<u8>().map_err(|e| anyhow::anyhow!("bad level {t:?}: {e}")))
+            .collect::<Result<_, _>>()?;
+        anyhow::ensure!(!levels.is_empty() && levels.len() <= MAX_DIM, "bad dimension");
+        anyhow::ensure!(levels.iter().all(|&l| (1..=30).contains(&l)), "levels must be 1..=30");
+        Ok(Self { levels })
+    }
+
+    /// Number of dimensions `d`.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Refinement level of dimension `i` (0-based, dimension 1 = index 0).
+    #[inline]
+    pub fn level(&self, i: usize) -> u8 {
+        self.levels[i]
+    }
+
+    /// All levels, dimension 1 first.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        &self.levels
+    }
+
+    /// Number of grid points along dimension `i`: `2^l_i - 1`.
+    #[inline]
+    pub fn axis_points(&self, i: usize) -> usize {
+        (1usize << self.levels[i]) - 1
+    }
+
+    /// Total number of grid points `prod_i (2^l_i - 1)`.
+    pub fn total_points(&self) -> usize {
+        (0..self.dim()).map(|i| self.axis_points(i)).product()
+    }
+
+    /// Level sum `|l|_1` (the paper sizes data sets by this: 1 GB at 27).
+    pub fn sum(&self) -> u32 {
+        self.levels.iter().map(|&l| l as u32).sum()
+    }
+
+    /// Grid bytes at f64 (excluding padding).
+    pub fn size_bytes(&self) -> usize {
+        self.total_points() * std::mem::size_of::<f64>()
+    }
+
+    /// Unpadded strides, dimension 1 first: `stride[0] = 1`,
+    /// `stride[i] = prod_{j<i} (2^l_j - 1)`.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.dim()];
+        for i in 1..self.dim() {
+            s[i] = s[i - 1] * self.axis_points(i - 1);
+        }
+        s
+    }
+
+    /// Componentwise `self <= other` (subspace/grid containment order).
+    pub fn le(&self, other: &Self) -> bool {
+        self.dim() == other.dim()
+            && self.levels.iter().zip(&other.levels).all(|(a, b)| a <= b)
+    }
+
+    /// Tag used in artifact names: `"5x4x3"` (paper order).
+    pub fn tag(&self) -> String {
+        self.levels.iter().map(|l| l.to_string()).collect::<Vec<_>>().join("x")
+    }
+}
+
+impl fmt::Debug for LevelVector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "l{:?}", self.levels)
+    }
+}
+
+impl fmt::Display for LevelVector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({})", self.levels.iter().map(|l| l.to_string()).collect::<Vec<_>>().join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn points_and_strides() {
+        let lv = LevelVector::new(&[3, 2, 1]);
+        assert_eq!(lv.dim(), 3);
+        assert_eq!(lv.axis_points(0), 7);
+        assert_eq!(lv.axis_points(1), 3);
+        assert_eq!(lv.axis_points(2), 1);
+        assert_eq!(lv.total_points(), 21);
+        assert_eq!(lv.strides(), vec![1, 7, 21]);
+        assert_eq!(lv.sum(), 6);
+    }
+
+    #[test]
+    fn level_one_axis_is_single_point() {
+        let lv = LevelVector::new(&[1]);
+        assert_eq!(lv.total_points(), 1);
+        assert_eq!(lv.size_bytes(), 8);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let lv = LevelVector::parse("5,4,3").unwrap();
+        assert_eq!(lv.as_slice(), &[5, 4, 3]);
+        assert_eq!(LevelVector::parse(&lv.tag()).unwrap(), lv);
+        assert!(LevelVector::parse("0,2").is_err());
+        assert!(LevelVector::parse("").is_err());
+        assert!(LevelVector::parse("a,b").is_err());
+    }
+
+    #[test]
+    fn containment_order() {
+        let a = LevelVector::new(&[2, 3]);
+        let b = LevelVector::new(&[3, 3]);
+        assert!(a.le(&b));
+        assert!(!b.le(&a));
+        assert!(a.le(&a));
+        assert!(!a.le(&LevelVector::new(&[3, 2])));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_level_panics() {
+        LevelVector::new(&[0, 2]);
+    }
+
+    #[test]
+    fn paper_data_set_sizing() {
+        // paper: |l|_1 = 27 ~ 1 GB; one level less halves it.
+        let g27 = LevelVector::new(&[27]).size_bytes();
+        let g26 = LevelVector::new(&[26]).size_bytes();
+        assert!(g27 > 1000 * 1000 * 1000 && g27 < 1100 * 1000 * 1000);
+        assert!((g27 as f64 / g26 as f64 - 2.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,23 @@
+//! Anisotropic full ("combination") grids and their data layouts.
+//!
+//! Conventions (identical to the paper and to the python side):
+//!
+//! * refinement level 1 = one single grid point;
+//! * an axis of level `l` carries `2^l - 1` interior points at 1-based
+//!   positions `1 ..= 2^l - 1` (mesh width `2^-l` on the unit interval);
+//!   there are **no boundary points** — the virtual positions `0` and `2^l`
+//!   carry the value 0;
+//! * grid storage is row-major with **dimension 1 fastest** (unit stride),
+//!   matching the paper's `x1` and the last numpy axis of the python layer.
+
+mod bfs;
+mod full;
+mod level;
+mod point;
+mod pole;
+
+pub use bfs::{bfs_from_position, bfs_to_position, BfsNav, LayoutMap};
+pub use full::{AxisLayout, FullGrid};
+pub use level::LevelVector;
+pub use point::{hier_coords, position_of, predecessors, HierCoord1d};
+pub use pole::{PoleCursor, Poles};

@@ -1,0 +1,126 @@
+//! Hierarchical coordinates of 1-d grid points and predecessor arithmetic.
+//!
+//! A 1-based position `p` on an axis of level `l` factors uniquely as
+//! `p = j * 2^(l - lev)` with `j` odd: the point lives on **sub-level**
+//! `lev = l - trailing_zeros(p)` and has odd **level index** `j` there.  Its
+//! hierarchical predecessors sit at `p ± 2^(l - lev)`; position `0` and
+//! `2^l` are the virtual (value-0) boundary.
+
+/// (sub-level, odd index) of a point; `level` counts from 1 (the root).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct HierCoord1d {
+    /// Sub-level within the axis, `1 ..= l`.
+    pub level: u8,
+    /// Odd 1-based index within the sub-level, `1, 3, 5, ..., 2^level - 1`.
+    pub index: u32,
+}
+
+/// Hierarchical (level, index) of 1-based position `p` on an axis of level `l`.
+#[inline]
+pub fn hier_coords(l: u8, p: u32) -> HierCoord1d {
+    debug_assert!(p >= 1 && p < (1u32 << l), "position {p} out of axis of level {l}");
+    let tz = p.trailing_zeros() as u8;
+    HierCoord1d { level: l - tz, index: p >> tz }
+}
+
+/// Inverse of [`hier_coords`]: 1-based position of `(level, index)`.
+#[inline]
+pub fn position_of(l: u8, c: HierCoord1d) -> u32 {
+    debug_assert!(c.level >= 1 && c.level <= l);
+    debug_assert!(c.index % 2 == 1 && c.index < (1u32 << c.level));
+    c.index << (l - c.level)
+}
+
+/// Hierarchical predecessors of 1-based position `p` on an axis of level `l`.
+///
+/// Returns `(left, right)`; `None` marks the virtual boundary (the paper's
+/// "second hierarchical predecessor does not exist for the outermost grid
+/// points of each refinement level").  The root (`p = 2^(l-1)`) has neither.
+#[inline]
+pub fn predecessors(l: u8, p: u32) -> (Option<u32>, Option<u32>) {
+    let s = 1u32 << p.trailing_zeros();
+    if s == (1u32 << (l - 1)) {
+        return (None, None); // root
+    }
+    let left = p - s;
+    let right = p + s;
+    (
+        (left != 0).then_some(left),
+        (right != (1u32 << l)).then_some(right),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_roundtrip_all_positions() {
+        for l in 1..=10u8 {
+            for p in 1..(1u32 << l) {
+                let c = hier_coords(l, p);
+                assert!(c.level >= 1 && c.level <= l);
+                assert_eq!(c.index % 2, 1);
+                assert_eq!(position_of(l, c), p);
+            }
+        }
+    }
+
+    #[test]
+    fn level_populations() {
+        // sub-level lev holds 2^(lev-1) points
+        for l in 1..=8u8 {
+            let mut count = vec![0usize; l as usize + 1];
+            for p in 1..(1u32 << l) {
+                count[hier_coords(l, p).level as usize] += 1;
+            }
+            for lev in 1..=l {
+                assert_eq!(count[lev as usize], 1 << (lev - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn predecessors_structure() {
+        // l=3, positions 1..7; root = 4
+        assert_eq!(predecessors(3, 4), (None, None));
+        assert_eq!(predecessors(3, 2), (None, Some(4)));
+        assert_eq!(predecessors(3, 6), (Some(4), None));
+        assert_eq!(predecessors(3, 1), (None, Some(2)));
+        assert_eq!(predecessors(3, 3), (Some(2), Some(4)));
+        assert_eq!(predecessors(3, 5), (Some(4), Some(6)));
+        assert_eq!(predecessors(3, 7), (Some(6), None));
+    }
+
+    #[test]
+    fn predecessors_are_strictly_coarser() {
+        for l in 2..=9u8 {
+            for p in 1..(1u32 << l) {
+                let lev = hier_coords(l, p).level;
+                let (lt, rt) = predecessors(l, p);
+                for q in [lt, rt].into_iter().flatten() {
+                    assert!(hier_coords(l, q).level < lev, "l={l} p={p} q={q}");
+                }
+                // every non-root point has at least one predecessor
+                if lev > 1 {
+                    assert!(lt.is_some() || rt.is_some());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn outermost_points_have_one_predecessor() {
+        for l in 2..=9u8 {
+            for lev in 2..=l {
+                let s = 1u32 << (l - lev);
+                let first = s;
+                let last = (1u32 << l) - s;
+                assert_eq!(predecessors(l, first).0, None);
+                assert!(predecessors(l, first).1.is_some());
+                assert_eq!(predecessors(l, last).1, None);
+                assert!(predecessors(l, last).0.is_some());
+            }
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! `BFS` and `Reverse-BFS` — level-ordered layouts (Fig. 3 middle).
+//!
+//! Alg. 1 walks the pole bottom-up, level by level; storing the points in
+//! BFS order makes every per-level pass a contiguous scan.  Predecessor
+//! navigation happens in heap numbering: one predecessor is the tree parent
+//! (one level up), the other may require climbing to the root — the
+//! branching the paper discusses under "Reducing the flop count".
+
+use crate::grid::{AxisLayout, BfsNav, FullGrid, Poles};
+
+use super::Hierarchizer;
+
+/// Hierarchize one pole stored in BFS (heap) order; `st` = element stride.
+#[inline]
+pub(crate) fn pole_hierarchize_bfs(data: &mut [f64], base: usize, st: usize, l: u8) {
+    for lev in (2..=l).rev() {
+        let first = 1u32 << (lev - 1);
+        let last = (1u32 << lev) - 1;
+        for h in first..=last {
+            let x = base + (h as usize - 1) * st;
+            let mut v = data[x];
+            if let Some(a) = BfsNav::left_pred(h) {
+                v -= 0.5 * data[base + (a as usize - 1) * st];
+            }
+            if let Some(b) = BfsNav::right_pred(h) {
+                v -= 0.5 * data[base + (b as usize - 1) * st];
+            }
+            data[x] = v;
+        }
+    }
+}
+
+/// Dehierarchize one pole stored in BFS order.
+#[inline]
+pub(crate) fn pole_dehierarchize_bfs(data: &mut [f64], base: usize, st: usize, l: u8) {
+    for lev in 2..=l {
+        let first = 1u32 << (lev - 1);
+        let last = (1u32 << lev) - 1;
+        for h in first..=last {
+            let x = base + (h as usize - 1) * st;
+            let mut v = data[x];
+            if let Some(a) = BfsNav::left_pred(h) {
+                v += 0.5 * data[base + (a as usize - 1) * st];
+            }
+            if let Some(b) = BfsNav::right_pred(h) {
+                v += 0.5 * data[base + (b as usize - 1) * st];
+            }
+            data[x] = v;
+        }
+    }
+}
+
+/// Storage rank of heap node `h` in the reverse-BFS layout of an axis of
+/// level `l` (finest sub-level first).
+#[inline]
+fn rev_rank(l: u8, h: u32) -> usize {
+    let lev = 32 - h.leading_zeros(); // sub-level of h
+    (((1u32 << l) - (1u32 << lev)) + (h - (1u32 << (lev - 1)))) as usize
+}
+
+#[inline]
+fn pole_hierarchize_rev(data: &mut [f64], base: usize, st: usize, l: u8) {
+    for lev in (2..=l).rev() {
+        let first = 1u32 << (lev - 1);
+        let last = (1u32 << lev) - 1;
+        for h in first..=last {
+            let x = base + rev_rank(l, h) * st;
+            let mut v = data[x];
+            if let Some(a) = BfsNav::left_pred(h) {
+                v -= 0.5 * data[base + rev_rank(l, a) * st];
+            }
+            if let Some(b) = BfsNav::right_pred(h) {
+                v -= 0.5 * data[base + rev_rank(l, b) * st];
+            }
+            data[x] = v;
+        }
+    }
+}
+
+#[inline]
+fn pole_dehierarchize_rev(data: &mut [f64], base: usize, st: usize, l: u8) {
+    for lev in 2..=l {
+        let first = 1u32 << (lev - 1);
+        let last = (1u32 << lev) - 1;
+        for h in first..=last {
+            let x = base + rev_rank(l, h) * st;
+            let mut v = data[x];
+            if let Some(a) = BfsNav::left_pred(h) {
+                v += 0.5 * data[base + rev_rank(l, a) * st];
+            }
+            if let Some(b) = BfsNav::right_pred(h) {
+                v += 0.5 * data[base + rev_rank(l, b) * st];
+            }
+            data[x] = v;
+        }
+    }
+}
+
+fn sweep(g: &mut FullGrid, rev: bool, up: bool) {
+    for dim in 0..g.dim() {
+        let l = g.levels().level(dim);
+        if l < 2 {
+            continue;
+        }
+        let poles = Poles::of(g, dim);
+        let data = g.as_mut_slice();
+        for base in poles.iter() {
+            match (rev, up) {
+                (false, false) => pole_hierarchize_bfs(data, base, poles.stride, l),
+                (false, true) => pole_dehierarchize_bfs(data, base, poles.stride, l),
+                (true, false) => pole_hierarchize_rev(data, base, poles.stride, l),
+                (true, true) => pole_dehierarchize_rev(data, base, poles.stride, l),
+            }
+        }
+    }
+}
+
+/// The `BFS` layout algorithm (scalar).
+pub struct Bfs;
+
+impl Hierarchizer for Bfs {
+    fn name(&self) -> &'static str {
+        "BFS"
+    }
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::Bfs
+    }
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep(g, false, false);
+    }
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep(g, false, true);
+    }
+}
+
+/// The `Reverse-BFS` layout algorithm (the paper measured it ~50 % slower
+/// than `BFS` and dropped it after Fig. 4).
+pub struct BfsRev;
+
+impl Hierarchizer for BfsRev {
+    fn name(&self) -> &'static str {
+        "BFS-Rev"
+    }
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::BfsRev
+    }
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep(g, true, false);
+    }
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep(g, true, true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::LevelVector;
+    use crate::hierarchize::{func::Func, prepare};
+    use crate::util::rng::SplitMix64;
+
+    fn rand_grid(levels: &[u8], seed: u64) -> FullGrid {
+        let mut g = FullGrid::new(LevelVector::new(levels));
+        let mut rng = SplitMix64::new(seed);
+        g.fill_with(|_| rng.next_f64() - 0.5);
+        g
+    }
+
+    #[test]
+    fn rev_rank_is_bijection() {
+        for l in 1..=8u8 {
+            let n = (1usize << l) - 1;
+            let mut seen = vec![false; n];
+            for h in 1..=(n as u32) {
+                let r = rev_rank(l, h);
+                assert!(r < n && !seen[r]);
+                seen[r] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_matches_func_1d() {
+        let mut want = rand_grid(&[6], 1);
+        let mut g = want.clone();
+        Func.hierarchize(&mut want);
+        prepare(&Bfs, &mut g);
+        Bfs.hierarchize(&mut g);
+        assert!(g.max_diff(&want) < 1e-13);
+    }
+
+    #[test]
+    fn bfs_rev_matches_func_2d() {
+        let mut want = rand_grid(&[4, 3], 2);
+        let mut g = want.clone();
+        Func.hierarchize(&mut want);
+        prepare(&BfsRev, &mut g);
+        BfsRev.hierarchize(&mut g);
+        assert!(g.max_diff(&want) < 1e-13);
+    }
+
+    #[test]
+    fn roundtrips() {
+        for h in [&Bfs as &dyn Hierarchizer, &BfsRev] {
+            let orig = rand_grid(&[4, 2, 3], 3);
+            let mut g = orig.clone();
+            prepare(h, &mut g);
+            h.hierarchize(&mut g);
+            h.dehierarchize(&mut g);
+            assert!(g.max_diff(&orig) < 1e-12, "{}", h.name());
+        }
+    }
+}

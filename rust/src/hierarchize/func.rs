@@ -1,0 +1,365 @@
+//! `Func` — the baseline navigating with a *level-index vector*, SGpp-style.
+//!
+//! The paper: "As baseline the *Func* algorithm navigating on the combination
+//! grids using a level-index vector as in the baseline SGpp was implemented.
+//! The grid data is stored in standard row major order."
+//!
+//! Characteristics reproduced deliberately:
+//!
+//! * every point is addressed through its full d-dimensional
+//!   (level, index) description;
+//! * every access recomputes the storage offset as a generic
+//!   `sum_j rank_j * stride_j` dot product (no strength reduction, no
+//!   incremental offsets) through an opaque function call;
+//! * no unrolling, no vectorization.
+//!
+//! This is what makes `Func` 10-30x slower than the derived codes while
+//! still beating the hash-based [`crate::sgpp`] baseline by 2-10x.
+
+use crate::grid::{AxisLayout, FullGrid, LevelVector};
+
+use super::Hierarchizer;
+
+/// Storage offset of the point described by per-dimension (level, index)
+/// vectors — the "level-index vector" navigation of SGpp.
+///
+/// `#[inline(never)]`: the baseline pays a real function call per access,
+/// like the virtual-dispatch-heavy navigation it models.
+#[inline(never)]
+fn offset_of_level_index(
+    levels: &LevelVector,
+    strides: &[usize],
+    lev: &[u8],
+    idx: &[u32],
+) -> usize {
+    let mut off = 0usize;
+    for j in 0..levels.dim() {
+        // position on axis j: idx_j * 2^(l_j - lev_j); storage rank = pos - 1
+        let pos = (idx[j] as usize) << (levels.level(j) - lev[j]);
+        off += (pos - 1) * strides[j];
+    }
+    off
+}
+
+/// The `Func` baseline.
+pub struct Func;
+
+impl Func {
+    fn sweep(&self, g: &mut FullGrid, sign: f64, up: bool) {
+        let levels = g.levels().clone();
+        let d = levels.dim();
+        let strides: Vec<usize> = (0..d).map(|ax| g.stride(ax)).collect();
+        let data = g.as_mut_slice();
+
+        // working-dimension loop (Alg. 1 outer loop)
+        for dim in 0..d {
+            let l = levels.level(dim);
+            if l < 2 {
+                continue;
+            }
+            // iterate all poles via the level-index vectors of the other dims
+            let mut lev = vec![1u8; d];
+            let mut idx = vec![1u32; d];
+            // enumerate every point of the orthogonal subgrid by walking all
+            // positions of the other dimensions
+            let mut pos = vec![1u32; d];
+            'poles: loop {
+                // set (lev, idx) of the orthogonal coordinates from positions
+                for j in 0..d {
+                    if j != dim {
+                        let tz = pos[j].trailing_zeros() as u8;
+                        lev[j] = levels.level(j) - tz;
+                        idx[j] = pos[j] >> tz;
+                    }
+                }
+                // hierarchize this pole, sub-level by sub-level
+                let subs: Vec<u8> = if up {
+                    (2..=l).collect()
+                } else {
+                    (2..=l).rev().collect()
+                };
+                for sub in subs {
+                    lev[dim] = sub;
+                    let npts = 1u32 << (sub - 1);
+                    for k in 0..npts {
+                        let j = 2 * k + 1; // odd index on sub-level
+                        idx[dim] = j;
+                        let x = offset_of_level_index(&levels, &strides, &lev, &idx);
+                        // left predecessor: (sub-1 .. 1) ancestor at idx-1 side
+                        let (pl, pr) = pred_level_index(sub, j);
+                        if let Some((sl, jl)) = pl {
+                            lev[dim] = sl;
+                            idx[dim] = jl;
+                            let a = offset_of_level_index(&levels, &strides, &lev, &idx);
+                            data[x] += sign * 0.5 * data[a];
+                            lev[dim] = sub;
+                        }
+                        if let Some((sr, jr)) = pr {
+                            lev[dim] = sr;
+                            idx[dim] = jr;
+                            let a = offset_of_level_index(&levels, &strides, &lev, &idx);
+                            data[x] += sign * 0.5 * data[a];
+                            lev[dim] = sub;
+                        }
+                    }
+                }
+                // next pole: odometer over the other dimensions' positions
+                let mut ax = 0;
+                loop {
+                    if ax == d {
+                        break 'poles;
+                    }
+                    if ax == dim {
+                        ax += 1;
+                        continue;
+                    }
+                    pos[ax] += 1;
+                    if pos[ax] as usize <= levels.axis_points(ax) {
+                        break;
+                    }
+                    pos[ax] = 1;
+                    ax += 1;
+                }
+            }
+        }
+    }
+}
+
+/// (level, index) of both hierarchical predecessors of point `(sub, j)`.
+///
+/// In level-index coordinates the left predecessor of `(sub, j)` is the
+/// ancestor `(sub - t, (j - 1) / 2^t)` where `t` is the number of steps until
+/// `(j - 1) / 2^t` becomes odd — and symmetrically for the right.  The
+/// outermost points (j = 1 / j = 2^sub - 1) have only one predecessor.
+fn pred_level_index(sub: u8, j: u32) -> (Option<(u8, u32)>, Option<(u8, u32)>) {
+    let left = if j == 1 {
+        None
+    } else {
+        let mut v = j - 1;
+        let mut s = sub;
+        while v & 1 == 0 {
+            v >>= 1;
+            s -= 1;
+        }
+        Some((s, v))
+    };
+    let right = if j == (1 << sub) - 1 {
+        None
+    } else {
+        let mut v = j + 1;
+        let mut s = sub;
+        while v & 1 == 0 {
+            v >>= 1;
+            s -= 1;
+        }
+        Some((s, v))
+    };
+    (left, right)
+}
+
+impl Hierarchizer for Func {
+    fn name(&self) -> &'static str {
+        "Func"
+    }
+
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::Position
+    }
+
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        self.sweep(g, -1.0, false);
+    }
+
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        self.sweep(g, 1.0, true);
+    }
+}
+
+/// `Func-FPNav` — `Func` with the offset arithmetic done in **floating
+/// point** (Fig. 5's cautionary tale: "non-optimal code may use floating
+/// point operations for this navigation and hence pretend better
+/// performance", inflating hardware flop counters without improving wall
+/// clock).  Computes identical surpluses; exists for the Fig. 5 vs Fig. 6
+/// methodology demonstration.
+pub struct FuncFpNav;
+
+/// The FP-navigation offset: same dot product as
+/// [`offset_of_level_index`], executed in f64.
+#[inline(never)]
+fn offset_of_level_index_fp(
+    levels: &LevelVector,
+    strides: &[usize],
+    lev: &[u8],
+    idx: &[u32],
+) -> usize {
+    let mut off = 0.0f64;
+    for j in 0..levels.dim() {
+        // pos = idx_j * 2^(l_j - lev_j) via FP multiply; 3 flops per dim
+        let pos = idx[j] as f64 * (1u64 << (levels.level(j) - lev[j])) as f64;
+        off += (pos - 1.0) * strides[j] as f64;
+    }
+    off as usize
+}
+
+/// Flops `Func-FPNav` *executes* beyond Alg. 1: 3 per dimension per offset
+/// computation, 3 offsets (point + up to 2 predecessors) per updated point
+/// on average (the measured-flops model for Fig. 5).
+pub fn fpnav_extra_flops(levels: &LevelVector) -> u64 {
+    let d = levels.dim() as u64;
+    let mut updates = 0u64;
+    for i in 0..levels.dim() {
+        let mut poles = 1u64;
+        for j in 0..levels.dim() {
+            if j != i {
+                poles *= (1u64 << levels.level(j)) - 1;
+            }
+        }
+        // every non-root point is visited once; ~3 offsets computed each
+        let visited = (1u64 << levels.level(i)) - 2;
+        updates += poles * visited;
+    }
+    updates * 3 * (3 * d)
+}
+
+impl FuncFpNav {
+    fn sweep(&self, g: &mut FullGrid, sign: f64, up: bool) {
+        // identical control flow to Func::sweep, FP offset arithmetic
+        let levels = g.levels().clone();
+        let d = levels.dim();
+        let strides: Vec<usize> = (0..d).map(|ax| g.stride(ax)).collect();
+        let data = g.as_mut_slice();
+        for dim in 0..d {
+            let l = levels.level(dim);
+            if l < 2 {
+                continue;
+            }
+            let mut lev = vec![1u8; d];
+            let mut idx = vec![1u32; d];
+            let mut pos = vec![1u32; d];
+            'poles: loop {
+                for j in 0..d {
+                    if j != dim {
+                        let tz = pos[j].trailing_zeros() as u8;
+                        lev[j] = levels.level(j) - tz;
+                        idx[j] = pos[j] >> tz;
+                    }
+                }
+                let subs: Vec<u8> =
+                    if up { (2..=l).collect() } else { (2..=l).rev().collect() };
+                for sub in subs {
+                    lev[dim] = sub;
+                    for k in 0..(1u32 << (sub - 1)) {
+                        let j = 2 * k + 1;
+                        idx[dim] = j;
+                        let x = offset_of_level_index_fp(&levels, &strides, &lev, &idx);
+                        let (pl, pr) = pred_level_index(sub, j);
+                        if let Some((sl, jl)) = pl {
+                            lev[dim] = sl;
+                            idx[dim] = jl;
+                            let a = offset_of_level_index_fp(&levels, &strides, &lev, &idx);
+                            data[x] += sign * 0.5 * data[a];
+                            lev[dim] = sub;
+                        }
+                        if let Some((sr, jr)) = pr {
+                            lev[dim] = sr;
+                            idx[dim] = jr;
+                            let a = offset_of_level_index_fp(&levels, &strides, &lev, &idx);
+                            data[x] += sign * 0.5 * data[a];
+                            lev[dim] = sub;
+                        }
+                    }
+                }
+                let mut ax = 0;
+                loop {
+                    if ax == d {
+                        break 'poles;
+                    }
+                    if ax == dim {
+                        ax += 1;
+                        continue;
+                    }
+                    pos[ax] += 1;
+                    if pos[ax] as usize <= levels.axis_points(ax) {
+                        break;
+                    }
+                    pos[ax] = 1;
+                    ax += 1;
+                }
+            }
+        }
+    }
+}
+
+impl Hierarchizer for FuncFpNav {
+    fn name(&self) -> &'static str {
+        "Func-FPNav"
+    }
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::Position
+    }
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        self.sweep(g, -1.0, false);
+    }
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        self.sweep(g, 1.0, true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::LevelVector;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn pred_level_index_matches_position_arithmetic() {
+        use crate::grid::{position_of, predecessors, HierCoord1d};
+        for l in 2..=8u8 {
+            for sub in 2..=l {
+                for k in 0..(1u32 << (sub - 1)) {
+                    let j = 2 * k + 1;
+                    let p = position_of(l, HierCoord1d { level: sub, index: j });
+                    let (wl, wr) = predecessors(l, p);
+                    let (gl, gr) = pred_level_index(sub, j);
+                    assert_eq!(gl.map(|(s, i)| position_of(l, HierCoord1d { level: s, index: i })), wl);
+                    assert_eq!(gr.map(|(s, i)| position_of(l, HierCoord1d { level: s, index: i })), wr);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn known_1d_surpluses() {
+        // l=2: values [a, b, c] at positions 1,2,3.
+        // root (pos 2) untouched; pos 1: a - b/2; pos 3: c - b/2.
+        let mut g = FullGrid::new(LevelVector::new(&[2]));
+        g.from_canonical(&[1.0, 2.0, 4.0]);
+        Func.hierarchize(&mut g);
+        assert_eq!(g.to_canonical(), vec![0.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn known_2d_surpluses_match_tensor_rule() {
+        // constant 1 grid, l=(2,1): after hierarchizing x1 only the x1-root
+        // keeps 1, outer points 0.5; single x2 level -> unchanged.
+        let mut g = FullGrid::new(LevelVector::new(&[2, 1]));
+        g.fill_with(|_| 1.0);
+        Func.hierarchize(&mut g);
+        assert_eq!(g.to_canonical(), vec![0.5, 1.0, 0.5]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut g = FullGrid::new(LevelVector::new(&[3, 2, 2]));
+        let mut rng = SplitMix64::new(5);
+        g.fill_with(|_| rng.next_f64());
+        let orig = g.clone();
+        Func.hierarchize(&mut g);
+        Func.dehierarchize(&mut g);
+        assert!(g.max_diff(&orig) < 1e-12);
+    }
+}

@@ -1,0 +1,273 @@
+//! `Ind` — indirect navigation on the plain row-major layout.
+//!
+//! "As the combination grids are very regular the level-index vector is not
+//! necessary to navigate efficiently on the data layout. The *Ind* algorithm
+//! navigates indirectly ... the positions of the hierarchical predecessors
+//! and the next grid point can be computed on the fly by using offsets and
+//! strides."
+//!
+//! Three flavours live here:
+//!
+//! * [`Ind`] — the paper's scalar algorithm;
+//! * [`IndReducedOp`] — `Ind` with the reduced multiplication count (§3
+//!   "Chosen results": the paper found *no* cycle change — ablation E8);
+//! * [`IndVectorized`] — §6 "further ideas": the row-wise (over-)vectorized
+//!   variant of `Ind` for working dimensions >= 2 (ablation E9).
+
+use crate::grid::{AxisLayout, FullGrid, Poles};
+
+use super::simd;
+use super::Hierarchizer;
+
+/// Scalar hierarchization of one pole in position layout.
+///
+/// `st` is the element stride, `l` the axis level.  Sub-levels are processed
+/// fine -> coarse; the two outermost points of each sub-level are peeled so
+/// the interior loop is branch-free (both predecessors always exist).
+#[inline]
+pub(crate) fn pole_hierarchize(data: &mut [f64], base: usize, st: usize, l: u8, reduced: bool) {
+    for lev in (2..=l).rev() {
+        let s = 1usize << (l - lev);
+        let end = 1usize << l; // virtual boundary position
+        // first point of the sub-level: position s, only the right predecessor
+        let x = base + (s - 1) * st;
+        data[x] -= 0.5 * data[x + s * st];
+        // last point: position end - s, only the left predecessor
+        let x = base + (end - s - 1) * st;
+        data[x] -= 0.5 * data[x - s * st];
+        // interior points: positions 3s, 5s, ..., end - 3s — two predecessors
+        let mut pos = 3 * s;
+        if reduced {
+            while pos + s < end {
+                let x = base + (pos - 1) * st;
+                data[x] -= 0.5 * (data[x - s * st] + data[x + s * st]);
+                pos += 2 * s;
+            }
+        } else {
+            while pos + s < end {
+                let x = base + (pos - 1) * st;
+                data[x] -= 0.5 * data[x - s * st] + 0.5 * data[x + s * st];
+                pos += 2 * s;
+            }
+        }
+    }
+}
+
+/// Scalar dehierarchization of one pole (coarse -> fine, sign flipped).
+#[inline]
+pub(crate) fn pole_dehierarchize(data: &mut [f64], base: usize, st: usize, l: u8) {
+    for lev in 2..=l {
+        let s = 1usize << (l - lev);
+        let end = 1usize << l;
+        let x = base + (s - 1) * st;
+        data[x] += 0.5 * data[x + s * st];
+        let x = base + (end - s - 1) * st;
+        data[x] += 0.5 * data[x - s * st];
+        let mut pos = 3 * s;
+        while pos + s < end {
+            let x = base + (pos - 1) * st;
+            data[x] += 0.5 * data[x - s * st] + 0.5 * data[x + s * st];
+            pos += 2 * s;
+        }
+    }
+}
+
+fn sweep_scalar(g: &mut FullGrid, reduced: bool, up: bool) {
+    let d = g.dim();
+    for dim in 0..d {
+        let l = g.levels().level(dim);
+        if l < 2 {
+            continue;
+        }
+        let poles = Poles::of(g, dim);
+        let data = g.as_mut_slice();
+        for base in poles.iter() {
+            if up {
+                pole_dehierarchize(data, base, poles.stride, l);
+            } else {
+                pole_hierarchize(data, base, poles.stride, l, reduced);
+            }
+        }
+    }
+}
+
+/// The paper's `Ind` algorithm.
+pub struct Ind;
+
+impl Hierarchizer for Ind {
+    fn name(&self) -> &'static str {
+        "Ind"
+    }
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::Position
+    }
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep_scalar(g, false, false);
+    }
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep_scalar(g, true, true);
+    }
+}
+
+/// `Ind` with the reduced multiplication count (ablation E8).
+pub struct IndReducedOp;
+
+impl Hierarchizer for IndReducedOp {
+    fn name(&self) -> &'static str {
+        "Ind-ReducedOp"
+    }
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::Position
+    }
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep_scalar(g, true, false);
+    }
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep_scalar(g, true, true);
+    }
+}
+
+/// §6 "further ideas": row-wise vectorized `Ind`.
+///
+/// For working dimensions >= 2 every sub-level update is a daxpy over the
+/// contiguous block of all faster axes (`stride(dim)` elements — the full
+/// over-vectorization width), navigated by plain position arithmetic with no
+/// tree climbing at all.  Dimension 1 falls back to the scalar pole loop.
+pub struct IndVectorized;
+
+fn sweep_vectorized(g: &mut FullGrid, up: bool) {
+    let d = g.dim();
+    let k = simd::kernels();
+    for dim in 0..d {
+        let l = g.levels().level(dim);
+        if l < 2 {
+            continue;
+        }
+        let poles = Poles::of(g, dim);
+        let data = g.as_mut_slice();
+        if dim == 0 {
+            for base in poles.iter() {
+                if up {
+                    pole_dehierarchize(data, base, 1, l);
+                } else {
+                    pole_hierarchize(data, base, 1, l, false);
+                }
+            }
+            continue;
+        }
+        let w = poles.inner; // row width: all faster axes, contiguous
+        let end = 1usize << l;
+        for outer in 0..poles.outer {
+            let ob = outer * poles.outer_step;
+            let row = |pos: usize| ob + (pos - 1) * w;
+            let subs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
+            for lev in subs {
+                let s = 1usize << (l - lev);
+                if up {
+                    (k.add1)(data, row(s), row(2 * s), w);
+                    (k.add1)(data, row(end - s), row(end - 2 * s), w);
+                    let mut pos = 3 * s;
+                    while pos + s < end {
+                        (k.add2)(data, row(pos), row(pos - s), row(pos + s), w);
+                        pos += 2 * s;
+                    }
+                } else {
+                    (k.sub1)(data, row(s), row(2 * s), w);
+                    (k.sub1)(data, row(end - s), row(end - 2 * s), w);
+                    let mut pos = 3 * s;
+                    while pos + s < end {
+                        (k.sub2)(data, row(pos), row(pos - s), row(pos + s), w);
+                        pos += 2 * s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Hierarchizer for IndVectorized {
+    fn name(&self) -> &'static str {
+        "Ind-Vectorized"
+    }
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::Position
+    }
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep_vectorized(g, false);
+    }
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep_vectorized(g, true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::LevelVector;
+    use crate::hierarchize::func::Func;
+    use crate::util::rng::SplitMix64;
+
+    fn rand_grid(levels: &[u8], seed: u64) -> FullGrid {
+        let mut g = FullGrid::new(LevelVector::new(levels));
+        let mut rng = SplitMix64::new(seed);
+        g.fill_with(|_| rng.next_f64() - 0.5);
+        g
+    }
+
+    #[test]
+    fn ind_matches_func() {
+        for levels in [&[7][..], &[3, 4], &[2, 2, 3]] {
+            let mut a = rand_grid(levels, 1);
+            let mut b = a.clone();
+            Ind.hierarchize(&mut a);
+            Func.hierarchize(&mut b);
+            assert!(a.max_diff(&b) < 1e-13, "{levels:?}");
+        }
+    }
+
+    #[test]
+    fn reduced_bitwise_close() {
+        let mut a = rand_grid(&[6, 3], 2);
+        let mut b = a.clone();
+        Ind.hierarchize(&mut a);
+        IndReducedOp.hierarchize(&mut b);
+        assert!(a.max_diff(&b) < 1e-13);
+    }
+
+    #[test]
+    fn vectorized_matches_scalar() {
+        for levels in [&[5, 4][..], &[2, 3, 3], &[4, 1, 2]] {
+            let mut a = rand_grid(levels, 3);
+            let mut b = a.clone();
+            Ind.hierarchize(&mut a);
+            IndVectorized.hierarchize(&mut b);
+            assert!(a.max_diff(&b) < 1e-13, "{levels:?}");
+        }
+    }
+
+    #[test]
+    fn sub_level2_only_touches_its_points() {
+        // l=2 axis: exactly two points on sub-level 2, both single-pred
+        let mut g = FullGrid::new(LevelVector::new(&[2]));
+        g.from_canonical(&[10.0, 100.0, 1000.0]);
+        Ind.hierarchize(&mut g);
+        assert_eq!(g.to_canonical(), vec![-40.0, 100.0, 950.0]);
+    }
+
+    #[test]
+    fn roundtrips() {
+        for h in [&Ind as &dyn Hierarchizer, &IndReducedOp, &IndVectorized] {
+            let orig = rand_grid(&[3, 3, 2], 4);
+            let mut g = orig.clone();
+            h.hierarchize(&mut g);
+            h.dehierarchize(&mut g);
+            assert!(g.max_diff(&orig) < 1e-12, "{}", h.name());
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! The paper's contribution: performance-engineered hierarchization.
+//!
+//! Alg. 1 of the paper, in all implemented flavours:
+//!
+//! | variant | layout | navigation | inner-loop shape |
+//! |---------|--------|------------|------------------|
+//! | `Func`  | position | level-index vector, generic offset recomputation per access (SGpp-style) | point-at-a-time |
+//! | `Ind`   | position | offsets/strides on the fly | point-at-a-time |
+//! | `IndReducedOp` | position | as `Ind`, reduced multiplication count | point-at-a-time |
+//! | `IndVectorized` | position | as `Ind` | whole x1-row per node (axes >= 2), AVX |
+//! | `Bfs`   | BFS | heap parent + tree climb | point-at-a-time |
+//! | `BfsRev` | reverse BFS | heap parent + tree climb | point-at-a-time |
+//! | `BfsUnrolled` | BFS | heap | 4 adjacent poles per iteration (axes >= 2) |
+//! | `BfsVectorized` | BFS | heap | 4 poles per AVX vector (axes >= 2) |
+//! | `BfsOverVectorized` | BFS | heap | whole x1-row per node (axes >= 2), AVX |
+//! | `BfsOverVectorizedPreBranched` | BFS | heap, branch hoisted per level | whole row |
+//! | `BfsOverVectorizedPreBranchedReducedOp` | BFS | heap | whole row, reduced flops |
+//!
+//! All variants are verified against each other and against the python
+//! oracle; `flops` provides the (corrected) Eq. 1 flop model plus an
+//! instrumented counter.
+
+pub mod bfs;
+pub mod flops;
+pub mod func;
+pub mod ind;
+pub mod overvec;
+pub mod simd;
+pub mod unrolled;
+
+use crate::grid::{AxisLayout, FullGrid};
+
+/// A hierarchization algorithm operating in place on a [`FullGrid`].
+///
+/// Implementations require the grid to be in [`Hierarchizer::layout`] on
+/// every axis; call [`prepare`] (or `FullGrid::convert_all`) first.  The
+/// benches exclude the conversion from the timed region, as the paper does.
+pub trait Hierarchizer: Sync {
+    /// Paper name of the variant (e.g. `"BFS-OverVectorized"`).
+    fn name(&self) -> &'static str;
+
+    /// Axis layout the variant operates on.
+    fn layout(&self) -> AxisLayout;
+
+    /// Nodal -> hierarchical basis, in place (Alg. 1).
+    fn hierarchize(&self, g: &mut FullGrid);
+
+    /// Hierarchical -> nodal basis, in place (inverse of Alg. 1).
+    fn dehierarchize(&self, g: &mut FullGrid);
+}
+
+/// Convert `g` to the layout `h` requires (not part of the timed hot path).
+pub fn prepare(h: &dyn Hierarchizer, g: &mut FullGrid) {
+    g.convert_all(h.layout());
+}
+
+fn assert_layout(h: &dyn Hierarchizer, g: &FullGrid) {
+    for ax in 0..g.dim() {
+        assert_eq!(
+            g.layout(ax),
+            h.layout(),
+            "{} requires {:?} layout on axis {ax}",
+            h.name(),
+            h.layout()
+        );
+    }
+}
+
+/// The implemented variants, in the paper's order of derivation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Func,
+    FuncFpNav,
+    Ind,
+    IndReducedOp,
+    IndVectorized,
+    Bfs,
+    BfsRev,
+    BfsUnrolled,
+    BfsVectorized,
+    BfsOverVectorized,
+    BfsOverVectorizedPreBranched,
+    BfsOverVectorizedPreBranchedReducedOp,
+}
+
+/// Every variant, ordered as derived in the paper (§3).
+pub const ALL_VARIANTS: &[Variant] = &[
+    Variant::Func,
+    Variant::FuncFpNav,
+    Variant::Ind,
+    Variant::IndReducedOp,
+    Variant::IndVectorized,
+    Variant::Bfs,
+    Variant::BfsRev,
+    Variant::BfsUnrolled,
+    Variant::BfsVectorized,
+    Variant::BfsOverVectorized,
+    Variant::BfsOverVectorizedPreBranched,
+    Variant::BfsOverVectorizedPreBranchedReducedOp,
+];
+
+impl Variant {
+    /// The paper's name for this variant.
+    pub fn paper_name(&self) -> &'static str {
+        self.instance().name()
+    }
+
+    /// Obtain the implementation.
+    pub fn instance(&self) -> &'static dyn Hierarchizer {
+        match self {
+            Variant::Func => &func::Func,
+            Variant::FuncFpNav => &func::FuncFpNav,
+            Variant::Ind => &ind::Ind,
+            Variant::IndReducedOp => &ind::IndReducedOp,
+            Variant::IndVectorized => &ind::IndVectorized,
+            Variant::Bfs => &bfs::Bfs,
+            Variant::BfsRev => &bfs::BfsRev,
+            Variant::BfsUnrolled => &unrolled::BfsUnrolled,
+            Variant::BfsVectorized => &unrolled::BfsVectorized,
+            Variant::BfsOverVectorized => &overvec::BfsOverVectorized,
+            Variant::BfsOverVectorizedPreBranched => &overvec::BfsOverVectorizedPreBranched,
+            Variant::BfsOverVectorizedPreBranchedReducedOp => {
+                &overvec::BfsOverVectorizedPreBranchedReducedOp
+            }
+        }
+    }
+}
+
+/// Look a variant up by its (case/punctuation-insensitive) paper name.
+pub fn variant_by_name(name: &str) -> Option<Variant> {
+    let norm = |s: &str| {
+        s.chars()
+            .filter(|c| c.is_ascii_alphanumeric())
+            .map(|c| c.to_ascii_lowercase())
+            .collect::<String>()
+    };
+    let want = norm(name);
+    ALL_VARIANTS
+        .iter()
+        .copied()
+        .find(|v| norm(v.paper_name()) == want || format!("{v:?}").to_lowercase() == want)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::LevelVector;
+    use crate::util::rng::SplitMix64;
+
+    fn random_grid(levels: &[u8], seed: u64) -> FullGrid {
+        let mut g = FullGrid::new(LevelVector::new(levels));
+        let mut rng = SplitMix64::new(seed);
+        g.fill_with(|_| rng.next_f64() - 0.5);
+        g
+    }
+
+    /// Every variant must agree with `Func` on every tested level vector.
+    #[test]
+    fn all_variants_agree_with_func() {
+        let cases: &[&[u8]] = &[
+            &[1],
+            &[5],
+            &[8],
+            &[3, 3],
+            &[1, 4],
+            &[4, 1],
+            &[2, 3, 2],
+            &[3, 1, 2, 2],
+            &[1, 1, 1],
+            &[2, 2, 2, 2, 2],
+        ];
+        for (i, levels) in cases.iter().enumerate() {
+            let mut reference = random_grid(levels, 42 + i as u64);
+            let input = reference.clone();
+            func::Func.hierarchize(&mut reference);
+            for v in ALL_VARIANTS {
+                let h = v.instance();
+                let mut g = input.clone();
+                prepare(h, &mut g);
+                h.hierarchize(&mut g);
+                let diff = g.max_diff(&reference);
+                assert!(
+                    diff < 1e-12,
+                    "{} differs from Func by {diff} on {levels:?}",
+                    h.name()
+                );
+            }
+        }
+    }
+
+    /// dehierarchize . hierarchize == identity for every variant.
+    #[test]
+    fn roundtrip_identity_all_variants() {
+        let cases: &[&[u8]] = &[&[6], &[3, 4], &[2, 2, 3], &[1, 5, 1]];
+        for levels in cases {
+            let input = random_grid(levels, 7);
+            for v in ALL_VARIANTS {
+                let h = v.instance();
+                let mut g = input.clone();
+                prepare(h, &mut g);
+                h.hierarchize(&mut g);
+                h.dehierarchize(&mut g);
+                let diff = g.max_diff(&input);
+                assert!(diff < 1e-12, "{} roundtrip diff {diff} on {levels:?}", h.name());
+            }
+        }
+    }
+
+    /// Variants also work on padded grids (pads stay zero).
+    #[test]
+    fn padded_grids_agree() {
+        let levels = LevelVector::new(&[3, 3]);
+        let mut plain = FullGrid::new(levels.clone());
+        let mut rng = SplitMix64::new(9);
+        plain.fill_with(|_| rng.next_f64());
+        let mut padded = FullGrid::with_padding(levels, 4);
+        padded.from_canonical(&plain.to_canonical());
+        for v in [Variant::Ind, Variant::BfsOverVectorized] {
+            let h = v.instance();
+            let (mut a, mut b) = (plain.clone(), padded.clone());
+            prepare(h, &mut a);
+            prepare(h, &mut b);
+            h.hierarchize(&mut a);
+            h.hierarchize(&mut b);
+            assert!(a.max_diff(&b) < 1e-12, "{}", h.name());
+            // pads untouched (still zero)
+            let n1 = b.axis_points(0);
+            for row in 0..b.axis_points(1) {
+                for p in n1..b.row_len() {
+                    assert_eq!(b.as_slice()[row * b.row_len() + p], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn variant_lookup() {
+        assert_eq!(variant_by_name("BFS-OverVectorized"), Some(Variant::BfsOverVectorized));
+        assert_eq!(variant_by_name("ind"), Some(Variant::Ind));
+        assert_eq!(variant_by_name("func"), Some(Variant::Func));
+        assert_eq!(
+            variant_by_name("bfs-overvectorized-prebranched-reducedop"),
+            Some(Variant::BfsOverVectorizedPreBranchedReducedOp)
+        );
+        assert_eq!(variant_by_name("nope"), None);
+    }
+}

@@ -1,0 +1,231 @@
+//! `BFS-OverVectorized` family — the paper's best codes.
+//!
+//! "If the working direction is at least 2, we unrolled (and vectorized) the
+//! innermost loop such that 2^{l_1} - 1 poles are handled instead of a
+//! single one" — here generalized to the full contiguous block of *all*
+//! faster axes (`stride(dim)` elements), which for dimension 2 is exactly
+//! the paper's `2^{l_1} - 1` (plus padding).  The innermost loop is one long
+//! AVX daxpy per tree node; the node loop above it walks the BFS level
+//! blocks.
+//!
+//! * [`BfsOverVectorized`] — predecessor existence checked per node
+//!   (`Option` branch inside the node loop);
+//! * [`BfsOverVectorizedPreBranched`] — "deciding the branch ... for
+//!   2^{l_1} - 1 poles at once": the two boundary nodes of every sub-level
+//!   (the only single-predecessor ones) are peeled, the interior node loop
+//!   is branch-free;
+//! * [`BfsOverVectorizedPreBranchedReducedOp`] — interior rows additionally
+//!   use the reduced multiplication count `x -= 0.5 * (a + b)` (the paper
+//!   measured no gain — the critical path stays three flops; ablation E8).
+
+use crate::grid::{AxisLayout, BfsNav, FullGrid, Poles};
+
+use super::bfs::{pole_dehierarchize_bfs, pole_hierarchize_bfs};
+use super::simd;
+use super::Hierarchizer;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Plain,
+    PreBranched,
+    ReducedOp,
+}
+
+fn sweep(g: &mut FullGrid, up: bool, mode: Mode) {
+    let k = simd::kernels();
+    for dim in 0..g.dim() {
+        let l = g.levels().level(dim);
+        if l < 2 {
+            continue;
+        }
+        let poles = Poles::of(g, dim);
+        let data = g.as_mut_slice();
+        if dim == 0 {
+            // no adjacent poles to fuse: scalar BFS pole walk (paper: the
+            // 1-d case is the only one with visibly lower performance)
+            for base in poles.iter() {
+                if up {
+                    pole_dehierarchize_bfs(data, base, 1, l);
+                } else {
+                    pole_hierarchize_bfs(data, base, 1, l);
+                }
+            }
+            continue;
+        }
+        let w = poles.inner; // over-vectorization width (all faster axes)
+        let (app1, app2): (fn(&mut [f64], usize, usize, usize), _) = if up {
+            (k.add1, k.add2)
+        } else {
+            match mode {
+                Mode::ReducedOp => (k.sub1, k.sub2_reduced),
+                _ => (k.sub1, k.sub2),
+            }
+        };
+        for outer in 0..poles.outer {
+            let ob = outer * poles.outer_step;
+            let row = |h: u32| ob + (h as usize - 1) * w;
+            let levs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
+            for lev in levs {
+                let first = 1u32 << (lev - 1);
+                let last = (1u32 << lev) - 1;
+                if mode == Mode::Plain {
+                    // branch per node
+                    for h in first..=last {
+                        match (BfsNav::left_pred(h), BfsNav::right_pred(h)) {
+                            (Some(a), Some(b)) => app2(data, row(h), row(a), row(b), w),
+                            (Some(a), None) => app1(data, row(h), row(a), w),
+                            (None, Some(b)) => app1(data, row(h), row(b), w),
+                            (None, None) => {}
+                        }
+                    }
+                } else {
+                    // pre-branched: peel the two single-predecessor boundary
+                    // nodes, then a branch-free interior loop
+                    app1(data, row(first), row(first >> 1), w); // leftmost: parent is right pred
+                    if last != first {
+                        app1(data, row(last), row(last >> 1), w); // rightmost: parent is left pred
+                    }
+                    for h in (first + 1)..last {
+                        // interior: both predecessors exist
+                        let a = BfsNav::left_pred(h).unwrap();
+                        let b = BfsNav::right_pred(h).unwrap();
+                        app2(data, row(h), row(a), row(b), w);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `BFS-OverVectorized` — the paper's headline code (0.4 flops/cycle).
+pub struct BfsOverVectorized;
+
+impl Hierarchizer for BfsOverVectorized {
+    fn name(&self) -> &'static str {
+        "BFS-OverVectorized"
+    }
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::Bfs
+    }
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep(g, false, Mode::Plain);
+    }
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep(g, true, Mode::Plain);
+    }
+}
+
+/// `BFS-OverVectorized-PreBranched`.
+pub struct BfsOverVectorizedPreBranched;
+
+impl Hierarchizer for BfsOverVectorizedPreBranched {
+    fn name(&self) -> &'static str {
+        "BFS-OverVectorized-PreBranched"
+    }
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::Bfs
+    }
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep(g, false, Mode::PreBranched);
+    }
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep(g, true, Mode::PreBranched);
+    }
+}
+
+/// `BFS-OverVectorized-PreBranched-ReducedOp`.
+pub struct BfsOverVectorizedPreBranchedReducedOp;
+
+impl Hierarchizer for BfsOverVectorizedPreBranchedReducedOp {
+    fn name(&self) -> &'static str {
+        "BFS-OverVectorized-PreBranched-ReducedOp"
+    }
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::Bfs
+    }
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep(g, false, Mode::ReducedOp);
+    }
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep(g, true, Mode::PreBranched);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::LevelVector;
+    use crate::hierarchize::{bfs::Bfs, prepare};
+    use crate::util::rng::SplitMix64;
+
+    fn rand_grid(levels: &[u8], seed: u64) -> FullGrid {
+        let mut g = FullGrid::new(LevelVector::new(levels));
+        let mut rng = SplitMix64::new(seed);
+        g.fill_with(|_| rng.next_f64() - 0.5);
+        g
+    }
+
+    #[test]
+    fn overvec_matches_bfs() {
+        for levels in [&[4, 4][..], &[1, 5], &[3, 1, 3], &[2, 2, 2, 2]] {
+            let mut want = rand_grid(levels, 1);
+            let mut g = want.clone();
+            prepare(&Bfs, &mut want);
+            Bfs.hierarchize(&mut want);
+            prepare(&BfsOverVectorized, &mut g);
+            BfsOverVectorized.hierarchize(&mut g);
+            assert!(g.max_diff(&want) < 1e-13, "{levels:?}");
+        }
+    }
+
+    #[test]
+    fn prebranched_and_reduced_match_plain() {
+        let levels = &[3, 4, 2];
+        let mut a = rand_grid(levels, 2);
+        let mut b = a.clone();
+        let mut c = a.clone();
+        prepare(&BfsOverVectorized, &mut a);
+        BfsOverVectorized.hierarchize(&mut a);
+        prepare(&BfsOverVectorizedPreBranched, &mut b);
+        BfsOverVectorizedPreBranched.hierarchize(&mut b);
+        prepare(&BfsOverVectorizedPreBranchedReducedOp, &mut c);
+        BfsOverVectorizedPreBranchedReducedOp.hierarchize(&mut c);
+        assert!(a.max_diff(&b) < 1e-14);
+        assert!(a.max_diff(&c) < 1e-13);
+    }
+
+    #[test]
+    fn boundary_peel_is_exhaustive() {
+        // every sub-level's single-pred nodes are exactly first and last
+        for lev in 2..=10u8 {
+            let first = 1u32 << (lev - 1);
+            let last = (1u32 << lev) - 1;
+            for h in first..=last {
+                let both = BfsNav::left_pred(h).is_some() && BfsNav::right_pred(h).is_some();
+                assert_eq!(both, h != first && h != last, "lev={lev} h={h}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrips() {
+        for h in [
+            &BfsOverVectorized as &dyn Hierarchizer,
+            &BfsOverVectorizedPreBranched,
+            &BfsOverVectorizedPreBranchedReducedOp,
+        ] {
+            let orig = rand_grid(&[4, 3, 2], 3);
+            let mut g = orig.clone();
+            prepare(h, &mut g);
+            h.hierarchize(&mut g);
+            h.dehierarchize(&mut g);
+            assert!(g.max_diff(&orig) < 1e-12, "{}", h.name());
+        }
+    }
+}

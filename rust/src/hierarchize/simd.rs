@@ -1,0 +1,375 @@
+//! Row primitives: the daxpy-like inner loops of Alg. 1.
+//!
+//! Every update of Alg. 1 is one of
+//!
+//! ```text
+//! x[i] -= 0.5 * a[i]                   (one predecessor)
+//! x[i] -= 0.5 * a[i] + 0.5 * b[i]      (two predecessors)
+//! x[i] -= 0.5 * (a[i] + b[i])          (two predecessors, reduced op count)
+//! ```
+//!
+//! over rows that are contiguous in memory whenever the working direction is
+//! >= 2 (the poles sit orthogonal to x1 — Fig. 3 right).  The AVX paths are
+//! the manual 4-way f64 vectorization of the paper; the scalar paths double
+//! as the fallback and as the "let the compiler try" ablation (E9).
+//!
+//! The `dst`/`a`/`b` row starts index into one shared grid buffer; rows of
+//! distinct sub-levels never overlap (predecessors are strictly coarser), so
+//! the raw-pointer arithmetic below is sound — debug assertions verify
+//! disjointness on every call.
+
+/// True if the AVX fast paths are in use on this machine.
+pub fn avx_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+#[inline(always)]
+fn check_disjoint(dst: usize, src: usize, len: usize) {
+    debug_assert!(dst + len <= src || src + len <= dst, "rows overlap: dst={dst} src={src} len={len}");
+}
+
+macro_rules! rows {
+    ($data:ident, $dst:ident, $len:ident => $x:ident) => {
+        let $x = unsafe { $data.as_mut_ptr().add($dst) };
+        debug_assert!($dst + $len <= $data.len());
+    };
+    ($data:ident, $src:ident, $len:ident => const $p:ident) => {
+        let $p = unsafe { $data.as_ptr().add($src) };
+        debug_assert!($src + $len <= $data.len());
+    };
+}
+
+// ---------------------------------------------------------------- scalar
+
+pub mod scalar {
+    /// `x -= 0.5 * a`
+    #[inline]
+    pub fn sub1(data: &mut [f64], dst: usize, a: usize, len: usize) {
+        super::check_disjoint(dst, a, len);
+        rows!(data, dst, len => x);
+        rows!(data, a, len => const pa);
+        for i in 0..len {
+            unsafe { *x.add(i) -= 0.5 * *pa.add(i) };
+        }
+    }
+
+    /// `x -= 0.5 * a + 0.5 * b` (two multiplications, as Alg. 1 writes it)
+    #[inline]
+    pub fn sub2(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+        super::check_disjoint(dst, a, len);
+        super::check_disjoint(dst, b, len);
+        rows!(data, dst, len => x);
+        rows!(data, a, len => const pa);
+        rows!(data, b, len => const pb);
+        for i in 0..len {
+            // same evaluation order as the AVX path: (x - a/2) - b/2,
+            // so scalar and vector results are bitwise identical
+            unsafe { *x.add(i) = (*x.add(i) - 0.5 * *pa.add(i)) - 0.5 * *pb.add(i) };
+        }
+    }
+
+    /// `x -= 0.5 * (a + b)` (reduced operation count, §3)
+    #[inline]
+    pub fn sub2_reduced(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+        super::check_disjoint(dst, a, len);
+        super::check_disjoint(dst, b, len);
+        rows!(data, dst, len => x);
+        rows!(data, a, len => const pa);
+        rows!(data, b, len => const pb);
+        for i in 0..len {
+            unsafe { *x.add(i) -= 0.5 * (*pa.add(i) + *pb.add(i)) };
+        }
+    }
+
+    /// `x += 0.5 * a` (dehierarchization)
+    #[inline]
+    pub fn add1(data: &mut [f64], dst: usize, a: usize, len: usize) {
+        super::check_disjoint(dst, a, len);
+        rows!(data, dst, len => x);
+        rows!(data, a, len => const pa);
+        for i in 0..len {
+            unsafe { *x.add(i) += 0.5 * *pa.add(i) };
+        }
+    }
+
+    /// `x += 0.5 * a + 0.5 * b`
+    #[inline]
+    pub fn add2(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+        super::check_disjoint(dst, a, len);
+        super::check_disjoint(dst, b, len);
+        rows!(data, dst, len => x);
+        rows!(data, a, len => const pa);
+        rows!(data, b, len => const pb);
+        for i in 0..len {
+            // same order as the AVX path for bitwise reproducibility
+            unsafe { *x.add(i) = (*x.add(i) + 0.5 * *pa.add(i)) + 0.5 * *pb.add(i) };
+        }
+    }
+}
+
+// ------------------------------------------------------------------- AVX
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx {
+    use std::arch::x86_64::*;
+
+    /// `x -= 0.5 * a`, 4 lanes per iteration.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX is available (`super::avx_available()`).
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sub1(data: &mut [f64], dst: usize, a: usize, len: usize) {
+        super::check_disjoint(dst, a, len);
+        rows!(data, dst, len => x);
+        rows!(data, a, len => const pa);
+        let half = _mm256_set1_pd(0.5);
+        let mut i = 0;
+        while i + 4 <= len {
+            let va = _mm256_loadu_pd(pa.add(i));
+            let vx = _mm256_loadu_pd(x.add(i));
+            _mm256_storeu_pd(x.add(i), _mm256_sub_pd(vx, _mm256_mul_pd(half, va)));
+            i += 4;
+        }
+        while i < len {
+            *x.add(i) -= 0.5 * *pa.add(i);
+            i += 1;
+        }
+    }
+
+    /// `x -= 0.5 * a + 0.5 * b`, 4 lanes per iteration.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX is available.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sub2(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+        super::check_disjoint(dst, a, len);
+        super::check_disjoint(dst, b, len);
+        rows!(data, dst, len => x);
+        rows!(data, a, len => const pa);
+        rows!(data, b, len => const pb);
+        let half = _mm256_set1_pd(0.5);
+        let mut i = 0;
+        while i + 4 <= len {
+            let va = _mm256_loadu_pd(pa.add(i));
+            let vb = _mm256_loadu_pd(pb.add(i));
+            let vx = _mm256_loadu_pd(x.add(i));
+            let t = _mm256_sub_pd(vx, _mm256_mul_pd(half, va));
+            _mm256_storeu_pd(x.add(i), _mm256_sub_pd(t, _mm256_mul_pd(half, vb)));
+            i += 4;
+        }
+        while i < len {
+            *x.add(i) = (*x.add(i) - 0.5 * *pa.add(i)) - 0.5 * *pb.add(i);
+            i += 1;
+        }
+    }
+
+    /// `x -= 0.5 * (a + b)`, 4 lanes per iteration (reduced op count).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX is available.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn sub2_reduced(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+        super::check_disjoint(dst, a, len);
+        super::check_disjoint(dst, b, len);
+        rows!(data, dst, len => x);
+        rows!(data, a, len => const pa);
+        rows!(data, b, len => const pb);
+        let half = _mm256_set1_pd(0.5);
+        let mut i = 0;
+        while i + 4 <= len {
+            let s = _mm256_add_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)));
+            let vx = _mm256_loadu_pd(x.add(i));
+            _mm256_storeu_pd(x.add(i), _mm256_sub_pd(vx, _mm256_mul_pd(half, s)));
+            i += 4;
+        }
+        while i < len {
+            *x.add(i) -= 0.5 * (*pa.add(i) + *pb.add(i));
+            i += 1;
+        }
+    }
+
+    /// `x += 0.5 * a`, 4 lanes per iteration.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX is available.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn add1(data: &mut [f64], dst: usize, a: usize, len: usize) {
+        super::check_disjoint(dst, a, len);
+        rows!(data, dst, len => x);
+        rows!(data, a, len => const pa);
+        let half = _mm256_set1_pd(0.5);
+        let mut i = 0;
+        while i + 4 <= len {
+            let va = _mm256_loadu_pd(pa.add(i));
+            let vx = _mm256_loadu_pd(x.add(i));
+            _mm256_storeu_pd(x.add(i), _mm256_add_pd(vx, _mm256_mul_pd(half, va)));
+            i += 4;
+        }
+        while i < len {
+            *x.add(i) += 0.5 * *pa.add(i);
+            i += 1;
+        }
+    }
+
+    /// `x += 0.5 * a + 0.5 * b`, 4 lanes per iteration.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX is available.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn add2(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+        super::check_disjoint(dst, a, len);
+        super::check_disjoint(dst, b, len);
+        rows!(data, dst, len => x);
+        rows!(data, a, len => const pa);
+        rows!(data, b, len => const pb);
+        let half = _mm256_set1_pd(0.5);
+        let mut i = 0;
+        while i + 4 <= len {
+            let va = _mm256_loadu_pd(pa.add(i));
+            let vb = _mm256_loadu_pd(pb.add(i));
+            let vx = _mm256_loadu_pd(x.add(i));
+            let t = _mm256_add_pd(vx, _mm256_mul_pd(half, va));
+            _mm256_storeu_pd(x.add(i), _mm256_add_pd(t, _mm256_mul_pd(half, vb)));
+            i += 4;
+        }
+        while i < len {
+            *x.add(i) = (*x.add(i) + 0.5 * *pa.add(i)) + 0.5 * *pb.add(i);
+            i += 1;
+        }
+    }
+}
+
+// ------------------------------------------------------------- dispatch
+
+/// Dispatched row kernels: AVX where available, scalar otherwise.
+#[derive(Clone, Copy)]
+pub struct RowKernels {
+    pub sub1: fn(&mut [f64], usize, usize, usize),
+    pub sub2: fn(&mut [f64], usize, usize, usize, usize),
+    pub sub2_reduced: fn(&mut [f64], usize, usize, usize, usize),
+    pub add1: fn(&mut [f64], usize, usize, usize),
+    pub add2: fn(&mut [f64], usize, usize, usize, usize),
+}
+
+#[cfg(target_arch = "x86_64")]
+mod shims {
+    // safe shims: only ever installed after a successful runtime check
+    pub fn sub1(d: &mut [f64], x: usize, a: usize, n: usize) {
+        unsafe { super::avx::sub1(d, x, a, n) }
+    }
+    pub fn sub2(d: &mut [f64], x: usize, a: usize, b: usize, n: usize) {
+        unsafe { super::avx::sub2(d, x, a, b, n) }
+    }
+    pub fn sub2_reduced(d: &mut [f64], x: usize, a: usize, b: usize, n: usize) {
+        unsafe { super::avx::sub2_reduced(d, x, a, b, n) }
+    }
+    pub fn add1(d: &mut [f64], x: usize, a: usize, n: usize) {
+        unsafe { super::avx::add1(d, x, a, n) }
+    }
+    pub fn add2(d: &mut [f64], x: usize, a: usize, b: usize, n: usize) {
+        unsafe { super::avx::add2(d, x, a, b, n) }
+    }
+}
+
+pub const SCALAR_KERNELS: RowKernels = RowKernels {
+    sub1: scalar::sub1,
+    sub2: scalar::sub2,
+    sub2_reduced: scalar::sub2_reduced,
+    add1: scalar::add1,
+    add2: scalar::add2,
+};
+
+/// Best kernels for this machine (cached runtime detection).
+pub fn kernels() -> RowKernels {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static AVAIL: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        if *AVAIL.get_or_init(avx_available) {
+            return RowKernels {
+                sub1: shims::sub1,
+                sub2: shims::sub2,
+                sub2_reduced: shims::sub2_reduced,
+                add1: shims::add1,
+                add2: shims::add2,
+            };
+        }
+    }
+    SCALAR_KERNELS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn rand_buf(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n).map(|_| rng.next_f64() - 0.5).collect()
+    }
+
+    #[test]
+    fn avx_matches_scalar() {
+        if !avx_available() {
+            return;
+        }
+        for len in [1usize, 3, 4, 5, 8, 17, 64, 127] {
+            let base = rand_buf(3 * len, len as u64);
+            let k = kernels();
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            scalar::sub1(&mut a, 0, len, len);
+            (k.sub1)(&mut b, 0, len, len);
+            assert_eq!(a, b, "sub1 len={len}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            scalar::sub2(&mut a, 0, len, 2 * len, len);
+            (k.sub2)(&mut b, 0, len, 2 * len, len);
+            assert_eq!(a, b, "sub2 len={len}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            scalar::sub2_reduced(&mut a, 0, len, 2 * len, len);
+            (k.sub2_reduced)(&mut b, 0, len, 2 * len, len);
+            assert_eq!(a, b, "sub2_reduced len={len}");
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            scalar::add2(&mut a, 0, len, 2 * len, len);
+            (k.add2)(&mut b, 0, len, 2 * len, len);
+            assert_eq!(a, b, "add2 len={len}");
+        }
+    }
+
+    #[test]
+    fn sub_then_add_is_identity() {
+        let k = kernels();
+        let base = rand_buf(30, 3);
+        let mut d = base.clone();
+        (k.sub2)(&mut d, 0, 10, 20, 10);
+        (k.add2)(&mut d, 0, 10, 20, 10);
+        for i in 0..30 {
+            assert!((d[i] - base[i]).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn reduced_equals_unreduced() {
+        let base = rand_buf(12, 9);
+        let mut a = base.clone();
+        let mut b = base;
+        scalar::sub2(&mut a, 0, 4, 8, 4);
+        scalar::sub2_reduced(&mut b, 0, 4, 8, 4);
+        for i in 0..4 {
+            assert!((a[i] - b[i]).abs() < 1e-15);
+        }
+    }
+}

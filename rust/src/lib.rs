@@ -1,0 +1,36 @@
+//! # sgct — Sparse Grid Combination Technique
+//!
+//! Production-oriented reproduction of *"Hierarchization for the Sparse Grid
+//! Combination Technique"* (Philipp Hupp, 2013): the full (iterated)
+//! combination-technique stack with the paper's performance-engineered
+//! hierarchization algorithms as the hot path.
+//!
+//! Architecture (three layers, python never on the request path):
+//!
+//! * **L3 (this crate)** — coordinator + performance substrate: anisotropic
+//!   full grids ([`grid`]), all nine hierarchization variants of the paper
+//!   ([`hierarchize`]), the SGpp-like baseline ([`sgpp`]), the hierarchical
+//!   sparse grid with gather/scatter ([`sparse`]), combination schemes
+//!   ([`combi`]), compute-phase solvers ([`solver`]), the PJRT runtime that
+//!   executes AOT-compiled JAX/Pallas artifacts ([`runtime`]), and the
+//!   iterated-CT orchestrator ([`coordinator`]).
+//! * **L2** — JAX model (`python/compile/model.py`), lowered once to HLO text.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`), `interpret=True`.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for reproduction results.
+
+pub mod cli;
+pub mod combi;
+pub mod coordinator;
+pub mod grid;
+pub mod hierarchize;
+pub mod perf;
+pub mod runtime;
+pub mod solver;
+pub mod sgpp;
+pub mod sparse;
+pub mod util;
+
+pub use grid::{AxisLayout, FullGrid, LevelVector};
+pub use hierarchize::{variant_by_name, Hierarchizer, Variant, ALL_VARIANTS};

@@ -1,0 +1,341 @@
+//! `sgct` — leader binary: info, hierarchize, combine, solve, bench.
+//!
+//! ```text
+//! sgct info [--roofline]                     host + variant + artifact info
+//! sgct hierarchize --levels 5,4 [--variant BFS-OverVectorized] [--check] [--pjrt]
+//! sgct combine --dim 2 --level 5             plain CT interpolation + error
+//! sgct solve --dim 2 --level 5 --iters 4 --steps 8 [--pjrt] [--workers N]
+//! sgct bench --levels 5,4 [--all]            one-off variant timing
+//! ```
+
+use anyhow::{bail, Result};
+use sgct::cli::Args;
+use sgct::combi::CombinationScheme;
+use sgct::coordinator::{Coordinator, PipelineConfig};
+use sgct::grid::{FullGrid, LevelVector};
+use sgct::hierarchize::{flops, prepare, variant_by_name, Variant, ALL_VARIANTS};
+use sgct::perf::{self, bench::Config};
+use sgct::runtime::Runtime;
+use sgct::solver::{stable_dt, HeatSolver};
+use sgct::util::table::{human_bytes, human_time, Table};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_str() {
+        "info" => run(info(&args)),
+        "hierarchize" => run(hierarchize(&args)),
+        "combine" => run(combine(&args)),
+        "solve" => run(solve(&args)),
+        "bench" => run(bench_cmd(&args)),
+        "distributed" => run(distributed(&args)),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+sgct — sparse grid combination technique (Hupp 2013 reproduction)
+
+USAGE:
+  sgct info [--roofline]
+  sgct hierarchize --levels L1,L2,... [--variant NAME] [--check] [--pjrt]
+  sgct combine --dim D --level N [--samples K]
+  sgct solve --dim D --level N [--iters I] [--steps T] [--pjrt] [--workers W]
+  sgct bench --levels L1,L2,... [--all]
+  sgct distributed --dim D --level N [--max-nodes K]
+";
+
+fn run(r: Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("SGCT_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+fn info(args: &Args) -> Result<()> {
+    println!("sgct {} — three-layer rust + JAX + Pallas stack", env!("CARGO_PKG_VERSION"));
+    println!("tsc: {:.3} GHz (calibrated)", perf::cycles_per_second() / 1e9);
+    println!("avx row kernels: {}", sgct::hierarchize::simd::avx_available());
+    println!("variants:");
+    for v in ALL_VARIANTS {
+        println!("  - {}", v.paper_name());
+    }
+    match Runtime::load(&artifacts_dir()) {
+        Ok(rt) => println!(
+            "artifacts: {} entries in {} (platform {})",
+            rt.manifest().len(),
+            artifacts_dir().display(),
+            rt.platform()
+        ),
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    if args.flag("roofline") {
+        let r = sgct::perf::roofline::Roofline::host_scalar();
+        let bw = sgct::perf::stream::host_bandwidth();
+        println!(
+            "stream bandwidth: copy {:.2} GB/s  scale {:.2}  add {:.2}  triad {:.2}",
+            bw.copy / 1e9,
+            bw.scale / 1e9,
+            bw.add / 1e9,
+            bw.triad / 1e9
+        );
+        println!(
+            "roofline: scalar peak {} f/c, memory {:.3} B/c, ridge OI {:.3} f/B",
+            r.peak_flops_per_cycle,
+            r.bytes_per_cycle,
+            r.ridge()
+        );
+    }
+    Ok(())
+}
+
+fn hierarchize(args: &Args) -> Result<()> {
+    let levels = LevelVector::parse(&args.opt_or("levels", "5,4"))?;
+    let vname = args.opt_or("variant", "BFS-OverVectorized");
+    let Some(variant) = variant_by_name(&vname) else {
+        bail!("unknown variant {vname:?} (see `sgct info`)");
+    };
+    let mut g = FullGrid::new(levels.clone());
+    let mut rng = sgct::util::rng::SplitMix64::new(42);
+    g.fill_with(|_| rng.next_f64());
+    let reference = if args.flag("check") {
+        let mut r = g.clone();
+        Variant::Func.instance().hierarchize(&mut r);
+        Some(r)
+    } else {
+        None
+    };
+
+    let h = variant.instance();
+    if args.flag("pjrt") {
+        let t = perf::CycleTimer::start();
+        let rt = Runtime::load(&artifacts_dir())?;
+        rt.hierarchize(&mut g)?;
+        println!(
+            "hierarchized {} points via PJRT artifact in {} (incl. compile)",
+            levels.total_points(),
+            human_time(t.elapsed_secs())
+        );
+    } else {
+        prepare(h, &mut g);
+        let t = perf::CycleTimer::start();
+        h.hierarchize(&mut g);
+        let cy = t.elapsed_cycles();
+        g.convert_all(sgct::grid::AxisLayout::Position);
+        let f = flops::flops(&levels);
+        println!(
+            "{}: {} points ({}), {} cycles, {:.4} flops/cycle",
+            h.name(),
+            levels.total_points(),
+            human_bytes(levels.size_bytes()),
+            cy,
+            f.total() as f64 / cy as f64
+        );
+    }
+    if let Some(r) = reference {
+        let diff = g.max_diff(&r);
+        println!("check vs Func: max diff {diff:.3e}");
+        anyhow::ensure!(diff < 1e-9, "verification failed");
+    }
+    Ok(())
+}
+
+fn combine(args: &Args) -> Result<()> {
+    let dim = args.get("dim", 2usize)?;
+    let level = args.get("level", 5u8)?;
+    let samples = args.get("samples", 500usize)?;
+    let scheme = CombinationScheme::regular(dim, level);
+    scheme.validate().map_err(|s| anyhow::anyhow!("scheme invalid at subspace {s}"))?;
+    println!(
+        "scheme: d={dim} n={level}: {} grids, {} total points",
+        scheme.len(),
+        scheme.total_points()
+    );
+    let f = |x: &[f64]| -> f64 { x.iter().map(|&v| 4.0 * v * (1.0 - v)).product() };
+    let cfg = PipelineConfig::new(scheme);
+    let mut c = Coordinator::new(cfg, f);
+    c.combine();
+    println!(
+        "sparse grid: {} subspaces, {} points",
+        c.sparse.subspace_count(),
+        c.sparse.point_count()
+    );
+    println!("max interpolation error vs f: {:.4e}", c.error_vs(f, samples));
+    print!("{}", c.metrics.render());
+    Ok(())
+}
+
+fn solve(args: &Args) -> Result<()> {
+    let dim = args.get("dim", 2usize)?;
+    let level = args.get("level", 5u8)?;
+    let iters = args.get("iters", 4usize)?;
+    let steps = args.get("steps", 8usize)?;
+    let workers = args.get("workers", 1usize)?;
+    let scheme = CombinationScheme::regular(dim, level);
+    // one dt stable on the *finest* axis any grid has (level n)
+    let finest = LevelVector::isotropic(dim, level);
+    let dt = stable_dt(&finest, 1.0, 0.5);
+    println!("iterated CT: d={dim} n={level} grids={} t={steps} dt={dt:.3e}", scheme.len());
+
+    let mut cfg = PipelineConfig::new(scheme);
+    cfg.steps_per_iter = steps;
+    cfg.workers = workers;
+    let init =
+        |x: &[f64]| -> f64 { x.iter().map(|&v| (std::f64::consts::PI * v).sin()).product() };
+    let mut c = Coordinator::new(cfg, init);
+
+    let mut table = Table::new(vec!["iter", "solve", "hier+gather", "scatter+dehier", "sg err"]);
+    let t_total = perf::CycleTimer::start();
+    if args.flag("pjrt") {
+        let rt = std::rc::Rc::new(Runtime::load(&artifacts_dir())?);
+        let solver = sgct::runtime::PjrtSolver { runtime: rt.clone(), dt };
+        run_iters(&mut c, &solver, iters, dim, steps, dt, &mut table)?;
+        let st = rt.stats();
+        println!(
+            "pjrt: {} compiles ({}), {} executions ({})",
+            st.compiles,
+            human_time(st.compile_secs),
+            st.executions,
+            human_time(st.execute_secs)
+        );
+    } else {
+        let solver = HeatSolver { alpha: 1.0, dt };
+        run_iters(&mut c, &solver, iters, dim, steps, dt, &mut table)?;
+    }
+    table.print();
+    println!("total {}", human_time(t_total.elapsed_secs()));
+    print!("{}", c.metrics.render());
+    Ok(())
+}
+
+fn run_iters(
+    c: &mut Coordinator,
+    solver: &dyn sgct::solver::GridSolver,
+    iters: usize,
+    dim: usize,
+    steps: usize,
+    dt: f64,
+    table: &mut Table,
+) -> Result<()> {
+    for it in 0..iters {
+        let r = c.iteration(solver, it)?;
+        // analytic max error of the continuous heat solution at this time
+        let t_phys = dt * (steps * (it + 1)) as f64;
+        let decay = (-(dim as f64) * std::f64::consts::PI.powi(2) * t_phys).exp();
+        let err = c.error_vs(
+            |x: &[f64]| {
+                decay * x.iter().map(|&v| (std::f64::consts::PI * v).sin()).product::<f64>()
+            },
+            200,
+        );
+        table.row(vec![
+            r.iter.to_string(),
+            human_time(r.solve_secs),
+            human_time(r.hierarchize_gather_secs),
+            human_time(r.scatter_dehierarchize_secs),
+            format!("{err:.3e}"),
+        ]);
+    }
+    Ok(())
+}
+
+/// Simulated multi-node communication phase (coordinator::distributed):
+/// grid placement + reduction-tree cost model across a node-count sweep.
+fn distributed(args: &Args) -> Result<()> {
+    use sgct::coordinator::distributed::{estimate, place, NetModel};
+    let dim = args.get("dim", 3usize)?;
+    let level = args.get("level", 6u8)?;
+    let max_nodes = args.get("max-nodes", 64usize)?;
+    let scheme = CombinationScheme::regular(dim, level);
+    println!(
+        "scheme d={dim} n={level}: {} grids, {} points total; net = 10 us / 10 GB/s",
+        scheme.len(),
+        scheme.total_points()
+    );
+    let net = NetModel::default();
+    let mut t = Table::new(vec![
+        "nodes", "rounds", "gather", "scatter", "est time", "load imbalance",
+    ]);
+    let mut nodes = 1usize;
+    while nodes <= max_nodes {
+        let p = place(&scheme, nodes);
+        let r = estimate(&scheme, &p, net);
+        t.row(vec![
+            nodes.to_string(),
+            r.rounds.to_string(),
+            human_bytes(r.gather_bytes),
+            human_bytes(r.scatter_bytes),
+            human_time(r.secs),
+            format!("{:.2}", r.imbalance),
+        ]);
+        nodes *= 2;
+    }
+    t.print();
+    println!("(the paper's break-even: this communication must undercut the compute savings)");
+    Ok(())
+}
+
+fn bench_cmd(args: &Args) -> Result<()> {
+    let levels = LevelVector::parse(&args.opt_or("levels", "5,4"))?;
+    let cfg = if args.flag("quick") { Config::quick() } else { Config::default() };
+    let f = flops::flops(&levels).total();
+    let mut table = Table::new(vec!["variant", "cycles", "time", "flops/cycle", "GFLOP/s"]);
+    let variants: Vec<Variant> = if args.flag("all") {
+        ALL_VARIANTS.to_vec()
+    } else {
+        vec![Variant::Func, Variant::Ind, Variant::Bfs, Variant::BfsOverVectorized]
+    };
+    for v in variants {
+        let h = v.instance();
+        let mut g = FullGrid::new(levels.clone());
+        let mut rng = sgct::util::rng::SplitMix64::new(7);
+        g.fill_with(|_| rng.next_f64());
+        prepare(h, &mut g);
+        let pristine = g.clone();
+        let mut state = g;
+        let r = perf::bench::bench_on(
+            h.name(),
+            cfg,
+            &mut state,
+            |g| g.clone_from(&pristine),
+            |g| h.hierarchize(g),
+        );
+        table.row(vec![
+            h.name().to_string(),
+            format!("{:.0}", r.cycles),
+            human_time(r.secs),
+            format!("{:.4}", r.flops_per_cycle(f)),
+            format!("{:.3}", r.gflops(f)),
+        ]);
+    }
+    println!(
+        "levels {} ({} points, {})",
+        levels,
+        levels.total_points(),
+        human_bytes(levels.size_bytes())
+    );
+    table.print();
+    Ok(())
+}

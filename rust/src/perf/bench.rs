@@ -1,0 +1,202 @@
+//! Mini benchmarking framework (criterion replacement, offline crate set).
+//!
+//! Methodology follows the paper: warm up, measure **cycles** with rdtsc,
+//! repeat until enough samples, report the interquartile-trimmed mean, and
+//! derive performance from the *calculated* flop count of Eq. 1 (never from
+//! hardware flop counters — Fig. 5 vs Fig. 6 shows why).
+
+use super::cycles::{cycles_per_second, now_cycles};
+use super::stats::Summary;
+
+/// Measurement configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Warmup iterations (not recorded).
+    pub warmup: u32,
+    /// Recorded samples.
+    pub samples: u32,
+    /// Per-sample minimum duration (batches the closure if it's too fast).
+    pub min_sample_secs: f64,
+    /// Hard cap on total measurement time (large grids: fewer samples).
+    pub max_total_secs: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { warmup: 2, samples: 12, min_sample_secs: 5e-3, max_total_secs: 10.0 }
+    }
+}
+
+impl Config {
+    /// Quick configuration for CI / smoke runs.
+    pub fn quick() -> Self {
+        Self { warmup: 1, samples: 5, min_sample_secs: 1e-3, max_total_secs: 2.0 }
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Cycles per single invocation (trimmed mean).
+    pub cycles: f64,
+    /// Seconds per single invocation.
+    pub secs: f64,
+    /// All per-invocation cycle samples.
+    pub summary: Summary,
+    /// Invocations batched per sample.
+    pub batch: u32,
+}
+
+impl BenchResult {
+    /// flops/cycle given a calculated flop count.
+    pub fn flops_per_cycle(&self, flops: u64) -> f64 {
+        flops as f64 / self.cycles
+    }
+
+    /// GFLOP/s given a calculated flop count.
+    pub fn gflops(&self, flops: u64) -> f64 {
+        flops as f64 / self.secs / 1e9
+    }
+}
+
+/// Benchmark `f`, whose every call performs "one unit" of the workload.
+///
+/// `setup` runs before every *sample* (not every batched invocation) and is
+/// excluded from timing — use it to restore input data that `f` mutates.
+pub fn bench_with_setup<S, F>(name: &str, cfg: Config, mut setup: S, mut f: F) -> BenchResult
+where
+    S: FnMut(),
+    F: FnMut(),
+{
+    let hz = cycles_per_second();
+    // estimate cost to pick the batch size
+    setup();
+    let t0 = now_cycles();
+    f();
+    let est = (now_cycles().saturating_sub(t0)).max(1) as f64;
+    let batch = ((cfg.min_sample_secs * hz / est).ceil() as u32).max(1);
+
+    for _ in 0..cfg.warmup {
+        setup();
+        for _ in 0..batch {
+            f();
+        }
+    }
+
+    let budget = (cfg.max_total_secs * hz) as u64;
+    let mut spent = 0u64;
+    let mut samples_cy = Vec::with_capacity(cfg.samples as usize);
+    for _ in 0..cfg.samples {
+        setup();
+        let t0 = now_cycles();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = now_cycles().saturating_sub(t0);
+        samples_cy.push(dt as f64 / batch as f64);
+        spent += dt;
+        if spent > budget && samples_cy.len() >= 3 {
+            break;
+        }
+    }
+    let summary = Summary::of(&samples_cy);
+    let cycles = Summary::trimmed_mean(&samples_cy);
+    BenchResult { name: name.to_string(), cycles, secs: cycles / hz, summary, batch }
+}
+
+/// Benchmark a closure with no per-sample setup.
+pub fn bench<F: FnMut()>(name: &str, cfg: Config, f: F) -> BenchResult {
+    bench_with_setup(name, cfg, || {}, f)
+}
+
+/// Benchmark over shared mutable state: `setup(state)` restores the input
+/// before each sample, `f(state)` is the timed unit.  (Avoids the double
+/// mutable borrow a closure pair would need.)
+pub fn bench_on<S, Su, F>(name: &str, cfg: Config, state: &mut S, mut setup: Su, mut f: F) -> BenchResult
+where
+    Su: FnMut(&mut S),
+    F: FnMut(&mut S),
+{
+    let hz = cycles_per_second();
+    setup(state);
+    let t0 = now_cycles();
+    f(state);
+    let est = (now_cycles().saturating_sub(t0)).max(1) as f64;
+    let batch = ((cfg.min_sample_secs * hz / est).ceil() as u32).max(1);
+
+    for _ in 0..cfg.warmup {
+        setup(state);
+        for _ in 0..batch {
+            f(state);
+        }
+    }
+    let budget = (cfg.max_total_secs * hz) as u64;
+    let mut spent = 0u64;
+    let mut samples_cy = Vec::with_capacity(cfg.samples as usize);
+    for _ in 0..cfg.samples {
+        setup(state);
+        let t0 = now_cycles();
+        for _ in 0..batch {
+            f(state);
+        }
+        let dt = now_cycles().saturating_sub(t0);
+        samples_cy.push(dt as f64 / batch as f64);
+        spent += dt;
+        if spent > budget && samples_cy.len() >= 3 {
+            break;
+        }
+    }
+    let summary = Summary::of(&samples_cy);
+    let cycles = Summary::trimmed_mean(&samples_cy);
+    BenchResult { name: name.to_string(), cycles, secs: cycles / hz, summary, batch }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_workload() {
+        // ~N adds: timing should scale roughly linearly with N
+        let work = |n: u64| {
+            move || {
+                let mut acc = 0u64;
+                for i in 0..n {
+                    acc = acc.wrapping_add(std::hint::black_box(i));
+                }
+                std::hint::black_box(acc);
+            }
+        };
+        let cfg = Config::quick();
+        let a = bench("small", cfg, work(10_000));
+        let b = bench("large", cfg, work(100_000));
+        assert!(b.cycles > 3.0 * a.cycles, "a={} b={}", a.cycles, b.cycles);
+    }
+
+    #[test]
+    fn setup_not_timed() {
+        let cfg = Config { warmup: 0, samples: 3, min_sample_secs: 1e-4, max_total_secs: 5.0 };
+        let r = bench_with_setup(
+            "setup-heavy",
+            cfg,
+            || std::thread::sleep(std::time::Duration::from_millis(5)),
+            || { std::hint::black_box(1 + 1); },
+        );
+        // a no-op body must come out far below the 5 ms setup
+        assert!(r.secs < 1e-3, "secs = {}", r.secs);
+    }
+
+    #[test]
+    fn result_conversions() {
+        let r = BenchResult {
+            name: "x".into(),
+            cycles: 1000.0,
+            secs: 1e-6,
+            summary: Summary::of(&[1000.0]),
+            batch: 1,
+        };
+        assert_eq!(r.flops_per_cycle(500), 0.5);
+        assert!((r.gflops(500) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,98 @@
+//! Cycle-accurate timing via the time-stamp counter.
+//!
+//! Modern x86 TSCs are invariant (constant rate, monotonic across idle
+//! states), so `rdtsc` deltas divided by the calibrated TSC frequency give
+//! wall time, and raw deltas are the "cycles" the paper's flops/cycle plots
+//! use.  Calibration measures the TSC against `Instant` once (cached).
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Read the cycle counter.
+#[inline(always)]
+pub fn now_cycles() -> u64 {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        core::arch::x86_64::_rdtsc()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        // fall back to nanoseconds (1 "cycle" = 1 ns)
+        static START: OnceLock<Instant> = OnceLock::new();
+        START.get_or_init(Instant::now).elapsed().as_nanos() as u64
+    }
+}
+
+fn calibrate() -> f64 {
+    // two-phase: short warmup, then a 50 ms measurement window
+    let _ = (now_cycles(), Instant::now());
+    let t0 = Instant::now();
+    let c0 = now_cycles();
+    while t0.elapsed().as_millis() < 50 {
+        std::hint::spin_loop();
+    }
+    let c1 = now_cycles();
+    let dt = t0.elapsed().as_secs_f64();
+    (c1 - c0) as f64 / dt
+}
+
+/// Calibrated TSC frequency (cycles per second), cached after first call.
+pub fn cycles_per_second() -> f64 {
+    static HZ: OnceLock<f64> = OnceLock::new();
+    *HZ.get_or_init(calibrate)
+}
+
+/// Convert a cycle delta to seconds.
+pub fn cycles_to_secs(cycles: f64) -> f64 {
+    cycles / cycles_per_second()
+}
+
+/// RAII-ish timer returning elapsed cycles.
+pub struct CycleTimer {
+    start: u64,
+}
+
+impl CycleTimer {
+    #[inline]
+    pub fn start() -> Self {
+        Self { start: now_cycles() }
+    }
+
+    #[inline]
+    pub fn elapsed_cycles(&self) -> u64 {
+        now_cycles().saturating_sub(self.start)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        cycles_to_secs(self.elapsed_cycles() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_are_monotonic() {
+        let a = now_cycles();
+        let b = now_cycles();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn calibration_is_plausible() {
+        let hz = cycles_per_second();
+        // any machine this runs on is between 0.2 and 10 GHz
+        assert!(hz > 2e8 && hz < 1e10, "hz = {hz}");
+        // cached: second call identical
+        assert_eq!(hz, cycles_per_second());
+    }
+
+    #[test]
+    fn timer_measures_sleep() {
+        let t = CycleTimer::start();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let s = t.elapsed_secs();
+        assert!(s > 0.005 && s < 1.0, "s = {s}");
+    }
+}

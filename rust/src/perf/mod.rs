@@ -1,0 +1,20 @@
+//! Performance measurement substrate (the paper's roofline methodology [9]).
+//!
+//! * [`cycles`] — rdtsc cycle counter with TSC-frequency calibration, so
+//!   results are reported in **flops/cycle** like the paper's plots;
+//! * [`stats`] — outlier-robust summary statistics;
+//! * [`bench`] — a small criterion-replacement: warmup, adaptive batch
+//!   sizing, trimmed medians (criterion is not in the offline crate set);
+//! * [`stream`] — STREAM-like bandwidth probe (the paper takes the roofline
+//!   memory bound from the stream benchmark [11]);
+//! * [`roofline`] — the ceilings and the operational-intensity bookkeeping.
+
+pub mod bench;
+pub mod cycles;
+pub mod roofline;
+pub mod stats;
+pub mod stream;
+
+pub use bench::{bench, BenchResult, Config};
+pub use cycles::{cycles_per_second, now_cycles, CycleTimer};
+pub use stats::Summary;

@@ -1,0 +1,62 @@
+//! Roofline model bookkeeping (Williams/Waterman/Patterson [10]).
+//!
+//! The paper plots performance (flops/cycle) over operational intensity
+//! (flops/byte) against two ceilings: scalar peak compute and the stream
+//! bandwidth.  `attainable` evaluates `min(peak, OI * bandwidth)`.
+
+use super::cycles::cycles_per_second;
+use super::stream;
+
+/// Machine ceilings for the roofline.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    /// Peak flops/cycle of the bound shown in the plots.  The paper always
+    /// draws *scalar* peak (2 f64 flops/cycle on SandyBridge: 1 add + 1 mul
+    /// per cycle) even for the vectorized codes.
+    pub peak_flops_per_cycle: f64,
+    /// Sustained memory bandwidth, bytes/cycle.
+    pub bytes_per_cycle: f64,
+}
+
+impl Roofline {
+    /// Scalar-peak roofline with measured stream bandwidth.
+    pub fn host_scalar() -> Self {
+        let hz = cycles_per_second();
+        let bw = stream::host_bandwidth().best_bytes_per_sec();
+        Self { peak_flops_per_cycle: 2.0, bytes_per_cycle: bw / hz }
+    }
+
+    /// AVX-peak variant (4-wide f64 add + mul per cycle = 8 flops/cycle).
+    pub fn host_avx() -> Self {
+        Self { peak_flops_per_cycle: 8.0, ..Self::host_scalar() }
+    }
+
+    /// Attainable flops/cycle at operational intensity `oi` (flops/byte).
+    pub fn attainable(&self, oi: f64) -> f64 {
+        self.peak_flops_per_cycle.min(oi * self.bytes_per_cycle)
+    }
+
+    /// The ridge point: OI where the machine turns compute bound.
+    pub fn ridge(&self) -> f64 {
+        self.peak_flops_per_cycle / self.bytes_per_cycle
+    }
+
+    /// Percentage of peak achieved by `flops_per_cycle`.
+    pub fn percent_of_peak(&self, flops_per_cycle: f64) -> f64 {
+        100.0 * flops_per_cycle / self.peak_flops_per_cycle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attainable_is_min_of_ceilings() {
+        let r = Roofline { peak_flops_per_cycle: 2.0, bytes_per_cycle: 4.0 };
+        assert_eq!(r.attainable(0.25), 1.0); // bandwidth bound
+        assert_eq!(r.attainable(10.0), 2.0); // compute bound
+        assert_eq!(r.ridge(), 0.5);
+        assert_eq!(r.percent_of_peak(0.4), 20.0);
+    }
+}

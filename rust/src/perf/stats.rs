@@ -1,0 +1,114 @@
+//! Robust summary statistics for noisy timing samples.
+
+/// Summary of a sample set (times or cycle counts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    /// Compute from raw samples (sorts a copy).
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "no samples");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let q = |p: f64| -> f64 {
+            let idx = p * (n - 1) as f64;
+            let lo = idx.floor() as usize;
+            let hi = idx.ceil() as usize;
+            if lo == hi {
+                s[lo]
+            } else {
+                s[lo] + (idx - lo as f64) * (s[hi] - s[lo])
+            }
+        };
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Self {
+            n,
+            min: s[0],
+            p25: q(0.25),
+            median: q(0.5),
+            p75: q(0.75),
+            max: s[n - 1],
+            mean,
+            stddev: var.sqrt(),
+        }
+    }
+
+    /// Interquartile-trimmed mean — robust central estimate for timings.
+    pub fn trimmed_mean(samples: &[f64]) -> f64 {
+        let sm = Self::of(samples);
+        let kept: Vec<f64> = samples
+            .iter()
+            .copied()
+            .filter(|&x| x >= sm.p25 && x <= sm.p75)
+            .collect();
+        if kept.is_empty() {
+            sm.median
+        } else {
+            kept.iter().sum::<f64>() / kept.len() as f64
+        }
+    }
+
+    /// Relative spread (IQR / median) — the bench reports it as noise.
+    pub fn noise(&self) -> f64 {
+        if self.median == 0.0 {
+            0.0
+        } else {
+            (self.p75 - self.p25) / self.median
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.p25, 2.0);
+        assert_eq!(s.p75, 4.0);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.noise(), 0.0);
+    }
+
+    #[test]
+    fn trimmed_mean_ignores_outliers() {
+        let mut v = vec![10.0; 20];
+        v.push(1e9); // one huge outlier
+        let t = Summary::trimmed_mean(&v);
+        assert!((t - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_sample_panics() {
+        Summary::of(&[]);
+    }
+}

@@ -1,0 +1,95 @@
+//! STREAM-like memory bandwidth probe (McCalpin [11]).
+//!
+//! The paper takes the roofline's memory bound from the stream benchmark;
+//! we measure copy / scale / add / triad over a buffer several times larger
+//! than the last-level cache and report the best sustained rate per kernel
+//! (STREAM's own convention).
+
+use super::cycles::CycleTimer;
+
+/// Bandwidth results in bytes/second.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamResult {
+    pub copy: f64,
+    pub scale: f64,
+    pub add: f64,
+    pub triad: f64,
+}
+
+impl StreamResult {
+    /// The value roofline plots conventionally use (triad).
+    pub fn best_bytes_per_sec(&self) -> f64 {
+        self.triad.max(self.add).max(self.copy).max(self.scale)
+    }
+}
+
+/// Run the probe with `n` f64 elements per array (3 arrays), `reps` trials.
+pub fn measure(n: usize, reps: usize) -> StreamResult {
+    let mut a = vec![1.0f64; n];
+    let mut b = vec![2.0f64; n];
+    let mut c = vec![0.0f64; n];
+    let scalar = 3.0f64;
+
+    let mut best = [f64::INFINITY; 4]; // secs per kernel
+    for _ in 0..reps {
+        // copy: c = a                      (2 * 8 bytes/elem)
+        let t = CycleTimer::start();
+        c.copy_from_slice(&a);
+        best[0] = best[0].min(t.elapsed_secs());
+        std::hint::black_box(&mut c);
+
+        // scale: b = s * c                 (2 * 8)
+        let t = CycleTimer::start();
+        for i in 0..n {
+            b[i] = scalar * c[i];
+        }
+        best[1] = best[1].min(t.elapsed_secs());
+        std::hint::black_box(&mut b);
+
+        // add: c = a + b                   (3 * 8)
+        let t = CycleTimer::start();
+        for i in 0..n {
+            c[i] = a[i] + b[i];
+        }
+        best[2] = best[2].min(t.elapsed_secs());
+        std::hint::black_box(&mut c);
+
+        // triad: a = b + s * c             (3 * 8)
+        let t = CycleTimer::start();
+        for i in 0..n {
+            a[i] = b[i] + scalar * c[i];
+        }
+        best[3] = best[3].min(t.elapsed_secs());
+        std::hint::black_box(&mut a);
+    }
+    let nb = n as f64 * 8.0;
+    StreamResult {
+        copy: 2.0 * nb / best[0],
+        scale: 2.0 * nb / best[1],
+        add: 3.0 * nb / best[2],
+        triad: 3.0 * nb / best[3],
+    }
+}
+
+/// Default-size probe (64 MiB working set), cached.
+pub fn host_bandwidth() -> StreamResult {
+    use std::sync::OnceLock;
+    static CACHE: OnceLock<StreamResult> = OnceLock::new();
+    *CACHE.get_or_init(|| measure(8 << 20, 3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_is_plausible() {
+        // small, quick probe — just sanity-check the plumbing
+        let r = measure(1 << 18, 2);
+        for v in [r.copy, r.scale, r.add, r.triad] {
+            // between 100 MB/s and 1 TB/s on anything that can run this
+            assert!(v > 1e8 && v < 1e12, "bw = {v}");
+        }
+        assert!(r.best_bytes_per_sec() >= r.triad);
+    }
+}

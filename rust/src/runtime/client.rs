@@ -1,0 +1,251 @@
+//! PJRT client wrapper: compile-on-demand executable cache + marshalling.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::grid::{FullGrid, LevelVector};
+use crate::solver::GridSolver;
+
+use super::manifest::{Artifact, Manifest};
+
+/// The PJRT CPU runtime: one client, one executable cache.
+///
+/// Not `Send`/`Sync` (the underlying handles are raw PJRT pointers); keep it
+/// on the thread that created it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Compile + execute counters for metrics.
+    stats: RefCell<RuntimeStats>,
+}
+
+/// Execution statistics (exposed to the coordinator metrics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    /// Get (compiling and caching on first use) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let art = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        let t = crate::perf::CycleTimer::start();
+        let proto = xla::HloModuleProto::from_text_file(&art.path)
+            .map_err(|e| anyhow!("loading {}: {e}", art.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        let mut st = self.stats.borrow_mut();
+        st.compiles += 1;
+        st.compile_secs += t.elapsed_secs();
+        Ok(exe)
+    }
+
+    fn grid_literal(art: &Artifact, vals: &[f64]) -> Result<xla::Literal> {
+        // array shape: levels reversed (dimension 1 fastest = last axis)
+        let mut dims: Vec<i64> = art
+            .levels
+            .as_slice()
+            .iter()
+            .map(|&l| ((1usize << l) - 1) as i64)
+            .collect();
+        dims.reverse();
+        let lit = match art.dtype.as_str() {
+            "f64" => xla::Literal::vec1(vals),
+            "f32" => {
+                let v32: Vec<f32> = vals.iter().map(|&v| v as f32).collect();
+                xla::Literal::vec1(&v32)
+            }
+            other => bail!("unsupported dtype {other}"),
+        };
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape {dims:?}: {e}"))
+    }
+
+    fn literal_to_vec(art: &Artifact, lit: xla::Literal) -> Result<Vec<f64>> {
+        match art.dtype.as_str() {
+            "f64" => lit.to_vec::<f64>().map_err(|e| anyhow!("to_vec f64: {e}")),
+            "f32" => Ok(lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("to_vec f32: {e}"))?
+                .into_iter()
+                .map(|v| v as f64)
+                .collect()),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+
+    /// Execute a 1-input grid->grid entry (`hierarchize` / `dehierarchize`).
+    pub fn run_grid(&self, name: &str, vals: &[f64]) -> Result<Vec<f64>> {
+        let art = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            vals.len() == art.levels.total_points(),
+            "grid size {} != artifact {} points {}",
+            vals.len(),
+            name,
+            art.levels.total_points()
+        );
+        let exe = self.executable(name)?;
+        let input = Self::grid_literal(&art, vals)?;
+        let t = crate::perf::CycleTimer::start();
+        let result = exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t.elapsed_secs();
+        }
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        Self::literal_to_vec(&art, out)
+    }
+
+    /// Execute a (grid, dt)->grid entry (`heat_step` / `solve_hierN`).
+    pub fn run_grid_dt(&self, name: &str, vals: &[f64], dt: f64) -> Result<Vec<f64>> {
+        let art = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+            .clone();
+        anyhow::ensure!(vals.len() == art.levels.total_points(), "grid size mismatch for {name}");
+        let exe = self.executable(name)?;
+        let input = Self::grid_literal(&art, vals)?;
+        let dt_lit = match art.dtype.as_str() {
+            "f64" => xla::Literal::scalar(dt),
+            "f32" => xla::Literal::scalar(dt as f32),
+            other => bail!("unsupported dtype {other}"),
+        };
+        let t = crate::perf::CycleTimer::start();
+        let result = exe
+            .execute::<xla::Literal>(&[input, dt_lit])
+            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t.elapsed_secs();
+        }
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        Self::literal_to_vec(&art, out)
+    }
+
+    /// Hierarchize a grid through the AOT artifact (L1 Pallas kernel path).
+    pub fn hierarchize(&self, g: &mut FullGrid) -> Result<()> {
+        let name = format!("hierarchize_{}", g.levels().tag());
+        let out = self.run_grid(&name, &g.to_canonical())?;
+        g.from_canonical(&out);
+        Ok(())
+    }
+
+    /// Dehierarchize through the AOT artifact.
+    pub fn dehierarchize(&self, g: &mut FullGrid) -> Result<()> {
+        let name = format!("dehierarchize_{}", g.levels().tag());
+        let out = self.run_grid(&name, &g.to_canonical())?;
+        g.from_canonical(&out);
+        Ok(())
+    }
+}
+
+/// [`GridSolver`] running the AOT heat-step artifact through PJRT.
+///
+/// Holds an `Rc<Runtime>`; stays on the runtime's thread.
+pub struct PjrtSolver {
+    pub runtime: Rc<Runtime>,
+    pub dt: f64,
+}
+
+impl GridSolver for PjrtSolver {
+    fn advance(&self, grid: &mut FullGrid, steps: usize) -> Result<()> {
+        let name = format!("heat_step_{}", grid.levels().tag());
+        let mut vals = grid.to_canonical();
+        for _ in 0..steps {
+            vals = self.runtime.run_grid_dt(&name, &vals, self.dt)?;
+        }
+        grid.from_canonical(&vals);
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt-heat(dt={:.3e}, platform={})", self.dt, self.runtime.platform())
+    }
+}
+
+/// Hierarchization-through-PJRT adapter used by benches/examples to compare
+/// the L1 Pallas kernel path against the native rust variants.
+pub struct PjrtHierarchizer {
+    pub runtime: Rc<Runtime>,
+}
+
+impl PjrtHierarchizer {
+    pub fn hierarchize(&self, g: &mut FullGrid) -> Result<()> {
+        self.runtime.hierarchize(g)
+    }
+
+    pub fn dehierarchize(&self, g: &mut FullGrid) -> Result<()> {
+        self.runtime.dehierarchize(g)
+    }
+
+    /// Solve `steps` heat steps and hierarchize in one fused artifact call
+    /// (the per-grid unit of work of the iterated CT).
+    pub fn solve_hierarchize(&self, g: &mut FullGrid, entry: &str, dt: f64) -> Result<()> {
+        let name = format!("{entry}_{}", g.levels().tag());
+        let out = self.runtime.run_grid_dt(&name, &g.to_canonical(), dt)?;
+        g.from_canonical(&out);
+        Ok(())
+    }
+}
+
+/// Levels covered by artifacts for `entry`.
+/// (exported for examples/benches)
+pub fn covered_levels(m: &Manifest, entry: &str) -> Vec<LevelVector> {
+    m.of_entry(entry).map(|a| a.levels.clone()).collect()
+}

@@ -1,0 +1,139 @@
+//! `artifacts/manifest.tsv` parsing.
+//!
+//! One row per artifact: `name  entry  levels  dtype  steps  file  digest`
+//! (TSV, `#`-comment header) — written by `python/compile/aot.py`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::grid::LevelVector;
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    /// Full name, e.g. `solve_hier8_5x4`.
+    pub name: String,
+    /// Entry kind: `hierarchize`, `dehierarchize`, `heat_step`, `solve_hierN`.
+    pub entry: String,
+    /// Level vector (paper order, dimension 1 first).
+    pub levels: LevelVector,
+    /// Element type tag (`f32` / `f64`).
+    pub dtype: String,
+    /// Solver steps fused into the artifact (1 unless `solve_hierN`).
+    pub steps: usize,
+    /// HLO text file, absolute.
+    pub path: PathBuf,
+}
+
+/// The parsed artifact directory.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    by_name: HashMap<String, Artifact>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mf = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&mf)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", mf.display()))?;
+        let mut by_name = HashMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() < 6 {
+                bail!("manifest line {} malformed: {line:?}", ln + 1);
+            }
+            let levels = LevelVector::parse(cols[2])
+                .with_context(|| format!("manifest line {}: bad levels {:?}", ln + 1, cols[2]))?;
+            let a = Artifact {
+                name: cols[0].to_string(),
+                entry: cols[1].to_string(),
+                levels,
+                dtype: cols[3].to_string(),
+                steps: cols[4].parse().unwrap_or(1),
+                path: dir.join(cols[5]),
+            };
+            by_name.insert(a.name.clone(), a);
+        }
+        Ok(Self { by_name })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.by_name.get(name)
+    }
+
+    /// Artifact for `entry` at `levels`, if lowered.
+    pub fn find(&self, entry: &str, levels: &LevelVector) -> Option<&Artifact> {
+        self.by_name.get(&format!("{entry}_{}", levels.tag()))
+    }
+
+    /// All artifacts of one entry kind.
+    pub fn of_entry<'a>(&'a self, entry: &'a str) -> impl Iterator<Item = &'a Artifact> {
+        self.by_name.values().filter(move |a| a.entry == entry)
+    }
+
+    /// Entry name of the fused solve+hierarchize artifact, if any exists.
+    pub fn solve_hier_entry(&self) -> Option<String> {
+        self.by_name
+            .values()
+            .find(|a| a.entry.starts_with("solve_hier"))
+            .map(|a| a.entry.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_rows_and_lookup() {
+        let dir = std::env::temp_dir().join("sgct_manifest_test");
+        write_manifest(
+            &dir,
+            "# header\nhierarchize_3x2\thierarchize\t3x2\tf64\t1\thierarchize_3x2.hlo.txt\tabc\n\
+             solve_hier8_3x2\tsolve_hier8\t3x2\tf64\t8\tsolve_hier8_3x2.hlo.txt\tdef\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        let lv = LevelVector::new(&[3, 2]);
+        let a = m.find("hierarchize", &lv).unwrap();
+        assert_eq!(a.levels, lv);
+        assert_eq!(a.steps, 1);
+        assert_eq!(m.find("solve_hier8", &lv).unwrap().steps, 8);
+        assert_eq!(m.solve_hier_entry().as_deref(), Some("solve_hier8"));
+        assert_eq!(m.of_entry("hierarchize").count(), 1);
+        assert!(m.find("hierarchize", &LevelVector::new(&[9])).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_a_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent_dir_xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let dir = std::env::temp_dir().join("sgct_manifest_test_bad");
+        write_manifest(&dir, "only\tthree\tcols\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

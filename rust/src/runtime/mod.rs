@@ -1,0 +1,18 @@
+//! PJRT runtime: loads and executes the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` lowers the L2 model (which calls the L1 Pallas kernels)
+//! to HLO **text** once at build time; this module loads the text with
+//! `HloModuleProto::from_text_file`, compiles each entry on the PJRT CPU
+//! client, caches the executables per (entry, level vector), and marshals
+//! grid buffers in and out.  Python never runs on this path.
+//!
+//! The `xla` crate's handles wrap raw PJRT pointers without `Send`/`Sync`;
+//! a [`Runtime`] must therefore stay on its creating thread.  The
+//! coordinator keeps PJRT execution on the leader thread and parallelizes
+//! the pure-rust phases instead (see `coordinator`).
+
+mod client;
+mod manifest;
+
+pub use client::{covered_levels, PjrtHierarchizer, PjrtSolver, Runtime};
+pub use manifest::{Artifact, Manifest};

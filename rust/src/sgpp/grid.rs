@@ -1,0 +1,321 @@
+//! Hash-keyed adaptive sparse grid and its recursive hierarchization.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+use crate::grid::{hier_coords, FullGrid, LevelVector};
+
+/// FxHash-style multiplicative hasher (rustc's): the point keys are short
+/// integer vectors, for which SipHash's DoS hardening is pure overhead.
+/// SGpp itself uses a cheap multiplicative hash as well.
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const FX_SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.add(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, v: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(FX_SEED);
+    }
+}
+
+type FxBuild = BuildHasherDefault<FxHasher>;
+
+/// A grid point keyed by its per-dimension (level, index) vectors.
+///
+/// `index[j]` is the odd 1-based index on sub-level `level[j]` of dimension
+/// `j` — SGpp's canonical key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct HashPoint {
+    pub level: Vec<u8>,
+    pub index: Vec<u32>,
+}
+
+impl HashPoint {
+    /// Coordinates in `(0,1)^d`.
+    pub fn coords(&self) -> Vec<f64> {
+        self.level
+            .iter()
+            .zip(&self.index)
+            .map(|(&l, &i)| i as f64 * 0.5f64.powi(l as i32))
+            .collect()
+    }
+}
+
+/// Hash-based, adaptivity-capable sparse grid (the SGpp stand-in).
+#[derive(Debug, Clone, Default)]
+pub struct HashGrid {
+    points: HashMap<HashPoint, f64, FxBuild>,
+}
+
+impl HashGrid {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Approximate resident bytes per point (key vectors + value + table
+    /// slot) — the "large memory footprint" the paper attributes to SGpp.
+    pub fn bytes_per_point(&self, dim: usize) -> usize {
+        // two Vec headers (24 B each) + payloads + value + ~1.3x table slots
+        let payload = 24 + dim + 24 + 4 * dim + 8;
+        payload + payload / 3
+    }
+
+    pub fn get(&self, p: &HashPoint) -> Option<f64> {
+        self.points.get(p).copied()
+    }
+
+    pub fn insert(&mut self, p: HashPoint, v: f64) {
+        self.points.insert(p, v);
+    }
+
+    /// Insert a point together with all missing hierarchical ancestors
+    /// (value 0.0) — keeps the grid *consistent* so the recursive sweep
+    /// visits every stored point (SGpp requires the same closure property).
+    pub fn insert_with_ancestors(&mut self, p: HashPoint, v: f64) {
+        for j in 0..p.level.len() {
+            if p.level[j] > 1 {
+                let mut q = p.clone();
+                // 1-d hierarchical parent in dimension j
+                let idx = p.index[j];
+                q.level[j] -= 1;
+                q.index[j] = (idx >> 1) | 1; // parent odd index
+                if !self.points.contains_key(&q) {
+                    self.insert_with_ancestors(q, 0.0);
+                }
+            }
+        }
+        self.points.entry(p).or_insert(v);
+    }
+
+    /// Populate from a full combination grid (regular case).
+    pub fn from_full_grid(g: &FullGrid) -> Self {
+        let levels = g.levels();
+        let d = levels.dim();
+        let mut hg = Self::new();
+        g.for_each(|pos, v| {
+            let mut level = vec![0u8; d];
+            let mut index = vec![0u32; d];
+            for j in 0..d {
+                let c = hier_coords(levels.level(j), pos[j]);
+                level[j] = c.level;
+                index[j] = c.index;
+            }
+            hg.insert(HashPoint { level, index }, v);
+        });
+        hg
+    }
+
+    /// Write the values back into a full grid (inverse of `from_full_grid`).
+    pub fn to_full_grid(&self, levels: &LevelVector) -> FullGrid {
+        let mut g = FullGrid::new(levels.clone());
+        let d = levels.dim();
+        for (p, &v) in &self.points {
+            let mut pos = vec![0u32; d];
+            for j in 0..d {
+                pos[j] = p.index[j] << (levels.level(j) - p.level[j]);
+            }
+            g.set(&pos, v);
+        }
+        g
+    }
+
+    /// Hierarchize in place: the classical recursive sweep, dimension by
+    /// dimension, descending each 1-d tree while carrying the values of the
+    /// enclosing (left, right) ancestors — lookups by hash throughout.
+    pub fn hierarchize(&mut self) {
+        let dims = match self.points.keys().next() {
+            Some(p) => p.level.len(),
+            None => return,
+        };
+        for dim in 0..dims {
+            // roots of dimension `dim`: every point with level[dim] == 1
+            let roots: Vec<HashPoint> = self
+                .points
+                .keys()
+                .filter(|p| p.level[dim] == 1)
+                .cloned()
+                .collect();
+            for mut root in roots {
+                self.hierarchize_rec(&mut root, dim, 0.0, 0.0);
+            }
+        }
+    }
+
+    fn hierarchize_rec(&mut self, p: &mut HashPoint, dim: usize, left: f64, right: f64) {
+        let v = match self.points.get(p) {
+            Some(&v) => v,
+            None => return, // adaptive grid: subtree absent
+        };
+        // recurse first: children read the still-nodal value of `p`.
+        // The key is mutated in place and restored (no allocation per call).
+        let (lv, ix) = (p.level[dim], p.index[dim]);
+        if lv < 30 {
+            p.level[dim] = lv + 1;
+            p.index[dim] = 2 * ix - 1;
+            self.hierarchize_rec(p, dim, left, v);
+            p.index[dim] = 2 * ix + 1;
+            self.hierarchize_rec(p, dim, v, right);
+            p.level[dim] = lv;
+            p.index[dim] = ix;
+        }
+        *self.points.get_mut(p).unwrap() = v - 0.5 * (left + right);
+    }
+
+    /// Dehierarchize in place (inverse sweep: parents first).
+    pub fn dehierarchize(&mut self) {
+        let dims = match self.points.keys().next() {
+            Some(p) => p.level.len(),
+            None => return,
+        };
+        for dim in 0..dims {
+            let roots: Vec<HashPoint> = self
+                .points
+                .keys()
+                .filter(|p| p.level[dim] == 1)
+                .cloned()
+                .collect();
+            for mut root in roots {
+                self.dehierarchize_rec(&mut root, dim, 0.0, 0.0);
+            }
+        }
+    }
+
+    fn dehierarchize_rec(&mut self, p: &mut HashPoint, dim: usize, left: f64, right: f64) {
+        let v = match self.points.get_mut(p) {
+            Some(v) => {
+                *v += 0.5 * (left + right);
+                *v
+            }
+            None => return,
+        };
+        let (lv, ix) = (p.level[dim], p.index[dim]);
+        if lv < 30 {
+            p.level[dim] = lv + 1;
+            p.index[dim] = 2 * ix - 1;
+            self.dehierarchize_rec(p, dim, left, v);
+            p.index[dim] = 2 * ix + 1;
+            self.dehierarchize_rec(p, dim, v, right);
+            p.level[dim] = lv;
+            p.index[dim] = ix;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchize::{func::Func, Hierarchizer};
+    use crate::util::rng::SplitMix64;
+
+    fn rand_full(levels: &[u8], seed: u64) -> FullGrid {
+        let mut g = FullGrid::new(LevelVector::new(levels));
+        let mut rng = SplitMix64::new(seed);
+        g.fill_with(|_| rng.next_f64() - 0.5);
+        g
+    }
+
+    #[test]
+    fn full_grid_roundtrip() {
+        let g = rand_full(&[3, 2], 1);
+        let hg = HashGrid::from_full_grid(&g);
+        assert_eq!(hg.len(), 21);
+        let back = hg.to_full_grid(g.levels());
+        assert_eq!(g.max_diff(&back), 0.0);
+    }
+
+    #[test]
+    fn hierarchize_matches_func_regular() {
+        for levels in [&[5][..], &[3, 3], &[2, 2, 2]] {
+            let mut want = rand_full(levels, 2);
+            let mut hg = HashGrid::from_full_grid(&want);
+            Func.hierarchize(&mut want);
+            hg.hierarchize();
+            let got = hg.to_full_grid(want.levels());
+            assert!(got.max_diff(&want) < 1e-13, "{levels:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let orig = rand_full(&[3, 2], 3);
+        let mut hg = HashGrid::from_full_grid(&orig);
+        hg.hierarchize();
+        hg.dehierarchize();
+        assert!(hg.to_full_grid(orig.levels()).max_diff(&orig) < 1e-13);
+    }
+
+    #[test]
+    fn adaptive_insertion_completes_ancestors() {
+        let mut hg = HashGrid::new();
+        hg.insert_with_ancestors(HashPoint { level: vec![3], index: vec![5] }, 1.0);
+        // ancestors of (3,5): (2,3)... parent of idx 5 at level 3: (5>>1)|1 = 3; of (2,3): (3>>1)|1 = 1
+        assert_eq!(hg.len(), 3);
+        assert!(hg.get(&HashPoint { level: vec![1], index: vec![1] }).is_some());
+        assert!(hg.get(&HashPoint { level: vec![2], index: vec![3] }).is_some());
+    }
+
+    #[test]
+    fn adaptive_hierarchization_is_correct() {
+        // adaptive 1-d grid: root + one deep point; surplus of the deep
+        // point subtracts the interpolation of its ancestors.
+        let mut hg = HashGrid::new();
+        hg.insert_with_ancestors(HashPoint { level: vec![1], index: vec![1] }, 2.0);
+        hg.insert_with_ancestors(HashPoint { level: vec![2], index: vec![1] }, 3.0);
+        hg.hierarchize();
+        // (2,1) has ancestors (left boundary=0, root=2): 3 - (0+2)/2 = 2
+        assert_eq!(hg.get(&HashPoint { level: vec![2], index: vec![1] }), Some(2.0));
+        assert_eq!(hg.get(&HashPoint { level: vec![1], index: vec![1] }), Some(2.0));
+    }
+
+    #[test]
+    fn memory_footprint_dominates_plain_layout() {
+        let hg = HashGrid::new();
+        assert!(hg.bytes_per_point(2) > 8 * 8); // >8x the 8 B of a plain f64
+    }
+}

@@ -1,0 +1,224 @@
+//! Explicit finite-difference solvers with homogeneous Dirichlet boundary.
+//!
+//! Grids carry no boundary points (paper convention); the virtual boundary
+//! ring is identically zero, matching the hat-basis function space the
+//! hierarchization works in.  Axis spacings come from the level vector, so
+//! anisotropic grids are handled exactly — identical math to the L1 Pallas
+//! stencil (`python/compile/kernels/stencil.py`), which the integration
+//! tests cross-validate through PJRT.
+
+use crate::grid::{FullGrid, LevelVector, Poles};
+
+use super::GridSolver;
+
+/// Largest stable explicit-Euler step: `dt <= safety / (2 a sum h_i^-2)`.
+pub fn stable_dt(levels: &LevelVector, alpha: f64, safety: f64) -> f64 {
+    let inv: f64 = (0..levels.dim()).map(|i| 4.0f64.powi(levels.level(i) as i32)).sum();
+    safety / (2.0 * alpha * inv)
+}
+
+/// One explicit Euler step of `u_t = alpha * laplace(u)` in place.
+///
+/// Uses a scratch accumulator; per axis the 3-point second difference is a
+/// pole sweep (branch-free interior, peeled boundary).
+pub fn heat_step(g: &mut FullGrid, scratch: &mut Vec<f64>, dt: f64, alpha: f64) {
+    let d = g.dim();
+    let total = g.as_slice().len();
+    scratch.clear();
+    scratch.resize(total, 0.0);
+    for ax in 0..d {
+        let l = g.levels().level(ax);
+        let inv_h2 = 4.0f64.powi(l as i32); // h = 2^-l
+        let poles = Poles::of(g, ax);
+        let data = g.as_slice();
+        let n = poles.len;
+        for base in poles.iter() {
+            let st = poles.stride;
+            if n == 1 {
+                // single interior point: both neighbours are boundary zeros
+                scratch[base] += inv_h2 * (-2.0 * data[base]);
+                continue;
+            }
+            // first point: left neighbour is the zero boundary
+            scratch[base] += inv_h2 * (data[base + st] - 2.0 * data[base]);
+            // interior
+            for j in 1..n - 1 {
+                let x = base + j * st;
+                scratch[x] += inv_h2 * (data[x - st] + data[x + st] - 2.0 * data[x]);
+            }
+            // last point
+            let x = base + (n - 1) * st;
+            scratch[x] += inv_h2 * (data[x - st] - 2.0 * data[x]);
+        }
+    }
+    let data = g.as_mut_slice();
+    for i in 0..total {
+        data[i] += dt * alpha * scratch[i];
+    }
+}
+
+/// One upwind step of `u_t + sum_i a_i u_{x_i} = 0` (`a_i >= 0`), in place.
+pub fn advection_step(g: &mut FullGrid, scratch: &mut Vec<f64>, dt: f64, vel: &[f64]) {
+    let d = g.dim();
+    assert_eq!(vel.len(), d);
+    let total = g.as_slice().len();
+    scratch.clear();
+    scratch.resize(total, 0.0);
+    for ax in 0..d {
+        let a = vel[ax];
+        assert!(a >= 0.0, "upwind scheme expects non-negative velocities");
+        if a == 0.0 {
+            continue;
+        }
+        let l = g.levels().level(ax);
+        let inv_h = 2.0f64.powi(l as i32);
+        let poles = Poles::of(g, ax);
+        let data = g.as_slice();
+        for base in poles.iter() {
+            let st = poles.stride;
+            // first point: upstream neighbour is the zero boundary
+            scratch[base] += a * inv_h * (data[base] - 0.0);
+            for j in 1..poles.len {
+                let x = base + j * st;
+                scratch[x] += a * inv_h * (data[x] - data[x - st]);
+            }
+        }
+    }
+    let data = g.as_mut_slice();
+    for i in 0..total {
+        data[i] -= dt * scratch[i];
+    }
+}
+
+/// Native explicit heat solver (implements [`GridSolver`]).
+pub struct HeatSolver {
+    pub alpha: f64,
+    /// Time step; pick with [`stable_dt`].  The coordinator uses the same
+    /// `dt` on every combination grid so their states stay comparable.
+    pub dt: f64,
+}
+
+impl GridSolver for HeatSolver {
+    fn advance(&self, grid: &mut FullGrid, steps: usize) -> anyhow::Result<()> {
+        let mut scratch = Vec::new();
+        for _ in 0..steps {
+            heat_step(grid, &mut scratch, self.dt, self.alpha);
+        }
+        Ok(())
+    }
+
+    fn describe(&self) -> String {
+        format!("native-heat(alpha={}, dt={:.3e})", self.alpha, self.dt)
+    }
+}
+
+/// The slowest heat eigenmode `prod_i sin(pi x_i)` — initial condition with
+/// a closed-form *discrete* decay factor per step, used for validation.
+pub struct SineInit;
+
+impl SineInit {
+    /// Fill `g` with the product-of-sines mode.
+    pub fn fill(g: &mut FullGrid) {
+        g.fill_with(|x| x.iter().map(|&xi| (std::f64::consts::PI * xi).sin()).product())
+    }
+
+    /// Exact per-step amplification of the mode under the discrete stencil:
+    /// `1 + dt * alpha * sum_i lambda_i`, `lambda_i = -4/h_i^2 sin^2(pi h_i/2)`.
+    pub fn step_factor(levels: &LevelVector, dt: f64, alpha: f64) -> f64 {
+        let lam: f64 = (0..levels.dim())
+            .map(|i| {
+                let h = 0.5f64.powi(levels.level(i) as i32);
+                -4.0 / (h * h) * (std::f64::consts::PI * h / 2.0).sin().powi(2)
+            })
+            .sum();
+        1.0 + dt * alpha * lam
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_dt_bound() {
+        let lv = LevelVector::new(&[4, 3]);
+        let dt = stable_dt(&lv, 1.0, 1.0);
+        assert!((dt * 2.0 * (256.0 + 64.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sine_mode_decays_with_exact_factor() {
+        let lv = LevelVector::new(&[5, 4]);
+        let mut g = FullGrid::new(lv.clone());
+        SineInit::fill(&mut g);
+        let before = g.clone();
+        let dt = stable_dt(&lv, 1.0, 0.9);
+        let mut scratch = Vec::new();
+        heat_step(&mut g, &mut scratch, dt, 1.0);
+        let f = SineInit::step_factor(&lv, dt, 1.0);
+        let mut worst = 0.0f64;
+        before.for_each(|pos, v| {
+            worst = worst.max((g.get(pos) - f * v).abs());
+        });
+        assert!(worst < 1e-12, "worst={worst}");
+    }
+
+    #[test]
+    fn heat_conserves_nothing_but_decays_energy() {
+        let lv = LevelVector::new(&[4, 4]);
+        let mut g = FullGrid::new(lv.clone());
+        SineInit::fill(&mut g);
+        let dt = stable_dt(&lv, 1.0, 0.9);
+        let e0: f64 = g.as_slice().iter().map(|v| v * v).sum();
+        HeatSolver { alpha: 1.0, dt }.advance(&mut g, 10).unwrap();
+        let e1: f64 = g.as_slice().iter().map(|v| v * v).sum();
+        assert!(e1 < e0 && e1 > 0.0);
+    }
+
+    #[test]
+    fn single_point_grid_decays_toward_zero() {
+        let lv = LevelVector::new(&[1, 1]);
+        let mut g = FullGrid::new(lv.clone());
+        g.fill_with(|_| 1.0);
+        let dt = stable_dt(&lv, 1.0, 0.5);
+        let mut s = Vec::new();
+        heat_step(&mut g, &mut s, dt, 1.0);
+        let v = g.get(&[1, 1]);
+        assert!(v > 0.0 && v < 1.0);
+    }
+
+    #[test]
+    fn advection_transports_rightward() {
+        let lv = LevelVector::new(&[4]);
+        let mut g = FullGrid::new(lv.clone());
+        // bump in the left half
+        g.fill_with(|x| if x[0] < 0.5 { 1.0 } else { 0.0 });
+        let com_before: f64 = {
+            let v = g.to_canonical();
+            let m: f64 = v.iter().sum();
+            v.iter().enumerate().map(|(i, x)| i as f64 * x).sum::<f64>() / m
+        };
+        let mut s = Vec::new();
+        for _ in 0..4 {
+            advection_step(&mut g, &mut s, 0.01, &[1.0]);
+        }
+        let com_after: f64 = {
+            let v = g.to_canonical();
+            let m: f64 = v.iter().sum();
+            v.iter().enumerate().map(|(i, x)| i as f64 * x).sum::<f64>() / m
+        };
+        assert!(com_after > com_before, "{com_after} <= {com_before}");
+    }
+
+    #[test]
+    fn padded_grid_heat_keeps_pads_zero() {
+        let lv = LevelVector::new(&[3, 2]);
+        let mut g = FullGrid::with_padding(lv, 4);
+        g.fill_with(|x| x[0] * (1.0 - x[0]));
+        let mut s = Vec::new();
+        heat_step(&mut g, &mut s, 1e-4, 1.0);
+        for row in 0..3 {
+            assert_eq!(g.as_slice()[row * 8 + 7], 0.0);
+        }
+    }
+}

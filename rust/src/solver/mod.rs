@@ -1,0 +1,29 @@
+//! Compute-phase substrates: PDE solvers on anisotropic combination grids.
+//!
+//! The combination technique's whole point is that the per-grid solver is a
+//! standard full-grid black box.  Two native solvers (explicit heat, upwind
+//! advection) plus the analytic references live here; the PJRT-backed
+//! solver that executes the AOT-compiled JAX/Pallas step artifact is in
+//! [`crate::runtime`] (both implement [`GridSolver`], so the coordinator
+//! can run either).
+
+mod heat;
+mod poisson;
+
+pub use heat::{advection_step, heat_step, stable_dt, HeatSolver, SineInit};
+pub use poisson::PoissonSolver;
+
+use crate::grid::FullGrid;
+
+/// A per-combination-grid compute-phase solver (t time steps in place).
+///
+/// Deliberately not `Sync`: the PJRT-backed solver wraps thread-bound XLA
+/// handles.  The coordinator runs the solve phase on the leader thread and
+/// parallelizes the pure-rust phases instead.
+pub trait GridSolver {
+    /// Advance `grid` (position layout, nodal basis) by `steps` time steps.
+    fn advance(&self, grid: &mut FullGrid, steps: usize) -> anyhow::Result<()>;
+
+    /// Human-readable description for logs/metrics.
+    fn describe(&self) -> String;
+}

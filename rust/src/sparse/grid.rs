@@ -1,0 +1,404 @@
+//! Subspace-dense sparse grid implementation.
+
+use std::collections::HashMap;
+
+use crate::grid::{FullGrid, LevelVector};
+
+/// Hierarchical sparse grid holding surpluses per subspace.
+#[derive(Debug, Clone, Default)]
+pub struct SparseGrid {
+    /// Subspace `l` (componentwise >= 1) -> dense surplus array, row-major
+    /// over per-dimension subspace indices `j_i` (point index `2 j_i + 1`
+    /// on sub-level `l_i`), dimension 1 fastest.
+    subspaces: HashMap<LevelVector, Vec<f64>>,
+}
+
+/// Number of points of subspace `l`: `prod 2^(l_i - 1)`.
+fn subspace_len(l: &LevelVector) -> usize {
+    (0..l.dim()).map(|i| 1usize << (l.level(i) - 1)).product()
+}
+
+/// Row-major strides of a subspace (dimension 1 fastest).
+fn subspace_strides(l: &LevelVector) -> Vec<usize> {
+    let d = l.dim();
+    let mut s = vec![1usize; d];
+    for i in 1..d {
+        s[i] = s[i - 1] * (1usize << (l.level(i - 1) - 1));
+    }
+    s
+}
+
+impl SparseGrid {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of occupied subspaces.
+    pub fn subspace_count(&self) -> usize {
+        self.subspaces.len()
+    }
+
+    /// Total number of stored surpluses.
+    pub fn point_count(&self) -> usize {
+        self.subspaces.keys().map(subspace_len).sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.subspaces.clear();
+    }
+
+    /// Ensure subspace `l` exists (zero-filled) and return it mutably.
+    pub fn subspace_mut(&mut self, l: &LevelVector) -> &mut Vec<f64> {
+        self.subspaces
+            .entry(l.clone())
+            .or_insert_with(|| vec![0.0; subspace_len(l)])
+    }
+
+    pub fn subspace(&self, l: &LevelVector) -> Option<&[f64]> {
+        self.subspaces.get(l).map(|v| v.as_slice())
+    }
+
+    /// Iterate (subspace level vector, surpluses).
+    pub fn iter(&self) -> impl Iterator<Item = (&LevelVector, &[f64])> {
+        self.subspaces.iter().map(|(k, v)| (k, v.as_slice()))
+    }
+
+    /// Surplus of the point with per-dim (sub-level, odd index); 0.0 if the
+    /// subspace is absent.
+    pub fn surplus(&self, level: &[u8], index: &[u32]) -> f64 {
+        let l = LevelVector::new(level);
+        match self.subspaces.get(&l) {
+            None => 0.0,
+            Some(v) => {
+                let st = subspace_strides(&l);
+                let off: usize = index
+                    .iter()
+                    .zip(&st)
+                    .map(|(&ix, &s)| ((ix as usize) >> 1) * s)
+                    .sum();
+                v[off]
+            }
+        }
+    }
+
+    /// Accumulate `coeff * (hierarchized grid g)` into the sparse grid —
+    /// the gather (reduce) step of the CT communication phase.
+    ///
+    /// Hot path (§Perf): per-axis slot tables replace the per-point layout
+    /// dispatch and stride multiplies; no allocation inside the point loop;
+    /// both offsets advance incrementally with the odometer.
+    pub fn gather(&mut self, g: &FullGrid, coeff: f64) {
+        let levels = g.levels().clone();
+        let d = levels.dim();
+        let slot: Vec<Vec<usize>> = (0..d).map(|ax| g.axis_slot_table(ax)).collect();
+        let data = g.as_slice();
+        let mut sub = vec![1u8; d];
+        let mut jidx = vec![0u32; d];
+        // per-axis grid-slot contribution of the current point (memoized so
+        // an odometer step only recomputes the axes that changed)
+        let mut contrib = vec![0usize; d];
+        loop {
+            let sl = LevelVector::new(&sub);
+            let st = subspace_strides(&sl);
+            let target = self.subspace_mut(&sl);
+            let shift: Vec<u8> = (0..d).map(|i| levels.level(i) - sub[i]).collect();
+            for v in jidx.iter_mut() {
+                *v = 0;
+            }
+            let mut goff = 0usize;
+            for i in 0..d {
+                contrib[i] = slot[i][((1u32 << shift[i]) - 1) as usize];
+                goff += contrib[i];
+            }
+            let mut off = 0usize;
+            'points: loop {
+                target[off] += coeff * data[goff];
+                // odometer over jidx, updating offsets incrementally
+                let mut ax = 0;
+                loop {
+                    if ax == d {
+                        break 'points;
+                    }
+                    jidx[ax] += 1;
+                    if jidx[ax] < (1u32 << (sub[ax] - 1)) {
+                        off += st[ax];
+                        let p = ((2 * jidx[ax] + 1) << shift[ax]) - 1;
+                        goff -= contrib[ax];
+                        contrib[ax] = slot[ax][p as usize];
+                        goff += contrib[ax];
+                        break;
+                    }
+                    jidx[ax] = 0;
+                    off -= st[ax] * ((1usize << (sub[ax] - 1)) - 1);
+                    let p = (1u32 << shift[ax]) - 1;
+                    goff -= contrib[ax];
+                    contrib[ax] = slot[ax][p as usize];
+                    goff += contrib[ax];
+                    ax += 1;
+                }
+            }
+            // odometer over subspace levels
+            let mut ax = 0;
+            loop {
+                if ax == d {
+                    return;
+                }
+                sub[ax] += 1;
+                if sub[ax] <= levels.level(ax) {
+                    break;
+                }
+                sub[ax] = 1;
+                ax += 1;
+            }
+        }
+    }
+
+    /// Write the sparse-grid surpluses into (hierarchized) grid `g` — the
+    /// scatter (broadcast) step.  Every point of `g` receives the surplus
+    /// stored for it (subspaces the sparse grid does not hold give 0).
+    ///
+    /// Hot path (§Perf): iterates subspace-wise with the same slot tables
+    /// and incremental offsets as [`SparseGrid::gather`] instead of
+    /// decomposing every grid point's hierarchical coordinates.
+    pub fn scatter(&self, g: &mut FullGrid) {
+        let levels = g.levels().clone();
+        let d = levels.dim();
+        let slot: Vec<Vec<usize>> = (0..d).map(|ax| g.axis_slot_table(ax)).collect();
+        let data = g.as_mut_slice();
+        let mut sub = vec![1u8; d];
+        let mut jidx = vec![0u32; d];
+        let mut contrib = vec![0usize; d];
+        loop {
+            let sl = LevelVector::new(&sub);
+            let st = subspace_strides(&sl);
+            let source = self.subspaces.get(&sl).map(|v| v.as_slice());
+            let shift: Vec<u8> = (0..d).map(|i| levels.level(i) - sub[i]).collect();
+            for v in jidx.iter_mut() {
+                *v = 0;
+            }
+            let mut goff = 0usize;
+            for i in 0..d {
+                contrib[i] = slot[i][((1u32 << shift[i]) - 1) as usize];
+                goff += contrib[i];
+            }
+            let mut off = 0usize;
+            'points: loop {
+                data[goff] = source.map(|v| v[off]).unwrap_or(0.0);
+                let mut ax = 0;
+                loop {
+                    if ax == d {
+                        break 'points;
+                    }
+                    jidx[ax] += 1;
+                    if jidx[ax] < (1u32 << (sub[ax] - 1)) {
+                        off += st[ax];
+                        let p = ((2 * jidx[ax] + 1) << shift[ax]) - 1;
+                        goff -= contrib[ax];
+                        contrib[ax] = slot[ax][p as usize];
+                        goff += contrib[ax];
+                        break;
+                    }
+                    jidx[ax] = 0;
+                    off -= st[ax] * ((1usize << (sub[ax] - 1)) - 1);
+                    let p = (1u32 << shift[ax]) - 1;
+                    goff -= contrib[ax];
+                    contrib[ax] = slot[ax][p as usize];
+                    goff += contrib[ax];
+                    ax += 1;
+                }
+            }
+            let mut ax = 0;
+            loop {
+                if ax == d {
+                    return;
+                }
+                sub[ax] += 1;
+                if sub[ax] <= levels.level(ax) {
+                    break;
+                }
+                sub[ax] = 1;
+                ax += 1;
+            }
+        }
+    }
+
+    /// Evaluate the hierarchical interpolant at `x` in `(0,1)^d`
+    /// (dimension 1 first).  O(total points) — for error measurement.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (l, vals) in &self.subspaces {
+            let d = l.dim();
+            debug_assert_eq!(d, x.len());
+            let st = subspace_strides(l);
+            // only one basis function per dimension is non-zero in W_l:
+            // the one whose support contains x
+            let mut w = 1.0;
+            let mut off = 0usize;
+            let mut dead = false;
+            for i in 0..d {
+                let h = 0.5f64.powi(l.level(i) as i32);
+                // odd index whose hat contains x_i
+                let cell = (x[i] / (2.0 * h)).floor();
+                let j = cell as isize; // subspace index
+                let njs = 1isize << (l.level(i) - 1);
+                if j < 0 || j >= njs {
+                    dead = true;
+                    break;
+                }
+                let center = (2 * j + 1) as f64 * h;
+                let phi = 1.0 - (x[i] - center).abs() / h;
+                if phi <= 0.0 {
+                    dead = true;
+                    break;
+                }
+                w *= phi;
+                off += j as usize * st[i];
+            }
+            if !dead {
+                acc += w * vals[off];
+            }
+        }
+        acc
+    }
+
+    /// Max-norm of the difference to a function sampled at `samples` points
+    /// from a deterministic low-discrepancy sequence (Halton, with an
+    /// irrational Cranley–Patterson rotation per dimension — plain base-2
+    /// Halton points are dyadic rationals, i.e. *grid points*, where the
+    /// interpolation error is identically zero).
+    pub fn max_error(&self, f: impl Fn(&[f64]) -> f64, dim: usize, samples: usize) -> f64 {
+        let mut worst = 0.0f64;
+        let mut x = vec![0.0f64; dim];
+        for s in 1..=samples {
+            for (i, xi) in x.iter_mut().enumerate() {
+                let h = halton(s as u32, PRIMES[i % PRIMES.len()]);
+                let r = (h + ROTATIONS[i % ROTATIONS.len()]).fract();
+                // keep strictly inside the domain
+                *xi = r.clamp(1e-9, 1.0 - 1e-9);
+            }
+            let e = (self.eval(&x) - f(&x)).abs();
+            worst = worst.max(e);
+        }
+        worst
+    }
+}
+
+const PRIMES: [u32; 10] = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29];
+
+/// Irrational per-dimension shifts (fractional parts of sqrt(primes)).
+const ROTATIONS: [f64; 10] = [
+    0.41421356237309515, // sqrt(2) - 1
+    0.7320508075688772,  // sqrt(3) - 1
+    0.23606797749978969, // sqrt(5) - 2
+    0.6457513110645906,  // sqrt(7) - 2
+    0.3166247903553998,  // sqrt(11) - 3
+    0.605551275463989,   // sqrt(13) - 3
+    0.12310562561766059, // sqrt(17) - 4
+    0.358898943540674,   // sqrt(19) - 4
+    0.7958315233127191,  // sqrt(23) - 4
+    0.385164807134504,   // sqrt(29) - 5
+];
+
+/// Halton low-discrepancy sequence member `i` in base `b`.
+fn halton(mut i: u32, b: u32) -> f64 {
+    let mut f = 1.0;
+    let mut r = 0.0;
+    while i > 0 {
+        f /= b as f64;
+        r += f * (i % b) as f64;
+        i /= b;
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchize::{func::Func, Hierarchizer};
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn subspace_sizes() {
+        assert_eq!(subspace_len(&LevelVector::new(&[1, 1])), 1);
+        assert_eq!(subspace_len(&LevelVector::new(&[3, 2])), 8);
+        assert_eq!(subspace_strides(&LevelVector::new(&[3, 2])), vec![1, 4]);
+    }
+
+    #[test]
+    fn gather_decomposes_full_grid_exactly() {
+        // gathering one hierarchized grid with coeff 1 must store every
+        // surplus; scatter must reproduce them bit-exactly.
+        let lv = LevelVector::new(&[3, 2]);
+        let mut g = FullGrid::new(lv.clone());
+        let mut rng = SplitMix64::new(1);
+        g.fill_with(|_| rng.next_f64());
+        Func.hierarchize(&mut g);
+        let mut sg = SparseGrid::new();
+        sg.gather(&g, 1.0);
+        assert_eq!(sg.point_count(), 21);
+        assert_eq!(sg.subspace_count(), 6); // 3 x-levels * 2 y-levels
+        let mut back = FullGrid::new(lv);
+        sg.scatter(&mut back);
+        assert_eq!(g.max_diff(&back), 0.0);
+    }
+
+    #[test]
+    fn eval_reproduces_interpolant_at_grid_points() {
+        let lv = LevelVector::new(&[2, 2]);
+        let mut g = FullGrid::new(lv.clone());
+        let mut rng = SplitMix64::new(2);
+        g.fill_with(|_| rng.next_f64());
+        let nodal = g.clone();
+        Func.hierarchize(&mut g);
+        let mut sg = SparseGrid::new();
+        sg.gather(&g, 1.0);
+        nodal.for_each(|pos, v| {
+            let x: Vec<f64> = pos
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| p as f64 * 0.5f64.powi(lv.level(i) as i32))
+                .collect();
+            assert!((sg.eval(&x) - v).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn eval_is_multilinear_between_points() {
+        // single subspace W_(1,1): hat(x)*hat(y) scaled by the surplus
+        let mut sg = SparseGrid::new();
+        sg.subspace_mut(&LevelVector::new(&[1, 1]))[0] = 2.0;
+        assert!((sg.eval(&[0.5, 0.5]) - 2.0).abs() < 1e-15);
+        assert!((sg.eval(&[0.25, 0.5]) - 1.0).abs() < 1e-15);
+        assert!((sg.eval(&[0.25, 0.25]) - 0.5).abs() < 1e-15);
+        assert_eq!(sg.eval(&[0.999999, 0.5]) < 1e-4, true);
+    }
+
+    #[test]
+    fn surplus_of_missing_subspace_is_zero() {
+        let sg = SparseGrid::new();
+        assert_eq!(sg.surplus(&[2, 1], &[1, 1]), 0.0);
+    }
+
+    #[test]
+    fn gather_accumulates_with_coefficients() {
+        let lv = LevelVector::new(&[2]);
+        let mut g = FullGrid::new(lv.clone());
+        g.from_canonical(&[0.0, 1.0, 0.0]); // root surplus only after hier
+        Func.hierarchize(&mut g);
+        let mut sg = SparseGrid::new();
+        sg.gather(&g, 1.0);
+        sg.gather(&g, -0.5);
+        assert!((sg.surplus(&[1], &[1]) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn halton_is_in_unit_interval_and_low_discrepancy() {
+        let xs: Vec<f64> = (1..=64).map(|i| halton(i, 2)).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        // first few base-2 members: 1/2, 1/4, 3/4, 1/8
+        assert_eq!(xs[0], 0.5);
+        assert_eq!(xs[1], 0.25);
+        assert_eq!(xs[2], 0.75);
+        assert_eq!(xs[3], 0.125);
+    }
+}

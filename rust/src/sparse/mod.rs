@@ -1,0 +1,21 @@
+//! The hierarchical-basis sparse grid: target of the CT communication phase.
+//!
+//! Storage is **subspace-dense**: the sparse grid is the union of
+//! hierarchical subspaces `W_l` (one per level vector `l`, holding the
+//! points with exactly those per-dimension sub-levels, i.e. all-odd level
+//! indices); each occupied subspace is a dense row-major array of
+//! `prod 2^(l_i - 1)` surpluses.  This gives O(1) keyed access per subspace
+//! plus dense inner loops for gather/scatter — and it is exactly the set
+//! structure the combination technique's inclusion–exclusion reasons about.
+//!
+//! * [`SparseGrid::gather`] accumulates a *hierarchized* combination grid,
+//!   scaled by its combination coefficient (the CT gather step, Fig. 2);
+//! * [`SparseGrid::scatter`] projects the sparse-grid surpluses back onto a
+//!   combination grid (points absent from the sparse grid get surplus 0 —
+//!   "hence interpolation is no longer necessary");
+//! * [`SparseGrid::eval`] interpolates at arbitrary points (hat tensor
+//!   products), the oracle for CT error measurement.
+
+mod grid;
+
+pub use grid::SparseGrid;

@@ -1,0 +1,6 @@
+//! Small self-contained utilities (the offline crate set has no `rand`,
+//! `proptest` or `serde`, so these are hand-rolled — see DESIGN.md §6).
+
+pub mod proptest;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,103 @@
+//! Minimal property-testing harness (the offline crate set has no
+//! `proptest`): deterministic seeds, many cases, and shrink-lite — on
+//! failure the failing seed is re-run with a reduced "size" parameter to
+//! report the smallest reproduction found.
+
+use super::rng::SplitMix64;
+
+/// Configuration for [`check`].
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: u32,
+    /// Base seed (each case derives its own).
+    pub seed: u64,
+    /// Maximum "size" hint passed to the generator (cases ramp up to it).
+    pub max_size: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0x5eed, max_size: 32 }
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` cases; `prop` returns
+/// `Err(description)` to signal a failure.
+///
+/// On failure, re-runs the same seed with sizes shrinking toward 1 and
+/// panics with the smallest size still failing — a poor man's shrinker that
+/// works well for size-indexed generators (grid levels, dimensions, ...).
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut SplitMix64, u32) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // ramp the size: early cases small, later cases up to max_size
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let case_seed = cfg.seed ^ (0x9E3779B9u64.wrapping_mul(case as u64 + 1));
+        let mut rng = SplitMix64::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink-lite: smallest size that still fails with this seed
+            let mut smallest = (size, msg);
+            let mut s = size;
+            while s > 1 {
+                s -= 1;
+                let mut rng = SplitMix64::new(case_seed);
+                if let Err(m) = prop(&mut rng, s) {
+                    smallest = (s, m);
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case}, seed {case_seed:#x}, \
+                 shrunk to size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Generate a random level vector: `dim` in 1..=max_dim, levels sized so the
+/// grid stays small enough for exhaustive checks.
+pub fn random_levels(rng: &mut SplitMix64, size: u32, max_dim: usize) -> Vec<u8> {
+    let dim = rng.next_range(1, max_dim as u64) as usize;
+    let max_level = (2 + size / 8).min(6) as u64;
+    (0..dim).map(|_| rng.next_range(1, max_level) as u8).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", Config::default(), |rng, _| {
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x = {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_shrink_info() {
+        check("always-fails", Config { cases: 3, ..Default::default() }, |_, _| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn random_levels_in_bounds() {
+        let mut rng = SplitMix64::new(1);
+        for size in [1, 16, 32] {
+            for _ in 0..50 {
+                let lv = random_levels(&mut rng, size, 5);
+                assert!(!lv.is_empty() && lv.len() <= 5);
+                assert!(lv.iter().all(|&l| (1..=6).contains(&l)));
+            }
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration tests of the full CT stack (native solvers; PJRT covered in
+//! `pjrt_integration.rs`).
+
+use sgct::combi::CombinationScheme;
+use sgct::coordinator::{Coordinator, PipelineConfig};
+use sgct::grid::LevelVector;
+use sgct::hierarchize::Variant;
+use sgct::solver::{stable_dt, HeatSolver, SineInit};
+
+fn sine(x: &[f64]) -> f64 {
+    x.iter().map(|&v| (std::f64::consts::PI * v).sin()).product()
+}
+
+#[test]
+fn ct_interpolation_converges_2d() {
+    let mut last = f64::INFINITY;
+    for n in [3u8, 5, 7] {
+        let mut c = Coordinator::new(PipelineConfig::new(CombinationScheme::regular(2, n)), sine);
+        c.combine();
+        let err = c.error_vs(sine, 300);
+        assert!(err < last, "n={n}: {err} !< {last}");
+        last = err;
+    }
+    assert!(last < 5e-4, "final error {last}");
+}
+
+#[test]
+fn ct_interpolation_converges_3d_and_4d() {
+    for d in [3usize, 4] {
+        let mut errs = Vec::new();
+        for n in [2u8, 4] {
+            let mut c =
+                Coordinator::new(PipelineConfig::new(CombinationScheme::regular(d, n)), sine);
+            c.combine();
+            errs.push(c.error_vs(sine, 200));
+        }
+        assert!(errs[1] < errs[0] / 2.0, "d={d}: {errs:?}");
+    }
+}
+
+#[test]
+fn iterated_heat_tracks_analytic_solution() {
+    let dim = 2;
+    let level = 5u8;
+    let steps = 8;
+    let scheme = CombinationScheme::regular(dim, level);
+    let dt = stable_dt(&LevelVector::isotropic(dim, level), 1.0, 0.5);
+    let mut cfg = PipelineConfig::new(scheme);
+    cfg.steps_per_iter = steps;
+    let mut c = Coordinator::new(cfg, sine);
+    let solver = HeatSolver { alpha: 1.0, dt };
+    for it in 0..5 {
+        c.iteration(&solver, it).unwrap();
+        let t_phys = dt * (steps * (it + 1)) as f64;
+        let decay = (-(dim as f64) * std::f64::consts::PI.powi(2) * t_phys).exp();
+        let rel = c.error_vs(|x| decay * sine(x), 200) / decay;
+        assert!(rel < 0.02, "iter {it}: relative error {rel}");
+    }
+}
+
+#[test]
+fn iterated_ct_error_not_worse_than_plain_ct() {
+    // the communication round must not corrupt the per-grid solutions:
+    // after scatter+dehierarchize, re-combining reproduces the sparse grid
+    let scheme = CombinationScheme::regular(2, 4);
+    let mut c = Coordinator::new(PipelineConfig::new(scheme), sine);
+    c.combine();
+    let e1 = c.error_vs(sine, 200);
+    c.scatter_and_dehierarchize();
+    c.hierarchize_and_gather();
+    let e2 = c.error_vs(sine, 200);
+    assert!((e1 - e2).abs() < 1e-10, "{e1} vs {e2}");
+}
+
+#[test]
+fn every_variant_drives_the_pipeline() {
+    for v in [Variant::Func, Variant::Ind, Variant::BfsOverVectorized, Variant::BfsRev] {
+        let mut cfg = PipelineConfig::new(CombinationScheme::regular(2, 4));
+        cfg.variant = v;
+        let mut c = Coordinator::new(cfg, sine);
+        c.combine();
+        let err = c.error_vs(sine, 100);
+        assert!(err < 0.02, "{}: {err}", v.paper_name());
+    }
+}
+
+#[test]
+fn multi_worker_equals_single_worker() {
+    let mk = |workers| {
+        let mut cfg = PipelineConfig::new(CombinationScheme::regular(3, 4));
+        cfg.workers = workers;
+        let mut c = Coordinator::new(cfg, sine);
+        c.combine();
+        let mut subs: Vec<(LevelVector, Vec<f64>)> =
+            c.sparse.iter().map(|(l, v)| (l.clone(), v.to_vec())).collect();
+        subs.sort_by(|a, b| a.0.cmp(&b.0));
+        subs
+    };
+    let a = mk(1);
+    let b = mk(4);
+    assert_eq!(a.len(), b.len());
+    for ((la, va), (lb, vb)) in a.iter().zip(&b) {
+        assert_eq!(la, lb);
+        for (x, y) in va.iter().zip(vb) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn solver_eigenmode_decay_on_anisotropic_grid() {
+    // the native solver must handle anisotropy exactly (per-axis h)
+    let lv = LevelVector::new(&[6, 2]);
+    let mut g = sgct::grid::FullGrid::new(lv.clone());
+    SineInit::fill(&mut g);
+    let dt = stable_dt(&lv, 1.0, 0.9);
+    let f = SineInit::step_factor(&lv, dt, 1.0);
+    let before = g.clone();
+    let solver = HeatSolver { alpha: 1.0, dt };
+    use sgct::solver::GridSolver;
+    solver.advance(&mut g, 3).unwrap();
+    let mut worst = 0.0f64;
+    before.for_each(|pos, v| worst = worst.max((g.get(pos) - f.powi(3) * v).abs()));
+    assert!(worst < 1e-10, "worst {worst}");
+}
+
+#[test]
+fn metrics_accumulate_over_iterations() {
+    let mut cfg = PipelineConfig::new(CombinationScheme::regular(2, 4));
+    cfg.steps_per_iter = 2;
+    let dt = stable_dt(&LevelVector::isotropic(2, 4), 1.0, 0.5);
+    let mut c = Coordinator::new(cfg, sine);
+    let solver = HeatSolver { alpha: 1.0, dt };
+    c.run(&solver, 3, |_| {}).unwrap();
+    let grids = c.grids().len() as u64;
+    assert_eq!(c.metrics.count("solve"), 3 * grids);
+    assert_eq!(c.metrics.count("hierarchize"), 3 * grids);
+    assert_eq!(c.metrics.count("gather"), 3 * grids);
+    assert_eq!(c.metrics.count("scatter"), 3 * grids);
+}

@@ -1,0 +1,146 @@
+//! Integration of the PJRT runtime: the AOT JAX/Pallas artifacts must agree
+//! with the native rust implementations — the L1/L2 <-> L3 contract.
+//!
+//! Requires `make artifacts`; each test skips (with a note) if the
+//! directory is missing so plain `cargo test` stays runnable.
+
+use std::path::PathBuf;
+
+use sgct::grid::{FullGrid, LevelVector};
+use sgct::hierarchize::Variant;
+use sgct::runtime::Runtime;
+use sgct::solver::{heat_step, stable_dt};
+use sgct::util::rng::SplitMix64;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = std::env::var_os("SGCT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+fn rand_grid(levels: &[u8], seed: u64) -> FullGrid {
+    let mut g = FullGrid::new(LevelVector::new(levels));
+    let mut rng = SplitMix64::new(seed);
+    g.fill_with(|_| rng.next_f64() - 0.5);
+    g
+}
+
+#[test]
+fn pjrt_hierarchize_matches_native() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    for levels in [&[5, 1][..], &[3, 3], &[2, 2, 2], &[1, 4]] {
+        if rt.manifest().find("hierarchize", &LevelVector::new(levels)).is_none() {
+            continue;
+        }
+        let mut want = rand_grid(levels, 9);
+        let mut got = want.clone();
+        Variant::Func.instance().hierarchize(&mut want);
+        rt.hierarchize(&mut got).unwrap();
+        let d = got.max_diff(&want);
+        assert!(d < 1e-10, "{levels:?}: pjrt differs by {d}");
+    }
+}
+
+#[test]
+fn pjrt_dehierarchize_roundtrip() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let levels = &[3, 2];
+    let orig = rand_grid(levels, 10);
+    let mut g = orig.clone();
+    rt.hierarchize(&mut g).unwrap();
+    rt.dehierarchize(&mut g).unwrap();
+    assert!(g.max_diff(&orig) < 1e-10);
+}
+
+#[test]
+fn pjrt_heat_step_matches_native_stencil() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let lv = LevelVector::new(&[3, 3]);
+    if rt.manifest().find("heat_step", &lv).is_none() {
+        eprintln!("SKIP: no heat_step artifact for {lv}");
+        return;
+    }
+    let dt = stable_dt(&lv, 1.0, 0.5);
+    let mut native = rand_grid(&[3, 3], 11);
+    let vals = native.to_canonical();
+    let got = rt.run_grid_dt(&format!("heat_step_{}", lv.tag()), &vals, dt).unwrap();
+    let mut scratch = Vec::new();
+    heat_step(&mut native, &mut scratch, dt, 1.0);
+    let want = native.to_canonical();
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-11, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pjrt_fused_solve_hier_equals_separate_phases() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let lv = LevelVector::new(&[3, 2]);
+    let Some(entry) = rt.manifest().solve_hier_entry() else {
+        eprintln!("SKIP: no solve_hier artifact");
+        return;
+    };
+    let Some(art) = rt.manifest().find(&entry, &lv) else {
+        eprintln!("SKIP: no {entry} artifact for {lv}");
+        return;
+    };
+    let steps = art.steps;
+    let dt = stable_dt(&lv, 1.0, 0.5);
+    let g0 = rand_grid(&[3, 2], 12);
+
+    // fused artifact: t steps + hierarchize in one execution
+    let fused =
+        rt.run_grid_dt(&format!("{entry}_{}", lv.tag()), &g0.to_canonical(), dt).unwrap();
+
+    // separate: native stencil, then native hierarchization
+    let mut sep = g0.clone();
+    let mut scratch = Vec::new();
+    for _ in 0..steps {
+        heat_step(&mut sep, &mut scratch, dt, 1.0);
+    }
+    Variant::Func.instance().hierarchize(&mut sep);
+    let want = sep.to_canonical();
+    for (a, b) in fused.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pjrt_executable_cache_reuses_compilations() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let lv = LevelVector::new(&[3, 2]);
+    let name = format!("hierarchize_{}", lv.tag());
+    let vals = vec![0.5; lv.total_points()];
+    rt.run_grid(&name, &vals).unwrap();
+    rt.run_grid(&name, &vals).unwrap();
+    rt.run_grid(&name, &vals).unwrap();
+    let st = rt.stats();
+    assert_eq!(st.compiles, 1, "compiled more than once");
+    assert_eq!(st.executions, 3);
+}
+
+#[test]
+fn pjrt_rejects_wrong_sized_input() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let err = rt.run_grid("hierarchize_3x2", &[1.0, 2.0]).unwrap_err();
+    assert!(format!("{err:#}").contains("grid size"));
+}
+
+#[test]
+fn pjrt_unknown_artifact_is_clean_error() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    assert!(rt.run_grid("hierarchize_31x31", &[0.0]).is_err());
+}

@@ -1,0 +1,205 @@
+//! Property-based invariants (hand-rolled harness, deterministic seeds):
+//! the repo-wide correctness contracts, fuzzed over random level vectors.
+
+use sgct::combi::CombinationScheme;
+use sgct::grid::{bfs_from_position, bfs_to_position, FullGrid, LevelVector};
+use sgct::hierarchize::{flops, prepare, Variant, ALL_VARIANTS};
+use sgct::sgpp::HashGrid;
+use sgct::sparse::SparseGrid;
+use sgct::util::proptest::{check, random_levels, Config};
+use sgct::util::rng::SplitMix64;
+
+fn random_grid(levels: &[u8], rng: &mut SplitMix64) -> FullGrid {
+    let mut g = FullGrid::new(LevelVector::new(levels));
+    g.fill_with(|_| rng.next_f64() - 0.5);
+    g
+}
+
+/// (a) every variant computes the same surpluses as `Func`.
+#[test]
+fn prop_variants_agree_with_func() {
+    check("variants-agree", Config { cases: 40, ..Default::default() }, |rng, size| {
+        let levels = random_levels(rng, size, 4);
+        let mut reference = random_grid(&levels, rng);
+        let input = reference.clone();
+        Variant::Func.instance().hierarchize(&mut reference);
+        for v in ALL_VARIANTS {
+            let h = v.instance();
+            let mut g = input.clone();
+            prepare(h, &mut g);
+            h.hierarchize(&mut g);
+            let d = g.max_diff(&reference);
+            if d > 1e-12 {
+                return Err(format!("{} differs by {d} on {levels:?}", h.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (b) dehierarchize . hierarchize == identity.
+#[test]
+fn prop_roundtrip_identity() {
+    check("roundtrip", Config { cases: 40, ..Default::default() }, |rng, size| {
+        let levels = random_levels(rng, size, 4);
+        let input = random_grid(&levels, rng);
+        let idx = (rng.next_below(ALL_VARIANTS.len() as u64)) as usize;
+        let h = ALL_VARIANTS[idx].instance();
+        let mut g = input.clone();
+        prepare(h, &mut g);
+        h.hierarchize(&mut g);
+        h.dehierarchize(&mut g);
+        let d = g.max_diff(&input);
+        if d > 1e-12 {
+            return Err(format!("{} roundtrip diff {d} on {levels:?}", h.name()));
+        }
+        Ok(())
+    });
+}
+
+/// (c) the BFS permutations are bijections with correct inverses.
+#[test]
+fn prop_bfs_bijection() {
+    check("bfs-bijection", Config::default(), |rng, _| {
+        let l = rng.next_range(1, 16) as u8;
+        let n = (1u32 << l) - 1;
+        let mut seen = vec![false; n as usize];
+        for p in 1..=n {
+            let r = bfs_from_position(l, p);
+            if r >= n || seen[r as usize] {
+                return Err(format!("l={l}: rank {r} duplicated/oob"));
+            }
+            seen[r as usize] = true;
+            if bfs_to_position(l, r) != p {
+                return Err(format!("l={l}: inverse broken at p={p}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (d) the corrected Eq. 1 matches the instrumented operation count.
+#[test]
+fn prop_flops_closed_form() {
+    check("flops", Config { cases: 100, ..Default::default() }, |rng, size| {
+        let levels = LevelVector::new(&random_levels(rng, size.min(20), 6));
+        let a = flops::flops(&levels);
+        let b = flops::count_instrumented(&levels);
+        if a != b {
+            return Err(format!("{levels:?}: closed {a:?} != instrumented {b:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// (e) hierarchization is linear: H(a*x + y) == a*H(x) + H(y).
+#[test]
+fn prop_linearity() {
+    check("linearity", Config { cases: 30, ..Default::default() }, |rng, size| {
+        let levels = random_levels(rng, size, 3);
+        let lv = LevelVector::new(&levels);
+        let a = 2.0 * rng.next_f64() - 1.0;
+        let x = random_grid(&levels, rng);
+        let y = random_grid(&levels, rng);
+        let mut combo = FullGrid::new(lv.clone());
+        let (xs, ys) = (x.as_slice().to_vec(), y.as_slice().to_vec());
+        for (i, v) in combo.as_mut_slice().iter_mut().enumerate() {
+            *v = a * xs[i] + ys[i];
+        }
+        let h = Variant::Ind.instance();
+        let (mut hx, mut hy, mut hc) = (x, y, combo);
+        h.hierarchize(&mut hx);
+        h.hierarchize(&mut hy);
+        h.hierarchize(&mut hc);
+        for i in 0..hc.as_slice().len() {
+            let want = a * hx.as_slice()[i] + hy.as_slice()[i];
+            if (hc.as_slice()[i] - want).abs() > 1e-10 {
+                return Err(format!("nonlinear at slot {i} on {levels:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (f) combination coefficients: inclusion-exclusion counts every sparse
+/// subspace exactly once (any d, n).
+#[test]
+fn prop_combination_inclusion_exclusion() {
+    check("inclusion-exclusion", Config { cases: 30, ..Default::default() }, |rng, _| {
+        let d = rng.next_range(1, 5) as usize;
+        let n = rng.next_range(1, 6) as u8;
+        let tau = rng.next_range(1, n as u64) as u8;
+        let s = CombinationScheme::truncated(d, n, tau);
+        s.validate().map_err(|sub| format!("d={d} n={n} tau={tau}: subspace {sub} miscounted"))
+    });
+}
+
+/// (g) gather . scatter is the identity on the sparse grid's range.
+#[test]
+fn prop_gather_scatter_fixpoint() {
+    check("gather-scatter", Config { cases: 25, ..Default::default() }, |rng, size| {
+        let levels = random_levels(rng, size, 3);
+        let lv = LevelVector::new(&levels);
+        let mut g = random_grid(&levels, rng);
+        Variant::Ind.instance().hierarchize(&mut g);
+        let mut sg = SparseGrid::new();
+        sg.gather(&g, 1.0);
+        let mut back = FullGrid::new(lv.clone());
+        sg.scatter(&mut back);
+        let mut sg2 = SparseGrid::new();
+        sg2.gather(&back, 1.0);
+        for (l, v) in sg.iter() {
+            let w = sg2.subspace(l).ok_or_else(|| format!("lost subspace {l}"))?;
+            for (a, b) in v.iter().zip(w) {
+                if (a - b).abs() > 1e-12 {
+                    return Err(format!("fixpoint broken in {l}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (h) the hash-grid (SGpp) hierarchization agrees with the array codes.
+#[test]
+fn prop_sgpp_agrees() {
+    check("sgpp-agrees", Config { cases: 25, ..Default::default() }, |rng, size| {
+        let levels = random_levels(rng, size, 3);
+        let mut want = random_grid(&levels, rng);
+        let mut hg = HashGrid::from_full_grid(&want);
+        Variant::Func.instance().hierarchize(&mut want);
+        hg.hierarchize();
+        let got = hg.to_full_grid(want.levels());
+        let d = got.max_diff(&want);
+        if d > 1e-12 {
+            return Err(format!("sgpp differs by {d} on {levels:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// (i) hierarchization of the zero grid is zero; of a single-subspace hat
+/// it leaves exactly that surplus (sanity anchors for the fuzz).
+#[test]
+fn prop_zero_and_delta() {
+    check("zero-delta", Config { cases: 20, ..Default::default() }, |rng, size| {
+        let levels = random_levels(rng, size, 3);
+        let lv = LevelVector::new(&levels);
+        let mut z = FullGrid::new(lv.clone());
+        Variant::BfsOverVectorized.instance();
+        let h = Variant::Ind.instance();
+        h.hierarchize(&mut z);
+        if z.as_slice().iter().any(|&v| v != 0.0) {
+            return Err("zero grid not preserved".into());
+        }
+        // delta at the root of every axis: surplus == nodal value there
+        let mut g = FullGrid::new(lv.clone());
+        let root: Vec<u32> = (0..lv.dim()).map(|i| 1u32 << (lv.level(i) - 1)).collect();
+        g.set(&root, 3.5);
+        h.hierarchize(&mut g);
+        if (g.get(&root) - 3.5).abs() > 1e-15 {
+            return Err("root surplus altered".into());
+        }
+        Ok(())
+    });
+}
