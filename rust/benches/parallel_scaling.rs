@@ -1,0 +1,140 @@
+//! Strong scaling of the sharded parallel hierarchization engine.
+//!
+//! Two sweeps over thread counts {1, 2, 4, 8, ...}:
+//!
+//! * **pole sharding** — one large anisotropic grid, sharded pole-wise
+//!   ([`ParallelHierarchizer`]) with the paper's best row variant inside;
+//! * **grid sharding** — a full combination scheme batched through
+//!   [`hierarchize_scheme`] with flop-weighted largest-first stealing.
+//!
+//! Reported per thread count: time per hierarchization, speedup vs the
+//! 1-thread run, and parallel efficiency.  Hierarchization is memory-bound
+//! at large sizes (OI ~ 1/8 flop/byte), so efficiency saturating below 1.0
+//! once the socket bandwidth is reached is the expected shape, not a bug.
+//!
+//! ```bash
+//! cargo bench --bench parallel_scaling            # default sizes
+//! SGCT_BENCH_QUICK=1 cargo bench --bench parallel_scaling   # CI smoke
+//! ```
+
+mod common;
+
+use common::*;
+use sgct::combi::CombinationScheme;
+use sgct::coordinator::{hierarchize_scheme, BatchOptions};
+use sgct::grid::{FullGrid, LevelVector};
+use sgct::hierarchize::{Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant};
+use sgct::perf::bench::{bench_on, BenchResult};
+use sgct::util::rng::SplitMix64;
+use sgct::util::table::{human_bytes, human_time, Table};
+
+fn thread_counts() -> Vec<usize> {
+    let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut counts = vec![1usize];
+    while counts.last().unwrap() * 2 <= max.max(8) {
+        counts.push(counts.last().unwrap() * 2);
+    }
+    counts
+}
+
+fn scaling_table(title: &str, results: &[(usize, BenchResult)]) {
+    println!("\n== {title} ==");
+    let base = &results[0].1;
+    let mut t = Table::new(vec!["threads", "time", "speedup", "efficiency"]);
+    for (threads, r) in results {
+        t.row(vec![
+            threads.to_string(),
+            human_time(r.secs),
+            format!("x{:.2}", r.speedup_vs(base)),
+            format!("{:.0}%", 100.0 * r.efficiency_vs(base, *threads)),
+        ]);
+    }
+    t.print();
+}
+
+/// Pole sharding: one big grid, the paper's headline variant inside.
+fn pole_scaling() {
+    let levels = if quick() {
+        LevelVector::new(&[9, 9])
+    } else {
+        LevelVector::new(&[12, 11])
+    };
+    let inner = Variant::BfsOverVectorizedPreBranched;
+    println!(
+        "\npole sharding: grid {} ({}, {} points), inner variant {}",
+        levels,
+        human_bytes(levels.size_bytes()),
+        levels.total_points(),
+        inner.paper_name()
+    );
+    let pristine = grid_for(&levels, inner.instance().layout(), 42);
+    let mut results = Vec::new();
+    for threads in thread_counts() {
+        let p = ParallelHierarchizer::new(inner, threads);
+        let mut g = pristine.clone();
+        let r = bench_on(
+            &format!("pole x{threads}"),
+            config(),
+            &mut g,
+            |g| g.clone_from(&pristine),
+            |g| p.hierarchize(g),
+        );
+        results.push((threads, r));
+    }
+    scaling_table("pole-sharded strong scaling (one grid)", &results);
+}
+
+/// Grid sharding: a whole combination scheme through the pool.
+fn grid_scaling() {
+    let (dim, level) = if quick() { (3usize, 5u8) } else { (4usize, 7u8) };
+    let scheme = CombinationScheme::regular(dim, level);
+    println!(
+        "\ngrid sharding: scheme d={dim} n={level} ({} grids, {} points, ~{} flops)",
+        scheme.len(),
+        scheme.total_points(),
+        scheme.total_flops()
+    );
+    let pristine: Vec<FullGrid> = scheme
+        .components()
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let mut g = FullGrid::new(c.levels.clone());
+            let mut rng = SplitMix64::new(7 + i as u64);
+            g.fill_with(|_| rng.next_f64() - 0.5);
+            // pre-convert to the auto-selected variant's layout so the
+            // timed region measures hierarchization, not layout conversion
+            g.convert_all(sgct::hierarchize::auto_variant(&c.levels).instance().layout());
+            g
+        })
+        .collect();
+    let mut results = Vec::new();
+    for threads in thread_counts() {
+        let opts = BatchOptions {
+            threads,
+            strategy: ShardStrategy::Grid,
+            variant: None,
+            to_position: false, // keep the hot path free of layout round-trips
+        };
+        let mut grids = pristine.clone();
+        let r = bench_on(
+            &format!("grid x{threads}"),
+            config(),
+            &mut grids,
+            |grids| grids.clone_from_slice(&pristine),
+            |grids| {
+                hierarchize_scheme(&scheme, grids, &opts);
+            },
+        );
+        results.push((threads, r));
+    }
+    scaling_table("grid-sharded strong scaling (scheme batch)", &results);
+}
+
+fn main() {
+    println!("sharded parallel hierarchization — strong scaling");
+    pole_scaling();
+    grid_scaling();
+    println!("\n(speedup vs 1 thread; memory-bound saturation above the socket");
+    println!(" bandwidth is expected — compare perf::stream::host_bandwidth)");
+}

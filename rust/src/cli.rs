@@ -73,6 +73,23 @@ impl Args {
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
+
+    /// Thread-count option: a positive number, or `auto` for all hardware
+    /// threads (`--threads 8`, `--threads auto`).
+    pub fn threads(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some("auto") => {
+                Ok(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+            }
+            Some(s) => {
+                let v: usize =
+                    s.parse().map_err(|e| anyhow::anyhow!("--{name} {s:?}: {e}"))?;
+                anyhow::ensure!(v >= 1, "--{name} must be >= 1");
+                Ok(v)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -116,5 +133,14 @@ mod tests {
     fn empty_command() {
         let a = parse("");
         assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn threads_option() {
+        assert_eq!(parse("x --threads 6").threads("threads", 1).unwrap(), 6);
+        assert_eq!(parse("x").threads("threads", 2).unwrap(), 2);
+        assert!(parse("x --threads auto").threads("threads", 1).unwrap() >= 1);
+        assert!(parse("x --threads 0").threads("threads", 1).is_err());
+        assert!(parse("x --threads many").threads("threads", 1).is_err());
     }
 }

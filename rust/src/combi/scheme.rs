@@ -111,6 +111,29 @@ impl CombinationScheme {
         self.components.iter().map(|c| c.levels.total_points()).sum()
     }
 
+    /// Estimated hierarchization flops of component `i` (corrected Eq. 1) —
+    /// the shard planner's per-grid load measure.
+    pub fn component_flops(&self, i: usize) -> u64 {
+        crate::hierarchize::flops::flops(&self.components[i].levels).total()
+    }
+
+    /// Total estimated hierarchization flops across the scheme.
+    pub fn total_flops(&self) -> u64 {
+        (0..self.components.len()).map(|i| self.component_flops(i)).sum()
+    }
+
+    /// Largest-first component order (LPT greedy): feeding a work-stealing
+    /// pool in this order bounds the makespan at 4/3 of optimal, instead of
+    /// letting a huge grid arrive last and serialize the tail.  Stable sort
+    /// on the flop estimate, so the order is deterministic.
+    pub fn balance_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.components.len()).collect();
+        // cached key: the flop estimate walks the level vector, no need to
+        // re-derive it on every comparison
+        order.sort_by_cached_key(|&i| std::cmp::Reverse(self.component_flops(i)));
+        order
+    }
+
     /// All subspaces of the union sparse grid (every `s` contained in at
     /// least one component grid).
     pub fn sparse_subspaces(&self) -> Vec<LevelVector> {
@@ -241,5 +264,24 @@ mod tests {
         // O(d * l^(d-1)) grids
         let s = CombinationScheme::regular(2, 10);
         assert_eq!(s.len(), 10 + 9);
+    }
+
+    #[test]
+    fn balance_order_is_descending_permutation() {
+        let s = CombinationScheme::regular(3, 5);
+        let order = s.balance_order();
+        assert_eq!(order.len(), s.len());
+        let mut seen = vec![false; s.len()];
+        for &i in &order {
+            assert!(!seen[i], "index {i} repeated");
+            seen[i] = true;
+        }
+        for w in order.windows(2) {
+            assert!(
+                s.component_flops(w[0]) >= s.component_flops(w[1]),
+                "order not largest-first at {w:?}"
+            );
+        }
+        assert_eq!(s.total_flops(), order.iter().map(|&i| s.component_flops(i)).sum::<u64>());
     }
 }

@@ -1,0 +1,282 @@
+//! Batched scheme-level hierarchization: every component grid of a
+//! combination scheme through the worker pool in one call.
+//!
+//! Harding et al. identify the component grid as the natural unit of
+//! parallelism of the combination technique; [`hierarchize_scheme`] exploits
+//! exactly that.  The shard planner weighs each grid by its corrected-Eq.-1
+//! flop estimate (`CombinationScheme::component_flops`) and feeds the pool
+//! largest-first (LPT), or — when a batch has fewer grids than threads —
+//! switches to pole-level sharding inside each grid
+//! ([`ParallelHierarchizer`]).  Per-grid variants are auto-selected from the
+//! grid shape ([`auto_variant`]) unless pinned.
+//!
+//! Determinism: hierarchization is per-grid independent (no cross-grid
+//! reduction), and the pole-sharded engine is bitwise identical to the
+//! serial variant, so the output is bitwise independent of the strategy and
+//! thread count.
+
+use crate::combi::CombinationScheme;
+use crate::grid::{AxisLayout, FullGrid};
+use crate::hierarchize::{auto_variant, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant};
+use crate::perf::CycleTimer;
+
+use super::pool::parallel_grids_ordered;
+
+/// Options for [`hierarchize_scheme`] / [`dehierarchize_scheme`].
+#[derive(Debug, Clone, Copy)]
+pub struct BatchOptions {
+    /// Worker threads (1 = inline, no spawn).
+    pub threads: usize,
+    /// Sharding across the batch; `Auto` resolves per batch shape.
+    pub strategy: ShardStrategy,
+    /// Pin one variant for every grid; `None` = per-grid auto-selection.
+    pub variant: Option<Variant>,
+    /// Convert grids back to position layout afterwards (the canonical
+    /// exchange format).  Skip when a layout-aware consumer (gather) runs
+    /// next.
+    pub to_position: bool,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        Self {
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            strategy: ShardStrategy::Auto,
+            variant: None,
+            to_position: true,
+        }
+    }
+}
+
+/// What the planner decided for one component grid.
+#[derive(Debug, Clone)]
+pub struct GridTask {
+    /// Component index in scheme order.
+    pub index: usize,
+    /// The variant that hierarchized this grid.
+    pub variant: Variant,
+    /// Estimated flops (corrected Eq. 1) — the load-balance weight.
+    pub flops: u64,
+}
+
+/// Report of one batched run.
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    /// Per-grid decisions, in scheme order.
+    pub tasks: Vec<GridTask>,
+    /// The strategy actually executed (`Auto` resolved).
+    pub strategy: ShardStrategy,
+    pub threads: usize,
+    pub secs: f64,
+    /// Scheme-wide flop estimate (for GFLOP/s reporting).
+    pub total_flops: u64,
+}
+
+fn plan(scheme: &CombinationScheme, opts: &BatchOptions) -> Vec<GridTask> {
+    scheme
+        .components()
+        .iter()
+        .enumerate()
+        .map(|(index, c)| GridTask {
+            index,
+            variant: opts.variant.unwrap_or_else(|| auto_variant(&c.levels)),
+            flops: scheme.component_flops(index),
+        })
+        .collect()
+}
+
+fn check_batch(scheme: &CombinationScheme, grids: &[FullGrid]) {
+    assert_eq!(grids.len(), scheme.len(), "one grid per scheme component");
+    for (g, c) in grids.iter().zip(scheme.components()) {
+        assert_eq!(g.levels(), &c.levels, "grid does not match its scheme component");
+    }
+}
+
+fn run_batch(
+    scheme: &CombinationScheme,
+    grids: &mut [FullGrid],
+    opts: &BatchOptions,
+    up: bool,
+) -> BatchReport {
+    check_batch(scheme, grids);
+    let threads = opts.threads.max(1);
+    let strategy = opts.strategy.resolve(grids.len(), threads);
+    let tasks = plan(scheme, opts);
+    let order = scheme.balance_order();
+    let t = CycleTimer::start();
+    match strategy {
+        ShardStrategy::Grid => {
+            let tasks = &tasks;
+            parallel_grids_ordered(grids, threads, &order, |i, g| {
+                let h = tasks[i].variant.instance();
+                g.convert_all(h.layout());
+                if up {
+                    h.dehierarchize(g);
+                } else {
+                    h.hierarchize(g);
+                }
+                if opts.to_position {
+                    g.convert_all(AxisLayout::Position);
+                }
+            });
+        }
+        // Pole (and the unreachable unresolved Auto): grids in sequence,
+        // each sharded pole-wise across the full pool
+        _ => {
+            for &i in &order {
+                let p = ParallelHierarchizer::new(tasks[i].variant, threads);
+                let g = &mut grids[i];
+                g.convert_all(p.layout());
+                if up {
+                    p.dehierarchize(g);
+                } else {
+                    p.hierarchize(g);
+                }
+                if opts.to_position {
+                    g.convert_all(AxisLayout::Position);
+                }
+            }
+        }
+    }
+    BatchReport {
+        tasks,
+        strategy,
+        threads,
+        secs: t.elapsed_secs(),
+        total_flops: scheme.total_flops(),
+    }
+}
+
+/// Hierarchize every component grid of `scheme` through the worker pool.
+///
+/// `grids[i]` must belong to `scheme.components()[i]` (as built by
+/// `Coordinator::new`).  Output is bitwise independent of strategy and
+/// thread count.
+pub fn hierarchize_scheme(
+    scheme: &CombinationScheme,
+    grids: &mut [FullGrid],
+    opts: &BatchOptions,
+) -> BatchReport {
+    run_batch(scheme, grids, opts, false)
+}
+
+/// Inverse of [`hierarchize_scheme`]: surpluses back to nodal values.
+pub fn dehierarchize_scheme(
+    scheme: &CombinationScheme,
+    grids: &mut [FullGrid],
+    opts: &BatchOptions,
+) -> BatchReport {
+    run_batch(scheme, grids, opts, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchize::Variant;
+    use crate::util::rng::SplitMix64;
+
+    fn scheme_grids(scheme: &CombinationScheme) -> Vec<FullGrid> {
+        scheme
+            .components()
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let mut g = FullGrid::new(c.levels.clone());
+                let mut rng = SplitMix64::new(1000 + i as u64);
+                g.fill_with(|_| rng.next_f64() - 0.5);
+                g
+            })
+            .collect()
+    }
+
+    /// The acceptance case: a level-6, d=4 scheme through the worker pool.
+    #[test]
+    fn level6_d4_scheme_matches_serial_reference() {
+        let scheme = CombinationScheme::regular(4, 6);
+        assert!(scheme.len() > 100, "expected a real batch, got {}", scheme.len());
+        let input = scheme_grids(&scheme);
+
+        // serial reference: every grid through Func, position layout
+        let reference: Vec<FullGrid> = input
+            .iter()
+            .map(|g| {
+                let mut r = g.clone();
+                Variant::Func.instance().hierarchize(&mut r);
+                r
+            })
+            .collect();
+
+        let mut grids = input.clone();
+        let opts = BatchOptions { threads: 4, ..Default::default() };
+        let report = hierarchize_scheme(&scheme, &mut grids, &opts);
+        assert_eq!(report.tasks.len(), scheme.len());
+        assert_eq!(report.strategy, ShardStrategy::Grid, "121 grids >= 4 threads");
+        assert!(report.total_flops > 0);
+        for (i, (got, want)) in grids.iter().zip(&reference).enumerate() {
+            let d = got.max_diff(want);
+            assert!(
+                d < 1e-12,
+                "grid {i} ({}) differs from Func by {d}",
+                report.tasks[i].variant.paper_name()
+            );
+        }
+    }
+
+    #[test]
+    fn strategies_and_thread_counts_agree_bitwise() {
+        let scheme = CombinationScheme::regular(3, 4);
+        let input = scheme_grids(&scheme);
+
+        // reference: threads = 1 (inline, serial)
+        let mut reference = input.clone();
+        let base = BatchOptions { threads: 1, strategy: ShardStrategy::Grid, ..Default::default() };
+        hierarchize_scheme(&scheme, &mut reference, &base);
+
+        for strategy in [ShardStrategy::Grid, ShardStrategy::Pole, ShardStrategy::Auto] {
+            for threads in [1usize, 2, 4, 8] {
+                let mut grids = input.clone();
+                let opts = BatchOptions { threads, strategy, ..Default::default() };
+                hierarchize_scheme(&scheme, &mut grids, &opts);
+                for (i, (got, want)) in grids.iter().zip(&reference).enumerate() {
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "grid {i} not bitwise under {strategy} x{threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_roundtrip_recovers_nodal_values() {
+        let scheme = CombinationScheme::regular(3, 5);
+        let input = scheme_grids(&scheme);
+        let mut grids = input.clone();
+        let opts = BatchOptions { threads: 4, ..Default::default() };
+        hierarchize_scheme(&scheme, &mut grids, &opts);
+        dehierarchize_scheme(&scheme, &mut grids, &opts);
+        for (i, (got, want)) in grids.iter().zip(&input).enumerate() {
+            let d = got.max_diff(want);
+            assert!(d < 1e-10, "grid {i} roundtrip diff {d}");
+        }
+    }
+
+    #[test]
+    fn pinned_variant_overrides_auto_selection() {
+        let scheme = CombinationScheme::regular(2, 3);
+        let mut grids = scheme_grids(&scheme);
+        let opts = BatchOptions { threads: 2, variant: Some(Variant::Ind), ..Default::default() };
+        let report = hierarchize_scheme(&scheme, &mut grids, &opts);
+        assert!(report.tasks.iter().all(|t| t.variant == Variant::Ind));
+    }
+
+    #[test]
+    #[should_panic(expected = "one grid per scheme component")]
+    fn wrong_batch_size_is_rejected() {
+        let scheme = CombinationScheme::regular(2, 3);
+        let mut grids = scheme_grids(&scheme);
+        grids.pop();
+        hierarchize_scheme(&scheme, &mut grids, &BatchOptions::default());
+    }
+}

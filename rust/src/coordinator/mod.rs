@@ -16,12 +16,20 @@
 //! The coordinator owns the process topology (leader + worker threads),
 //! per-phase metrics, and the CT state.  PJRT execution stays on the leader
 //! thread (the `xla` handles are not `Send`); the pure-rust phases fan out.
+//!
+//! Sharding: the hierarchize/dehierarchize phases run either grid-level
+//! (one component grid per work item, flop-weighted largest-first stealing)
+//! or pole-level (each grid sharded across the whole pool via
+//! `hierarchize::parallel`) — see [`PipelineConfig::shard`] and the
+//! standalone batched entry point [`hierarchize_scheme`].
 
+mod batch;
 pub mod distributed;
 mod metrics;
 mod pipeline;
 mod pool;
 
+pub use batch::{dehierarchize_scheme, hierarchize_scheme, BatchOptions, BatchReport, GridTask};
 pub use metrics::Metrics;
 pub use pipeline::{Coordinator, IterationReport, PipelineConfig};
-pub use pool::{parallel_grids, parallel_grids_streamed};
+pub use pool::{parallel_grids, parallel_grids_ordered, parallel_grids_streamed};

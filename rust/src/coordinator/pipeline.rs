@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use crate::combi::CombinationScheme;
 use crate::grid::{AxisLayout, FullGrid};
-use crate::hierarchize::Variant;
+use crate::hierarchize::{Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant};
 use crate::perf::CycleTimer;
 use crate::solver::GridSolver;
 use crate::sparse::SparseGrid;
@@ -27,6 +27,10 @@ pub struct PipelineConfig {
     pub workers: usize,
     /// Capacity of the hierarchize->gather channel (backpressure bound).
     pub gather_queue: usize,
+    /// How the hierarchize/dehierarchize phases shard across the pool:
+    /// grid-level work stealing (default, the seed behavior), pole-level
+    /// sharding inside each grid, or auto-resolution per batch shape.
+    pub shard: ShardStrategy,
 }
 
 impl PipelineConfig {
@@ -37,6 +41,7 @@ impl PipelineConfig {
             variant: Variant::BfsOverVectorized,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             gather_queue: 4,
+            shard: ShardStrategy::Grid,
         }
     }
 }
@@ -101,12 +106,39 @@ impl Coordinator {
         let t = CycleTimer::start();
         let variant = self.cfg.variant.instance();
         self.sparse.clear();
+        let n = self.grids.len();
+        // full thread budget for strategy resolution and pole sharding;
+        // only the grid-level spawn loop is capped at the grid count
+        let threads = self.cfg.workers.max(1);
+        let workers = threads.min(n).max(1);
+        // largest grid first (LPT): a huge grid arriving last would
+        // serialize the tail of the phase
+        let order = self.cfg.scheme.balance_order();
+
+        if self.cfg.shard.resolve(n, threads) == ShardStrategy::Pole {
+            // few grids, many threads: shard each grid pole-wise across the
+            // whole pool instead; gather runs inline on the leader (and in
+            // a fixed order, so this mode is FP-deterministic end to end)
+            let p = ParallelHierarchizer::new(self.cfg.variant, threads);
+            let coeffs = &self.coeffs;
+            let sparse = &mut self.sparse;
+            let metrics = &self.metrics;
+            for &i in &order {
+                let g = &mut self.grids[i];
+                metrics.time("hierarchize", || {
+                    g.convert_all(variant.layout());
+                    p.hierarchize(g);
+                });
+                metrics.time("gather", || sparse.gather(g, coeffs[i]));
+            }
+            self.metrics.record("hierarchize+gather", t.elapsed_secs());
+            return;
+        }
+
         let (tx, rx) = sync_channel::<usize>(self.cfg.gather_queue.max(1));
         let coeffs = &self.coeffs;
         let sparse = &mut self.sparse;
         let metrics = &self.metrics;
-        let n = self.grids.len();
-        let workers = self.cfg.workers.min(n).max(1);
         // All grid access below goes through one raw pointer: each index is
         // claimed exactly once by a worker (unique &mut), and the leader
         // reads a grid only after its index arrived over the channel
@@ -116,13 +148,15 @@ impl Coordinator {
         std::thread::scope(|s| {
             for _ in 0..workers {
                 let tx = tx.clone();
-                let (ptr, next) = (&ptr, &next);
+                let (ptr, next, order) = (&ptr, &next, &order);
                 s.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= n {
                         break;
                     }
-                    // SAFETY: i claimed exactly once -> unique &mut
+                    let i = order[k];
+                    // SAFETY: order is a permutation, so i is claimed
+                    // exactly once -> unique &mut
                     let g = unsafe { &mut *ptr.0.add(i) };
                     metrics.time("hierarchize", || {
                         g.convert_all(variant.layout());
@@ -151,21 +185,39 @@ impl Coordinator {
     pub fn scatter_and_dehierarchize(&mut self) {
         let t = CycleTimer::start();
         let variant = self.cfg.variant.instance();
+        let n = self.grids.len();
+        let threads = self.cfg.workers.max(1);
         let sparse = &self.sparse;
         let metrics = &self.metrics;
-        parallel_grids(&mut self.grids, self.cfg.workers, |_, g| {
-            // grids arrive still in the variant's layout (see
-            // hierarchize_and_gather); scatter writes straight into it
-            metrics.time("scatter", || {
-                g.convert_all(variant.layout());
-                sparse.scatter(g);
+        if self.cfg.shard.resolve(n, threads) == ShardStrategy::Pole {
+            // mirror of the pole-sharded hierarchize phase: grids in
+            // sequence, each dehierarchized across the whole pool
+            let p = ParallelHierarchizer::new(self.cfg.variant, threads);
+            for g in &mut self.grids {
+                metrics.time("scatter", || {
+                    g.convert_all(variant.layout());
+                    sparse.scatter(g);
+                });
+                metrics.time("dehierarchize", || {
+                    p.dehierarchize(g);
+                    g.convert_all(AxisLayout::Position);
+                });
+            }
+        } else {
+            parallel_grids(&mut self.grids, self.cfg.workers, |_, g| {
+                // grids arrive still in the variant's layout (see
+                // hierarchize_and_gather); scatter writes straight into it
+                metrics.time("scatter", || {
+                    g.convert_all(variant.layout());
+                    sparse.scatter(g);
+                });
+                metrics.time("dehierarchize", || {
+                    variant.dehierarchize(g);
+                    // back to position layout for the solver / PJRT marshalling
+                    g.convert_all(AxisLayout::Position);
+                });
             });
-            metrics.time("dehierarchize", || {
-                variant.dehierarchize(g);
-                // back to position layout for the solver / PJRT marshalling
-                g.convert_all(AxisLayout::Position);
-            });
-        });
+        }
         self.metrics.record("scatter+dehierarchize", t.elapsed_secs());
     }
 
@@ -287,6 +339,47 @@ mod tests {
         assert!(c.metrics.count("solve") > 0);
         assert!(c.metrics.count("hierarchize") > 0);
         assert!(c.metrics.count("gather") > 0);
+    }
+
+    #[test]
+    fn pole_sharding_matches_grid_sharding() {
+        let mk = |shard| {
+            let mut cfg = PipelineConfig::new(CombinationScheme::regular(2, 4));
+            cfg.workers = 4;
+            cfg.shard = shard;
+            let mut c = Coordinator::new(cfg, product_parabola);
+            c.combine();
+            let mut subs: Vec<(crate::grid::LevelVector, Vec<f64>)> =
+                c.sparse.iter().map(|(l, v)| (l.clone(), v.to_vec())).collect();
+            subs.sort_by(|a, b| a.0.cmp(&b.0));
+            subs
+        };
+        let a = mk(ShardStrategy::Grid);
+        let b = mk(ShardStrategy::Pole);
+        assert_eq!(a.len(), b.len());
+        for ((la, va), (lb, vb)) in a.iter().zip(&b) {
+            assert_eq!(la, lb);
+            for (x, y) in va.iter().zip(vb) {
+                assert!((x - y).abs() < 1e-12, "subspace {la}");
+            }
+        }
+    }
+
+    #[test]
+    fn pole_sharded_iteration_runs_and_converges() {
+        let scheme = CombinationScheme::regular(2, 4);
+        let dt = crate::solver::stable_dt(&scheme.components()[0].levels.clone(), 1.0, 0.5) * 0.1;
+        let mut cfg = PipelineConfig { steps_per_iter: 2, ..PipelineConfig::new(scheme) };
+        cfg.shard = ShardStrategy::Pole;
+        cfg.workers = 4;
+        let mut c = Coordinator::new(cfg, |x| {
+            x.iter().map(|&xi| (std::f64::consts::PI * xi).sin()).product()
+        });
+        let solver = HeatSolver { alpha: 1.0, dt };
+        let reports = c.run(&solver, 2, |_| {}).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert!(c.metrics.count("hierarchize") > 0);
+        assert!(c.metrics.count("dehierarchize") > 0);
     }
 
     #[test]

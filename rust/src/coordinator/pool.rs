@@ -47,6 +47,52 @@ where
     });
 }
 
+/// Like [`parallel_grids`] but indices are claimed in the given `order`
+/// (e.g. `CombinationScheme::balance_order`'s largest-first sequence, so a
+/// big grid cannot arrive last and serialize the tail).
+///
+/// # Panics
+/// If `order` is not a permutation of `0..grids.len()` — the uniqueness of
+/// each index is what makes the shared `&mut` access sound.
+pub fn parallel_grids_ordered<F>(grids: &mut [FullGrid], workers: usize, order: &[usize], f: F)
+where
+    F: Fn(usize, &mut FullGrid) + Sync,
+{
+    let n = grids.len();
+    assert_eq!(order.len(), n, "order must cover every grid");
+    let mut seen = vec![false; n];
+    for &i in order {
+        assert!(i < n && !seen[i], "order is not a permutation (index {i})");
+        seen[i] = true;
+    }
+    if workers <= 1 || n <= 1 {
+        for &i in order {
+            f(i, &mut grids[i]);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let ptr = GridsPtr(grids.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(n) {
+            s.spawn(|| {
+                let ptr = &ptr;
+                loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= n {
+                        break;
+                    }
+                    let i = order[k];
+                    // SAFETY: `order` is a verified permutation, so index i
+                    // is claimed exactly once (see GridsPtr)
+                    let g = unsafe { &mut *ptr.0.add(i) };
+                    f(i, g);
+                }
+            });
+        }
+    });
+}
+
 /// Like [`parallel_grids`] but every finished index is streamed into `done`
 /// (a bounded channel: sending blocks when the consumer lags — the
 /// pipeline's backpressure).  Used by hierarchize->gather overlap.
@@ -119,6 +165,25 @@ mod tests {
         let mut gs = grids(3);
         parallel_grids(&mut gs, 1, |i, g| g.as_mut_slice()[0] = i as f64);
         assert_eq!(gs[2].as_slice()[0], 2.0);
+    }
+
+    #[test]
+    fn ordered_visits_every_grid_once() {
+        let mut gs = grids(11);
+        let order: Vec<usize> = (0..11).rev().collect();
+        parallel_grids_ordered(&mut gs, 3, &order, |i, g| {
+            g.as_mut_slice()[0] += (i + 1) as f64;
+        });
+        for (i, g) in gs.iter().enumerate() {
+            assert_eq!(g.as_slice()[0], (i + 1) as f64);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not a permutation")]
+    fn ordered_rejects_duplicate_indices() {
+        let mut gs = grids(3);
+        parallel_grids_ordered(&mut gs, 2, &[0, 0, 1], |_, _| {});
     }
 
     #[test]

@@ -59,7 +59,7 @@ fn rev_rank(l: u8, h: u32) -> usize {
 }
 
 #[inline]
-fn pole_hierarchize_rev(data: &mut [f64], base: usize, st: usize, l: u8) {
+pub(crate) fn pole_hierarchize_rev(data: &mut [f64], base: usize, st: usize, l: u8) {
     for lev in (2..=l).rev() {
         let first = 1u32 << (lev - 1);
         let last = (1u32 << lev) - 1;
@@ -78,7 +78,7 @@ fn pole_hierarchize_rev(data: &mut [f64], base: usize, st: usize, l: u8) {
 }
 
 #[inline]
-fn pole_dehierarchize_rev(data: &mut [f64], base: usize, st: usize, l: u8) {
+pub(crate) fn pole_dehierarchize_rev(data: &mut [f64], base: usize, st: usize, l: u8) {
     for lev in 2..=l {
         let first = 1u32 << (lev - 1);
         let last = (1u32 << lev) - 1;

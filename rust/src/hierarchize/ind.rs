@@ -139,6 +139,44 @@ impl Hierarchizer for IndReducedOp {
 /// tree climbing at all.  Dimension 1 falls back to the scalar pole loop.
 pub struct IndVectorized;
 
+/// One outer block of the vectorized `Ind` sweep for a working dimension
+/// >= 2: all `w`-wide rows in `[ob, ob + w * (2^l - 1))`, navigated by
+/// position arithmetic.  Blocks are disjoint in storage, which is what lets
+/// `hierarchize::parallel` shard a dimension across the worker pool while
+/// staying bitwise identical to the serial sweep.
+pub(crate) fn vec_rows_block(
+    data: &mut [f64],
+    ob: usize,
+    w: usize,
+    l: u8,
+    up: bool,
+    k: simd::RowKernels,
+) {
+    let end = 1usize << l;
+    let row = |pos: usize| ob + (pos - 1) * w;
+    let subs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
+    for lev in subs {
+        let s = 1usize << (l - lev);
+        if up {
+            (k.add1)(data, row(s), row(2 * s), w);
+            (k.add1)(data, row(end - s), row(end - 2 * s), w);
+            let mut pos = 3 * s;
+            while pos + s < end {
+                (k.add2)(data, row(pos), row(pos - s), row(pos + s), w);
+                pos += 2 * s;
+            }
+        } else {
+            (k.sub1)(data, row(s), row(2 * s), w);
+            (k.sub1)(data, row(end - s), row(end - 2 * s), w);
+            let mut pos = 3 * s;
+            while pos + s < end {
+                (k.sub2)(data, row(pos), row(pos - s), row(pos + s), w);
+                pos += 2 * s;
+            }
+        }
+    }
+}
+
 fn sweep_vectorized(g: &mut FullGrid, up: bool) {
     let d = g.dim();
     let k = simd::kernels();
@@ -159,32 +197,8 @@ fn sweep_vectorized(g: &mut FullGrid, up: bool) {
             }
             continue;
         }
-        let w = poles.inner; // row width: all faster axes, contiguous
-        let end = 1usize << l;
         for outer in 0..poles.outer {
-            let ob = outer * poles.outer_step;
-            let row = |pos: usize| ob + (pos - 1) * w;
-            let subs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
-            for lev in subs {
-                let s = 1usize << (l - lev);
-                if up {
-                    (k.add1)(data, row(s), row(2 * s), w);
-                    (k.add1)(data, row(end - s), row(end - 2 * s), w);
-                    let mut pos = 3 * s;
-                    while pos + s < end {
-                        (k.add2)(data, row(pos), row(pos - s), row(pos + s), w);
-                        pos += 2 * s;
-                    }
-                } else {
-                    (k.sub1)(data, row(s), row(2 * s), w);
-                    (k.sub1)(data, row(end - s), row(end - 2 * s), w);
-                    let mut pos = 3 * s;
-                    while pos + s < end {
-                        (k.sub2)(data, row(pos), row(pos - s), row(pos + s), w);
-                        pos += 2 * s;
-                    }
-                }
-            }
+            vec_rows_block(data, outer * poles.outer_step, poles.inner, l, up, k);
         }
     }
 }

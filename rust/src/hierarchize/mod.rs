@@ -25,10 +25,13 @@ pub mod flops;
 pub mod func;
 pub mod ind;
 pub mod overvec;
+pub mod parallel;
 pub mod simd;
 pub mod unrolled;
 
-use crate::grid::{AxisLayout, FullGrid};
+pub use parallel::{ParallelHierarchizer, ShardStrategy};
+
+use crate::grid::{AxisLayout, FullGrid, LevelVector};
 
 /// A hierarchization algorithm operating in place on a [`FullGrid`].
 ///
@@ -123,6 +126,28 @@ impl Variant {
                 &overvec::BfsOverVectorizedPreBranchedReducedOp
             }
         }
+    }
+}
+
+/// Paper-style variant dispatch by grid shape (the per-grid auto-selection
+/// of the batched scheme engine).
+///
+/// * `d = 1` — no adjacent poles to fuse, so the row codes degenerate; the
+///   paper's Fig. 4 shows `BFS` staying flat as the data set grows, so it
+///   is the safe pick at every size.
+/// * `d >= 2` with an x1 row of at least one AVX vector (4 points) — the
+///   over-vectorized family is the paper's headline; `PreBranched` hoists
+///   the per-node branch and never loses to plain.
+/// * `d >= 2` with x1 rows shorter than one AVX vector (level <= 2, i.e.
+///   at most 3 points) — too short to amortize the row kernels; scalar
+///   `Ind` wins.
+pub fn auto_variant(levels: &LevelVector) -> Variant {
+    if levels.dim() == 1 {
+        Variant::Bfs
+    } else if levels.axis_points(0) >= 4 {
+        Variant::BfsOverVectorizedPreBranched
+    } else {
+        Variant::Ind
     }
 }
 

@@ -25,10 +25,63 @@ use super::simd;
 use super::Hierarchizer;
 
 #[derive(Clone, Copy, PartialEq)]
-enum Mode {
+pub(crate) enum Mode {
     Plain,
     PreBranched,
     ReducedOp,
+}
+
+/// One outer block of the over-vectorized sweep for a working dimension
+/// >= 2: every BFS node's `w`-wide row in `[ob, ob + w * (2^l - 1))`.
+/// Blocks are disjoint in storage; `hierarchize::parallel` shards a
+/// dimension over them bitwise-identically to the serial sweep.
+pub(crate) fn overvec_block(
+    data: &mut [f64],
+    ob: usize,
+    w: usize,
+    l: u8,
+    up: bool,
+    mode: Mode,
+    k: simd::RowKernels,
+) {
+    let (app1, app2): (fn(&mut [f64], usize, usize, usize), _) = if up {
+        (k.add1, k.add2)
+    } else {
+        match mode {
+            Mode::ReducedOp => (k.sub1, k.sub2_reduced),
+            _ => (k.sub1, k.sub2),
+        }
+    };
+    let row = |h: u32| ob + (h as usize - 1) * w;
+    let levs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
+    for lev in levs {
+        let first = 1u32 << (lev - 1);
+        let last = (1u32 << lev) - 1;
+        if mode == Mode::Plain {
+            // branch per node
+            for h in first..=last {
+                match (BfsNav::left_pred(h), BfsNav::right_pred(h)) {
+                    (Some(a), Some(b)) => app2(data, row(h), row(a), row(b), w),
+                    (Some(a), None) => app1(data, row(h), row(a), w),
+                    (None, Some(b)) => app1(data, row(h), row(b), w),
+                    (None, None) => {}
+                }
+            }
+        } else {
+            // pre-branched: peel the two single-predecessor boundary
+            // nodes, then a branch-free interior loop
+            app1(data, row(first), row(first >> 1), w); // leftmost: parent is right pred
+            if last != first {
+                app1(data, row(last), row(last >> 1), w); // rightmost: parent is left pred
+            }
+            for h in (first + 1)..last {
+                // interior: both predecessors exist
+                let a = BfsNav::left_pred(h).unwrap();
+                let b = BfsNav::right_pred(h).unwrap();
+                app2(data, row(h), row(a), row(b), w);
+            }
+        }
+    }
 }
 
 fn sweep(g: &mut FullGrid, up: bool, mode: Mode) {
@@ -52,47 +105,8 @@ fn sweep(g: &mut FullGrid, up: bool, mode: Mode) {
             }
             continue;
         }
-        let w = poles.inner; // over-vectorization width (all faster axes)
-        let (app1, app2): (fn(&mut [f64], usize, usize, usize), _) = if up {
-            (k.add1, k.add2)
-        } else {
-            match mode {
-                Mode::ReducedOp => (k.sub1, k.sub2_reduced),
-                _ => (k.sub1, k.sub2),
-            }
-        };
         for outer in 0..poles.outer {
-            let ob = outer * poles.outer_step;
-            let row = |h: u32| ob + (h as usize - 1) * w;
-            let levs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
-            for lev in levs {
-                let first = 1u32 << (lev - 1);
-                let last = (1u32 << lev) - 1;
-                if mode == Mode::Plain {
-                    // branch per node
-                    for h in first..=last {
-                        match (BfsNav::left_pred(h), BfsNav::right_pred(h)) {
-                            (Some(a), Some(b)) => app2(data, row(h), row(a), row(b), w),
-                            (Some(a), None) => app1(data, row(h), row(a), w),
-                            (None, Some(b)) => app1(data, row(h), row(b), w),
-                            (None, None) => {}
-                        }
-                    }
-                } else {
-                    // pre-branched: peel the two single-predecessor boundary
-                    // nodes, then a branch-free interior loop
-                    app1(data, row(first), row(first >> 1), w); // leftmost: parent is right pred
-                    if last != first {
-                        app1(data, row(last), row(last >> 1), w); // rightmost: parent is left pred
-                    }
-                    for h in (first + 1)..last {
-                        // interior: both predecessors exist
-                        let a = BfsNav::left_pred(h).unwrap();
-                        let b = BfsNav::right_pred(h).unwrap();
-                        app2(data, row(h), row(a), row(b), w);
-                    }
-                }
-            }
+            overvec_block(data, outer * poles.outer_step, poles.inner, l, up, mode, k);
         }
     }
 }

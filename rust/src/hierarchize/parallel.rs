@@ -1,0 +1,441 @@
+//! Sharded parallel hierarchization: one grid, many threads.
+//!
+//! Alg. 1 processes one working dimension at a time; within a dimension the
+//! poles (and, for the row-vectorized codes, the contiguous outer blocks of
+//! poles) touch pairwise disjoint storage.  That makes the dimension sweep
+//! embarrassingly parallel: [`ParallelHierarchizer`] chops the unit range
+//! into chunks and lets a worker pool steal them through an atomic cursor,
+//! with a barrier between dimensions (`std::thread::scope` joins).
+//!
+//! **Determinism.** Every work unit runs the *same* per-unit kernel the
+//! serial sweep of the inner variant runs (`ind::pole_hierarchize`,
+//! `overvec::overvec_block`, ...), and units never read each other's slots
+//! within a dimension, so the result is **bitwise identical** to the serial
+//! variant for every thread count and chunking — there is no
+//! floating-point reassociation across threads to worry about.
+//!
+//! `Func` and `Func-FPNav` navigate their poles with an odometer that does
+//! not admit cheap range splitting; for those (deliberately slow baseline)
+//! variants the engine falls back to the serial implementation, which keeps
+//! the bitwise contract trivially.
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::grid::{AxisLayout, FullGrid, Poles};
+
+use super::{bfs, ind, overvec, simd, unrolled, Hierarchizer, Variant};
+
+/// How a batch of work is split across the worker pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardStrategy {
+    /// One component grid per work item (Harding-style: the component grid
+    /// is the natural unit of parallelism of the combination technique).
+    Grid,
+    /// Shard each grid pole-wise across all threads, grids in sequence.
+    Pole,
+    /// Pick per batch: grid-level when there are enough grids to fill the
+    /// pool, pole-level otherwise.
+    #[default]
+    Auto,
+}
+
+impl ShardStrategy {
+    /// Resolve `Auto` against a concrete batch shape.
+    pub fn resolve(self, n_grids: usize, threads: usize) -> ShardStrategy {
+        match self {
+            ShardStrategy::Auto => {
+                if n_grids >= threads {
+                    ShardStrategy::Grid
+                } else {
+                    ShardStrategy::Pole
+                }
+            }
+            s => s,
+        }
+    }
+}
+
+impl FromStr for ShardStrategy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "grid" => Ok(ShardStrategy::Grid),
+            "pole" => Ok(ShardStrategy::Pole),
+            "auto" => Ok(ShardStrategy::Auto),
+            other => Err(format!("unknown shard strategy {other:?} (grid|pole|auto)")),
+        }
+    }
+}
+
+impl fmt::Display for ShardStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ShardStrategy::Grid => "grid",
+            ShardStrategy::Pole => "pole",
+            ShardStrategy::Auto => "auto",
+        })
+    }
+}
+
+/// A [`Hierarchizer`] that runs an inner [`Variant`] pole-sharded across a
+/// worker pool.  Bitwise identical to the serial inner variant (see the
+/// module docs); `threads <= 1` runs inline with no thread spawn.
+pub struct ParallelHierarchizer {
+    inner: Variant,
+    threads: usize,
+}
+
+impl ParallelHierarchizer {
+    pub fn new(inner: Variant, threads: usize) -> Self {
+        Self { inner, threads: threads.max(1) }
+    }
+
+    /// All available hardware threads.
+    pub fn with_available_parallelism(inner: Variant) -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(inner, n)
+    }
+
+    pub fn inner(&self) -> Variant {
+        self.inner
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True if `inner` is pole-shardable.  `Func`/`Func-FPNav` fall back to
+    /// the serial implementation (still correct, just not parallel).
+    pub fn supports(inner: Variant) -> bool {
+        !matches!(inner, Variant::Func | Variant::FuncFpNav)
+    }
+}
+
+impl Hierarchizer for ParallelHierarchizer {
+    fn name(&self) -> &'static str {
+        "Parallel"
+    }
+
+    fn layout(&self) -> AxisLayout {
+        self.inner.instance().layout()
+    }
+
+    fn hierarchize(&self, g: &mut FullGrid) {
+        if self.threads <= 1 || !Self::supports(self.inner) {
+            self.inner.instance().hierarchize(g);
+            return;
+        }
+        super::assert_layout(self, g);
+        sweep_parallel(g, self.inner, self.threads, false);
+    }
+
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        if self.threads <= 1 || !Self::supports(self.inner) {
+            self.inner.instance().dehierarchize(g);
+            return;
+        }
+        super::assert_layout(self, g);
+        sweep_parallel(g, self.inner, self.threads, true);
+    }
+}
+
+/// Per-pole scalar kernels (unit = one pole).
+#[derive(Clone, Copy)]
+enum ScalarPole {
+    Pos { reduced: bool },
+    Bfs,
+    BfsRev,
+}
+
+/// Row kernels over one outer block (unit = all poles of one outer block;
+/// working dimensions >= 2 only).
+#[derive(Clone, Copy)]
+enum RowsKernel {
+    IndRows,
+    Lanes { vector: bool },
+    Over(overvec::Mode),
+}
+
+#[derive(Clone, Copy)]
+enum DimKernel {
+    Pole(ScalarPole),
+    Rows(RowsKernel),
+}
+
+/// The work decomposition of `inner` for one working dimension — exactly
+/// the inner loop shape of the serial sweep, so results stay bitwise equal.
+fn dim_kernel(inner: Variant, dim: usize, up: bool) -> DimKernel {
+    use Variant as V;
+    let bfs_pole = DimKernel::Pole(ScalarPole::Bfs);
+    match inner {
+        V::Ind => DimKernel::Pole(ScalarPole::Pos { reduced: false }),
+        V::IndReducedOp => DimKernel::Pole(ScalarPole::Pos { reduced: true }),
+        V::IndVectorized => {
+            if dim == 0 {
+                DimKernel::Pole(ScalarPole::Pos { reduced: false })
+            } else {
+                DimKernel::Rows(RowsKernel::IndRows)
+            }
+        }
+        V::Bfs => DimKernel::Pole(ScalarPole::Bfs),
+        V::BfsRev => DimKernel::Pole(ScalarPole::BfsRev),
+        V::BfsUnrolled => {
+            if dim == 0 {
+                bfs_pole
+            } else {
+                DimKernel::Rows(RowsKernel::Lanes { vector: false })
+            }
+        }
+        V::BfsVectorized => {
+            if dim == 0 {
+                bfs_pole
+            } else {
+                DimKernel::Rows(RowsKernel::Lanes { vector: true })
+            }
+        }
+        V::BfsOverVectorized => {
+            if dim == 0 {
+                bfs_pole
+            } else {
+                DimKernel::Rows(RowsKernel::Over(overvec::Mode::Plain))
+            }
+        }
+        V::BfsOverVectorizedPreBranched => {
+            if dim == 0 {
+                bfs_pole
+            } else {
+                DimKernel::Rows(RowsKernel::Over(overvec::Mode::PreBranched))
+            }
+        }
+        V::BfsOverVectorizedPreBranchedReducedOp => {
+            if dim == 0 {
+                bfs_pole
+            } else if up {
+                // the serial variant dehierarchizes in PreBranched mode
+                DimKernel::Rows(RowsKernel::Over(overvec::Mode::PreBranched))
+            } else {
+                DimKernel::Rows(RowsKernel::Over(overvec::Mode::ReducedOp))
+            }
+        }
+        V::Func | V::FuncFpNav => {
+            unreachable!("unsupported inner variant is handled by the serial fallback")
+        }
+    }
+}
+
+fn sweep_parallel(g: &mut FullGrid, inner: Variant, threads: usize, up: bool) {
+    let levels = g.levels().clone();
+    let k = simd::kernels();
+    for dim in 0..levels.dim() {
+        let l = levels.level(dim);
+        if l < 2 {
+            continue;
+        }
+        let poles = Poles::of(g, dim);
+        let kernel = dim_kernel(inner, dim, up);
+        let n_units = match kernel {
+            DimKernel::Pole(_) => poles.count(),
+            DimKernel::Rows(_) => poles.outer,
+        };
+        let st = poles.stride;
+        let poles = &poles;
+        let run = move |data: &mut [f64], u: usize| match kernel {
+            DimKernel::Pole(sp) => {
+                let base = poles.base(u);
+                match (sp, up) {
+                    (ScalarPole::Pos { reduced }, false) => {
+                        ind::pole_hierarchize(data, base, st, l, reduced)
+                    }
+                    (ScalarPole::Pos { .. }, true) => ind::pole_dehierarchize(data, base, st, l),
+                    (ScalarPole::Bfs, false) => bfs::pole_hierarchize_bfs(data, base, st, l),
+                    (ScalarPole::Bfs, true) => bfs::pole_dehierarchize_bfs(data, base, st, l),
+                    (ScalarPole::BfsRev, false) => bfs::pole_hierarchize_rev(data, base, st, l),
+                    (ScalarPole::BfsRev, true) => bfs::pole_dehierarchize_rev(data, base, st, l),
+                }
+            }
+            DimKernel::Rows(rk) => {
+                let ob = u * poles.outer_step;
+                let w = poles.inner;
+                match rk {
+                    RowsKernel::IndRows => ind::vec_rows_block(data, ob, w, l, up, k),
+                    RowsKernel::Lanes { vector } => {
+                        let lk = if vector { k } else { simd::SCALAR_KERNELS };
+                        unrolled::lanes_block(data, ob, w, l, up, lk)
+                    }
+                    RowsKernel::Over(mode) => overvec::overvec_block(data, ob, w, l, up, mode, k),
+                }
+            }
+        };
+        parallel_units(g.as_mut_slice(), threads, n_units, run);
+        // implicit barrier: parallel_units joins its scope before the next
+        // working dimension starts (Alg. 1's dimension loop is sequential)
+    }
+}
+
+/// Shared-nothing view of one grid buffer for the unit workers.
+///
+/// Soundness argument (same family as `coordinator::pool::GridsPtr`): every
+/// unit index is claimed exactly once from the atomic cursor, and the unit
+/// kernels only touch the claimed unit's slots — poles and outer blocks are
+/// pairwise disjoint slot sets — so no two threads ever access the same
+/// element.
+///
+/// Known formal caveat: the workers materialize whole-buffer `&mut [f64]`
+/// views that coexist across threads.  Every *access* is disjoint (which is
+/// what the hardware and LLVM's noalias-on-disjoint-accesses care about),
+/// but the Rust aliasing model wants at most one live `&mut` per region, so
+/// Miri flags this.  Making it model-clean means porting the pole kernels
+/// to raw-pointer form — tracked in ROADMAP.md; the observable behavior is
+/// unaffected either way because no two threads read or write the same
+/// slot between the per-dimension barriers.
+struct DataPtr {
+    ptr: *mut f64,
+    len: usize,
+}
+
+unsafe impl Send for DataPtr {}
+unsafe impl Sync for DataPtr {}
+
+/// Run `f(data, u)` for every unit `0 <= u < n_units` on up to `threads`
+/// workers, chunked ranges claimed through an atomic cursor (index
+/// stealing).  `f` must only access slots belonging to unit `u`.
+fn parallel_units<F>(data: &mut [f64], threads: usize, n_units: usize, f: F)
+where
+    F: Fn(&mut [f64], usize) + Sync,
+{
+    let workers = threads.min(n_units);
+    if workers <= 1 {
+        for u in 0..n_units {
+            f(data, u);
+        }
+        return;
+    }
+    // ~8 chunks per worker: fine enough to steal, coarse enough to keep the
+    // atomic cursor off the critical path
+    let chunk = (n_units / (workers * 8)).max(1);
+    let next = AtomicUsize::new(0);
+    let shared = DataPtr { ptr: data.as_mut_ptr(), len: data.len() };
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let (shared, next, f) = (&shared, &next, &f);
+            s.spawn(move || loop {
+                let start = next.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n_units {
+                    break;
+                }
+                let end = (start + chunk).min(n_units);
+                // SAFETY: unit ranges are claimed exactly once and unit
+                // kernels touch disjoint slot sets (see DataPtr)
+                let view = unsafe { std::slice::from_raw_parts_mut(shared.ptr, shared.len) };
+                for u in start..end {
+                    f(&mut *view, u);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::LevelVector;
+    use crate::hierarchize::{prepare, ALL_VARIANTS};
+    use crate::util::rng::SplitMix64;
+
+    fn random_grid(levels: &[u8], seed: u64) -> FullGrid {
+        let mut g = FullGrid::new(LevelVector::new(levels));
+        let mut rng = SplitMix64::new(seed);
+        g.fill_with(|_| rng.next_f64() - 0.5);
+        g
+    }
+
+    #[test]
+    fn bitwise_matches_serial_for_every_variant() {
+        let cases: &[&[u8]] = &[&[6], &[5, 4], &[1, 5], &[3, 1, 3], &[2, 2, 2, 2]];
+        for levels in cases {
+            let input = random_grid(levels, 11);
+            for &v in ALL_VARIANTS {
+                let h = v.instance();
+                let mut want = input.clone();
+                prepare(h, &mut want);
+                h.hierarchize(&mut want);
+                for threads in [1usize, 2, 4, 8] {
+                    let p = ParallelHierarchizer::new(v, threads);
+                    let mut got = input.clone();
+                    prepare(&p, &mut got);
+                    p.hierarchize(&mut got);
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "{} x{threads} not bitwise on {levels:?}",
+                        h.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dehierarchize_bitwise_matches_serial() {
+        let input = random_grid(&[4, 3, 2], 5);
+        for &v in ALL_VARIANTS {
+            let h = v.instance();
+            let mut want = input.clone();
+            prepare(h, &mut want);
+            h.hierarchize(&mut want);
+            let hier = want.clone();
+            h.dehierarchize(&mut want);
+            let p = ParallelHierarchizer::new(v, 4);
+            let mut got = hier.clone();
+            p.dehierarchize(&mut got);
+            assert_eq!(got.as_slice(), want.as_slice(), "{}", h.name());
+        }
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let p = ParallelHierarchizer::new(Variant::Ind, 1);
+        let mut g = random_grid(&[3, 3], 1);
+        let mut want = g.clone();
+        Variant::Ind.instance().hierarchize(&mut want);
+        p.hierarchize(&mut g);
+        assert_eq!(g.as_slice(), want.as_slice());
+    }
+
+    #[test]
+    fn unsupported_variants_fall_back_serially() {
+        assert!(!ParallelHierarchizer::supports(Variant::Func));
+        assert!(!ParallelHierarchizer::supports(Variant::FuncFpNav));
+        assert!(ParallelHierarchizer::supports(Variant::BfsOverVectorized));
+        let p = ParallelHierarchizer::new(Variant::Func, 8);
+        let mut g = random_grid(&[4, 2], 2);
+        let mut want = g.clone();
+        Variant::Func.instance().hierarchize(&mut want);
+        p.hierarchize(&mut g);
+        assert_eq!(g.as_slice(), want.as_slice());
+    }
+
+    #[test]
+    fn strategy_parse_and_resolve() {
+        assert_eq!("grid".parse::<ShardStrategy>().unwrap(), ShardStrategy::Grid);
+        assert_eq!("POLE".parse::<ShardStrategy>().unwrap(), ShardStrategy::Pole);
+        assert_eq!("Auto".parse::<ShardStrategy>().unwrap(), ShardStrategy::Auto);
+        assert!("banana".parse::<ShardStrategy>().is_err());
+        assert_eq!(ShardStrategy::Auto.resolve(16, 4), ShardStrategy::Grid);
+        assert_eq!(ShardStrategy::Auto.resolve(2, 8), ShardStrategy::Pole);
+        assert_eq!(ShardStrategy::Pole.resolve(100, 4), ShardStrategy::Pole);
+        assert_eq!(ShardStrategy::Grid.to_string(), "grid");
+    }
+
+    #[test]
+    fn parallel_units_visits_every_unit_once() {
+        let mut data = vec![0f64; 1024];
+        parallel_units(&mut data, 7, 1024, |d, u| d[u] += 1.0 + u as f64);
+        for (u, v) in data.iter().enumerate() {
+            assert_eq!(*v, 1.0 + u as f64, "unit {u}");
+        }
+    }
+}

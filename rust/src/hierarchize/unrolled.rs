@@ -20,50 +20,50 @@ use super::bfs::{pole_dehierarchize_bfs, pole_hierarchize_bfs};
 use super::simd;
 use super::Hierarchizer;
 
-/// Process one working dimension >= 2 with `lanes`-wide chunks of adjacent
-/// poles; `row(h, q)` slots are `ob + (h-1)*inner + q .. +lanes`.
-fn sweep_mid_lanes(
+/// One outer block of the lane-unrolled sweep for a working dimension >= 2:
+/// `lanes`-wide chunks of adjacent poles advance together through the BFS
+/// pole walk; `row(h, q)` slots are `ob + (h-1)*inner + q .. +lanes`.
+/// Blocks are disjoint in storage; `hierarchize::parallel` shards a
+/// dimension over them bitwise-identically to the serial sweep.
+pub(crate) fn lanes_block(
     data: &mut [f64],
-    poles: &Poles,
+    ob: usize,
+    inner: usize,
     l: u8,
     up: bool,
-    apply1: impl Fn(&mut [f64], usize, usize, usize),
-    apply2: impl Fn(&mut [f64], usize, usize, usize, usize),
+    k: simd::RowKernels,
 ) {
-    let inner = poles.inner;
-    for outer in 0..poles.outer {
-        let ob = outer * poles.outer_step;
-        let mut q = 0usize;
-        while q < inner {
-            let lanes = 4.min(inner - q);
-            let levs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
-            for lev in levs {
-                let first = 1u32 << (lev - 1);
-                let last = (1u32 << lev) - 1;
-                for h in first..=last {
-                    let x = ob + (h as usize - 1) * inner + q;
-                    let a = BfsNav::left_pred(h);
-                    let b = BfsNav::right_pred(h);
-                    match (a, b) {
-                        (Some(a), Some(b)) => apply2(
-                            data,
-                            x,
-                            ob + (a as usize - 1) * inner + q,
-                            ob + (b as usize - 1) * inner + q,
-                            lanes,
-                        ),
-                        (Some(a), None) => {
-                            apply1(data, x, ob + (a as usize - 1) * inner + q, lanes)
-                        }
-                        (None, Some(b)) => {
-                            apply1(data, x, ob + (b as usize - 1) * inner + q, lanes)
-                        }
-                        (None, None) => {}
+    let (apply1, apply2) = if up { (k.add1, k.add2) } else { (k.sub1, k.sub2) };
+    let mut q = 0usize;
+    while q < inner {
+        let lanes = 4.min(inner - q);
+        let levs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
+        for lev in levs {
+            let first = 1u32 << (lev - 1);
+            let last = (1u32 << lev) - 1;
+            for h in first..=last {
+                let x = ob + (h as usize - 1) * inner + q;
+                let a = BfsNav::left_pred(h);
+                let b = BfsNav::right_pred(h);
+                match (a, b) {
+                    (Some(a), Some(b)) => apply2(
+                        data,
+                        x,
+                        ob + (a as usize - 1) * inner + q,
+                        ob + (b as usize - 1) * inner + q,
+                        lanes,
+                    ),
+                    (Some(a), None) => {
+                        apply1(data, x, ob + (a as usize - 1) * inner + q, lanes)
                     }
+                    (None, Some(b)) => {
+                        apply1(data, x, ob + (b as usize - 1) * inner + q, lanes)
+                    }
+                    (None, None) => {}
                 }
             }
-            q += lanes;
         }
+        q += lanes;
     }
 }
 
@@ -84,10 +84,10 @@ fn sweep(g: &mut FullGrid, up: bool, vector: bool) {
                     pole_hierarchize_bfs(data, base, 1, l);
                 }
             }
-        } else if up {
-            sweep_mid_lanes(data, &poles, l, true, k.add1, k.add2);
         } else {
-            sweep_mid_lanes(data, &poles, l, false, k.sub1, k.sub2);
+            for outer in 0..poles.outer {
+                lanes_block(data, outer * poles.outer_step, poles.inner, l, up, k);
+            }
         }
     }
 }

@@ -8,7 +8,7 @@
 //! Architecture (three layers, python never on the request path):
 //!
 //! * **L3 (this crate)** — coordinator + performance substrate: anisotropic
-//!   full grids ([`grid`]), all nine hierarchization variants of the paper
+//!   full grids ([`grid`]), all hierarchization variants of the paper
 //!   ([`hierarchize`]), the SGpp-like baseline ([`sgpp`]), the hierarchical
 //!   sparse grid with gather/scatter ([`sparse`]), combination schemes
 //!   ([`combi`]), compute-phase solvers ([`solver`]), the PJRT runtime that
@@ -17,7 +17,20 @@
 //! * **L2** — JAX model (`python/compile/model.py`), lowered once to HLO text.
 //! * **L1** — Pallas kernels (`python/compile/kernels/`), `interpret=True`.
 //!
-//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! Parallel execution stacks two shard levels on top of the serial kernels:
+//!
+//! * [`hierarchize::parallel`] shards a *single* grid pole-wise across a
+//!   worker pool ([`ParallelHierarchizer`]) — bitwise identical to the
+//!   serial variant for every thread count, because each worker runs the
+//!   same per-unit kernel on disjoint slots;
+//! * [`coordinator::hierarchize_scheme`] batches *all component grids* of a
+//!   [`combi::CombinationScheme`] through the pool, largest-first by the
+//!   corrected-Eq.-1 flop estimate, with per-grid variant auto-selection
+//!   ([`hierarchize::auto_variant`]) and a [`ShardStrategy`] knob
+//!   (grid-level stealing / pole-level sharding / auto).
+//!
+//! See `README.md` for the engine walkthrough and the strong-scaling bench,
+//! `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for reproduction results.
 
 pub mod cli;
@@ -32,5 +45,9 @@ pub mod sgpp;
 pub mod sparse;
 pub mod util;
 
+pub use coordinator::{hierarchize_scheme, BatchOptions, BatchReport};
 pub use grid::{AxisLayout, FullGrid, LevelVector};
-pub use hierarchize::{variant_by_name, Hierarchizer, Variant, ALL_VARIANTS};
+pub use hierarchize::{
+    auto_variant, variant_by_name, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant,
+    ALL_VARIANTS,
+};

@@ -11,9 +11,12 @@
 use anyhow::{bail, Result};
 use sgct::cli::Args;
 use sgct::combi::CombinationScheme;
-use sgct::coordinator::{Coordinator, PipelineConfig};
+use sgct::coordinator::{hierarchize_scheme, BatchOptions, Coordinator, PipelineConfig};
 use sgct::grid::{FullGrid, LevelVector};
-use sgct::hierarchize::{flops, prepare, variant_by_name, Variant, ALL_VARIANTS};
+use sgct::hierarchize::{
+    flops, prepare, variant_by_name, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant,
+    ALL_VARIANTS,
+};
 use sgct::perf::{self, bench::Config};
 use sgct::runtime::Runtime;
 use sgct::solver::{stable_dt, HeatSolver};
@@ -32,6 +35,7 @@ fn main() {
         "hierarchize" => run(hierarchize(&args)),
         "combine" => run(combine(&args)),
         "solve" => run(solve(&args)),
+        "batch" => run(batch(&args)),
         "bench" => run(bench_cmd(&args)),
         "distributed" => run(distributed(&args)),
         "" | "help" | "--help" => {
@@ -51,11 +55,19 @@ sgct — sparse grid combination technique (Hupp 2013 reproduction)
 
 USAGE:
   sgct info [--roofline]
-  sgct hierarchize --levels L1,L2,... [--variant NAME] [--check] [--pjrt]
-  sgct combine --dim D --level N [--samples K]
+  sgct hierarchize --levels L1,L2,... [--variant NAME] [--threads N|auto] [--check] [--pjrt]
+  sgct combine --dim D --level N [--samples K] [--threads N|auto] [--shard-strategy grid|pole|auto]
   sgct solve --dim D --level N [--iters I] [--steps T] [--pjrt] [--workers W]
+             [--shard-strategy grid|pole|auto]
+  sgct batch --dim D --level N [--threads N|auto] [--shard-strategy grid|pole|auto]
+             [--variant NAME]
   sgct bench --levels L1,L2,... [--all]
   sgct distributed --dim D --level N [--max-nodes K]
+
+  --threads N|auto         worker threads (auto = all hardware threads)
+  --shard-strategy ...     grid = one component grid per work item,
+                           pole = shard each grid pole-wise across the pool,
+                           auto = resolve per batch shape
 ";
 
 fn run(r: Result<()>) -> i32 {
@@ -139,15 +151,23 @@ fn hierarchize(args: &Args) -> Result<()> {
             human_time(t.elapsed_secs())
         );
     } else {
-        prepare(h, &mut g);
+        let threads = args.threads("threads", 1)?;
+        let p = ParallelHierarchizer::new(variant, threads);
+        prepare(&p, &mut g);
         let t = perf::CycleTimer::start();
-        h.hierarchize(&mut g);
+        p.hierarchize(&mut g);
         let cy = t.elapsed_cycles();
         g.convert_all(sgct::grid::AxisLayout::Position);
         let f = flops::flops(&levels);
+        let thread_note = if threads > 1 {
+            format!(" (pole-sharded x{threads})")
+        } else {
+            String::new()
+        };
         println!(
-            "{}: {} points ({}), {} cycles, {:.4} flops/cycle",
+            "{}{}: {} points ({}), {} cycles, {:.4} flops/cycle",
             h.name(),
+            thread_note,
             levels.total_points(),
             human_bytes(levels.size_bytes()),
             cy,
@@ -174,7 +194,9 @@ fn combine(args: &Args) -> Result<()> {
         scheme.total_points()
     );
     let f = |x: &[f64]| -> f64 { x.iter().map(|&v| 4.0 * v * (1.0 - v)).product() };
-    let cfg = PipelineConfig::new(scheme);
+    let mut cfg = PipelineConfig::new(scheme);
+    cfg.workers = args.threads("threads", cfg.workers)?;
+    cfg.shard = args.get("shard-strategy", ShardStrategy::Grid)?;
     let mut c = Coordinator::new(cfg, f);
     c.combine();
     println!(
@@ -192,7 +214,7 @@ fn solve(args: &Args) -> Result<()> {
     let level = args.get("level", 5u8)?;
     let iters = args.get("iters", 4usize)?;
     let steps = args.get("steps", 8usize)?;
-    let workers = args.get("workers", 1usize)?;
+    let workers = args.threads("threads", args.get("workers", 1usize)?)?;
     let scheme = CombinationScheme::regular(dim, level);
     // one dt stable on the *finest* axis any grid has (level n)
     let finest = LevelVector::isotropic(dim, level);
@@ -202,6 +224,7 @@ fn solve(args: &Args) -> Result<()> {
     let mut cfg = PipelineConfig::new(scheme);
     cfg.steps_per_iter = steps;
     cfg.workers = workers;
+    cfg.shard = args.get("shard-strategy", ShardStrategy::Grid)?;
     let init =
         |x: &[f64]| -> f64 { x.iter().map(|&v| (std::f64::consts::PI * v).sin()).product() };
     let mut c = Coordinator::new(cfg, init);
@@ -258,6 +281,65 @@ fn run_iters(
             format!("{err:.3e}"),
         ]);
     }
+    Ok(())
+}
+
+/// Batched scheme-level hierarchization through the worker pool: the
+/// per-grid variant auto-selection and shard planning of
+/// `coordinator::hierarchize_scheme`, demonstrated end to end.
+fn batch(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+
+    let dim = args.get("dim", 4usize)?;
+    let level = args.get("level", 6u8)?;
+    let threads = args.threads("threads", 1)?;
+    let strategy = args.get("shard-strategy", ShardStrategy::Auto)?;
+    let variant = match args.opt("variant") {
+        None => None,
+        Some(name) => match variant_by_name(name) {
+            Some(v) => Some(v),
+            None => bail!("unknown variant {name:?} (see `sgct info`)"),
+        },
+    };
+    let scheme = CombinationScheme::regular(dim, level);
+    println!(
+        "batch hierarchize: d={dim} n={level} -> {} grids, {} points, ~{} flops",
+        scheme.len(),
+        scheme.total_points(),
+        scheme.total_flops()
+    );
+    let mut grids: Vec<FullGrid> = scheme
+        .components()
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let mut g = FullGrid::new(c.levels.clone());
+            let mut rng = sgct::util::rng::SplitMix64::new(42 + i as u64);
+            g.fill_with(|_| rng.next_f64() - 0.5);
+            g
+        })
+        .collect();
+    let opts = BatchOptions { threads, strategy, variant, ..Default::default() };
+    let report = hierarchize_scheme(&scheme, &mut grids, &opts);
+
+    let mut by_variant: BTreeMap<&'static str, (usize, u64)> = BTreeMap::new();
+    for t in &report.tasks {
+        let e = by_variant.entry(t.variant.paper_name()).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += t.flops;
+    }
+    let mut table = Table::new(vec!["variant", "grids", "est. flops"]);
+    for (name, (count, fl)) in by_variant {
+        table.row(vec![name.to_string(), count.to_string(), fl.to_string()]);
+    }
+    table.print();
+    println!(
+        "strategy {} (requested {strategy}), {} threads: {} — {:.3} GFLOP/s",
+        report.strategy,
+        report.threads,
+        human_time(report.secs),
+        report.total_flops as f64 / report.secs.max(1e-12) / 1e9
+    );
     Ok(())
 }
 

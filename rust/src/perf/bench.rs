@@ -58,6 +58,17 @@ impl BenchResult {
     pub fn gflops(&self, flops: u64) -> f64 {
         flops as f64 / self.secs / 1e9
     }
+
+    /// Strong-scaling speedup over a baseline measurement of the same
+    /// workload (e.g. the 1-thread run of a scaling sweep).
+    pub fn speedup_vs(&self, baseline: &BenchResult) -> f64 {
+        baseline.secs / self.secs
+    }
+
+    /// Parallel efficiency at `threads` workers: `speedup / threads`.
+    pub fn efficiency_vs(&self, baseline: &BenchResult, threads: usize) -> f64 {
+        self.speedup_vs(baseline) / threads.max(1) as f64
+    }
 }
 
 /// Benchmark `f`, whose every call performs "one unit" of the workload.
@@ -198,5 +209,21 @@ mod tests {
         };
         assert_eq!(r.flops_per_cycle(500), 0.5);
         assert!((r.gflops(500) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_and_efficiency() {
+        let mk = |secs: f64| BenchResult {
+            name: "x".into(),
+            cycles: secs * 1e9,
+            secs,
+            summary: Summary::of(&[secs * 1e9]),
+            batch: 1,
+        };
+        let base = mk(4.0);
+        let fast = mk(1.0);
+        assert!((fast.speedup_vs(&base) - 4.0).abs() < 1e-12);
+        assert!((fast.efficiency_vs(&base, 4) - 1.0).abs() < 1e-12);
+        assert!((fast.efficiency_vs(&base, 8) - 0.5).abs() < 1e-12);
     }
 }

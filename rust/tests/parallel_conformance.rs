@@ -1,0 +1,223 @@
+//! Cross-variant conformance and parallel-engine determinism.
+//!
+//! Three contracts, fuzzed with the hand-rolled property harness:
+//!
+//! * **conformance** — every variant in `ALL_VARIANTS` computes the same
+//!   surpluses as the SGpp-style hash-grid baseline (within 1e-12) on
+//!   randomized anisotropic level vectors up to d = 6;
+//! * **determinism** — the sharded parallel engine is *bitwise* identical
+//!   to the serial path for every variant, shard strategy, and thread
+//!   count in {1, 2, 4, 8} (no FP reassociation across threads);
+//! * **round-trip** — dehierarchize . hierarchize recovers the nodal
+//!   values within 1e-10, serial and parallel.
+
+use sgct::combi::CombinationScheme;
+use sgct::coordinator::{dehierarchize_scheme, hierarchize_scheme, BatchOptions};
+use sgct::grid::{FullGrid, LevelVector};
+use sgct::hierarchize::{
+    auto_variant, prepare, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant,
+    ALL_VARIANTS,
+};
+use sgct::sgpp::HashGrid;
+use sgct::util::proptest::{check, random_levels, Config};
+use sgct::util::rng::SplitMix64;
+
+/// Random anisotropic levels (d <= `max_dim`), capped so the exhaustive
+/// cross-variant sweeps stay fast: the largest level is shaved until the
+/// grid is modest.  Deterministic given the rng state.
+fn bounded_levels(rng: &mut SplitMix64, size: u32, max_dim: usize) -> Vec<u8> {
+    let mut levels = random_levels(rng, size, max_dim);
+    loop {
+        if LevelVector::new(&levels).total_points() <= 20_000 {
+            return levels;
+        }
+        let i = (0..levels.len()).max_by_key(|&i| levels[i]).unwrap();
+        levels[i] -= 1;
+    }
+}
+
+fn random_grid(levels: &[u8], rng: &mut SplitMix64) -> FullGrid {
+    let mut g = FullGrid::new(LevelVector::new(levels));
+    g.fill_with(|_| rng.next_f64() - 0.5);
+    g
+}
+
+fn scheme_grids(scheme: &CombinationScheme, seed: u64) -> Vec<FullGrid> {
+    scheme
+        .components()
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let mut g = FullGrid::new(c.levels.clone());
+            let mut rng = SplitMix64::new(seed + i as u64);
+            g.fill_with(|_| rng.next_f64() - 0.5);
+            g
+        })
+        .collect()
+}
+
+/// (a) Conformance: all variants vs the SGpp hash-grid baseline, d <= 6.
+#[test]
+fn prop_all_variants_match_sgpp_baseline() {
+    check("conformance-sgpp", Config { cases: 30, ..Default::default() }, |rng, size| {
+        let levels = bounded_levels(rng, size, 6);
+        let input = random_grid(&levels, rng);
+        let mut hg = HashGrid::from_full_grid(&input);
+        hg.hierarchize();
+        let reference = hg.to_full_grid(input.levels());
+        for &v in ALL_VARIANTS {
+            let h = v.instance();
+            let mut g = input.clone();
+            prepare(h, &mut g);
+            h.hierarchize(&mut g);
+            let d = g.max_diff(&reference);
+            if d > 1e-12 {
+                return Err(format!("{} differs from SGpp by {d} on {levels:?}", h.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (b) Determinism: the pole-sharded engine is bitwise equal to the serial
+/// variant for every variant and thread count.
+#[test]
+fn prop_parallel_engine_bitwise_equals_serial() {
+    check("parallel-bitwise", Config { cases: 20, ..Default::default() }, |rng, size| {
+        let levels = bounded_levels(rng, size, 4);
+        let input = random_grid(&levels, rng);
+        for &v in ALL_VARIANTS {
+            let h = v.instance();
+            let mut want = input.clone();
+            prepare(h, &mut want);
+            h.hierarchize(&mut want);
+            for threads in [1usize, 2, 4, 8] {
+                let p = ParallelHierarchizer::new(v, threads);
+                let mut got = input.clone();
+                prepare(&p, &mut got);
+                p.hierarchize(&mut got);
+                if got.as_slice() != want.as_slice() {
+                    return Err(format!(
+                        "{} x{threads} not bitwise identical on {levels:?}",
+                        h.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (b') Determinism at scheme level: the acceptance shape (d=4, n=6)
+/// through the worker pool, bitwise across every strategy / thread count.
+#[test]
+fn scheme_engine_bitwise_across_strategies_and_threads() {
+    let scheme = CombinationScheme::regular(4, 6);
+    assert!(scheme.len() > 100);
+    let input = scheme_grids(&scheme, 5000);
+
+    let base = BatchOptions {
+        threads: 1,
+        strategy: ShardStrategy::Grid,
+        variant: None,
+        to_position: true,
+    };
+    let mut reference = input.clone();
+    let report = hierarchize_scheme(&scheme, &mut reference, &base);
+    assert_eq!(report.tasks.len(), scheme.len());
+    // the auto-selection really mixes variants on an anisotropic scheme
+    let distinct: std::collections::HashSet<_> =
+        report.tasks.iter().map(|t| t.variant.paper_name()).collect();
+    assert!(distinct.len() >= 2, "auto-selection collapsed to {distinct:?}");
+
+    for strategy in [ShardStrategy::Grid, ShardStrategy::Pole, ShardStrategy::Auto] {
+        for threads in [1usize, 2, 4, 8] {
+            let mut grids = input.clone();
+            let opts = BatchOptions { threads, strategy, ..base };
+            hierarchize_scheme(&scheme, &mut grids, &opts);
+            for (i, (got, want)) in grids.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    got.as_slice(),
+                    want.as_slice(),
+                    "grid {i} not bitwise under {strategy} x{threads}"
+                );
+            }
+        }
+    }
+}
+
+/// (b'') Across variants the parallel engine stays within the usual 1e-12
+/// of the Func reference (same contract as the serial variants).
+#[test]
+fn parallel_variants_agree_within_tolerance() {
+    let mut rng = SplitMix64::new(99);
+    for levels in [&[5, 4][..], &[2, 3, 3], &[1, 5, 2]] {
+        let input = random_grid(levels, &mut rng);
+        let mut reference = input.clone();
+        Variant::Func.instance().hierarchize(&mut reference);
+        for &v in ALL_VARIANTS {
+            let p = ParallelHierarchizer::new(v, 4);
+            let mut g = input.clone();
+            prepare(&p, &mut g);
+            p.hierarchize(&mut g);
+            let d = g.max_diff(&reference);
+            assert!(d < 1e-12, "{} x4 differs from Func by {d} on {levels:?}", v.paper_name());
+        }
+    }
+}
+
+/// (c) Round-trip: dehierarchize(hierarchize(g)) == g within 1e-10,
+/// serial and parallel, random variant per case.
+#[test]
+fn prop_roundtrip_serial_and_parallel() {
+    check("roundtrip-parallel", Config { cases: 30, ..Default::default() }, |rng, size| {
+        let levels = bounded_levels(rng, size, 4);
+        let input = random_grid(&levels, rng);
+        let v = ALL_VARIANTS[rng.next_below(ALL_VARIANTS.len() as u64) as usize];
+        for threads in [1usize, 4] {
+            let p = ParallelHierarchizer::new(v, threads);
+            let mut g = input.clone();
+            prepare(&p, &mut g);
+            p.hierarchize(&mut g);
+            p.dehierarchize(&mut g);
+            let d = g.max_diff(&input);
+            if d > 1e-10 {
+                return Err(format!(
+                    "{} x{threads} roundtrip diff {d} on {levels:?}",
+                    v.paper_name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (c') Round-trip at scheme level through the batched entry points.
+#[test]
+fn scheme_roundtrip_recovers_nodal_values() {
+    let scheme = CombinationScheme::regular(3, 6);
+    let input = scheme_grids(&scheme, 7000);
+    let mut grids = input.clone();
+    let opts = BatchOptions {
+        threads: 4,
+        strategy: ShardStrategy::Auto,
+        variant: None,
+        to_position: true,
+    };
+    hierarchize_scheme(&scheme, &mut grids, &opts);
+    dehierarchize_scheme(&scheme, &mut grids, &opts);
+    for (i, (got, want)) in grids.iter().zip(&input).enumerate() {
+        let d = got.max_diff(want);
+        assert!(d < 1e-10, "grid {i} roundtrip diff {d}");
+    }
+}
+
+/// The dispatch rules behind per-grid auto-selection.
+#[test]
+fn auto_variant_dispatch_shapes() {
+    assert_eq!(auto_variant(&LevelVector::new(&[8])), Variant::Bfs);
+    assert_eq!(auto_variant(&LevelVector::new(&[3, 4])), Variant::BfsOverVectorizedPreBranched);
+    assert_eq!(auto_variant(&LevelVector::new(&[6, 1])), Variant::BfsOverVectorizedPreBranched);
+    assert_eq!(auto_variant(&LevelVector::new(&[1, 6])), Variant::Ind);
+    assert_eq!(auto_variant(&LevelVector::new(&[2, 2, 2])), Variant::Ind);
+}

@@ -1,0 +1,199 @@
+//! Offline drop-in subset of the `anyhow` error-handling crate.
+//!
+//! The build environment has no registry access, so the crate set is
+//! vendored.  This implements exactly the surface the workspace uses:
+//! [`Error`], [`Result`], the [`anyhow!`], [`bail!`] and [`ensure!`]
+//! macros, the [`Context`] extension trait, and `From<E>` for every
+//! `std::error::Error` so `?` works on io/parse errors.
+//!
+//! Semantics match upstream where it matters here: `{e}` prints the
+//! outermost message, `{e:#}` prints the whole cause chain separated by
+//! `": "`, and `Debug` (what `unwrap`/`expect` show) prints the chain too.
+
+use std::fmt;
+
+/// An error chain: outermost context first, root cause last.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: c.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The root cause's message (last element of the chain).
+    pub fn root_cause(&self) -> &str {
+        let mut e = self;
+        while let Some(c) = &e.cause {
+            e = c;
+        }
+        &e.msg
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = &self.cause;
+        while let Some(e) = cause {
+            write!(f, ": {}", e.msg)?;
+            cause = &e.cause;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.write_chain(f)
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // flatten the std source chain into our message chain
+        let mut root = Error { msg: e.to_string(), cause: None };
+        let mut chain = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        for m in chain.into_iter().rev() {
+            root = Error { msg: root.msg, cause: Some(Box::new(Error { msg: m, cause: root.cause })) };
+        }
+        root
+    }
+}
+
+/// `anyhow::Result<T>` — the crate's error type as the default `E`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("outer {}", 42)
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "outer 42");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_prints_chain() {
+        let io: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = io.with_context(|| "reading file").unwrap_err();
+        assert_eq!(format!("{e}"), "reading file");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("reading file: "), "{full}");
+        assert!(full.contains("gone"), "{full}");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(v: usize) -> Result<usize> {
+            ensure!(v < 10, "too big: {v}");
+            Ok(v)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(format!("{:#}", check(11).unwrap_err()).contains("too big: 11"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+    }
+}
