@@ -144,6 +144,147 @@ pub fn validate(rec: &RecoveredScheme) -> Result<(), LevelVector> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{check, Config};
+
+    /// The downward closure of one level vector.
+    fn down_set(top: &LevelVector) -> Vec<LevelVector> {
+        let d = top.dim();
+        let mut s = vec![1u8; d];
+        let mut out = Vec::new();
+        loop {
+            out.push(LevelVector::new(&s));
+            let mut ax = 0;
+            loop {
+                if ax == d {
+                    return out;
+                }
+                s[ax] += 1;
+                if s[ax] <= top.level(ax) {
+                    break;
+                }
+                s[ax] = 1;
+                ax += 1;
+            }
+        }
+    }
+
+    /// Property: after losing a random subset of subspaces, the surviving
+    /// index set is downward closed, the recomputed coefficients satisfy
+    /// the inclusion–exclusion sum on every surviving subspace, and the
+    /// components cover exactly the survivors.
+    #[test]
+    fn prop_recovery_preserves_closure_and_coefficients() {
+        check("fault-recovery", Config { cases: 40, ..Default::default() }, |rng, _| {
+            let d = rng.next_range(2, 4) as usize;
+            let n = rng.next_range(2, 5) as u8;
+            let s = CombinationScheme::regular(d, n);
+            let subs = s.sparse_subspaces();
+            let k = rng.next_range(1, 3) as usize;
+            let failed: Vec<LevelVector> = (0..k)
+                .map(|_| subs[rng.next_below(subs.len() as u64) as usize].clone())
+                .collect();
+            let Some(rec) = recover(&s, &failed) else {
+                // total loss is legal (e.g. the root grid died)
+                return Ok(());
+            };
+            // inclusion–exclusion: every surviving subspace counted once
+            validate(&rec)
+                .map_err(|l| format!("subspace {l} counted != 1 after losing {failed:?}"))?;
+            // the surviving set = original - failed - cascaded, downward closed
+            let mut survive: HashSet<LevelVector> = subs.iter().cloned().collect();
+            for l in failed.iter().chain(&rec.cascaded) {
+                survive.remove(l);
+            }
+            for l in &survive {
+                for j in 0..l.dim() {
+                    if l.level(j) > 1 {
+                        let mut v = l.as_slice().to_vec();
+                        v[j] -= 1;
+                        if !survive.contains(&LevelVector::new(&v)) {
+                            return Err(format!(
+                                "closure broken below {l} after losing {failed:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+            // the components' subspace union covers exactly the survivors
+            let mut covered: HashSet<LevelVector> = HashSet::new();
+            for c in &rec.components {
+                covered.extend(down_set(&c.levels));
+            }
+            if covered != survive {
+                return Err(format!(
+                    "components cover {} subspaces, {} survived (lost {failed:?})",
+                    covered.len(),
+                    survive.len()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// Losing the entire finest diagonal of regular(d, n) must recover to
+    /// exactly regular(d, n-1) — same components, same coefficients — and
+    /// the recovered interpolant must match one freshly built on the
+    /// surviving index set at every sample point.
+    #[test]
+    fn losing_the_top_diagonal_yields_the_next_lower_scheme() {
+        use crate::grid::FullGrid;
+        use crate::hierarchize::{Hierarchizer, Variant};
+        use crate::sparse::SparseGrid;
+        use crate::util::rng::SplitMix64;
+
+        let f = |x: &[f64]| {
+            x.iter().map(|&v| (std::f64::consts::PI * v).sin()).product::<f64>()
+        };
+        let assemble = |comps: &[Component]| {
+            let mut sg = SparseGrid::new();
+            for c in comps {
+                let mut g = FullGrid::new(c.levels.clone());
+                g.fill_with(f);
+                Variant::Ind.instance().hierarchize(&mut g);
+                sg.gather(&g, c.coeff);
+            }
+            sg
+        };
+        for (d, n) in [(2usize, 5u8), (3, 4)] {
+            let s = CombinationScheme::regular(d, n);
+            let top = n as u32 + d as u32 - 1;
+            let failed: Vec<LevelVector> = s
+                .components()
+                .iter()
+                .filter(|c| c.levels.sum() == top)
+                .map(|c| c.levels.clone())
+                .collect();
+            let rec = recover(&s, &failed).unwrap();
+            validate(&rec).unwrap();
+            assert!(rec.cascaded.is_empty(), "maximal diagonal loss cascades nothing");
+            let fresh = CombinationScheme::regular(d, n - 1);
+            let mut want: Vec<Component> = fresh.components().to_vec();
+            want.sort_by(|a, b| a.levels.cmp(&b.levels));
+            assert_eq!(rec.components.len(), want.len(), "d={d} n={n}");
+            for (got, want) in rec.components.iter().zip(&want) {
+                assert_eq!(got.levels, want.levels);
+                assert!(
+                    (got.coeff - want.coeff).abs() < 1e-12,
+                    "{}: {} vs {}",
+                    got.levels,
+                    got.coeff,
+                    want.coeff
+                );
+            }
+            // identical interpolants
+            let a = assemble(&rec.components);
+            let b = assemble(fresh.components());
+            let mut rng = SplitMix64::new(11);
+            for _ in 0..100 {
+                let x: Vec<f64> = (0..d).map(|_| rng.next_f64()).collect();
+                let (ea, eb) = (a.eval(&x), b.eval(&x));
+                assert!((ea - eb).abs() < 1e-12, "d={d} n={n} at {x:?}: {ea} vs {eb}");
+            }
+        }
+    }
 
     #[test]
     fn losing_a_maximal_grid_recovers_cleanly() {

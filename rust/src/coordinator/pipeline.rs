@@ -99,10 +99,6 @@ impl Coordinator {
     pub fn hierarchize_and_gather(&mut self) {
         use std::sync::atomic::{AtomicUsize, Ordering};
 
-        struct Ptr(*mut FullGrid);
-        unsafe impl Send for Ptr {}
-        unsafe impl Sync for Ptr {}
-
         let t = CycleTimer::start();
         let variant = self.cfg.variant.instance();
         self.sparse.clear();
@@ -139,16 +135,17 @@ impl Coordinator {
         let coeffs = &self.coeffs;
         let sparse = &mut self.sparse;
         let metrics = &self.metrics;
-        // All grid access below goes through one raw pointer: each index is
-        // claimed exactly once by a worker (unique &mut), and the leader
-        // reads a grid only after its index arrived over the channel
-        // (happens-after the worker's final write, and no one writes again).
-        let ptr = Ptr(self.grids.as_mut_ptr());
+        // All grid access below goes through one SharedSlice (grid::cells):
+        // each index is claimed exactly once by a worker (unique &mut,
+        // checked in debug builds), and the leader reads a grid only after
+        // its index arrived over the channel (happens-after the worker's
+        // final write, and no one writes again).
+        let shared = crate::grid::SharedSlice::new(&mut self.grids);
         let next = AtomicUsize::new(0);
         std::thread::scope(|s| {
             for _ in 0..workers {
                 let tx = tx.clone();
-                let (ptr, next, order) = (&ptr, &next, &order);
+                let (shared, next, order) = (&shared, &next, &order);
                 s.spawn(move || loop {
                     let k = next.fetch_add(1, Ordering::Relaxed);
                     if k >= n {
@@ -157,7 +154,7 @@ impl Coordinator {
                     let i = order[k];
                     // SAFETY: order is a permutation, so i is claimed
                     // exactly once -> unique &mut
-                    let g = unsafe { &mut *ptr.0.add(i) };
+                    let g = unsafe { shared.claim_mut(i) };
                     metrics.time("hierarchize", || {
                         g.convert_all(variant.layout());
                         variant.hierarchize(g);
@@ -172,8 +169,9 @@ impl Coordinator {
             }
             drop(tx); // leader's rx ends when all workers are done
             for i in rx.iter() {
-                // SAFETY: see above (read-after-completion, no more writers)
-                let g = unsafe { &*ptr.0.add(i) };
+                // SAFETY: receiving i happens-after the worker's final
+                // write, and no one writes grid i again
+                let g = unsafe { shared.read(i) };
                 metrics.time("gather", || sparse.gather(g, coeffs[i]));
             }
         });

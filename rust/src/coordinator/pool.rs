@@ -1,17 +1,17 @@
 //! Worker pool: index-stealing parallel-for over grids + streamed variant.
+//!
+//! All three entry points share one access pattern: the grid vector is
+//! wrapped in a [`SharedSlice`] (the element-granular half of the
+//! `grid::cells` unsafe core) and workers claim *indices* — through an
+//! atomic cursor or a verified permutation — so each grid's `&mut` is handed
+//! out exactly once.  Distinct elements occupy distinct storage, which keeps
+//! the pattern inside the Rust aliasing model; debug builds additionally
+//! panic if an index is ever claimed twice.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::SyncSender;
 
-use crate::grid::FullGrid;
-
-/// Shared-nothing `&mut` access to distinct vector elements across threads.
-///
-/// Soundness: every index is claimed exactly once from the atomic counter,
-/// so no two threads ever hold `&mut` to the same element.
-struct GridsPtr(*mut FullGrid);
-unsafe impl Send for GridsPtr {}
-unsafe impl Sync for GridsPtr {}
+use crate::grid::{FullGrid, SharedSlice};
 
 /// Apply `f(i, &mut grids[i])` to every grid, on `workers` threads.
 ///
@@ -28,20 +28,18 @@ where
         return;
     }
     let next = AtomicUsize::new(0);
-    let ptr = GridsPtr(grids.as_mut_ptr());
+    let shared = SharedSlice::new(grids);
     std::thread::scope(|s| {
         for _ in 0..workers.min(n) {
-            s.spawn(|| {
-                let ptr = &ptr;
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    // SAFETY: index i is claimed exactly once (see GridsPtr)
-                    let g = unsafe { &mut *ptr.0.add(i) };
-                    f(i, g);
+            let (shared, next, f) = (&shared, &next, &f);
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
                 }
+                // SAFETY: the atomic cursor yields each index exactly once
+                let g = unsafe { shared.claim_mut(i) };
+                f(i, g);
             });
         }
     });
@@ -72,22 +70,20 @@ where
         return;
     }
     let next = AtomicUsize::new(0);
-    let ptr = GridsPtr(grids.as_mut_ptr());
+    let shared = SharedSlice::new(grids);
     std::thread::scope(|s| {
         for _ in 0..workers.min(n) {
-            s.spawn(|| {
-                let ptr = &ptr;
-                loop {
-                    let k = next.fetch_add(1, Ordering::Relaxed);
-                    if k >= n {
-                        break;
-                    }
-                    let i = order[k];
-                    // SAFETY: `order` is a verified permutation, so index i
-                    // is claimed exactly once (see GridsPtr)
-                    let g = unsafe { &mut *ptr.0.add(i) };
-                    f(i, g);
+            let (shared, next, f) = (&shared, &next, &f);
+            s.spawn(move || loop {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= n {
+                    break;
                 }
+                let i = order[k];
+                // SAFETY: `order` is a verified permutation, so index i is
+                // claimed exactly once
+                let g = unsafe { shared.claim_mut(i) };
+                f(i, g);
             });
         }
     });
@@ -115,23 +111,21 @@ pub fn parallel_grids_streamed<F>(
         return;
     }
     let next = AtomicUsize::new(0);
-    let ptr = GridsPtr(grids.as_mut_ptr());
+    let shared = SharedSlice::new(grids);
     std::thread::scope(|s| {
         for _ in 0..workers.min(n) {
             let done = done.clone();
-            let (ptr, next, f) = (&ptr, &next, &f);
-            s.spawn(move || {
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    // SAFETY: index i is claimed exactly once
-                    let g = unsafe { &mut *ptr.0.add(i) };
-                    f(i, g);
-                    if done.send(i).is_err() {
-                        break;
-                    }
+            let (shared, next, f) = (&shared, &next, &f);
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: the atomic cursor yields each index exactly once
+                let g = unsafe { shared.claim_mut(i) };
+                f(i, g);
+                if done.send(i).is_err() {
+                    break;
                 }
             });
         }

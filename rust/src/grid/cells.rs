@@ -1,0 +1,492 @@
+//! The alias-clean unsafe core of the kernel layer.
+//!
+//! Alg. 1 parallelizes because poles (and the contiguous outer row-blocks of
+//! poles) touch pairwise disjoint storage.  Exploiting that with coexisting
+//! whole-buffer `&mut [f64]` views is what the Rust aliasing model forbids:
+//! two live `&mut` covering the same region are undefined behavior even if
+//! every *access* is disjoint.  This module is the one place the crate
+//! reasons about that:
+//!
+//! * [`GridCells`] owns the exclusive borrow of one grid buffer and exposes
+//!   it only as a raw pointer — the single provenance every kernel access
+//!   derives from.  Sharing `&GridCells` across threads is sound because no
+//!   `&mut f64` to the buffer exists anywhere while it lives.
+//! * [`PoleView`] / [`BlockView`] are checked carve-outs: a pole (arithmetic
+//!   sequence `base + j * stride`) or a contiguous block.  Carving is the
+//!   one `unsafe` operation — its contract is that no live view overlaps —
+//!   and it asserts in-bounds always; debug builds additionally claim every
+//!   slot in an atomic claim map, so two live views overlapping by even one
+//!   slot panic at the second carve, on whichever thread performs it.
+//!   Release builds carry no claim map and compile to the same code shape
+//!   as before the port: pole accessors keep the bounds check slice
+//!   indexing had, row pointers stay unchecked like the old `rows!` macro.
+//! * [`SharedSlice`] is the element-granular sibling for `&mut [T]` shared
+//!   across a worker pool: each index is claimed at most once (atomic-cursor
+//!   or verified-permutation discipline in the callers), so the `&mut T`
+//!   handed out never alias.  Distinct elements have distinct storage, which
+//!   keeps this pattern inside the aliasing model — unlike overlapping
+//!   whole-buffer slices.
+//!
+//! `cargo miri test` runs the unit tests below (and the scoped-down
+//! conformance suite) to hold the model-cleanliness claim; see the CI `miri`
+//! job.
+
+use std::marker::PhantomData;
+#[cfg(debug_assertions)]
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Shared, alias-clean handle to one grid buffer.
+///
+/// Constructed from the unique `&mut [f64]` (which it holds for `'a`, so the
+/// compiler rules out every other access path), it hands out [`PoleView`] /
+/// [`BlockView`] carve-outs whose slot sets must be pairwise disjoint while
+/// they live.  All element access goes through the stored raw pointer, so no
+/// `&mut` reference to any slot ever materializes — the pattern Miri's
+/// aliasing checks accept for cross-thread disjoint writes.
+pub struct GridCells<'a> {
+    ptr: *mut f64,
+    len: usize,
+    /// Debug-only claim map: slot -> "owned by a live view".
+    #[cfg(debug_assertions)]
+    claims: Vec<AtomicBool>,
+    _borrow: PhantomData<&'a mut [f64]>,
+}
+
+// SAFETY: the only mutation path is through carved views, and carving is an
+// `unsafe fn` whose contract is slot disjointness among live views (debug
+// builds verify it on the claim map), so concurrent access from several
+// threads never races on a slot.
+unsafe impl Send for GridCells<'_> {}
+unsafe impl Sync for GridCells<'_> {}
+
+impl<'a> GridCells<'a> {
+    /// Take over the buffer.  The `&mut` borrow lives as long as the cells,
+    /// so no slice access can alias the raw pointer while kernels run.
+    pub fn new(data: &'a mut [f64]) -> Self {
+        Self {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            #[cfg(debug_assertions)]
+            claims: (0..data.len()).map(|_| AtomicBool::new(false)).collect(),
+            _borrow: PhantomData,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Carve the pole `base + j * stride` for `j < len`.
+    ///
+    /// # Safety
+    /// No live view of these cells may overlap the carved slots while this
+    /// view exists — `GridCells` is `Sync`, so an overlapping carve used
+    /// from another thread would be a data race.  Debug builds enforce the
+    /// contract with the claim map; release builds trust it.
+    ///
+    /// # Panics
+    /// If the pole leaves the buffer; in debug builds also if any slot is
+    /// already owned by a live view (overlapping carve).
+    pub unsafe fn pole(&self, base: usize, stride: usize, len: usize) -> PoleView<'_, 'a> {
+        assert!(stride >= 1, "pole stride must be >= 1");
+        assert!(
+            len == 0 || base + (len - 1) * stride < self.len,
+            "pole carve out of bounds: base={base} stride={stride} len={len} buf={}",
+            self.len
+        );
+        #[cfg(debug_assertions)]
+        for j in 0..len {
+            self.claim(base + j * stride);
+        }
+        PoleView { cells: self, base, stride, len }
+    }
+
+    /// Carve the contiguous block `[start, start + len)`.
+    ///
+    /// # Safety
+    /// As [`GridCells::pole`]: no live view may overlap the carved range.
+    ///
+    /// # Panics
+    /// If the block leaves the buffer; in debug builds also if any slot is
+    /// already owned by a live view (overlapping carve).
+    pub unsafe fn block(&self, start: usize, len: usize) -> BlockView<'_, 'a> {
+        assert!(
+            start + len <= self.len,
+            "block carve out of bounds: start={start} len={len} buf={}",
+            self.len
+        );
+        #[cfg(debug_assertions)]
+        for slot in start..start + len {
+            self.claim(slot);
+        }
+        BlockView { cells: self, start, len }
+    }
+
+    #[cfg(debug_assertions)]
+    fn claim(&self, slot: usize) {
+        assert!(
+            !self.claims[slot].swap(true, Ordering::Relaxed),
+            "overlapping carve: slot {slot} is already owned by a live view"
+        );
+    }
+
+    #[cfg(debug_assertions)]
+    fn release(&self, slot: usize) {
+        self.claims[slot].store(false, Ordering::Relaxed);
+    }
+}
+
+/// One pole of a grid: logical element `j` lives at `base + j * stride`.
+///
+/// The unit of the scalar kernels (`ind`, `bfs`).  Accessors bounds-check
+/// `j` against the view — combined with the carve-time buffer check this
+/// keeps every dereference in bounds without any whole-buffer slice.
+pub struct PoleView<'c, 'a> {
+    cells: &'c GridCells<'a>,
+    base: usize,
+    stride: usize,
+    len: usize,
+}
+
+impl PoleView<'_, '_> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    fn slot(&self, j: usize) -> usize {
+        assert!(j < self.len, "pole access out of view: j={j} len={}", self.len);
+        self.base + j * self.stride
+    }
+
+    #[inline]
+    pub fn get(&self, j: usize) -> f64 {
+        // SAFETY: slot() checks j against the view; the carve checked the
+        // view against the buffer
+        unsafe { *self.cells.ptr.add(self.slot(j)) }
+    }
+
+    #[inline]
+    pub fn set(&self, j: usize, v: f64) {
+        // SAFETY: as in get(); this view owns the slot while it lives
+        unsafe { *self.cells.ptr.add(self.slot(j)) = v }
+    }
+}
+
+#[cfg(debug_assertions)]
+impl Drop for PoleView<'_, '_> {
+    fn drop(&mut self) {
+        for j in 0..self.len {
+            self.cells.release(self.base + j * self.stride);
+        }
+    }
+}
+
+/// One contiguous block `[start, start + len)` of a grid buffer — the unit
+/// of the row kernels (an outer block: all adjacent poles of one slice of
+/// the working dimension).  Offsets handed to [`BlockView::row_ptr`] are
+/// relative to the block start.
+pub struct BlockView<'c, 'a> {
+    cells: &'c GridCells<'a>,
+    start: usize,
+    len: usize,
+}
+
+impl BlockView<'_, '_> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Raw pointer to `n` consecutive elements at block-relative `off`.
+    ///
+    /// The row kernels' access base.  Debug builds bounds-check the row
+    /// against the view (like the `rows!` macro this replaces); release
+    /// builds compile to the same unchecked pointer arithmetic as before
+    /// the port, so the paper's flops/cycle numbers are unperturbed.  The
+    /// row kernels only pass offsets derived from the sub-level structure
+    /// of the carved block, which the carve bounded against the buffer.
+    #[inline]
+    pub fn row_ptr(&self, off: usize, n: usize) -> *mut f64 {
+        debug_assert!(
+            off + n <= self.len,
+            "row out of block: off={off} n={n} block_len={}",
+            self.len
+        );
+        // SAFETY: the carve checked [start, start + len) against the buffer
+        unsafe { self.cells.ptr.add(self.start + off) }
+    }
+
+    /// Read-only variant of [`BlockView::row_ptr`].
+    #[inline]
+    pub fn row_const(&self, off: usize, n: usize) -> *const f64 {
+        self.row_ptr(off, n) as *const f64
+    }
+
+    #[inline]
+    pub fn get(&self, off: usize) -> f64 {
+        // SAFETY: row_ptr checks off against the view
+        unsafe { *self.row_ptr(off, 1) }
+    }
+
+    #[inline]
+    pub fn set(&self, off: usize, v: f64) {
+        // SAFETY: row_ptr checks off against the view
+        unsafe { *self.row_ptr(off, 1) = v }
+    }
+}
+
+#[cfg(debug_assertions)]
+impl Drop for BlockView<'_, '_> {
+    fn drop(&mut self) {
+        for slot in self.start..self.start + self.len {
+            self.cells.release(slot);
+        }
+    }
+}
+
+/// Element-granular shared `&mut [T]` for worker pools.
+///
+/// The coordinator's pools hand each worker exclusive `&mut T` access to
+/// single elements of one vector (grids, typically), claimed through an
+/// atomic cursor or a verified permutation.  Centralizing the raw-pointer
+/// pattern here keeps the soundness argument in one place:
+///
+/// * distinct elements occupy distinct storage, so the `&mut T` returned by
+///   [`SharedSlice::claim_mut`] for different indices never overlap — this
+///   is the aliasing-model-clean sibling of the slice `split_at_mut` family;
+/// * debug builds verify the claim-once discipline with an atomic claim map
+///   (a second `claim_mut` of the same index panics);
+/// * readers use [`SharedSlice::read`] only after a happens-before edge from
+///   the writer's completion (channel receive, scope join).
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    #[cfg(debug_assertions)]
+    claims: Vec<AtomicBool>,
+    _borrow: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: hands out &mut T to distinct elements only (claim-once
+// discipline), which needs T: Send to cross threads; `read` additionally
+// allows concurrent &T from several threads once the writer is done, which
+// needs T: Sync.
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send + Sync> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(data: &'a mut [T]) -> Self {
+        Self {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            #[cfg(debug_assertions)]
+            claims: (0..data.len()).map(|_| AtomicBool::new(false)).collect(),
+            _borrow: PhantomData,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exclusive access to element `i`.
+    ///
+    /// # Safety
+    /// Each index must be claimed at most once over the life of this
+    /// `SharedSlice` (debug builds panic on a repeat claim), and nothing may
+    /// [`SharedSlice::read`] the element while the returned `&mut T` is
+    /// live.
+    #[allow(clippy::mut_from_ref)] // the claim-once contract is the point
+    pub unsafe fn claim_mut(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "claim out of bounds: {i} >= {}", self.len);
+        #[cfg(debug_assertions)]
+        assert!(
+            !self.claims[i].swap(true, Ordering::Relaxed),
+            "element {i} claimed twice"
+        );
+        // SAFETY: i is in bounds; uniqueness is the caller's contract above
+        unsafe { &mut *self.ptr.add(i) }
+    }
+
+    /// Shared read access to element `i`.
+    ///
+    /// # Safety
+    /// The caller must have established a happens-before edge from the final
+    /// write of the thread that claimed `i` (e.g. receiving `i` over a
+    /// channel the writer sent to after finishing), and no `&mut T` to the
+    /// element may be used afterwards.
+    pub unsafe fn read(&self, i: usize) -> &T {
+        assert!(i < self.len, "read out of bounds: {i} >= {}", self.len);
+        // SAFETY: in bounds; exclusivity has ended per the contract above
+        unsafe { &*self.ptr.add(i) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn carve_read_write_roundtrip() {
+        let mut buf: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        {
+            let cells = GridCells::new(&mut buf);
+            assert_eq!(cells.len(), 12);
+            // SAFETY: no other view is live
+            let p = unsafe { cells.pole(1, 3, 4) }; // slots 1, 4, 7, 10
+            assert_eq!(p.len(), 4);
+            assert_eq!(p.get(2), 7.0);
+            p.set(2, -7.0);
+            drop(p);
+            // SAFETY: the pole view was dropped; nothing overlaps
+            let b = unsafe { cells.block(4, 4) }; // slots 4..8
+            assert_eq!(b.get(3), -7.0);
+            b.set(0, 40.0);
+        }
+        assert_eq!(buf[7], -7.0);
+        assert_eq!(buf[4], 40.0);
+    }
+
+    #[test]
+    fn disjoint_carves_coexist() {
+        let mut buf = vec![0f64; 10];
+        let cells = GridCells::new(&mut buf);
+        // SAFETY: even and odd slots are disjoint
+        let a = unsafe { cells.pole(0, 2, 5) }; // evens
+        let b = unsafe { cells.pole(1, 2, 5) }; // odds
+        a.set(0, 1.0);
+        b.set(0, 2.0);
+        drop((a, b));
+        // SAFETY: both poles were dropped
+        let c = unsafe { cells.block(0, 10) }; // whole buffer, now free again
+        assert_eq!(c.get(0), 1.0);
+        assert_eq!(c.get(1), 2.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "overlapping carve")]
+    fn overlapping_carve_panics_in_debug() {
+        let mut buf = vec![0f64; 8];
+        let cells = GridCells::new(&mut buf);
+        // SAFETY: debug builds catch the deliberate overlap below
+        let _a = unsafe { cells.block(0, 5) };
+        let _b = unsafe { cells.pole(4, 2, 2) }; // slot 4 collides with the block
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn carve_past_the_buffer_panics() {
+        let mut buf = vec![0f64; 8];
+        let cells = GridCells::new(&mut buf);
+        let _ = unsafe { cells.pole(0, 3, 4) }; // would touch slot 9
+    }
+
+    #[test]
+    #[should_panic(expected = "out of view")]
+    fn pole_access_past_the_view_panics() {
+        let mut buf = vec![0f64; 8];
+        let cells = GridCells::new(&mut buf);
+        // SAFETY: no other view is live
+        let p = unsafe { cells.pole(0, 1, 4) };
+        let _ = p.get(4);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "row out of block")]
+    fn row_past_the_block_panics() {
+        let mut buf = vec![0f64; 8];
+        let cells = GridCells::new(&mut buf);
+        // SAFETY: no other view is live
+        let b = unsafe { cells.block(0, 6) };
+        let _ = b.row_ptr(4, 3);
+    }
+
+    /// The aliasing-model regression the whole module exists for: many
+    /// threads writing disjoint carves of one buffer, no `&mut` views.
+    /// `cargo miri test` flags any UB here.
+    #[test]
+    fn threaded_disjoint_carves_are_race_free() {
+        let n_poles = 8usize;
+        let pole_len = 16usize;
+        let mut buf = vec![0f64; n_poles * pole_len];
+        {
+            let cells = GridCells::new(&mut buf);
+            let cells = &cells;
+            std::thread::scope(|s| {
+                for q in 0..n_poles {
+                    s.spawn(move || {
+                        // SAFETY: interleaved poles (stride = n_poles)
+                        // are pairwise disjoint across q
+                        let p = unsafe { cells.pole(q, n_poles, pole_len) };
+                        for j in 0..pole_len {
+                            p.set(j, (q * pole_len + j) as f64);
+                        }
+                    });
+                }
+            });
+        }
+        for q in 0..n_poles {
+            for j in 0..pole_len {
+                assert_eq!(buf[q + j * n_poles], (q * pole_len + j) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_slice_parallel_claims() {
+        let mut xs: Vec<u64> = vec![0; 64];
+        {
+            let shared = SharedSlice::new(&mut xs);
+            let shared = &shared;
+            std::thread::scope(|s| {
+                for t in 0..4 {
+                    s.spawn(move || {
+                        for i in (t..64).step_by(4) {
+                            // SAFETY: t + 4k partitions the index range
+                            let x = unsafe { shared.claim_mut(i) };
+                            *x = i as u64 + 1;
+                        }
+                    });
+                }
+            });
+        }
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(*x, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "claimed twice")]
+    fn shared_slice_double_claim_panics_in_debug() {
+        let mut xs = vec![0u8; 4];
+        let shared = SharedSlice::new(&mut xs);
+        let _a = unsafe { shared.claim_mut(2) };
+        let _b = unsafe { shared.claim_mut(2) };
+    }
+}

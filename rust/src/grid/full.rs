@@ -122,6 +122,15 @@ impl FullGrid {
         &mut self.data
     }
 
+    /// Alias-clean shared handle to the raw storage, for carving the
+    /// checked [`PoleView`](super::PoleView)/[`BlockView`](super::BlockView)
+    /// work units of the kernel layer (see [`super::GridCells`]).  Holds the
+    /// exclusive borrow of the grid while any carve is live.
+    #[inline]
+    pub fn cells(&mut self) -> super::GridCells<'_> {
+        super::GridCells::new(&mut self.data)
+    }
+
     /// Storage offset of the point with 0-based *storage* coordinates `c`.
     #[inline]
     pub fn offset(&self, c: &[usize]) -> usize {

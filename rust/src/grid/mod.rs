@@ -11,12 +11,14 @@
 //!   matching the paper's `x1` and the last numpy axis of the python layer.
 
 mod bfs;
+mod cells;
 mod full;
 mod level;
 mod point;
 mod pole;
 
 pub use bfs::{bfs_from_position, bfs_to_position, BfsNav, LayoutMap};
+pub use cells::{BlockView, GridCells, PoleView, SharedSlice};
 pub use full::{AxisLayout, FullGrid};
 pub use level::LevelVector;
 pub use point::{hier_coords, position_of, predecessors, HierCoord1d};

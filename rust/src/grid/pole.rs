@@ -7,6 +7,7 @@
 //! `outer` and consecutive `inner` are **adjacent in memory** — this is what
 //! the paper's unrolling / vectorization / over-vectorization exploit.
 
+use super::cells::{BlockView, GridCells, PoleView};
 use super::full::FullGrid;
 
 /// Enumerates the base storage offsets of all poles in direction `axis`.
@@ -64,6 +65,40 @@ impl Poles {
     /// Iterate base offsets.
     pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
         (0..self.count()).map(|q| self.base(q))
+    }
+
+    /// Checked carve of pole `q` — the work unit of the scalar kernels.
+    /// Poles of one decomposition are pairwise disjoint, so every `q` can be
+    /// carved concurrently (debug builds verify this on the claim map).
+    ///
+    /// # Safety
+    /// Pole `q` must not be carved twice concurrently, and no other carve of
+    /// these cells may overlap it (see [`GridCells::pole`]); distinct `q` of
+    /// one decomposition are always safe together.
+    pub unsafe fn pole_view<'c, 'a>(
+        &self,
+        cells: &'c GridCells<'a>,
+        q: usize,
+    ) -> PoleView<'c, 'a> {
+        // SAFETY: forwarded contract — the caller guarantees unit uniqueness
+        unsafe { cells.pole(self.base(q), self.stride, self.len) }
+    }
+
+    /// Checked carve of outer block `ob` — the work unit of the row kernels:
+    /// all `inner` adjacent poles of one outer slice, contiguous in storage
+    /// (`inner * len` slots; for axes >= 1 that equals `outer_step`).
+    ///
+    /// # Safety
+    /// As [`Poles::pole_view`]: block `ob` must be carved at most once at a
+    /// time; distinct blocks never overlap.
+    pub unsafe fn block_view<'c, 'a>(
+        &self,
+        cells: &'c GridCells<'a>,
+        ob: usize,
+    ) -> BlockView<'c, 'a> {
+        debug_assert!(ob < self.outer, "outer block {ob} >= {}", self.outer);
+        // SAFETY: forwarded contract — the caller guarantees unit uniqueness
+        unsafe { cells.block(ob * self.outer_step, self.inner * self.len) }
     }
 }
 
@@ -134,6 +169,38 @@ mod tests {
                 }
             }
             assert!(seen.iter().all(|&s| s == 1), "axis {ax}");
+        }
+    }
+
+    #[test]
+    fn all_pole_views_coexist_without_overlap() {
+        // carving every pole of a decomposition at once exercises the debug
+        // claim map: any overlap would panic
+        let mut g = FullGrid::new(LevelVector::new(&[2, 2, 3]));
+        let total = g.as_slice().len();
+        for ax in 0..3 {
+            let poles = Poles::of(&g, ax);
+            let cells = g.cells();
+            // SAFETY: poles of one decomposition are pairwise disjoint
+            let views: Vec<_> =
+                (0..poles.count()).map(|q| unsafe { poles.pole_view(&cells, q) }).collect();
+            let covered: usize = views.iter().map(|v| v.len()).sum();
+            assert_eq!(covered, total, "axis {ax}");
+        }
+    }
+
+    #[test]
+    fn all_block_views_coexist_without_overlap() {
+        let mut g = FullGrid::new(LevelVector::new(&[3, 2, 2]));
+        let total = g.as_slice().len();
+        for ax in 1..3 {
+            let poles = Poles::of(&g, ax);
+            let cells = g.cells();
+            // SAFETY: outer blocks are pairwise disjoint
+            let views: Vec<_> =
+                (0..poles.outer).map(|ob| unsafe { poles.block_view(&cells, ob) }).collect();
+            let covered: usize = views.iter().map(|v| v.len()).sum();
+            assert_eq!(covered, total, "axis {ax}");
         }
     }
 

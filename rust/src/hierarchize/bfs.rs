@@ -5,47 +5,52 @@
 //! navigation happens in heap numbering: one predecessor is the tree parent
 //! (one level up), the other may require climbing to the root — the
 //! branching the paper discusses under "Reducing the flop count".
+//!
+//! Like the `Ind` family, the pole kernels operate on checked [`PoleView`]
+//! carve-outs (view element `j` = heap rank `j`), shared between the serial
+//! sweeps and the parallel engine.
 
-use crate::grid::{AxisLayout, BfsNav, FullGrid, Poles};
+use crate::grid::{AxisLayout, BfsNav, FullGrid, PoleView, Poles};
 
 use super::Hierarchizer;
 
-/// Hierarchize one pole stored in BFS (heap) order; `st` = element stride.
+/// Hierarchize one pole stored in BFS (heap) order; element `j` of the view
+/// holds heap node `j + 1`.
 #[inline]
-pub(crate) fn pole_hierarchize_bfs(data: &mut [f64], base: usize, st: usize, l: u8) {
+pub(crate) fn pole_hierarchize_bfs(p: &PoleView, l: u8) {
     for lev in (2..=l).rev() {
         let first = 1u32 << (lev - 1);
         let last = (1u32 << lev) - 1;
         for h in first..=last {
-            let x = base + (h as usize - 1) * st;
-            let mut v = data[x];
+            let x = h as usize - 1;
+            let mut v = p.get(x);
             if let Some(a) = BfsNav::left_pred(h) {
-                v -= 0.5 * data[base + (a as usize - 1) * st];
+                v -= 0.5 * p.get(a as usize - 1);
             }
             if let Some(b) = BfsNav::right_pred(h) {
-                v -= 0.5 * data[base + (b as usize - 1) * st];
+                v -= 0.5 * p.get(b as usize - 1);
             }
-            data[x] = v;
+            p.set(x, v);
         }
     }
 }
 
 /// Dehierarchize one pole stored in BFS order.
 #[inline]
-pub(crate) fn pole_dehierarchize_bfs(data: &mut [f64], base: usize, st: usize, l: u8) {
+pub(crate) fn pole_dehierarchize_bfs(p: &PoleView, l: u8) {
     for lev in 2..=l {
         let first = 1u32 << (lev - 1);
         let last = (1u32 << lev) - 1;
         for h in first..=last {
-            let x = base + (h as usize - 1) * st;
-            let mut v = data[x];
+            let x = h as usize - 1;
+            let mut v = p.get(x);
             if let Some(a) = BfsNav::left_pred(h) {
-                v += 0.5 * data[base + (a as usize - 1) * st];
+                v += 0.5 * p.get(a as usize - 1);
             }
             if let Some(b) = BfsNav::right_pred(h) {
-                v += 0.5 * data[base + (b as usize - 1) * st];
+                v += 0.5 * p.get(b as usize - 1);
             }
-            data[x] = v;
+            p.set(x, v);
         }
     }
 }
@@ -59,39 +64,39 @@ fn rev_rank(l: u8, h: u32) -> usize {
 }
 
 #[inline]
-pub(crate) fn pole_hierarchize_rev(data: &mut [f64], base: usize, st: usize, l: u8) {
+pub(crate) fn pole_hierarchize_rev(p: &PoleView, l: u8) {
     for lev in (2..=l).rev() {
         let first = 1u32 << (lev - 1);
         let last = (1u32 << lev) - 1;
         for h in first..=last {
-            let x = base + rev_rank(l, h) * st;
-            let mut v = data[x];
+            let x = rev_rank(l, h);
+            let mut v = p.get(x);
             if let Some(a) = BfsNav::left_pred(h) {
-                v -= 0.5 * data[base + rev_rank(l, a) * st];
+                v -= 0.5 * p.get(rev_rank(l, a));
             }
             if let Some(b) = BfsNav::right_pred(h) {
-                v -= 0.5 * data[base + rev_rank(l, b) * st];
+                v -= 0.5 * p.get(rev_rank(l, b));
             }
-            data[x] = v;
+            p.set(x, v);
         }
     }
 }
 
 #[inline]
-pub(crate) fn pole_dehierarchize_rev(data: &mut [f64], base: usize, st: usize, l: u8) {
+pub(crate) fn pole_dehierarchize_rev(p: &PoleView, l: u8) {
     for lev in 2..=l {
         let first = 1u32 << (lev - 1);
         let last = (1u32 << lev) - 1;
         for h in first..=last {
-            let x = base + rev_rank(l, h) * st;
-            let mut v = data[x];
+            let x = rev_rank(l, h);
+            let mut v = p.get(x);
             if let Some(a) = BfsNav::left_pred(h) {
-                v += 0.5 * data[base + rev_rank(l, a) * st];
+                v += 0.5 * p.get(rev_rank(l, a));
             }
             if let Some(b) = BfsNav::right_pred(h) {
-                v += 0.5 * data[base + rev_rank(l, b) * st];
+                v += 0.5 * p.get(rev_rank(l, b));
             }
-            data[x] = v;
+            p.set(x, v);
         }
     }
 }
@@ -103,13 +108,15 @@ fn sweep(g: &mut FullGrid, rev: bool, up: bool) {
             continue;
         }
         let poles = Poles::of(g, dim);
-        let data = g.as_mut_slice();
-        for base in poles.iter() {
+        let cells = g.cells();
+        for q in 0..poles.count() {
+            // SAFETY: one pole view live at a time, serial loop
+            let p = unsafe { poles.pole_view(&cells, q) };
             match (rev, up) {
-                (false, false) => pole_hierarchize_bfs(data, base, poles.stride, l),
-                (false, true) => pole_dehierarchize_bfs(data, base, poles.stride, l),
-                (true, false) => pole_hierarchize_rev(data, base, poles.stride, l),
-                (true, true) => pole_dehierarchize_rev(data, base, poles.stride, l),
+                (false, false) => pole_hierarchize_bfs(&p, l),
+                (false, true) => pole_dehierarchize_bfs(&p, l),
+                (true, false) => pole_hierarchize_rev(&p, l),
+                (true, true) => pole_dehierarchize_rev(&p, l),
             }
         }
     }

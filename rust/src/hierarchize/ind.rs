@@ -13,40 +13,47 @@
 //!   "Chosen results": the paper found *no* cycle change — ablation E8);
 //! * [`IndVectorized`] — §6 "further ideas": the row-wise (over-)vectorized
 //!   variant of `Ind` for working dimensions >= 2 (ablation E9).
+//!
+//! All kernels operate on checked [`PoleView`]/[`BlockView`] carve-outs of
+//! the shared [`GridCells`](crate::grid::GridCells) buffer, so the same code
+//! serves the serial sweeps here and the sharded workers of
+//! [`hierarchize::parallel`](super::parallel) without ever materializing
+//! aliased `&mut [f64]` views.
 
-use crate::grid::{AxisLayout, FullGrid, Poles};
+use crate::grid::{AxisLayout, BlockView, FullGrid, PoleView, Poles};
 
 use super::simd;
 use super::Hierarchizer;
 
 /// Scalar hierarchization of one pole in position layout.
 ///
-/// `st` is the element stride, `l` the axis level.  Sub-levels are processed
-/// fine -> coarse; the two outermost points of each sub-level are peeled so
-/// the interior loop is branch-free (both predecessors always exist).
+/// The view's element `j` is the 1-based axis position `j + 1`; `l` is the
+/// axis level.  Sub-levels are processed fine -> coarse; the two outermost
+/// points of each sub-level are peeled so the interior loop is branch-free
+/// (both predecessors always exist).
 #[inline]
-pub(crate) fn pole_hierarchize(data: &mut [f64], base: usize, st: usize, l: u8, reduced: bool) {
+pub(crate) fn pole_hierarchize(p: &PoleView, l: u8, reduced: bool) {
     for lev in (2..=l).rev() {
         let s = 1usize << (l - lev);
         let end = 1usize << l; // virtual boundary position
         // first point of the sub-level: position s, only the right predecessor
-        let x = base + (s - 1) * st;
-        data[x] -= 0.5 * data[x + s * st];
+        let j = s - 1;
+        p.set(j, p.get(j) - 0.5 * p.get(j + s));
         // last point: position end - s, only the left predecessor
-        let x = base + (end - s - 1) * st;
-        data[x] -= 0.5 * data[x - s * st];
+        let j = end - s - 1;
+        p.set(j, p.get(j) - 0.5 * p.get(j - s));
         // interior points: positions 3s, 5s, ..., end - 3s — two predecessors
         let mut pos = 3 * s;
         if reduced {
             while pos + s < end {
-                let x = base + (pos - 1) * st;
-                data[x] -= 0.5 * (data[x - s * st] + data[x + s * st]);
+                let j = pos - 1;
+                p.set(j, p.get(j) - 0.5 * (p.get(j - s) + p.get(j + s)));
                 pos += 2 * s;
             }
         } else {
             while pos + s < end {
-                let x = base + (pos - 1) * st;
-                data[x] -= 0.5 * data[x - s * st] + 0.5 * data[x + s * st];
+                let j = pos - 1;
+                p.set(j, p.get(j) - (0.5 * p.get(j - s) + 0.5 * p.get(j + s)));
                 pos += 2 * s;
             }
         }
@@ -55,18 +62,18 @@ pub(crate) fn pole_hierarchize(data: &mut [f64], base: usize, st: usize, l: u8, 
 
 /// Scalar dehierarchization of one pole (coarse -> fine, sign flipped).
 #[inline]
-pub(crate) fn pole_dehierarchize(data: &mut [f64], base: usize, st: usize, l: u8) {
+pub(crate) fn pole_dehierarchize(p: &PoleView, l: u8) {
     for lev in 2..=l {
         let s = 1usize << (l - lev);
         let end = 1usize << l;
-        let x = base + (s - 1) * st;
-        data[x] += 0.5 * data[x + s * st];
-        let x = base + (end - s - 1) * st;
-        data[x] += 0.5 * data[x - s * st];
+        let j = s - 1;
+        p.set(j, p.get(j) + 0.5 * p.get(j + s));
+        let j = end - s - 1;
+        p.set(j, p.get(j) + 0.5 * p.get(j - s));
         let mut pos = 3 * s;
         while pos + s < end {
-            let x = base + (pos - 1) * st;
-            data[x] += 0.5 * data[x - s * st] + 0.5 * data[x + s * st];
+            let j = pos - 1;
+            p.set(j, p.get(j) + (0.5 * p.get(j - s) + 0.5 * p.get(j + s)));
             pos += 2 * s;
         }
     }
@@ -80,12 +87,14 @@ fn sweep_scalar(g: &mut FullGrid, reduced: bool, up: bool) {
             continue;
         }
         let poles = Poles::of(g, dim);
-        let data = g.as_mut_slice();
-        for base in poles.iter() {
+        let cells = g.cells();
+        for q in 0..poles.count() {
+            // SAFETY: one pole view live at a time, serial loop
+            let p = unsafe { poles.pole_view(&cells, q) };
             if up {
-                pole_dehierarchize(data, base, poles.stride, l);
+                pole_dehierarchize(&p, l);
             } else {
-                pole_hierarchize(data, base, poles.stride, l, reduced);
+                pole_hierarchize(&p, l, reduced);
             }
         }
     }
@@ -140,37 +149,31 @@ impl Hierarchizer for IndReducedOp {
 pub struct IndVectorized;
 
 /// One outer block of the vectorized `Ind` sweep for a working dimension
-/// >= 2: all `w`-wide rows in `[ob, ob + w * (2^l - 1))`, navigated by
-/// position arithmetic.  Blocks are disjoint in storage, which is what lets
+/// >= 2: all `w`-wide rows of the carved block, navigated by position
+/// arithmetic (row of position `pos` starts at block offset `(pos-1) * w`).
+/// Blocks are disjoint in storage, which is what lets
 /// `hierarchize::parallel` shard a dimension across the worker pool while
 /// staying bitwise identical to the serial sweep.
-pub(crate) fn vec_rows_block(
-    data: &mut [f64],
-    ob: usize,
-    w: usize,
-    l: u8,
-    up: bool,
-    k: simd::RowKernels,
-) {
+pub(crate) fn vec_rows_block(blk: &BlockView, w: usize, l: u8, up: bool, k: simd::RowKernels) {
     let end = 1usize << l;
-    let row = |pos: usize| ob + (pos - 1) * w;
+    let row = |pos: usize| (pos - 1) * w;
     let subs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
     for lev in subs {
         let s = 1usize << (l - lev);
         if up {
-            (k.add1)(data, row(s), row(2 * s), w);
-            (k.add1)(data, row(end - s), row(end - 2 * s), w);
+            (k.add1)(blk, row(s), row(2 * s), w);
+            (k.add1)(blk, row(end - s), row(end - 2 * s), w);
             let mut pos = 3 * s;
             while pos + s < end {
-                (k.add2)(data, row(pos), row(pos - s), row(pos + s), w);
+                (k.add2)(blk, row(pos), row(pos - s), row(pos + s), w);
                 pos += 2 * s;
             }
         } else {
-            (k.sub1)(data, row(s), row(2 * s), w);
-            (k.sub1)(data, row(end - s), row(end - 2 * s), w);
+            (k.sub1)(blk, row(s), row(2 * s), w);
+            (k.sub1)(blk, row(end - s), row(end - 2 * s), w);
             let mut pos = 3 * s;
             while pos + s < end {
-                (k.sub2)(data, row(pos), row(pos - s), row(pos + s), w);
+                (k.sub2)(blk, row(pos), row(pos - s), row(pos + s), w);
                 pos += 2 * s;
             }
         }
@@ -186,19 +189,23 @@ fn sweep_vectorized(g: &mut FullGrid, up: bool) {
             continue;
         }
         let poles = Poles::of(g, dim);
-        let data = g.as_mut_slice();
+        let cells = g.cells();
         if dim == 0 {
-            for base in poles.iter() {
+            for q in 0..poles.count() {
+                // SAFETY: one pole view live at a time, serial loop
+                let p = unsafe { poles.pole_view(&cells, q) };
                 if up {
-                    pole_dehierarchize(data, base, 1, l);
+                    pole_dehierarchize(&p, l);
                 } else {
-                    pole_hierarchize(data, base, 1, l, false);
+                    pole_hierarchize(&p, l, false);
                 }
             }
             continue;
         }
         for outer in 0..poles.outer {
-            vec_rows_block(data, outer * poles.outer_step, poles.inner, l, up, k);
+            // SAFETY: one block view live at a time, serial loop
+            let blk = unsafe { poles.block_view(&cells, outer) };
+            vec_rows_block(&blk, poles.inner, l, up, k);
         }
     }
 }

@@ -18,7 +18,7 @@
 //!   use the reduced multiplication count `x -= 0.5 * (a + b)` (the paper
 //!   measured no gain — the critical path stays three flops; ablation E8).
 
-use crate::grid::{AxisLayout, BfsNav, FullGrid, Poles};
+use crate::grid::{AxisLayout, BfsNav, BlockView, FullGrid, Poles};
 
 use super::bfs::{pole_dehierarchize_bfs, pole_hierarchize_bfs};
 use super::simd;
@@ -32,19 +32,19 @@ pub(crate) enum Mode {
 }
 
 /// One outer block of the over-vectorized sweep for a working dimension
-/// >= 2: every BFS node's `w`-wide row in `[ob, ob + w * (2^l - 1))`.
-/// Blocks are disjoint in storage; `hierarchize::parallel` shards a
-/// dimension over them bitwise-identically to the serial sweep.
+/// >= 2: every BFS node's `w`-wide row of the carved block (node `h` starts
+/// at block offset `(h-1) * w`).  Blocks are disjoint in storage;
+/// `hierarchize::parallel` shards a dimension over them bitwise-identically
+/// to the serial sweep.
 pub(crate) fn overvec_block(
-    data: &mut [f64],
-    ob: usize,
+    blk: &BlockView,
     w: usize,
     l: u8,
     up: bool,
     mode: Mode,
     k: simd::RowKernels,
 ) {
-    let (app1, app2): (fn(&mut [f64], usize, usize, usize), _) = if up {
+    let (app1, app2): (fn(&BlockView, usize, usize, usize), _) = if up {
         (k.add1, k.add2)
     } else {
         match mode {
@@ -52,7 +52,7 @@ pub(crate) fn overvec_block(
             _ => (k.sub1, k.sub2),
         }
     };
-    let row = |h: u32| ob + (h as usize - 1) * w;
+    let row = |h: u32| (h as usize - 1) * w;
     let levs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
     for lev in levs {
         let first = 1u32 << (lev - 1);
@@ -61,24 +61,24 @@ pub(crate) fn overvec_block(
             // branch per node
             for h in first..=last {
                 match (BfsNav::left_pred(h), BfsNav::right_pred(h)) {
-                    (Some(a), Some(b)) => app2(data, row(h), row(a), row(b), w),
-                    (Some(a), None) => app1(data, row(h), row(a), w),
-                    (None, Some(b)) => app1(data, row(h), row(b), w),
+                    (Some(a), Some(b)) => app2(blk, row(h), row(a), row(b), w),
+                    (Some(a), None) => app1(blk, row(h), row(a), w),
+                    (None, Some(b)) => app1(blk, row(h), row(b), w),
                     (None, None) => {}
                 }
             }
         } else {
             // pre-branched: peel the two single-predecessor boundary
             // nodes, then a branch-free interior loop
-            app1(data, row(first), row(first >> 1), w); // leftmost: parent is right pred
+            app1(blk, row(first), row(first >> 1), w); // leftmost: parent is right pred
             if last != first {
-                app1(data, row(last), row(last >> 1), w); // rightmost: parent is left pred
+                app1(blk, row(last), row(last >> 1), w); // rightmost: parent is left pred
             }
             for h in (first + 1)..last {
                 // interior: both predecessors exist
                 let a = BfsNav::left_pred(h).unwrap();
                 let b = BfsNav::right_pred(h).unwrap();
-                app2(data, row(h), row(a), row(b), w);
+                app2(blk, row(h), row(a), row(b), w);
             }
         }
     }
@@ -92,21 +92,25 @@ fn sweep(g: &mut FullGrid, up: bool, mode: Mode) {
             continue;
         }
         let poles = Poles::of(g, dim);
-        let data = g.as_mut_slice();
+        let cells = g.cells();
         if dim == 0 {
             // no adjacent poles to fuse: scalar BFS pole walk (paper: the
             // 1-d case is the only one with visibly lower performance)
-            for base in poles.iter() {
+            for q in 0..poles.count() {
+                // SAFETY: one pole view live at a time, serial loop
+                let p = unsafe { poles.pole_view(&cells, q) };
                 if up {
-                    pole_dehierarchize_bfs(data, base, 1, l);
+                    pole_dehierarchize_bfs(&p, l);
                 } else {
-                    pole_hierarchize_bfs(data, base, 1, l);
+                    pole_hierarchize_bfs(&p, l);
                 }
             }
             continue;
         }
         for outer in 0..poles.outer {
-            overvec_block(data, outer * poles.outer_step, poles.inner, l, up, mode, k);
+            // SAFETY: one block view live at a time, serial loop
+            let blk = unsafe { poles.block_view(&cells, outer) };
+            overvec_block(&blk, poles.inner, l, up, mode, k);
         }
     }
 }

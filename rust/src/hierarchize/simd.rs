@@ -13,18 +13,27 @@
 //! the manual 4-way f64 vectorization of the paper; the scalar paths double
 //! as the fallback and as the "let the compiler try" ablation (E9).
 //!
-//! The `dst`/`a`/`b` row starts index into one shared grid buffer; rows of
-//! distinct sub-levels never overlap (predecessors are strictly coarser), so
-//! the raw-pointer arithmetic below is sound — debug assertions verify
-//! disjointness on every call.
+//! The `dst`/`a`/`b` row starts are offsets into one [`BlockView`] carved
+//! from the shared [`GridCells`](crate::grid::GridCells) buffer; rows of
+//! distinct sub-levels never overlap (predecessors are strictly coarser).
+//! All loads and stores go through the view's raw pointer — no `&mut [f64]`
+//! is ever materialized, which is what keeps the multi-threaded block sweep
+//! inside the Rust aliasing model (see `grid::cells`).  Debug builds
+//! bounds-check every row against the view; release builds compile to the
+//! same unchecked pointer arithmetic as before the port (the old `rows!`
+//! macro was `debug_assert!`-only too).
 
-/// True if the AVX fast paths are in use on this machine.
+use crate::grid::BlockView;
+
+/// True if the AVX fast paths are in use on this machine.  Forced off under
+/// Miri: the interpreter has no AVX, and the scalar paths are the ones whose
+/// aliasing discipline the `miri` CI job checks.
 pub fn avx_available() -> bool {
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
         std::arch::is_x86_feature_detected!("avx")
     }
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
     {
         false
     }
@@ -32,83 +41,82 @@ pub fn avx_available() -> bool {
 
 #[inline(always)]
 fn check_disjoint(dst: usize, src: usize, len: usize) {
-    debug_assert!(dst + len <= src || src + len <= dst, "rows overlap: dst={dst} src={src} len={len}");
-}
-
-macro_rules! rows {
-    ($data:ident, $dst:ident, $len:ident => $x:ident) => {
-        let $x = unsafe { $data.as_mut_ptr().add($dst) };
-        debug_assert!($dst + $len <= $data.len());
-    };
-    ($data:ident, $src:ident, $len:ident => const $p:ident) => {
-        let $p = unsafe { $data.as_ptr().add($src) };
-        debug_assert!($src + $len <= $data.len());
-    };
+    debug_assert!(
+        dst + len <= src || src + len <= dst,
+        "rows overlap: dst={dst} src={src} len={len}"
+    );
 }
 
 // ---------------------------------------------------------------- scalar
 
 pub mod scalar {
+    use super::BlockView;
+
     /// `x -= 0.5 * a`
     #[inline]
-    pub fn sub1(data: &mut [f64], dst: usize, a: usize, len: usize) {
+    pub fn sub1(b: &BlockView, dst: usize, a: usize, len: usize) {
         super::check_disjoint(dst, a, len);
-        rows!(data, dst, len => x);
-        rows!(data, a, len => const pa);
+        let x = b.row_ptr(dst, len);
+        let pa = b.row_const(a, len);
         for i in 0..len {
+            // SAFETY: rows checked in debug; the carve bounded the block
             unsafe { *x.add(i) -= 0.5 * *pa.add(i) };
         }
     }
 
     /// `x -= 0.5 * a + 0.5 * b` (two multiplications, as Alg. 1 writes it)
     #[inline]
-    pub fn sub2(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+    pub fn sub2(b: &BlockView, dst: usize, a: usize, bb: usize, len: usize) {
         super::check_disjoint(dst, a, len);
-        super::check_disjoint(dst, b, len);
-        rows!(data, dst, len => x);
-        rows!(data, a, len => const pa);
-        rows!(data, b, len => const pb);
+        super::check_disjoint(dst, bb, len);
+        let x = b.row_ptr(dst, len);
+        let pa = b.row_const(a, len);
+        let pb = b.row_const(bb, len);
         for i in 0..len {
             // same evaluation order as the AVX path: (x - a/2) - b/2,
             // so scalar and vector results are bitwise identical
+            // SAFETY: rows checked in debug; the carve bounded the block
             unsafe { *x.add(i) = (*x.add(i) - 0.5 * *pa.add(i)) - 0.5 * *pb.add(i) };
         }
     }
 
     /// `x -= 0.5 * (a + b)` (reduced operation count, §3)
     #[inline]
-    pub fn sub2_reduced(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+    pub fn sub2_reduced(b: &BlockView, dst: usize, a: usize, bb: usize, len: usize) {
         super::check_disjoint(dst, a, len);
-        super::check_disjoint(dst, b, len);
-        rows!(data, dst, len => x);
-        rows!(data, a, len => const pa);
-        rows!(data, b, len => const pb);
+        super::check_disjoint(dst, bb, len);
+        let x = b.row_ptr(dst, len);
+        let pa = b.row_const(a, len);
+        let pb = b.row_const(bb, len);
         for i in 0..len {
+            // SAFETY: rows checked in debug; the carve bounded the block
             unsafe { *x.add(i) -= 0.5 * (*pa.add(i) + *pb.add(i)) };
         }
     }
 
     /// `x += 0.5 * a` (dehierarchization)
     #[inline]
-    pub fn add1(data: &mut [f64], dst: usize, a: usize, len: usize) {
+    pub fn add1(b: &BlockView, dst: usize, a: usize, len: usize) {
         super::check_disjoint(dst, a, len);
-        rows!(data, dst, len => x);
-        rows!(data, a, len => const pa);
+        let x = b.row_ptr(dst, len);
+        let pa = b.row_const(a, len);
         for i in 0..len {
+            // SAFETY: rows checked in debug; the carve bounded the block
             unsafe { *x.add(i) += 0.5 * *pa.add(i) };
         }
     }
 
     /// `x += 0.5 * a + 0.5 * b`
     #[inline]
-    pub fn add2(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+    pub fn add2(b: &BlockView, dst: usize, a: usize, bb: usize, len: usize) {
         super::check_disjoint(dst, a, len);
-        super::check_disjoint(dst, b, len);
-        rows!(data, dst, len => x);
-        rows!(data, a, len => const pa);
-        rows!(data, b, len => const pb);
+        super::check_disjoint(dst, bb, len);
+        let x = b.row_ptr(dst, len);
+        let pa = b.row_const(a, len);
+        let pb = b.row_const(bb, len);
         for i in 0..len {
             // same order as the AVX path for bitwise reproducibility
+            // SAFETY: rows checked in debug; the carve bounded the block
             unsafe { *x.add(i) = (*x.add(i) + 0.5 * *pa.add(i)) + 0.5 * *pb.add(i) };
         }
     }
@@ -120,15 +128,17 @@ pub mod scalar {
 pub mod avx {
     use std::arch::x86_64::*;
 
+    use super::BlockView;
+
     /// `x -= 0.5 * a`, 4 lanes per iteration.
     ///
     /// # Safety
     /// Caller must ensure AVX is available (`super::avx_available()`).
     #[target_feature(enable = "avx")]
-    pub unsafe fn sub1(data: &mut [f64], dst: usize, a: usize, len: usize) {
+    pub unsafe fn sub1(b: &BlockView, dst: usize, a: usize, len: usize) {
         super::check_disjoint(dst, a, len);
-        rows!(data, dst, len => x);
-        rows!(data, a, len => const pa);
+        let x = b.row_ptr(dst, len);
+        let pa = b.row_const(a, len);
         let half = _mm256_set1_pd(0.5);
         let mut i = 0;
         while i + 4 <= len {
@@ -148,12 +158,12 @@ pub mod avx {
     /// # Safety
     /// Caller must ensure AVX is available.
     #[target_feature(enable = "avx")]
-    pub unsafe fn sub2(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+    pub unsafe fn sub2(b: &BlockView, dst: usize, a: usize, bb: usize, len: usize) {
         super::check_disjoint(dst, a, len);
-        super::check_disjoint(dst, b, len);
-        rows!(data, dst, len => x);
-        rows!(data, a, len => const pa);
-        rows!(data, b, len => const pb);
+        super::check_disjoint(dst, bb, len);
+        let x = b.row_ptr(dst, len);
+        let pa = b.row_const(a, len);
+        let pb = b.row_const(bb, len);
         let half = _mm256_set1_pd(0.5);
         let mut i = 0;
         while i + 4 <= len {
@@ -175,12 +185,12 @@ pub mod avx {
     /// # Safety
     /// Caller must ensure AVX is available.
     #[target_feature(enable = "avx")]
-    pub unsafe fn sub2_reduced(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+    pub unsafe fn sub2_reduced(b: &BlockView, dst: usize, a: usize, bb: usize, len: usize) {
         super::check_disjoint(dst, a, len);
-        super::check_disjoint(dst, b, len);
-        rows!(data, dst, len => x);
-        rows!(data, a, len => const pa);
-        rows!(data, b, len => const pb);
+        super::check_disjoint(dst, bb, len);
+        let x = b.row_ptr(dst, len);
+        let pa = b.row_const(a, len);
+        let pb = b.row_const(bb, len);
         let half = _mm256_set1_pd(0.5);
         let mut i = 0;
         while i + 4 <= len {
@@ -200,10 +210,10 @@ pub mod avx {
     /// # Safety
     /// Caller must ensure AVX is available.
     #[target_feature(enable = "avx")]
-    pub unsafe fn add1(data: &mut [f64], dst: usize, a: usize, len: usize) {
+    pub unsafe fn add1(b: &BlockView, dst: usize, a: usize, len: usize) {
         super::check_disjoint(dst, a, len);
-        rows!(data, dst, len => x);
-        rows!(data, a, len => const pa);
+        let x = b.row_ptr(dst, len);
+        let pa = b.row_const(a, len);
         let half = _mm256_set1_pd(0.5);
         let mut i = 0;
         while i + 4 <= len {
@@ -223,12 +233,12 @@ pub mod avx {
     /// # Safety
     /// Caller must ensure AVX is available.
     #[target_feature(enable = "avx")]
-    pub unsafe fn add2(data: &mut [f64], dst: usize, a: usize, b: usize, len: usize) {
+    pub unsafe fn add2(b: &BlockView, dst: usize, a: usize, bb: usize, len: usize) {
         super::check_disjoint(dst, a, len);
-        super::check_disjoint(dst, b, len);
-        rows!(data, dst, len => x);
-        rows!(data, a, len => const pa);
-        rows!(data, b, len => const pb);
+        super::check_disjoint(dst, bb, len);
+        let x = b.row_ptr(dst, len);
+        let pa = b.row_const(a, len);
+        let pb = b.row_const(bb, len);
         let half = _mm256_set1_pd(0.5);
         let mut i = 0;
         while i + 4 <= len {
@@ -248,33 +258,36 @@ pub mod avx {
 
 // ------------------------------------------------------------- dispatch
 
-/// Dispatched row kernels: AVX where available, scalar otherwise.
+/// Dispatched row kernels: AVX where available, scalar otherwise.  All five
+/// operate on offsets relative to one [`BlockView`].
 #[derive(Clone, Copy)]
 pub struct RowKernels {
-    pub sub1: fn(&mut [f64], usize, usize, usize),
-    pub sub2: fn(&mut [f64], usize, usize, usize, usize),
-    pub sub2_reduced: fn(&mut [f64], usize, usize, usize, usize),
-    pub add1: fn(&mut [f64], usize, usize, usize),
-    pub add2: fn(&mut [f64], usize, usize, usize, usize),
+    pub sub1: fn(&BlockView, usize, usize, usize),
+    pub sub2: fn(&BlockView, usize, usize, usize, usize),
+    pub sub2_reduced: fn(&BlockView, usize, usize, usize, usize),
+    pub add1: fn(&BlockView, usize, usize, usize),
+    pub add2: fn(&BlockView, usize, usize, usize, usize),
 }
 
 #[cfg(target_arch = "x86_64")]
 mod shims {
+    use super::BlockView;
+
     // safe shims: only ever installed after a successful runtime check
-    pub fn sub1(d: &mut [f64], x: usize, a: usize, n: usize) {
-        unsafe { super::avx::sub1(d, x, a, n) }
+    pub fn sub1(b: &BlockView, x: usize, a: usize, n: usize) {
+        unsafe { super::avx::sub1(b, x, a, n) }
     }
-    pub fn sub2(d: &mut [f64], x: usize, a: usize, b: usize, n: usize) {
-        unsafe { super::avx::sub2(d, x, a, b, n) }
+    pub fn sub2(b: &BlockView, x: usize, a: usize, bb: usize, n: usize) {
+        unsafe { super::avx::sub2(b, x, a, bb, n) }
     }
-    pub fn sub2_reduced(d: &mut [f64], x: usize, a: usize, b: usize, n: usize) {
-        unsafe { super::avx::sub2_reduced(d, x, a, b, n) }
+    pub fn sub2_reduced(b: &BlockView, x: usize, a: usize, bb: usize, n: usize) {
+        unsafe { super::avx::sub2_reduced(b, x, a, bb, n) }
     }
-    pub fn add1(d: &mut [f64], x: usize, a: usize, n: usize) {
-        unsafe { super::avx::add1(d, x, a, n) }
+    pub fn add1(b: &BlockView, x: usize, a: usize, n: usize) {
+        unsafe { super::avx::add1(b, x, a, n) }
     }
-    pub fn add2(d: &mut [f64], x: usize, a: usize, b: usize, n: usize) {
-        unsafe { super::avx::add2(d, x, a, b, n) }
+    pub fn add2(b: &BlockView, x: usize, a: usize, bb: usize, n: usize) {
+        unsafe { super::avx::add2(b, x, a, bb, n) }
     }
 }
 
@@ -307,6 +320,7 @@ pub fn kernels() -> RowKernels {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::grid::GridCells;
     use crate::util::rng::SplitMix64;
 
     fn rand_buf(n: usize, seed: u64) -> Vec<f64> {
@@ -322,30 +336,34 @@ mod tests {
         for len in [1usize, 3, 4, 5, 8, 17, 64, 127] {
             let base = rand_buf(3 * len, len as u64);
             let k = kernels();
+            let run2 = |f: fn(&BlockView, usize, usize, usize, usize)| {
+                let mut buf = base.clone();
+                {
+                    let cells = GridCells::new(&mut buf);
+                    // SAFETY: the only view of these cells
+                    f(unsafe { &cells.block(0, 3 * len) }, 0, len, 2 * len, len);
+                }
+                buf
+            };
+            let run1 = |f: fn(&BlockView, usize, usize, usize)| {
+                let mut buf = base.clone();
+                {
+                    let cells = GridCells::new(&mut buf);
+                    // SAFETY: the only view of these cells
+                    f(unsafe { &cells.block(0, 3 * len) }, 0, len, len);
+                }
+                buf
+            };
 
-            let mut a = base.clone();
-            let mut b = base.clone();
-            scalar::sub1(&mut a, 0, len, len);
-            (k.sub1)(&mut b, 0, len, len);
-            assert_eq!(a, b, "sub1 len={len}");
-
-            let mut a = base.clone();
-            let mut b = base.clone();
-            scalar::sub2(&mut a, 0, len, 2 * len, len);
-            (k.sub2)(&mut b, 0, len, 2 * len, len);
-            assert_eq!(a, b, "sub2 len={len}");
-
-            let mut a = base.clone();
-            let mut b = base.clone();
-            scalar::sub2_reduced(&mut a, 0, len, 2 * len, len);
-            (k.sub2_reduced)(&mut b, 0, len, 2 * len, len);
-            assert_eq!(a, b, "sub2_reduced len={len}");
-
-            let mut a = base.clone();
-            let mut b = base.clone();
-            scalar::add2(&mut a, 0, len, 2 * len, len);
-            (k.add2)(&mut b, 0, len, 2 * len, len);
-            assert_eq!(a, b, "add2 len={len}");
+            assert_eq!(run1(scalar::sub1), run1(k.sub1), "sub1 len={len}");
+            assert_eq!(run2(scalar::sub2), run2(k.sub2), "sub2 len={len}");
+            assert_eq!(
+                run2(scalar::sub2_reduced),
+                run2(k.sub2_reduced),
+                "sub2_reduced len={len}"
+            );
+            assert_eq!(run1(scalar::add1), run1(k.add1), "add1 len={len}");
+            assert_eq!(run2(scalar::add2), run2(k.add2), "add2 len={len}");
         }
     }
 
@@ -354,8 +372,13 @@ mod tests {
         let k = kernels();
         let base = rand_buf(30, 3);
         let mut d = base.clone();
-        (k.sub2)(&mut d, 0, 10, 20, 10);
-        (k.add2)(&mut d, 0, 10, 20, 10);
+        {
+            let cells = GridCells::new(&mut d);
+            // SAFETY: the only view of these cells
+            let b = unsafe { cells.block(0, 30) };
+            (k.sub2)(&b, 0, 10, 20, 10);
+            (k.add2)(&b, 0, 10, 20, 10);
+        }
         for i in 0..30 {
             assert!((d[i] - base[i]).abs() < 1e-15);
         }
@@ -366,8 +389,16 @@ mod tests {
         let base = rand_buf(12, 9);
         let mut a = base.clone();
         let mut b = base;
-        scalar::sub2(&mut a, 0, 4, 8, 4);
-        scalar::sub2_reduced(&mut b, 0, 4, 8, 4);
+        {
+            let cells = GridCells::new(&mut a);
+            // SAFETY: the only view of these cells
+            scalar::sub2(unsafe { &cells.block(0, 12) }, 0, 4, 8, 4);
+        }
+        {
+            let cells = GridCells::new(&mut b);
+            // SAFETY: the only view of these cells
+            scalar::sub2_reduced(unsafe { &cells.block(0, 12) }, 0, 4, 8, 4);
+        }
         for i in 0..4 {
             assert!((a[i] - b[i]).abs() < 1e-15);
         }

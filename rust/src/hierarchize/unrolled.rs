@@ -14,7 +14,7 @@
 //! paper ("only the algorithms working in the BFS layout have been
 //! vectorized", and d = 1 shows lower performance in Fig. 9).
 
-use crate::grid::{AxisLayout, BfsNav, FullGrid, Poles};
+use crate::grid::{AxisLayout, BfsNav, BlockView, FullGrid, Poles};
 
 use super::bfs::{pole_dehierarchize_bfs, pole_hierarchize_bfs};
 use super::simd;
@@ -22,17 +22,11 @@ use super::Hierarchizer;
 
 /// One outer block of the lane-unrolled sweep for a working dimension >= 2:
 /// `lanes`-wide chunks of adjacent poles advance together through the BFS
-/// pole walk; `row(h, q)` slots are `ob + (h-1)*inner + q .. +lanes`.
-/// Blocks are disjoint in storage; `hierarchize::parallel` shards a
-/// dimension over them bitwise-identically to the serial sweep.
-pub(crate) fn lanes_block(
-    data: &mut [f64],
-    ob: usize,
-    inner: usize,
-    l: u8,
-    up: bool,
-    k: simd::RowKernels,
-) {
+/// pole walk; node `h`, lane chunk `q` sits at block offset
+/// `(h-1) * inner + q .. + lanes`.  Blocks are disjoint in storage;
+/// `hierarchize::parallel` shards a dimension over them
+/// bitwise-identically to the serial sweep.
+pub(crate) fn lanes_block(blk: &BlockView, inner: usize, l: u8, up: bool, k: simd::RowKernels) {
     let (apply1, apply2) = if up { (k.add1, k.add2) } else { (k.sub1, k.sub2) };
     let mut q = 0usize;
     while q < inner {
@@ -42,23 +36,19 @@ pub(crate) fn lanes_block(
             let first = 1u32 << (lev - 1);
             let last = (1u32 << lev) - 1;
             for h in first..=last {
-                let x = ob + (h as usize - 1) * inner + q;
+                let x = (h as usize - 1) * inner + q;
                 let a = BfsNav::left_pred(h);
                 let b = BfsNav::right_pred(h);
                 match (a, b) {
                     (Some(a), Some(b)) => apply2(
-                        data,
+                        blk,
                         x,
-                        ob + (a as usize - 1) * inner + q,
-                        ob + (b as usize - 1) * inner + q,
+                        (a as usize - 1) * inner + q,
+                        (b as usize - 1) * inner + q,
                         lanes,
                     ),
-                    (Some(a), None) => {
-                        apply1(data, x, ob + (a as usize - 1) * inner + q, lanes)
-                    }
-                    (None, Some(b)) => {
-                        apply1(data, x, ob + (b as usize - 1) * inner + q, lanes)
-                    }
+                    (Some(a), None) => apply1(blk, x, (a as usize - 1) * inner + q, lanes),
+                    (None, Some(b)) => apply1(blk, x, (b as usize - 1) * inner + q, lanes),
                     (None, None) => {}
                 }
             }
@@ -75,18 +65,22 @@ fn sweep(g: &mut FullGrid, up: bool, vector: bool) {
             continue;
         }
         let poles = Poles::of(g, dim);
-        let data = g.as_mut_slice();
+        let cells = g.cells();
         if dim == 0 {
-            for base in poles.iter() {
+            for q in 0..poles.count() {
+                // SAFETY: one pole view live at a time, serial loop
+                let p = unsafe { poles.pole_view(&cells, q) };
                 if up {
-                    pole_dehierarchize_bfs(data, base, 1, l);
+                    pole_dehierarchize_bfs(&p, l);
                 } else {
-                    pole_hierarchize_bfs(data, base, 1, l);
+                    pole_hierarchize_bfs(&p, l);
                 }
             }
         } else {
             for outer in 0..poles.outer {
-                lanes_block(data, outer * poles.outer_step, poles.inner, l, up, k);
+                // SAFETY: one block view live at a time, serial loop
+                let blk = unsafe { poles.block_view(&cells, outer) };
+                lanes_block(&blk, poles.inner, l, up, k);
             }
         }
     }

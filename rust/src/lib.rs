@@ -29,6 +29,17 @@
 //!   ([`hierarchize::auto_variant`]) and a [`ShardStrategy`] knob
 //!   (grid-level stealing / pole-level sharding / auto).
 //!
+//! Both levels stand on one unsafe core, `grid::cells`, which keeps the
+//! shared-buffer access inside the Rust aliasing model: a [`grid::GridCells`]
+//! handle owns the exclusive borrow of a grid buffer and hands out *checked*
+//! [`grid::PoleView`]/[`grid::BlockView`] carve-outs (disjointness asserted
+//! on an atomic claim map in debug builds), while the coordinator pools
+//! claim whole grids through [`grid::SharedSlice`].  No kernel ever
+//! materializes a `&mut [f64]` that another thread can observe; the CI
+//! `miri` job runs the unsafe-core unit tests and a scoped-down conformance
+//! suite under the interpreter to hold that claim (see the README's
+//! "aliasing model & safety argument").
+//!
 //! See `README.md` for the engine walkthrough and the strong-scaling bench,
 //! `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for reproduction results.

@@ -57,8 +57,11 @@ where
     }
 }
 
-/// Generate a random level vector: `dim` in 1..=max_dim, levels sized so the
-/// grid stays small enough for exhaustive checks.
+/// Generate a random level vector: `dim` uniform in `1..=max_dim`
+/// (inclusive — `next_range` includes both endpoints, see the rng audit
+/// test below) and each level uniform in `1..=max_level` where
+/// `max_level = (2 + size/8).min(6)`, so the grid stays small enough for
+/// exhaustive checks while still reaching the extremes.
 pub fn random_levels(rng: &mut SplitMix64, size: u32, max_dim: usize) -> Vec<u8> {
     let dim = rng.next_range(1, max_dim as u64) as usize;
     let max_level = (2 + size / 8).min(6) as u64;
@@ -99,5 +102,28 @@ mod tests {
                 assert!(lv.iter().all(|&l| (1..=6).contains(&l)));
             }
         }
+    }
+
+    /// Distribution audit: both endpoints of every `next_range` call inside
+    /// `random_levels` are reachable — `dim` really attains 1 and `max_dim`,
+    /// and levels really attain 1 and `max_level`.  Seeded and
+    /// desk-validated against the reference stream, so deterministic.
+    #[test]
+    fn random_levels_reaches_both_endpoints() {
+        let mut rng = SplitMix64::new(2);
+        let (mut dmin, mut dmax) = (usize::MAX, 0usize);
+        let (mut lmin, mut lmax) = (u8::MAX, 0u8);
+        for _ in 0..400 {
+            let lv = random_levels(&mut rng, 32, 5);
+            dmin = dmin.min(lv.len());
+            dmax = dmax.max(lv.len());
+            for &l in &lv {
+                lmin = lmin.min(l);
+                lmax = lmax.max(l);
+            }
+        }
+        assert_eq!((dmin, dmax), (1, 5), "dim endpoints unreachable");
+        // max_level = (2 + 32/8).min(6) = 6
+        assert_eq!((lmin, lmax), (1, 6), "level endpoints unreachable");
     }
 }

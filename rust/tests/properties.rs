@@ -3,7 +3,7 @@
 
 use sgct::combi::CombinationScheme;
 use sgct::grid::{bfs_from_position, bfs_to_position, FullGrid, LevelVector};
-use sgct::hierarchize::{flops, prepare, Variant, ALL_VARIANTS};
+use sgct::hierarchize::{flops, prepare, ParallelHierarchizer, Variant, ALL_VARIANTS};
 use sgct::sgpp::HashGrid;
 use sgct::sparse::SparseGrid;
 use sgct::util::proptest::{check, random_levels, Config};
@@ -154,6 +154,53 @@ fn prop_gather_scatter_fixpoint() {
                 if (a - b).abs() > 1e-12 {
                     return Err(format!("fixpoint broken in {l}"));
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (g') hierarchization through the parallel engine is invariant under a
+/// *random* permutation of unit execution order: a seeded shuffle of the
+/// chunk claims stays bitwise equal to the serial sweep.  Work units touch
+/// pairwise disjoint slots (the `GridCells` carve contract), so no claim
+/// schedule may change a single bit.
+#[test]
+fn prop_shuffled_unit_order_bitwise_equals_serial() {
+    check("shuffled-claims", Config { cases: 25, ..Default::default() }, |rng, size| {
+        let levels = random_levels(rng, size, 4);
+        let input = random_grid(&levels, rng);
+        let shardable: Vec<Variant> = ALL_VARIANTS
+            .iter()
+            .copied()
+            .filter(|&v| ParallelHierarchizer::supports(v))
+            .collect();
+        let v = shardable[rng.next_below(shardable.len() as u64) as usize];
+        let h = v.instance();
+        let mut want = input.clone();
+        prepare(h, &mut want);
+        h.hierarchize(&mut want);
+        for threads in [1usize, 3, 8] {
+            let seed = rng.next_u64();
+            let p = ParallelHierarchizer::new(v, threads).with_unit_order_seed(seed);
+            let mut got = input.clone();
+            prepare(&p, &mut got);
+            p.hierarchize(&mut got);
+            if got.as_slice() != want.as_slice() {
+                return Err(format!(
+                    "{} x{threads} seed {seed:#x} not bitwise on {levels:?}",
+                    h.name()
+                ));
+            }
+            // and back: dehierarchization under a shuffled schedule too
+            p.dehierarchize(&mut got);
+            let mut back = want.clone();
+            h.dehierarchize(&mut back);
+            if got.as_slice() != back.as_slice() {
+                return Err(format!(
+                    "{} x{threads} seed {seed:#x} dehierarchize not bitwise on {levels:?}",
+                    h.name()
+                ));
             }
         }
         Ok(())
