@@ -12,7 +12,7 @@
 
 use sgct::grid::{AxisLayout, FullGrid, LevelVector};
 use sgct::hierarchize::{flops, Variant};
-use sgct::perf::bench::{bench_on, BenchResult, Config};
+use sgct::perf::bench::{bench_on, write_bench_json, BenchRecord, BenchResult, Config};
 use sgct::sgpp::HashGrid;
 use sgct::util::rng::SplitMix64;
 use sgct::util::table::{human_bytes, Table};
@@ -111,4 +111,21 @@ pub fn max_levelsum(default_max: u32) -> u32 {
 /// Geometric speedup a/b expressed as "xN.N".
 pub fn speedup(a_cycles: f64, b_cycles: f64) -> String {
     format!("x{:.1}", a_cycles / b_cycles)
+}
+
+/// A [`BenchRecord`] for one measured variant on one grid (serial, the
+/// calculated flop count of Eq. 1).
+pub fn record_variant(r: &BenchResult, v: Variant, levels: &LevelVector) -> BenchRecord {
+    BenchRecord::of(r, v.paper_name(), 1, flops::flops(levels).total())
+        .with_grid(&levels.tag(), levels.size_bytes() as u64)
+}
+
+/// Persist the bench's records as `BENCH_<name>.json` (the repo's perf
+/// trajectory; CI uploads these).  IO failure warns instead of panicking —
+/// a read-only working directory must not kill a bench run.
+pub fn emit(bench: &str, records: &[BenchRecord]) {
+    match write_bench_json(bench, records) {
+        Ok(path) => println!("\nwrote {} ({} records)", path.display(), records.len()),
+        Err(e) => eprintln!("\nwarning: could not write BENCH_{bench}.json: {e}"),
+    }
 }

@@ -23,16 +23,23 @@ fn main() {
         Variant::BfsOverVectorizedPreBranched,
     ];
     let mut rows = Vec::new();
+    let mut records = Vec::new();
     for l in 2..=max_l {
         let levels = LevelVector::isotropic(4, l as u8);
-        let mut cells = Vec::new();
+        let mut results = Vec::new();
         for v in variants {
-            let r = measure_variant(v, &levels);
-            cells.push((v.paper_name().to_string(), fpc(&levels, &r)));
+            results.push((v, measure_variant(v, &levels)));
+        }
+        let baseline = results[0].1.clone(); // Func leads the variant list
+        let mut cells = Vec::new();
+        for (v, r) in &results {
+            cells.push((v.paper_name().to_string(), fpc(&levels, r)));
+            records.push(record_variant(r, *v, &levels).with_speedup_vs(&baseline));
         }
         rows.push(FigureRow { levels, cells });
     }
     render_figure("Fig. 7: 4-d isotropic grids (flops/cycle, calculated)", &rows);
+    emit("fig7_4d", &records);
 
     if let Some(last) = rows.last() {
         let get = |name: &str| {

@@ -25,14 +25,20 @@ fn main() {
         Variant::BfsOverVectorizedPreBranchedReducedOp,
     ];
     let mut rows = Vec::new();
+    let mut records = Vec::new();
     for l1 in 3..=max_l1 {
         let mut lv = vec![2u8; 10];
         lv[0] = l1 as u8;
         let levels = LevelVector::new(&lv);
-        let mut cells = Vec::new();
+        let mut results = Vec::new();
         for v in variants {
-            let r = measure_variant(v, &levels);
-            cells.push((v.paper_name().to_string(), fpc(&levels, &r)));
+            results.push((v, measure_variant(v, &levels)));
+        }
+        let baseline = results[0].1.clone(); // Func leads the variant list
+        let mut cells = Vec::new();
+        for (v, r) in &results {
+            cells.push((v.paper_name().to_string(), fpc(&levels, r)));
+            records.push(record_variant(r, *v, &levels).with_speedup_vs(&baseline));
         }
         rows.push(FigureRow { levels, cells });
     }
@@ -40,6 +46,7 @@ fn main() {
         "Fig. 8: 10-d anisotropic grid, dims 2-10 fixed at 3 points (flops/cycle)",
         &rows,
     );
+    emit("fig8_10d", &records);
 
     if let Some(last) = rows.last() {
         let get = |name: &str| {

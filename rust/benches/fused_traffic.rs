@@ -1,0 +1,127 @@
+//! Fused-vs-unfused cache blocking on a large grid: the PR's headline
+//! measurement.  A >= 64 MB grid (default shape 6,6,6,6 ~ 126 MB) is
+//! hierarchized by
+//!
+//! * the serial `BFS-OverVectorized` reference (d memory passes),
+//! * the serial cache-blocked `BFS-OverVectorized-Fused` (`ceil(d/k)`
+//!   passes, autotuned k),
+//! * both again pole-/tile-sharded across all hardware threads,
+//!
+//! and the measured time ratio is reported next to the traffic model's
+//! prediction (`flops::traffic_unfused` vs `fused::traffic_fused`) and the
+//! roofline's ideal streaming cycles.  Results land in
+//! `BENCH_fused_traffic.json` — the artifact CI's `bench-smoke` job uploads.
+//!
+//! ```bash
+//! cargo bench --bench fused_traffic              # ~126 MB grid
+//! SGCT_BENCH_QUICK=1 cargo bench --bench fused_traffic   # ~7 MB smoke
+//! SGCT_BENCH_BIG=1 cargo bench --bench fused_traffic     # ~512 MB
+//! ```
+
+mod common;
+
+use common::*;
+use sgct::grid::LevelVector;
+use sgct::hierarchize::{flops, fused, Hierarchizer, ParallelHierarchizer, Variant};
+use sgct::perf::bench::{bench_on, BenchResult};
+use sgct::perf::roofline::{traffic_ratio, Roofline};
+use sgct::util::table::{human_bytes, human_time, Table};
+
+fn measure_parallel(v: Variant, levels: &LevelVector, threads: usize) -> BenchResult {
+    let p = ParallelHierarchizer::new(v, threads);
+    let pristine = grid_for(levels, p.layout(), 42);
+    let mut g = pristine.clone();
+    bench_on(
+        &format!("{} x{threads}", v.paper_name()),
+        config(),
+        &mut g,
+        |g| g.clone_from(&pristine),
+        |g| p.hierarchize(g),
+    )
+}
+
+fn main() {
+    let levels = if big() {
+        LevelVector::new(&[7, 7, 6, 6]) // ~512 MB
+    } else if quick() {
+        LevelVector::new(&[5, 5, 5, 5]) // ~7 MB CI smoke
+    } else {
+        LevelVector::new(&[6, 6, 6, 6]) // ~126 MB (>= 64 MB acceptance size)
+    };
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let tuned = fused::autotune(&levels, 0);
+    let unfused_bytes = flops::traffic_unfused(&levels);
+    let fused_bytes = fused::traffic_fused(&levels, tuned.fuse_depth);
+    println!(
+        "fused traffic bench: grid {} ({}, {} points), {} threads",
+        levels,
+        human_bytes(levels.size_bytes()),
+        levels.total_points(),
+        threads
+    );
+    println!(
+        "autotune: fuse depth {} / tile {} -> {} of {} passes; modeled traffic {} vs {} \
+         (predicted x{:.2})",
+        tuned.fuse_depth,
+        human_bytes(tuned.tile_bytes),
+        fused::fused_passes(&levels, tuned.fuse_depth),
+        flops::active_dims(&levels),
+        human_bytes(fused_bytes as usize),
+        human_bytes(unfused_bytes as usize),
+        traffic_ratio(unfused_bytes, fused_bytes),
+    );
+
+    let f = flops::flops(&levels).total();
+    let unfused = measure_variant(Variant::BfsOverVectorized, &levels);
+    let fused_serial = measure_variant(Variant::BfsOverVectorizedFused, &levels);
+    let unfused_par = measure_parallel(Variant::BfsOverVectorized, &levels, threads);
+    let fused_par = measure_parallel(Variant::BfsOverVectorizedFused, &levels, threads);
+
+    let mut t = Table::new(vec!["case", "time", "flops/cycle", "GB/s (modeled)", "speedup"]);
+    let gbs = |bytes: u64, r: &BenchResult| bytes as f64 / r.secs / 1e9;
+    for (label, bytes, r) in [
+        ("unfused serial", unfused_bytes, &unfused),
+        ("fused serial", fused_bytes, &fused_serial),
+        ("unfused pole-sharded", unfused_bytes, &unfused_par),
+        ("fused tile-sharded", fused_bytes, &fused_par),
+    ] {
+        t.row(vec![
+            label.to_string(),
+            human_time(r.secs),
+            format!("{:.4}", r.flops_per_cycle(f)),
+            format!("{:.2}", gbs(bytes, r)),
+            format!("x{:.2}", r.speedup_vs(&unfused)),
+        ]);
+    }
+    t.print();
+    let measured = unfused.secs / fused_serial.secs;
+    println!(
+        "\nmeasured fused-vs-unfused (serial): x{measured:.2} — traffic model predicts x{:.2}",
+        traffic_ratio(unfused_bytes, fused_bytes)
+    );
+    let roof = Roofline::host_scalar();
+    println!(
+        "roofline ideal streaming: unfused {:.0} Mcycles, fused {:.0} Mcycles",
+        roof.streaming_cycles(unfused_bytes) / 1e6,
+        roof.streaming_cycles(fused_bytes) / 1e6
+    );
+
+    let rec = |r: &BenchResult, v: Variant, threads: usize, bytes: u64| {
+        sgct::perf::BenchRecord::of(r, v.paper_name(), threads, f)
+            .with_grid(&levels.tag(), levels.size_bytes() as u64)
+            .with_speedup_vs(&unfused)
+            .with_extra("traffic_model_bytes", bytes as f64)
+            .with_extra("traffic_model_ratio", traffic_ratio(unfused_bytes, fused_bytes))
+            .with_extra("fuse_depth", tuned.fuse_depth as f64)
+            .with_extra("tile_bytes", tuned.tile_bytes as f64)
+    };
+    emit(
+        "fused_traffic",
+        &[
+            rec(&unfused, Variant::BfsOverVectorized, 1, unfused_bytes),
+            rec(&fused_serial, Variant::BfsOverVectorizedFused, 1, fused_bytes),
+            rec(&unfused_par, Variant::BfsOverVectorized, threads, unfused_bytes),
+            rec(&fused_par, Variant::BfsOverVectorizedFused, threads, fused_bytes),
+        ],
+    );
+}

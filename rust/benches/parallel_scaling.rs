@@ -23,8 +23,8 @@ use common::*;
 use sgct::combi::CombinationScheme;
 use sgct::coordinator::{hierarchize_scheme, BatchOptions};
 use sgct::grid::{FullGrid, LevelVector};
-use sgct::hierarchize::{Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant};
-use sgct::perf::bench::{bench_on, BenchResult};
+use sgct::hierarchize::{flops, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant};
+use sgct::perf::bench::{bench_on, BenchRecord, BenchResult};
 use sgct::util::rng::SplitMix64;
 use sgct::util::table::{human_bytes, human_time, Table};
 
@@ -52,8 +52,27 @@ fn scaling_table(title: &str, results: &[(usize, BenchResult)]) {
     t.print();
 }
 
+/// Records for one scaling sweep: speedup vs the sweep's 1-thread run.
+fn scaling_records(
+    variant: &str,
+    levels_tag: &str,
+    grid_bytes: u64,
+    total_flops: u64,
+    results: &[(usize, BenchResult)],
+) -> Vec<BenchRecord> {
+    let base = &results[0].1;
+    results
+        .iter()
+        .map(|(threads, r)| {
+            BenchRecord::of(r, variant, *threads, total_flops)
+                .with_grid(levels_tag, grid_bytes)
+                .with_speedup_vs(base)
+        })
+        .collect()
+}
+
 /// Pole sharding: one big grid, the paper's headline variant inside.
-fn pole_scaling() {
+fn pole_scaling() -> Vec<BenchRecord> {
     let levels = if quick() {
         LevelVector::new(&[9, 9])
     } else {
@@ -82,10 +101,17 @@ fn pole_scaling() {
         results.push((threads, r));
     }
     scaling_table("pole-sharded strong scaling (one grid)", &results);
+    scaling_records(
+        inner.paper_name(),
+        &levels.tag(),
+        levels.size_bytes() as u64,
+        flops::flops(&levels).total(),
+        &results,
+    )
 }
 
 /// Grid sharding: a whole combination scheme through the pool.
-fn grid_scaling() {
+fn grid_scaling() -> Vec<BenchRecord> {
     let (dim, level) = if quick() { (3usize, 5u8) } else { (4usize, 7u8) };
     let scheme = CombinationScheme::regular(dim, level);
     println!(
@@ -115,6 +141,7 @@ fn grid_scaling() {
             strategy: ShardStrategy::Grid,
             variant: None,
             to_position: false, // keep the hot path free of layout round-trips
+            ..Default::default()
         };
         let mut grids = pristine.clone();
         let r = bench_on(
@@ -129,12 +156,20 @@ fn grid_scaling() {
         results.push((threads, r));
     }
     scaling_table("grid-sharded strong scaling (scheme batch)", &results);
+    scaling_records(
+        "auto (grid-sharded scheme)",
+        &format!("scheme d={dim} n={level}"),
+        (scheme.total_points() * 8) as u64,
+        scheme.total_flops(),
+        &results,
+    )
 }
 
 fn main() {
     println!("sharded parallel hierarchization — strong scaling");
-    pole_scaling();
-    grid_scaling();
+    let mut records = pole_scaling();
+    records.extend(grid_scaling());
     println!("\n(speedup vs 1 thread; memory-bound saturation above the socket");
     println!(" bandwidth is expected — compare perf::stream::host_bandwidth)");
+    emit("parallel_scaling", &records);
 }

@@ -10,10 +10,11 @@
 
 mod common;
 
-use common::quick;
+use common::{emit, quick};
 use sgct::combi::CombinationScheme;
 use sgct::coordinator::{Coordinator, PipelineConfig};
 use sgct::grid::LevelVector;
+use sgct::perf::BenchRecord;
 use sgct::runtime::{PjrtSolver, Runtime};
 use sgct::solver::{stable_dt, HeatSolver};
 use sgct::util::table::{human_time, Table};
@@ -55,12 +56,33 @@ fn main() {
     ]);
     let cases: &[(usize, u8, usize)] =
         if quick() { &[(2, 5, 8)] } else { &[(2, 5, 8), (2, 7, 8), (3, 4, 8)] };
+    let mut records = Vec::new();
     for &(d, n, steps) in cases {
         for pjrt in [false, true] {
             let label = format!("d={d} n={n} t={steps}");
             match run_case(d, n, steps, pjrt) {
                 Some((solve, hg, sd)) => {
                     let comm = hg + sd;
+                    records.push(BenchRecord {
+                        name: format!("{label} {}", if pjrt { "pjrt" } else { "native" }),
+                        variant: if pjrt { "pjrt".into() } else { "native".into() },
+                        threads: std::thread::available_parallelism()
+                            .map(|v| v.get())
+                            .unwrap_or(1),
+                        levels: label.clone(),
+                        grid_bytes: 0,
+                        cycles: 0.0,
+                        secs: solve + comm,
+                        gflops: 0.0,
+                        flops_per_cycle: 0.0,
+                        speedup_vs_baseline: 0.0,
+                        extra: vec![
+                            ("solve_secs".into(), solve),
+                            ("hierarchize_gather_secs".into(), hg),
+                            ("scatter_dehierarchize_secs".into(), sd),
+                            ("comm_over_compute".into(), comm / solve.max(1e-12)),
+                        ],
+                    });
                     t.row(vec![
                         label,
                         if pjrt { "pjrt".into() } else { "native".into() },
@@ -85,4 +107,5 @@ fn main() {
     }
     t.print();
     println!("(comm/compute < 1 is the paper's break-even condition for the iterated CT)");
+    emit("pipeline_bench", &records);
 }

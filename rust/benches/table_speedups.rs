@@ -9,8 +9,9 @@ mod common;
 
 use common::*;
 use sgct::grid::LevelVector;
-use sgct::hierarchize::Variant;
+use sgct::hierarchize::{flops, Variant};
 use sgct::perf::roofline::Roofline;
+use sgct::perf::BenchRecord;
 use sgct::util::table::{human_bytes, Table};
 
 fn main() {
@@ -41,6 +42,7 @@ fn main() {
         "Func/SGpp",
     ]);
     let mut best_fpc = 0.0f64;
+    let mut records = Vec::new();
     for levels in &cases {
         let n = levels.total_points() as f64;
         let sgpp = if levels.total_points() <= (1 << 21) {
@@ -52,6 +54,17 @@ fn main() {
         let best = measure_variant(Variant::BfsOverVectorized, levels);
         let bfpc = fpc(levels, &best);
         best_fpc = best_fpc.max(bfpc);
+        if let Some(r) = &sgpp {
+            records.push(
+                BenchRecord::of(r, "SGpp", 1, flops::flops(levels).total())
+                    .with_grid(&levels.tag(), levels.size_bytes() as u64)
+                    .with_speedup_vs(&func),
+            );
+        }
+        records.push(record_variant(&func, Variant::Func, levels).with_speedup_vs(&func));
+        records.push(
+            record_variant(&best, Variant::BfsOverVectorized, levels).with_speedup_vs(&func),
+        );
         t.row(vec![
             levels.tag(),
             human_bytes(levels.size_bytes()),
@@ -65,6 +78,7 @@ fn main() {
     }
     println!("\n== §5 summary: headline speedups ==");
     t.print();
+    emit("table_speedups", &records);
 
     let avx_peak = Roofline { peak_flops_per_cycle: 8.0, bytes_per_cycle: 0.0 };
     println!(

@@ -17,7 +17,9 @@
 
 use crate::combi::CombinationScheme;
 use crate::grid::{AxisLayout, FullGrid};
-use crate::hierarchize::{auto_variant, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant};
+use crate::hierarchize::{
+    auto_variant, fused, FuseParams, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant,
+};
 use crate::perf::CycleTimer;
 
 use super::pool::parallel_grids_ordered;
@@ -35,6 +37,11 @@ pub struct BatchOptions {
     /// exchange format).  Skip when a layout-aware consumer (gather) runs
     /// next.
     pub to_position: bool,
+    /// Fuse depth / tile budget of the cache-blocked fused sweep; applies
+    /// wherever the fused variant runs (`ShardStrategy::Tile`, an explicit
+    /// fused `variant`, or per-grid auto-selection on large grids).
+    /// `FuseParams::AUTO` autotunes per grid.
+    pub fuse: FuseParams,
 }
 
 impl Default for BatchOptions {
@@ -44,6 +51,7 @@ impl Default for BatchOptions {
             strategy: ShardStrategy::Auto,
             variant: None,
             to_position: true,
+            fuse: FuseParams::AUTO,
         }
     }
 }
@@ -101,14 +109,27 @@ fn run_batch(
     check_batch(scheme, grids);
     let threads = opts.threads.max(1);
     let strategy = opts.strategy.resolve(grids.len(), threads);
-    let tasks = plan(scheme, opts);
+    let mut tasks = plan(scheme, opts);
+    if strategy == ShardStrategy::Tile {
+        // tile sharding runs the cache-blocked fused sweep on every grid;
+        // the report reflects what actually executed
+        for t in &mut tasks {
+            t.variant = Variant::BfsOverVectorizedFused;
+        }
+    }
     let order = scheme.balance_order();
     let t = CycleTimer::start();
     match strategy {
         ShardStrategy::Grid => {
             let tasks = &tasks;
-            parallel_grids_ordered(grids, threads, &order, |i, g| {
-                let h = tasks[i].variant.instance();
+            // an explicitly configured fuse overrides the auto-params
+            // static instance wherever the fused variant was selected
+            let fused_override = fused::BfsOverVectorizedFused::with_params(opts.fuse);
+            let fused_override = &fused_override;
+            parallel_grids_ordered(grids, threads, &order, move |i, g| {
+                let fused_selected = tasks[i].variant == Variant::BfsOverVectorizedFused;
+                let h: &dyn Hierarchizer =
+                    if fused_selected { fused_override } else { tasks[i].variant.instance() };
                 g.convert_all(h.layout());
                 if up {
                     h.dehierarchize(g);
@@ -120,11 +141,12 @@ fn run_batch(
                 }
             });
         }
-        // Pole (and the unreachable unresolved Auto): grids in sequence,
-        // each sharded pole-wise across the full pool
+        // Pole/Tile (and the unreachable unresolved Auto): grids in
+        // sequence, each sharded unit-wise across the full pool
         _ => {
             for &i in &order {
-                let p = ParallelHierarchizer::new(tasks[i].variant, threads);
+                let p =
+                    ParallelHierarchizer::new(tasks[i].variant, threads).with_fuse(opts.fuse);
                 let g = &mut grids[i];
                 g.convert_all(p.layout());
                 if up {
@@ -244,6 +266,46 @@ mod tests {
                         "grid {i} not bitwise under {strategy} x{threads}"
                     );
                 }
+            }
+        }
+    }
+
+    /// Tile sharding rewrites the executed plan to the fused variant and
+    /// honors explicit fuse knobs.  It is bitwise against the serial
+    /// `BFS-OverVectorized` reference (the fused code's contract), not
+    /// against the per-grid auto picks it replaces.
+    #[test]
+    fn tile_strategy_runs_the_fused_sweep() {
+        let scheme = CombinationScheme::regular(2, 4);
+        let input = scheme_grids(&scheme);
+        let mut reference = input.clone();
+        let base = BatchOptions {
+            threads: 1,
+            strategy: ShardStrategy::Grid,
+            variant: Some(Variant::BfsOverVectorized),
+            ..Default::default()
+        };
+        hierarchize_scheme(&scheme, &mut reference, &base);
+
+        for threads in [1usize, 4] {
+            let mut grids = input.clone();
+            let opts = BatchOptions {
+                threads,
+                strategy: ShardStrategy::Tile,
+                fuse: crate::hierarchize::FuseParams { fuse_depth: 2, tile_bytes: 256 },
+                ..Default::default()
+            };
+            let report = hierarchize_scheme(&scheme, &mut grids, &opts);
+            assert!(report
+                .tasks
+                .iter()
+                .all(|t| t.variant == Variant::BfsOverVectorizedFused));
+            for (i, (got, want)) in grids.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    got.as_slice(),
+                    want.as_slice(),
+                    "grid {i} not bitwise under tile x{threads}"
+                );
             }
         }
     }

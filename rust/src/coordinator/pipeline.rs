@@ -6,7 +6,9 @@ use anyhow::Result;
 
 use crate::combi::CombinationScheme;
 use crate::grid::{AxisLayout, FullGrid};
-use crate::hierarchize::{Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant};
+use crate::hierarchize::{
+    fused, FuseParams, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant,
+};
 use crate::perf::CycleTimer;
 use crate::solver::GridSolver;
 use crate::sparse::SparseGrid;
@@ -28,9 +30,13 @@ pub struct PipelineConfig {
     /// Capacity of the hierarchize->gather channel (backpressure bound).
     pub gather_queue: usize,
     /// How the hierarchize/dehierarchize phases shard across the pool:
-    /// grid-level work stealing (default, the seed behavior), pole-level
-    /// sharding inside each grid, or auto-resolution per batch shape.
+    /// grid-level work stealing (default, the seed behavior), pole- or
+    /// tile-level sharding inside each grid, or auto-resolution per batch
+    /// shape.
     pub shard: ShardStrategy,
+    /// Fuse depth / tile budget for the cache-blocked fused sweep
+    /// (`ShardStrategy::Tile` or a fused `variant`); `AUTO` autotunes.
+    pub fuse: FuseParams,
 }
 
 impl PipelineConfig {
@@ -42,6 +48,17 @@ impl PipelineConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             gather_queue: 4,
             shard: ShardStrategy::Grid,
+            fuse: FuseParams::AUTO,
+        }
+    }
+
+    /// The variant the within-grid sharding paths run: `Tile` sharding
+    /// forces the fused sweep, everything else keeps `self.variant`.
+    fn sharded_variant(&self, resolved: ShardStrategy) -> Variant {
+        if resolved == ShardStrategy::Tile {
+            Variant::BfsOverVectorizedFused
+        } else {
+            self.variant
         }
     }
 }
@@ -100,29 +117,39 @@ impl Coordinator {
         use std::sync::atomic::{AtomicUsize, Ordering};
 
         let t = CycleTimer::start();
-        let variant = self.cfg.variant.instance();
+        // an explicitly configured fuse overrides the fused variant's
+        // auto-params static instance
+        let fused_local = fused::BfsOverVectorizedFused::with_params(self.cfg.fuse);
+        let variant: &dyn Hierarchizer = if self.cfg.variant == Variant::BfsOverVectorizedFused {
+            &fused_local
+        } else {
+            self.cfg.variant.instance()
+        };
         self.sparse.clear();
         let n = self.grids.len();
-        // full thread budget for strategy resolution and pole sharding;
-        // only the grid-level spawn loop is capped at the grid count
+        // full thread budget for strategy resolution and within-grid
+        // sharding; only the grid-level spawn loop is capped at the count
         let threads = self.cfg.workers.max(1);
         let workers = threads.min(n).max(1);
         // largest grid first (LPT): a huge grid arriving last would
         // serialize the tail of the phase
         let order = self.cfg.scheme.balance_order();
 
-        if self.cfg.shard.resolve(n, threads) == ShardStrategy::Pole {
-            // few grids, many threads: shard each grid pole-wise across the
-            // whole pool instead; gather runs inline on the leader (and in
-            // a fixed order, so this mode is FP-deterministic end to end)
-            let p = ParallelHierarchizer::new(self.cfg.variant, threads);
+        let resolved = self.cfg.shard.resolve(n, threads);
+        if resolved.within_grid() {
+            // few grids, many threads: shard each grid pole-wise (or
+            // tile-wise: the cache-blocked fused sweep) across the whole
+            // pool instead; gather runs inline on the leader (and in a
+            // fixed order, so this mode is FP-deterministic end to end)
+            let p = ParallelHierarchizer::new(self.cfg.sharded_variant(resolved), threads)
+                .with_fuse(self.cfg.fuse);
             let coeffs = &self.coeffs;
             let sparse = &mut self.sparse;
             let metrics = &self.metrics;
             for &i in &order {
                 let g = &mut self.grids[i];
                 metrics.time("hierarchize", || {
-                    g.convert_all(variant.layout());
+                    g.convert_all(p.layout());
                     p.hierarchize(g);
                 });
                 metrics.time("gather", || sparse.gather(g, coeffs[i]));
@@ -182,18 +209,25 @@ impl Coordinator {
     /// to the nodal basis (worker pool).
     pub fn scatter_and_dehierarchize(&mut self) {
         let t = CycleTimer::start();
-        let variant = self.cfg.variant.instance();
+        let fused_local = fused::BfsOverVectorizedFused::with_params(self.cfg.fuse);
+        let variant: &dyn Hierarchizer = if self.cfg.variant == Variant::BfsOverVectorizedFused {
+            &fused_local
+        } else {
+            self.cfg.variant.instance()
+        };
         let n = self.grids.len();
         let threads = self.cfg.workers.max(1);
         let sparse = &self.sparse;
         let metrics = &self.metrics;
-        if self.cfg.shard.resolve(n, threads) == ShardStrategy::Pole {
-            // mirror of the pole-sharded hierarchize phase: grids in
-            // sequence, each dehierarchized across the whole pool
-            let p = ParallelHierarchizer::new(self.cfg.variant, threads);
+        let resolved = self.cfg.shard.resolve(n, threads);
+        if resolved.within_grid() {
+            // mirror of the within-grid-sharded hierarchize phase: grids
+            // in sequence, each dehierarchized across the whole pool
+            let p = ParallelHierarchizer::new(self.cfg.sharded_variant(resolved), threads)
+                .with_fuse(self.cfg.fuse);
             for g in &mut self.grids {
                 metrics.time("scatter", || {
-                    g.convert_all(variant.layout());
+                    g.convert_all(p.layout());
                     sparse.scatter(g);
                 });
                 metrics.time("dehierarchize", || {
@@ -359,6 +393,16 @@ mod tests {
             assert_eq!(la, lb);
             for (x, y) in va.iter().zip(vb) {
                 assert!((x - y).abs() < 1e-12, "subspace {la}");
+            }
+        }
+        // tile sharding swaps in the fused variant (bitwise equal to
+        // BFS-OverVectorized, within tolerance of everything else)
+        let c = mk(ShardStrategy::Tile);
+        assert_eq!(a.len(), c.len());
+        for ((la, va), (lc, vc)) in a.iter().zip(&c) {
+            assert_eq!(la, lc);
+            for (x, y) in va.iter().zip(vc) {
+                assert!((x - y).abs() < 1e-12, "subspace {la} (tile)");
             }
         }
     }

@@ -20,6 +20,16 @@
 //!   Release builds carry no claim map and compile to the same code shape
 //!   as before the port: pole accessors keep the bounds check slice
 //!   indexing had, row pointers stay unchecked like the old `rows!` macro.
+//! * [`TileView`] is the cache-blocking work unit of `hierarchize::fused`: a
+//!   set of `runs` equally-long, equally-spaced contiguous runs (contiguous
+//!   when `run_stride == run_len`).  A tile is claimed like a pole/block —
+//!   exactly its run slots, so concurrently carved tiles of one
+//!   decomposition verify their disjointness on the same claim map — and
+//!   then hands out *unclaimed* sub-views ([`TileView::pole`],
+//!   [`TileView::window`]) for the kernels to run through several working
+//!   dimensions while the tile stays cache-resident.  Sub-views carry the
+//!   tile's run geometry, so debug builds reject any row that would cross
+//!   the gap between two runs (i.e. leave the slots the tile owns).
 //! * [`SharedSlice`] is the element-granular sibling for `&mut [T]` shared
 //!   across a worker pool: each index is claimed at most once (atomic-cursor
 //!   or verified-permutation discipline in the callers), so the `&mut T`
@@ -104,7 +114,14 @@ impl<'a> GridCells<'a> {
         for j in 0..len {
             self.claim(base + j * stride);
         }
-        PoleView { cells: self, base, stride, len }
+        PoleView {
+            cells: self,
+            base,
+            stride,
+            len,
+            #[cfg(debug_assertions)]
+            owned: true,
+        }
     }
 
     /// Carve the contiguous block `[start, start + len)`.
@@ -125,7 +142,57 @@ impl<'a> GridCells<'a> {
         for slot in start..start + len {
             self.claim(slot);
         }
-        BlockView { cells: self, start, len }
+        BlockView {
+            cells: self,
+            start,
+            len,
+            #[cfg(debug_assertions)]
+            owned: true,
+            #[cfg(debug_assertions)]
+            run_stride: len.max(1),
+            #[cfg(debug_assertions)]
+            run_len: len,
+        }
+    }
+
+    /// Carve the tile of `runs` runs of `run_len` contiguous slots each,
+    /// `run_stride` apart, starting at `base` — the cache-blocking work
+    /// unit of `hierarchize::fused`.  `run_stride == run_len` gives one
+    /// contiguous range (`runs * run_len` slots).
+    ///
+    /// # Safety
+    /// As [`GridCells::pole`]: no live view may overlap the tile's run
+    /// slots.  Tiles of one fused decomposition are pairwise disjoint, so
+    /// every tile of a plan can be carved concurrently.
+    ///
+    /// # Panics
+    /// If the tile leaves the buffer or `run_len > run_stride`; in debug
+    /// builds also if any run slot is already owned by a live view.
+    pub unsafe fn tile(
+        &self,
+        base: usize,
+        runs: usize,
+        run_stride: usize,
+        run_len: usize,
+    ) -> TileView<'_, 'a> {
+        assert!(runs >= 1 && run_len >= 1, "empty tile carve");
+        assert!(
+            run_len <= run_stride,
+            "tile runs overlap themselves: run_len={run_len} > run_stride={run_stride}"
+        );
+        assert!(
+            base + (runs - 1) * run_stride + run_len <= self.len,
+            "tile carve out of bounds: base={base} runs={runs} run_stride={run_stride} \
+             run_len={run_len} buf={}",
+            self.len
+        );
+        #[cfg(debug_assertions)]
+        for r in 0..runs {
+            for i in 0..run_len {
+                self.claim(base + r * run_stride + i);
+            }
+        }
+        TileView { cells: self, base, runs, run_stride, run_len }
     }
 
     #[cfg(debug_assertions)]
@@ -152,6 +219,10 @@ pub struct PoleView<'c, 'a> {
     base: usize,
     stride: usize,
     len: usize,
+    /// False for sub-views handed out by a [`TileView`]: the tile holds the
+    /// claims, so the sub-view must not release them on drop.
+    #[cfg(debug_assertions)]
+    owned: bool,
 }
 
 impl PoleView<'_, '_> {
@@ -188,6 +259,9 @@ impl PoleView<'_, '_> {
 #[cfg(debug_assertions)]
 impl Drop for PoleView<'_, '_> {
     fn drop(&mut self) {
+        if !self.owned {
+            return; // a TileView sub-view: the tile holds the claims
+        }
         for j in 0..self.len {
             self.cells.release(self.base + j * self.stride);
         }
@@ -202,6 +276,17 @@ pub struct BlockView<'c, 'a> {
     cells: &'c GridCells<'a>,
     start: usize,
     len: usize,
+    /// False for the addressing window of a [`TileView`] (the tile holds
+    /// the claims; dropping the window releases nothing).
+    #[cfg(debug_assertions)]
+    owned: bool,
+    /// Run geometry for the debug row check: rows must stay inside one run
+    /// of `run_len` slots repeating every `run_stride`.  A directly carved
+    /// block is one run covering itself (`run_stride == run_len == len`).
+    #[cfg(debug_assertions)]
+    run_stride: usize,
+    #[cfg(debug_assertions)]
+    run_len: usize,
 }
 
 impl BlockView<'_, '_> {
@@ -230,6 +315,16 @@ impl BlockView<'_, '_> {
             "row out of block: off={off} n={n} block_len={}",
             self.len
         );
+        // tile windows additionally reject rows crossing the gap between
+        // two runs (slots the tile does not own); for a plain block the
+        // whole block is one run and this reduces to the check above
+        #[cfg(debug_assertions)]
+        debug_assert!(
+            n == 0 || (off % self.run_stride) + n <= self.run_len,
+            "row leaves the tile's runs: off={off} n={n} run_stride={} run_len={}",
+            self.run_stride,
+            self.run_len
+        );
         // SAFETY: the carve checked [start, start + len) against the buffer
         unsafe { self.cells.ptr.add(self.start + off) }
     }
@@ -256,8 +351,134 @@ impl BlockView<'_, '_> {
 #[cfg(debug_assertions)]
 impl Drop for BlockView<'_, '_> {
     fn drop(&mut self) {
+        if !self.owned {
+            return; // a TileView window: the tile holds the claims
+        }
         for slot in self.start..self.start + self.len {
             self.cells.release(slot);
+        }
+    }
+}
+
+/// A cache-blocking tile: `runs` contiguous runs of `run_len` slots each,
+/// `run_stride` apart — the work unit of the dimension-fused hierarchizer
+/// (`hierarchize::fused`).
+///
+/// The tile owns exactly its run slots (claimed like a pole/block carve; see
+/// [`GridCells::tile`]).  The kernels access them through *unclaimed*
+/// sub-views: [`TileView::pole`] for the scalar pole kernels and
+/// [`TileView::window`] — a [`BlockView`] over the tile's bounding range —
+/// for the row kernels.  Debug builds verify that every row stays inside a
+/// run, so a navigation bug cannot silently touch the gaps between runs
+/// (slots belonging to other tiles).
+pub struct TileView<'c, 'a> {
+    cells: &'c GridCells<'a>,
+    base: usize,
+    runs: usize,
+    run_stride: usize,
+    run_len: usize,
+}
+
+impl<'c, 'a> TileView<'c, 'a> {
+    /// Number of slots the tile owns (`runs * run_len`).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.runs * self.run_len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Length of the bounding range from the first to the last owned slot.
+    #[inline]
+    pub fn span_len(&self) -> usize {
+        (self.runs - 1) * self.run_stride + self.run_len
+    }
+
+    #[inline]
+    pub fn runs(&self) -> usize {
+        self.runs
+    }
+
+    #[inline]
+    pub fn run_stride(&self) -> usize {
+        self.run_stride
+    }
+
+    #[inline]
+    pub fn run_len(&self) -> usize {
+        self.run_len
+    }
+
+    /// True if `[off, off + n)` (tile-relative) lies inside one run.
+    #[inline]
+    pub fn contains_row(&self, off: usize, n: usize) -> bool {
+        off + n <= self.span_len() && (off % self.run_stride) + n <= self.run_len
+    }
+
+    /// Unclaimed pole sub-view at tile-relative `off` — the scalar-kernel
+    /// unit inside a tile (e.g. one x1 row of a contiguous leading-group
+    /// tile).
+    ///
+    /// # Safety
+    /// The sub-view aliases the tile's slots: it must only be used by the
+    /// thread driving this tile, and no two *concurrently used* sub-views
+    /// may overlap.  (The fused sweep runs sub-views strictly one at a
+    /// time per tile.)
+    ///
+    /// # Panics
+    /// In debug builds, if any slot of the pole falls outside the tile's
+    /// runs.
+    pub unsafe fn pole(&self, off: usize, stride: usize, len: usize) -> PoleView<'c, 'a> {
+        #[cfg(debug_assertions)]
+        for j in 0..len {
+            debug_assert!(
+                self.contains_row(off + j * stride, 1),
+                "pole sub-view leaves the tile: off={off} stride={stride} j={j}"
+            );
+        }
+        PoleView {
+            cells: self.cells,
+            base: self.base + off,
+            stride,
+            len,
+            #[cfg(debug_assertions)]
+            owned: false,
+        }
+    }
+
+    /// Unclaimed addressing window over the tile's bounding range, for the
+    /// row kernels (offsets are tile-relative).  The window carries the
+    /// tile's run geometry, so debug builds panic on any row that would
+    /// cross into the gap between two runs.
+    ///
+    /// # Safety
+    /// As [`TileView::pole`]: the window aliases the tile's slots and must
+    /// only be used by the thread driving this tile.
+    pub unsafe fn window(&self) -> BlockView<'c, 'a> {
+        BlockView {
+            cells: self.cells,
+            start: self.base,
+            len: self.span_len(),
+            #[cfg(debug_assertions)]
+            owned: false,
+            #[cfg(debug_assertions)]
+            run_stride: self.run_stride,
+            #[cfg(debug_assertions)]
+            run_len: self.run_len,
+        }
+    }
+}
+
+#[cfg(debug_assertions)]
+impl Drop for TileView<'_, '_> {
+    fn drop(&mut self) {
+        for r in 0..self.runs {
+            for i in 0..self.run_len {
+                self.cells.release(self.base + r * self.run_stride + i);
+            }
         }
     }
 }
@@ -453,6 +674,128 @@ mod tests {
         for q in 0..n_poles {
             for j in 0..pole_len {
                 assert_eq!(buf[q + j * n_poles], (q * pole_len + j) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn tile_carve_contiguous_and_strided() {
+        let mut buf: Vec<f64> = (0..24).map(|i| i as f64).collect();
+        {
+            let cells = GridCells::new(&mut buf);
+            // contiguous tile: one run of 8
+            // SAFETY: no other view is live
+            let t = unsafe { cells.tile(4, 1, 8, 8) };
+            assert_eq!(t.len(), 8);
+            assert_eq!(t.span_len(), 8);
+            // SAFETY: single-threaded, one sub-view at a time
+            let p = unsafe { t.pole(1, 2, 3) }; // slots 5, 7, 9
+            assert_eq!(p.get(2), 9.0);
+            p.set(0, -5.0);
+            drop(p);
+            let w = unsafe { t.window() };
+            assert_eq!(w.get(1), -5.0);
+            w.set(0, 40.0);
+            drop(w);
+            drop(t);
+            // strided tile: 3 runs of 2, stride 4 -> slots 12,13, 16,17, 20,21
+            // SAFETY: the contiguous tile was dropped
+            let t = unsafe { cells.tile(12, 3, 4, 2) };
+            assert_eq!(t.len(), 6);
+            assert_eq!(t.span_len(), 10);
+            assert!(t.contains_row(4, 2)); // second run
+            assert!(!t.contains_row(1, 2)); // would cross into the gap
+            let w = unsafe { t.window() };
+            w.set(8, -20.0); // slot 20
+        }
+        assert_eq!(buf[4], 40.0);
+        assert_eq!(buf[5], -5.0);
+        assert_eq!(buf[20], -20.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "overlapping carve")]
+    fn overlapping_tile_panics_in_debug() {
+        let mut buf = vec![0f64; 16];
+        let cells = GridCells::new(&mut buf);
+        // SAFETY: debug builds catch the deliberate overlap below
+        let _a = unsafe { cells.tile(0, 2, 8, 4) }; // slots 0..4, 8..12
+        let _b = unsafe { cells.pole(2, 3, 2) }; // slot 2 collides with run 0
+    }
+
+    #[test]
+    fn tiles_claim_only_their_runs() {
+        // the gap slots of a strided tile stay carvable by others
+        let mut buf = vec![0f64; 16];
+        let cells = GridCells::new(&mut buf);
+        // SAFETY: runs (0..2, 8..10) and the gap block (2..8) are disjoint
+        let t = unsafe { cells.tile(0, 2, 8, 2) };
+        let gap = unsafe { cells.block(2, 6) };
+        gap.set(0, 1.0);
+        unsafe { t.window() }.set(0, 2.0);
+        drop((t, gap));
+        assert_eq!(buf[2], 1.0);
+        assert_eq!(buf[0], 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn tile_past_the_buffer_panics() {
+        let mut buf = vec![0f64; 16];
+        let cells = GridCells::new(&mut buf);
+        let _ = unsafe { cells.tile(0, 3, 8, 2) }; // last run would end at 18
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "row leaves the tile's runs")]
+    fn window_row_crossing_a_run_gap_panics() {
+        let mut buf = vec![0f64; 16];
+        let cells = GridCells::new(&mut buf);
+        // SAFETY: no other view is live
+        let t = unsafe { cells.tile(0, 2, 8, 4) };
+        let w = unsafe { t.window() };
+        let _ = w.row_ptr(2, 4); // [2, 6) crosses out of run 0 ([0, 4))
+    }
+
+    /// Fused-engine shape: tiles of one decomposition carved concurrently,
+    /// each thread writing only its own runs.  Run under Miri by the CI
+    /// `miri` job like the pole/block tests above.
+    #[test]
+    fn threaded_disjoint_tiles_are_race_free() {
+        let n_tiles = 4usize;
+        let w = 3usize; // run_len
+        let runs = 5usize;
+        let run_stride = n_tiles * w;
+        let mut buf = vec![0f64; runs * run_stride];
+        {
+            let cells = GridCells::new(&mut buf);
+            let cells = &cells;
+            std::thread::scope(|s| {
+                for t in 0..n_tiles {
+                    s.spawn(move || {
+                        // SAFETY: tile t owns runs starting at t * w —
+                        // pairwise disjoint across t
+                        let tile = unsafe { cells.tile(t * w, runs, run_stride, w) };
+                        let win = unsafe { tile.window() };
+                        for r in 0..runs {
+                            for i in 0..w {
+                                win.set(r * run_stride + i, (t * 100 + r * 10 + i) as f64);
+                            }
+                        }
+                    });
+                }
+            });
+        }
+        for t in 0..n_tiles {
+            for r in 0..runs {
+                for i in 0..w {
+                    assert_eq!(
+                        buf[t * w + r * run_stride + i],
+                        (t * 100 + r * 10 + i) as f64
+                    );
+                }
             }
         }
     }

@@ -153,6 +153,29 @@ pub fn operational_intensity(levels: &LevelVector) -> f64 {
     f / bytes
 }
 
+// ------------------------------------------------- memory-traffic model
+
+/// Dimensions an Alg.-1 sweep actually processes: level-1 axes carry a
+/// single point and receive no update, so they cost no pass.
+pub fn active_dims(levels: &LevelVector) -> u32 {
+    (0..levels.dim()).filter(|&i| levels.level(i) >= 2).count() as u32
+}
+
+/// Streaming main-memory traffic of **one** full sweep pass: every grid
+/// point read and written once (8-byte f64, write-allocate ignored — this
+/// is the ideal lower bound the roofline uses).
+pub fn pass_traffic_bytes(levels: &LevelVector) -> u64 {
+    2 * 8 * levels.total_points() as u64
+}
+
+/// Modeled traffic of every *unfused* variant: one pass per active
+/// dimension — the `d` DRAM round trips that bound the paper's large data
+/// sets.  The fused counterpart is `hierarchize::fused::traffic_fused`
+/// (`ceil(d/k)` passes).
+pub fn traffic_unfused(levels: &LevelVector) -> u64 {
+    active_dims(levels) as u64 * pass_traffic_bytes(levels)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,6 +243,18 @@ mod tests {
         let r = flops_reduced(&lv);
         let ratio = r.adds as f64 / r.muls as f64;
         assert!((ratio - 2.0).abs() < 0.01, "adds/muls = {ratio}");
+    }
+
+    #[test]
+    fn traffic_model_counts_active_sweeps() {
+        let lv = LevelVector::new(&[4, 3, 2]);
+        assert_eq!(active_dims(&lv), 3);
+        assert_eq!(pass_traffic_bytes(&lv), 2 * 8 * 15 * 7 * 3);
+        assert_eq!(traffic_unfused(&lv), 3 * pass_traffic_bytes(&lv));
+        // level-1 axes cost nothing
+        let lv = LevelVector::new(&[4, 1, 3]);
+        assert_eq!(active_dims(&lv), 2);
+        assert_eq!(traffic_unfused(&lv), 2 * pass_traffic_bytes(&lv));
     }
 
     #[test]

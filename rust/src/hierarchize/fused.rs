@@ -1,0 +1,605 @@
+//! Cache-blocked, dimension-fused hierarchization.
+//!
+//! Every unfused variant performs one full sweep over the grid buffer per
+//! working dimension, so a `d`-dimensional hierarchization moves the data
+//! set `d` times through DRAM — for the paper's large grids (up to 1 GB)
+//! the kernel is bandwidth-bound and those round trips are the bill.  This
+//! module blocks the sweep: the grid is partitioned into **tiles** that
+//! span the *full extent* of `k` consecutive ("fused") axes and are blocked
+//! over the remaining axes, and every tile is pushed through all `k`
+//! working dimensions while it is cache-resident.  Main-memory traffic
+//! drops from `d` passes to `ceil(d/k)` passes.
+//!
+//! Correctness is structural: a pole of any fused axis lies entirely inside
+//! its tile, so hierarchizing a tile through the group's dimensions reads
+//! and writes only tile-local slots.  Every per-node update runs the *same*
+//! row/pole kernels as the serial sweep ([`simd::RowKernels`],
+//! [`bfs::pole_hierarchize_bfs`], ...) with the same floating-point
+//! expression shapes, and each grid point receives its updates in the same
+//! dimension order — the result is therefore **bitwise identical** to the
+//! serial unfused reference for every fuse depth, tile size, thread count,
+//! and tile claim order (the conformance suite drives all four).
+//!
+//! Tile geometry (`grid::cells::TileView`):
+//!
+//! * the **leading group** (axes `0..k`) tiles are contiguous: whole slabs
+//!   of `stride(k)` slots, several per tile when they fit the budget;
+//! * **later groups** (axes `a..b`, `a >= 1`) tiles are strided: the full
+//!   fused extent `stride(b)/stride(a)` as runs of `w` consecutive x1-side
+//!   slots each, `stride(a)` apart, with `w` sized so the tile fits the
+//!   cache budget.  The row kernels then run width-`w` spans
+//!   ([`overvec::overvec_span`] / [`ind::ind_rows_span`]).
+//!
+//! [`autotune`] picks the fuse depth and tile budget from the grid shape
+//! and a detected (or overridden: `SGCT_TILE_BYTES`, `--tile-kb`) cache
+//! size.  [`fused_passes`] / [`traffic_fused`] model the resulting memory
+//! traffic; `perf::roofline` turns that into predicted cycles for the
+//! fused-vs-unfused bench (`benches/fused_traffic.rs`).
+
+use std::sync::OnceLock;
+
+use crate::grid::{AxisLayout, FullGrid, LevelVector, TileView};
+use crate::util::rng::SplitMix64;
+
+use super::parallel::parallel_units;
+use super::{bfs, flops, ind, overvec, simd, Hierarchizer};
+
+/// Tuning knobs of the fused sweep.  `0` means "autotune": the depth from
+/// [`autotune`], the budget from [`default_tile_bytes`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FuseParams {
+    /// Number of consecutive axes hierarchized per tile pass (the `k` of
+    /// the traffic model).
+    pub fuse_depth: usize,
+    /// Cache budget per tile, in bytes.
+    pub tile_bytes: usize,
+}
+
+impl FuseParams {
+    /// Autotune everything (the default).
+    pub const AUTO: FuseParams = FuseParams { fuse_depth: 0, tile_bytes: 0 };
+}
+
+/// Per-tile cache budget in bytes: `SGCT_TILE_BYTES` if set, else the
+/// detected per-core L2 size, else a conservative 256 KiB.  Floored at
+/// 64 KiB so degenerate detections cannot pessimize the plan.
+pub fn default_tile_bytes() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if cfg!(miri) {
+            // Miri's isolation forbids the env/sysfs probes; a fixed
+            // budget keeps the interpreter runs deterministic
+            return 256 * 1024;
+        }
+        if let Some(v) = std::env::var("SGCT_TILE_BYTES")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+        {
+            if v > 0 {
+                return v;
+            }
+        }
+        detect_l2_bytes().unwrap_or(256 * 1024).max(64 * 1024)
+    })
+}
+
+fn detect_l2_bytes() -> Option<usize> {
+    let s = std::fs::read_to_string("/sys/devices/system/cpu/cpu0/cache/index2/size").ok()?;
+    parse_cache_size(s.trim())
+}
+
+/// Parse sysfs cache-size notation: `"512K"`, `"8M"`, or plain bytes.
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024usize),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    digits.trim().parse::<usize>().ok().map(|v| v.saturating_mul(mult))
+}
+
+/// Pick fuse parameters for a grid shape: the deepest fuse whose leading
+/// slab (full extent of the fused axes) still fits the budget, so the
+/// leading group's tiles are genuinely cache-resident.  `budget_bytes = 0`
+/// uses [`default_tile_bytes`].
+pub fn autotune(levels: &LevelVector, budget_bytes: usize) -> FuseParams {
+    let budget = if budget_bytes == 0 { default_tile_bytes() } else { budget_bytes };
+    let d = levels.dim();
+    let mut k = 1usize;
+    let mut slab_bytes = 8usize.saturating_mul(levels.axis_points(0));
+    while k < d {
+        let next = slab_bytes.saturating_mul(levels.axis_points(k));
+        if next > budget {
+            break;
+        }
+        slab_bytes = next;
+        k += 1;
+    }
+    FuseParams { fuse_depth: k, tile_bytes: budget }
+}
+
+/// Number of full-buffer passes of a fused sweep at depth `k`: one per
+/// group of `k` consecutive axes that contains at least one active
+/// (level >= 2) dimension.  `k = 1` reproduces the unfused
+/// [`flops::active_dims`].
+pub fn fused_passes(levels: &LevelVector, fuse_depth: usize) -> u32 {
+    let d = levels.dim();
+    let k = fuse_depth.clamp(1, d);
+    (0..d)
+        .step_by(k)
+        .filter(|&a| (a..(a + k).min(d)).any(|j| levels.level(j) >= 2))
+        .count() as u32
+}
+
+/// Modeled main-memory traffic of the fused sweep (read + write every point
+/// once per pass); compare [`flops::traffic_unfused`].
+pub fn traffic_fused(levels: &LevelVector, fuse_depth: usize) -> u64 {
+    fused_passes(levels, fuse_depth) as u64 * flops::pass_traffic_bytes(levels)
+}
+
+// ------------------------------------------------------------- the sweep
+
+/// Which per-unit kernels a fused sweep drives — the same enumeration the
+/// serial variants use, so results stay bitwise identical.
+#[derive(Clone, Copy)]
+pub(crate) enum FusedKernel {
+    /// BFS layout: scalar BFS pole walk on axis 1, over-vectorized heap
+    /// rows on the axes above ([`overvec::overvec_span`]).
+    OverVec(overvec::Mode),
+    /// Position layout: scalar `Ind` poles on axis 1, position-navigated
+    /// rows above ([`ind::ind_rows_span`]).
+    IndRows,
+}
+
+/// Storage geometry of one grid: extents (x1 padded to `row_len`) and the
+/// cumulative strides, with `stride[d] ==` total buffer length.
+struct Geometry {
+    ext: Vec<usize>,
+    stride: Vec<usize>,
+}
+
+impl Geometry {
+    fn of(g: &FullGrid) -> Self {
+        let d = g.dim();
+        let ext: Vec<usize> =
+            (0..d).map(|j| if j == 0 { g.row_len() } else { g.axis_points(j) }).collect();
+        let mut stride = vec![1usize; d + 1];
+        for j in 0..d {
+            stride[j] = g.stride(j);
+        }
+        stride[d] = stride[d - 1] * ext[d - 1];
+        Self { ext, stride }
+    }
+
+    #[inline]
+    fn total(&self) -> usize {
+        *self.stride.last().unwrap()
+    }
+}
+
+/// One tile of a group plan (carve arguments for `GridCells::tile`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Tile {
+    base: usize,
+    runs: usize,
+    run_stride: usize,
+    run_len: usize,
+}
+
+/// Tiles of the group `[a, b)`: a partition of the buffer into disjoint
+/// tiles, each containing every pole of every fused axis it touches.
+fn plan_tiles(geo: &Geometry, a: usize, b: usize, budget_bytes: usize) -> Vec<Tile> {
+    let mut tiles = Vec::new();
+    if a == 0 {
+        // leading group: contiguous slabs of the full fused extent
+        let slab = geo.stride[b];
+        let n_slabs = geo.total() / slab;
+        let per = (budget_bytes / (slab * 8)).clamp(1, n_slabs.max(1));
+        let mut s = 0;
+        while s < n_slabs {
+            let m = per.min(n_slabs - s);
+            let len = m * slab;
+            tiles.push(Tile { base: s * slab, runs: 1, run_stride: len, run_len: len });
+            s += m;
+        }
+    } else {
+        // later group: the full fused extent as strided runs, blocked over
+        // the faster axes with width w sized to the budget
+        let sa = geo.stride[a];
+        let f = geo.stride[b] / sa;
+        let outer = geo.total() / geo.stride[b];
+        let w = (budget_bytes / (f * 8)).clamp(1, sa);
+        for o in 0..outer {
+            let mut i0 = 0;
+            while i0 < sa {
+                let len = w.min(sa - i0);
+                tiles.push(Tile {
+                    base: o * geo.stride[b] + i0,
+                    runs: f,
+                    run_stride: sa,
+                    run_len: len,
+                });
+                i0 += len;
+            }
+        }
+    }
+    tiles
+}
+
+/// Drive one *leading-group* tile (contiguous, axes `0..b`) through all its
+/// working dimensions — exactly the serial sweep restricted to the tile.
+fn run_tile_leading(
+    tile: &TileView,
+    geo: &Geometry,
+    levels: &LevelVector,
+    b: usize,
+    up: bool,
+    kern: FusedKernel,
+    k: simd::RowKernels,
+) {
+    let tile_len = tile.span_len();
+    let row_len = geo.ext[0];
+    for j in 0..b {
+        let l = levels.level(j);
+        if l < 2 {
+            continue;
+        }
+        if j == 0 {
+            let n0 = levels.axis_points(0);
+            for r in 0..tile_len / row_len {
+                // SAFETY: one sub-view at a time, on the tile's own thread
+                let p = unsafe { tile.pole(r * row_len, 1, n0) };
+                match (kern, up) {
+                    (FusedKernel::OverVec(_), false) => bfs::pole_hierarchize_bfs(&p, l),
+                    (FusedKernel::OverVec(_), true) => bfs::pole_dehierarchize_bfs(&p, l),
+                    (FusedKernel::IndRows, false) => ind::pole_hierarchize(&p, l, false),
+                    (FusedKernel::IndRows, true) => ind::pole_dehierarchize(&p, l),
+                }
+            }
+            continue;
+        }
+        // SAFETY: one sub-view at a time, on the tile's own thread
+        let win = unsafe { tile.window() };
+        let w = geo.stride[j];
+        let sub = w * geo.ext[j];
+        for ob in 0..tile_len / sub {
+            match kern {
+                FusedKernel::OverVec(mode) => {
+                    overvec::overvec_span(&win, ob * sub, w, w, l, up, mode, k)
+                }
+                FusedKernel::IndRows => ind::ind_rows_span(&win, ob * sub, w, w, l, up, k),
+            }
+        }
+    }
+}
+
+/// Drive one *later-group* tile (strided, axes `a..b`, `a >= 1`) through
+/// all its working dimensions: width-`run_len` row spans over the tile's
+/// addressing window.
+#[allow(clippy::too_many_arguments)]
+fn run_tile_strided(
+    tile: &TileView,
+    geo: &Geometry,
+    levels: &LevelVector,
+    a: usize,
+    b: usize,
+    up: bool,
+    kern: FusedKernel,
+    k: simd::RowKernels,
+) {
+    // SAFETY: one window at a time, on the tile's own thread
+    let win = unsafe { tile.window() };
+    let sa = geo.stride[a];
+    let f_total = geo.stride[b] / sa; // tile runs == fused extent
+    let w = tile.run_len();
+    for j in a..b {
+        let l = levels.level(j);
+        if l < 2 {
+            continue;
+        }
+        let fj = geo.stride[j] / sa; // runs per step of axis j
+        let step = fj * geo.ext[j];
+        for f_slow in 0..f_total / step {
+            for f_fast in 0..fj {
+                let base = (f_slow * step + f_fast) * sa;
+                match kern {
+                    FusedKernel::OverVec(mode) => {
+                        overvec::overvec_span(&win, base, fj * sa, w, l, up, mode, k)
+                    }
+                    FusedKernel::IndRows => ind::ind_rows_span(&win, base, fj * sa, w, l, up, k),
+                }
+            }
+        }
+    }
+}
+
+/// The fused sweep: groups of `fuse_depth` consecutive axes, each group one
+/// tiled pass over the buffer, tiles claimed by up to `threads` workers
+/// (chunked atomic-cursor stealing, optionally in a seeded shuffle order —
+/// tiles touch disjoint slots, so any claim order is bitwise identical).
+pub(crate) fn sweep_fused(
+    g: &mut FullGrid,
+    up: bool,
+    kern: FusedKernel,
+    params: FuseParams,
+    threads: usize,
+    seed: Option<u64>,
+) {
+    let d = g.dim();
+    let budget = if params.tile_bytes == 0 { default_tile_bytes() } else { params.tile_bytes };
+    let depth = if params.fuse_depth == 0 {
+        autotune(g.levels(), budget).fuse_depth
+    } else {
+        params.fuse_depth.clamp(1, d)
+    };
+    let k = simd::kernels();
+    let geo = Geometry::of(g);
+    debug_assert_eq!(geo.total(), g.as_slice().len());
+    let levels = g.levels().clone();
+    let mut a = 0;
+    while a < d {
+        let b = (a + depth).min(d);
+        if !(a..b).any(|j| levels.level(j) >= 2) {
+            a = b;
+            continue;
+        }
+        let tiles = plan_tiles(&geo, a, b, budget);
+        let order = seed.map(|s| {
+            let mut o: Vec<usize> = (0..tiles.len()).collect();
+            SplitMix64::new(s ^ (a as u64).wrapping_mul(0x9E3779B97F4A7C15)).shuffle(&mut o);
+            o
+        });
+        let cells = g.cells();
+        let (cells, tiles, geo, levels) = (&cells, &tiles, &geo, &levels);
+        let run = move |u: usize| {
+            let t = tiles[u];
+            // SAFETY: tiles of one group plan are pairwise disjoint and
+            // each unit u is claimed exactly once (atomic cursor /
+            // verified shuffle); debug builds verify on the claim map
+            let tv = unsafe { cells.tile(t.base, t.runs, t.run_stride, t.run_len) };
+            if a == 0 {
+                run_tile_leading(&tv, geo, levels, b, up, kern, k);
+            } else {
+                run_tile_strided(&tv, geo, levels, a, b, up, kern, k);
+            }
+        };
+        parallel_units(threads, tiles.len(), order.as_deref(), &run);
+        // implicit barrier: the next group starts only after every tile of
+        // this group finished (std::thread::scope join)
+        a = b;
+    }
+}
+
+// ------------------------------------------------------- the hierarchizers
+
+/// Cache-blocked, dimension-fused `BFS-OverVectorized`: bitwise identical
+/// surpluses, `ceil(d/k)` instead of `d` memory passes.  Field value `0`
+/// means autotune ([`autotune`] / [`default_tile_bytes`]).
+pub struct BfsOverVectorizedFused {
+    pub fuse_depth: usize,
+    pub tile_bytes: usize,
+}
+
+impl BfsOverVectorizedFused {
+    /// Fully autotuned configuration (what [`Variant::instance`] serves).
+    ///
+    /// [`Variant::instance`]: super::Variant::instance
+    pub const AUTO: BfsOverVectorizedFused =
+        BfsOverVectorizedFused { fuse_depth: 0, tile_bytes: 0 };
+
+    pub fn with_params(p: FuseParams) -> Self {
+        Self { fuse_depth: p.fuse_depth, tile_bytes: p.tile_bytes }
+    }
+
+    pub fn params(&self) -> FuseParams {
+        FuseParams { fuse_depth: self.fuse_depth, tile_bytes: self.tile_bytes }
+    }
+}
+
+impl Hierarchizer for BfsOverVectorizedFused {
+    fn name(&self) -> &'static str {
+        "BFS-OverVectorized-Fused"
+    }
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::Bfs
+    }
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep_fused(g, false, FusedKernel::OverVec(overvec::Mode::Plain), self.params(), 1, None);
+    }
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        sweep_fused(g, true, FusedKernel::OverVec(overvec::Mode::Plain), self.params(), 1, None);
+    }
+}
+
+/// Cache-blocked, dimension-fused `Ind-Vectorized` (position layout): the
+/// same tiling driving the position-navigated row kernels.  Not part of
+/// the paper's variant ladder ([`super::ALL_VARIANTS`]); exists to show
+/// the tiling is kernel-agnostic and as a position-layout option for
+/// pipelines that want to skip the BFS conversion.
+pub struct IndVectorizedFused {
+    pub fuse_depth: usize,
+    pub tile_bytes: usize,
+}
+
+impl Hierarchizer for IndVectorizedFused {
+    fn name(&self) -> &'static str {
+        "Ind-Vectorized-Fused"
+    }
+    fn layout(&self) -> AxisLayout {
+        AxisLayout::Position
+    }
+    fn hierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        let p = FuseParams { fuse_depth: self.fuse_depth, tile_bytes: self.tile_bytes };
+        sweep_fused(g, false, FusedKernel::IndRows, p, 1, None);
+    }
+    fn dehierarchize(&self, g: &mut FullGrid) {
+        super::assert_layout(self, g);
+        let p = FuseParams { fuse_depth: self.fuse_depth, tile_bytes: self.tile_bytes };
+        sweep_fused(g, true, FusedKernel::IndRows, p, 1, None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchize::{ind::IndVectorized, overvec::BfsOverVectorized, prepare};
+
+    fn rand_grid(levels: &[u8], seed: u64) -> FullGrid {
+        let mut g = FullGrid::new(LevelVector::new(levels));
+        let mut rng = SplitMix64::new(seed);
+        g.fill_with(|_| rng.next_f64() - 0.5);
+        g
+    }
+
+    /// Every group plan partitions the buffer: each slot in exactly one
+    /// tile, run geometry within bounds.
+    #[test]
+    fn tile_plans_partition_the_buffer() {
+        let shapes: &[&[u8]] = &[&[4], &[3, 3], &[2, 3, 2], &[3, 1, 2, 2], &[1, 4, 1]];
+        for levels in shapes {
+            for pad in [1usize, 4] {
+                let g = FullGrid::with_padding(LevelVector::new(levels), pad);
+                let geo = Geometry::of(&g);
+                let total = geo.total();
+                assert_eq!(total, g.as_slice().len(), "{levels:?} pad {pad}");
+                let d = levels.len();
+                for depth in 1..=d {
+                    let mut a = 0;
+                    while a < d {
+                        let b = (a + depth).min(d);
+                        for budget in [8usize, 128, 1 << 20] {
+                            let mut seen = vec![0u8; total];
+                            for t in plan_tiles(&geo, a, b, budget) {
+                                assert!(t.run_len <= t.run_stride, "{t:?}");
+                                for r in 0..t.runs {
+                                    for i in 0..t.run_len {
+                                        seen[t.base + r * t.run_stride + i] += 1;
+                                    }
+                                }
+                            }
+                            assert!(
+                                seen.iter().all(|&s| s == 1),
+                                "{levels:?} pad {pad} group [{a},{b}) budget {budget}"
+                            );
+                        }
+                        a = b;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The acceptance contract, in miniature: bitwise equality with the
+    /// serial unfused reference across fuse depths, tile budgets (incl.
+    /// degenerate 1-slot tiles), for hierarchize and dehierarchize.
+    #[test]
+    fn fused_bitwise_matches_unfused() {
+        let shapes: &[&[u8]] =
+            if cfg!(miri) { &[&[3, 2]] } else { &[&[5], &[4, 3], &[1, 4, 2], &[3, 2, 2, 2]] };
+        let budgets: &[usize] = if cfg!(miri) { &[8, 1 << 16] } else { &[8, 200, 4096, 1 << 20] };
+        for levels in shapes {
+            let input = rand_grid(levels, 31);
+            let mut want = input.clone();
+            prepare(&BfsOverVectorized, &mut want);
+            BfsOverVectorized.hierarchize(&mut want);
+            let mut want_back = want.clone();
+            BfsOverVectorized.dehierarchize(&mut want_back);
+            for depth in 1..=3usize {
+                for &budget in budgets {
+                    let h = BfsOverVectorizedFused { fuse_depth: depth, tile_bytes: budget };
+                    let mut got = input.clone();
+                    prepare(&h, &mut got);
+                    h.hierarchize(&mut got);
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "{levels:?} depth {depth} budget {budget}"
+                    );
+                    h.dehierarchize(&mut got);
+                    assert_eq!(
+                        got.as_slice(),
+                        want_back.as_slice(),
+                        "dehier {levels:?} depth {depth} budget {budget}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_ind_rows_matches_ind_vectorized() {
+        let shapes: &[&[u8]] = if cfg!(miri) { &[&[3, 2]] } else { &[&[4, 3], &[2, 3, 2]] };
+        for levels in shapes {
+            let input = rand_grid(levels, 7);
+            let mut want = input.clone();
+            IndVectorized.hierarchize(&mut want);
+            let h = IndVectorizedFused { fuse_depth: 2, tile_bytes: 256 };
+            let mut got = input.clone();
+            h.hierarchize(&mut got);
+            assert_eq!(got.as_slice(), want.as_slice(), "{levels:?}");
+            h.dehierarchize(&mut got);
+            let mut back = want.clone();
+            IndVectorized.dehierarchize(&mut back);
+            assert_eq!(got.as_slice(), back.as_slice(), "dehier {levels:?}");
+        }
+    }
+
+    #[test]
+    fn fused_works_on_padded_grids() {
+        let levels = LevelVector::new(&[3, 3]);
+        let mut plain = FullGrid::new(levels.clone());
+        let mut rng = SplitMix64::new(9);
+        plain.fill_with(|_| rng.next_f64());
+        let mut padded = FullGrid::with_padding(levels, 4);
+        padded.from_canonical(&plain.to_canonical());
+        let h = BfsOverVectorizedFused { fuse_depth: 2, tile_bytes: 512 };
+        prepare(&h, &mut plain);
+        prepare(&h, &mut padded);
+        h.hierarchize(&mut plain);
+        h.hierarchize(&mut padded);
+        assert!(plain.max_diff(&padded) < 1e-12);
+        // pads stay zero
+        let n1 = padded.axis_points(0);
+        for row in 0..padded.axis_points(1) {
+            for p in n1..padded.row_len() {
+                assert_eq!(padded.as_slice()[row * padded.row_len() + p], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn autotune_depth_follows_the_budget() {
+        let lv = LevelVector::new(&[5, 5, 5]); // rows 31 pts = 248 B
+        assert_eq!(autotune(&lv, 8 * 31).fuse_depth, 1); // one row, no more
+        assert_eq!(autotune(&lv, 8 * 31 * 31).fuse_depth, 2); // one x1-x2 slab
+        assert_eq!(autotune(&lv, usize::MAX).fuse_depth, 3); // whole grid
+        // a single row over budget still fuses depth 1 (minimum)
+        assert_eq!(autotune(&lv, 8).fuse_depth, 1);
+        assert_eq!(autotune(&lv, 0).tile_bytes, default_tile_bytes());
+    }
+
+    #[test]
+    fn traffic_model_counts_groups_with_active_dims() {
+        let lv = LevelVector::new(&[4, 4, 4, 4]);
+        assert_eq!(fused_passes(&lv, 1), 4);
+        assert_eq!(fused_passes(&lv, 2), 2);
+        assert_eq!(fused_passes(&lv, 3), 2); // [0,3) + [3,4)
+        assert_eq!(fused_passes(&lv, 4), 1);
+        // level-1 axes are not swept: a group of only-level-1 axes is free
+        let lv = LevelVector::new(&[4, 4, 1, 1]);
+        assert_eq!(fused_passes(&lv, 2), 1);
+        assert_eq!(flops::traffic_unfused(&lv), 2 * flops::pass_traffic_bytes(&lv));
+        assert_eq!(traffic_fused(&lv, 2), flops::pass_traffic_bytes(&lv));
+    }
+
+    #[test]
+    fn cache_size_notation_parses() {
+        assert_eq!(parse_cache_size("512K"), Some(512 * 1024));
+        assert_eq!(parse_cache_size("8M"), Some(8 * 1024 * 1024));
+        assert_eq!(parse_cache_size("262144"), Some(262144));
+        assert_eq!(parse_cache_size("nope"), None);
+    }
+}

@@ -155,8 +155,26 @@ pub struct IndVectorized;
 /// `hierarchize::parallel` shard a dimension across the worker pool while
 /// staying bitwise identical to the serial sweep.
 pub(crate) fn vec_rows_block(blk: &BlockView, w: usize, l: u8, up: bool, k: simd::RowKernels) {
+    ind_rows_span(blk, 0, w, w, l, up, k);
+}
+
+/// Generalized row navigation of [`vec_rows_block`]: the row of axis
+/// position `pos` starts at block offset `base + (pos-1) * row_stride` and
+/// is `w` wide (`w <= row_stride`).  `vec_rows_block` is the dense case
+/// (`base = 0, row_stride = w`); `hierarchize::fused` uses the strided case
+/// for cache-resident tiles.  Same [`simd::RowKernels`], bitwise-identical
+/// results.
+pub(crate) fn ind_rows_span(
+    blk: &BlockView,
+    base: usize,
+    row_stride: usize,
+    w: usize,
+    l: u8,
+    up: bool,
+    k: simd::RowKernels,
+) {
     let end = 1usize << l;
-    let row = |pos: usize| (pos - 1) * w;
+    let row = |pos: usize| base + (pos - 1) * row_stride;
     let subs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
     for lev in subs {
         let s = 1usize << (l - lev);

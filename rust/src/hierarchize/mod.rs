@@ -15,20 +15,25 @@
 //! | `BfsOverVectorized` | BFS | heap | whole x1-row per node (axes >= 2), AVX |
 //! | `BfsOverVectorizedPreBranched` | BFS | heap, branch hoisted per level | whole row |
 //! | `BfsOverVectorizedPreBranchedReducedOp` | BFS | heap | whole row, reduced flops |
+//! | `BfsOverVectorizedFused` | BFS | heap, cache-blocked tiles | row spans, `k` dims fused per tile ([`fused`]) |
 //!
 //! All variants are verified against each other and against the python
 //! oracle; `flops` provides the (corrected) Eq. 1 flop model plus an
-//! instrumented counter.
+//! instrumented counter.  `fused` adds the cache-blocked, dimension-fused
+//! sweep: `ceil(d/k)` memory passes instead of `d`, bitwise identical
+//! output (see the module docs for the traffic model).
 
 pub mod bfs;
 pub mod flops;
 pub mod func;
+pub mod fused;
 pub mod ind;
 pub mod overvec;
 pub mod parallel;
 pub mod simd;
 pub mod unrolled;
 
+pub use fused::{BfsOverVectorizedFused, FuseParams};
 pub use parallel::{ParallelHierarchizer, ShardStrategy};
 
 use crate::grid::{AxisLayout, FullGrid, LevelVector};
@@ -84,9 +89,13 @@ pub enum Variant {
     BfsOverVectorized,
     BfsOverVectorizedPreBranched,
     BfsOverVectorizedPreBranchedReducedOp,
+    /// Cache-blocked dimension fusion on top of the over-vectorized row
+    /// kernels (`hierarchize::fused`); autotuned fuse depth / tile size.
+    BfsOverVectorizedFused,
 }
 
-/// Every variant, ordered as derived in the paper (§3).
+/// Every variant, ordered as derived in the paper (§3); the fused code —
+/// this repo's extension beyond the paper — comes last.
 pub const ALL_VARIANTS: &[Variant] = &[
     Variant::Func,
     Variant::FuncFpNav,
@@ -100,6 +109,7 @@ pub const ALL_VARIANTS: &[Variant] = &[
     Variant::BfsOverVectorized,
     Variant::BfsOverVectorizedPreBranched,
     Variant::BfsOverVectorizedPreBranchedReducedOp,
+    Variant::BfsOverVectorizedFused,
 ];
 
 impl Variant {
@@ -125,27 +135,43 @@ impl Variant {
             Variant::BfsOverVectorizedPreBranchedReducedOp => {
                 &overvec::BfsOverVectorizedPreBranchedReducedOp
             }
+            Variant::BfsOverVectorizedFused => &fused::BfsOverVectorizedFused::AUTO,
         }
     }
 }
 
-/// Paper-style variant dispatch by grid shape (the per-grid auto-selection
-/// of the batched scheme engine).
+/// Paper-style variant dispatch by grid shape and working-set size (the
+/// per-grid auto-selection of the batched scheme engine).
 ///
 /// * `d = 1` — no adjacent poles to fuse, so the row codes degenerate; the
 ///   paper's Fig. 4 shows `BFS` staying flat as the data set grows, so it
 ///   is the safe pick at every size.
-/// * `d >= 2` with an x1 row of at least one AVX vector (4 points) — the
-///   over-vectorized family is the paper's headline; `PreBranched` hoists
-///   the per-node branch and never loses to plain.
+/// * `d >= 2` with an x1 row of at least one AVX vector (4 points):
+///   * grid bytes above the tile budget — the working set does not fit in
+///     cache, so every unfused sweep is a DRAM round trip; the
+///     cache-blocked fused code ([`fused`]) cuts those from `d` to
+///     `ceil(d/k)` and wins on bandwidth;
+///   * grid fits the budget — the whole buffer stays cache-resident
+///     between sweeps anyway; `PreBranched` hoists the per-node branch and
+///     never loses to plain.
 /// * `d >= 2` with x1 rows shorter than one AVX vector (level <= 2, i.e.
 ///   at most 3 points) — too short to amortize the row kernels; scalar
 ///   `Ind` wins.
 pub fn auto_variant(levels: &LevelVector) -> Variant {
+    auto_variant_with_budget(levels, fused::default_tile_bytes())
+}
+
+/// [`auto_variant`] against an explicit tile/cache budget in bytes (the
+/// working-set threshold above which the fused variant is preferred).
+pub fn auto_variant_with_budget(levels: &LevelVector, budget_bytes: usize) -> Variant {
     if levels.dim() == 1 {
         Variant::Bfs
     } else if levels.axis_points(0) >= 4 {
-        Variant::BfsOverVectorizedPreBranched
+        if levels.size_bytes() > budget_bytes {
+            Variant::BfsOverVectorizedFused
+        } else {
+            Variant::BfsOverVectorizedPreBranched
+        }
     } else {
         Variant::Ind
     }
@@ -267,6 +293,40 @@ mod tests {
             variant_by_name("bfs-overvectorized-prebranched-reducedop"),
             Some(Variant::BfsOverVectorizedPreBranchedReducedOp)
         );
+        assert_eq!(
+            variant_by_name("BFS-OverVectorized-Fused"),
+            Some(Variant::BfsOverVectorizedFused)
+        );
         assert_eq!(variant_by_name("nope"), None);
+    }
+
+    /// Pins the working-set dispatch: above the tile budget the fused
+    /// variant is selected, below it the unfused picks are unchanged.
+    #[test]
+    fn auto_variant_prefers_fused_above_the_tile_budget() {
+        let big = LevelVector::new(&[10, 10]); // 1023^2 pts ~ 8.4 MB
+        let budget = 1 << 20; // 1 MiB
+        assert_eq!(auto_variant_with_budget(&big, budget), Variant::BfsOverVectorizedFused);
+        assert_eq!(
+            auto_variant_with_budget(&big, usize::MAX),
+            Variant::BfsOverVectorizedPreBranched
+        );
+        // small grids keep the cache-resident pick
+        let small = LevelVector::new(&[5, 5]);
+        assert_eq!(
+            auto_variant_with_budget(&small, budget),
+            Variant::BfsOverVectorizedPreBranched
+        );
+        // d = 1 and sub-vector rows are shape-bound, not size-bound
+        assert_eq!(auto_variant_with_budget(&LevelVector::new(&[24]), 1024), Variant::Bfs);
+        assert_eq!(
+            auto_variant_with_budget(&LevelVector::new(&[2, 12, 12]), 1024),
+            Variant::Ind
+        );
+        // the default budget is the fused tile budget
+        assert_eq!(
+            auto_variant(&big),
+            auto_variant_with_budget(&big, fused::default_tile_bytes())
+        );
     }
 }

@@ -44,6 +44,27 @@ pub(crate) fn overvec_block(
     mode: Mode,
     k: simd::RowKernels,
 ) {
+    overvec_span(blk, 0, w, w, l, up, mode, k);
+}
+
+/// Generalized row navigation of [`overvec_block`]: BFS node `h`'s row
+/// starts at block offset `base + (h-1) * row_stride` and is `w` wide
+/// (`w <= row_stride`).  `overvec_block` is the dense case
+/// (`base = 0, row_stride = w`); `hierarchize::fused` uses the strided case
+/// to push a cache-resident tile of width `w` through non-leading working
+/// dimensions.  The floating-point kernels (and hence the results, bitwise)
+/// are the same [`simd::RowKernels`] either way.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn overvec_span(
+    blk: &BlockView,
+    base: usize,
+    row_stride: usize,
+    w: usize,
+    l: u8,
+    up: bool,
+    mode: Mode,
+    k: simd::RowKernels,
+) {
     let (app1, app2): (fn(&BlockView, usize, usize, usize), _) = if up {
         (k.add1, k.add2)
     } else {
@@ -52,7 +73,7 @@ pub(crate) fn overvec_block(
             _ => (k.sub1, k.sub2),
         }
     };
-    let row = |h: u32| (h as usize - 1) * w;
+    let row = |h: u32| base + (h as usize - 1) * row_stride;
     let levs: Vec<u8> = if up { (2..=l).collect() } else { (2..=l).rev().collect() };
     for lev in levs {
         let first = 1u32 << (lev - 1);

@@ -38,6 +38,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use crate::grid::{AxisLayout, FullGrid, Poles};
 use crate::util::rng::SplitMix64;
 
+use super::fused::{self, FuseParams, FusedKernel};
 use super::{bfs, ind, overvec, simd, unrolled, Hierarchizer, Variant};
 
 /// How a batch of work is split across the worker pool.
@@ -48,6 +49,10 @@ pub enum ShardStrategy {
     Grid,
     /// Shard each grid pole-wise across all threads, grids in sequence.
     Pole,
+    /// Shard each grid tile-wise with the cache-blocked fused sweep
+    /// (`hierarchize::fused`): grids in sequence, tiles across the pool,
+    /// `ceil(d/k)` memory passes instead of `d`.
+    Tile,
     /// Pick per batch: grid-level when there are enough grids to fill the
     /// pool, pole-level otherwise.
     #[default]
@@ -68,6 +73,12 @@ impl ShardStrategy {
             s => s,
         }
     }
+
+    /// True if the (resolved) strategy shards *inside* each grid — grids
+    /// run in sequence, units (poles or fused tiles) across the pool.
+    pub fn within_grid(self) -> bool {
+        matches!(self, ShardStrategy::Pole | ShardStrategy::Tile)
+    }
 }
 
 impl FromStr for ShardStrategy {
@@ -77,8 +88,9 @@ impl FromStr for ShardStrategy {
         match s.to_ascii_lowercase().as_str() {
             "grid" => Ok(ShardStrategy::Grid),
             "pole" => Ok(ShardStrategy::Pole),
+            "tile" | "fused" => Ok(ShardStrategy::Tile),
             "auto" => Ok(ShardStrategy::Auto),
-            other => Err(format!("unknown shard strategy {other:?} (grid|pole|auto)")),
+            other => Err(format!("unknown shard strategy {other:?} (grid|pole|tile|auto)")),
         }
     }
 }
@@ -88,6 +100,7 @@ impl fmt::Display for ShardStrategy {
         f.write_str(match self {
             ShardStrategy::Grid => "grid",
             ShardStrategy::Pole => "pole",
+            ShardStrategy::Tile => "tile",
             ShardStrategy::Auto => "auto",
         })
     }
@@ -100,11 +113,12 @@ pub struct ParallelHierarchizer {
     inner: Variant,
     threads: usize,
     unit_order_seed: Option<u64>,
+    fuse: FuseParams,
 }
 
 impl ParallelHierarchizer {
     pub fn new(inner: Variant, threads: usize) -> Self {
-        Self { inner, threads: threads.max(1), unit_order_seed: None }
+        Self { inner, threads: threads.max(1), unit_order_seed: None, fuse: FuseParams::AUTO }
     }
 
     /// All available hardware threads.
@@ -129,6 +143,14 @@ impl ParallelHierarchizer {
             self.inner
         );
         self.unit_order_seed = Some(seed);
+        self
+    }
+
+    /// Fuse-depth / tile-size knobs for the cache-blocked fused sweep.
+    /// Only consulted when `inner` is [`Variant::BfsOverVectorizedFused`]
+    /// (the default [`FuseParams::AUTO`] autotunes per grid).
+    pub fn with_fuse(mut self, fuse: FuseParams) -> Self {
+        self.fuse = fuse;
         self
     }
 
@@ -157,6 +179,21 @@ impl Hierarchizer for ParallelHierarchizer {
     }
 
     fn hierarchize(&self, g: &mut FullGrid) {
+        if self.inner == Variant::BfsOverVectorizedFused {
+            // fused inner: the work unit is a cache tile, the barrier a
+            // fused group — and the explicit fuse knobs must be honored,
+            // so this never falls back to the auto-params static instance
+            super::assert_layout(self, g);
+            fused::sweep_fused(
+                g,
+                false,
+                FusedKernel::OverVec(overvec::Mode::Plain),
+                self.fuse,
+                self.threads,
+                self.unit_order_seed,
+            );
+            return;
+        }
         if (self.threads <= 1 && self.unit_order_seed.is_none()) || !Self::supports(self.inner) {
             self.inner.instance().hierarchize(g);
             return;
@@ -166,6 +203,18 @@ impl Hierarchizer for ParallelHierarchizer {
     }
 
     fn dehierarchize(&self, g: &mut FullGrid) {
+        if self.inner == Variant::BfsOverVectorizedFused {
+            super::assert_layout(self, g);
+            fused::sweep_fused(
+                g,
+                true,
+                FusedKernel::OverVec(overvec::Mode::Plain),
+                self.fuse,
+                self.threads,
+                self.unit_order_seed,
+            );
+            return;
+        }
         if (self.threads <= 1 && self.unit_order_seed.is_none()) || !Self::supports(self.inner) {
             self.inner.instance().dehierarchize(g);
             return;
@@ -256,6 +305,9 @@ fn dim_kernel(inner: Variant, dim: usize, up: bool) -> DimKernel {
         V::Func | V::FuncFpNav => {
             unreachable!("unsupported inner variant is handled by the serial fallback")
         }
+        V::BfsOverVectorizedFused => {
+            unreachable!("the fused variant runs the tiled sweep, not the per-dimension one")
+        }
     }
 }
 
@@ -318,9 +370,11 @@ fn sweep_parallel(g: &mut FullGrid, inner: Variant, threads: usize, up: bool, se
 /// Run `f(u)` for every unit `0 <= u < n_units` on up to `threads` workers,
 /// chunked claim ranges taken from an atomic cursor (index stealing); with
 /// `order`, claim `k` maps to unit `order[k]`.  `f` must only touch state
-/// belonging to unit `u` — for the kernel closures above that is enforced by
-/// the checked carve of the unit's view (debug builds panic on overlap).
-fn parallel_units<F>(threads: usize, n_units: usize, order: Option<&[usize]>, f: &F)
+/// belonging to unit `u` — for the kernel closures above (and the tile
+/// closures of `hierarchize::fused`, which shares this scheduler) that is
+/// enforced by the checked carve of the unit's view (debug builds panic on
+/// overlap).
+pub(crate) fn parallel_units<F>(threads: usize, n_units: usize, order: Option<&[usize]>, f: &F)
 where
     F: Fn(usize) + Sync,
 {
@@ -444,12 +498,19 @@ mod tests {
     fn strategy_parse_and_resolve() {
         assert_eq!("grid".parse::<ShardStrategy>().unwrap(), ShardStrategy::Grid);
         assert_eq!("POLE".parse::<ShardStrategy>().unwrap(), ShardStrategy::Pole);
+        assert_eq!("tile".parse::<ShardStrategy>().unwrap(), ShardStrategy::Tile);
+        assert_eq!("fused".parse::<ShardStrategy>().unwrap(), ShardStrategy::Tile);
         assert_eq!("Auto".parse::<ShardStrategy>().unwrap(), ShardStrategy::Auto);
         assert!("banana".parse::<ShardStrategy>().is_err());
         assert_eq!(ShardStrategy::Auto.resolve(16, 4), ShardStrategy::Grid);
         assert_eq!(ShardStrategy::Auto.resolve(2, 8), ShardStrategy::Pole);
         assert_eq!(ShardStrategy::Pole.resolve(100, 4), ShardStrategy::Pole);
+        assert_eq!(ShardStrategy::Tile.resolve(100, 4), ShardStrategy::Tile);
         assert_eq!(ShardStrategy::Grid.to_string(), "grid");
+        assert_eq!(ShardStrategy::Tile.to_string(), "tile");
+        assert!(ShardStrategy::Tile.within_grid());
+        assert!(ShardStrategy::Pole.within_grid());
+        assert!(!ShardStrategy::Grid.within_grid());
     }
 
     #[test]
@@ -467,6 +528,32 @@ mod tests {
         }
         for (u, v) in data.iter().enumerate() {
             assert_eq!(*v, 1.0 + u as f64, "unit {u}");
+        }
+    }
+
+    #[test]
+    fn fused_inner_honors_explicit_fuse_knobs() {
+        let input = random_grid(if cfg!(miri) { &[3, 2] } else { &[4, 3, 2] }, 3);
+        let h = Variant::BfsOverVectorized.instance();
+        let mut want = input.clone();
+        prepare(h, &mut want);
+        h.hierarchize(&mut want);
+        let depths: &[usize] = if cfg!(miri) { &[2] } else { &[1, 2, 3] };
+        for &fuse_depth in depths {
+            for tile_bytes in [16usize, 1 << 12] {
+                for threads in [1usize, 4] {
+                    let p = ParallelHierarchizer::new(Variant::BfsOverVectorizedFused, threads)
+                        .with_fuse(FuseParams { fuse_depth, tile_bytes });
+                    let mut got = input.clone();
+                    prepare(&p, &mut got);
+                    p.hierarchize(&mut got);
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "depth {fuse_depth} tile {tile_bytes} x{threads}"
+                    );
+                }
+            }
         }
     }
 

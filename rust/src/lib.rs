@@ -19,15 +19,18 @@
 //!
 //! Parallel execution stacks two shard levels on top of the serial kernels:
 //!
-//! * [`hierarchize::parallel`] shards a *single* grid pole-wise across a
-//!   worker pool ([`ParallelHierarchizer`]) — bitwise identical to the
-//!   serial variant for every thread count, because each worker runs the
-//!   same per-unit kernel on disjoint slots;
+//! * [`hierarchize::parallel`] shards a *single* grid pole-wise (or
+//!   tile-wise: the cache-blocked dimension-fused sweep of
+//!   [`hierarchize::fused`], which cuts DRAM traffic from `d` to
+//!   `ceil(d/k)` passes) across a worker pool ([`ParallelHierarchizer`]) —
+//!   bitwise identical to the serial variant for every thread count,
+//!   because each worker runs the same per-unit kernel on disjoint slots;
 //! * [`coordinator::hierarchize_scheme`] batches *all component grids* of a
 //!   [`combi::CombinationScheme`] through the pool, largest-first by the
 //!   corrected-Eq.-1 flop estimate, with per-grid variant auto-selection
-//!   ([`hierarchize::auto_variant`]) and a [`ShardStrategy`] knob
-//!   (grid-level stealing / pole-level sharding / auto).
+//!   ([`hierarchize::auto_variant`]: working-set-aware — grids above the
+//!   tile budget get the fused code) and a [`ShardStrategy`] knob
+//!   (grid-level stealing / pole- or tile-level sharding / auto).
 //!
 //! Both levels stand on one unsafe core, `grid::cells`, which keeps the
 //! shared-buffer access inside the Rust aliasing model: a [`grid::GridCells`]
@@ -59,6 +62,6 @@ pub mod util;
 pub use coordinator::{hierarchize_scheme, BatchOptions, BatchReport};
 pub use grid::{AxisLayout, FullGrid, LevelVector};
 pub use hierarchize::{
-    auto_variant, variant_by_name, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant,
-    ALL_VARIANTS,
+    auto_variant, auto_variant_with_budget, variant_by_name, FuseParams, Hierarchizer,
+    ParallelHierarchizer, ShardStrategy, Variant, ALL_VARIANTS,
 };

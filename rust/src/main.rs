@@ -14,8 +14,8 @@ use sgct::combi::CombinationScheme;
 use sgct::coordinator::{hierarchize_scheme, BatchOptions, Coordinator, PipelineConfig};
 use sgct::grid::{FullGrid, LevelVector};
 use sgct::hierarchize::{
-    flops, prepare, variant_by_name, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant,
-    ALL_VARIANTS,
+    flops, fused, prepare, variant_by_name, FuseParams, Hierarchizer, ParallelHierarchizer,
+    ShardStrategy, Variant, ALL_VARIANTS,
 };
 use sgct::perf::{self, bench::Config};
 use sgct::runtime::Runtime;
@@ -56,18 +56,23 @@ sgct — sparse grid combination technique (Hupp 2013 reproduction)
 USAGE:
   sgct info [--roofline]
   sgct hierarchize --levels L1,L2,... [--variant NAME] [--threads N|auto] [--check] [--pjrt]
-  sgct combine --dim D --level N [--samples K] [--threads N|auto] [--shard-strategy grid|pole|auto]
+                   [--fuse-depth K] [--tile-kb KB]
+  sgct combine --dim D --level N [--samples K] [--threads N|auto]
+               [--shard-strategy grid|pole|tile|auto] [--fuse-depth K] [--tile-kb KB]
   sgct solve --dim D --level N [--iters I] [--steps T] [--pjrt] [--workers W]
-             [--shard-strategy grid|pole|auto]
-  sgct batch --dim D --level N [--threads N|auto] [--shard-strategy grid|pole|auto]
-             [--variant NAME]
+             [--shard-strategy grid|pole|tile|auto] [--fuse-depth K] [--tile-kb KB]
+  sgct batch --dim D --level N [--threads N|auto] [--shard-strategy grid|pole|tile|auto]
+             [--variant NAME] [--fuse-depth K] [--tile-kb KB]
   sgct bench --levels L1,L2,... [--all]
   sgct distributed --dim D --level N [--max-nodes K]
 
   --threads N|auto         worker threads (auto = all hardware threads)
   --shard-strategy ...     grid = one component grid per work item,
                            pole = shard each grid pole-wise across the pool,
+                           tile = cache-blocked dimension-fused tiles,
                            auto = resolve per batch shape
+  --fuse-depth K           axes fused per tile pass (0 = autotune from shape)
+  --tile-kb KB             cache budget per tile in KiB (0 = detect L2)
 ";
 
 fn run(r: Result<()>) -> i32 {
@@ -78,6 +83,14 @@ fn run(r: Result<()>) -> i32 {
             1
         }
     }
+}
+
+/// Parse the fused-sweep knobs (`--fuse-depth`, `--tile-kb`; 0 = autotune).
+fn fuse_opts(args: &Args) -> Result<FuseParams> {
+    Ok(FuseParams {
+        fuse_depth: args.get("fuse-depth", 0usize)?,
+        tile_bytes: args.get("tile-kb", 0usize)? * 1024,
+    })
 }
 
 fn artifacts_dir() -> std::path::PathBuf {
@@ -152,7 +165,31 @@ fn hierarchize(args: &Args) -> Result<()> {
         );
     } else {
         let threads = args.threads("threads", 1)?;
-        let p = ParallelHierarchizer::new(variant, threads);
+        let fuse = fuse_opts(args)?;
+        let p = ParallelHierarchizer::new(variant, threads).with_fuse(fuse);
+        if variant == Variant::BfsOverVectorizedFused {
+            let resolved = if fuse.fuse_depth == 0 {
+                fused::autotune(&levels, fuse.tile_bytes)
+            } else {
+                FuseParams {
+                    fuse_depth: fuse.fuse_depth,
+                    tile_bytes: if fuse.tile_bytes == 0 {
+                        fused::default_tile_bytes()
+                    } else {
+                        fuse.tile_bytes
+                    },
+                }
+            };
+            println!(
+                "fused sweep: depth {} / tile {} -> {} of {} memory passes (modeled {} vs {})",
+                resolved.fuse_depth,
+                human_bytes(resolved.tile_bytes),
+                fused::fused_passes(&levels, resolved.fuse_depth),
+                flops::active_dims(&levels),
+                human_bytes(fused::traffic_fused(&levels, resolved.fuse_depth) as usize),
+                human_bytes(flops::traffic_unfused(&levels) as usize),
+            );
+        }
         prepare(&p, &mut g);
         let t = perf::CycleTimer::start();
         p.hierarchize(&mut g);
@@ -160,7 +197,7 @@ fn hierarchize(args: &Args) -> Result<()> {
         g.convert_all(sgct::grid::AxisLayout::Position);
         let f = flops::flops(&levels);
         let thread_note = if threads > 1 {
-            format!(" (pole-sharded x{threads})")
+            format!(" (sharded x{threads})")
         } else {
             String::new()
         };
@@ -197,6 +234,7 @@ fn combine(args: &Args) -> Result<()> {
     let mut cfg = PipelineConfig::new(scheme);
     cfg.workers = args.threads("threads", cfg.workers)?;
     cfg.shard = args.get("shard-strategy", ShardStrategy::Grid)?;
+    cfg.fuse = fuse_opts(args)?;
     let mut c = Coordinator::new(cfg, f);
     c.combine();
     println!(
@@ -225,6 +263,7 @@ fn solve(args: &Args) -> Result<()> {
     cfg.steps_per_iter = steps;
     cfg.workers = workers;
     cfg.shard = args.get("shard-strategy", ShardStrategy::Grid)?;
+    cfg.fuse = fuse_opts(args)?;
     let init =
         |x: &[f64]| -> f64 { x.iter().map(|&v| (std::f64::consts::PI * v).sin()).product() };
     let mut c = Coordinator::new(cfg, init);
@@ -319,7 +358,8 @@ fn batch(args: &Args) -> Result<()> {
             g
         })
         .collect();
-    let opts = BatchOptions { threads, strategy, variant, ..Default::default() };
+    let opts =
+        BatchOptions { threads, strategy, variant, fuse: fuse_opts(args)?, ..Default::default() };
     let report = hierarchize_scheme(&scheme, &mut grids, &opts);
 
     let mut by_variant: BTreeMap<&'static str, (usize, u64)> = BTreeMap::new();

@@ -4,6 +4,15 @@
 //! repeat until enough samples, report the interquartile-trimmed mean, and
 //! derive performance from the *calculated* flop count of Eq. 1 (never from
 //! hardware flop counters — Fig. 5 vs Fig. 6 shows why).
+//!
+//! Every bench additionally persists its results as machine-readable
+//! `BENCH_<name>.json` files ([`BenchRecord`] / [`write_bench_json`]) —
+//! the repo's perf trajectory: CI's `bench-smoke` job uploads them, and
+//! successive PRs can diff them.  The writer is dependency-free (no serde
+//! in the offline crate set).
+
+use std::io::{self, Write as _};
+use std::path::{Path, PathBuf};
 
 use super::cycles::{cycles_per_second, now_cycles};
 use super::stats::Summary;
@@ -121,6 +130,146 @@ pub fn bench<F: FnMut()>(name: &str, cfg: Config, f: F) -> BenchResult {
     bench_with_setup(name, cfg, || {}, f)
 }
 
+// --------------------------------------------------- JSON result emission
+
+/// One row of an emitted `BENCH_<name>.json`: what ran, how fast, and how
+/// it compares to the case's baseline.  `extra` carries bench-specific
+/// numeric fields (e.g. the fused sweep's modeled traffic bytes) inlined
+/// as additional JSON keys.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub variant: String,
+    pub threads: usize,
+    /// Level-vector tag of the measured grid (`"6x6x6x6"`), or the case
+    /// label for scheme-level benches.
+    pub levels: String,
+    pub grid_bytes: u64,
+    pub cycles: f64,
+    pub secs: f64,
+    pub gflops: f64,
+    pub flops_per_cycle: f64,
+    /// Speedup over the bench's designated baseline row (1.0 for the
+    /// baseline itself; 0.0 when the bench has none).
+    pub speedup_vs_baseline: f64,
+    pub extra: Vec<(String, f64)>,
+}
+
+impl BenchRecord {
+    /// Record a measured [`BenchResult`] with the calculated flop count.
+    pub fn of(r: &BenchResult, variant: &str, threads: usize, flops: u64) -> Self {
+        Self {
+            name: r.name.clone(),
+            variant: variant.to_string(),
+            threads,
+            levels: String::new(),
+            grid_bytes: 0,
+            cycles: r.cycles,
+            secs: r.secs,
+            gflops: r.gflops(flops),
+            flops_per_cycle: r.flops_per_cycle(flops),
+            speedup_vs_baseline: 0.0,
+            extra: Vec::new(),
+        }
+    }
+
+    pub fn with_grid(mut self, levels_tag: &str, grid_bytes: u64) -> Self {
+        self.levels = levels_tag.to_string();
+        self.grid_bytes = grid_bytes;
+        self
+    }
+
+    pub fn with_speedup_vs(mut self, baseline: &BenchResult) -> Self {
+        self.speedup_vs_baseline = baseline.secs / self.secs;
+        self
+    }
+
+    pub fn with_extra(mut self, key: &str, value: f64) -> Self {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON number: Rust's f64 `Display` round-trips and never produces a
+/// trailing dot; non-finite values become `null` (JSON has no NaN/inf).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn write_record(out: &mut String, r: &BenchRecord) {
+    out.push_str(&format!(
+        "    {{\"name\": \"{}\", \"variant\": \"{}\", \"threads\": {}, \"levels\": \"{}\", \
+         \"grid_bytes\": {}, \"cycles\": {}, \"secs\": {}, \"gflops\": {}, \
+         \"flops_per_cycle\": {}, \"speedup_vs_baseline\": {}",
+        json_escape(&r.name),
+        json_escape(&r.variant),
+        r.threads,
+        json_escape(&r.levels),
+        r.grid_bytes,
+        json_num(r.cycles),
+        json_num(r.secs),
+        json_num(r.gflops),
+        json_num(r.flops_per_cycle),
+        json_num(r.speedup_vs_baseline),
+    ));
+    for (k, v) in &r.extra {
+        out.push_str(&format!(", \"{}\": {}", json_escape(k), json_num(*v)));
+    }
+    out.push('}');
+}
+
+/// Serialize `records` as the `BENCH_<bench>.json` document.
+pub fn bench_json(bench: &str, records: &[BenchRecord]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{{\n  \"bench\": \"{}\",\n  \"records\": [\n", json_escape(bench)));
+    for (i, r) in records.iter().enumerate() {
+        write_record(&mut out, r);
+        out.push_str(if i + 1 < records.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write `BENCH_<bench>.json` into `dir` and return its path.
+pub fn write_bench_json_to(
+    dir: &Path,
+    bench: &str,
+    records: &[BenchRecord],
+) -> io::Result<PathBuf> {
+    let path = dir.join(format!("BENCH_{bench}.json"));
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(bench_json(bench, records).as_bytes())?;
+    Ok(path)
+}
+
+/// Write `BENCH_<bench>.json` into `$SGCT_BENCH_DIR` (default: the current
+/// directory — cargo runs bench executables with cwd set to the *package*
+/// root, i.e. `rust/`, which is where CI picks the artifacts up).
+pub fn write_bench_json(bench: &str, records: &[BenchRecord]) -> io::Result<PathBuf> {
+    let dir = std::env::var_os("SGCT_BENCH_DIR").map(PathBuf::from).unwrap_or_else(|| ".".into());
+    write_bench_json_to(&dir, bench, records)
+}
+
 /// Benchmark over shared mutable state: `setup(state)` restores the input
 /// before each sample, `f(state)` is the timed unit.  (Avoids the double
 /// mutable borrow a closure pair would need.)
@@ -209,6 +358,78 @@ mod tests {
         };
         assert_eq!(r.flops_per_cycle(500), 0.5);
         assert!((r.gflops(500) - 0.5).abs() < 1e-12);
+    }
+
+    fn result(name: &str, secs: f64) -> BenchResult {
+        BenchResult {
+            name: name.into(),
+            cycles: secs * 1e9,
+            secs,
+            summary: Summary::of(&[secs * 1e9]),
+            batch: 1,
+        }
+    }
+
+    #[test]
+    fn bench_json_document_shape() {
+        let base = result("unfused", 4.0);
+        let fast = result("fused", 1.0);
+        let records = vec![
+            BenchRecord::of(&base, "BFS-OverVectorized", 1, 2_000_000_000)
+                .with_grid("6x6", 1 << 20)
+                .with_speedup_vs(&base),
+            BenchRecord::of(&fast, "BFS-OverVectorized-Fused", 4, 2_000_000_000)
+                .with_speedup_vs(&base)
+                .with_extra("traffic_bytes", 123.0),
+        ];
+        let doc = bench_json("smoke", &records);
+        // dependency-free writer: pin the shape by substring
+        assert!(doc.starts_with("{\n  \"bench\": \"smoke\""), "{doc}");
+        assert!(doc.contains("\"variant\": \"BFS-OverVectorized-Fused\""), "{doc}");
+        assert!(doc.contains("\"threads\": 4"), "{doc}");
+        assert!(doc.contains("\"grid_bytes\": 1048576"), "{doc}");
+        assert!(doc.contains("\"speedup_vs_baseline\": 1"), "{doc}");
+        assert!(doc.contains("\"speedup_vs_baseline\": 4"), "{doc}");
+        assert!(doc.contains("\"traffic_bytes\": 123"), "{doc}");
+        assert!(doc.trim_end().ends_with('}'), "{doc}");
+        // balanced braces/brackets (cheap well-formedness proxy)
+        let opens = doc.matches('{').count();
+        let closes = doc.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn bench_json_escapes_and_nonfinite() {
+        let r = BenchRecord {
+            name: "weird \"name\"\n".into(),
+            variant: "v".into(),
+            threads: 1,
+            levels: String::new(),
+            grid_bytes: 0,
+            cycles: f64::NAN,
+            secs: 0.0,
+            gflops: f64::INFINITY,
+            flops_per_cycle: 0.5,
+            speedup_vs_baseline: 0.0,
+            extra: vec![],
+        };
+        let doc = bench_json("x", &[r]);
+        assert!(doc.contains("weird \\\"name\\\"\\n"), "{doc}");
+        assert!(doc.contains("\"cycles\": null"), "{doc}");
+        assert!(doc.contains("\"gflops\": null"), "{doc}");
+    }
+
+    #[test]
+    fn bench_json_written_to_disk() {
+        let dir = std::env::temp_dir().join(format!("sgct_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = result("case", 1.0);
+        let records = vec![BenchRecord::of(&r, "Ind", 1, 1000)];
+        let path = write_bench_json_to(&dir, "unit_test", &records).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "BENCH_unit_test.json");
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"bench\": \"unit_test\""));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

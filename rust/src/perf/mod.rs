@@ -15,6 +15,6 @@ pub mod roofline;
 pub mod stats;
 pub mod stream;
 
-pub use bench::{bench, BenchResult, Config};
+pub use bench::{bench, write_bench_json, BenchRecord, BenchResult, Config};
 pub use cycles::{cycles_per_second, now_cycles, CycleTimer};
 pub use stats::Summary;

@@ -45,6 +45,22 @@ impl Roofline {
     pub fn percent_of_peak(&self, flops_per_cycle: f64) -> f64 {
         100.0 * flops_per_cycle / self.peak_flops_per_cycle
     }
+
+    /// Ideal cycles to stream `bytes` through main memory at the roofline
+    /// bandwidth — the lower bound a bandwidth-bound kernel (hierarchization
+    /// at large sizes, OI ~ 1/8 flop/byte) can reach.  Feed it the traffic
+    /// model (`hierarchize::flops::traffic_unfused` /
+    /// `hierarchize::fused::traffic_fused`) to predict fused-vs-unfused
+    /// sweep times.
+    pub fn streaming_cycles(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bytes_per_cycle
+    }
+}
+
+/// Predicted speedup of moving `fused_bytes` instead of `unfused_bytes`
+/// through a bandwidth-bound kernel (> 1 means fusion wins).
+pub fn traffic_ratio(unfused_bytes: u64, fused_bytes: u64) -> f64 {
+    unfused_bytes as f64 / (fused_bytes as f64).max(1.0)
 }
 
 #[cfg(test)]
@@ -58,5 +74,14 @@ mod tests {
         assert_eq!(r.attainable(10.0), 2.0); // compute bound
         assert_eq!(r.ridge(), 0.5);
         assert_eq!(r.percent_of_peak(0.4), 20.0);
+    }
+
+    #[test]
+    fn streaming_prediction_and_traffic_ratio() {
+        let r = Roofline { peak_flops_per_cycle: 2.0, bytes_per_cycle: 4.0 };
+        assert_eq!(r.streaming_cycles(400), 100.0);
+        // fusing 4 passes into 2 halves the predicted streaming time
+        assert_eq!(traffic_ratio(4 * 160, 2 * 160), 2.0);
+        assert_eq!(traffic_ratio(100, 0), 100.0); // degenerate, no div-by-zero
     }
 }

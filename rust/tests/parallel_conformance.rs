@@ -15,8 +15,8 @@ use sgct::combi::CombinationScheme;
 use sgct::coordinator::{dehierarchize_scheme, hierarchize_scheme, BatchOptions};
 use sgct::grid::{FullGrid, LevelVector};
 use sgct::hierarchize::{
-    auto_variant, prepare, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant,
-    ALL_VARIANTS,
+    auto_variant, auto_variant_with_budget, fused::BfsOverVectorizedFused, prepare, FuseParams,
+    Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant, ALL_VARIANTS,
 };
 use sgct::sgpp::HashGrid;
 use sgct::util::proptest::{check, random_levels, Config};
@@ -142,6 +142,7 @@ fn scheme_engine_bitwise_across_strategies_and_threads() {
         strategy: ShardStrategy::Grid,
         variant: None,
         to_position: true,
+        fuse: FuseParams::AUTO,
     };
     let mut reference = input.clone();
     let report = hierarchize_scheme(&scheme, &mut reference, &base);
@@ -227,6 +228,7 @@ fn scheme_roundtrip_recovers_nodal_values() {
         strategy: ShardStrategy::Auto,
         variant: None,
         to_position: true,
+        fuse: FuseParams::AUTO,
     };
     hierarchize_scheme(&scheme, &mut grids, &opts);
     dehierarchize_scheme(&scheme, &mut grids, &opts);
@@ -236,7 +238,9 @@ fn scheme_roundtrip_recovers_nodal_values() {
     }
 }
 
-/// The dispatch rules behind per-grid auto-selection.
+/// The dispatch rules behind per-grid auto-selection.  (The test shapes
+/// are all far below any sane tile budget, so the size-aware dispatch
+/// cannot flip them to the fused variant on any host.)
 #[test]
 fn auto_variant_dispatch_shapes() {
     assert_eq!(auto_variant(&LevelVector::new(&[8])), Variant::Bfs);
@@ -244,4 +248,108 @@ fn auto_variant_dispatch_shapes() {
     assert_eq!(auto_variant(&LevelVector::new(&[6, 1])), Variant::BfsOverVectorizedPreBranched);
     assert_eq!(auto_variant(&LevelVector::new(&[1, 6])), Variant::Ind);
     assert_eq!(auto_variant(&LevelVector::new(&[2, 2, 2])), Variant::Ind);
+    // above the working-set threshold the fused code takes over
+    assert_eq!(
+        auto_variant_with_budget(&LevelVector::new(&[12, 12]), 1 << 20),
+        Variant::BfsOverVectorizedFused
+    );
+}
+
+/// (d) Fused tiling conformance — the PR's acceptance contract: bitwise
+/// equality with the serial `BFS-OverVectorized` reference for every fuse
+/// depth 1..=3, tile budgets including degenerate 1-pole (even 1-slot)
+/// tiles, and thread counts {1, 2, 4, 8}, hierarchize and dehierarchize.
+#[test]
+fn fused_bitwise_vs_serial_reference_across_depths_tiles_threads() {
+    let cases: &[&[u8]] = if cfg!(miri) {
+        &[&[3, 2]]
+    } else {
+        &[&[6, 5], &[4, 3, 3], &[3, 2, 2, 2], &[1, 4, 2], &[5], &[2, 5, 1, 2]]
+    };
+    let thread_counts: &[usize] = if cfg!(miri) { &[2] } else { &[1, 2, 4, 8] };
+    let budgets: &[usize] = if cfg!(miri) { &[8, 1 << 16] } else { &[8, 256, 4096, 1 << 20] };
+    let mut rng = SplitMix64::new(4242);
+    for levels in cases {
+        let input = random_grid(levels, &mut rng);
+        let serial = Variant::BfsOverVectorized.instance();
+        let mut want = input.clone();
+        prepare(serial, &mut want);
+        serial.hierarchize(&mut want);
+        let mut want_back = want.clone();
+        serial.dehierarchize(&mut want_back);
+        for fuse_depth in 1..=3usize {
+            for &tile_bytes in budgets {
+                let fuse = FuseParams { fuse_depth, tile_bytes };
+                // serial fused instance
+                let h = BfsOverVectorizedFused::with_params(fuse);
+                let mut got = input.clone();
+                prepare(&h, &mut got);
+                h.hierarchize(&mut got);
+                assert_eq!(
+                    got.as_slice(),
+                    want.as_slice(),
+                    "serial fused: {levels:?} depth {fuse_depth} tile {tile_bytes}"
+                );
+                h.dehierarchize(&mut got);
+                assert_eq!(
+                    got.as_slice(),
+                    want_back.as_slice(),
+                    "serial fused dehier: {levels:?} depth {fuse_depth} tile {tile_bytes}"
+                );
+                // tile-parallel engine
+                for &threads in thread_counts {
+                    let p = ParallelHierarchizer::new(Variant::BfsOverVectorizedFused, threads)
+                        .with_fuse(fuse);
+                    let mut got = input.clone();
+                    prepare(&p, &mut got);
+                    p.hierarchize(&mut got);
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "fused x{threads}: {levels:?} depth {fuse_depth} tile {tile_bytes}"
+                    );
+                    p.dehierarchize(&mut got);
+                    assert_eq!(
+                        got.as_slice(),
+                        want_back.as_slice(),
+                        "fused dehier x{threads}: {levels:?} depth {fuse_depth} tile {tile_bytes}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// (d') Fused conformance, fuzzed: random shapes, random fuse knobs,
+/// random thread counts — still bitwise vs the serial reference.
+#[test]
+fn prop_fused_random_knobs_bitwise() {
+    check("fused-random-knobs", Config { cases: cases(20), ..Default::default() }, |rng, size| {
+        let levels = bounded_levels(rng, size, 5);
+        let input = random_grid(&levels, rng);
+        let serial = Variant::BfsOverVectorized.instance();
+        let mut want = input.clone();
+        prepare(serial, &mut want);
+        serial.hierarchize(&mut want);
+        let fuse = FuseParams {
+            fuse_depth: rng.next_range(0, levels.len() as u64 + 1) as usize,
+            tile_bytes: 8 << rng.next_range(0, 14),
+        };
+        let threads = rng.next_range(1, 8) as usize;
+        let p = ParallelHierarchizer::new(Variant::BfsOverVectorizedFused, threads)
+            .with_fuse(fuse);
+        let mut got = input.clone();
+        prepare(&p, &mut got);
+        p.hierarchize(&mut got);
+        if got.as_slice() != want.as_slice() {
+            return Err(format!("fused {fuse:?} x{threads} not bitwise on {levels:?}"));
+        }
+        p.dehierarchize(&mut got);
+        let mut back = want.clone();
+        serial.dehierarchize(&mut back);
+        if got.as_slice() != back.as_slice() {
+            return Err(format!("fused dehier {fuse:?} x{threads} not bitwise on {levels:?}"));
+        }
+        Ok(())
+    });
 }

@@ -3,7 +3,9 @@
 
 use sgct::combi::CombinationScheme;
 use sgct::grid::{bfs_from_position, bfs_to_position, FullGrid, LevelVector};
-use sgct::hierarchize::{flops, prepare, ParallelHierarchizer, Variant, ALL_VARIANTS};
+use sgct::hierarchize::{
+    flops, fused, prepare, FuseParams, Hierarchizer, ParallelHierarchizer, Variant, ALL_VARIANTS,
+};
 use sgct::sgpp::HashGrid;
 use sgct::sparse::SparseGrid;
 use sgct::util::proptest::{check, random_levels, Config};
@@ -202,6 +204,78 @@ fn prop_shuffled_unit_order_bitwise_equals_serial() {
                     h.name()
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+/// (g'') the fused tiled engine under a shuffled tile-claim order: like
+/// (g'), but the work unit is a cache tile and the barrier a fused group —
+/// any claim schedule, fuse depth, and tile budget must stay bitwise equal
+/// to the serial fused (and hence the serial unfused) sweep.
+#[test]
+fn prop_fused_shuffled_tiles_bitwise_equals_serial() {
+    check("fused-shuffled-tiles", Config { cases: 25, ..Default::default() }, |rng, size| {
+        let levels = random_levels(rng, size, 4);
+        let input = random_grid(&levels, rng);
+        let h = Variant::BfsOverVectorized.instance();
+        let mut want = input.clone();
+        prepare(h, &mut want);
+        h.hierarchize(&mut want);
+        let fuse = FuseParams {
+            fuse_depth: rng.next_range(1, levels.len() as u64) as usize,
+            tile_bytes: 8 << rng.next_range(0, 12),
+        };
+        for threads in [1usize, 3, 8] {
+            let seed = rng.next_u64();
+            let p = ParallelHierarchizer::new(Variant::BfsOverVectorizedFused, threads)
+                .with_fuse(fuse)
+                .with_unit_order_seed(seed);
+            let mut got = input.clone();
+            prepare(&p, &mut got);
+            p.hierarchize(&mut got);
+            if got.as_slice() != want.as_slice() {
+                return Err(format!(
+                    "fused {fuse:?} x{threads} seed {seed:#x} not bitwise on {levels:?}"
+                ));
+            }
+            p.dehierarchize(&mut got);
+            let mut back = want.clone();
+            h.dehierarchize(&mut back);
+            if got.as_slice() != back.as_slice() {
+                return Err(format!(
+                    "fused dehier {fuse:?} x{threads} seed {seed:#x} not bitwise on {levels:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (g''') the fused traffic model is consistent: fusing can only reduce
+/// passes, depth 1 reproduces the unfused count, and full fusion of an
+/// all-active grid is a single pass.
+#[test]
+fn prop_fused_traffic_model_bounds() {
+    check("fused-traffic-model", Config { cases: 40, ..Default::default() }, |rng, size| {
+        let levels = LevelVector::new(&random_levels(rng, size, 6));
+        let d = levels.dim();
+        let unfused = flops::active_dims(&levels);
+        for depth in 1..=d {
+            let passes = fused::fused_passes(&levels, depth);
+            if depth == 1 && passes != unfused {
+                return Err(format!("depth 1 must equal unfused: {passes} vs {unfused}"));
+            }
+            if passes > unfused {
+                return Err(format!("fusion increased passes on {levels:?} depth {depth}"));
+            }
+            let expect_bytes = passes as u64 * flops::pass_traffic_bytes(&levels);
+            if fused::traffic_fused(&levels, depth) != expect_bytes {
+                return Err(format!("traffic mismatch on {levels:?} depth {depth}"));
+            }
+        }
+        if unfused > 0 && fused::fused_passes(&levels, d) != 1 && unfused == d as u32 {
+            return Err(format!("full fusion of all-active {levels:?} must be one pass"));
         }
         Ok(())
     });
