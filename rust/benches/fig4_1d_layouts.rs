@@ -6,17 +6,58 @@
 //! the BFS level; `BFS` stays flat as the data set grows and beats
 //! `BFS-Rev` by ~50 %; every implementation beats SGpp, and everything but
 //! SGpp beats `Func`.
+//!
+//! On top of the paper's layout series this bench carries the
+//! **conversion-inclusive** ablation: the same BFS pole kernel, but with
+//! the Position -> BFS conversion (and the restore) *inside* the timed
+//! region — once as standalone eager `convert_all` sweeps, once folded
+//! into the fused tile passes (`ConvertPolicy::FusedInOut`).  This is the
+//! cost Fig. 4's layout ablation isolates: every real pipeline pays it,
+//! the classic figure series do not show it.  Results (incl. both
+//! conversion series) land in `BENCH_fig4_1d_layouts.json`, which the CI
+//! `bench-smoke` job uploads as a perf-trajectory artifact.
 
 mod common;
 
 use common::*;
-use sgct::grid::LevelVector;
-use sgct::hierarchize::Variant;
+use sgct::grid::{AxisLayout, LevelVector};
+use sgct::hierarchize::{fused::BfsOverVectorizedFused, ConvertPolicy, Hierarchizer, Variant};
+use sgct::perf::bench::{bench_on, BenchResult};
+use sgct::perf::BenchRecord;
+
+/// BFS kernel with the conversion round trip timed as eager standalone
+/// sweeps (the historical `prepare` + sweep + restore path).
+fn measure_convert_eager(levels: &LevelVector) -> BenchResult {
+    let h = Variant::Bfs.instance();
+    let pristine = grid_for(levels, AxisLayout::Position, 42);
+    let mut g = pristine.clone();
+    bench_on("BFS+conv(eager)", config(), &mut g, |g| g.clone_from(&pristine), |g| {
+        g.convert_all(AxisLayout::Bfs);
+        h.hierarchize(g);
+        g.convert_all(AxisLayout::Position);
+    })
+}
+
+/// The same kernels with the conversion folded into the fused tile passes
+/// (zero standalone sweeps; `fused::ConvertPolicy::FusedInOut`).
+fn measure_convert_fused(levels: &LevelVector) -> BenchResult {
+    let h = BfsOverVectorizedFused {
+        fuse_depth: 1,
+        tile_bytes: 0,
+        convert: ConvertPolicy::FusedInOut,
+    };
+    let pristine = grid_for(levels, AxisLayout::Position, 42);
+    let mut g = pristine.clone();
+    bench_on("BFS+conv(fused)", config(), &mut g, |g| g.clone_from(&pristine), |g| {
+        h.hierarchize(g)
+    })
+}
 
 fn main() {
     let max_l = max_levelsum(23); // 23 -> 64 MiB default; --big: 27 -> 1 GiB
     let min_l = if quick() { 10 } else { 12 };
     let mut rows = Vec::new();
+    let mut records: Vec<BenchRecord> = Vec::new();
     let mut sgpp_note = None;
     for l in (min_l..=max_l).step_by(1) {
         let levels = LevelVector::new(&[l as u8]);
@@ -33,6 +74,24 @@ fn main() {
         for v in [Variant::Func, Variant::Ind, Variant::Bfs, Variant::BfsRev] {
             let r = measure_variant(v, &levels);
             cells.push((v.paper_name().to_string(), fpc(&levels, &r)));
+            records.push(record_variant(&r, v, &levels));
+        }
+        // conversion-inclusive series: eager standalone sweeps vs the
+        // conversion folded into the fused tile passes
+        for (name, r, policy) in [
+            ("BFS+conv(eager)", measure_convert_eager(&levels), ConvertPolicy::Eager),
+            ("BFS+conv(fused)", measure_convert_fused(&levels), ConvertPolicy::FusedInOut),
+        ] {
+            cells.push((name.to_string(), fpc(&levels, &r)));
+            records.push(
+                BenchRecord::of(&r, name, 1, sgct::hierarchize::flops::flops(&levels).total())
+                    .with_grid(&levels.tag(), levels.size_bytes() as u64)
+                    .with_extra("includes_conversion", 1.0)
+                    .with_extra(
+                        "conversion_passes",
+                        sgct::hierarchize::fused::conversion_passes(&levels, policy) as f64,
+                    ),
+            );
         }
         rows.push(FigureRow { levels, cells });
     }
@@ -62,5 +121,11 @@ fn main() {
             get(first, "Func"),
             get(first, "SGpp")
         );
+        println!(
+            "  conv folded >= eager? {:.4} vs {:.4} flops/cycle (conversion timed in both)",
+            get(last, "BFS+conv(fused)"),
+            get(last, "BFS+conv(eager)")
+        );
     }
+    emit("fig4_1d_layouts", &records);
 }

@@ -21,8 +21,10 @@
 mod common;
 
 use common::*;
-use sgct::grid::LevelVector;
-use sgct::hierarchize::{flops, fused, Hierarchizer, ParallelHierarchizer, Variant};
+use sgct::grid::{AxisLayout, LevelVector};
+use sgct::hierarchize::{
+    flops, fused, ConvertPolicy, FuseParams, Hierarchizer, ParallelHierarchizer, Variant,
+};
 use sgct::perf::bench::{bench_on, BenchResult};
 use sgct::perf::roofline::{traffic_ratio, Roofline};
 use sgct::util::table::{human_bytes, human_time, Table};
@@ -37,6 +39,36 @@ fn measure_parallel(v: Variant, levels: &LevelVector, threads: usize) -> BenchRe
         &mut g,
         |g| g.clone_from(&pristine),
         |g| p.hierarchize(g),
+    )
+}
+
+/// Conversion-inclusive round trip (position -> kernel -> position): the
+/// traffic every real batch pipeline pays.  `Eager` runs the standalone
+/// `convert_all` sweeps around the fused kernels, `FusedInOut` folds both
+/// directions into the tile passes.
+fn measure_fused_with_convert(
+    levels: &LevelVector,
+    threads: usize,
+    convert: ConvertPolicy,
+) -> BenchResult {
+    let fuse = FuseParams { convert, ..FuseParams::AUTO };
+    let p = ParallelHierarchizer::new(Variant::BfsOverVectorizedFused, threads).with_fuse(fuse);
+    let pristine = grid_for(levels, AxisLayout::Position, 42);
+    let mut g = pristine.clone();
+    bench_on(
+        &format!("fused+conv({convert}) x{threads}"),
+        config(),
+        &mut g,
+        |g| g.clone_from(&pristine),
+        |g| {
+            if convert == ConvertPolicy::Eager {
+                g.convert_all(AxisLayout::Bfs);
+            }
+            p.hierarchize(g);
+            if convert != ConvertPolicy::FusedInOut {
+                g.convert_all(AxisLayout::Position);
+            }
+        },
     )
 }
 
@@ -76,6 +108,13 @@ fn main() {
     let fused_serial = measure_variant(Variant::BfsOverVectorizedFused, &levels);
     let unfused_par = measure_parallel(Variant::BfsOverVectorized, &levels, threads);
     let fused_par = measure_parallel(Variant::BfsOverVectorizedFused, &levels, threads);
+    // conversion-inclusive series: the position -> kernel -> position round
+    // trip every batch pipeline pays, eager vs folded into the tile passes
+    let conv_eager = measure_fused_with_convert(&levels, 1, ConvertPolicy::Eager);
+    let conv_fused = measure_fused_with_convert(&levels, 1, ConvertPolicy::FusedInOut);
+    let conv_eager_bytes = fused::traffic_total(&levels, tuned.fuse_depth, ConvertPolicy::Eager);
+    let conv_fused_bytes =
+        fused::traffic_total(&levels, tuned.fuse_depth, ConvertPolicy::FusedInOut);
 
     let mut t = Table::new(vec!["case", "time", "flops/cycle", "GB/s (modeled)", "speedup"]);
     let gbs = |bytes: u64, r: &BenchResult| bytes as f64 / r.secs / 1e9;
@@ -84,6 +123,8 @@ fn main() {
         ("fused serial", fused_bytes, &fused_serial),
         ("unfused pole-sharded", unfused_bytes, &unfused_par),
         ("fused tile-sharded", fused_bytes, &fused_par),
+        ("fused + eager conversion", conv_eager_bytes, &conv_eager),
+        ("fused + folded conversion", conv_fused_bytes, &conv_fused),
     ] {
         t.row(vec![
             label.to_string(),
@@ -98,6 +139,14 @@ fn main() {
     println!(
         "\nmeasured fused-vs-unfused (serial): x{measured:.2} — traffic model predicts x{:.2}",
         traffic_ratio(unfused_bytes, fused_bytes)
+    );
+    println!(
+        "measured conversion folding (serial round trip): x{:.2} — model predicts x{:.2} \
+         ({} vs {} total passes)",
+        conv_eager.secs / conv_fused.secs,
+        traffic_ratio(conv_eager_bytes, conv_fused_bytes),
+        fused::total_passes(&levels, tuned.fuse_depth, ConvertPolicy::Eager),
+        fused::total_passes(&levels, tuned.fuse_depth, ConvertPolicy::FusedInOut),
     );
     let roof = Roofline::host_scalar();
     println!(
@@ -115,6 +164,20 @@ fn main() {
             .with_extra("fuse_depth", tuned.fuse_depth as f64)
             .with_extra("tile_bytes", tuned.tile_bytes as f64)
     };
+    let rec_conv = |r: &BenchResult, policy: ConvertPolicy, bytes: u64| {
+        sgct::perf::BenchRecord::of(r, &format!("fused+conv({policy})"), 1, f)
+            .with_grid(&levels.tag(), levels.size_bytes() as u64)
+            .with_speedup_vs(&conv_eager)
+            .with_extra("traffic_model_bytes", bytes as f64)
+            .with_extra("includes_conversion", 1.0)
+            .with_extra("conversion_passes", fused::conversion_passes(&levels, policy) as f64)
+            .with_extra(
+                "total_passes",
+                fused::total_passes(&levels, tuned.fuse_depth, policy) as f64,
+            )
+            .with_extra("fuse_depth", tuned.fuse_depth as f64)
+            .with_extra("tile_bytes", tuned.tile_bytes as f64)
+    };
     emit(
         "fused_traffic",
         &[
@@ -122,6 +185,8 @@ fn main() {
             rec(&fused_serial, Variant::BfsOverVectorizedFused, 1, fused_bytes),
             rec(&unfused_par, Variant::BfsOverVectorized, threads, unfused_bytes),
             rec(&fused_par, Variant::BfsOverVectorizedFused, threads, fused_bytes),
+            rec_conv(&conv_eager, ConvertPolicy::Eager, conv_eager_bytes),
+            rec_conv(&conv_fused, ConvertPolicy::FusedInOut, conv_fused_bytes),
         ],
     );
 }

@@ -37,11 +37,28 @@ pub struct BatchOptions {
     /// exchange format).  Skip when a layout-aware consumer (gather) runs
     /// next.
     pub to_position: bool,
-    /// Fuse depth / tile budget of the cache-blocked fused sweep; applies
-    /// wherever the fused variant runs (`ShardStrategy::Tile`, an explicit
-    /// fused `variant`, or per-grid auto-selection on large grids).
-    /// `FuseParams::AUTO` autotunes per grid.
+    /// Fuse depth / tile budget / conversion policy of the cache-blocked
+    /// fused sweep; applies wherever the fused variant runs
+    /// (`ShardStrategy::Tile`, an explicit fused `variant`, or per-grid
+    /// auto-selection on large grids).  `FuseParams::AUTO` autotunes per
+    /// grid with eager conversion; a folding
+    /// [`ConvertPolicy`](crate::hierarchize::ConvertPolicy) makes the
+    /// fused grids' layout conversion ride the tile passes instead of
+    /// paying standalone `convert_all` sweeps (non-fused grids keep the
+    /// eager path — they have no tile passes to fold into).
     pub fuse: FuseParams,
+}
+
+/// The conversion policy the batch actually runs: `FusedInOut` only makes
+/// sense when the caller wants position layout back — without
+/// `to_position` the grids must *stay* in the kernel layout, so the
+/// outbound fold degrades to `FusedIn`.
+fn effective_fuse(opts: &BatchOptions) -> FuseParams {
+    let mut f = opts.fuse;
+    if !opts.to_position {
+        f.convert = f.convert.without_out_fold();
+    }
+    f
 }
 
 impl Default for BatchOptions {
@@ -118,25 +135,35 @@ fn run_batch(
         }
     }
     let order = scheme.balance_order();
+    let fuse = effective_fuse(opts);
     let t = CycleTimer::start();
     match strategy {
         ShardStrategy::Grid => {
             let tasks = &tasks;
             // an explicitly configured fuse overrides the auto-params
             // static instance wherever the fused variant was selected
-            let fused_override = fused::BfsOverVectorizedFused::with_params(opts.fuse);
+            let fused_override = fused::BfsOverVectorizedFused::with_params(fuse);
             let fused_override = &fused_override;
             parallel_grids_ordered(grids, threads, &order, move |i, g| {
-                let fused_selected = tasks[i].variant == Variant::BfsOverVectorizedFused;
-                let h: &dyn Hierarchizer =
-                    if fused_selected { fused_override } else { tasks[i].variant.instance() };
-                g.convert_all(h.layout());
+                let v = tasks[i].variant;
+                let h: &dyn Hierarchizer = if v == Variant::BfsOverVectorizedFused {
+                    fused_override
+                } else {
+                    v.instance()
+                };
+                // a folding policy gathers the source layout inside the
+                // first tile passes — no standalone inbound sweep
+                if !fuse.folds_in_for(v) {
+                    g.convert_all(h.layout());
+                }
                 if up {
                     h.dehierarchize(g);
                 } else {
                     h.hierarchize(g);
                 }
-                if opts.to_position {
+                // FusedInOut already restored position layout on the way
+                // out of the last group passes
+                if opts.to_position && !fuse.folds_out_for(v) {
                     g.convert_all(AxisLayout::Position);
                 }
             });
@@ -145,16 +172,17 @@ fn run_batch(
         // sequence, each sharded unit-wise across the full pool
         _ => {
             for &i in &order {
-                let p =
-                    ParallelHierarchizer::new(tasks[i].variant, threads).with_fuse(opts.fuse);
+                let p = ParallelHierarchizer::new(tasks[i].variant, threads).with_fuse(fuse);
                 let g = &mut grids[i];
-                g.convert_all(p.layout());
+                if !fuse.folds_in_for(tasks[i].variant) {
+                    g.convert_all(p.layout());
+                }
                 if up {
                     p.dehierarchize(g);
                 } else {
                     p.hierarchize(g);
                 }
-                if opts.to_position {
+                if opts.to_position && !fuse.folds_out_for(tasks[i].variant) {
                     g.convert_all(AxisLayout::Position);
                 }
             }
@@ -292,7 +320,11 @@ mod tests {
             let opts = BatchOptions {
                 threads,
                 strategy: ShardStrategy::Tile,
-                fuse: crate::hierarchize::FuseParams { fuse_depth: 2, tile_bytes: 256 },
+                fuse: crate::hierarchize::FuseParams {
+                    fuse_depth: 2,
+                    tile_bytes: 256,
+                    ..crate::hierarchize::FuseParams::AUTO
+                },
                 ..Default::default()
             };
             let report = hierarchize_scheme(&scheme, &mut grids, &opts);
@@ -307,6 +339,81 @@ mod tests {
                     "grid {i} not bitwise under tile x{threads}"
                 );
             }
+        }
+    }
+
+    /// The conversion-fusion acceptance contract at batch level: with
+    /// `ConvertPolicy::FusedInOut` a full hierarchize + dehierarchize round
+    /// trip performs **zero** standalone `convert_all` sweeps (counted on
+    /// the thread-local sweep telemetry; threads = 1 keeps all work — and
+    /// the counter — on this thread), the traffic model charges exactly
+    /// `ceil(d/k)` passes with no conversion surcharge, and the results
+    /// stay bitwise equal to the eager path for every thread count and
+    /// policy.
+    #[test]
+    fn fused_inout_batch_runs_zero_standalone_conversions() {
+        use crate::hierarchize::{fused, ConvertPolicy, FuseParams};
+
+        let scheme = CombinationScheme::regular(3, 5);
+        let input = scheme_grids(&scheme);
+
+        // eager tile-sharded reference (grids restored to position layout)
+        let eager = BatchOptions {
+            threads: 1,
+            strategy: ShardStrategy::Tile,
+            fuse: FuseParams { fuse_depth: 2, tile_bytes: 4096, ..FuseParams::AUTO },
+            ..Default::default()
+        };
+        let mut reference = input.clone();
+        hierarchize_scheme(&scheme, &mut reference, &eager);
+        let mut reference_back = reference.clone();
+        dehierarchize_scheme(&scheme, &mut reference_back, &eager);
+
+        for threads in [1usize, 4] {
+            for convert in [ConvertPolicy::FusedIn, ConvertPolicy::FusedInOut] {
+                let opts = BatchOptions {
+                    threads,
+                    strategy: ShardStrategy::Tile,
+                    fuse: FuseParams { fuse_depth: 2, tile_bytes: 4096, convert },
+                    ..Default::default()
+                };
+                let mut grids = input.clone();
+                let before = crate::grid::convert_sweeps_on_thread();
+                hierarchize_scheme(&scheme, &mut grids, &opts);
+                let mid = crate::grid::convert_sweeps_on_thread();
+                if threads == 1 && convert == ConvertPolicy::FusedInOut {
+                    assert_eq!(mid, before, "FusedInOut hierarchize ran a standalone sweep");
+                }
+                for (i, (got, want)) in grids.iter().zip(&reference).enumerate() {
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "grid {i} not bitwise under {convert} x{threads}"
+                    );
+                }
+                dehierarchize_scheme(&scheme, &mut grids, &opts);
+                if threads == 1 && convert == ConvertPolicy::FusedInOut {
+                    assert_eq!(
+                        crate::grid::convert_sweeps_on_thread(),
+                        mid,
+                        "FusedInOut dehierarchize ran a standalone sweep"
+                    );
+                }
+                for (i, (got, want)) in grids.iter().zip(&reference_back).enumerate() {
+                    assert_eq!(
+                        got.as_slice(),
+                        want.as_slice(),
+                        "grid {i} round trip not bitwise under {convert} x{threads}"
+                    );
+                }
+            }
+        }
+        // the model mirrors what ran: ceil(d/k) passes, no +2
+        for c in scheme.components() {
+            assert_eq!(
+                fused::total_passes(&c.levels, 2, ConvertPolicy::FusedInOut),
+                fused::fused_passes(&c.levels, 2),
+            );
         }
     }
 

@@ -34,8 +34,14 @@ pub struct PipelineConfig {
     /// tile-level sharding inside each grid, or auto-resolution per batch
     /// shape.
     pub shard: ShardStrategy,
-    /// Fuse depth / tile budget for the cache-blocked fused sweep
-    /// (`ShardStrategy::Tile` or a fused `variant`); `AUTO` autotunes.
+    /// Fuse depth / tile budget / conversion policy for the cache-blocked
+    /// fused sweep (`ShardStrategy::Tile` or a fused `variant`); `AUTO`
+    /// autotunes with eager conversion.  A folding
+    /// [`ConvertPolicy`](crate::hierarchize::ConvertPolicy) rides the
+    /// tile passes: the inbound conversion folds into the hierarchize
+    /// phase (grids then *stay* in the kernel layout for the layout-aware
+    /// gather/scatter, as the pipeline always did), and `FusedInOut`'s
+    /// restore-to-position folds into the dehierarchize phase.
     pub fuse: FuseParams,
 }
 
@@ -60,6 +66,16 @@ impl PipelineConfig {
         } else {
             self.variant
         }
+    }
+
+    /// Fuse parameters of the hierarchize phase: grids must *stay* in the
+    /// kernel layout for the layout-aware gather, so `FusedInOut` degrades
+    /// to `FusedIn` here — the outbound restore rides the dehierarchize
+    /// phase instead ([`Coordinator::scatter_and_dehierarchize`]).
+    fn hier_fuse(&self) -> FuseParams {
+        let mut f = self.fuse;
+        f.convert = f.convert.without_out_fold();
+        f
     }
 }
 
@@ -118,13 +134,18 @@ impl Coordinator {
 
         let t = CycleTimer::start();
         // an explicitly configured fuse overrides the fused variant's
-        // auto-params static instance
-        let fused_local = fused::BfsOverVectorizedFused::with_params(self.cfg.fuse);
+        // auto-params static instance; the hierarchize phase never folds
+        // the outbound conversion (gather wants the kernel layout)
+        let hier_fuse = self.cfg.hier_fuse();
+        let fused_local = fused::BfsOverVectorizedFused::with_params(hier_fuse);
         let variant: &dyn Hierarchizer = if self.cfg.variant == Variant::BfsOverVectorizedFused {
             &fused_local
         } else {
             self.cfg.variant.instance()
         };
+        // with a folding policy the fused sweep gathers the source layout
+        // inside its first tile passes — skip the standalone sweep
+        let fold_in = hier_fuse.folds_in_for(self.cfg.variant);
         self.sparse.clear();
         let n = self.grids.len();
         // full thread budget for strategy resolution and within-grid
@@ -141,15 +162,18 @@ impl Coordinator {
             // tile-wise: the cache-blocked fused sweep) across the whole
             // pool instead; gather runs inline on the leader (and in a
             // fixed order, so this mode is FP-deterministic end to end)
-            let p = ParallelHierarchizer::new(self.cfg.sharded_variant(resolved), threads)
-                .with_fuse(self.cfg.fuse);
+            let sharded = self.cfg.sharded_variant(resolved);
+            let p = ParallelHierarchizer::new(sharded, threads).with_fuse(hier_fuse);
+            let fold_in = hier_fuse.folds_in_for(sharded);
             let coeffs = &self.coeffs;
             let sparse = &mut self.sparse;
             let metrics = &self.metrics;
             for &i in &order {
                 let g = &mut self.grids[i];
                 metrics.time("hierarchize", || {
-                    g.convert_all(p.layout());
+                    if !fold_in {
+                        g.convert_all(p.layout());
+                    }
                     p.hierarchize(g);
                 });
                 metrics.time("gather", || sparse.gather(g, coeffs[i]));
@@ -183,11 +207,15 @@ impl Coordinator {
                     // exactly once -> unique &mut
                     let g = unsafe { shared.claim_mut(i) };
                     metrics.time("hierarchize", || {
-                        g.convert_all(variant.layout());
+                        if !fold_in {
+                            g.convert_all(variant.layout());
+                        }
                         variant.hierarchize(g);
                         // §Perf: stay in the variant's layout — gather and
                         // scatter are layout-aware (slot tables), saving one
-                        // O(N) conversion round-trip per iteration.
+                        // O(N) conversion round-trip per iteration.  With a
+                        // folding ConvertPolicy even the inbound sweep is
+                        // gone: the tiles gathered the source layout.
                     });
                     if tx.send(i).is_err() {
                         break;
@@ -209,12 +237,18 @@ impl Coordinator {
     /// to the nodal basis (worker pool).
     pub fn scatter_and_dehierarchize(&mut self) {
         let t = CycleTimer::start();
+        // scatter needs the kernel layout *before* dehierarchization runs,
+        // so the inbound conversion cannot fold here — but grids arrive
+        // already in that layout from the hierarchize phase, making the
+        // guard convert_all a no-op.  The outbound restore-to-position is
+        // what FusedInOut folds into the dehierarchize tile passes.
         let fused_local = fused::BfsOverVectorizedFused::with_params(self.cfg.fuse);
         let variant: &dyn Hierarchizer = if self.cfg.variant == Variant::BfsOverVectorizedFused {
             &fused_local
         } else {
             self.cfg.variant.instance()
         };
+        let fold_out = self.cfg.fuse.folds_out_for(self.cfg.variant);
         let n = self.grids.len();
         let threads = self.cfg.workers.max(1);
         let sparse = &self.sparse;
@@ -223,8 +257,9 @@ impl Coordinator {
         if resolved.within_grid() {
             // mirror of the within-grid-sharded hierarchize phase: grids
             // in sequence, each dehierarchized across the whole pool
-            let p = ParallelHierarchizer::new(self.cfg.sharded_variant(resolved), threads)
-                .with_fuse(self.cfg.fuse);
+            let sharded = self.cfg.sharded_variant(resolved);
+            let p = ParallelHierarchizer::new(sharded, threads).with_fuse(self.cfg.fuse);
+            let fold_out = self.cfg.fuse.folds_out_for(sharded);
             for g in &mut self.grids {
                 metrics.time("scatter", || {
                     g.convert_all(p.layout());
@@ -232,7 +267,9 @@ impl Coordinator {
                 });
                 metrics.time("dehierarchize", || {
                     p.dehierarchize(g);
-                    g.convert_all(AxisLayout::Position);
+                    if !fold_out {
+                        g.convert_all(AxisLayout::Position);
+                    }
                 });
             }
         } else {
@@ -245,8 +282,11 @@ impl Coordinator {
                 });
                 metrics.time("dehierarchize", || {
                     variant.dehierarchize(g);
-                    // back to position layout for the solver / PJRT marshalling
-                    g.convert_all(AxisLayout::Position);
+                    // back to position layout for the solver / PJRT
+                    // marshalling (FusedInOut restored it inside the sweep)
+                    if !fold_out {
+                        g.convert_all(AxisLayout::Position);
+                    }
                 });
             });
         }
@@ -313,6 +353,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hierarchize::ConvertPolicy;
     use crate::solver::HeatSolver;
 
     fn product_parabola(x: &[f64]) -> f64 {
@@ -422,6 +463,44 @@ mod tests {
         assert_eq!(reports.len(), 2);
         assert!(c.metrics.count("hierarchize") > 0);
         assert!(c.metrics.count("dehierarchize") > 0);
+    }
+
+    /// Folding the layout conversion into the fused tile passes changes
+    /// *where* the permutation happens, not what the pipeline computes:
+    /// hierarchized grids (kernel layout, pre-gather) and restored grids
+    /// (position layout, post-dehierarchize) stay bitwise identical to the
+    /// eager pipeline for both sharding shapes.
+    #[test]
+    fn folded_conversion_matches_eager_pipeline_bitwise() {
+        let run = |shard, workers, convert| {
+            let mut cfg = PipelineConfig::new(CombinationScheme::regular(2, 4));
+            cfg.workers = workers;
+            cfg.shard = shard;
+            cfg.variant = Variant::BfsOverVectorizedFused;
+            cfg.fuse = FuseParams { fuse_depth: 2, tile_bytes: 2048, convert };
+            let mut c = Coordinator::new(cfg, product_parabola);
+            c.hierarchize_and_gather();
+            let hier: Vec<Vec<f64>> = c.grids().iter().map(|g| g.as_slice().to_vec()).collect();
+            c.scatter_and_dehierarchize();
+            let back: Vec<Vec<f64>> = c.grids().iter().map(|g| g.as_slice().to_vec()).collect();
+            let layouts: Vec<Vec<AxisLayout>> =
+                c.grids().iter().map(|g| g.layouts().to_vec()).collect();
+            (hier, back, layouts)
+        };
+        // both deterministic shapes: tile-sharded (leader gathers in fixed
+        // order) and grid-level with one worker (sequential arrival)
+        for (shard, workers) in [(ShardStrategy::Tile, 4usize), (ShardStrategy::Grid, 1)] {
+            let (h0, b0, _) = run(shard, workers, ConvertPolicy::Eager);
+            for convert in [ConvertPolicy::FusedIn, ConvertPolicy::FusedInOut] {
+                let (h1, b1, l1) = run(shard, workers, convert);
+                assert_eq!(h0, h1, "hierarchize differs under {convert} / {shard}");
+                assert_eq!(b0, b1, "restored grids differ under {convert} / {shard}");
+                assert!(
+                    l1.iter().flatten().all(|&l| l == AxisLayout::Position),
+                    "grids not restored to position layout under {convert} / {shard}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -108,6 +108,15 @@ impl LayoutMap {
         Self { l, from, to }
     }
 
+    /// The whole rank permutation as a lookup table: `t[r]` is the
+    /// `to`-layout rank of the point stored at rank `r` in `from`-layout.
+    /// Bulk movers (`FullGrid::convert_axis`, the per-tile span permutation
+    /// of `hierarchize::fused`) pay the `map` arithmetic once per rank
+    /// instead of once per element.
+    pub fn table(&self, n: usize) -> Vec<u32> {
+        (0..n as u32).map(|r| self.map(r)).collect()
+    }
+
     /// Rank in `to`-layout of the point stored at rank `r` in `from`-layout.
     #[inline]
     pub fn map(&self, r: u32) -> u32 {
@@ -221,6 +230,26 @@ mod tests {
             let ba = LayoutMap::new(l, AxisLayout::Bfs, AxisLayout::Position);
             for r in 0..n {
                 assert_eq!(ba.map(ab.map(r)), r);
+            }
+        }
+    }
+
+    #[test]
+    fn layout_map_table_matches_pointwise_map() {
+        for l in 1..=6u8 {
+            let n = ((1u32 << l) - 1) as usize;
+            for (from, to) in [
+                (AxisLayout::Position, AxisLayout::Bfs),
+                (AxisLayout::Bfs, AxisLayout::Position),
+                (AxisLayout::Bfs, AxisLayout::BfsRev),
+                (AxisLayout::Position, AxisLayout::Position),
+            ] {
+                let m = LayoutMap::new(l, from, to);
+                let t = m.table(n);
+                assert_eq!(t.len(), n);
+                for r in 0..n as u32 {
+                    assert_eq!(t[r as usize], m.map(r));
+                }
             }
         }
     }

@@ -254,6 +254,24 @@ impl PoleView<'_, '_> {
         // SAFETY: as in get(); this view owns the slot while it lives
         unsafe { *self.cells.ptr.add(self.slot(j)) = v }
     }
+
+    /// Apply a rank permutation to the pole in place: the value at logical
+    /// element `r` moves to element `map[r]`.  This is exactly the data
+    /// movement `FullGrid::convert_axis` performs buffer-wide, restricted
+    /// to one carved pole — the layout-conversion primitive the fused tile
+    /// passes use (`hierarchize::fused`).  `map` must be a permutation of
+    /// `0..len()` (a `grid::LayoutMap::table`); `scratch` must hold at
+    /// least `len()` elements.
+    pub fn permute(&self, map: &[u32], scratch: &mut [f64]) {
+        assert_eq!(map.len(), self.len, "permutation length != pole length");
+        assert!(scratch.len() >= self.len, "permute scratch too small");
+        for r in 0..self.len {
+            scratch[map[r] as usize] = self.get(r);
+        }
+        for (r, &v) in scratch[..self.len].iter().enumerate() {
+            self.set(r, v);
+        }
+    }
 }
 
 #[cfg(debug_assertions)]
@@ -345,6 +363,40 @@ impl BlockView<'_, '_> {
     pub fn set(&self, off: usize, v: f64) {
         // SAFETY: row_ptr checks off against the view
         unsafe { *self.row_ptr(off, 1) = v }
+    }
+
+    /// Permute `map.len()` width-`w` rows along one axis of the view: the
+    /// row at `base + r * row_stride` moves to rank `map[r]` (same base,
+    /// same stride).  The span-permutation sibling of [`PoleView::permute`]
+    /// for the row-navigated layers: one whole pole of the converted axis
+    /// per x1-side column, all `w` columns moved together — the rows have
+    /// exactly the shape `overvec_span`/`ind_rows_span` drive, so a tile
+    /// window's debug run checks apply unchanged.  `scratch` must hold at
+    /// least `map.len() * w` elements.
+    pub fn permute_rows(
+        &self,
+        base: usize,
+        row_stride: usize,
+        w: usize,
+        map: &[u32],
+        scratch: &mut [f64],
+    ) {
+        let n = map.len();
+        assert!(scratch.len() >= n * w, "permute_rows scratch too small");
+        for (r, &to) in map.iter().enumerate() {
+            let src = self.row_const(base + r * row_stride, w);
+            let dst = to as usize * w;
+            // SAFETY: row_const checked the row against the view (and the
+            // run geometry); scratch is a disjoint local buffer
+            unsafe {
+                std::ptr::copy_nonoverlapping(src, scratch[dst..dst + w].as_mut_ptr(), w);
+            }
+        }
+        for r in 0..n {
+            let dst = self.row_ptr(base + r * row_stride, w);
+            // SAFETY: as above, reversed — this view owns the row slots
+            unsafe { std::ptr::copy_nonoverlapping(scratch[r * w..].as_ptr(), dst, w) };
+        }
     }
 }
 
@@ -798,6 +850,113 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pole_permute_moves_ranks_and_roundtrips() {
+        let mut buf: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        {
+            let cells = GridCells::new(&mut buf);
+            // SAFETY: no other view is live
+            let p = unsafe { cells.pole(1, 2, 5) }; // slots 1,3,5,7,9 = 1,3,5,7,9
+            let map = [2u32, 0, 3, 1, 4]; // r -> map[r]
+            let mut scratch = vec![0.0; 5];
+            p.permute(&map, &mut scratch);
+            // new[map[r]] == old[r]
+            assert_eq!(p.get(2), 1.0);
+            assert_eq!(p.get(0), 3.0);
+            assert_eq!(p.get(3), 5.0);
+            assert_eq!(p.get(1), 7.0);
+            assert_eq!(p.get(4), 9.0);
+            // inverse permutation restores the pole
+            let inv = [1u32, 3, 0, 2, 4];
+            p.permute(&inv, &mut scratch);
+            for (r, want) in [1.0, 3.0, 5.0, 7.0, 9.0].into_iter().enumerate() {
+                assert_eq!(p.get(r), want);
+            }
+        }
+        // slots outside the pole untouched
+        assert_eq!(buf[0], 0.0);
+        assert_eq!(buf[2], 2.0);
+    }
+
+    #[test]
+    fn tile_window_permute_rows_respects_runs() {
+        // strided tile: 3 runs of width 2, stride 4 -> slots 0,1 4,5 8,9;
+        // permute the 3 "rows" (one per run) by [1,2,0]
+        let mut buf: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        {
+            let cells = GridCells::new(&mut buf);
+            // SAFETY: no other view is live
+            let t = unsafe { cells.tile(0, 3, 4, 2) };
+            let w = unsafe { t.window() };
+            let mut scratch = vec![0.0; 6];
+            w.permute_rows(0, 4, 2, &[1, 2, 0], &mut scratch);
+        }
+        // row r (values 4r, 4r+1) moved to rank map[r]
+        assert_eq!(&buf[0..2], &[8.0, 9.0]); // rank 0 <- old row 2
+        assert_eq!(&buf[4..6], &[0.0, 1.0]); // rank 1 <- old row 0
+        assert_eq!(&buf[8..10], &[4.0, 5.0]); // rank 2 <- old row 1
+        // gap slots (not owned by the tile) untouched
+        assert_eq!(&buf[2..4], &[2.0, 3.0]);
+        assert_eq!(&buf[6..8], &[6.0, 7.0]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "row leaves the tile's runs")]
+    fn permute_rows_crossing_a_run_gap_panics() {
+        let mut buf = vec![0f64; 16];
+        let cells = GridCells::new(&mut buf);
+        // SAFETY: no other view is live
+        let t = unsafe { cells.tile(0, 2, 8, 4) };
+        let w = unsafe { t.window() };
+        let mut scratch = vec![0.0; 12];
+        // width-6 rows cross out of the width-4 runs
+        w.permute_rows(0, 8, 6, &[1, 0], &mut scratch);
+    }
+
+    /// Conversion-fusion shape: tiles of one plan carved concurrently, each
+    /// thread permuting only its own runs (the in-conversion of a fused
+    /// pass).  Runs under Miri via the CI `miri` job.
+    #[test]
+    fn threaded_tile_permutes_are_race_free() {
+        let n_tiles = 4usize;
+        let w = 2usize;
+        let runs = 3usize;
+        let run_stride = n_tiles * w;
+        let mut buf: Vec<f64> = (0..(runs * run_stride)).map(|i| i as f64).collect();
+        let want: Vec<f64> = {
+            // reference: permute rows [1,2,0] within each tile serially
+            let mut v = buf.clone();
+            for t in 0..n_tiles {
+                let rows: Vec<Vec<f64>> = (0..runs)
+                    .map(|r| v[t * w + r * run_stride..][..w].to_vec())
+                    .collect();
+                let map = [1usize, 2, 0];
+                for (r, row) in rows.iter().enumerate() {
+                    v[t * w + map[r] * run_stride..][..w].copy_from_slice(row);
+                }
+            }
+            v
+        };
+        {
+            let cells = GridCells::new(&mut buf);
+            let cells = &cells;
+            std::thread::scope(|s| {
+                for t in 0..n_tiles {
+                    s.spawn(move || {
+                        // SAFETY: tile t owns runs starting at t * w —
+                        // pairwise disjoint across t
+                        let tile = unsafe { cells.tile(t * w, runs, run_stride, w) };
+                        let win = unsafe { tile.window() };
+                        let mut scratch = vec![0.0; runs * w];
+                        win.permute_rows(0, run_stride, w, &[1, 2, 0], &mut scratch);
+                    });
+                }
+            });
+        }
+        assert_eq!(buf, want);
     }
 
     #[test]

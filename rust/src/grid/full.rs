@@ -1,7 +1,26 @@
 //! The anisotropic full-grid container.
 
+use std::cell::Cell;
+
 use super::bfs::LayoutMap;
 use super::level::LevelVector;
+
+thread_local! {
+    /// Whole-buffer conversion sweeps performed *by this thread* (one per
+    /// effective [`FullGrid::convert_axis`] call).  Telemetry for the
+    /// conversion-fusion contract: a fused conversion rides the tile passes
+    /// through carved views and never increments this, so a single-threaded
+    /// run under `ConvertPolicy::FusedInOut` must leave the count unchanged
+    /// — the tests pin exactly that.
+    static CONVERT_SWEEPS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of standalone axis-conversion sweeps this thread has executed
+/// (see [`FullGrid::convert_axis`]).  Thread-local so concurrently running
+/// tests cannot pollute each other's deltas.
+pub fn convert_sweeps_on_thread() -> u64 {
+    CONVERT_SWEEPS.with(|c| c.get())
+}
 
 /// Per-axis point ordering of the storage.
 ///
@@ -297,14 +316,31 @@ impl FullGrid {
     ///
     /// O(N) with a scratch buffer; the benches measure this cost separately
     /// from hierarchization itself (ablation E9).
+    ///
+    /// Padded-row audit (pinned by `padded_conversion_keeps_pads_and_values`
+    /// below): the pole walk visits every pole exactly once for every axis —
+    /// `block` equals the stride of the next-slower axis (`stride * row_len`
+    /// for axis 0, `stride * n` above it, both of which already carry the
+    /// x1 padding) — and permutes exactly the `n` *real* entries per pole.
+    /// For axis 0 that deliberately skips the pad tail (`row_len > n`
+    /// slots), which must stay zero and does; for higher axes the `inner`
+    /// loop sweeps the pad columns too, moving zeros onto zeros.  Neither
+    /// case can leak a stale pad into a real slot.
     pub fn convert_axis(&mut self, axis: usize, to: AxisLayout) {
         let from = self.layouts[axis];
         if from == to {
             return;
         }
-        let l = self.levels.level(axis);
-        let map = LayoutMap::new(l, from, to);
         let n = self.axis_points(axis);
+        if n <= 1 {
+            // every layout coincides on a single-point axis: relabel only,
+            // no sweep (and no tick of the sweep counter — the traffic
+            // model charges conversions per *active* axis)
+            self.layouts[axis] = to;
+            return;
+        }
+        let l = self.levels.level(axis);
+        let map = LayoutMap::new(l, from, to).table(n);
         let stride = self.strides[axis];
         // iterate all "poles" along `axis`, permute each
         let total = self.data.len();
@@ -315,7 +351,7 @@ impl FullGrid {
             for inner in 0..stride {
                 let start = base + inner;
                 for r in 0..n {
-                    scratch[map.map(r as u32) as usize] = self.data[start + r * stride];
+                    scratch[map[r] as usize] = self.data[start + r * stride];
                 }
                 for r in 0..n {
                     self.data[start + r * stride] = scratch[r];
@@ -324,6 +360,7 @@ impl FullGrid {
             base += block;
         }
         self.layouts[axis] = to;
+        CONVERT_SWEEPS.with(|c| c.set(c.get() + 1));
     }
 
     /// Convert every axis to `to`.
@@ -331,6 +368,17 @@ impl FullGrid {
         for ax in 0..self.dim() {
             self.convert_axis(ax, to);
         }
+    }
+
+    /// Record that `axis` now stores layout `to` *without* moving any data.
+    ///
+    /// Bookkeeping hook for the fused conversion (`hierarchize::fused`):
+    /// the tile passes permute the storage themselves through carved views,
+    /// then the sweep leader notes the new layout here after each group
+    /// barrier — workers never touch this field, which keeps the per-axis
+    /// layout state claim-safe.
+    pub(crate) fn mark_layout(&mut self, axis: usize, to: AxisLayout) {
+        self.layouts[axis] = to;
     }
 
     /// Max-norm distance to another grid (same levels; layouts may differ).
@@ -419,6 +467,68 @@ mod tests {
         assert_eq!(g.max_diff(&orig), 0.0); // same logical values
         g.convert_axis(0, AxisLayout::Position);
         assert_eq!(g.as_slice(), orig.as_slice());
+    }
+
+    /// Regression pin for the padded-row audit of `convert_axis` (see its
+    /// doc comment): converting any axis of a padded grid must (a) leave
+    /// every pad slot exactly 0.0, (b) agree *exactly* with the same
+    /// conversion on an unpadded reference, and (c) round-trip to the
+    /// original storage bitwise — i.e. no stale-pad and no skipped-pole
+    /// case exists for any axis, including axis 0 where the permutation
+    /// deliberately skips the `row_len - n` pad tail of every pole.
+    #[test]
+    fn padded_conversion_keeps_pads_and_values() {
+        let shapes: &[&[u8]] = &[&[3], &[3, 2], &[2, 3], &[2, 2, 2], &[3, 1, 2]];
+        for levels in shapes {
+            let lv = LevelVector::new(levels);
+            let mut plain = FullGrid::new(lv.clone());
+            let mut k = 0.0f64;
+            plain.fill_with(|_| {
+                k += 1.0;
+                k * 0.5
+            });
+            let mut padded = FullGrid::with_padding(lv.clone(), 4);
+            padded.from_canonical(&plain.to_canonical());
+            let pristine = padded.clone();
+            let check_pads = |g: &FullGrid, stage: &str| {
+                let n1 = g.axis_points(0);
+                let rows = g.as_slice().len() / g.row_len();
+                for row in 0..rows {
+                    for p in n1..g.row_len() {
+                        assert_eq!(
+                            g.as_slice()[row * g.row_len() + p],
+                            0.0,
+                            "{levels:?} {stage}: pad dirty at row {row} col {p}"
+                        );
+                    }
+                }
+            };
+            // a chain exercising every (from, to) pair once per axis
+            for to in [AxisLayout::Bfs, AxisLayout::BfsRev, AxisLayout::Position] {
+                plain.convert_all(to);
+                padded.convert_all(to);
+                check_pads(&padded, "after convert");
+                assert_eq!(plain.max_diff(&padded), 0.0, "{levels:?} -> {to:?}");
+            }
+            // the chain ends back in position layout: storage bitwise equal
+            assert_eq!(padded.as_slice(), pristine.as_slice(), "{levels:?}");
+        }
+    }
+
+    #[test]
+    fn convert_sweep_counter_counts_effective_sweeps() {
+        let before = super::convert_sweeps_on_thread();
+        let mut g = FullGrid::new(LevelVector::new(&[3, 2]));
+        g.convert_axis(0, AxisLayout::Position); // no-op: not counted
+        assert_eq!(super::convert_sweeps_on_thread(), before);
+        g.convert_all(AxisLayout::Bfs); // two effective axis sweeps
+        assert_eq!(super::convert_sweeps_on_thread(), before + 2);
+        // single-point axes relabel without sweeping (they are identity in
+        // every layout) — the model charges conversions per active axis
+        let mut h = FullGrid::new(LevelVector::new(&[3, 1, 1]));
+        h.convert_all(AxisLayout::Bfs);
+        assert_eq!(super::convert_sweeps_on_thread(), before + 3);
+        assert!(h.layouts().iter().all(|&l| l == AxisLayout::Bfs));
     }
 
     #[test]

@@ -35,14 +35,111 @@
 //! size.  [`fused_passes`] / [`traffic_fused`] model the resulting memory
 //! traffic; `perf::roofline` turns that into predicted cycles for the
 //! fused-vs-unfused bench (`benches/fused_traffic.rs`).
+//!
+//! **Conversion folding** ([`ConvertPolicy`]): the last standalone
+//! full-buffer sweep around any BFS-layout variant was the layout
+//! conversion itself (`FullGrid::convert_all` before the kernels, and
+//! again afterwards to restore the canonical position layout).  Because a
+//! per-axis conversion is a rank permutation that commutes bitwise with
+//! hierarchization along every other axis, and every pole of a fused
+//! group's axes lies wholly inside its tile, each group's tile pass can
+//! gather its own axes from the source layout before its first working
+//! dimension and (under [`ConvertPolicy::FusedInOut`]) write them back in
+//! position layout after its last — the conversion rides passes the sweep
+//! performs anyway.  [`total_passes`] / [`traffic_total`] extend the
+//! traffic model accordingly: eager pays one sweep per active axis per
+//! direction on top of the working passes; `FusedInOut` charges exactly
+//! `ceil(d/k)` passes, no conversion surcharge at all.
 
+use std::fmt;
+use std::str::FromStr;
 use std::sync::OnceLock;
 
-use crate::grid::{AxisLayout, FullGrid, LevelVector, TileView};
+use crate::grid::{AxisLayout, FullGrid, LayoutMap, LevelVector, TileView};
 use crate::util::rng::SplitMix64;
 
 use super::parallel::parallel_units;
-use super::{bfs, flops, ind, overvec, simd, Hierarchizer};
+use super::{bfs, flops, ind, overvec, simd, Hierarchizer, Variant};
+
+/// Where the layout conversion happens relative to the fused tile passes.
+///
+/// A BFS-layout sweep over a grid stored in position layout historically
+/// paid one whole-buffer `convert_all` round trip before the kernels start
+/// (and another to restore position layout afterwards) — full DRAM sweeps
+/// the paper's Fig. 4 layout ablation isolates.  Conversion along one axis
+/// is a pure rank permutation that commutes bitwise with hierarchization
+/// along every *other* axis, and every pole of a fused-group axis lies
+/// wholly inside its tile — so each group's tile pass can gather its own
+/// axes from the source layout, hierarchize while cache-resident, and
+/// (for the outbound direction) write back in the target layout, folding
+/// the conversion sweeps into passes the sweep performs anyway.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ConvertPolicy {
+    /// The caller converts eagerly (`prepare` / `convert_all`) and the
+    /// sweep requires — and asserts — the kernel layout on entry.
+    #[default]
+    Eager,
+    /// Fold the inbound conversion in: each group's tiles gather their
+    /// axes from whatever layout the grid arrives in; the sweep leaves the
+    /// grid in the kernel layout (for layout-aware consumers like the
+    /// coordinator's gather/scatter).
+    FusedIn,
+    /// Fold both directions in: as `FusedIn`, plus each group's tiles
+    /// write their axes back in canonical position layout after their last
+    /// working dimension — the grid leaves the sweep restored, with zero
+    /// standalone conversion sweeps.
+    FusedInOut,
+}
+
+impl ConvertPolicy {
+    /// True if the inbound conversion rides the tile passes.
+    #[inline]
+    pub fn folds_in(self) -> bool {
+        !matches!(self, ConvertPolicy::Eager)
+    }
+
+    /// True if the outbound restore-to-position rides the tile passes.
+    #[inline]
+    pub fn folds_out(self) -> bool {
+        matches!(self, ConvertPolicy::FusedInOut)
+    }
+
+    /// This policy with the outbound fold stripped (`FusedInOut` becomes
+    /// `FusedIn`) — what phases that must *leave* the grid in the kernel
+    /// layout run: the batch without `to_position`, the pipeline's
+    /// hierarchize phase (gather wants the kernel layout).
+    #[inline]
+    pub fn without_out_fold(self) -> ConvertPolicy {
+        if self == ConvertPolicy::FusedInOut {
+            ConvertPolicy::FusedIn
+        } else {
+            self
+        }
+    }
+}
+
+impl FromStr for ConvertPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "eager" => Ok(ConvertPolicy::Eager),
+            "fused-in" | "fusedin" | "in" => Ok(ConvertPolicy::FusedIn),
+            "fused" | "fused-inout" | "fusedinout" => Ok(ConvertPolicy::FusedInOut),
+            other => Err(format!("unknown convert policy {other:?} (eager|fused|fused-in)")),
+        }
+    }
+}
+
+impl fmt::Display for ConvertPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ConvertPolicy::Eager => "eager",
+            ConvertPolicy::FusedIn => "fused-in",
+            ConvertPolicy::FusedInOut => "fused",
+        })
+    }
+}
 
 /// Tuning knobs of the fused sweep.  `0` means "autotune": the depth from
 /// [`autotune`], the budget from [`default_tile_bytes`].
@@ -53,34 +150,70 @@ pub struct FuseParams {
     pub fuse_depth: usize,
     /// Cache budget per tile, in bytes.
     pub tile_bytes: usize,
+    /// Where the layout conversion happens (see [`ConvertPolicy`]).
+    pub convert: ConvertPolicy,
 }
 
 impl FuseParams {
-    /// Autotune everything (the default).
-    pub const AUTO: FuseParams = FuseParams { fuse_depth: 0, tile_bytes: 0 };
+    /// Autotune everything, eager conversion (the historical default).
+    pub const AUTO: FuseParams =
+        FuseParams { fuse_depth: 0, tile_bytes: 0, convert: ConvertPolicy::Eager };
+
+    /// This configuration with a different conversion policy.
+    pub fn with_convert(mut self, convert: ConvertPolicy) -> Self {
+        self.convert = convert;
+        self
+    }
+
+    /// True if running `variant` under these knobs folds the *inbound*
+    /// conversion into its tile passes — the caller must then skip its
+    /// standalone `convert_all(kernel_layout)`.  One predicate for every
+    /// coordinator/CLI call site, so a future second coordinator-selectable
+    /// fused variant changes the answer here instead of at each site.
+    pub fn folds_in_for(&self, variant: Variant) -> bool {
+        variant == Variant::BfsOverVectorizedFused && self.convert.folds_in()
+    }
+
+    /// True if running `variant` under these knobs folds the *outbound*
+    /// restore-to-position into its tile passes — the caller must then skip
+    /// its trailing `convert_all(Position)`.
+    pub fn folds_out_for(&self, variant: Variant) -> bool {
+        variant == Variant::BfsOverVectorizedFused && self.convert.folds_out()
+    }
 }
 
 /// Per-tile cache budget in bytes: `SGCT_TILE_BYTES` if set, else the
 /// detected per-core L2 size, else a conservative 256 KiB.  Floored at
 /// 64 KiB so degenerate detections cannot pessimize the plan.
+///
+/// The env override is **re-read on every call** (long-lived batch
+/// processes may change it after first touch; historically a `OnceLock`
+/// froze the first value seen); only the sysfs probe — an immutable
+/// hardware fact — is cached.  The resolution logic itself lives in
+/// [`resolve_tile_bytes`], which the unit tests drive directly so no test
+/// ever mutates the process environment (`set_var` racing `getenv` on
+/// other test threads is undefined behavior).
 pub fn default_tile_bytes() -> usize {
-    static CACHE: OnceLock<usize> = OnceLock::new();
-    *CACHE.get_or_init(|| {
-        if cfg!(miri) {
-            // Miri's isolation forbids the env/sysfs probes; a fixed
-            // budget keeps the interpreter runs deterministic
-            return 256 * 1024;
+    if cfg!(miri) {
+        // Miri's isolation forbids the env/sysfs probes; a fixed
+        // budget keeps the interpreter runs deterministic
+        return 256 * 1024;
+    }
+    static SYSFS: OnceLock<usize> = OnceLock::new();
+    let sysfs = *SYSFS.get_or_init(|| detect_l2_bytes().unwrap_or(256 * 1024).max(64 * 1024));
+    resolve_tile_bytes(std::env::var("SGCT_TILE_BYTES").ok().as_deref(), sysfs)
+}
+
+/// Pure budget resolution: a positive parseable `override_var`
+/// (`SGCT_TILE_BYTES`) wins; zero, junk, or absence falls back to the
+/// (cached) probed value.
+fn resolve_tile_bytes(override_var: Option<&str>, probed: usize) -> usize {
+    if let Some(v) = override_var.and_then(|s| s.trim().parse::<usize>().ok()) {
+        if v > 0 {
+            return v;
         }
-        if let Some(v) = std::env::var("SGCT_TILE_BYTES")
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-        {
-            if v > 0 {
-                return v;
-            }
-        }
-        detect_l2_bytes().unwrap_or(256 * 1024).max(64 * 1024)
-    })
+    }
+    probed
 }
 
 fn detect_l2_bytes() -> Option<usize> {
@@ -88,14 +221,17 @@ fn detect_l2_bytes() -> Option<usize> {
     parse_cache_size(s.trim())
 }
 
-/// Parse sysfs cache-size notation: `"512K"`, `"8M"`, or plain bytes.
+/// Parse cache-size notation: `"512K"`, `"8M"`, `"1G"` (either case), or
+/// plain bytes.  Values that overflow `usize` are rejected (`None`), not
+/// wrapped or saturated — a garbage sysfs line must not become a plan.
 fn parse_cache_size(s: &str) -> Option<usize> {
     let (digits, mult) = match s.as_bytes().last()? {
         b'K' | b'k' => (&s[..s.len() - 1], 1024usize),
         b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        b'G' | b'g' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
         _ => (s, 1),
     };
-    digits.trim().parse::<usize>().ok().map(|v| v.saturating_mul(mult))
+    digits.trim().parse::<usize>().ok().and_then(|v| v.checked_mul(mult))
 }
 
 /// Pick fuse parameters for a grid shape: the deepest fuse whose leading
@@ -115,7 +251,7 @@ pub fn autotune(levels: &LevelVector, budget_bytes: usize) -> FuseParams {
         slab_bytes = next;
         k += 1;
     }
-    FuseParams { fuse_depth: k, tile_bytes: budget }
+    FuseParams { fuse_depth: k, tile_bytes: budget, convert: ConvertPolicy::Eager }
 }
 
 /// Number of full-buffer passes of a fused sweep at depth `k`: one per
@@ -132,9 +268,43 @@ pub fn fused_passes(levels: &LevelVector, fuse_depth: usize) -> u32 {
 }
 
 /// Modeled main-memory traffic of the fused sweep (read + write every point
-/// once per pass); compare [`flops::traffic_unfused`].
+/// once per pass), *working passes only*; compare [`flops::traffic_unfused`]
+/// and, for the conversion-inclusive bill, [`traffic_total`].
 pub fn traffic_fused(levels: &LevelVector, fuse_depth: usize) -> u64 {
     fused_passes(levels, fuse_depth) as u64 * flops::pass_traffic_bytes(levels)
+}
+
+/// Standalone whole-buffer conversion sweeps a BFS-layout run pays outside
+/// its tile passes, for a call that starts and ends in position layout.
+/// `FullGrid::convert_all` sweeps the buffer once **per axis** that
+/// actually changes order (level-1 axes are identity — every layout
+/// coincides on a single point — so only the active dimensions count):
+/// eager pays that bill inbound *and* outbound (`2 * active_dims`),
+/// `FusedIn` folds the inbound half into the first group passes,
+/// `FusedInOut` folds both — zero conversion sweeps remain.
+pub fn conversion_passes(levels: &LevelVector, policy: ConvertPolicy) -> u32 {
+    let per_direction = flops::active_dims(levels);
+    match policy {
+        ConvertPolicy::Eager => 2 * per_direction,
+        ConvertPolicy::FusedIn => per_direction,
+        ConvertPolicy::FusedInOut => 0,
+    }
+}
+
+/// Total full-buffer passes of one position-to-position hierarchization at
+/// fuse depth `k` under `policy`: the `ceil(d/k)` working passes plus any
+/// standalone conversion sweeps the policy leaves behind.  The acceptance
+/// contract of the conversion fusion: `FusedInOut` reports exactly
+/// [`fused_passes`] — no conversion surcharge.
+pub fn total_passes(levels: &LevelVector, fuse_depth: usize, policy: ConvertPolicy) -> u32 {
+    fused_passes(levels, fuse_depth) + conversion_passes(levels, policy)
+}
+
+/// Modeled traffic including the conversion sweeps ([`total_passes`] times
+/// the per-pass streaming bytes) — what the `fused_traffic` /
+/// `fig4_1d_layouts` benches chart against measurements.
+pub fn traffic_total(levels: &LevelVector, fuse_depth: usize, policy: ConvertPolicy) -> u64 {
+    total_passes(levels, fuse_depth, policy) as u64 * flops::pass_traffic_bytes(levels)
 }
 
 // ------------------------------------------------------------- the sweep
@@ -313,10 +483,119 @@ fn run_tile_strided(
     }
 }
 
+/// Permute the axes `a..b` of one tile between layouts: `maps[j - a]` is
+/// axis `j`'s rank-permutation table (`None` = nothing to convert).  The
+/// navigation mirrors [`run_tile_leading`] / [`run_tile_strided`], so every
+/// pole of a converted axis lies wholly inside the tile (the structural
+/// invariant of the fused decomposition) and the window's debug run checks
+/// apply unchanged.  The data movement is the same permutation
+/// `FullGrid::convert_axis` applies buffer-wide, restricted to the tile's
+/// slots; since a permutation of axis `i` commutes bitwise with the
+/// hierarchization of any axis `j != i`, running it inside the group pass
+/// is exact — not approximate — relative to the eager reference.
+fn convert_tile_axes(
+    tile: &TileView,
+    geo: &Geometry,
+    a: usize,
+    b: usize,
+    maps: &[Option<Vec<u32>>],
+) {
+    // one scratch sized for the largest converted span of this tile
+    let scratch_len = (a..b)
+        .filter(|&j| maps[j - a].is_some())
+        .map(|j| {
+            if a == 0 {
+                if j == 0 {
+                    maps[0].as_ref().unwrap().len()
+                } else {
+                    geo.stride[j] * geo.ext[j]
+                }
+            } else {
+                geo.ext[j] * tile.run_len()
+            }
+        })
+        .max()
+        .unwrap_or(0);
+    if scratch_len == 0 {
+        return;
+    }
+    let mut scratch = vec![0f64; scratch_len];
+    if a == 0 {
+        let tile_len = tile.span_len();
+        let row_len = geo.ext[0];
+        for j in 0..b {
+            let Some(map) = &maps[j] else { continue };
+            if j == 0 {
+                // x1 poles: permute the n real entries of every row, pad
+                // tails untouched (they are zero and stay zero)
+                let n0 = map.len();
+                for r in 0..tile_len / row_len {
+                    // SAFETY: one sub-view at a time, on the tile's thread
+                    let p = unsafe { tile.pole(r * row_len, 1, n0) };
+                    p.permute(map, &mut scratch);
+                }
+                continue;
+            }
+            // SAFETY: one sub-view at a time, on the tile's own thread
+            let win = unsafe { tile.window() };
+            let w = geo.stride[j];
+            let sub = w * geo.ext[j];
+            for ob in 0..tile_len / sub {
+                win.permute_rows(ob * sub, w, w, map, &mut scratch);
+            }
+        }
+    } else {
+        // SAFETY: one window at a time, on the tile's own thread
+        let win = unsafe { tile.window() };
+        let sa = geo.stride[a];
+        let f_total = geo.stride[b] / sa;
+        let w = tile.run_len();
+        for j in a..b {
+            let Some(map) = &maps[j - a] else { continue };
+            let fj = geo.stride[j] / sa;
+            let step = fj * geo.ext[j];
+            for f_slow in 0..f_total / step {
+                for f_fast in 0..fj {
+                    win.permute_rows((f_slow * step + f_fast) * sa, fj * sa, w, map, &mut scratch);
+                }
+            }
+        }
+    }
+}
+
+/// Rank-permutation tables for converting axes `a..b` from their per-axis
+/// `from` layouts to `to`; `None` entries need no movement (already there,
+/// or a single-point axis where every layout coincides).
+fn group_maps(
+    levels: &LevelVector,
+    from: &[AxisLayout],
+    to: AxisLayout,
+    a: usize,
+    b: usize,
+) -> Option<Vec<Option<Vec<u32>>>> {
+    let maps: Vec<Option<Vec<u32>>> = (a..b)
+        .map(|j| {
+            let n = levels.axis_points(j);
+            (n > 1 && from[j] != to)
+                .then(|| LayoutMap::new(levels.level(j), from[j], to).table(n))
+        })
+        .collect();
+    maps.iter().any(|m| m.is_some()).then_some(maps)
+}
+
 /// The fused sweep: groups of `fuse_depth` consecutive axes, each group one
 /// tiled pass over the buffer, tiles claimed by up to `threads` workers
 /// (chunked atomic-cursor stealing, optionally in a seeded shuffle order —
 /// tiles touch disjoint slots, so any claim order is bitwise identical).
+///
+/// Under a non-eager [`ConvertPolicy`] each group's tiles additionally
+/// gather their axes from the grid's source layout before the first
+/// working dimension (and, for `FusedInOut`, restore them to position
+/// layout after the last one) — the layout conversion rides the passes the
+/// sweep performs anyway, leaving no standalone `convert_all` round trip.
+/// The per-axis `layouts` bookkeeping stays claim-safe: workers only move
+/// data through their tile's carved views; the leader records each group's
+/// new layout after the group barrier.
 pub(crate) fn sweep_fused(
     g: &mut FullGrid,
     up: bool,
@@ -332,6 +611,17 @@ pub(crate) fn sweep_fused(
     } else {
         params.fuse_depth.clamp(1, d)
     };
+    let kernel_layout = match kern {
+        FusedKernel::OverVec(_) => AxisLayout::Bfs,
+        FusedKernel::IndRows => AxisLayout::Position,
+    };
+    let policy = params.convert;
+    let from: Vec<AxisLayout> = g.layouts().to_vec();
+    debug_assert!(
+        policy.folds_in() || from.iter().all(|&l| l == kernel_layout),
+        "eager sweep entered in a non-kernel layout (assert_layout missed?)"
+    );
+    let out = policy.folds_out().then_some(AxisLayout::Position);
     let k = simd::kernels();
     let geo = Geometry::of(g);
     debug_assert_eq!(geo.total(), g.as_slice().len());
@@ -339,33 +629,64 @@ pub(crate) fn sweep_fused(
     let mut a = 0;
     while a < d {
         let b = (a + depth).min(d);
+        // an axis needs hierarchizing iff level >= 2, which is also exactly
+        // when it has > 1 point, i.e. when a conversion could move data —
+        // so an all-inactive group has nothing to convert either
         if !(a..b).any(|j| levels.level(j) >= 2) {
+            if policy.folds_in() {
+                for j in a..b {
+                    g.mark_layout(j, out.unwrap_or(kernel_layout));
+                }
+            }
             a = b;
             continue;
         }
+        let maps_in = if policy.folds_in() {
+            group_maps(&levels, &from, kernel_layout, a, b)
+        } else {
+            None
+        };
+        let kernel_all = vec![kernel_layout; d];
+        let maps_out = out.and_then(|t| group_maps(&levels, &kernel_all, t, a, b));
         let tiles = plan_tiles(&geo, a, b, budget);
         let order = seed.map(|s| {
             let mut o: Vec<usize> = (0..tiles.len()).collect();
             SplitMix64::new(s ^ (a as u64).wrapping_mul(0x9E3779B97F4A7C15)).shuffle(&mut o);
             o
         });
-        let cells = g.cells();
-        let (cells, tiles, geo, levels) = (&cells, &tiles, &geo, &levels);
-        let run = move |u: usize| {
-            let t = tiles[u];
-            // SAFETY: tiles of one group plan are pairwise disjoint and
-            // each unit u is claimed exactly once (atomic cursor /
-            // verified shuffle); debug builds verify on the claim map
-            let tv = unsafe { cells.tile(t.base, t.runs, t.run_stride, t.run_len) };
-            if a == 0 {
-                run_tile_leading(&tv, geo, levels, b, up, kern, k);
-            } else {
-                run_tile_strided(&tv, geo, levels, a, b, up, kern, k);
+        {
+            let cells = g.cells();
+            let (cells, tiles, geo, levels) = (&cells, &tiles, &geo, &levels);
+            let (maps_in, maps_out) = (maps_in.as_deref(), maps_out.as_deref());
+            let run = move |u: usize| {
+                let t = tiles[u];
+                // SAFETY: tiles of one group plan are pairwise disjoint and
+                // each unit u is claimed exactly once (atomic cursor /
+                // verified shuffle); debug builds verify on the claim map
+                let tv = unsafe { cells.tile(t.base, t.runs, t.run_stride, t.run_len) };
+                if let Some(maps) = maps_in {
+                    convert_tile_axes(&tv, geo, a, b, maps);
+                }
+                if a == 0 {
+                    run_tile_leading(&tv, geo, levels, b, up, kern, k);
+                } else {
+                    run_tile_strided(&tv, geo, levels, a, b, up, kern, k);
+                }
+                if let Some(maps) = maps_out {
+                    convert_tile_axes(&tv, geo, a, b, maps);
+                }
+            };
+            parallel_units(threads, tiles.len(), order.as_deref(), &run);
+            // implicit barrier: the next group starts only after every tile
+            // of this group finished (std::thread::scope join)
+        }
+        if policy.folds_in() {
+            // claim-safe layout bookkeeping: only the leader writes, and
+            // only after the group barrier
+            for j in a..b {
+                g.mark_layout(j, out.unwrap_or(kernel_layout));
             }
-        };
-        parallel_units(threads, tiles.len(), order.as_deref(), &run);
-        // implicit barrier: the next group starts only after every tile of
-        // this group finished (std::thread::scope join)
+        }
         a = b;
     }
 }
@@ -374,10 +695,14 @@ pub(crate) fn sweep_fused(
 
 /// Cache-blocked, dimension-fused `BFS-OverVectorized`: bitwise identical
 /// surpluses, `ceil(d/k)` instead of `d` memory passes.  Field value `0`
-/// means autotune ([`autotune`] / [`default_tile_bytes`]).
+/// means autotune ([`autotune`] / [`default_tile_bytes`]); `convert`
+/// selects whether the layout conversion rides the tile passes
+/// ([`ConvertPolicy`] — non-eager policies accept the grid in *any* layout
+/// and skip the entry assert).
 pub struct BfsOverVectorizedFused {
     pub fuse_depth: usize,
     pub tile_bytes: usize,
+    pub convert: ConvertPolicy,
 }
 
 impl BfsOverVectorizedFused {
@@ -385,14 +710,18 @@ impl BfsOverVectorizedFused {
     ///
     /// [`Variant::instance`]: super::Variant::instance
     pub const AUTO: BfsOverVectorizedFused =
-        BfsOverVectorizedFused { fuse_depth: 0, tile_bytes: 0 };
+        BfsOverVectorizedFused { fuse_depth: 0, tile_bytes: 0, convert: ConvertPolicy::Eager };
 
     pub fn with_params(p: FuseParams) -> Self {
-        Self { fuse_depth: p.fuse_depth, tile_bytes: p.tile_bytes }
+        Self { fuse_depth: p.fuse_depth, tile_bytes: p.tile_bytes, convert: p.convert }
     }
 
     pub fn params(&self) -> FuseParams {
-        FuseParams { fuse_depth: self.fuse_depth, tile_bytes: self.tile_bytes }
+        FuseParams {
+            fuse_depth: self.fuse_depth,
+            tile_bytes: self.tile_bytes,
+            convert: self.convert,
+        }
     }
 }
 
@@ -404,11 +733,15 @@ impl Hierarchizer for BfsOverVectorizedFused {
         AxisLayout::Bfs
     }
     fn hierarchize(&self, g: &mut FullGrid) {
-        super::assert_layout(self, g);
+        if !self.convert.folds_in() {
+            super::assert_layout(self, g);
+        }
         sweep_fused(g, false, FusedKernel::OverVec(overvec::Mode::Plain), self.params(), 1, None);
     }
     fn dehierarchize(&self, g: &mut FullGrid) {
-        super::assert_layout(self, g);
+        if !self.convert.folds_in() {
+            super::assert_layout(self, g);
+        }
         sweep_fused(g, true, FusedKernel::OverVec(overvec::Mode::Plain), self.params(), 1, None);
     }
 }
@@ -421,6 +754,17 @@ impl Hierarchizer for BfsOverVectorizedFused {
 pub struct IndVectorizedFused {
     pub fuse_depth: usize,
     pub tile_bytes: usize,
+    pub convert: ConvertPolicy,
+}
+
+impl IndVectorizedFused {
+    fn params(&self) -> FuseParams {
+        FuseParams {
+            fuse_depth: self.fuse_depth,
+            tile_bytes: self.tile_bytes,
+            convert: self.convert,
+        }
+    }
 }
 
 impl Hierarchizer for IndVectorizedFused {
@@ -431,14 +775,16 @@ impl Hierarchizer for IndVectorizedFused {
         AxisLayout::Position
     }
     fn hierarchize(&self, g: &mut FullGrid) {
-        super::assert_layout(self, g);
-        let p = FuseParams { fuse_depth: self.fuse_depth, tile_bytes: self.tile_bytes };
-        sweep_fused(g, false, FusedKernel::IndRows, p, 1, None);
+        if !self.convert.folds_in() {
+            super::assert_layout(self, g);
+        }
+        sweep_fused(g, false, FusedKernel::IndRows, self.params(), 1, None);
     }
     fn dehierarchize(&self, g: &mut FullGrid) {
-        super::assert_layout(self, g);
-        let p = FuseParams { fuse_depth: self.fuse_depth, tile_bytes: self.tile_bytes };
-        sweep_fused(g, true, FusedKernel::IndRows, p, 1, None);
+        if !self.convert.folds_in() {
+            super::assert_layout(self, g);
+        }
+        sweep_fused(g, true, FusedKernel::IndRows, self.params(), 1, None);
     }
 }
 
@@ -509,7 +855,11 @@ mod tests {
             BfsOverVectorized.dehierarchize(&mut want_back);
             for depth in 1..=3usize {
                 for &budget in budgets {
-                    let h = BfsOverVectorizedFused { fuse_depth: depth, tile_bytes: budget };
+                    let h = BfsOverVectorizedFused {
+                        fuse_depth: depth,
+                        tile_bytes: budget,
+                        convert: ConvertPolicy::Eager,
+                    };
                     let mut got = input.clone();
                     prepare(&h, &mut got);
                     h.hierarchize(&mut got);
@@ -536,7 +886,11 @@ mod tests {
             let input = rand_grid(levels, 7);
             let mut want = input.clone();
             IndVectorized.hierarchize(&mut want);
-            let h = IndVectorizedFused { fuse_depth: 2, tile_bytes: 256 };
+            let h = IndVectorizedFused {
+                fuse_depth: 2,
+                tile_bytes: 256,
+                convert: ConvertPolicy::Eager,
+            };
             let mut got = input.clone();
             h.hierarchize(&mut got);
             assert_eq!(got.as_slice(), want.as_slice(), "{levels:?}");
@@ -555,7 +909,11 @@ mod tests {
         plain.fill_with(|_| rng.next_f64());
         let mut padded = FullGrid::with_padding(levels, 4);
         padded.from_canonical(&plain.to_canonical());
-        let h = BfsOverVectorizedFused { fuse_depth: 2, tile_bytes: 512 };
+        let h = BfsOverVectorizedFused {
+            fuse_depth: 2,
+            tile_bytes: 512,
+            convert: ConvertPolicy::Eager,
+        };
         prepare(&h, &mut plain);
         prepare(&h, &mut padded);
         h.hierarchize(&mut plain);
@@ -597,9 +955,197 @@ mod tests {
 
     #[test]
     fn cache_size_notation_parses() {
+        // the sysfs spellings seen in the wild, both cases, plain bytes
         assert_eq!(parse_cache_size("512K"), Some(512 * 1024));
+        assert_eq!(parse_cache_size("512k"), Some(512 * 1024));
         assert_eq!(parse_cache_size("8M"), Some(8 * 1024 * 1024));
+        assert_eq!(parse_cache_size("8m"), Some(8 * 1024 * 1024));
+        assert_eq!(parse_cache_size("1G"), Some(1024 * 1024 * 1024));
+        assert_eq!(parse_cache_size("2g"), Some(2 * 1024 * 1024 * 1024));
         assert_eq!(parse_cache_size("262144"), Some(262144));
+        assert_eq!(parse_cache_size("512 K"), Some(512 * 1024)); // inner space
+        // garbage and overflow are rejected, not wrapped or saturated
         assert_eq!(parse_cache_size("nope"), None);
+        assert_eq!(parse_cache_size(""), None);
+        assert_eq!(parse_cache_size("K"), None);
+        assert_eq!(parse_cache_size("-1K"), None);
+        assert_eq!(parse_cache_size("99999999999999999999"), None); // > usize
+        assert_eq!(parse_cache_size(&format!("{}G", usize::MAX / 2)), None); // mul overflow
+    }
+
+    /// The satellite contract of `default_tile_bytes`: the env override is
+    /// re-read per call — pinned through the pure [`resolve_tile_bytes`]
+    /// it now delegates to, so the test never mutates the process
+    /// environment (`set_var` racing `getenv` on parallel test threads is
+    /// undefined behavior).
+    #[test]
+    fn tile_bytes_override_resolution() {
+        let probed = 256 * 1024;
+        // a positive override wins, and a *changed* override wins again —
+        // resolution is stateless, nothing is latched
+        assert_eq!(resolve_tile_bytes(Some("123456"), probed), 123456);
+        assert_eq!(resolve_tile_bytes(Some("654321"), probed), 654321);
+        assert_eq!(resolve_tile_bytes(Some(" 4096 "), probed), 4096);
+        // zero, junk, and absence fall back to the cached probe
+        assert_eq!(resolve_tile_bytes(Some("0"), probed), probed);
+        assert_eq!(resolve_tile_bytes(Some("banana"), probed), probed);
+        assert_eq!(resolve_tile_bytes(Some("-1"), probed), probed);
+        assert_eq!(resolve_tile_bytes(None, probed), probed);
+        // and two consecutive env-backed reads agree (no mutation here)
+        assert_eq!(default_tile_bytes(), default_tile_bytes());
+    }
+
+    #[test]
+    fn convert_policy_parse_and_passes() {
+        use ConvertPolicy::*;
+        assert_eq!("eager".parse::<ConvertPolicy>().unwrap(), Eager);
+        assert_eq!("FUSED".parse::<ConvertPolicy>().unwrap(), FusedInOut);
+        assert_eq!("fused-in".parse::<ConvertPolicy>().unwrap(), FusedIn);
+        assert_eq!("fused-inout".parse::<ConvertPolicy>().unwrap(), FusedInOut);
+        assert!("sideways".parse::<ConvertPolicy>().is_err());
+        assert_eq!(FusedInOut.to_string(), "fused");
+        assert_eq!(FusedInOut.without_out_fold(), FusedIn);
+        assert_eq!(FusedIn.without_out_fold(), FusedIn);
+        assert_eq!(Eager.without_out_fold(), Eager);
+        // conversion is one sweep per *active* axis and direction:
+        // convert_all sweeps each reordered axis once
+        let lv = LevelVector::new(&[4, 4, 4, 4]);
+        assert_eq!(conversion_passes(&lv, Eager), 8);
+        assert_eq!(conversion_passes(&lv, FusedIn), 4);
+        assert_eq!(conversion_passes(&lv, FusedInOut), 0);
+        // level-1 axes are identity in every layout: never charged
+        let aniso = LevelVector::new(&[4, 1, 3]);
+        assert_eq!(conversion_passes(&aniso, Eager), 4);
+        // the acceptance contract: FusedInOut charges no conversion passes
+        assert_eq!(total_passes(&lv, 2, FusedInOut), fused_passes(&lv, 2));
+        assert_eq!(total_passes(&lv, 2, Eager), fused_passes(&lv, 2) + 8);
+        assert_eq!(
+            traffic_total(&lv, 2, FusedInOut),
+            traffic_fused(&lv, 2),
+            "fused conversion must not be charged"
+        );
+        assert_eq!(
+            traffic_total(&lv, 4, Eager),
+            9 * flops::pass_traffic_bytes(&lv),
+            "eager pays one working pass plus 2 x 4 conversion sweeps"
+        );
+    }
+
+    /// Conversion fusion in miniature: starting from *position* layout,
+    /// every policy produces bitwise the surpluses of eager prepare +
+    /// serial `BFS-OverVectorized` (modulo the declared final layout), for
+    /// contiguous and strided groups, padded grids included, hierarchize
+    /// and dehierarchize.
+    #[test]
+    fn fused_conversion_policies_bitwise() {
+        let shapes: &[&[u8]] =
+            if cfg!(miri) { &[&[3, 2]] } else { &[&[5], &[4, 3], &[1, 4, 2], &[3, 2, 2, 2]] };
+        let budgets: &[usize] = if cfg!(miri) { &[128] } else { &[8, 200, 1 << 20] };
+        for levels in shapes {
+            for pad in [1usize, 4] {
+                let mut input = FullGrid::with_padding(LevelVector::new(levels), pad);
+                let mut rng = SplitMix64::new(77);
+                {
+                    let mut plain = FullGrid::new(LevelVector::new(levels));
+                    plain.fill_with(|_| rng.next_f64() - 0.5);
+                    input.from_canonical(&plain.to_canonical());
+                }
+                // eager reference, in BFS layout ...
+                let mut want = input.clone();
+                prepare(&BfsOverVectorized, &mut want);
+                BfsOverVectorized.hierarchize(&mut want);
+                let mut want_back = want.clone();
+                BfsOverVectorized.dehierarchize(&mut want_back);
+                // ... and restored to position layout
+                let mut want_pos = want.clone();
+                want_pos.convert_all(AxisLayout::Position);
+                let mut want_back_pos = want_back.clone();
+                want_back_pos.convert_all(AxisLayout::Position);
+                for depth in 1..=3usize {
+                    for &budget in budgets {
+                        for convert in [ConvertPolicy::FusedIn, ConvertPolicy::FusedInOut] {
+                            let h = BfsOverVectorizedFused {
+                                fuse_depth: depth,
+                                tile_bytes: budget,
+                                convert,
+                            };
+                            let mut got = input.clone(); // position layout, NO prepare
+                            h.hierarchize(&mut got);
+                            let (want_h, want_d, layout) = if convert.folds_out() {
+                                (&want_pos, &want_back_pos, AxisLayout::Position)
+                            } else {
+                                (&want, &want_back, AxisLayout::Bfs)
+                            };
+                            assert!(
+                                got.layouts().iter().all(|&l| l == layout),
+                                "{levels:?} pad {pad} depth {depth} {convert}: wrong layout"
+                            );
+                            assert_eq!(
+                                got.as_slice(),
+                                want_h.as_slice(),
+                                "{levels:?} pad {pad} depth {depth} budget {budget} {convert}"
+                            );
+                            h.dehierarchize(&mut got);
+                            assert_eq!(
+                                got.as_slice(),
+                                want_d.as_slice(),
+                                "dehier {levels:?} pad {pad} d{depth} b{budget} {convert}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The conversion fold on the *IndRows* kernel family (kernel layout =
+    /// position): a grid arriving in BFS layout is permuted back to
+    /// position order inside the tile passes and must land bitwise on the
+    /// eager `convert_all(Position)` + serial `Ind-Vectorized` result.
+    /// (For this kernel the outbound target equals the kernel layout, so
+    /// `FusedInOut`'s out-fold is a structural no-op — both folding
+    /// policies must agree.)
+    #[test]
+    fn fused_ind_rows_conversion_fold_from_bfs() {
+        let shapes: &[&[u8]] = if cfg!(miri) { &[&[3, 2]] } else { &[&[4, 3], &[2, 3, 2], &[5]] };
+        for levels in shapes {
+            let mut bfs_grid = rand_grid(levels, 19);
+            bfs_grid.convert_all(AxisLayout::Bfs);
+            let mut want = bfs_grid.clone();
+            want.convert_all(AxisLayout::Position);
+            IndVectorized.hierarchize(&mut want);
+            for convert in [ConvertPolicy::FusedIn, ConvertPolicy::FusedInOut] {
+                let h = IndVectorizedFused { fuse_depth: 2, tile_bytes: 512, convert };
+                let mut got = bfs_grid.clone(); // BFS layout, no prepare
+                h.hierarchize(&mut got);
+                assert!(got.layouts().iter().all(|&l| l == AxisLayout::Position));
+                assert_eq!(got.as_slice(), want.as_slice(), "{levels:?} {convert}");
+                h.dehierarchize(&mut got);
+                let mut back = want.clone();
+                IndVectorized.dehierarchize(&mut back);
+                assert_eq!(got.as_slice(), back.as_slice(), "dehier {levels:?} {convert}");
+            }
+        }
+    }
+
+    /// A single-threaded `FusedInOut` run performs zero standalone
+    /// conversion sweeps — the conversion really rides the tile passes.
+    #[test]
+    fn fused_inout_performs_no_standalone_sweeps() {
+        let mut g = rand_grid(&[4, 3], 13);
+        let h = BfsOverVectorizedFused {
+            fuse_depth: 2,
+            tile_bytes: 256,
+            convert: ConvertPolicy::FusedInOut,
+        };
+        let before = crate::grid::convert_sweeps_on_thread();
+        h.hierarchize(&mut g);
+        h.dehierarchize(&mut g);
+        assert_eq!(
+            crate::grid::convert_sweeps_on_thread(),
+            before,
+            "FusedInOut ran a standalone convert_axis sweep"
+        );
+        assert!(g.layouts().iter().all(|&l| l == AxisLayout::Position));
     }
 }

@@ -2,26 +2,28 @@
 //!
 //! Alg. 1 of the paper, in all implemented flavours:
 //!
-//! | variant | layout | navigation | inner-loop shape |
-//! |---------|--------|------------|------------------|
-//! | `Func`  | position | level-index vector, generic offset recomputation per access (SGpp-style) | point-at-a-time |
-//! | `Ind`   | position | offsets/strides on the fly | point-at-a-time |
-//! | `IndReducedOp` | position | as `Ind`, reduced multiplication count | point-at-a-time |
-//! | `IndVectorized` | position | as `Ind` | whole x1-row per node (axes >= 2), AVX |
-//! | `Bfs`   | BFS | heap parent + tree climb | point-at-a-time |
-//! | `BfsRev` | reverse BFS | heap parent + tree climb | point-at-a-time |
-//! | `BfsUnrolled` | BFS | heap | 4 adjacent poles per iteration (axes >= 2) |
-//! | `BfsVectorized` | BFS | heap | 4 poles per AVX vector (axes >= 2) |
-//! | `BfsOverVectorized` | BFS | heap | whole x1-row per node (axes >= 2), AVX |
-//! | `BfsOverVectorizedPreBranched` | BFS | heap, branch hoisted per level | whole row |
-//! | `BfsOverVectorizedPreBranchedReducedOp` | BFS | heap | whole row, reduced flops |
-//! | `BfsOverVectorizedFused` | BFS | heap, cache-blocked tiles | row spans, `k` dims fused per tile ([`fused`]) |
+//! | variant | layout | navigation | inner-loop shape | layout conversion |
+//! |---------|--------|------------|------------------|-------------------|
+//! | `Func`  | position | level-index vector, generic offset recomputation per access (SGpp-style) | point-at-a-time | none needed |
+//! | `Ind`   | position | offsets/strides on the fly | point-at-a-time | none needed |
+//! | `IndReducedOp` | position | as `Ind`, reduced multiplication count | point-at-a-time | none needed |
+//! | `IndVectorized` | position | as `Ind` | whole x1-row per node (axes >= 2), AVX | none needed |
+//! | `Bfs`   | BFS | heap parent + tree climb | point-at-a-time | eager (`prepare`) |
+//! | `BfsRev` | reverse BFS | heap parent + tree climb | point-at-a-time | eager (`prepare`) |
+//! | `BfsUnrolled` | BFS | heap | 4 adjacent poles per iteration (axes >= 2) | eager (`prepare`) |
+//! | `BfsVectorized` | BFS | heap | 4 poles per AVX vector (axes >= 2) | eager (`prepare`) |
+//! | `BfsOverVectorized` | BFS | heap | whole x1-row per node (axes >= 2), AVX | eager (`prepare`) |
+//! | `BfsOverVectorizedPreBranched` | BFS | heap, branch hoisted per level | whole row | eager (`prepare`) |
+//! | `BfsOverVectorizedPreBranchedReducedOp` | BFS | heap | whole row, reduced flops | eager (`prepare`) |
+//! | `BfsOverVectorizedFused` | BFS | heap, cache-blocked tiles | row spans, `k` dims fused per tile ([`fused`]) | eager **or folded into the tile passes** ([`ConvertPolicy`]) |
 //!
 //! All variants are verified against each other and against the python
 //! oracle; `flops` provides the (corrected) Eq. 1 flop model plus an
 //! instrumented counter.  `fused` adds the cache-blocked, dimension-fused
 //! sweep: `ceil(d/k)` memory passes instead of `d`, bitwise identical
-//! output (see the module docs for the traffic model).
+//! output (see the module docs for the traffic model) — and, via
+//! [`ConvertPolicy`], folds the layout conversion into those passes so the
+//! last standalone `convert_all` round trips disappear too.
 
 pub mod bfs;
 pub mod flops;
@@ -33,7 +35,7 @@ pub mod parallel;
 pub mod simd;
 pub mod unrolled;
 
-pub use fused::{BfsOverVectorizedFused, FuseParams};
+pub use fused::{BfsOverVectorizedFused, ConvertPolicy, FuseParams};
 pub use parallel::{ParallelHierarchizer, ShardStrategy};
 
 use crate::grid::{AxisLayout, FullGrid, LevelVector};
@@ -58,6 +60,11 @@ pub trait Hierarchizer: Sync {
 }
 
 /// Convert `g` to the layout `h` requires (not part of the timed hot path).
+///
+/// This is the *eager* conversion path: one standalone whole-buffer sweep
+/// per axis.  The fused variant can skip it entirely — a folding
+/// [`ConvertPolicy`] in its [`FuseParams`] gathers the source layout
+/// inside the tile passes instead.
 pub fn prepare(h: &dyn Hierarchizer, g: &mut FullGrid) {
     g.convert_all(h.layout());
 }

@@ -14,8 +14,8 @@ use sgct::combi::CombinationScheme;
 use sgct::coordinator::{hierarchize_scheme, BatchOptions, Coordinator, PipelineConfig};
 use sgct::grid::{FullGrid, LevelVector};
 use sgct::hierarchize::{
-    flops, fused, prepare, variant_by_name, FuseParams, Hierarchizer, ParallelHierarchizer,
-    ShardStrategy, Variant, ALL_VARIANTS,
+    flops, fused, prepare, variant_by_name, ConvertPolicy, FuseParams, Hierarchizer,
+    ParallelHierarchizer, ShardStrategy, Variant, ALL_VARIANTS,
 };
 use sgct::perf::{self, bench::Config};
 use sgct::runtime::Runtime;
@@ -56,13 +56,15 @@ sgct — sparse grid combination technique (Hupp 2013 reproduction)
 USAGE:
   sgct info [--roofline]
   sgct hierarchize --levels L1,L2,... [--variant NAME] [--threads N|auto] [--check] [--pjrt]
-                   [--fuse-depth K] [--tile-kb KB]
+                   [--fuse-depth K] [--tile-kb KB] [--convert eager|fused]
   sgct combine --dim D --level N [--samples K] [--threads N|auto]
                [--shard-strategy grid|pole|tile|auto] [--fuse-depth K] [--tile-kb KB]
+               [--convert eager|fused]
   sgct solve --dim D --level N [--iters I] [--steps T] [--pjrt] [--workers W]
              [--shard-strategy grid|pole|tile|auto] [--fuse-depth K] [--tile-kb KB]
+             [--convert eager|fused]
   sgct batch --dim D --level N [--threads N|auto] [--shard-strategy grid|pole|tile|auto]
-             [--variant NAME] [--fuse-depth K] [--tile-kb KB]
+             [--variant NAME] [--fuse-depth K] [--tile-kb KB] [--convert eager|fused]
   sgct bench --levels L1,L2,... [--all]
   sgct distributed --dim D --level N [--max-nodes K]
 
@@ -73,6 +75,11 @@ USAGE:
                            auto = resolve per batch shape
   --fuse-depth K           axes fused per tile pass (0 = autotune from shape)
   --tile-kb KB             cache budget per tile in KiB (0 = detect L2)
+  --convert eager|fused    eager = standalone convert_all sweeps around the
+                           kernels (historical), fused = the layout
+                           conversion rides the fused tile passes (also:
+                           fused-in = inbound only); applies where the
+                           fused variant runs
 ";
 
 fn run(r: Result<()>) -> i32 {
@@ -85,11 +92,14 @@ fn run(r: Result<()>) -> i32 {
     }
 }
 
-/// Parse the fused-sweep knobs (`--fuse-depth`, `--tile-kb`; 0 = autotune).
+/// Parse the fused-sweep knobs (`--fuse-depth`, `--tile-kb`; 0 = autotune;
+/// `--convert eager|fused|fused-in` folds the layout conversion into the
+/// fused tile passes).
 fn fuse_opts(args: &Args) -> Result<FuseParams> {
     Ok(FuseParams {
         fuse_depth: args.get("fuse-depth", 0usize)?,
         tile_bytes: args.get("tile-kb", 0usize)? * 1024,
+        convert: args.get("convert", ConvertPolicy::Eager)?,
     })
 }
 
@@ -166,6 +176,7 @@ fn hierarchize(args: &Args) -> Result<()> {
     } else {
         let threads = args.threads("threads", 1)?;
         let fuse = fuse_opts(args)?;
+        let folded = fuse.folds_in_for(variant);
         let p = ParallelHierarchizer::new(variant, threads).with_fuse(fuse);
         if variant == Variant::BfsOverVectorizedFused {
             let resolved = if fuse.fuse_depth == 0 {
@@ -178,23 +189,35 @@ fn hierarchize(args: &Args) -> Result<()> {
                     } else {
                         fuse.tile_bytes
                     },
+                    convert: fuse.convert,
                 }
             };
             println!(
-                "fused sweep: depth {} / tile {} -> {} of {} memory passes (modeled {} vs {})",
+                "fused sweep: depth {} / tile {} / convert {} -> {} of {} memory passes \
+                 (modeled {} vs {}; incl. conversion: {} vs {} passes)",
                 resolved.fuse_depth,
                 human_bytes(resolved.tile_bytes),
+                fuse.convert,
                 fused::fused_passes(&levels, resolved.fuse_depth),
                 flops::active_dims(&levels),
                 human_bytes(fused::traffic_fused(&levels, resolved.fuse_depth) as usize),
                 human_bytes(flops::traffic_unfused(&levels) as usize),
+                fused::total_passes(&levels, resolved.fuse_depth, fuse.convert),
+                fused::total_passes(&levels, resolved.fuse_depth, ConvertPolicy::Eager),
             );
         }
-        prepare(&p, &mut g);
+        // with a folding policy the conversion rides the timed tile passes
+        // (that is the point — the timing now includes what used to be the
+        // untimed prepare), so prepare/restore only run when eager
+        if !folded {
+            prepare(&p, &mut g);
+        }
         let t = perf::CycleTimer::start();
         p.hierarchize(&mut g);
         let cy = t.elapsed_cycles();
-        g.convert_all(sgct::grid::AxisLayout::Position);
+        if !fuse.folds_out_for(variant) {
+            g.convert_all(sgct::grid::AxisLayout::Position);
+        }
         let f = flops::flops(&levels);
         let thread_note = if threads > 1 {
             format!(" (sharded x{threads})")

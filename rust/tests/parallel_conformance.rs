@@ -14,9 +14,10 @@
 use sgct::combi::CombinationScheme;
 use sgct::coordinator::{dehierarchize_scheme, hierarchize_scheme, BatchOptions};
 use sgct::grid::{FullGrid, LevelVector};
+use sgct::grid::AxisLayout;
 use sgct::hierarchize::{
-    auto_variant, auto_variant_with_budget, fused::BfsOverVectorizedFused, prepare, FuseParams,
-    Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant, ALL_VARIANTS,
+    auto_variant, auto_variant_with_budget, fused::BfsOverVectorizedFused, prepare, ConvertPolicy,
+    FuseParams, Hierarchizer, ParallelHierarchizer, ShardStrategy, Variant, ALL_VARIANTS,
 };
 use sgct::sgpp::HashGrid;
 use sgct::util::proptest::{check, random_levels, Config};
@@ -279,7 +280,7 @@ fn fused_bitwise_vs_serial_reference_across_depths_tiles_threads() {
         serial.dehierarchize(&mut want_back);
         for fuse_depth in 1..=3usize {
             for &tile_bytes in budgets {
-                let fuse = FuseParams { fuse_depth, tile_bytes };
+                let fuse = FuseParams { fuse_depth, tile_bytes, ..FuseParams::AUTO };
                 // serial fused instance
                 let h = BfsOverVectorizedFused::with_params(fuse);
                 let mut got = input.clone();
@@ -320,6 +321,75 @@ fn fused_bitwise_vs_serial_reference_across_depths_tiles_threads() {
     }
 }
 
+/// (e) Conversion-fusion conformance — the PR's acceptance contract:
+/// random anisotropic grids (d <= 6), all three `ConvertPolicy` values x
+/// fuse depths 1..=3 x threads {1, 2, 4, 8} x shuffled tile-claim orders,
+/// bitwise vs eager `prepare` + the serial `BFS-OverVectorized` reference,
+/// for hierarchize and the dehierarchize round trip.  A folding policy
+/// starts from *position* layout with no prepare — the conversion rides
+/// the tile passes — and must land on exactly the reference bits (in the
+/// kernel layout for `FusedIn`, restored to position for `FusedInOut`).
+#[test]
+fn prop_conversion_fusion_bitwise_across_policies() {
+    let thread_counts: &[usize] = if cfg!(miri) { &[2] } else { &[1, 2, 4, 8] };
+    let budgets: &[usize] = if cfg!(miri) { &[128] } else { &[8, 4096] };
+    check("convert-fusion", Config { cases: cases(8), ..Default::default() }, |rng, size| {
+        let levels = bounded_levels(rng, size, 6);
+        let input = random_grid(&levels, rng);
+        let serial = Variant::BfsOverVectorized.instance();
+        // the eager reference, in both final layouts
+        let mut want = input.clone();
+        prepare(serial, &mut want);
+        serial.hierarchize(&mut want);
+        let mut want_back = want.clone();
+        serial.dehierarchize(&mut want_back);
+        let mut want_pos = want.clone();
+        want_pos.convert_all(AxisLayout::Position);
+        let mut want_back_pos = want_back.clone();
+        want_back_pos.convert_all(AxisLayout::Position);
+        for fuse_depth in 1..=3usize {
+            for &tile_bytes in budgets {
+                for convert in
+                    [ConvertPolicy::Eager, ConvertPolicy::FusedIn, ConvertPolicy::FusedInOut]
+                {
+                    let fuse = FuseParams { fuse_depth, tile_bytes, convert };
+                    for &threads in thread_counts {
+                        let seed = rng.next_u64();
+                        let p =
+                            ParallelHierarchizer::new(Variant::BfsOverVectorizedFused, threads)
+                                .with_fuse(fuse)
+                                .with_unit_order_seed(seed);
+                        let mut got = input.clone();
+                        if convert == ConvertPolicy::Eager {
+                            prepare(&p, &mut got);
+                        }
+                        p.hierarchize(&mut got);
+                        let (want_h, want_d) = if convert.folds_out() {
+                            (&want_pos, &want_back_pos)
+                        } else {
+                            (&want, &want_back)
+                        };
+                        if got.as_slice() != want_h.as_slice() {
+                            return Err(format!(
+                                "hier {convert} depth {fuse_depth} tile {tile_bytes} \
+                                 x{threads} seed {seed:#x} not bitwise on {levels:?}"
+                            ));
+                        }
+                        p.dehierarchize(&mut got);
+                        if got.as_slice() != want_d.as_slice() {
+                            return Err(format!(
+                                "dehier {convert} depth {fuse_depth} tile {tile_bytes} \
+                                 x{threads} seed {seed:#x} not bitwise on {levels:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// (d') Fused conformance, fuzzed: random shapes, random fuse knobs,
 /// random thread counts — still bitwise vs the serial reference.
 #[test]
@@ -334,6 +404,7 @@ fn prop_fused_random_knobs_bitwise() {
         let fuse = FuseParams {
             fuse_depth: rng.next_range(0, levels.len() as u64 + 1) as usize,
             tile_bytes: 8 << rng.next_range(0, 14),
+            ..FuseParams::AUTO
         };
         let threads = rng.next_range(1, 8) as usize;
         let p = ParallelHierarchizer::new(Variant::BfsOverVectorizedFused, threads)

@@ -4,7 +4,8 @@
 use sgct::combi::CombinationScheme;
 use sgct::grid::{bfs_from_position, bfs_to_position, FullGrid, LevelVector};
 use sgct::hierarchize::{
-    flops, fused, prepare, FuseParams, Hierarchizer, ParallelHierarchizer, Variant, ALL_VARIANTS,
+    flops, fused, prepare, ConvertPolicy, FuseParams, Hierarchizer, ParallelHierarchizer, Variant,
+    ALL_VARIANTS,
 };
 use sgct::sgpp::HashGrid;
 use sgct::sparse::SparseGrid;
@@ -225,6 +226,7 @@ fn prop_fused_shuffled_tiles_bitwise_equals_serial() {
         let fuse = FuseParams {
             fuse_depth: rng.next_range(1, levels.len() as u64) as usize,
             tile_bytes: 8 << rng.next_range(0, 12),
+            ..FuseParams::AUTO
         };
         for threads in [1usize, 3, 8] {
             let seed = rng.next_u64();
@@ -272,6 +274,22 @@ fn prop_fused_traffic_model_bounds() {
             let expect_bytes = passes as u64 * flops::pass_traffic_bytes(&levels);
             if fused::traffic_fused(&levels, depth) != expect_bytes {
                 return Err(format!("traffic mismatch on {levels:?} depth {depth}"));
+            }
+            // conversion accounting: a folded conversion is free; eager
+            // pays one whole-buffer sweep per active axis per direction
+            // (convert_all sweeps each reordered axis once), FusedIn half
+            if fused::total_passes(&levels, depth, ConvertPolicy::FusedInOut) != passes {
+                return Err(format!("FusedInOut charged a conversion pass on {levels:?}"));
+            }
+            if fused::total_passes(&levels, depth, ConvertPolicy::Eager) != passes + 2 * unfused
+                || fused::total_passes(&levels, depth, ConvertPolicy::FusedIn) != passes + unfused
+            {
+                return Err(format!("eager conversion accounting wrong on {levels:?}"));
+            }
+            if fused::traffic_total(&levels, depth, ConvertPolicy::FusedInOut)
+                != fused::traffic_fused(&levels, depth)
+            {
+                return Err(format!("folded conversion was charged on {levels:?}"));
             }
         }
         if unfused > 0 && fused::fused_passes(&levels, d) != 1 && unfused == d as u32 {
