@@ -1,0 +1,155 @@
+//! Compute/communication overlap of the comm reduction engine — the
+//! measurement behind the paper's "hierarchization enables communication"
+//! claim: how much of the combination step's communication hides behind
+//! fused tile groups that are still hierarchizing.
+//!
+//! The scheme's grids are partitioned over in-process tree ranks wired by
+//! **real Unix socket pairs** (kernel buffers and copies, no processes);
+//! childless ranks stream every grid's finished subspaces as soon as their
+//! tile group's barrier drops.  Reported per streaming rank, and emitted
+//! to `BENCH_comm_overlap.json` (the artifact CI's `bench-smoke` uploads):
+//!
+//! * communication seconds/bytes **hidden behind >= 1 remaining fused
+//!   tile group** (sends that completed while the block still computed);
+//! * the no-overlap baseline (all gather bytes after compute) and the
+//!   `coordinator::distributed` NetModel prediction, side by side.
+//!
+//! ```bash
+//! cargo bench --bench comm_overlap                  # d=4 level 6 (121 grids)
+//! SGCT_BENCH_QUICK=1 cargo bench --bench comm_overlap   # level 4 smoke
+//! ```
+
+mod common;
+
+use common::*;
+use sgct::combi::CombinationScheme;
+use sgct::comm::{reduce_in_process, seeded_block, Measured, PairTransport, ReduceOptions};
+use sgct::coordinator::distributed::{estimate, place, NetModel};
+use sgct::perf::bench::BenchRecord;
+use sgct::util::table::{human_bytes, human_time, Table};
+
+fn run_once(
+    scheme: &CombinationScheme,
+    ranks: usize,
+    overlap: bool,
+    seed: u64,
+) -> (f64, Vec<Measured>) {
+    let opts = ReduceOptions {
+        overlap,
+        scatter_back: false,
+        pair_transport: PairTransport::UnixPair,
+        ..Default::default()
+    };
+    let mut grids = seeded_block(scheme, 0, scheme.len(), seed);
+    let t0 = std::time::Instant::now();
+    let (_sparse, measured) =
+        reduce_in_process(scheme, &mut grids, ranks, &opts).expect("reduce failed");
+    (t0.elapsed().as_secs_f64(), measured)
+}
+
+fn record(name: &str, levels: &str, threads: usize, secs: f64) -> BenchRecord {
+    BenchRecord {
+        name: name.to_string(),
+        variant: "comm".to_string(),
+        threads,
+        levels: levels.to_string(),
+        grid_bytes: 0,
+        cycles: 0.0,
+        secs,
+        gflops: 0.0,
+        flops_per_cycle: 0.0,
+        speedup_vs_baseline: 0.0,
+        extra: Vec::new(),
+    }
+}
+
+fn main() {
+    let (dim, level) = if quick() { (4usize, 4u8) } else { (4, 6) };
+    let ranks = 4usize;
+    let seed = 42u64;
+    let scheme = CombinationScheme::regular(dim, level);
+    println!(
+        "comm overlap bench: d={dim} n={level} -> {} grids over {ranks} ranks (unix socket pairs)",
+        scheme.len()
+    );
+    let predicted = estimate(&scheme, &place(&scheme, ranks), NetModel::default());
+
+    // warm-up, then one measured run each way (the overlap numbers are
+    // per-piece timestamps, not a tight-loop statistic)
+    run_once(&scheme, ranks, true, seed);
+    let (wall_plain, plain) = run_once(&scheme, ranks, false, seed);
+    let (wall_overlap, measured) = run_once(&scheme, ranks, true, seed);
+
+    let mut t = Table::new(vec![
+        "rank", "pieces", "hidden pieces", "hidden bytes", "hidden time", "compute", "min groups",
+    ]);
+    let mut records = Vec::new();
+    let tag = format!("{dim}d-n{level}");
+    let mut total_hidden_secs = 0.0f64;
+    let mut total_hidden_bytes = 0usize;
+    for m in &measured {
+        let Some(o) = &m.overlap else { continue };
+        let min_groups =
+            o.hidden().map(|p| p.groups_remaining_batch).min().map(|g| g.to_string());
+        t.row(vec![
+            m.rank.to_string(),
+            o.pieces.len().to_string(),
+            o.hidden_pieces().to_string(),
+            human_bytes(o.hidden_bytes()),
+            human_time(o.hidden_secs()),
+            human_time(o.compute_secs),
+            min_groups.clone().unwrap_or_else(|| "-".into()),
+        ]);
+        total_hidden_secs += o.hidden_secs();
+        total_hidden_bytes += o.hidden_bytes();
+        let mut r = record(&format!("rank{}", m.rank), &tag, ranks, o.compute_secs);
+        r.extra.push(("pieces".into(), o.pieces.len() as f64));
+        r.extra.push(("hidden_pieces".into(), o.hidden_pieces() as f64));
+        r.extra.push(("hidden_bytes".into(), o.hidden_bytes() as f64));
+        // the acceptance quantity: communication time hidden behind >= 1
+        // remaining fused tile group
+        r.extra.push(("hidden_secs_behind_groups".into(), o.hidden_secs()));
+        r.extra.push((
+            "min_groups_remaining_hidden".into(),
+            o.hidden().map(|p| p.groups_remaining_batch).min().unwrap_or(0) as f64,
+        ));
+        r.extra.push(("gather_sent_bytes".into(), m.gather_sent_bytes as f64));
+        records.push(r);
+    }
+    t.print();
+
+    let gather_overlap: usize = measured.iter().map(|m| m.gather_sent_bytes).sum();
+    let gather_plain: usize = plain.iter().map(|m| m.gather_sent_bytes).sum();
+    println!(
+        "wall: overlap {} vs plain {}; gather bytes: streamed {} vs pre-summed {} \
+         (per-grid pieces skip the local pre-summing)",
+        human_time(wall_overlap),
+        human_time(wall_plain),
+        human_bytes(gather_overlap),
+        human_bytes(gather_plain),
+    );
+    println!(
+        "hidden behind >= 1 remaining tile group: {} over {} pieces-bytes",
+        human_time(total_hidden_secs),
+        human_bytes(total_hidden_bytes),
+    );
+    println!(
+        "NetModel prediction: gather {} scatter {} time {}",
+        human_bytes(predicted.gather_bytes),
+        human_bytes(predicted.scatter_bytes),
+        human_time(predicted.secs),
+    );
+
+    let mut agg = record("overlap-total", &tag, ranks, wall_overlap);
+    agg.extra.push(("hidden_secs_behind_groups".into(), total_hidden_secs));
+    agg.extra.push(("hidden_bytes".into(), total_hidden_bytes as f64));
+    agg.extra.push(("gather_sent_bytes".into(), gather_overlap as f64));
+    agg.extra.push(("predicted_gather_bytes".into(), predicted.gather_bytes as f64));
+    agg.extra.push(("predicted_scatter_bytes".into(), predicted.scatter_bytes as f64));
+    agg.extra.push(("predicted_secs".into(), predicted.secs));
+    records.push(agg);
+    let mut base = record("plain-total", &tag, ranks, wall_plain);
+    base.extra.push(("gather_sent_bytes".into(), gather_plain as f64));
+    records.push(base);
+    emit("comm_overlap", &records);
+}

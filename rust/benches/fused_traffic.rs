@@ -154,6 +154,17 @@ fn main() {
         roof.streaming_cycles(unfused_bytes) / 1e6,
         roof.streaming_cycles(fused_bytes) / 1e6
     );
+    // measured effective bandwidth of the unfused streaming sweep — the
+    // value to feed back into the autotuner (`fused::autotune` consults it
+    // through `fused::measured_bandwidth`): compute-bound shapes then stay
+    // unfused instead of paying the strided-tile navigation
+    let measured_bw = unfused_bytes as f64 / unfused.secs;
+    println!(
+        "measured effective bandwidth {:.2} GB/s — feed it to the autotuner with:\n  \
+         export SGCT_BENCH_BW={:.0}",
+        measured_bw / 1e9,
+        measured_bw
+    );
 
     let rec = |r: &BenchResult, v: Variant, threads: usize, bytes: u64| {
         sgct::perf::BenchRecord::of(r, v.paper_name(), threads, f)
@@ -163,6 +174,7 @@ fn main() {
             .with_extra("traffic_model_ratio", traffic_ratio(unfused_bytes, fused_bytes))
             .with_extra("fuse_depth", tuned.fuse_depth as f64)
             .with_extra("tile_bytes", tuned.tile_bytes as f64)
+            .with_extra("measured_bw_bytes_per_sec", measured_bw)
     };
     let rec_conv = |r: &BenchResult, policy: ConvertPolicy, bytes: u64| {
         sgct::perf::BenchRecord::of(r, &format!("fused+conv({policy})"), 1, f)

@@ -1,0 +1,44 @@
+//! The combination phase's **data plane**: a transport-backed
+//! reduce/broadcast engine, overlapped with fused hierarchization.
+//!
+//! `coordinator::distributed` *models* the communication phase (placement,
+//! reduction-tree cost, `alpha + bytes/beta`); this module **moves the
+//! bytes**.  Harding et al. (arXiv:1404.2670) identify the gather/scatter
+//! of hierarchical surpluses as the scalability pivot of real combination
+//! -technique deployments — the paper this repo reproduces frames
+//! hierarchization as the step that *enables* that exchange.
+//!
+//! Layers, bottom up:
+//!
+//! * [`wire`] — versioned, length-prefixed, dependency-free encoding of
+//!   sparse-grid subspaces (header + per-subspace level vector + dense
+//!   surplus payload).  Canonical subspace order makes encoding a pure
+//!   function of content, so "bitwise equal" is checkable on bytes.
+//! * [`transport`] — one [`Transport`] trait; [`InProcess`] runs the
+//!   reduction between worker threads, [`UnixSocket`] between real
+//!   processes (`sgct comm-worker` ranks).  Same reduction code either way.
+//! * [`reduce`] — the binary reduction tree (recursive halving, the
+//!   topology `distributed` already models): gather = canonically-grouped
+//!   partial sparse grids summed up the tree, scatter = broadcast + local
+//!   per-grid sampling down it.  Bitwise identical for every rank count
+//!   and transport (see the module docs for the canonical-tree argument).
+//! * [`overlap`] — the fused sweep's group-completion hook: subspaces
+//!   whose remaining axes are all level 1 are final the moment a tile
+//!   group's barrier drops, so childless ranks extract and *send* them
+//!   while later tile groups still hierarchize.  `BENCH_comm_overlap.json`
+//!   reports the communication seconds hidden behind >= 1 remaining group.
+//!
+//! The old cost model is now the **prediction layer**: `sgct reduce`
+//! prints `distributed::estimate`'s bytes/time next to the measured ones.
+
+pub mod overlap;
+pub mod reduce;
+pub mod transport;
+pub mod wire;
+
+pub use overlap::OverlapStats;
+pub use reduce::{
+    rank_ranges, reduce_in_process, reduce_local, run_rank, seeded_block, unix_links, Measured,
+    PairTransport, RankLinks, ReduceOptions, Topology,
+};
+pub use transport::{InProcess, Transport, UnixSocket};

@@ -1,0 +1,330 @@
+//! Compute/communication overlap: ship finished subspaces mid-sweep.
+//!
+//! The paper's thesis is that hierarchization *enables* the combination
+//! technique's communication phase; this module turns that into measured
+//! overlap.  After the fused sweep completes a tile group (axes `0..b`
+//! hierarchized), every grid point whose coordinates on the remaining axes
+//! `b..d` sit on sub-level 1 is **final**: the later dimension sweeps only
+//! rewrite points at sub-level >= 2 of their axis (the pole root keeps its
+//! value).  Those points are exactly the subspaces `s` with `s_j = 1` for
+//! all `j >= b` — so each group boundary releases a *stage* of subspaces
+//! that can be extracted ([`SparseGrid::gather_subspace`], layout-aware,
+//! bitwise the full gather) and pushed onto the wire while later tile
+//! groups are still hierarchizing.  Across a batch the effect compounds:
+//! every grid's pieces (including its final stage) overlap the compute of
+//! all later grids in the rank's block.
+//!
+//! The extraction itself runs synchronously on the sweep leader at the
+//! group barrier (the next group mutates every buffer slot, so reading
+//! concurrently would race); only the *expensive* part — wire encoding,
+//! transport send, remote merge — overlaps.  [`OverlapStats`] reports how
+//! much communication time was hidden behind >= 1 remaining tile group,
+//! the quantity `BENCH_comm_overlap.json` tracks.
+
+use std::time::Instant;
+
+use crate::grid::{AxisLayout, FullGrid, LevelVector};
+use crate::hierarchize::fused::{self, FuseParams};
+use crate::sparse::SparseGrid;
+
+/// Axes-done boundaries after each fused group at depth `k`: `[k, 2k, ..,
+/// d]` — matches the observer callbacks of `fused::hierarchize_observed`.
+pub fn stage_bounds(d: usize, depth: usize) -> Vec<usize> {
+    let k = depth.clamp(1, d);
+    (0..d).step_by(k).map(|a| (a + k).min(d)).collect()
+}
+
+/// Partition the grid's subspaces by the *first* boundary at which they are
+/// final: stage `i` holds the `s <= levels` with `s_j = 1` for all
+/// `j >= bounds[i]` that no earlier stage claimed.  The last bound is `d`,
+/// so the stages partition the full subspace set (pinned by the tests and
+/// the python mirror).
+pub fn stage_subspaces(levels: &LevelVector, bounds: &[usize]) -> Vec<Vec<LevelVector>> {
+    let d = levels.dim();
+    debug_assert_eq!(bounds.last(), Some(&d), "last stage must cover everything");
+    let mut out = vec![Vec::new(); bounds.len()];
+    let mut sub = vec![1u8; d];
+    loop {
+        let stage = bounds
+            .iter()
+            .position(|&b| (b..d).all(|j| sub[j] == 1))
+            .expect("the d-bound stage catches every subspace");
+        out[stage].push(LevelVector::new(&sub));
+        let mut ax = 0;
+        while ax < d {
+            sub[ax] += 1;
+            if sub[ax] <= levels.level(ax) {
+                break;
+            }
+            sub[ax] = 1;
+            ax += 1;
+        }
+        if ax == d {
+            return out;
+        }
+    }
+}
+
+/// Extract one stage: gather the listed subspaces of the (possibly
+/// mid-sweep) grid, `coeff`-weighted, into a fresh sparse grid.  Bitwise
+/// identical to the full gather restricted to the same subspaces (shared
+/// inner loop); the slot tables are built once per stage, not per
+/// subspace — this runs at the group barrier with all workers stalled.
+pub fn extract_stage(g: &FullGrid, coeff: f64, subs: &[LevelVector]) -> SparseGrid {
+    let mut sg = SparseGrid::new();
+    sg.gather_subspaces(g, coeff, subs);
+    sg
+}
+
+/// One extracted piece, ready for the wire.
+#[derive(Debug)]
+pub struct StreamedPiece {
+    /// Global component-grid index.
+    pub grid: usize,
+    /// Axes hierarchized when this piece became final.
+    pub axes_done: usize,
+    /// The stage's coeff-weighted subspaces.
+    pub part: SparseGrid,
+    /// Tile groups still to run on this grid after extraction.
+    pub groups_remaining_grid: usize,
+    /// Tile groups still to run across the whole local block.
+    pub groups_remaining_batch: usize,
+    /// Seconds since the block's compute started, at extraction time.
+    pub enqueued_secs: f64,
+}
+
+/// Hierarchize a block of grids with the fused observed sweep, emitting
+/// each grid's finished-subspace pieces as soon as their group completes.
+/// Grids arrive nodal in position layout and leave hierarchized in the
+/// layout the [`FuseParams`] conversion policy dictates (BFS kernel layout
+/// under `Eager`/`FusedIn`; position under `FusedInOut` — extraction and
+/// the later scatter are layout-aware either way).  A folding policy is
+/// honored: the conversion rides the tile passes, no standalone
+/// `convert_all` sweeps run here.  Empty stages (a group of only level-1
+/// axes finalizes nothing new) are skipped but still counted as completed
+/// groups.  `start` anchors all timestamps (pass the same instant to the
+/// sender so `enqueued`/`sent` share one clock).  Returns the compute wall
+/// time.
+pub fn stream_block(
+    grids: &mut [FullGrid],
+    first_index: usize,
+    coeffs: &[f64],
+    fuse: FuseParams,
+    threads: usize,
+    start: Instant,
+    emit: &mut dyn FnMut(StreamedPiece),
+) -> f64 {
+    assert_eq!(grids.len(), coeffs.len());
+    let total_groups: usize = grids
+        .iter()
+        .map(|g| {
+            let p = fused::resolve_params(g.levels(), fuse);
+            stage_bounds(g.dim(), p.fuse_depth).len()
+        })
+        .sum();
+    let mut done_groups = 0usize;
+    for (gi, g) in grids.iter_mut().enumerate() {
+        let params = fused::resolve_params(g.levels(), fuse);
+        let bounds = stage_bounds(g.dim(), params.fuse_depth);
+        let stages = stage_subspaces(g.levels(), &bounds);
+        if !params.convert.folds_in() {
+            // eager policy: standalone conversion to the BFS kernel layout
+            // (a folding policy gathers it inside the tile passes instead)
+            g.convert_all(AxisLayout::Bfs);
+        }
+        let coeff = coeffs[gi];
+        let mut stage_idx = 0usize;
+        let (done_groups_ref, emit_ref) = (&mut done_groups, &mut *emit);
+        fused::hierarchize_observed(g, params, threads, &mut |mid, axes_done| {
+            debug_assert_eq!(bounds[stage_idx], axes_done, "observer/stage bounds diverged");
+            *done_groups_ref += 1;
+            if !stages[stage_idx].is_empty() {
+                let part = extract_stage(mid, coeff, &stages[stage_idx]);
+                emit_ref(StreamedPiece {
+                    grid: first_index + gi,
+                    axes_done,
+                    part,
+                    groups_remaining_grid: bounds.len() - stage_idx - 1,
+                    groups_remaining_batch: total_groups - *done_groups_ref,
+                    enqueued_secs: start.elapsed().as_secs_f64(),
+                });
+            }
+            stage_idx += 1;
+        });
+    }
+    start.elapsed().as_secs_f64()
+}
+
+/// Send-side timing of one piece (filled in by the reduce engine's sender).
+#[derive(Debug, Clone)]
+pub struct PieceStat {
+    pub grid: usize,
+    pub axes_done: usize,
+    pub bytes: usize,
+    pub subspaces: usize,
+    pub groups_remaining_grid: usize,
+    pub groups_remaining_batch: usize,
+    /// Seconds since compute start when the piece was extracted.
+    pub enqueued_secs: f64,
+    /// Seconds since compute start when the transport send returned.
+    pub sent_secs: f64,
+    /// Wall time the send itself took.
+    pub send_secs: f64,
+}
+
+/// Per-rank overlap telemetry: what was shipped while compute still ran.
+#[derive(Debug, Clone, Default)]
+pub struct OverlapStats {
+    pub pieces: Vec<PieceStat>,
+    /// Local hierarchization wall time (the window sends can hide in).
+    pub compute_secs: f64,
+}
+
+impl OverlapStats {
+    /// Bytes across all pieces.
+    pub fn total_bytes(&self) -> usize {
+        self.pieces.iter().map(|p| p.bytes).sum()
+    }
+
+    /// Send wall time across all pieces.
+    pub fn total_send_secs(&self) -> f64 {
+        self.pieces.iter().map(|p| p.send_secs).sum()
+    }
+
+    /// Pieces whose send completed while >= 1 tile group of the block was
+    /// still to run — communication genuinely hidden behind compute.
+    pub fn hidden(&self) -> impl Iterator<Item = &PieceStat> {
+        self.pieces
+            .iter()
+            .filter(|p| p.sent_secs <= self.compute_secs && p.groups_remaining_batch >= 1)
+    }
+
+    /// Communication seconds hidden behind >= 1 remaining tile group — the
+    /// acceptance quantity of `BENCH_comm_overlap.json`.
+    pub fn hidden_secs(&self) -> f64 {
+        self.hidden().map(|p| p.send_secs).sum()
+    }
+
+    pub fn hidden_bytes(&self) -> usize {
+        self.hidden().map(|p| p.bytes).sum()
+    }
+
+    pub fn hidden_pieces(&self) -> usize {
+        self.hidden().count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hierarchize::{overvec::BfsOverVectorized, prepare, Hierarchizer};
+    use crate::util::rng::SplitMix64;
+
+    fn rand_grid(levels: &[u8], seed: u64) -> FullGrid {
+        let mut g = FullGrid::new(LevelVector::new(levels));
+        let mut rng = SplitMix64::new(seed);
+        g.fill_with(|_| rng.next_f64() - 0.5);
+        g
+    }
+
+    /// Mirror of /tmp/sim_comm.py's stage-partition check: every subspace
+    /// lands in exactly one stage, and the first stage is never empty.
+    #[test]
+    fn stages_partition_the_subspace_set() {
+        let shapes: &[&[u8]] = &[&[3], &[4, 3], &[2, 3, 2], &[3, 1, 2, 2], &[2, 2, 2, 2]];
+        for levels in shapes {
+            let lv = LevelVector::new(levels);
+            let total: usize = levels.iter().map(|&l| l as usize).product();
+            for depth in 1..=levels.len() {
+                let bounds = stage_bounds(levels.len(), depth);
+                assert_eq!(*bounds.last().unwrap(), levels.len());
+                let st = stage_subspaces(&lv, &bounds);
+                assert_eq!(st.len(), bounds.len());
+                let mut seen = std::collections::HashSet::new();
+                for stage in &st {
+                    for s in stage {
+                        assert!(s.le(&lv));
+                        assert!(seen.insert(s.clone()), "{s} in two stages");
+                    }
+                }
+                assert_eq!(seen.len(), total, "{levels:?} depth {depth}");
+                assert!(!st[0].is_empty(), "first stage always holds (1,..,1)");
+            }
+        }
+    }
+
+    /// Streamed pieces reassemble to exactly the full gather, bitwise —
+    /// per grid, across stages, for several depths.
+    #[test]
+    fn streamed_pieces_reassemble_bitwise() {
+        let shapes: &[&[u8]] = &[&[4, 3], &[2, 3, 2], &[3, 1, 2, 2]];
+        for (i, levels) in shapes.iter().enumerate() {
+            let input = rand_grid(levels, 77 + i as u64);
+            let coeff = if i % 2 == 0 { 1.0 } else { -2.0 };
+            let mut reference = input.clone();
+            prepare(&BfsOverVectorized, &mut reference);
+            BfsOverVectorized.hierarchize(&mut reference);
+            let mut want = SparseGrid::new();
+            want.gather(&reference, coeff);
+            for depth in 1..=levels.len() {
+                let mut grids = vec![input.clone()];
+                let mut got = SparseGrid::new();
+                let fuse = FuseParams { fuse_depth: depth, tile_bytes: 256, ..FuseParams::AUTO };
+                stream_block(&mut grids, 9, &[coeff], fuse, 1, Instant::now(), &mut |p| {
+                    assert_eq!(p.grid, 9);
+                    for (l, vals) in p.part.iter_sorted() {
+                        got.insert_subspace(l.clone(), vals.to_vec()).unwrap();
+                    }
+                });
+                assert!(got.bitwise_eq(&want), "{levels:?} depth {depth}");
+                // the sweep itself also stayed bitwise
+                assert_eq!(grids[0].as_slice(), reference.as_slice());
+            }
+        }
+    }
+
+    /// groups_remaining bookkeeping: strictly decreasing across the block,
+    /// ending at zero — the "hidden behind >= 1 group" denominator.
+    #[test]
+    fn remaining_group_counters_are_sound() {
+        let mut grids = vec![rand_grid(&[3, 2], 1), rand_grid(&[2, 3], 2)];
+        let mut remaining = Vec::new();
+        let fuse = FuseParams { fuse_depth: 1, tile_bytes: 1 << 16, ..FuseParams::AUTO };
+        stream_block(&mut grids, 0, &[1.0, 1.0], fuse, 1, Instant::now(), &mut |p| {
+            remaining.push((p.grid, p.groups_remaining_grid, p.groups_remaining_batch));
+        });
+        // depth 1, two 2-d grids -> 4 groups total
+        assert_eq!(
+            remaining,
+            vec![(0, 1, 3), (0, 0, 2), (1, 1, 1), (1, 0, 0)],
+        );
+    }
+
+    #[test]
+    fn overlap_stats_hidden_accounting() {
+        let piece = |sent: f64, rem: usize, secs: f64, bytes: usize| PieceStat {
+            grid: 0,
+            axes_done: 1,
+            bytes,
+            subspaces: 1,
+            groups_remaining_grid: rem,
+            groups_remaining_batch: rem,
+            enqueued_secs: 0.0,
+            sent_secs: sent,
+            send_secs: secs,
+        };
+        let stats = OverlapStats {
+            pieces: vec![
+                piece(0.5, 3, 0.2, 100), // hidden
+                piece(2.0, 1, 0.3, 200), // sent after compute ended
+                piece(0.9, 0, 0.1, 400), // nothing left to hide behind
+            ],
+            compute_secs: 1.0,
+        };
+        assert_eq!(stats.hidden_pieces(), 1);
+        assert_eq!(stats.hidden_bytes(), 100);
+        assert!((stats.hidden_secs() - 0.2).abs() < 1e-12);
+        assert_eq!(stats.total_bytes(), 700);
+        assert!((stats.total_send_secs() - 0.6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,876 @@
+//! The combination step as a real binary reduction tree over transports.
+//!
+//! **Topology.**  Recursive halving, matching what `coordinator::distributed`
+//! models: with `a` active ranks, the high `floor(a/2)` ranks each send
+//! their partial sparse grid to `rank - ceil(a/2)` and drop out;
+//! `ceil(log2 ranks)` rounds reach rank 0 (gather), the same tree reversed
+//! broadcasts the reduced grid back (scatter).
+//!
+//! **Bitwise determinism.**  Floating-point addition is not associative, so
+//! a naive tree reduce would produce different surpluses for different rank
+//! counts.  This engine instead fixes one **canonical summation tree** over
+//! the component grids — a weight-balanced bisection (split point =
+//! [`canon_mid`] on the corrected-Eq.-1 flop weights, independent of the
+//! rank count) — and aligns everything with it:
+//!
+//! * a rank's block is a *subtree* of the canonical tree ([`rank_ranges`]
+//!   assigns the merge tree's leaves, in traversal order, to contiguous
+//!   canonical ranges);
+//! * a rank's local partial is computed with the canonical grouping
+//!   ([`canon_partial`]), not a running left-to-right sum;
+//! * every tree merge puts the receiver — whose leaves precede the
+//!   sender's in canonical order — on the **left** of the elementwise sum
+//!   (`SparseGrid::merge`), and subspaces absent on one side are copied
+//!   bitwise, never added to zero.
+//!
+//! The reduced sparse grid is therefore **bitwise identical for every rank
+//! count and transport** — `reduce over R ranks == reduce_local`, the
+//! property the conformance suite and the `sgct reduce --check` acceptance
+//! path verify, and the reason empty ranks (`ranks > grids`) merge as
+//! no-ops instead of perturbing the sum (validated against the python
+//! mirror's float simulation across R = 1..9).
+//!
+//! **Overlap.**  With [`ReduceOptions::overlap`], childless ranks stream
+//! each grid's finished subspaces ([`super::overlap`]) to their parent
+//! *while later fused tile groups still hierarchize*; the parent reassembles
+//! per-grid pieces (disjoint-subspace inserts — exact) and applies the same
+//! canonical grouping, so overlap changes *when* bytes move, never what the
+//! root computes.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::sync_channel;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::combi::CombinationScheme;
+use crate::coordinator::{dehierarchize_slice, hierarchize_slice, BatchOptions};
+use crate::grid::FullGrid;
+use crate::hierarchize::{FuseParams, ShardStrategy, Variant};
+use crate::sparse::SparseGrid;
+
+use super::overlap::{self, OverlapStats, PieceStat};
+use super::transport::{InProcess, Transport, UnixSocket};
+use super::wire::{self, Message};
+
+// ------------------------------------------------------------- topology
+
+/// The recursive-halving reduction tree over `ranks` endpoints.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    ranks: usize,
+    /// `rounds[k]` = the (sender, receiver) pairs of gather round `k`.
+    rounds: Vec<Vec<(usize, usize)>>,
+}
+
+impl Topology {
+    pub fn new(ranks: usize) -> Self {
+        assert!(ranks >= 1);
+        let mut rounds = Vec::new();
+        let mut a = ranks;
+        while a > 1 {
+            let h = a.div_ceil(2);
+            rounds.push((h..a).map(|i| (i, i - h)).collect());
+            a = h;
+        }
+        Self { ranks, rounds }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Gather rounds, root-bound order; the scatter replays them reversed.
+    pub fn rounds(&self) -> &[Vec<(usize, usize)>] {
+        &self.rounds
+    }
+
+    /// Tree depth: `ceil(log2 ranks)`.
+    pub fn n_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// The rank this one sends its gather partial to (`None` for root 0).
+    pub fn parent(&self, rank: usize) -> Option<usize> {
+        self.rounds
+            .iter()
+            .flatten()
+            .find(|&&(s, _)| s == rank)
+            .map(|&(_, r)| r)
+    }
+
+    /// Ranks that send to this one, in gather-round (= merge) order.
+    pub fn children(&self, rank: usize) -> Vec<usize> {
+        self.rounds
+            .iter()
+            .flatten()
+            .filter(|&&(_, r)| r == rank)
+            .map(|&(s, _)| s)
+            .collect()
+    }
+}
+
+// ----------------------------------------------- canonical summation tree
+
+/// Per-component reduction weights: the corrected-Eq.-1 flop estimates
+/// (deterministic, shape-only — every rank derives the same tree).
+pub fn weights(scheme: &CombinationScheme) -> Vec<u64> {
+    (0..scheme.len()).map(|i| scheme.component_flops(i)).collect()
+}
+
+/// Weight-balanced split of `[lo, hi)` (needs `hi - lo >= 2`): the `m`
+/// minimizing `|W[lo,m) - W[m,hi)|`, ties to the smallest `m`.  This is
+/// the *only* place the canonical tree's shape comes from.
+fn canon_mid(w: &[u64], lo: usize, hi: usize) -> usize {
+    debug_assert!(hi - lo >= 2);
+    let total: u128 = w[lo..hi].iter().map(|&x| x as u128).sum();
+    let mut acc: u128 = 0;
+    let mut best = (lo + 1, u128::MAX);
+    for m in lo + 1..hi {
+        acc += w[m - 1] as u128;
+        let d = (2 * acc).abs_diff(total);
+        if d < best.1 {
+            best = (m, d);
+        }
+    }
+    best.0
+}
+
+/// Canonical partial over components `[lo, hi)`: leaves from `leaf(i)`,
+/// merged with the canonical grouping (receiver/left = lower range).
+/// `None` for an empty range — an empty rank's contribution.
+pub fn canon_partial(
+    w: &[u64],
+    lo: usize,
+    hi: usize,
+    leaf: &mut dyn FnMut(usize) -> SparseGrid,
+) -> Option<SparseGrid> {
+    if hi == lo {
+        return None;
+    }
+    if hi - lo == 1 {
+        return Some(leaf(lo));
+    }
+    let m = canon_mid(w, lo, hi);
+    let left = canon_partial(w, lo, m, leaf);
+    let right = canon_partial(w, m, hi, leaf);
+    merge_opt(left, right)
+}
+
+fn merge_opt(a: Option<SparseGrid>, b: Option<SparseGrid>) -> Option<SparseGrid> {
+    match (a, b) {
+        (None, b) => b,
+        (a, None) => a,
+        (Some(mut a), Some(b)) => {
+            a.merge(&b);
+            Some(a)
+        }
+    }
+}
+
+enum MergeTree {
+    Leaf(usize),
+    Node(Box<MergeTree>, Box<MergeTree>),
+}
+
+fn merge_tree(topo: &Topology) -> MergeTree {
+    let mut trees: Vec<Option<MergeTree>> =
+        (0..topo.ranks()).map(|r| Some(MergeTree::Leaf(r))).collect();
+    for round in topo.rounds() {
+        for &(s, r) in round {
+            let sub = trees[s].take().expect("each rank sends once");
+            let mine = trees[r].take().expect("receiver still active");
+            trees[r] = Some(MergeTree::Node(Box::new(mine), Box::new(sub)));
+        }
+    }
+    trees[0].take().expect("root remains")
+}
+
+fn assign(tree: &MergeTree, lo: usize, hi: usize, w: &[u64], out: &mut Vec<(usize, usize)>) {
+    match tree {
+        MergeTree::Leaf(rank) => out[*rank] = (lo, hi),
+        MergeTree::Node(left, right) => {
+            // fewer than two grids cannot split: left takes everything,
+            // right becomes an empty subtree (ranks > grids edge case)
+            let m = if hi - lo <= 1 { hi } else { canon_mid(w, lo, hi) };
+            assign(left, lo, m, w, out);
+            assign(right, m, hi, w, out);
+        }
+    }
+}
+
+/// Contiguous component block `[lo, hi)` of every rank: the merge tree's
+/// leaves, in traversal order, cut the canonical tree's top — which is
+/// exactly what makes the tree reduction reproduce [`canon_partial`]'s
+/// grouping bit for bit, for every rank count.  Blocks may be empty when
+/// `ranks > grids` (or weights are extreme); empty ranks merge as no-ops.
+pub fn rank_ranges(scheme: &CombinationScheme, ranks: usize) -> Vec<(usize, usize)> {
+    let topo = Topology::new(ranks);
+    let w = weights(scheme);
+    let mut out = vec![(0, 0); ranks];
+    assign(&merge_tree(&topo), 0, scheme.len(), &w, &mut out);
+    out
+}
+
+// ------------------------------------------------------------ local units
+
+/// Which transport [`reduce_in_process`] wires between its rank threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PairTransport {
+    /// Bounded in-memory channels ([`InProcess`]).
+    #[default]
+    Channel,
+    /// Connected Unix-socket pairs (`UnixStream::pair`) — real kernel
+    /// buffers and copies between the rank threads, the overlap bench's
+    /// realistic send-cost case, with no processes or filesystem paths.
+    UnixPair,
+}
+
+/// Options of one reduction run.
+#[derive(Debug, Clone, Copy)]
+pub struct ReduceOptions {
+    /// Worker threads for each rank's local hierarchization.
+    pub threads: usize,
+    /// Pin one hierarchization variant (`None` = per-grid auto-selection).
+    /// The same options must be used on every rank *and* in the local
+    /// reference for the bitwise-equality contract to apply.
+    pub variant: Option<Variant>,
+    /// Fused-sweep knobs (tile budget, depth, conversion policy).
+    pub fuse: FuseParams,
+    /// Childless ranks stream finished subspaces mid-sweep (and every
+    /// rank's local compute switches to the fused sweep so results stay
+    /// bitwise comparable with the non-overlap run of the same variant
+    /// family).
+    pub overlap: bool,
+    /// After the broadcast, scatter the reduced grid onto the local block
+    /// and dehierarchize back to nodal position layout.
+    pub scatter_back: bool,
+    /// In-process transport backpressure bound (messages in flight).
+    pub channel_capacity: usize,
+    /// Transport wired between [`reduce_in_process`] rank threads.
+    pub pair_transport: PairTransport,
+}
+
+impl Default for ReduceOptions {
+    fn default() -> Self {
+        Self {
+            threads: 1,
+            variant: None,
+            fuse: FuseParams::AUTO,
+            overlap: false,
+            scatter_back: true,
+            channel_capacity: 8,
+            pair_transport: PairTransport::Channel,
+        }
+    }
+}
+
+fn batch_opts(opts: &ReduceOptions, to_position: bool) -> BatchOptions {
+    BatchOptions {
+        threads: opts.threads,
+        strategy: ShardStrategy::Auto,
+        variant: if opts.overlap {
+            // overlap streams through the fused observed sweep; the
+            // non-streaming ranks (and the local reference) must
+            // hierarchize identically
+            Some(Variant::BfsOverVectorizedFused)
+        } else {
+            opts.variant
+        },
+        to_position,
+        fuse: opts.fuse,
+    }
+}
+
+fn hierarchize_block(
+    scheme: &CombinationScheme,
+    lo: usize,
+    grids: &mut [FullGrid],
+    opts: &ReduceOptions,
+) {
+    // kernel layout on exit: the gather/scatter are layout-aware
+    hierarchize_slice(scheme, lo, grids, &batch_opts(opts, false));
+}
+
+/// Gather a hierarchized block `[lo, hi)` with the canonical grouping.
+pub fn gather_partial(
+    scheme: &CombinationScheme,
+    lo: usize,
+    hi: usize,
+    grids: &[FullGrid],
+) -> Option<SparseGrid> {
+    assert_eq!(grids.len(), hi - lo);
+    let w = weights(scheme);
+    canon_partial(&w, lo, hi, &mut |i| {
+        let mut sg = SparseGrid::new();
+        sg.gather(&grids[i - lo], scheme.components()[i].coeff);
+        sg
+    })
+}
+
+/// The canonical single-process reference: hierarchize every grid and
+/// reduce with the canonical grouping.  `comm::reduce` over any transport
+/// and rank count is bitwise equal to this (same options).
+pub fn reduce_local(
+    scheme: &CombinationScheme,
+    grids: &mut [FullGrid],
+    opts: &ReduceOptions,
+) -> SparseGrid {
+    assert_eq!(grids.len(), scheme.len());
+    hierarchize_block(scheme, 0, grids, opts);
+    gather_partial(scheme, 0, scheme.len(), grids).unwrap_or_default()
+}
+
+// ------------------------------------------------------------- the ranks
+
+/// A rank's tree links: one parent edge (none at the root), child edges in
+/// gather-round order.
+pub struct RankLinks {
+    pub parent: Option<Box<dyn Transport>>,
+    pub children: Vec<Box<dyn Transport>>,
+}
+
+/// Measured bytes and seconds of one rank's participation — what the
+/// predicted-vs-measured report places next to `distributed::estimate`.
+#[derive(Debug, Clone, Default)]
+pub struct Measured {
+    pub rank: usize,
+    pub grids: usize,
+    /// Local hierarchization (+ overlap extraction) wall time.
+    pub compute_secs: f64,
+    pub gather_sent_bytes: usize,
+    pub gather_recv_bytes: usize,
+    /// Wall time spent inside gather sends/recvs (overlapped sends still
+    /// count — they ran on the sender thread while compute proceeded).
+    pub gather_comm_secs: f64,
+    pub scatter_sent_bytes: usize,
+    pub scatter_recv_bytes: usize,
+    pub scatter_comm_secs: f64,
+    /// Scatter + dehierarchize wall time (when `scatter_back`).
+    pub dehier_secs: f64,
+    pub messages: usize,
+    /// Overlap telemetry (streaming ranks only).
+    pub overlap: Option<OverlapStats>,
+}
+
+/// Receive one child's gather contribution: either a single pre-merged
+/// partial, or (overlap streaming) a piece stream reassembled per grid and
+/// reduced with the canonical grouping over the child's block.
+fn recv_subtree(
+    t: &mut dyn Transport,
+    scheme: &CombinationScheme,
+    w: &[u64],
+    child_range: (usize, usize),
+    m: &mut Measured,
+) -> Result<Option<SparseGrid>> {
+    let (clo, chi) = child_range;
+    let t0 = Instant::now();
+    let first = t.recv()?;
+    m.gather_recv_bytes += first.len();
+    m.messages += 1;
+    let mut msg = wire::decode(&first)?;
+    // piece stream: bucket per grid, then canonical reduce over the block
+    let mut buckets: HashMap<usize, SparseGrid> = HashMap::new();
+    let mut pieces = 0usize;
+    loop {
+        match msg {
+            Message::Partial(sg) => {
+                ensure!(pieces == 0, "partial inside a piece stream");
+                m.gather_comm_secs += t0.elapsed().as_secs_f64();
+                return Ok((sg.subspace_count() > 0).then_some(sg));
+            }
+            Message::Piece { grid, part, .. } => {
+                ensure!(
+                    (clo..chi).contains(&grid),
+                    "piece for grid {grid} outside child block [{clo},{chi})"
+                );
+                let bucket = buckets.entry(grid).or_default();
+                for (l, vals) in part.iter_sorted() {
+                    bucket
+                        .insert_subspace(l.clone(), vals.to_vec())
+                        .map_err(|e| anyhow::anyhow!("grid {grid}: {e}"))?;
+                }
+                pieces += 1;
+            }
+            Message::Done { pieces: want } => {
+                ensure!(pieces == want, "piece stream: got {pieces}, done says {want}");
+                break;
+            }
+        }
+        let buf = t.recv()?;
+        m.gather_recv_bytes += buf.len();
+        m.messages += 1;
+        msg = wire::decode(&buf)?;
+    }
+    // completeness: every grid of the block fully covered by its pieces
+    for i in clo..chi {
+        let expected: usize =
+            (0..scheme.dim()).map(|ax| scheme.components()[i].levels.level(ax) as usize).product();
+        let got = buckets.get(&i).map(|b| b.subspace_count()).unwrap_or(0);
+        ensure!(got == expected, "grid {i}: {got} of {expected} subspaces streamed");
+    }
+    let out = canon_partial(w, clo, chi, &mut |i| buckets.remove(&i).expect("validated above"));
+    m.gather_comm_secs += t0.elapsed().as_secs_f64();
+    Ok(out)
+}
+
+/// Overlap streaming: hierarchize the block while a sender thread ships
+/// each finished piece to the parent; ends the stream with a `done` marker.
+fn stream_and_send(
+    parent: &mut dyn Transport,
+    scheme: &CombinationScheme,
+    lo: usize,
+    grids: &mut [FullGrid],
+    opts: &ReduceOptions,
+    m: &mut Measured,
+) -> Result<()> {
+    let dim = scheme.dim();
+    let coeffs: Vec<f64> = (lo..lo + grids.len())
+        .map(|i| scheme.components()[i].coeff)
+        .collect();
+    struct Meta {
+        grid: usize,
+        axes_done: usize,
+        subspaces: usize,
+        groups_remaining_grid: usize,
+        groups_remaining_batch: usize,
+        enqueued_secs: f64,
+    }
+    let (tx, rx) = sync_channel::<(Meta, Vec<u8>)>(opts.channel_capacity.max(1));
+    let start = Instant::now();
+    let (compute_secs, sent) = std::thread::scope(|s| {
+        let sender = s.spawn(move || -> Result<(Vec<PieceStat>, usize, f64)> {
+            let mut stats = Vec::new();
+            let (mut bytes, mut secs) = (0usize, 0.0f64);
+            for (meta, buf) in rx {
+                let t0 = Instant::now();
+                parent.send(&buf)?;
+                let send_secs = t0.elapsed().as_secs_f64();
+                bytes += buf.len();
+                secs += send_secs;
+                stats.push(PieceStat {
+                    grid: meta.grid,
+                    axes_done: meta.axes_done,
+                    bytes: buf.len(),
+                    subspaces: meta.subspaces,
+                    groups_remaining_grid: meta.groups_remaining_grid,
+                    groups_remaining_batch: meta.groups_remaining_batch,
+                    enqueued_secs: meta.enqueued_secs,
+                    sent_secs: start.elapsed().as_secs_f64(),
+                    send_secs,
+                });
+            }
+            let done = wire::encode_done(stats.len(), dim);
+            let t0 = Instant::now();
+            parent.send(&done)?;
+            bytes += done.len();
+            secs += t0.elapsed().as_secs_f64();
+            Ok((stats, bytes, secs))
+        });
+        let compute_secs =
+            overlap::stream_block(grids, lo, &coeffs, opts.fuse, opts.threads, start, &mut |p| {
+                let buf = wire::encode_piece(p.grid, p.axes_done, &p.part, dim);
+                let meta = Meta {
+                    grid: p.grid,
+                    axes_done: p.axes_done,
+                    subspaces: p.part.subspace_count(),
+                    groups_remaining_grid: p.groups_remaining_grid,
+                    groups_remaining_batch: p.groups_remaining_batch,
+                    enqueued_secs: p.enqueued_secs,
+                };
+                // a dead sender (broken transport) surfaces via its join
+                // result below; compute cannot abort mid-sweep anyway
+                let _ = tx.send((meta, buf));
+            });
+        drop(tx);
+        (compute_secs, sender.join().expect("sender thread panicked"))
+    });
+    let (stats, bytes, secs) = sent?;
+    m.compute_secs = compute_secs;
+    m.gather_sent_bytes += bytes;
+    m.gather_comm_secs += secs;
+    m.messages += stats.len() + 1;
+    m.overlap = Some(OverlapStats { pieces: stats, compute_secs });
+    Ok(())
+}
+
+/// Run one rank of the reduction: local compute, gather up the tree,
+/// broadcast down, optional local scatter + dehierarchize.  Returns the
+/// reduced sparse grid (every rank holds it after the broadcast) plus this
+/// rank's measurements.
+///
+/// `grids` is this rank's canonical block (`rank_ranges`), nodal values in
+/// position layout; with `scatter_back` they end nodal in position layout
+/// again, holding the combined solution.
+pub fn run_rank(
+    scheme: &CombinationScheme,
+    rank: usize,
+    ranks: usize,
+    grids: &mut [FullGrid],
+    links: &mut RankLinks,
+    opts: &ReduceOptions,
+) -> Result<(SparseGrid, Measured)> {
+    let topo = Topology::new(ranks);
+    ensure!(rank < ranks, "rank {rank} out of range");
+    ensure!(
+        links.children.len() == topo.children(rank).len(),
+        "rank {rank}: {} child links, topology says {}",
+        links.children.len(),
+        topo.children(rank).len()
+    );
+    ensure!(
+        links.parent.is_some() == topo.parent(rank).is_some(),
+        "rank {rank}: parent link does not match the topology"
+    );
+    let ranges = rank_ranges(scheme, ranks);
+    let (lo, hi) = ranges[rank];
+    ensure!(
+        grids.len() == hi - lo,
+        "rank {rank}: {} grids, block [{lo},{hi}) wants {}",
+        grids.len(),
+        hi - lo
+    );
+    let w = weights(scheme);
+    let dim = scheme.dim();
+    let mut m = Measured { rank, grids: grids.len(), ..Default::default() };
+
+    // ---- local compute (streaming ranks overlap their sends with it) ----
+    let streaming = opts.overlap && links.children.is_empty() && links.parent.is_some();
+    let mut mine: Option<SparseGrid> = None;
+    if streaming {
+        stream_and_send(links.parent.as_mut().unwrap().as_mut(), scheme, lo, grids, opts, &mut m)?;
+    } else {
+        let t0 = Instant::now();
+        if !grids.is_empty() {
+            hierarchize_block(scheme, lo, grids, opts);
+        }
+        m.compute_secs = t0.elapsed().as_secs_f64();
+        mine = gather_partial(scheme, lo, hi, grids);
+    }
+
+    // ---- gather: merge children (round order), send up ----
+    let child_ids = topo.children(rank);
+    for (link, &child) in links.children.iter_mut().zip(&child_ids) {
+        let sub = recv_subtree(link.as_mut(), scheme, &w, ranges[child], &mut m)?;
+        // receiver (lower canonical range) stays the left operand
+        mine = merge_opt(mine, sub);
+    }
+    if let Some(parent) = links.parent.as_mut() {
+        if !streaming {
+            let empty = SparseGrid::new();
+            let payload = wire::encode_partial(mine.as_ref().unwrap_or(&empty), dim);
+            let t0 = Instant::now();
+            parent.send(&payload)?;
+            m.gather_comm_secs += t0.elapsed().as_secs_f64();
+            m.gather_sent_bytes += payload.len();
+            m.messages += 1;
+        }
+    }
+
+    // ---- scatter: receive the reduced grid, broadcast down reversed ----
+    let full = if let Some(parent) = links.parent.as_mut() {
+        let t0 = Instant::now();
+        let buf = parent.recv()?;
+        m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+        m.scatter_recv_bytes += buf.len();
+        m.messages += 1;
+        match wire::decode(&buf)? {
+            Message::Partial(sg) => sg,
+            other => bail!("scatter expected a partial, got {other:?}"),
+        }
+    } else {
+        mine.take().unwrap_or_default()
+    };
+    let payload = wire::encode_partial(&full, dim);
+    for link in links.children.iter_mut().rev() {
+        let t0 = Instant::now();
+        link.send(&payload)?;
+        m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+        m.scatter_sent_bytes += payload.len();
+        m.messages += 1;
+    }
+
+    // ---- apply locally: per-grid sampling + dehierarchization ----
+    if opts.scatter_back && !grids.is_empty() {
+        let t0 = Instant::now();
+        for g in grids.iter_mut() {
+            // grids still hold the kernel layout from the hierarchization;
+            // scatter writes straight into it through the slot tables
+            full.scatter(g);
+        }
+        dehierarchize_slice(scheme, lo, grids, &batch_opts(opts, true));
+        m.dehier_secs = t0.elapsed().as_secs_f64();
+    }
+    Ok((full, m))
+}
+
+// ------------------------------------------------------------ the drivers
+
+/// Run the whole reduction in one process: `ranks` worker threads connected
+/// by [`InProcess`] channel pairs, grids partitioned by [`rank_ranges`].
+/// Returns the reduced sparse grid and every rank's measurements (rank
+/// order).  With `scatter_back`, `grids` end holding the combined solution.
+pub fn reduce_in_process(
+    scheme: &CombinationScheme,
+    grids: &mut [FullGrid],
+    ranks: usize,
+    opts: &ReduceOptions,
+) -> Result<(SparseGrid, Vec<Measured>)> {
+    ensure!(grids.len() == scheme.len(), "one grid per scheme component");
+    let topo = Topology::new(ranks);
+    let ranges = rank_ranges(scheme, ranks);
+
+    // contiguous split of the grid storage in canonical (range) order
+    let mut blocks: Vec<&mut [FullGrid]> = Vec::new();
+    blocks.resize_with(ranks, Default::default);
+    {
+        let mut order: Vec<usize> = (0..ranks).collect();
+        order.sort_by_key(|&r| ranges[r].0);
+        let mut rest = grids;
+        let mut cursor = 0usize;
+        for &r in &order {
+            let (lo, hi) = ranges[r];
+            debug_assert_eq!(lo, cursor, "ranges must tile the components");
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+            blocks[r] = head;
+            rest = tail;
+            cursor = hi;
+        }
+        debug_assert_eq!(cursor, scheme.len());
+    }
+
+    // transports per tree edge
+    let mut links: Vec<RankLinks> = (0..ranks)
+        .map(|_| RankLinks { parent: None, children: Vec::new() })
+        .collect();
+    for round in topo.rounds() {
+        for &(s, r) in round {
+            let (child_end, parent_end): (Box<dyn Transport>, Box<dyn Transport>) =
+                match opts.pair_transport {
+                    PairTransport::Channel => {
+                        let (a, b) = InProcess::pair(opts.channel_capacity);
+                        (Box::new(a), Box::new(b))
+                    }
+                    PairTransport::UnixPair => {
+                        let (a, b) = std::os::unix::net::UnixStream::pair()
+                            .context("socketpair for rank edge")?;
+                        (
+                            Box::new(UnixSocket::from_stream(a)),
+                            Box::new(UnixSocket::from_stream(b)),
+                        )
+                    }
+                };
+            links[s].parent = Some(child_end);
+            links[r].children.push(parent_end);
+        }
+    }
+
+    let measured: Mutex<Vec<Measured>> = Mutex::new(Vec::with_capacity(ranks));
+    let mut root_sparse: Option<SparseGrid> = None;
+    let root_ref = &mut root_sparse;
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        let mut rank_inputs: Vec<_> = blocks.into_iter().zip(links).enumerate().collect();
+        // spawn high ranks; rank 0 (the root) runs on this thread
+        let (zero_rank, (zero_block, mut zero_links)) = rank_inputs.remove(0);
+        debug_assert_eq!(zero_rank, 0);
+        for (rank, (block, mut rl)) in rank_inputs {
+            let measured = &measured;
+            handles.push(s.spawn(move || -> Result<()> {
+                let (_, m) = run_rank(scheme, rank, ranks, block, &mut rl, opts)?;
+                measured.lock().unwrap().push(m);
+                Ok(())
+            }));
+        }
+        let (sparse, m0) = run_rank(scheme, 0, ranks, zero_block, &mut zero_links, opts)?;
+        measured.lock().unwrap().push(m0);
+        *root_ref = Some(sparse);
+        for h in handles {
+            h.join().expect("rank thread panicked")?;
+        }
+        Ok(())
+    })?;
+    let mut ms = measured.into_inner().unwrap();
+    ms.sort_by_key(|m| m.rank);
+    Ok((root_sparse.expect("root produces the reduced grid"), ms))
+}
+
+/// Socket path of the tree edge above `child` (each non-root rank has
+/// exactly one parent edge; the parent binds, the child connects).
+pub fn edge_path(dir: &Path, child: usize) -> PathBuf {
+    dir.join(format!("edge_{child}.sock"))
+}
+
+/// Establish this rank's Unix-socket links inside `dir`: bind listeners
+/// for every child edge *first* (so child connects can never race the
+/// bind), then connect up to the parent (retrying while it starts), then
+/// accept the children in round order.
+pub fn unix_links(dir: &Path, rank: usize, ranks: usize, timeout: Duration) -> Result<RankLinks> {
+    let topo = Topology::new(ranks);
+    let listeners: Vec<_> = topo
+        .children(rank)
+        .iter()
+        .map(|&c| UnixSocket::bind(&edge_path(dir, c)))
+        .collect::<Result<_>>()?;
+    let parent: Option<Box<dyn Transport>> = match topo.parent(rank) {
+        None => None,
+        Some(_) => Some(Box::new(
+            UnixSocket::connect_retry(&edge_path(dir, rank), timeout)
+                .with_context(|| format!("rank {rank}: parent edge"))?,
+        )),
+    };
+    let children = listeners
+        .iter()
+        .map(|l| UnixSocket::accept_one(l).map(|s| Box::new(s) as Box<dyn Transport>))
+        .collect::<Result<_>>()?;
+    Ok(RankLinks { parent, children })
+}
+
+/// Build the deterministic component grids of one rank's block: the same
+/// seeded nodal fill on every process (`seed + global component index`),
+/// which is how `sgct comm-worker` ranks agree on the problem without
+/// shipping initial data.
+pub fn seeded_block(scheme: &CombinationScheme, lo: usize, hi: usize, seed: u64) -> Vec<FullGrid> {
+    (lo..hi)
+        .map(|i| {
+            let mut g = FullGrid::new(scheme.components()[i].levels.clone());
+            let mut rng = crate::util::rng::SplitMix64::new(seed.wrapping_add(i as u64));
+            g.fill_with(|_| rng.next_f64() - 0.5);
+            g
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn topology_matches_recursive_halving() {
+        let t = Topology::new(8);
+        assert_eq!(t.n_rounds(), 3);
+        assert_eq!(t.rounds()[0], vec![(4, 0), (5, 1), (6, 2), (7, 3)]);
+        assert_eq!(t.rounds()[1], vec![(2, 0), (3, 1)]);
+        assert_eq!(t.rounds()[2], vec![(1, 0)]);
+        assert_eq!(t.parent(0), None);
+        assert_eq!(t.parent(3), Some(1));
+        assert_eq!(t.parent(7), Some(3));
+        assert_eq!(t.children(0), vec![4, 2, 1]);
+        assert_eq!(t.children(1), vec![5, 3]);
+        assert_eq!(t.children(7), Vec::<usize>::new());
+        // odd rank count: ceil halving
+        let t = Topology::new(5);
+        assert_eq!(t.n_rounds(), 3);
+        assert_eq!(t.rounds()[0], vec![(3, 0), (4, 1)]);
+        assert_eq!(Topology::new(1).n_rounds(), 0);
+    }
+
+    #[test]
+    fn ranges_tile_the_components() {
+        let scheme = CombinationScheme::regular(3, 5);
+        for ranks in 1..=9 {
+            let rr = rank_ranges(&scheme, ranks);
+            let mut sorted = rr.clone();
+            sorted.sort();
+            assert_eq!(sorted[0].0, 0);
+            assert_eq!(sorted.last().unwrap().1, scheme.len());
+            for w in sorted.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap/overlap at {w:?}");
+            }
+        }
+        // power-of-two ranks on a real scheme: nobody starves
+        for ranks in [1usize, 2, 4, 8] {
+            let rr = rank_ranges(&scheme, ranks);
+            assert!(rr.iter().all(|&(lo, hi)| hi > lo), "x{ranks}: {rr:?}");
+        }
+        // more ranks than grids: the tail is empty, nothing panics
+        let tiny = CombinationScheme::regular(2, 2);
+        let rr = rank_ranges(&tiny, 8);
+        assert_eq!(rr.iter().map(|&(lo, hi)| hi - lo).sum::<usize>(), tiny.len());
+    }
+
+    /// The heart of the engine (mirrors /tmp/sim_comm.py): the in-process
+    /// tree reduction is bitwise identical to the canonical local
+    /// reference for every rank count, including ranks > grids.
+    #[test]
+    fn in_process_reduce_bitwise_for_every_rank_count() {
+        let scheme = CombinationScheme::regular(2, 4);
+        let n = scheme.len();
+        let make = || seeded_block(&scheme, 0, n, 1000);
+        let opts = ReduceOptions { scatter_back: false, ..Default::default() };
+        let mut reference = make();
+        let want = reduce_local(&scheme, &mut reference, &opts);
+        for transport in [PairTransport::Channel, PairTransport::UnixPair] {
+            for ranks in [1usize, 2, 3, 4, 5, 8, n + 3] {
+                let opts = ReduceOptions { pair_transport: transport, ..opts };
+                let mut grids = make();
+                let (got, ms) = reduce_in_process(&scheme, &mut grids, ranks, &opts).unwrap();
+                assert!(got.bitwise_eq(&want), "x{ranks} {transport:?} diverged");
+                assert_eq!(ms.len(), ranks);
+                // hierarchized grids equal the reference's, block by block
+                for (g, r) in grids.iter().zip(&reference) {
+                    assert_eq!(g.as_slice(), r.as_slice(), "x{ranks} {transport:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_back_round_trips_the_block() {
+        let scheme = CombinationScheme::regular(2, 3);
+        let input = seeded_block(&scheme, 0, scheme.len(), 7);
+        let mut grids = input.clone();
+        let opts = ReduceOptions::default();
+        let (sparse, ms) = reduce_in_process(&scheme, &mut grids, 3, &opts).unwrap();
+        assert!(sparse.point_count() > 0);
+        assert!(ms.iter().all(|m| m.messages > 0 || m.rank == 0 && ms.len() == 1));
+        // gather . scatter == projection: a second reduce reproduces the
+        // sparse grid exactly on the projected data
+        let (sparse2, _) = reduce_in_process(&scheme, &mut grids, 3, &opts).unwrap();
+        for (l, v) in sparse.iter() {
+            let w = sparse2.subspace(l).unwrap();
+            for (a, b) in v.iter().zip(w) {
+                assert!((a - b).abs() < 1e-10, "subspace {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_streaming_is_bitwise_equal_to_plain() {
+        let scheme = CombinationScheme::regular(3, 4);
+        let n = scheme.len();
+        let opts_plain = ReduceOptions {
+            variant: Some(Variant::BfsOverVectorizedFused),
+            scatter_back: false,
+            ..Default::default()
+        };
+        let mut reference = seeded_block(&scheme, 0, n, 5);
+        let want = reduce_local(&scheme, &mut reference, &opts_plain);
+        for ranks in [2usize, 4] {
+            let opts = ReduceOptions { overlap: true, scatter_back: false, ..Default::default() };
+            let mut grids = seeded_block(&scheme, 0, n, 5);
+            let (got, ms) = reduce_in_process(&scheme, &mut grids, ranks, &opts).unwrap();
+            assert!(got.bitwise_eq(&want), "x{ranks} overlap diverged");
+            // at least one childless rank actually streamed pieces
+            let streamed: usize =
+                ms.iter().filter_map(|m| m.overlap.as_ref()).map(|o| o.pieces.len()).sum();
+            assert!(streamed > 0, "no pieces streamed");
+        }
+    }
+
+    #[test]
+    fn weights_drive_a_deterministic_mid() {
+        let w = [5u64, 5, 5, 5];
+        assert_eq!(canon_mid(&w, 0, 4), 2);
+        assert_eq!(canon_mid(&w, 1, 4), 2, "ties resolve to the smallest m");
+        let skew = [100u64, 1, 1, 1];
+        assert_eq!(canon_mid(&skew, 0, 4), 1);
+        let mut rng = SplitMix64::new(3);
+        let rand: Vec<u64> = (0..9).map(|_| rng.next_range(1, 1000)).collect();
+        let m = canon_mid(&rand, 0, 9);
+        assert!((1..9).contains(&m));
+    }
+}

@@ -1,0 +1,190 @@
+//! Pluggable message transports for the reduction tree.
+//!
+//! One trait, two implementations, one reduction code path
+//! (`comm::reduce` never knows which it runs on):
+//!
+//! * [`InProcess`] — a pair of bounded channels between worker threads of
+//!   one process.  The bound supplies backpressure (a sender racing ahead
+//!   of a slow receiver blocks), mirroring a socket's send buffer.
+//! * [`UnixSocket`] — length-prefixed frames over a Unix-domain stream
+//!   socket between real processes (the `sgct comm-worker` ranks).
+//!
+//! Frames are `u32 le` length + payload; the payload is a `comm::wire`
+//! message, which is itself versioned and self-validating — the frame
+//! length is transport plumbing, not the format's integrity story.
+
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+/// Largest accepted frame (1 GiB) — rejects garbage length prefixes before
+/// they become allocations.
+pub const MAX_FRAME: usize = 1 << 30;
+
+/// A bidirectional, ordered, reliable message link between two ranks.
+pub trait Transport: Send {
+    /// Send one message (blocking; backpressure applies).
+    fn send(&mut self, msg: &[u8]) -> Result<()>;
+    /// Receive the next message (blocking).
+    fn recv(&mut self) -> Result<Vec<u8>>;
+}
+
+/// In-process transport: a pair of bounded byte-vector channels.
+pub struct InProcess {
+    tx: SyncSender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl InProcess {
+    /// A connected pair of endpoints; each direction buffers up to
+    /// `capacity` in-flight messages before `send` blocks.
+    pub fn pair(capacity: usize) -> (InProcess, InProcess) {
+        let (atx, brx) = sync_channel(capacity.max(1));
+        let (btx, arx) = sync_channel(capacity.max(1));
+        (InProcess { tx: atx, rx: arx }, InProcess { tx: btx, rx: brx })
+    }
+}
+
+impl Transport for InProcess {
+    fn send(&mut self, msg: &[u8]) -> Result<()> {
+        self.tx.send(msg.to_vec()).map_err(|_| anyhow::anyhow!("peer endpoint dropped"))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("peer endpoint dropped"))
+    }
+}
+
+/// Unix-domain-socket transport: length-prefixed frames over one stream.
+pub struct UnixSocket {
+    stream: UnixStream,
+}
+
+impl UnixSocket {
+    pub fn from_stream(stream: UnixStream) -> Self {
+        Self { stream }
+    }
+
+    /// Connect to `path`, retrying until the listener exists (the peer
+    /// rank may still be starting up) or `timeout` elapses.
+    pub fn connect_retry(path: &Path, timeout: Duration) -> Result<Self> {
+        let start = Instant::now();
+        loop {
+            match UnixStream::connect(path) {
+                Ok(s) => return Ok(Self { stream: s }),
+                Err(e) => {
+                    if start.elapsed() > timeout {
+                        return Err(e).with_context(|| {
+                            format!("connect {} (gave up after {timeout:?})", path.display())
+                        });
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+    }
+
+    /// Bind a fresh listener at `path` (any stale socket file is removed —
+    /// paths live in a per-run temp directory).
+    pub fn bind(path: &Path) -> Result<UnixListener> {
+        let _ = std::fs::remove_file(path);
+        UnixListener::bind(path).with_context(|| format!("bind {}", path.display()))
+    }
+
+    /// Accept one connection.
+    pub fn accept_one(listener: &UnixListener) -> Result<Self> {
+        let (stream, _) = listener.accept().context("accept")?;
+        Ok(Self { stream })
+    }
+}
+
+impl Transport for UnixSocket {
+    fn send(&mut self, msg: &[u8]) -> Result<()> {
+        ensure!(msg.len() <= MAX_FRAME, "frame {} > MAX_FRAME", msg.len());
+        let len = (msg.len() as u32).to_le_bytes();
+        self.stream.write_all(&len).context("write frame length")?;
+        self.stream.write_all(msg).context("write frame body")?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len).context("read frame length")?;
+        let len = u32::from_le_bytes(len) as usize;
+        ensure!(len <= MAX_FRAME, "frame length {len} > MAX_FRAME");
+        let mut buf = vec![0u8; len];
+        self.stream.read_exact(&mut buf).context("read frame body")?;
+        Ok(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_process_pair_is_bidirectional_and_ordered() {
+        let (mut a, mut b) = InProcess::pair(2);
+        a.send(b"one").unwrap();
+        a.send(b"two").unwrap();
+        b.send(b"ack").unwrap();
+        assert_eq!(b.recv().unwrap(), b"one");
+        assert_eq!(b.recv().unwrap(), b"two");
+        assert_eq!(a.recv().unwrap(), b"ack");
+    }
+
+    #[test]
+    fn in_process_dropped_peer_errors() {
+        let (mut a, b) = InProcess::pair(1);
+        drop(b);
+        assert!(a.send(b"x").is_err());
+        assert!(a.recv().is_err());
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // sockets need a real OS
+    fn unix_socket_frames_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sgct_ts_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.sock");
+        let listener = UnixSocket::bind(&path).unwrap();
+        let big: Vec<u8> = (0..100_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        let big2 = big.clone();
+        let path2 = path.clone();
+        let client = std::thread::spawn(move || {
+            let mut t = UnixSocket::connect_retry(&path2, Duration::from_secs(5)).unwrap();
+            t.send(b"hello").unwrap();
+            t.send(&big2).unwrap();
+            assert_eq!(t.recv().unwrap(), b"bye");
+        });
+        let mut server = UnixSocket::accept_one(&listener).unwrap();
+        assert_eq!(server.recv().unwrap(), b"hello");
+        assert_eq!(server.recv().unwrap(), big);
+        server.send(b"bye").unwrap();
+        client.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn unix_socket_rejects_oversized_length_prefix() {
+        let dir = std::env::temp_dir().join(format!("sgct_tso_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("o.sock");
+        let listener = UnixSocket::bind(&path).unwrap();
+        let path2 = path.clone();
+        let client = std::thread::spawn(move || {
+            let mut s = UnixStream::connect(&path2).unwrap();
+            // 2 GiB length prefix: must be rejected without allocating
+            s.write_all(&(2u32 << 30).to_le_bytes()).unwrap();
+        });
+        let mut server = UnixSocket::accept_one(&listener).unwrap();
+        assert!(server.recv().is_err());
+        client.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

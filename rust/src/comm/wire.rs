@@ -1,0 +1,322 @@
+//! Compact wire format for sparse-grid subspace payloads.
+//!
+//! Every message is self-delimiting and versioned, with zero external
+//! dependencies (the offline crate set has no serde):
+//!
+//! ```text
+//! offset  field
+//! 0       magic  b"SGCW"
+//! 4       version u16 le       (currently 1)
+//! 6       kind    u8           (1 = partial, 2 = piece, 3 = done)
+//! 7       dim     u8           (1 ..= grid::MAX_DIM)
+//! 8       len     u32 le       (total message length, including header)
+//! 12      kind-specific body
+//! ```
+//!
+//! * **partial** — a whole (partial) sparse grid: `count u32`, then `count`
+//!   subspace blocks.  The reduction tree's merge messages.
+//! * **piece** — one grid's early-final subspaces, streamed while later
+//!   fused tile groups still hierarchize: `grid u32`, `axes_done u8`,
+//!   `count u32`, blocks.  The overlap engine's unit.
+//! * **done** — end of a piece stream: `pieces u32` (validation count).
+//!
+//! A subspace block is `dim` level bytes (each `1..=30`) followed by the
+//! dense row-major surplus payload, `prod 2^(l_i - 1)` f64 little-endian —
+//! the level vector *is* the length prefix of its payload.  Blocks are
+//! emitted in the canonical level-vector order, so encoding is a pure
+//! function of the sparse grid's contents: equal grids encode to equal
+//! bytes, and `encode(decode(bytes)) == bytes` for any valid message —
+//! which is how the conformance suites compare reduced grids bitwise.
+//!
+//! The decoder validates everything (magic, version, kind, dimension,
+//! level ranges, length arithmetic, duplicate subspaces) and rejects
+//! truncated or corrupt input with an error, never a panic.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::grid::{LevelVector, MAX_DIM};
+use crate::sparse::SparseGrid;
+
+/// Wire magic: "Sparse Grid Combination Wire".
+pub const MAGIC: [u8; 4] = *b"SGCW";
+/// Current wire version.
+pub const VERSION: u16 = 1;
+
+const KIND_PARTIAL: u8 = 1;
+const KIND_PIECE: u8 = 2;
+const KIND_DONE: u8 = 3;
+
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 12;
+
+/// A decoded message.
+#[derive(Debug)]
+pub enum Message {
+    /// A (partial) sparse grid — the reduction tree's merge unit.
+    Partial(SparseGrid),
+    /// One grid's early-final subspaces (overlap streaming).
+    Piece { grid: usize, axes_done: usize, part: SparseGrid },
+    /// End of a piece stream; `pieces` counts the preceding piece messages.
+    Done { pieces: usize },
+}
+
+fn header(kind: u8, dim: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(dim as u8);
+    out.extend_from_slice(&0u32.to_le_bytes()); // length patched by seal()
+    out
+}
+
+fn seal(mut out: Vec<u8>) -> Vec<u8> {
+    let len = u32::try_from(out.len()).expect("message > 4 GiB");
+    out[8..12].copy_from_slice(&len.to_le_bytes());
+    out
+}
+
+fn push_subspaces(out: &mut Vec<u8>, sg: &SparseGrid, dim: usize) {
+    let sorted = sg.iter_sorted();
+    out.extend_from_slice(&u32::try_from(sorted.len()).unwrap().to_le_bytes());
+    for (l, vals) in sorted {
+        debug_assert_eq!(l.dim(), dim, "mixed-dimension sparse grid");
+        out.extend_from_slice(l.as_slice());
+        for v in vals {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Encode a (partial) sparse grid.  `dim` must be the scheme dimension —
+/// an empty partial still carries it (a starved rank's message).
+pub fn encode_partial(sg: &SparseGrid, dim: usize) -> Vec<u8> {
+    let mut out = header(KIND_PARTIAL, dim);
+    push_subspaces(&mut out, sg, dim);
+    seal(out)
+}
+
+/// Encode one overlap piece: component grid index, axes hierarchized so
+/// far, and the subspaces that became final at that boundary.
+pub fn encode_piece(grid: usize, axes_done: usize, part: &SparseGrid, dim: usize) -> Vec<u8> {
+    let mut out = header(KIND_PIECE, dim);
+    out.extend_from_slice(&u32::try_from(grid).unwrap().to_le_bytes());
+    out.push(axes_done as u8);
+    push_subspaces(&mut out, part, dim);
+    seal(out)
+}
+
+/// Encode the end-of-stream marker of an overlap piece stream.
+pub fn encode_done(pieces: usize, dim: usize) -> Vec<u8> {
+    let mut out = header(KIND_DONE, dim);
+    out.extend_from_slice(&u32::try_from(pieces).unwrap().to_le_bytes());
+    seal(out)
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.buf.len() - self.pos,
+            "truncated message: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn decode_subspaces(r: &mut Reader<'_>, dim: usize) -> Result<SparseGrid> {
+    let count = r.u32()? as usize;
+    let mut sg = SparseGrid::new();
+    for _ in 0..count {
+        let levels = r.take(dim)?;
+        for (i, &l) in levels.iter().enumerate() {
+            ensure!((1..=30).contains(&l), "subspace level l_{} = {l} out of range", i + 1);
+        }
+        let mut n = 1usize;
+        for &l in levels {
+            n = n
+                .checked_mul(1usize << (l - 1))
+                .ok_or_else(|| anyhow::anyhow!("subspace size overflow"))?;
+        }
+        let lv = LevelVector::new(levels);
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            vals.push(r.f64()?);
+        }
+        sg.insert_subspace(lv, vals).map_err(|e| anyhow::anyhow!("corrupt message: {e}"))?;
+    }
+    ensure!(r.pos == r.buf.len(), "{} trailing bytes after last subspace", r.buf.len() - r.pos);
+    Ok(sg)
+}
+
+/// Decode one message; rejects anything malformed.
+pub fn decode(buf: &[u8]) -> Result<Message> {
+    let mut r = Reader { buf, pos: 0 };
+    let magic = r.take(4)?;
+    ensure!(magic == MAGIC, "bad magic {magic:02x?}");
+    let version = r.u16()?;
+    ensure!(version == VERSION, "unsupported wire version {version}");
+    let kind = r.u8()?;
+    let dim = r.u8()? as usize;
+    ensure!((1..=MAX_DIM).contains(&dim), "dimension {dim} out of range");
+    let len = r.u32()? as usize;
+    ensure!(len == buf.len(), "length field {len} != message length {}", buf.len());
+    match kind {
+        KIND_PARTIAL => Ok(Message::Partial(decode_subspaces(&mut r, dim)?)),
+        KIND_PIECE => {
+            let grid = r.u32()? as usize;
+            let axes_done = r.u8()? as usize;
+            ensure!(axes_done <= dim, "axes_done {axes_done} > dim {dim}");
+            Ok(Message::Piece { grid, axes_done, part: decode_subspaces(&mut r, dim)? })
+        }
+        KIND_DONE => {
+            let pieces = r.u32()? as usize;
+            ensure!(r.pos == buf.len(), "trailing bytes after done marker");
+            Ok(Message::Done { pieces })
+        }
+        other => bail!("unknown message kind {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::FullGrid;
+    use crate::hierarchize::{func::Func, Hierarchizer};
+    use crate::util::rng::SplitMix64;
+
+    fn sample_sparse(levels: &[u8], seed: u64, coeff: f64) -> SparseGrid {
+        let mut g = FullGrid::new(LevelVector::new(levels));
+        let mut rng = SplitMix64::new(seed);
+        g.fill_with(|_| rng.next_f64() - 0.5);
+        Func.hierarchize(&mut g);
+        let mut sg = SparseGrid::new();
+        sg.gather(&g, coeff);
+        sg
+    }
+
+    #[test]
+    fn partial_roundtrip_is_bitwise_and_canonical() {
+        let sg = sample_sparse(&[3, 2, 2], 1, -2.0);
+        let bytes = encode_partial(&sg, 3);
+        let Message::Partial(back) = decode(&bytes).unwrap() else {
+            panic!("wrong kind")
+        };
+        assert!(back.bitwise_eq(&sg));
+        // canonical order makes re-encoding the identity on bytes
+        assert_eq!(encode_partial(&back, 3), bytes);
+    }
+
+    #[test]
+    fn empty_partial_roundtrips() {
+        let sg = SparseGrid::new();
+        let bytes = encode_partial(&sg, 4);
+        let Message::Partial(back) = decode(&bytes).unwrap() else {
+            panic!("wrong kind")
+        };
+        assert_eq!(back.subspace_count(), 0);
+        assert_eq!(bytes.len(), HEADER_LEN + 4);
+    }
+
+    #[test]
+    fn piece_and_done_roundtrip() {
+        let sg = sample_sparse(&[2, 3], 7, 1.0);
+        let bytes = encode_piece(42, 1, &sg, 2);
+        match decode(&bytes).unwrap() {
+            Message::Piece { grid, axes_done, part } => {
+                assert_eq!((grid, axes_done), (42, 1));
+                assert!(part.bitwise_eq(&sg));
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+        match decode(&encode_done(7, 2)).unwrap() {
+            Message::Done { pieces } => assert_eq!(pieces, 7),
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn negative_zero_survives_the_wire() {
+        let mut sg = SparseGrid::new();
+        sg.subspace_mut(&LevelVector::new(&[2]))[0] = -0.0;
+        let Message::Partial(back) = decode(&encode_partial(&sg, 1)).unwrap() else {
+            panic!()
+        };
+        assert!(back.bitwise_eq(&sg));
+    }
+
+    #[test]
+    fn truncation_is_rejected_at_every_length() {
+        let sg = sample_sparse(&[3, 2], 3, 1.0);
+        let bytes = encode_partial(&sg, 2);
+        for cut in 0..bytes.len() {
+            assert!(decode(&bytes[..cut]).is_err(), "cut at {cut} accepted");
+        }
+        assert!(decode(&bytes).is_ok());
+    }
+
+    #[test]
+    fn corrupt_headers_are_rejected() {
+        let sg = sample_sparse(&[2, 2], 4, 1.0);
+        let good = encode_partial(&sg, 2);
+        let mutate = |i: usize, v: u8| {
+            let mut b = good.clone();
+            b[i] = v;
+            b
+        };
+        assert!(decode(&mutate(0, b'X')).is_err(), "bad magic");
+        assert!(decode(&mutate(4, 99)).is_err(), "bad version");
+        assert!(decode(&mutate(6, 200)).is_err(), "bad kind");
+        assert!(decode(&mutate(7, 0)).is_err(), "dim 0");
+        assert!(decode(&mutate(7, (MAX_DIM + 1) as u8)).is_err(), "dim too large");
+        assert!(decode(&mutate(8, good[8].wrapping_add(1))).is_err(), "bad length");
+        // a subspace level of 0 (first level byte after the count)
+        assert!(decode(&mutate(HEADER_LEN + 4, 0)).is_err(), "level 0");
+        assert!(decode(&mutate(HEADER_LEN + 4, 31)).is_err(), "level 31");
+        // trailing garbage
+        let mut long = good.clone();
+        long.extend_from_slice(&[0; 8]);
+        assert!(decode(&long).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn duplicate_subspaces_are_rejected() {
+        let mut sg = SparseGrid::new();
+        sg.subspace_mut(&LevelVector::new(&[1, 1]))[0] = 1.0;
+        let one = encode_partial(&sg, 2);
+        // body of one subspace block (levels + payload), duplicated by hand
+        let block = one[HEADER_LEN + 4..].to_vec();
+        let mut forged = one[..HEADER_LEN].to_vec();
+        forged.extend_from_slice(&2u32.to_le_bytes());
+        forged.extend_from_slice(&block);
+        forged.extend_from_slice(&block);
+        let len = forged.len() as u32;
+        forged[8..12].copy_from_slice(&len.to_le_bytes());
+        let err = decode(&forged).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+}

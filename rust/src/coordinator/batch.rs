@@ -97,36 +97,41 @@ pub struct BatchReport {
     pub total_flops: u64,
 }
 
-fn plan(scheme: &CombinationScheme, opts: &BatchOptions) -> Vec<GridTask> {
-    scheme
-        .components()
+fn plan(scheme: &CombinationScheme, offset: usize, n: usize, opts: &BatchOptions) -> Vec<GridTask> {
+    scheme.components()[offset..offset + n]
         .iter()
         .enumerate()
-        .map(|(index, c)| GridTask {
-            index,
+        .map(|(i, c)| GridTask {
+            index: offset + i,
             variant: opts.variant.unwrap_or_else(|| auto_variant(&c.levels)),
-            flops: scheme.component_flops(index),
+            flops: scheme.component_flops(offset + i),
         })
         .collect()
 }
 
-fn check_batch(scheme: &CombinationScheme, grids: &[FullGrid]) {
-    assert_eq!(grids.len(), scheme.len(), "one grid per scheme component");
-    for (g, c) in grids.iter().zip(scheme.components()) {
+fn check_batch(scheme: &CombinationScheme, offset: usize, grids: &[FullGrid]) {
+    assert!(
+        offset + grids.len() <= scheme.len(),
+        "block [{offset}, {}) exceeds the scheme's {} components",
+        offset + grids.len(),
+        scheme.len()
+    );
+    for (g, c) in grids.iter().zip(&scheme.components()[offset..]) {
         assert_eq!(g.levels(), &c.levels, "grid does not match its scheme component");
     }
 }
 
 fn run_batch(
     scheme: &CombinationScheme,
+    offset: usize,
     grids: &mut [FullGrid],
     opts: &BatchOptions,
     up: bool,
 ) -> BatchReport {
-    check_batch(scheme, grids);
+    check_batch(scheme, offset, grids);
     let threads = opts.threads.max(1);
     let strategy = opts.strategy.resolve(grids.len(), threads);
-    let mut tasks = plan(scheme, opts);
+    let mut tasks = plan(scheme, offset, grids.len(), opts);
     if strategy == ShardStrategy::Tile {
         // tile sharding runs the cache-blocked fused sweep on every grid;
         // the report reflects what actually executed
@@ -134,7 +139,9 @@ fn run_batch(
             t.variant = Variant::BfsOverVectorizedFused;
         }
     }
-    let order = scheme.balance_order();
+    // LPT within the block (the whole-scheme balance_order for offset 0)
+    let mut order: Vec<usize> = (0..grids.len()).collect();
+    order.sort_by_cached_key(|&i| std::cmp::Reverse(tasks[i].flops));
     let fuse = effective_fuse(opts);
     let t = CycleTimer::start();
     match strategy {
@@ -188,13 +195,8 @@ fn run_batch(
             }
         }
     }
-    BatchReport {
-        tasks,
-        strategy,
-        threads,
-        secs: t.elapsed_secs(),
-        total_flops: scheme.total_flops(),
-    }
+    let total_flops = tasks.iter().map(|t| t.flops).sum();
+    BatchReport { tasks, strategy, threads, secs: t.elapsed_secs(), total_flops }
 }
 
 /// Hierarchize every component grid of `scheme` through the worker pool.
@@ -207,7 +209,8 @@ pub fn hierarchize_scheme(
     grids: &mut [FullGrid],
     opts: &BatchOptions,
 ) -> BatchReport {
-    run_batch(scheme, grids, opts, false)
+    assert_eq!(grids.len(), scheme.len(), "one grid per scheme component");
+    run_batch(scheme, 0, grids, opts, false)
 }
 
 /// Inverse of [`hierarchize_scheme`]: surpluses back to nodal values.
@@ -216,7 +219,32 @@ pub fn dehierarchize_scheme(
     grids: &mut [FullGrid],
     opts: &BatchOptions,
 ) -> BatchReport {
-    run_batch(scheme, grids, opts, true)
+    assert_eq!(grids.len(), scheme.len(), "one grid per scheme component");
+    run_batch(scheme, 0, grids, opts, true)
+}
+
+/// Hierarchize one contiguous component block: `grids[i]` belongs to
+/// `scheme.components()[offset + i]`.  The rank-local unit of the comm
+/// reduction engine (`comm::reduce`) — same planner, same per-grid variant
+/// auto-selection, LPT within the block, bitwise independent of strategy
+/// and thread count.
+pub fn hierarchize_slice(
+    scheme: &CombinationScheme,
+    offset: usize,
+    grids: &mut [FullGrid],
+    opts: &BatchOptions,
+) -> BatchReport {
+    run_batch(scheme, offset, grids, opts, false)
+}
+
+/// Inverse of [`hierarchize_slice`].
+pub fn dehierarchize_slice(
+    scheme: &CombinationScheme,
+    offset: usize,
+    grids: &mut [FullGrid],
+    opts: &BatchOptions,
+) -> BatchReport {
+    run_batch(scheme, offset, grids, opts, true)
 }
 
 #[cfg(test)]
@@ -438,6 +466,42 @@ mod tests {
         let opts = BatchOptions { threads: 2, variant: Some(Variant::Ind), ..Default::default() };
         let report = hierarchize_scheme(&scheme, &mut grids, &opts);
         assert!(report.tasks.iter().all(|t| t.variant == Variant::Ind));
+    }
+
+    /// Slices hierarchize exactly like the full batch restricted to the
+    /// block — the comm ranks' local compute is bitwise the local path.
+    #[test]
+    fn slice_matches_full_batch_bitwise() {
+        let scheme = CombinationScheme::regular(3, 4);
+        let input = scheme_grids(&scheme);
+        let mut full = input.clone();
+        let opts = BatchOptions { threads: 2, ..Default::default() };
+        hierarchize_scheme(&scheme, &mut full, &opts);
+        let n = scheme.len();
+        for (lo, hi) in [(0usize, 3usize), (3, n), (n / 2, n / 2), (1, n - 1)] {
+            let mut block: Vec<FullGrid> = input[lo..hi].to_vec();
+            let report = hierarchize_slice(&scheme, lo, &mut block, &opts);
+            assert_eq!(report.tasks.len(), hi - lo);
+            for (t, i) in report.tasks.iter().zip(lo..hi) {
+                assert_eq!(t.index, i, "task index is the global component index");
+            }
+            for (g, want) in block.iter().zip(&full[lo..hi]) {
+                assert_eq!(g.as_slice(), want.as_slice(), "block [{lo},{hi})");
+            }
+            // and the round trip recovers the nodal block
+            dehierarchize_slice(&scheme, lo, &mut block, &opts);
+            for (g, want) in block.iter().zip(&input[lo..hi]) {
+                assert!(g.max_diff(want) < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the scheme")]
+    fn slice_out_of_range_is_rejected() {
+        let scheme = CombinationScheme::regular(2, 3);
+        let mut grids = scheme_grids(&scheme);
+        hierarchize_slice(&scheme, 1, &mut grids, &BatchOptions::default());
     }
 
     #[test]

@@ -1,22 +1,22 @@
-//! Simulated distributed communication phase (the paper's exascale frame).
+//! Predicted distributed communication phase (the paper's exascale frame).
 //!
 //! The paper motivates hierarchization as *the* enabler of the CT's
 //! communication phase at scale.  Real deployments place combination grids
-//! on different nodes and reduce/broadcast the sparse grid.  Without a
-//! cluster, this module simulates that topology faithfully enough to
-//! reason about it (system-prompt substitution rule):
+//! on different nodes and reduce/broadcast the sparse grid:
 //!
 //! * grids are partitioned over `nodes` by a load-balancing heuristic
 //!   (largest-first bin packing on point counts);
 //! * gather = reduction tree over nodes: every node sends its *partial
 //!   sparse grid* (union of its grids' subspaces, surpluses summed) up a
 //!   binary tree; scatter = broadcast down the same tree;
-//! * cost model: `alpha + bytes / beta` per message (latency + bandwidth),
-//!   with per-node serialization of its own sends.
+//! * cost model: `alpha + bytes / beta` per round, charged on the round's
+//!   fattest edge (rounds are parallel); empty nodes are free.
 //!
-//! The model reports the communication volume and estimated time per CT
-//! iteration — the quantity the paper's "overhead of the communication
-//! phase vs savings in the compute phase" argument needs.
+//! This module is the **prediction layer** of the communication phase: the
+//! actual bytes move through `crate::comm` (same recursive-halving
+//! topology, real transports), and `sgct reduce` prints this estimate next
+//! to the measured numbers — the quantity the paper's "overhead of the
+//! communication phase vs savings in the compute phase" argument needs.
 
 use std::collections::HashSet;
 
@@ -65,9 +65,13 @@ pub fn place(scheme: &CombinationScheme, nodes: usize) -> Placement {
     Placement { nodes, assignment, load }
 }
 
-/// Sparse-grid bytes a node contributes: union of the subspaces of its
-/// grids (each subspace's surpluses are pre-summed locally).
-fn node_sparse_bytes(scheme: &CombinationScheme, placement: &Placement, node: usize) -> usize {
+/// Subspace set a node holds locally: union over its grids (each
+/// subspace's surpluses are pre-summed on the node).
+fn node_subspaces(
+    scheme: &CombinationScheme,
+    placement: &Placement,
+    node: usize,
+) -> HashSet<LevelVector> {
     let mut subspaces: HashSet<LevelVector> = HashSet::new();
     for (i, c) in scheme.components().iter().enumerate() {
         if placement.assignment[i] != node {
@@ -96,7 +100,10 @@ fn node_sparse_bytes(scheme: &CombinationScheme, placement: &Placement, node: us
         }
     }
     subspaces
-        .iter()
+}
+
+fn subspace_bytes(subs: &HashSet<LevelVector>) -> usize {
+    subs.iter()
         .map(|l| (0..l.dim()).map(|i| 1usize << (l.level(i) - 1)).product::<usize>() * 8)
         .sum()
 }
@@ -116,39 +123,71 @@ pub struct CommReport {
     pub imbalance: f64,
 }
 
-/// Model the reduction-tree gather + broadcast scatter.
+/// Model the reduction-tree gather + broadcast scatter by **simulating the
+/// exact topology `comm::reduce` runs** (recursive halving) with per-node
+/// subspace sets:
+///
+/// * each gather message carries the sender's *current* partial (the union
+///   of the subspace sets merged into it so far), not a uniform bound —
+///   partials genuinely grow toward the full sparse grid up the tree;
+/// * an **empty node sends nothing**: no bytes, no latency charge.  The
+///   `nodes > grids` edge case (empty nodes after largest-first packing)
+///   therefore no longer distorts the tree cost — doubling the node count
+///   with empties only prepends an all-idle round (pinned by
+///   `empty_nodes_do_not_distort_the_tree_cost` below);
+/// * the scatter broadcast only travels edges whose receiving subtree
+///   contains an occupied node.
+///
+/// Per round the time charge is the round's largest message (`alpha +
+/// bytes/beta`; rounds are parallel, the critical path is the fattest
+/// edge).  `rounds` stays the tree depth `ceil(log2 nodes)`.
 pub fn estimate(scheme: &CombinationScheme, placement: &Placement, net: NetModel) -> CommReport {
     let nodes = placement.nodes;
-    let full_sparse_bytes: usize = {
-        let subs = scheme.sparse_subspaces();
-        subs.iter()
-            .map(|l| (0..l.dim()).map(|i| 1usize << (l.level(i) - 1)).product::<usize>() * 8)
-            .sum()
-    };
-    // binary reduction tree: ceil(log2 nodes) rounds; in round r, half the
-    // active nodes send their partial sparse grid (bounded by the full one)
-    let mut rounds = 0usize;
-    let mut active = nodes;
+    let topo = crate::comm::Topology::new(nodes);
+    let mut sets: Vec<HashSet<LevelVector>> =
+        (0..nodes).map(|k| node_subspaces(scheme, placement, k)).collect();
+    let occupied: Vec<bool> = sets.iter().map(|s| !s.is_empty()).collect();
+    // which original nodes each node's partial covers (for the scatter)
+    let mut subtree: Vec<Vec<usize>> = (0..nodes).map(|k| vec![k]).collect();
     let mut gather_bytes = 0usize;
     let mut secs = 0.0f64;
-    let per_node: Vec<usize> =
-        (0..nodes).map(|k| node_sparse_bytes(scheme, placement, k)).collect();
-    let max_partial = per_node.iter().copied().max().unwrap_or(0).min(full_sparse_bytes);
-    while active > 1 {
-        let senders = active / 2;
-        // partials grow toward the full sparse grid as the tree ascends
-        let msg = max_partial.max(full_sparse_bytes / 2).min(full_sparse_bytes);
-        gather_bytes += senders * msg;
-        secs += net.alpha + msg as f64 / net.beta; // rounds are parallel
-        active -= senders;
-        rounds += 1;
+    // per round: does the edge toward each sender's subtree carry grids?
+    let mut edge_needed: Vec<Vec<bool>> = Vec::with_capacity(topo.n_rounds());
+    for round in topo.rounds() {
+        let mut fattest = 0usize;
+        let mut needed = Vec::with_capacity(round.len());
+        for &(s, r) in round {
+            let msg = subspace_bytes(&sets[s]);
+            if msg > 0 {
+                gather_bytes += msg;
+                fattest = fattest.max(msg);
+            }
+            // snapshot before the merge: the scatter must reach s's
+            // subtree iff any of its original nodes owns grids
+            needed.push(subtree[s].iter().any(|&k| occupied[k]));
+            let moved = std::mem::take(&mut sets[s]);
+            sets[r].extend(moved);
+            let kids = std::mem::take(&mut subtree[s]);
+            subtree[r].extend(kids);
+        }
+        edge_needed.push(needed);
+        if fattest > 0 {
+            secs += net.alpha + fattest as f64 / net.beta;
+        }
     }
-    // scatter: broadcast the full sparse grid down the same tree
-    let scatter_bytes = full_sparse_bytes * nodes.saturating_sub(1);
-    secs += rounds as f64 * (net.alpha + full_sparse_bytes as f64 / net.beta);
+    let full_sparse_bytes = subspace_bytes(&sets[0]);
+    // scatter: broadcast down the reversed tree, only where needed
+    let mut scatter_bytes = 0usize;
+    for needed in edge_needed.iter().rev() {
+        let any = needed.iter().any(|&n| n);
+        scatter_bytes += needed.iter().filter(|&&n| n).count() * full_sparse_bytes;
+        if any {
+            secs += net.alpha + full_sparse_bytes as f64 / net.beta;
+        }
+    }
     let mean = placement.load.iter().sum::<usize>() as f64 / nodes as f64;
     let imb = placement.load.iter().copied().max().unwrap_or(0) as f64 / mean.max(1.0);
-    CommReport { gather_bytes, scatter_bytes, secs, rounds, imbalance: imb }
+    CommReport { gather_bytes, scatter_bytes, secs, rounds: topo.n_rounds(), imbalance: imb }
 }
 
 #[cfg(test)]
@@ -195,6 +234,47 @@ mod tests {
         let rl = estimate(&large, &place(&large, 4), net);
         assert!(rl.gather_bytes > rs.gather_bytes);
         assert!(rl.secs > rs.secs);
+    }
+
+    /// The `nodes > grids` audit, pinned.  Largest-first packing with all
+    /// loads zero assigns each grid its own node (`min_by_key` returns the
+    /// first minimum), leaving exactly `nodes - grids` empty nodes — and
+    /// empty nodes must be *free*: they send no gather bytes, charge no
+    /// latency, and the scatter skips their subtrees.  Doubling the node
+    /// count therefore only prepends an all-idle round: every cost is
+    /// unchanged.
+    #[test]
+    fn empty_nodes_do_not_distort_the_tree_cost() {
+        let s = CombinationScheme::regular(2, 3); // 5 grids
+        let net = NetModel::default();
+        for (small, doubled) in [(8usize, 16usize), (6, 12), (5, 10)] {
+            let p_small = place(&s, small);
+            let p_big = place(&s, doubled);
+            // identical grid->node assignment (empties trail)
+            assert_eq!(p_small.assignment, p_big.assignment);
+            assert_eq!(p_big.load[small..].iter().sum::<usize>(), 0, "empties carry no load");
+            let r_small = estimate(&s, &p_small, net);
+            let r_big = estimate(&s, &p_big, net);
+            assert_eq!(r_small.gather_bytes, r_big.gather_bytes, "{small} vs {doubled}");
+            assert_eq!(r_small.scatter_bytes, r_big.scatter_bytes, "{small} vs {doubled}");
+            assert!((r_small.secs - r_big.secs).abs() < 1e-12, "{small} vs {doubled}");
+            // the tree itself is deeper — only its cost is unchanged
+            assert_eq!(r_big.rounds, r_small.rounds + 1);
+        }
+    }
+
+    /// Degenerate extreme of the same audit: one occupied node in a large
+    /// tree pays nothing at all — the reduction is already complete.
+    #[test]
+    fn single_occupied_node_pays_nothing() {
+        let s = CombinationScheme::regular(1, 5); // a single grid
+        let p = place(&s, 8);
+        assert_eq!(p.load.iter().filter(|&&l| l > 0).count(), 1);
+        let r = estimate(&s, &p, NetModel::default());
+        assert_eq!(r.gather_bytes, 0);
+        assert_eq!(r.scatter_bytes, 0);
+        assert_eq!(r.secs, 0.0);
+        assert_eq!(r.rounds, 3, "the tree exists; it just never fires");
     }
 
     #[test]

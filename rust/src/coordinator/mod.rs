@@ -29,7 +29,10 @@ mod metrics;
 mod pipeline;
 mod pool;
 
-pub use batch::{dehierarchize_scheme, hierarchize_scheme, BatchOptions, BatchReport, GridTask};
+pub use batch::{
+    dehierarchize_scheme, dehierarchize_slice, hierarchize_scheme, hierarchize_slice,
+    BatchOptions, BatchReport, GridTask,
+};
 pub use metrics::Metrics;
 pub use pipeline::{Coordinator, IterationReport, PipelineConfig};
 pub use pool::{parallel_grids, parallel_grids_ordered, parallel_grids_streamed};

@@ -343,6 +343,38 @@ impl Coordinator {
         &self.sparse
     }
 
+    /// The combination step over the **comm data plane**: grids are
+    /// partitioned onto `ranks` in-process tree ranks
+    /// (`comm::reduce::rank_ranges`), each rank hierarchizes its block and
+    /// the reduction tree assembles the sparse grid through the wire format
+    /// — real bytes moved, measured per rank, recorded under the
+    /// `comm-compute` / `comm-gather` / `comm-scatter` metric phases.
+    /// Grids end hierarchized in the kernel layout (like
+    /// [`Coordinator::hierarchize_and_gather`]), so the regular
+    /// [`Coordinator::scatter_and_dehierarchize`] can follow.
+    ///
+    /// Unlike the thread-pool gather (arrival order), the reduced grid is
+    /// canonically grouped: bitwise identical for every rank count and to
+    /// `comm::reduce::reduce_local` with the same options.
+    pub fn combine_via_comm(
+        &mut self,
+        ranks: usize,
+        opts: &crate::comm::ReduceOptions,
+    ) -> Result<Vec<crate::comm::Measured>> {
+        let mut opts = *opts;
+        opts.scatter_back = false; // the pipeline's own scatter phase follows
+        let scheme = self.cfg.scheme.clone();
+        let (sparse, measured) =
+            crate::comm::reduce_in_process(&scheme, &mut self.grids, ranks, &opts)?;
+        self.sparse = sparse;
+        for m in &measured {
+            self.metrics.record("comm-compute", m.compute_secs);
+            self.metrics.record("comm-gather", m.gather_comm_secs);
+            self.metrics.record("comm-scatter", m.scatter_comm_secs);
+        }
+        Ok(measured)
+    }
+
     /// Max-norm interpolation error of the assembled sparse grid vs `f`,
     /// sampled at `samples` low-discrepancy points.
     pub fn error_vs(&self, f: impl Fn(&[f64]) -> f64, samples: usize) -> f64 {
@@ -501,6 +533,32 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The comm data plane slots into the pipeline: same subspaces as the
+    /// thread-pool gather within FP-reassociation tolerance, measured
+    /// bytes recorded, and the regular scatter phase composes after it.
+    #[test]
+    #[cfg_attr(miri, ignore)] // the comm engine is not a miri target
+    fn combine_via_comm_matches_combine() {
+        let cfg = PipelineConfig::new(CombinationScheme::regular(2, 4));
+        let mut a = Coordinator::new(cfg.clone(), product_parabola);
+        a.combine();
+        let mut b = Coordinator::new(cfg, product_parabola);
+        let ms = b.combine_via_comm(3, &Default::default()).unwrap();
+        assert_eq!(ms.len(), 3);
+        assert!(ms.iter().map(|m| m.gather_sent_bytes).sum::<usize>() > 0);
+        assert!(b.metrics.count("comm-gather") == 3);
+        assert_eq!(a.sparse.subspace_count(), b.sparse.subspace_count());
+        for (l, v) in a.sparse.iter() {
+            let w = b.sparse.subspace(l).unwrap();
+            for (x, y) in v.iter().zip(w) {
+                assert!((x - y).abs() < 1e-10, "subspace {l}");
+            }
+        }
+        b.scatter_and_dehierarchize();
+        b.hierarchize_and_gather();
+        assert_eq!(a.sparse.subspace_count(), b.sparse.subspace_count());
     }
 
     #[test]

@@ -234,10 +234,50 @@ fn parse_cache_size(s: &str) -> Option<usize> {
     digits.trim().parse::<usize>().ok().and_then(|v| v.checked_mul(mult))
 }
 
+/// Measured host bandwidth override, bytes/second: `SGCT_BENCH_BW`,
+/// re-read on every call (same contract as `SGCT_TILE_BYTES` — long-lived
+/// batch processes may set it after a measurement).  The value to export is
+/// printed by `cargo bench --bench fused_traffic`.
+pub fn measured_bandwidth() -> Option<f64> {
+    if cfg!(miri) {
+        return None; // isolation forbids env probes
+    }
+    std::env::var("SGCT_BENCH_BW").ok()?.trim().parse::<f64>().ok().filter(|v| *v > 0.0)
+}
+
+/// Bandwidth-aware depth decision (pure core, unit-testable without env
+/// mutation): dimension fusion is a *bandwidth* optimization — it trades
+/// contiguous full-buffer sweeps for strided cache tiles to cut DRAM round
+/// trips.  If the measured bandwidth is high enough that even the unfused
+/// `d`-pass traffic streams faster than the compute executes
+/// (`t_mem <= t_cpu`), the sweep is compute-bound and fusing buys nothing:
+/// stay at depth 1 and keep the simpler contiguous navigation.  Otherwise
+/// keep the deepest cache-fitting depth.
+pub fn depth_for_bandwidth(
+    levels: &LevelVector,
+    fit_depth: usize,
+    bw_bytes_per_sec: f64,
+    flops_per_sec: f64,
+) -> usize {
+    if !(bw_bytes_per_sec > 0.0) || !(flops_per_sec > 0.0) {
+        return fit_depth;
+    }
+    let t_mem = flops::traffic_unfused(levels) as f64 / bw_bytes_per_sec;
+    let t_cpu = flops::flops(levels).total() as f64 / flops_per_sec;
+    if t_mem <= t_cpu {
+        1
+    } else {
+        fit_depth
+    }
+}
+
 /// Pick fuse parameters for a grid shape: the deepest fuse whose leading
 /// slab (full extent of the fused axes) still fits the budget, so the
 /// leading group's tiles are genuinely cache-resident.  `budget_bytes = 0`
-/// uses [`default_tile_bytes`].
+/// uses [`default_tile_bytes`].  When a measured bandwidth is available
+/// ([`measured_bandwidth`] — the `SGCT_BENCH_BW` override fed back from
+/// `benches/fused_traffic.rs`), the depth additionally passes through
+/// [`depth_for_bandwidth`]: compute-bound shapes stay unfused.
 pub fn autotune(levels: &LevelVector, budget_bytes: usize) -> FuseParams {
     let budget = if budget_bytes == 0 { default_tile_bytes() } else { budget_bytes };
     let d = levels.dim();
@@ -251,7 +291,30 @@ pub fn autotune(levels: &LevelVector, budget_bytes: usize) -> FuseParams {
         slab_bytes = next;
         k += 1;
     }
+    if let Some(bw) = measured_bandwidth() {
+        // peak is a compile-time constant — do NOT construct a Roofline
+        // here, host_scalar() runs the expensive STREAM probe whose result
+        // this decision never uses (the bandwidth comes from the override)
+        let flops_per_sec = crate::perf::roofline::SCALAR_PEAK_FLOPS_PER_CYCLE
+            * crate::perf::cycles_per_second();
+        k = depth_for_bandwidth(levels, k, bw, flops_per_sec);
+    }
     FuseParams { fuse_depth: k, tile_bytes: budget, convert: ConvertPolicy::Eager }
+}
+
+/// `params` with every autotune placeholder (`0`) resolved against
+/// `levels`: the budget from [`default_tile_bytes`], the depth from
+/// [`autotune`], an explicit depth clamped to the dimension.  The fused
+/// sweep and the comm overlap engine both resolve through here, so the
+/// group boundaries they see always agree.
+pub fn resolve_params(levels: &LevelVector, params: FuseParams) -> FuseParams {
+    let budget = if params.tile_bytes == 0 { default_tile_bytes() } else { params.tile_bytes };
+    let depth = if params.fuse_depth == 0 {
+        autotune(levels, budget).fuse_depth
+    } else {
+        params.fuse_depth.clamp(1, levels.dim())
+    };
+    FuseParams { fuse_depth: depth, tile_bytes: budget, convert: params.convert }
 }
 
 /// Number of full-buffer passes of a fused sweep at depth `k`: one per
@@ -603,14 +666,11 @@ pub(crate) fn sweep_fused(
     params: FuseParams,
     threads: usize,
     seed: Option<u64>,
+    mut observer: Option<&mut dyn FnMut(&FullGrid, usize)>,
 ) {
     let d = g.dim();
-    let budget = if params.tile_bytes == 0 { default_tile_bytes() } else { params.tile_bytes };
-    let depth = if params.fuse_depth == 0 {
-        autotune(g.levels(), budget).fuse_depth
-    } else {
-        params.fuse_depth.clamp(1, d)
-    };
+    let resolved = resolve_params(g.levels(), params);
+    let (budget, depth) = (resolved.tile_bytes, resolved.fuse_depth);
     let kernel_layout = match kern {
         FusedKernel::OverVec(_) => AxisLayout::Bfs,
         FusedKernel::IndRows => AxisLayout::Position,
@@ -637,6 +697,9 @@ pub(crate) fn sweep_fused(
                 for j in a..b {
                     g.mark_layout(j, out.unwrap_or(kernel_layout));
                 }
+            }
+            if let Some(obs) = observer.as_deref_mut() {
+                obs(&*g, b);
             }
             a = b;
             continue;
@@ -687,8 +750,44 @@ pub(crate) fn sweep_fused(
                 g.mark_layout(j, out.unwrap_or(kernel_layout));
             }
         }
+        // group-completion hook (leader only, after the barrier and the
+        // layout bookkeeping): axes 0..b are fully hierarchized and points
+        // whose remaining-axis coordinates sit on sub-level 1 are *final*
+        // — the comm overlap engine extracts and ships exactly those
+        // subspaces while later groups still compute
+        if let Some(obs) = observer.as_deref_mut() {
+            obs(&*g, b);
+        }
         a = b;
     }
+}
+
+/// Hierarchize with a group-completion observer: `observer(grid, axes_done)`
+/// runs on the sweep leader after every fused group's barrier (including
+/// groups of only level-1 axes, which complete trivially) — the hook
+/// `comm::overlap` uses to extract finished subspaces mid-sweep.  Pass
+/// resolved params ([`resolve_params`]) when the caller needs the group
+/// boundaries in advance.
+pub fn hierarchize_observed(
+    g: &mut FullGrid,
+    params: FuseParams,
+    threads: usize,
+    observer: &mut dyn FnMut(&FullGrid, usize),
+) {
+    if !params.convert.folds_in() {
+        for ax in 0..g.dim() {
+            assert_eq!(g.layout(ax), AxisLayout::Bfs, "eager observed sweep needs BFS layout");
+        }
+    }
+    sweep_fused(
+        g,
+        false,
+        FusedKernel::OverVec(overvec::Mode::Plain),
+        params,
+        threads,
+        None,
+        Some(observer),
+    );
 }
 
 // ------------------------------------------------------- the hierarchizers
@@ -736,13 +835,15 @@ impl Hierarchizer for BfsOverVectorizedFused {
         if !self.convert.folds_in() {
             super::assert_layout(self, g);
         }
-        sweep_fused(g, false, FusedKernel::OverVec(overvec::Mode::Plain), self.params(), 1, None);
+        let kern = FusedKernel::OverVec(overvec::Mode::Plain);
+        sweep_fused(g, false, kern, self.params(), 1, None, None);
     }
     fn dehierarchize(&self, g: &mut FullGrid) {
         if !self.convert.folds_in() {
             super::assert_layout(self, g);
         }
-        sweep_fused(g, true, FusedKernel::OverVec(overvec::Mode::Plain), self.params(), 1, None);
+        let kern = FusedKernel::OverVec(overvec::Mode::Plain);
+        sweep_fused(g, true, kern, self.params(), 1, None, None);
     }
 }
 
@@ -778,13 +879,13 @@ impl Hierarchizer for IndVectorizedFused {
         if !self.convert.folds_in() {
             super::assert_layout(self, g);
         }
-        sweep_fused(g, false, FusedKernel::IndRows, self.params(), 1, None);
+        sweep_fused(g, false, FusedKernel::IndRows, self.params(), 1, None, None);
     }
     fn dehierarchize(&self, g: &mut FullGrid) {
         if !self.convert.folds_in() {
             super::assert_layout(self, g);
         }
-        sweep_fused(g, true, FusedKernel::IndRows, self.params(), 1, None);
+        sweep_fused(g, true, FusedKernel::IndRows, self.params(), 1, None, None);
     }
 }
 
@@ -993,6 +1094,94 @@ mod tests {
         assert_eq!(resolve_tile_bytes(None, probed), probed);
         // and two consecutive env-backed reads agree (no mutation here)
         assert_eq!(default_tile_bytes(), default_tile_bytes());
+    }
+
+    /// The pure bandwidth-aware depth core (the `SGCT_BENCH_BW` satellite;
+    /// tested without env mutation — `set_var` racing `getenv` on parallel
+    /// test threads is UB, the PR-4 lesson).
+    #[test]
+    fn bandwidth_aware_depth_decision() {
+        let lv = LevelVector::new(&[6, 6, 6, 6]);
+        // slow memory: traffic dominates -> keep the deepest cache fit
+        assert_eq!(depth_for_bandwidth(&lv, 4, 1e9, 1e10), 4);
+        // memory streams faster than compute executes -> fusing buys
+        // nothing, stay unfused
+        assert_eq!(depth_for_bandwidth(&lv, 4, 1e15, 1e9), 1);
+        // degenerate inputs leave the fit untouched
+        assert_eq!(depth_for_bandwidth(&lv, 3, 0.0, 1e9), 3);
+        assert_eq!(depth_for_bandwidth(&lv, 3, f64::NAN, 1e9), 3);
+        assert_eq!(depth_for_bandwidth(&lv, 3, 1e9, 0.0), 3);
+    }
+
+    #[test]
+    fn resolve_params_fills_placeholders() {
+        let lv = LevelVector::new(&[5, 5, 5]);
+        let knobs = FuseParams { fuse_depth: 0, tile_bytes: 8 * 31, ..FuseParams::AUTO };
+        let r = resolve_params(&lv, knobs);
+        assert_eq!(r.fuse_depth, autotune(&lv, 8 * 31).fuse_depth);
+        assert_eq!(r.tile_bytes, 8 * 31);
+        // explicit depth is clamped to the dimension, budget filled in
+        let r =
+            resolve_params(&lv, FuseParams { fuse_depth: 9, tile_bytes: 0, ..FuseParams::AUTO });
+        assert_eq!(r.fuse_depth, 3);
+        assert_eq!(r.tile_bytes, default_tile_bytes());
+    }
+
+    /// The observer hook fires once per group with the axes-done boundary,
+    /// and — the overlap engine's load-bearing claim — subspaces whose
+    /// remaining axes are all level 1 already hold their *final* surpluses
+    /// at that boundary, bitwise.
+    #[test]
+    fn observer_sees_final_subspaces_at_group_boundaries() {
+        use crate::sparse::SparseGrid;
+        let levels: &[u8] = &[3, 2, 2];
+        let input = rand_grid(levels, 55);
+        // final reference surpluses
+        let mut reference = input.clone();
+        prepare(&BfsOverVectorized, &mut reference);
+        BfsOverVectorized.hierarchize(&mut reference);
+        let mut want = SparseGrid::new();
+        want.gather(&reference, 1.0);
+
+        let lv = LevelVector::new(levels);
+        let params =
+            resolve_params(&lv, FuseParams { fuse_depth: 2, tile_bytes: 256, ..FuseParams::AUTO });
+        let mut bounds = Vec::new();
+        let mut g = input.clone();
+        prepare(&BfsOverVectorizedFused::AUTO, &mut g);
+        hierarchize_observed(&mut g, params, 1, &mut |mid, axes_done| {
+            bounds.push(axes_done);
+            let d = lv.dim();
+            // every subspace with s_j == 1 for all j >= axes_done is final
+            let mut sub = vec![1u8; d];
+            loop {
+                let final_here = (axes_done..d).all(|j| sub[j] == 1);
+                if final_here {
+                    let sl = LevelVector::new(&sub);
+                    let mut got = SparseGrid::new();
+                    got.gather_subspace(mid, 1.0, &sl);
+                    let w = want.subspace(&sl).unwrap();
+                    let gbits: Vec<u64> =
+                        got.subspace(&sl).unwrap().iter().map(|v| v.to_bits()).collect();
+                    let wbits: Vec<u64> = w.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gbits, wbits, "subspace {sl} not final at b={axes_done}");
+                }
+                let mut ax = 0;
+                while ax < d {
+                    sub[ax] += 1;
+                    if sub[ax] <= lv.level(ax) {
+                        break;
+                    }
+                    sub[ax] = 1;
+                    ax += 1;
+                }
+                if ax == d {
+                    break;
+                }
+            }
+        });
+        assert_eq!(bounds, vec![2, 3], "one callback per group, at its boundary");
+        assert_eq!(g.as_slice(), reference.as_slice(), "observed sweep stays bitwise");
     }
 
     #[test]

@@ -199,6 +199,7 @@ impl Hierarchizer for ParallelHierarchizer {
                 self.fuse,
                 self.threads,
                 self.unit_order_seed,
+                None,
             );
             return;
         }
@@ -222,6 +223,7 @@ impl Hierarchizer for ParallelHierarchizer {
                 self.fuse,
                 self.threads,
                 self.unit_order_seed,
+                None,
             );
             return;
         }

@@ -32,6 +32,20 @@
 //!   tile budget get the fused code) and a [`ShardStrategy`] knob
 //!   (grid-level stealing / pole- or tile-level sharding / auto).
 //!
+//! The combination step itself runs on a real **communication data plane**
+//! ([`comm`]): sparse-grid subspaces travel a compact versioned wire format
+//! over pluggable transports (in-process channels between worker shards, or
+//! Unix-domain sockets between `sgct comm-worker` processes) through a
+//! binary reduction tree whose summation grouping is canonicalized — the
+//! reduced sparse grid is bitwise identical for every rank count and
+//! transport, and bitwise equal to the single-process reference
+//! ([`comm::reduce::reduce_local`]).  The fused sweep's group-completion
+//! hook lets ranks extract and ship finished subspaces *while later tile
+//! groups still hierarchize* ([`comm::overlap`]) — the paper's
+//! "hierarchization enables communication" claim as measured overlap.
+//! [`coordinator::distributed`] remains the prediction layer: `sgct reduce`
+//! reports its `alpha + bytes/beta` estimates next to measured bytes/time.
+//!
 //! Both levels stand on one unsafe core, `grid::cells`, which keeps the
 //! shared-buffer access inside the Rust aliasing model: a [`grid::GridCells`]
 //! handle owns the exclusive borrow of a grid buffer and hands out *checked*
@@ -49,6 +63,7 @@
 
 pub mod cli;
 pub mod combi;
+pub mod comm;
 pub mod coordinator;
 pub mod grid;
 pub mod hierarchize;

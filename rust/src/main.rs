@@ -8,7 +8,7 @@
 //! sgct bench --levels 5,4 [--all]            one-off variant timing
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
 use sgct::cli::Args;
 use sgct::combi::CombinationScheme;
 use sgct::coordinator::{hierarchize_scheme, BatchOptions, Coordinator, PipelineConfig};
@@ -38,6 +38,9 @@ fn main() {
         "batch" => run(batch(&args)),
         "bench" => run(bench_cmd(&args)),
         "distributed" => run(distributed(&args)),
+        "reduce" => run(reduce_cmd(&args)),
+        // hidden: one rank of a multi-process `sgct reduce --transport unix`
+        "comm-worker" => run(comm_worker(&args)),
         "" | "help" | "--help" => {
             print!("{}", HELP);
             0
@@ -57,7 +60,7 @@ USAGE:
   sgct info [--roofline]
   sgct hierarchize --levels L1,L2,... [--variant NAME] [--threads N|auto] [--check] [--pjrt]
                    [--fuse-depth K] [--tile-kb KB] [--convert eager|fused]
-  sgct combine --dim D --level N [--samples K] [--threads N|auto]
+  sgct combine --dim D --level N [--samples K] [--threads N|auto] [--ranks R]
                [--shard-strategy grid|pole|tile|auto] [--fuse-depth K] [--tile-kb KB]
                [--convert eager|fused]
   sgct solve --dim D --level N [--iters I] [--steps T] [--pjrt] [--workers W]
@@ -67,7 +70,17 @@ USAGE:
              [--variant NAME] [--fuse-depth K] [--tile-kb KB] [--convert eager|fused]
   sgct bench --levels L1,L2,... [--all]
   sgct distributed --dim D --level N [--max-nodes K]
+  sgct reduce --dim D --level N --ranks R [--transport inprocess|unix] [--overlap]
+              [--seed S] [--check] [--threads N] [--fuse-depth K] [--tile-kb KB]
 
+  --transport ...          reduce: inprocess = tree ranks as worker threads,
+                           unix = real `comm-worker` processes over
+                           Unix-domain sockets (same reduction code)
+  --ranks R                reduce: endpoints of the binary reduction tree
+  --overlap                reduce: stream finished subspaces while later
+                           fused tile groups still hierarchize
+  --check                  reduce: verify the reduced grid bitwise against
+                           the single-process canonical reference
   --threads N|auto         worker threads (auto = all hardware threads)
   --shard-strategy ...     grid = one component grid per work item,
                            pole = shard each grid pole-wise across the pool,
@@ -259,7 +272,19 @@ fn combine(args: &Args) -> Result<()> {
     cfg.shard = args.get("shard-strategy", ShardStrategy::Grid)?;
     cfg.fuse = fuse_opts(args)?;
     let mut c = Coordinator::new(cfg, f);
-    c.combine();
+    let ranks = args.get("ranks", 1usize)?;
+    if ranks > 1 {
+        // combination step over the comm data plane (in-process tree ranks)
+        let ms = c.combine_via_comm(ranks, &reduce_opts(args)?)?;
+        println!(
+            "comm: {} ranks moved {} (gather) + {} (scatter)",
+            ranks,
+            human_bytes(ms.iter().map(|m| m.gather_sent_bytes).sum::<usize>()),
+            human_bytes(ms.iter().map(|m| m.scatter_sent_bytes).sum::<usize>()),
+        );
+    } else {
+        c.combine();
+    }
     println!(
         "sparse grid: {} subspaces, {} points",
         c.sparse.subspace_count(),
@@ -439,6 +464,242 @@ fn distributed(args: &Args) -> Result<()> {
     }
     t.print();
     println!("(the paper's break-even: this communication must undercut the compute savings)");
+    Ok(())
+}
+
+/// Parse the reduce/comm-worker options shared by both subcommands.
+fn reduce_opts(args: &Args) -> Result<sgct::comm::ReduceOptions> {
+    Ok(sgct::comm::ReduceOptions {
+        threads: args.threads("threads", 1)?,
+        overlap: args.flag("overlap"),
+        fuse: fuse_opts(args)?,
+        ..Default::default()
+    })
+}
+
+/// `sgct reduce` — the combination step over the real comm data plane:
+/// gather = canonically-grouped partial sparse grids up a binary reduction
+/// tree, scatter = broadcast + per-grid sampling down it, over in-process
+/// channels or Unix-domain sockets between spawned `comm-worker` ranks.
+/// Prints measured bytes/time next to the `coordinator::distributed`
+/// prediction; `--check` verifies bitwise equality with the single-process
+/// canonical reference.
+fn reduce_cmd(args: &Args) -> Result<()> {
+    use sgct::coordinator::distributed::{estimate, place, NetModel};
+
+    let dim = args.get("dim", 4usize)?;
+    let level = args.get("level", 6u8)?;
+    let ranks = args.get("ranks", 2usize)?;
+    anyhow::ensure!(ranks >= 1, "--ranks must be >= 1");
+    let seed = args.get("seed", 42u64)?;
+    let transport = args.opt_or("transport", "inprocess");
+    let opts = reduce_opts(args)?;
+    let scheme = CombinationScheme::regular(dim, level);
+    println!(
+        "reduce: d={dim} n={level} -> {} grids over {ranks} ranks ({transport}, overlap {})",
+        scheme.len(),
+        if opts.overlap { "on" } else { "off" },
+    );
+    let predicted = estimate(&scheme, &place(&scheme, ranks), NetModel::default());
+
+    let t0 = std::time::Instant::now();
+    let (sparse, measured) = match transport.as_str() {
+        "inprocess" | "in-process" => {
+            let mut grids = sgct::comm::seeded_block(&scheme, 0, scheme.len(), seed);
+            let out = sgct::comm::reduce_in_process(&scheme, &mut grids, ranks, &opts)?;
+            if args.flag("check") {
+                verify_projection(&scheme, 0, &grids, &out.0)?;
+            }
+            out
+        }
+        "unix" => reduce_unix(&scheme, ranks, seed, &opts, args)?,
+        other => bail!("unknown transport {other:?} (inprocess|unix)"),
+    };
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(vec![
+        "rank", "grids", "compute", "gather sent", "gather recv", "scatter", "hidden comm",
+    ]);
+    for m in &measured {
+        let hidden = m
+            .overlap
+            .as_ref()
+            .map(|o| format!("{} / {} pieces", human_bytes(o.hidden_bytes()), o.hidden_pieces()))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            m.rank.to_string(),
+            m.grids.to_string(),
+            human_time(m.compute_secs),
+            human_bytes(m.gather_sent_bytes),
+            human_bytes(m.gather_recv_bytes),
+            human_bytes(m.scatter_sent_bytes),
+            hidden,
+        ]);
+    }
+    t.print();
+    let gather_meas: usize = measured.iter().map(|m| m.gather_sent_bytes).sum();
+    let scatter_meas: usize = measured.iter().map(|m| m.scatter_sent_bytes).sum();
+    println!(
+        "sparse grid: {} subspaces, {} points",
+        sparse.subspace_count(),
+        sparse.point_count()
+    );
+    println!(
+        "predicted (NetModel): gather {} scatter {} time {}",
+        human_bytes(predicted.gather_bytes),
+        human_bytes(predicted.scatter_bytes),
+        human_time(predicted.secs),
+    );
+    println!(
+        "measured{}: gather {} scatter {} wall {}",
+        if transport == "unix" { " (rank 0 only — workers are processes)" } else { "" },
+        human_bytes(gather_meas),
+        human_bytes(scatter_meas),
+        human_time(wall),
+    );
+    if args.flag("check") {
+        let mut reference = sgct::comm::seeded_block(&scheme, 0, scheme.len(), seed);
+        let want = sgct::comm::reduce_local(&scheme, &mut reference, &opts);
+        anyhow::ensure!(
+            sparse.bitwise_eq(&want),
+            "reduced sparse grid differs from the single-process reference"
+        );
+        println!("check: bitwise identical to the single-process canonical reference — OK");
+    }
+    Ok(())
+}
+
+/// Multi-process path of `sgct reduce --transport unix`: spawn ranks
+/// `1..R` as `sgct comm-worker` child processes wired over Unix-domain
+/// sockets in a per-run temp directory; this process runs rank 0 (the
+/// root).  Only rank 0's measurements are returned — the workers live in
+/// their own processes and verify themselves (`--check` makes a failing
+/// worker exit nonzero, which fails the run here).
+fn reduce_unix(
+    scheme: &CombinationScheme,
+    ranks: usize,
+    seed: u64,
+    opts: &sgct::comm::ReduceOptions,
+    args: &Args,
+) -> Result<(sgct::sparse::SparseGrid, Vec<sgct::comm::Measured>)> {
+    let dir = std::env::temp_dir().join(format!("sgct_comm_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::new();
+    for r in 1..ranks {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("comm-worker")
+            .arg("--rank")
+            .arg(r.to_string())
+            .arg("--ranks")
+            .arg(ranks.to_string())
+            .arg("--dim")
+            .arg(scheme.dim().to_string())
+            .arg("--level")
+            .arg(scheme.level().to_string())
+            .arg("--seed")
+            .arg(seed.to_string())
+            .arg("--dir")
+            .arg(&dir)
+            .arg("--threads")
+            .arg(opts.threads.to_string());
+        if opts.overlap {
+            cmd.arg("--overlap");
+        }
+        if args.flag("check") {
+            cmd.arg("--check");
+        }
+        for key in ["fuse-depth", "tile-kb", "convert"] {
+            if let Some(v) = args.opt(key) {
+                cmd.arg(format!("--{key}")).arg(v);
+            }
+        }
+        children.push(cmd.spawn().with_context(|| format!("spawn comm-worker {r}"))?);
+    }
+    let run = || -> Result<(sgct::sparse::SparseGrid, Vec<sgct::comm::Measured>)> {
+        let (lo, hi) = sgct::comm::rank_ranges(scheme, ranks)[0];
+        let mut grids = sgct::comm::seeded_block(scheme, lo, hi, seed);
+        let mut links =
+            sgct::comm::unix_links(&dir, 0, ranks, std::time::Duration::from_secs(30))?;
+        let (sparse, m0) = sgct::comm::run_rank(scheme, 0, ranks, &mut grids, &mut links, opts)?;
+        if args.flag("check") {
+            verify_projection(scheme, lo, &grids, &sparse)?;
+        }
+        Ok((sparse, vec![m0]))
+    };
+    let out = run();
+    let mut failed = Vec::new();
+    for (r, mut c) in (1..ranks).zip(children) {
+        match c.wait() {
+            Ok(st) if st.success() => {}
+            _ => failed.push(r),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    // the root's own error is the root cause (its dropped sockets are what
+    // made the workers fail) — surface it first, workers second
+    let out = out.with_context(|| format!("root rank failed (workers down: {failed:?})"))?;
+    anyhow::ensure!(failed.is_empty(), "comm workers failed: ranks {failed:?}");
+    Ok(out)
+}
+
+/// One rank of a multi-process reduction (hidden subcommand; see
+/// [`reduce_unix`]).  Rebuilds the deterministic problem from the shared
+/// seed, joins the socket tree, runs the rank protocol, and — under
+/// `--check` — verifies the projection fixpoint on its block: after
+/// scatter + dehierarchize, re-hierarchizing each local grid must
+/// reproduce the broadcast surpluses on that grid's subspaces.
+fn comm_worker(args: &Args) -> Result<()> {
+    let rank = args.get("rank", 0usize)?;
+    let ranks = args.get("ranks", 0usize)?;
+    anyhow::ensure!(ranks >= 2 && (1..ranks).contains(&rank), "bad comm-worker rank");
+    let dim = args.get("dim", 0usize)?;
+    let level = args.get("level", 0u8)?;
+    let seed = args.get("seed", 42u64)?;
+    let dir = std::path::PathBuf::from(
+        args.opt("dir").ok_or_else(|| anyhow::anyhow!("--dir required"))?,
+    );
+    let opts = reduce_opts(args)?;
+    let scheme = CombinationScheme::regular(dim, level);
+    let (lo, hi) = sgct::comm::rank_ranges(&scheme, ranks)[rank];
+    let mut grids = sgct::comm::seeded_block(&scheme, lo, hi, seed);
+    let mut links = sgct::comm::unix_links(&dir, rank, ranks, std::time::Duration::from_secs(30))?;
+    let (full, _m) = sgct::comm::run_rank(&scheme, rank, ranks, &mut grids, &mut links, &opts)?;
+    if args.flag("check") {
+        verify_projection(&scheme, lo, &grids, &full)
+            .with_context(|| format!("rank {rank} projection check"))?;
+    }
+    Ok(())
+}
+
+/// Projection-fixpoint check of a block after `scatter_back`: the grids
+/// hold the combined solution in nodal position layout; re-hierarchizing
+/// (independent serial `Func` path) must reproduce the broadcast sparse
+/// grid's surpluses on each grid's subspaces within 1e-10.
+fn verify_projection(
+    scheme: &CombinationScheme,
+    lo: usize,
+    grids: &[FullGrid],
+    sparse: &sgct::sparse::SparseGrid,
+) -> Result<()> {
+    for (k, g) in grids.iter().enumerate() {
+        let mut h = g.clone();
+        Variant::Func.instance().hierarchize(&mut h);
+        let mut sg = sgct::sparse::SparseGrid::new();
+        sg.gather(&h, 1.0);
+        for (l, v) in sg.iter() {
+            let w = sparse
+                .subspace(l)
+                .ok_or_else(|| anyhow::anyhow!("grid {}: subspace {l} missing", lo + k))?;
+            for (a, b) in v.iter().zip(w) {
+                anyhow::ensure!(
+                    (a - b).abs() < 1e-10,
+                    "grid {} subspace {l}: {a} vs {b}",
+                    lo + k
+                );
+            }
+        }
+    }
     Ok(())
 }
 

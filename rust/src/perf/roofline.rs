@@ -7,6 +7,13 @@
 use super::cycles::cycles_per_second;
 use super::stream;
 
+/// The paper's scalar peak: 2 f64 flops/cycle (1 add + 1 mul per cycle on
+/// SandyBridge).  A compile-time fact — consumers that only need the peak
+/// (e.g. `hierarchize::fused::autotune`'s bandwidth decision) should read
+/// this constant instead of constructing a [`Roofline`], whose
+/// [`Roofline::host_scalar`] runs the (cached but expensive) STREAM probe.
+pub const SCALAR_PEAK_FLOPS_PER_CYCLE: f64 = 2.0;
+
 /// Machine ceilings for the roofline.
 #[derive(Debug, Clone, Copy)]
 pub struct Roofline {
@@ -23,7 +30,7 @@ impl Roofline {
     pub fn host_scalar() -> Self {
         let hz = cycles_per_second();
         let bw = stream::host_bandwidth().best_bytes_per_sec();
-        Self { peak_flops_per_cycle: 2.0, bytes_per_cycle: bw / hz }
+        Self { peak_flops_per_cycle: SCALAR_PEAK_FLOPS_PER_CYCLE, bytes_per_cycle: bw / hz }
     }
 
     /// AVX-peak variant (4-wide f64 add + mul per cycle = 8 flops/cycle).

@@ -28,6 +28,61 @@ fn subspace_strides(l: &LevelVector) -> Vec<usize> {
     s
 }
 
+/// Accumulate one subspace's points: the shared inner loop of
+/// [`SparseGrid::gather`] and [`SparseGrid::gather_subspace`] — one body,
+/// one floating-point expression shape, so per-subspace extraction is
+/// bitwise identical to the full sweep.
+#[allow(clippy::too_many_arguments)]
+fn gather_points(
+    target: &mut [f64],
+    data: &[f64],
+    slot: &[Vec<usize>],
+    levels: &LevelVector,
+    sub: &[u8],
+    st: &[usize],
+    coeff: f64,
+    jidx: &mut [u32],
+    contrib: &mut [usize],
+) {
+    let d = levels.dim();
+    let shift: Vec<u8> = (0..d).map(|i| levels.level(i) - sub[i]).collect();
+    for v in jidx.iter_mut() {
+        *v = 0;
+    }
+    let mut goff = 0usize;
+    for i in 0..d {
+        contrib[i] = slot[i][((1u32 << shift[i]) - 1) as usize];
+        goff += contrib[i];
+    }
+    let mut off = 0usize;
+    'points: loop {
+        target[off] += coeff * data[goff];
+        // odometer over jidx, updating offsets incrementally
+        let mut ax = 0;
+        loop {
+            if ax == d {
+                break 'points;
+            }
+            jidx[ax] += 1;
+            if jidx[ax] < (1u32 << (sub[ax] - 1)) {
+                off += st[ax];
+                let p = ((2 * jidx[ax] + 1) << shift[ax]) - 1;
+                goff -= contrib[ax];
+                contrib[ax] = slot[ax][p as usize];
+                goff += contrib[ax];
+                break;
+            }
+            jidx[ax] = 0;
+            off -= st[ax] * ((1usize << (sub[ax] - 1)) - 1);
+            let p = (1u32 << shift[ax]) - 1;
+            goff -= contrib[ax];
+            contrib[ax] = slot[ax][p as usize];
+            goff += contrib[ax];
+            ax += 1;
+        }
+    }
+}
+
 impl SparseGrid {
     pub fn new() -> Self {
         Self::default()
@@ -61,6 +116,72 @@ impl SparseGrid {
     /// Iterate (subspace level vector, surpluses).
     pub fn iter(&self) -> impl Iterator<Item = (&LevelVector, &[f64])> {
         self.subspaces.iter().map(|(k, v)| (k, v.as_slice()))
+    }
+
+    /// Subspaces in the canonical (level-vector `Ord`) order — the wire
+    /// format's deterministic serialization order, and what makes two
+    /// encodes of equal grids byte-identical.
+    pub fn iter_sorted(&self) -> Vec<(&LevelVector, &[f64])> {
+        let mut v: Vec<_> = self.subspaces.iter().map(|(k, s)| (k, s.as_slice())).collect();
+        v.sort_by(|a, b| a.0.cmp(b.0));
+        v
+    }
+
+    /// Insert a subspace wholesale (the wire decoder / piece-reassembly
+    /// path).  Rejects duplicates and wrong payload lengths — reassembling
+    /// overlap pieces must never silently sum, that would reorder the
+    /// canonical reduction.
+    pub fn insert_subspace(&mut self, l: LevelVector, vals: Vec<f64>) -> Result<(), String> {
+        if vals.len() != subspace_len(&l) {
+            return Err(format!(
+                "subspace {l}: payload {} != expected {}",
+                vals.len(),
+                subspace_len(&l)
+            ));
+        }
+        match self.subspaces.entry(l.clone()) {
+            std::collections::hash_map::Entry::Occupied(_) => {
+                Err(format!("duplicate subspace {l}"))
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(vals);
+                Ok(())
+            }
+        }
+    }
+
+    /// Elementwise-accumulate `other` into `self` — the reduction-tree
+    /// merge operator.  `self` is always the **left** operand of the sum
+    /// (`a[i] = a[i] + b[i]`); subspaces absent on one side are copied
+    /// bitwise, not added to zero (`0.0 + -0.0` would flip the sign bit).
+    /// The canonical bisection tree of `comm::reduce` relies on exactly
+    /// these two properties for its rank-count-independence claim.
+    pub fn merge(&mut self, other: &SparseGrid) {
+        for (l, src) in other.iter_sorted() {
+            match self.subspaces.entry(l.clone()) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    for (a, b) in e.get_mut().iter_mut().zip(src) {
+                        *a += *b;
+                    }
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(src.to_vec());
+                }
+            }
+        }
+    }
+
+    /// Exact (bit-pattern) equality — the conformance suites' notion of
+    /// "bitwise identical" for reduced sparse grids.
+    pub fn bitwise_eq(&self, other: &SparseGrid) -> bool {
+        if self.subspaces.len() != other.subspaces.len() {
+            return false;
+        }
+        self.iter_sorted().into_iter().zip(other.iter_sorted()).all(|((la, va), (lb, vb))| {
+            la == lb
+                && va.len() == vb.len()
+                && va.iter().zip(vb).all(|(a, b)| a.to_bits() == b.to_bits())
+        })
     }
 
     /// Surplus of the point with per-dim (sub-level, odd index); 0.0 if the
@@ -101,42 +222,7 @@ impl SparseGrid {
             let sl = LevelVector::new(&sub);
             let st = subspace_strides(&sl);
             let target = self.subspace_mut(&sl);
-            let shift: Vec<u8> = (0..d).map(|i| levels.level(i) - sub[i]).collect();
-            for v in jidx.iter_mut() {
-                *v = 0;
-            }
-            let mut goff = 0usize;
-            for i in 0..d {
-                contrib[i] = slot[i][((1u32 << shift[i]) - 1) as usize];
-                goff += contrib[i];
-            }
-            let mut off = 0usize;
-            'points: loop {
-                target[off] += coeff * data[goff];
-                // odometer over jidx, updating offsets incrementally
-                let mut ax = 0;
-                loop {
-                    if ax == d {
-                        break 'points;
-                    }
-                    jidx[ax] += 1;
-                    if jidx[ax] < (1u32 << (sub[ax] - 1)) {
-                        off += st[ax];
-                        let p = ((2 * jidx[ax] + 1) << shift[ax]) - 1;
-                        goff -= contrib[ax];
-                        contrib[ax] = slot[ax][p as usize];
-                        goff += contrib[ax];
-                        break;
-                    }
-                    jidx[ax] = 0;
-                    off -= st[ax] * ((1usize << (sub[ax] - 1)) - 1);
-                    let p = (1u32 << shift[ax]) - 1;
-                    goff -= contrib[ax];
-                    contrib[ax] = slot[ax][p as usize];
-                    goff += contrib[ax];
-                    ax += 1;
-                }
-            }
+            gather_points(target, data, &slot, &levels, &sub, &st, coeff, &mut jidx, &mut contrib);
             // odometer over subspace levels
             let mut ax = 0;
             loop {
@@ -150,6 +236,49 @@ impl SparseGrid {
                 sub[ax] = 1;
                 ax += 1;
             }
+        }
+    }
+
+    /// Gather exactly **one** subspace `sub` of the (hierarchized) grid —
+    /// the unit the comm overlap engine extracts as soon as a subspace's
+    /// surpluses are final (same accumulation expression as [`gather`], so
+    /// extracting subspace-by-subspace is bitwise identical to the full
+    /// gather restricted to the same subspace set).
+    ///
+    /// Layout-aware per axis: mid-sweep grids whose later axes still hold
+    /// a different layout read correctly as long as `g.layouts()` is
+    /// accurate (the fused sweep's leader keeps it so at group barriers).
+    pub fn gather_subspace(&mut self, g: &FullGrid, coeff: f64, sub: &LevelVector) {
+        self.gather_subspaces(g, coeff, std::slice::from_ref(sub));
+    }
+
+    /// Gather a *set* of subspaces of one grid — [`gather_subspace`]
+    /// amortized: the per-axis slot tables are built once for the whole
+    /// set, not per subspace (the overlap extractor runs this at the fused
+    /// sweep's group barrier, where every worker thread is stalled).
+    ///
+    /// [`gather_subspace`]: SparseGrid::gather_subspace
+    pub fn gather_subspaces(&mut self, g: &FullGrid, coeff: f64, subs: &[LevelVector]) {
+        let levels = g.levels();
+        let d = levels.dim();
+        let slot: Vec<Vec<usize>> = (0..d).map(|ax| g.axis_slot_table(ax)).collect();
+        let mut jidx = vec![0u32; d];
+        let mut contrib = vec![0usize; d];
+        for sub in subs {
+            debug_assert!(sub.le(levels), "subspace {sub} not contained in grid {}", levels);
+            let st = subspace_strides(sub);
+            let target = self.subspace_mut(sub);
+            gather_points(
+                target,
+                g.as_slice(),
+                &slot,
+                levels,
+                sub.as_slice(),
+                &st,
+                coeff,
+                &mut jidx,
+                &mut contrib,
+            );
         }
     }
 
@@ -389,6 +518,76 @@ mod tests {
         sg.gather(&g, 1.0);
         sg.gather(&g, -0.5);
         assert!((sg.surplus(&[1], &[1]) - 0.5).abs() < 1e-15);
+    }
+
+    /// Extracting subspace-by-subspace is bitwise the full gather: the two
+    /// paths share one inner loop, this pins that they stay shared.
+    #[test]
+    fn gather_subspace_bitwise_matches_full_gather() {
+        let lv = LevelVector::new(&[3, 2, 2]);
+        let mut g = FullGrid::new(lv.clone());
+        let mut rng = SplitMix64::new(5);
+        g.fill_with(|_| rng.next_f64() - 0.5);
+        Func.hierarchize(&mut g);
+        let mut want = SparseGrid::new();
+        want.gather(&g, -2.0);
+        let mut got = SparseGrid::new();
+        for (l, _) in want.iter_sorted() {
+            got.gather_subspace(&g, -2.0, l);
+        }
+        assert!(got.bitwise_eq(&want));
+        // and per-subspace order does not matter (disjoint targets)
+        let mut rev = SparseGrid::new();
+        for (l, _) in want.iter_sorted().into_iter().rev() {
+            rev.gather_subspace(&g, -2.0, l);
+        }
+        assert!(rev.bitwise_eq(&want));
+    }
+
+    #[test]
+    fn merge_accumulates_left_and_copies_missing_bitwise() {
+        let l11 = LevelVector::new(&[1, 1]);
+        let l21 = LevelVector::new(&[2, 1]);
+        let mut a = SparseGrid::new();
+        a.subspace_mut(&l11)[0] = 0.1;
+        let mut b = SparseGrid::new();
+        b.subspace_mut(&l11)[0] = 0.2;
+        b.subspace_mut(&l21).copy_from_slice(&[-0.0, 3.0]);
+        a.merge(&b);
+        assert_eq!(a.subspace(&l11).unwrap()[0], 0.1 + 0.2);
+        // absent subspace copied bitwise: -0.0 keeps its sign bit (an
+        // add-to-zero would have produced +0.0)
+        assert_eq!(a.subspace(&l21).unwrap()[0].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(a.subspace(&l21).unwrap()[1], 3.0);
+        // merge with self-missing side only: other unchanged
+        assert_eq!(b.subspace(&l11).unwrap()[0], 0.2);
+    }
+
+    #[test]
+    fn insert_subspace_validates() {
+        let mut sg = SparseGrid::new();
+        let l = LevelVector::new(&[2, 2]);
+        assert!(sg.insert_subspace(l.clone(), vec![1.0; 4]).is_ok());
+        assert!(sg.insert_subspace(l.clone(), vec![1.0; 4]).is_err(), "duplicate");
+        assert!(sg
+            .insert_subspace(LevelVector::new(&[3, 1]), vec![0.0; 3])
+            .is_err(), "wrong length");
+        assert_eq!(sg.subspace_count(), 1);
+    }
+
+    #[test]
+    fn bitwise_eq_distinguishes() {
+        let l = LevelVector::new(&[2]);
+        let mut a = SparseGrid::new();
+        a.subspace_mut(&l)[1] = 1.0;
+        let mut b = SparseGrid::new();
+        b.subspace_mut(&l)[1] = 1.0;
+        assert!(a.bitwise_eq(&b));
+        b.subspace_mut(&l)[0] = -0.0; // +0.0 vs -0.0 differ bitwise
+        assert!(!a.bitwise_eq(&b));
+        let mut c = SparseGrid::new();
+        c.subspace_mut(&LevelVector::new(&[1]))[0] = 0.0;
+        assert!(!a.bitwise_eq(&c));
     }
 
     #[test]
