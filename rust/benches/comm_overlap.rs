@@ -23,7 +23,9 @@ mod common;
 
 use common::*;
 use sgct::combi::CombinationScheme;
-use sgct::comm::{reduce_in_process, seeded_block, Measured, PairTransport, ReduceOptions};
+use sgct::comm::{
+    reduce_in_process, seeded_block, ChaosKind, ChaosSpec, Measured, PairTransport, ReduceOptions,
+};
 use sgct::coordinator::distributed::{estimate, place, NetModel};
 use sgct::perf::bench::BenchRecord;
 use sgct::util::table::{human_bytes, human_time, Table};
@@ -45,6 +47,23 @@ fn run_once(
     let (_sparse, measured) =
         reduce_in_process(scheme, &mut grids, ranks, &opts).expect("reduce failed");
     (t0.elapsed().as_secs_f64(), measured)
+}
+
+/// One reduction with a rank killed mid-gather: wall time of detect +
+/// online re-plan + degraded completion, for the recovery-overhead record.
+fn run_chaos(scheme: &CombinationScheme, ranks: usize, seed: u64) -> f64 {
+    let opts = ReduceOptions {
+        scatter_back: false,
+        pair_transport: PairTransport::UnixPair,
+        timeout_ms: Some(500),
+        chaos: Some(ChaosSpec { seed, kind: ChaosKind::KillBeforeSend, rank: ranks / 2 }),
+        recovery_seed: Some(seed),
+        ..Default::default()
+    };
+    let mut grids = seeded_block(scheme, 0, scheme.len(), seed);
+    let t0 = std::time::Instant::now();
+    reduce_in_process(scheme, &mut grids, ranks, &opts).expect("degraded reduce failed");
+    t0.elapsed().as_secs_f64()
 }
 
 fn record(name: &str, levels: &str, threads: usize, secs: f64) -> BenchRecord {
@@ -151,5 +170,21 @@ fn main() {
     let mut base = record("plain-total", &tag, ranks, wall_plain);
     base.extra.push(("gather_sent_bytes".into(), gather_plain as f64));
     records.push(base);
+
+    // fault-recovery overhead: kill an interior rank mid-gather and time
+    // the detect -> re-plan -> degraded-completion path against the clean
+    // run (the overhead is dominated by the detection timeout)
+    let wall_chaos = run_chaos(&scheme, ranks, seed);
+    println!(
+        "fault recovery: degraded wall {} vs clean {} (rank {} killed, 500 ms detect timeout)",
+        human_time(wall_chaos),
+        human_time(wall_plain),
+        ranks / 2,
+    );
+    let mut chaos_rec = record("chaos-kill-total", &tag, ranks, wall_chaos);
+    chaos_rec.extra.push(("clean_secs".into(), wall_plain));
+    chaos_rec.extra.push(("recovery_overhead_secs".into(), (wall_chaos - wall_plain).max(0.0)));
+    chaos_rec.extra.push(("detect_timeout_ms".into(), 500.0));
+    records.push(chaos_rec);
     emit("comm_overlap", &records);
 }

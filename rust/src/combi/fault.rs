@@ -27,6 +27,25 @@ pub struct RecoveredScheme {
     pub cascaded: Vec<LevelVector>,
 }
 
+impl RecoveredScheme {
+    /// The recovered components as a full [`CombinationScheme`], usable by
+    /// everything downstream of the planner (canonical reduction weights,
+    /// `comm::reduce::reduce_local`, the pipeline).  `like` supplies the
+    /// dimension/level metadata of the scheme the recovery started from.
+    /// The component order is the sorted order [`recover`] produced —
+    /// deterministic, so every rank that derives the same failed set
+    /// builds the identical scheme (and therefore the identical canonical
+    /// summation tree).
+    pub fn to_scheme(&self, like: &CombinationScheme) -> CombinationScheme {
+        CombinationScheme::from_components(
+            like.dim(),
+            like.level(),
+            like.min_level(),
+            self.components.clone(),
+        )
+    }
+}
+
 /// Recompute combination coefficients after losing `failed` grids.
 ///
 /// Returns `None` if nothing survives (all grids lost).
@@ -321,6 +340,20 @@ mod tests {
         validate(&rec).unwrap();
         for l in &lost {
             assert!(rec.components.iter().all(|c| &c.levels != l));
+        }
+    }
+
+    #[test]
+    fn to_scheme_is_a_valid_scheme_and_preserves_order() {
+        let s = CombinationScheme::regular(3, 4);
+        let rec = recover(&s, &[LevelVector::new(&[4, 1, 1])]).unwrap();
+        let scheme = rec.to_scheme(&s);
+        assert_eq!(scheme.dim(), 3);
+        assert_eq!(scheme.level(), 4);
+        assert_eq!(scheme.len(), rec.components.len());
+        assert!(scheme.validate().is_ok(), "recovered scheme fails inclusion–exclusion");
+        for (a, b) in scheme.components().iter().zip(&rec.components) {
+            assert_eq!(a, b, "component order must be preserved");
         }
     }
 

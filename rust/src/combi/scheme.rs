@@ -80,6 +80,26 @@ impl CombinationScheme {
         Self { dim: d, level: n, min_level: tau, components }
     }
 
+    /// Build a scheme from an explicit component list — the fault-recovery
+    /// path (`combi::fault::recover`) produces coefficient sets that no
+    /// `regular`/`truncated` call generates.  `level`/`min_level` are kept
+    /// as metadata from the scheme the components were derived from.
+    /// Component order is preserved: it defines the canonical summation
+    /// tree of `comm::reduce`, so every rank must build the identical list.
+    pub fn from_components(
+        dim: usize,
+        level: u8,
+        min_level: u8,
+        components: Vec<Component>,
+    ) -> Self {
+        assert!(!components.is_empty(), "a scheme needs at least one component");
+        assert!(
+            components.iter().all(|c| c.levels.dim() == dim),
+            "component dimensionality mismatch"
+        );
+        Self { dim, level, min_level, components }
+    }
+
     pub fn dim(&self) -> usize {
         self.dim
     }

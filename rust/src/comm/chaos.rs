@@ -1,0 +1,154 @@
+//! Seeded fault injection for the reduction tree.
+//!
+//! A [`ChaosSpec`] names one victim rank and the way it dies at its
+//! gather-send point — the moment its subtree's contribution would travel
+//! up the tree, which is where a real crash hurts the most:
+//!
+//! * [`ChaosKind::KillBeforeSend`] — the rank exits without sending
+//!   anything; its links drop and the parent sees
+//!   [`CommError::PeerClosed`](super::CommError::PeerClosed) (or a
+//!   timeout, when the kernel keeps the socket half-open briefly).
+//! * [`ChaosKind::KillMidFrame`] — the rank ships one *well-formed
+//!   transport frame* whose `wire` payload is truncated at a seeded cut
+//!   point, then exits: the parent's decode fails with
+//!   [`CommError::CorruptFrame`](super::CommError::CorruptFrame) on every
+//!   transport (the frame length is intact, the message inside is not —
+//!   modelling a crash mid-`write` behind a buffering transport).
+//! * [`ChaosKind::StallPastDeadline`] — the rank sleeps past the
+//!   reduction deadline before attempting its send: the parent sees
+//!   [`CommError::PeerTimeout`](super::CommError::PeerTimeout), the
+//!   wedged-not-dead failure mode the deadline work exists for.
+//!
+//! The spec travels through `ReduceOptions` (in-process harness) and the
+//! `sgct comm-worker --chaos seed:kind:rank` flag (multi-process), so one
+//! matrix covers both planes.  The seed makes every run reproducible: it
+//! picks the truncation cut, nothing else — victim and kind are explicit
+//! so the conformance matrix can enumerate them.
+
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use super::wire;
+
+/// How the victim rank dies (see the module docs for the failure model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosKind {
+    KillBeforeSend,
+    KillMidFrame,
+    StallPastDeadline,
+}
+
+impl ChaosKind {
+    pub const ALL: [ChaosKind; 3] =
+        [ChaosKind::KillBeforeSend, ChaosKind::KillMidFrame, ChaosKind::StallPastDeadline];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ChaosKind::KillBeforeSend => "kill-before-send",
+            ChaosKind::KillMidFrame => "kill-mid-frame",
+            ChaosKind::StallPastDeadline => "stall",
+        }
+    }
+}
+
+/// One injected fault: `rank` dies as `kind`, reproducibly under `seed`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosSpec {
+    pub seed: u64,
+    pub kind: ChaosKind,
+    pub rank: usize,
+}
+
+impl ChaosSpec {
+    /// Parse the CLI form `seed:kind:rank` (kinds: `kill-before-send`,
+    /// `kill-mid-frame`, `stall`).  Rank 0 is the root and cannot die —
+    /// there is no parent left to re-plan.
+    pub fn parse(s: &str) -> Result<ChaosSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        ensure!(parts.len() == 3, "--chaos wants seed:kind:rank, got {s:?}");
+        let seed: u64 =
+            parts[0].parse().map_err(|_| anyhow::anyhow!("bad chaos seed {:?}", parts[0]))?;
+        let kind = match parts[1] {
+            "kill-before-send" => ChaosKind::KillBeforeSend,
+            "kill-mid-frame" => ChaosKind::KillMidFrame,
+            "stall" => ChaosKind::StallPastDeadline,
+            other => bail!("unknown chaos kind {other:?} (kill-before-send|kill-mid-frame|stall)"),
+        };
+        let rank: usize =
+            parts[2].parse().map_err(|_| anyhow::anyhow!("bad chaos rank {:?}", parts[2]))?;
+        ensure!(rank != 0, "chaos rank 0 is the root; it cannot be killed");
+        Ok(ChaosSpec { seed, kind, rank })
+    }
+
+    /// The CLI form `parse` accepts — what `sgct reduce` forwards to its
+    /// `comm-worker` children.
+    pub fn to_arg(&self) -> String {
+        format!("{}:{}:{}", self.seed, self.kind.name(), self.rank)
+    }
+}
+
+/// Truncate a wire message at a seeded cut point strictly inside its body:
+/// the result still travels as a complete transport frame, but
+/// `wire::decode` rejects it (its length field no longer matches).
+pub fn truncate_frame(payload: &[u8], seed: u64) -> Vec<u8> {
+    debug_assert!(payload.len() > wire::HEADER_LEN);
+    let span = payload.len() - wire::HEADER_LEN;
+    // SplitMix64 keeps the cut reproducible per seed
+    let mut rng = crate::util::rng::SplitMix64::new(seed);
+    let cut = wire::HEADER_LEN + (rng.next_below(span as u64) as usize);
+    payload[..cut].to_vec()
+}
+
+/// Execute the injected fault at the victim's gather-send point.  Returns
+/// the error the rank dies with; `payload` is the message it would have
+/// sent, `send` ships bytes to the parent (best effort — the parent may
+/// already have given up on us).
+pub(crate) fn die(
+    spec: &ChaosSpec,
+    payload: &[u8],
+    timeout: Duration,
+    send: &mut dyn FnMut(&[u8]) -> Result<()>,
+) -> anyhow::Error {
+    match spec.kind {
+        ChaosKind::KillBeforeSend => {}
+        ChaosKind::KillMidFrame => {
+            let _ = send(&truncate_frame(payload, spec.seed));
+        }
+        ChaosKind::StallPastDeadline => {
+            std::thread::sleep(timeout * 3 + Duration::from_millis(100));
+            let _ = send(payload);
+        }
+    }
+    anyhow::anyhow!("chaos: rank {} injected {}", spec.rank, spec.kind.name())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_prints_roundtrip() {
+        for kind in ChaosKind::ALL {
+            let spec = ChaosSpec { seed: 42, kind, rank: 3 };
+            assert_eq!(ChaosSpec::parse(&spec.to_arg()).unwrap(), spec);
+        }
+        assert!(ChaosSpec::parse("1:stall:0").is_err(), "root must be rejected");
+        assert!(ChaosSpec::parse("1:explode:2").is_err(), "unknown kind");
+        assert!(ChaosSpec::parse("1:stall").is_err(), "missing field");
+        assert!(ChaosSpec::parse("x:stall:2").is_err(), "bad seed");
+    }
+
+    #[test]
+    fn truncated_frames_never_decode() {
+        let mut sg = crate::sparse::SparseGrid::new();
+        sg.subspace_mut(&crate::grid::LevelVector::new(&[2, 3]))[0] = 1.5;
+        let good = wire::encode_partial(&sg, 2);
+        assert!(wire::decode(&good).is_ok());
+        for seed in 0..64 {
+            let bad = truncate_frame(&good, seed);
+            assert!(bad.len() < good.len());
+            assert!(wire::decode(&bad).is_err(), "seed {seed} decoded");
+        }
+    }
+}

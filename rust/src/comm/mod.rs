@@ -30,15 +30,26 @@
 //!
 //! The old cost model is now the **prediction layer**: `sgct reduce`
 //! prints `distributed::estimate`'s bytes/time next to the measured ones.
+//!
+//! **Fault tolerance** rides on the same layers: [`transport`] types every
+//! peer failure ([`CommError`]: timeout / closed / corrupt frame) and
+//! bounds every receive with a deadline, [`reduce`] converts a dead
+//! child's silence into an online re-plan (`combi::fault::recover`) and
+//! completes the reduction degraded — bitwise equal to [`reduce_local`]
+//! on the recovered scheme — and [`chaos`] injects each failure mode at
+//! every tree position, seeded, to prove it.
 
+pub mod chaos;
 pub mod overlap;
 pub mod reduce;
 pub mod transport;
 pub mod wire;
 
+pub use chaos::{ChaosKind, ChaosSpec};
 pub use overlap::OverlapStats;
 pub use reduce::{
-    rank_ranges, reduce_in_process, reduce_local, run_rank, seeded_block, unix_links, Measured,
-    PairTransport, RankLinks, ReduceOptions, Topology,
+    rank_ranges, recovered_scheme, reduce_in_process, reduce_local, run_rank, seeded_block,
+    seeded_component_grid, seeded_recovery_block, subtree_ranks, unique_run_dir, unix_links,
+    FaultReport, Measured, PairTransport, RankLinks, ReduceOptions, Topology,
 };
-pub use transport::{InProcess, Transport, UnixSocket};
+pub use transport::{default_timeout, CommError, InProcess, Transport, UnixSocket};

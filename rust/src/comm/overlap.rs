@@ -20,6 +20,14 @@
 //! transport send, remote merge — overlaps.  [`OverlapStats`] reports how
 //! much communication time was hidden behind >= 1 remaining tile group,
 //! the quantity `BENCH_comm_overlap.json` tracks.
+//!
+//! Interaction with the fault path (`reduce` module): a streamed piece
+//! that arrives truncated or duplicated is a corrupt frame, which marks
+//! the *whole sending subtree* dead — partially-received grids from that
+//! subtree are discarded wholesale, never merged.  A chaos victim is
+//! therefore excluded from streaming (its pieces would be garbage by
+//! construction), and piece-mode recovery re-ships retained grids as
+//! whole pieces rather than resuming a broken stream.
 
 use std::time::Instant;
 

@@ -36,23 +36,44 @@
 //! per-grid pieces (disjoint-subspace inserts — exact) and applies the same
 //! canonical grouping, so overlap changes *when* bytes move, never what the
 //! root computes.
+//!
+//! **Fault tolerance.**  Every tree receive carries a deadline
+//! ([`ReduceOptions::timeout`]), so a dead, wedged or garbling child
+//! surfaces as a typed [`CommError`] at its parent instead of hanging the
+//! reduction.  The parent marks the child's whole subtree dead, reports
+//! the dead ranks up the tree (`Failed`), and the root re-plans the scheme
+//! online with `combi::fault::recover` — then the gather runs a second,
+//! *piece-mode* epoch: the root broadcasts the authoritative dead set
+//! (`Replan`), every surviving rank re-gathers its retained hierarchized
+//! grids with the recovered coefficients and ships them as per-component
+//! pieces (relayed unmerged through the tree), and the root alone applies
+//! the canonical grouping over the *recovered* scheme.  Components the
+//! re-plan activates that no rank ever owned (inclusion–exclusion on the
+//! shrunk index set can introduce them) are regenerated at the root from
+//! [`ReduceOptions::recovery_seed`].  By construction the degraded result
+//! is **bitwise equal to [`reduce_local`] on the recovered scheme** — no
+//! retained grid is re-hierarchized, no lost grid is recomputed.  The
+//! seeded chaos harness ([`super::chaos`]) injects each failure mode at
+//! every tree position to hold that claim.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::combi::CombinationScheme;
+use crate::combi::{fault, CombinationScheme, Component};
 use crate::coordinator::{dehierarchize_slice, hierarchize_slice, BatchOptions};
-use crate::grid::FullGrid;
+use crate::grid::{FullGrid, LevelVector};
 use crate::hierarchize::{FuseParams, ShardStrategy, Variant};
 use crate::sparse::SparseGrid;
 
+use super::chaos::{self, ChaosSpec};
 use super::overlap::{self, OverlapStats, PieceStat};
-use super::transport::{InProcess, Transport, UnixSocket};
+use super::transport::{default_timeout, CommError, InProcess, Transport, UnixSocket};
 use super::wire::{self, Message};
 
 // ------------------------------------------------------------- topology
@@ -110,6 +131,35 @@ impl Topology {
             .map(|&(s, _)| s)
             .collect()
     }
+}
+
+/// All ranks of `rank`'s gather subtree (itself and every descendant) —
+/// what a parent writes off when the child goes silent: everything the
+/// child would have merged is lost with it.
+pub fn subtree_ranks(topo: &Topology, rank: usize) -> Vec<usize> {
+    (0..topo.ranks())
+        .filter(|&x| {
+            let mut cur = x;
+            loop {
+                if cur == rank {
+                    return true;
+                }
+                match topo.parent(cur) {
+                    Some(p) => cur = p,
+                    None => return false,
+                }
+            }
+        })
+        .collect()
+}
+
+/// The contiguous canonical component span a subtree owns (a topology
+/// subtree is a merge-tree subtree, so its members' ranges tile one span).
+fn subtree_span(topo: &Topology, ranges: &[(usize, usize)], rank: usize) -> (usize, usize) {
+    let members = subtree_ranks(topo, rank);
+    let lo = members.iter().map(|&r| ranges[r].0).min().expect("non-empty subtree");
+    let hi = members.iter().map(|&r| ranges[r].1).max().expect("non-empty subtree");
+    (lo.min(hi), hi.max(lo))
 }
 
 // ----------------------------------------------- canonical summation tree
@@ -251,6 +301,18 @@ pub struct ReduceOptions {
     pub channel_capacity: usize,
     /// Transport wired between [`reduce_in_process`] rank threads.
     pub pair_transport: PairTransport,
+    /// Per-receive deadline override in milliseconds (`None` =
+    /// `SGCT_COMM_TIMEOUT_MS`, default 30 s).  Every tree receive and send
+    /// is bounded by it — a dead peer fails the rank, never wedges it.
+    pub timeout_ms: Option<u64>,
+    /// Seeded fault injection (testing): the named rank dies at its
+    /// gather-send point.
+    pub chaos: Option<ChaosSpec>,
+    /// Deterministic regeneration seed for re-planned components that no
+    /// rank ever computed (the seed the input grids were built from, in
+    /// seeded runs).  Without it, a re-plan needing such a component fails
+    /// with a typed error instead of fabricating data.
+    pub recovery_seed: Option<u64>,
 }
 
 impl Default for ReduceOptions {
@@ -263,7 +325,18 @@ impl Default for ReduceOptions {
             scatter_back: true,
             channel_capacity: 8,
             pair_transport: PairTransport::Channel,
+            timeout_ms: None,
+            chaos: None,
+            recovery_seed: None,
         }
+    }
+}
+
+impl ReduceOptions {
+    /// The per-receive deadline: explicit override or the
+    /// `SGCT_COMM_TIMEOUT_MS` environment default.
+    pub fn timeout(&self) -> Duration {
+        self.timeout_ms.map(Duration::from_millis).unwrap_or_else(default_timeout)
     }
 }
 
@@ -312,7 +385,8 @@ pub fn gather_partial(
 
 /// The canonical single-process reference: hierarchize every grid and
 /// reduce with the canonical grouping.  `comm::reduce` over any transport
-/// and rank count is bitwise equal to this (same options).
+/// and rank count is bitwise equal to this (same options) — including the
+/// degraded result of a faulted run, taken against the recovered scheme.
 pub fn reduce_local(
     scheme: &CombinationScheme,
     grids: &mut [FullGrid],
@@ -321,6 +395,101 @@ pub fn reduce_local(
     assert_eq!(grids.len(), scheme.len());
     hierarchize_block(scheme, 0, grids, opts);
     gather_partial(scheme, 0, scheme.len(), grids).unwrap_or_default()
+}
+
+// --------------------------------------------------------- fault re-plan
+
+/// What a completed-but-degraded reduction reports: which ranks died,
+/// which component grids died with them, and what the re-plan combines
+/// instead.
+#[derive(Debug, Clone)]
+pub struct FaultReport {
+    /// Dead ranks (subtree-closed: a dead parent takes its orphaned
+    /// descendants' blocks with it — their partials have nowhere to go).
+    pub dead_ranks: Vec<usize>,
+    /// Component grids lost with the dead ranks (original-scheme levels).
+    pub failed: Vec<LevelVector>,
+    /// Grids the re-plan dropped beyond the failed ones to restore
+    /// downward closure of the index set.
+    pub cascaded: Vec<LevelVector>,
+    /// The recovered scheme's components with re-planned coefficients.
+    pub components: Vec<Component>,
+}
+
+/// Original-scheme component indices owned by the `dead` ranks' blocks.
+fn failed_component_indices(ranges: &[(usize, usize)], dead: &[usize]) -> Vec<usize> {
+    let mut out: Vec<usize> = dead.iter().flat_map(|&d| ranges[d].0..ranges[d].1).collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Re-plan after losing `dead` ranks: derive the failed component set from
+/// the canonical rank ranges, recompute coefficients with
+/// `combi::fault::recover`, and `validate` the result.  A pure function
+/// of `(scheme, ranks, dead)` — every rank that learns the same dead set
+/// derives the identical recovered scheme, and with it the identical
+/// canonical summation tree.
+pub fn recovered_scheme(
+    scheme: &CombinationScheme,
+    ranks: usize,
+    dead: &[usize],
+) -> Result<(CombinationScheme, FaultReport)> {
+    let ranges = rank_ranges(scheme, ranks);
+    let idx = failed_component_indices(&ranges, dead);
+    ensure!(!idx.is_empty(), "re-plan requested but the dead ranks owned no components");
+    let failed: Vec<LevelVector> =
+        idx.iter().map(|&i| scheme.components()[i].levels.clone()).collect();
+    let rec = fault::recover(scheme, &failed)
+        .with_context(|| format!("nothing survives losing ranks {dead:?}"))?;
+    if let Err(l) = fault::validate(&rec) {
+        bail!("recovered scheme fails inclusion–exclusion at subspace {l}");
+    }
+    let recovered = rec.to_scheme(scheme);
+    let report = FaultReport {
+        dead_ranks: dead.to_vec(),
+        failed,
+        cascaded: rec.cascaded,
+        components: recovered.components().to_vec(),
+    };
+    Ok((recovered, report))
+}
+
+/// Deterministic nodal fill of one component grid that exists in no
+/// rank's block: a pure function of `(levels, seed)`, so the root's
+/// regeneration and the test reference produce identical bytes.
+pub fn seeded_component_grid(levels: &LevelVector, seed: u64) -> FullGrid {
+    let mut h = seed ^ 0x9e37_79b9_7f4a_7c15;
+    for ax in 0..levels.dim() {
+        h = h.wrapping_mul(0x0000_0100_0000_01b3).wrapping_add(levels.level(ax) as u64);
+    }
+    let mut g = FullGrid::new(levels.clone());
+    let mut rng = crate::util::rng::SplitMix64::new(h);
+    g.fill_with(|_| rng.next_f64() - 0.5);
+    g
+}
+
+/// The deterministic input block of a recovered scheme: retained
+/// components keep their original [`seeded_block`] fill (`seed + original
+/// index`), components the re-plan introduced get
+/// [`seeded_component_grid`] — exactly the data a degraded seeded run
+/// reassembles, so `reduce_local(recovered, seeded_recovery_block(..))`
+/// is the bitwise reference for a chaos run.
+pub fn seeded_recovery_block(
+    original: &CombinationScheme,
+    recovered: &CombinationScheme,
+    seed: u64,
+) -> Vec<FullGrid> {
+    let orig_index: HashMap<&LevelVector, usize> =
+        original.components().iter().enumerate().map(|(i, c)| (&c.levels, i)).collect();
+    recovered
+        .components()
+        .iter()
+        .map(|c| match orig_index.get(&c.levels) {
+            Some(&i) => seeded_block(original, i, i + 1, seed).pop().expect("one grid"),
+            None => seeded_component_grid(&c.levels, seed),
+        })
+        .collect()
 }
 
 // ------------------------------------------------------------- the ranks
@@ -353,67 +522,113 @@ pub struct Measured {
     pub messages: usize,
     /// Overlap telemetry (streaming ranks only).
     pub overlap: Option<OverlapStats>,
+    /// Set when the reduction survived rank deaths by re-planning (the
+    /// root's report is authoritative).
+    pub fault: Option<FaultReport>,
 }
 
-/// Receive one child's gather contribution: either a single pre-merged
-/// partial, or (overlap streaming) a piece stream reassembled per grid and
-/// reduced with the canonical grouping over the child's block.
+/// Tag child-originated garbage with its comm class, keeping transport
+/// errors (already tagged) untouched.
+fn corrupt(e: anyhow::Error, what: &str) -> anyhow::Error {
+    e.context(format!("{what}: {}", CommError::CorruptFrame))
+}
+
+/// One child's gather contribution.
+enum Gathered {
+    /// A merged partial (or reassembled piece stream); `None` = empty.
+    Partial(Option<SparseGrid>),
+    /// The child's subtree lost these ranks; no partial is coming.
+    Failed(Vec<usize>),
+}
+
+/// Receive one child's gather contribution: a single pre-merged partial,
+/// a fault report, or (overlap streaming) a piece stream reassembled per
+/// grid and reduced with the canonical grouping over the child's block.
+/// Anything that fails validation is a [`CommError::CorruptFrame`] — the
+/// caller treats the child as dead.
 fn recv_subtree(
     t: &mut dyn Transport,
     scheme: &CombinationScheme,
     w: &[u64],
     child_range: (usize, usize),
+    timeout: Duration,
     m: &mut Measured,
-) -> Result<Option<SparseGrid>> {
+) -> Result<Gathered> {
     let (clo, chi) = child_range;
     let t0 = Instant::now();
-    let first = t.recv()?;
+    let first = t.recv_timeout(timeout)?;
     m.gather_recv_bytes += first.len();
     m.messages += 1;
-    let mut msg = wire::decode(&first)?;
+    let mut msg = wire::decode(&first).map_err(|e| corrupt(e, "gather decode"))?;
     // piece stream: bucket per grid, then canonical reduce over the block
     let mut buckets: HashMap<usize, SparseGrid> = HashMap::new();
     let mut pieces = 0usize;
     loop {
         match msg {
             Message::Partial(sg) => {
-                ensure!(pieces == 0, "partial inside a piece stream");
+                ensure!(pieces == 0, "partial inside a piece stream: {}", CommError::CorruptFrame);
                 m.gather_comm_secs += t0.elapsed().as_secs_f64();
-                return Ok((sg.subspace_count() > 0).then_some(sg));
+                return Ok(Gathered::Partial((sg.subspace_count() > 0).then_some(sg)));
+            }
+            Message::Failed { dead } => {
+                ensure!(
+                    pieces == 0,
+                    "fault report inside a piece stream: {}",
+                    CommError::CorruptFrame
+                );
+                ensure!(!dead.is_empty(), "empty fault report: {}", CommError::CorruptFrame);
+                m.gather_comm_secs += t0.elapsed().as_secs_f64();
+                return Ok(Gathered::Failed(dead));
             }
             Message::Piece { grid, part, .. } => {
                 ensure!(
                     (clo..chi).contains(&grid),
-                    "piece for grid {grid} outside child block [{clo},{chi})"
+                    "piece for grid {grid} outside child block [{clo},{chi}): {}",
+                    CommError::CorruptFrame
                 );
                 let bucket = buckets.entry(grid).or_default();
                 for (l, vals) in part.iter_sorted() {
-                    bucket
-                        .insert_subspace(l.clone(), vals.to_vec())
-                        .map_err(|e| anyhow::anyhow!("grid {grid}: {e}"))?;
+                    // `wire` rejects duplicate subspaces only *within* one
+                    // message; a duplicate across two piece messages lands
+                    // here and must be rejected too — silently re-inserting
+                    // would corrupt the reassembled grid
+                    bucket.insert_subspace(l.clone(), vals.to_vec()).map_err(|e| {
+                        anyhow::anyhow!("grid {grid}: {e}: {}", CommError::CorruptFrame)
+                    })?;
                 }
                 pieces += 1;
             }
             Message::Done { pieces: want } => {
-                ensure!(pieces == want, "piece stream: got {pieces}, done says {want}");
+                ensure!(
+                    pieces == want,
+                    "piece stream: got {pieces}, done says {want}: {}",
+                    CommError::CorruptFrame
+                );
                 break;
             }
+            Message::Replan { .. } => {
+                bail!("re-plan during the gather: {}", CommError::CorruptFrame)
+            }
         }
-        let buf = t.recv()?;
+        let buf = t.recv_timeout(timeout)?;
         m.gather_recv_bytes += buf.len();
         m.messages += 1;
-        msg = wire::decode(&buf)?;
+        msg = wire::decode(&buf).map_err(|e| corrupt(e, "gather decode"))?;
     }
     // completeness: every grid of the block fully covered by its pieces
     for i in clo..chi {
         let expected: usize =
             (0..scheme.dim()).map(|ax| scheme.components()[i].levels.level(ax) as usize).product();
         let got = buckets.get(&i).map(|b| b.subspace_count()).unwrap_or(0);
-        ensure!(got == expected, "grid {i}: {got} of {expected} subspaces streamed");
+        ensure!(
+            got == expected,
+            "grid {i}: {got} of {expected} subspaces streamed: {}",
+            CommError::CorruptFrame
+        );
     }
     let out = canon_partial(w, clo, chi, &mut |i| buckets.remove(&i).expect("validated above"));
     m.gather_comm_secs += t0.elapsed().as_secs_f64();
-    Ok(out)
+    Ok(Gathered::Partial(out))
 }
 
 /// Overlap streaming: hierarchize the block while a sender thread ships
@@ -496,14 +711,268 @@ fn stream_and_send(
     Ok(())
 }
 
+/// The recovery epoch of a non-root rank: forward the re-plan to alive
+/// children, re-gather the local block's surviving components with the
+/// *recovered* coefficients and ship them as pieces (tagged by original
+/// component index), relay the children's piece streams unmerged, close
+/// with a `done` marker.  Only the root merges — that is what keeps the
+/// degraded result bitwise equal to the recovered-scheme reference.
+#[allow(clippy::too_many_arguments)]
+fn child_recovery(
+    scheme: &CombinationScheme,
+    topo: &Topology,
+    rank: usize,
+    lo: usize,
+    grids: &[FullGrid],
+    links: &mut RankLinks,
+    dead: &[usize],
+    timeout: Duration,
+    m: &mut Measured,
+) -> Result<FaultReport> {
+    let dim = scheme.dim();
+    let (rec, report) = recovered_scheme(scheme, topo.ranks(), dead)?;
+    let rec_coeff: HashMap<&LevelVector, f64> =
+        rec.components().iter().map(|c| (&c.levels, c.coeff)).collect();
+    let child_ids = topo.children(rank);
+    let RankLinks { parent, children } = links;
+    let parent = parent.as_mut().expect("child recovery needs a parent");
+    // forward the re-plan first: children re-gather while we ship our block
+    let replan_msg = wire::encode_replan(dead, dim);
+    let mut alive: Vec<usize> = Vec::new();
+    for (i, &c) in child_ids.iter().enumerate() {
+        if dead.contains(&c) {
+            continue;
+        }
+        let t0 = Instant::now();
+        children[i]
+            .send(&replan_msg)
+            .with_context(|| format!("rank {rank}: re-plan to child {c}"))?;
+        m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+        m.scatter_sent_bytes += replan_msg.len();
+        m.messages += 1;
+        alive.push(i);
+    }
+    // the recovered coefficient is applied at gather time: summing
+    // `coeff * v` into an empty subspace is not bitwise `coeff * (0 + v)`
+    // scaled after the fact (signed zeros)
+    let mut sent = 0usize;
+    for (k, g) in grids.iter().enumerate() {
+        let i = lo + k;
+        let Some(&coeff) = rec_coeff.get(&scheme.components()[i].levels) else { continue };
+        let mut sg = SparseGrid::new();
+        sg.gather(g, coeff);
+        let buf = wire::encode_piece(i, dim, &sg, dim);
+        let t0 = Instant::now();
+        parent.send(&buf).with_context(|| format!("rank {rank}: recovery piece {i}"))?;
+        m.gather_comm_secs += t0.elapsed().as_secs_f64();
+        m.gather_sent_bytes += buf.len();
+        m.messages += 1;
+        sent += 1;
+    }
+    for idx in alive {
+        let mut got = 0usize;
+        loop {
+            let t0 = Instant::now();
+            let buf = children[idx].recv_timeout(timeout).with_context(|| {
+                format!("rank {rank}: recovery relay from child {}", child_ids[idx])
+            })?;
+            m.gather_comm_secs += t0.elapsed().as_secs_f64();
+            m.gather_recv_bytes += buf.len();
+            m.messages += 1;
+            match wire::decode(&buf).map_err(|e| corrupt(e, "recovery relay decode"))? {
+                Message::Piece { .. } => {
+                    parent.send(&buf).context("relaying recovery piece")?;
+                    m.gather_sent_bytes += buf.len();
+                    m.messages += 1;
+                    got += 1;
+                    sent += 1;
+                }
+                Message::Done { pieces } => {
+                    ensure!(
+                        got == pieces,
+                        "recovery relay: got {got}, done says {pieces}: {}",
+                        CommError::CorruptFrame
+                    );
+                    break;
+                }
+                other => {
+                    bail!("recovery relay: unexpected {other:?}: {}", CommError::CorruptFrame)
+                }
+            }
+        }
+    }
+    let done = wire::encode_done(sent, dim);
+    parent.send(&done).context("recovery done marker")?;
+    m.gather_sent_bytes += done.len();
+    m.messages += 1;
+    Ok(report)
+}
+
+/// The root's recovery: broadcast the re-plan, collect every surviving
+/// component as a piece (own block + the alive subtrees' streams),
+/// regenerate re-planned components nobody owned, and apply the canonical
+/// grouping over the *recovered* scheme — by construction bitwise equal
+/// to [`reduce_local`] on that scheme with the same inputs and options.
+#[allow(clippy::too_many_arguments)]
+fn root_recover(
+    scheme: &CombinationScheme,
+    topo: &Topology,
+    ranges: &[(usize, usize)],
+    lo: usize,
+    grids: &[FullGrid],
+    links: &mut RankLinks,
+    opts: &ReduceOptions,
+    dead: &[usize],
+    timeout: Duration,
+    m: &mut Measured,
+) -> Result<(SparseGrid, FaultReport)> {
+    let dim = scheme.dim();
+    let (rec, report) = recovered_scheme(scheme, topo.ranks(), dead)?;
+    let rec_coeff: HashMap<&LevelVector, f64> =
+        rec.components().iter().map(|c| (&c.levels, c.coeff)).collect();
+    let orig_index: HashMap<&LevelVector, usize> =
+        scheme.components().iter().enumerate().map(|(i, c)| (&c.levels, i)).collect();
+    let failed_set: HashSet<usize> = failed_component_indices(ranges, dead).into_iter().collect();
+    let child_ids = topo.children(0);
+    let children = &mut links.children;
+    let replan_msg = wire::encode_replan(dead, dim);
+    let mut alive: Vec<usize> = Vec::new();
+    for (i, &c) in child_ids.iter().enumerate() {
+        // a dead child gets nothing; its orphaned descendants time out on
+        // their scatter wait and exit — their blocks are in `dead`
+        if dead.contains(&c) {
+            continue;
+        }
+        let t0 = Instant::now();
+        children[i].send(&replan_msg).with_context(|| format!("re-plan to child {c}"))?;
+        m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+        m.scatter_sent_bytes += replan_msg.len();
+        m.messages += 1;
+        alive.push(i);
+    }
+    // bucket per ORIGINAL component index, own block first
+    let mut bucket: HashMap<usize, SparseGrid> = HashMap::new();
+    for (k, g) in grids.iter().enumerate() {
+        let i = lo + k;
+        if let Some(&coeff) = rec_coeff.get(&scheme.components()[i].levels) {
+            let mut sg = SparseGrid::new();
+            sg.gather(g, coeff);
+            bucket.insert(i, sg);
+        }
+    }
+    for idx in alive {
+        let child = child_ids[idx];
+        let (slo, shi) = subtree_span(topo, ranges, child);
+        let mut got = 0usize;
+        loop {
+            let t0 = Instant::now();
+            let buf = children[idx]
+                .recv_timeout(timeout)
+                .with_context(|| format!("recovery collect from child {child}"))?;
+            m.gather_comm_secs += t0.elapsed().as_secs_f64();
+            m.gather_recv_bytes += buf.len();
+            m.messages += 1;
+            match wire::decode(&buf).map_err(|e| corrupt(e, "recovery decode"))? {
+                Message::Piece { grid, part, .. } => {
+                    ensure!(
+                        (slo..shi).contains(&grid),
+                        "recovery piece for grid {grid} outside subtree span [{slo},{shi}): {}",
+                        CommError::CorruptFrame
+                    );
+                    ensure!(
+                        !failed_set.contains(&grid),
+                        "recovery piece for failed grid {grid}: {}",
+                        CommError::CorruptFrame
+                    );
+                    let levels = &scheme.components()[grid].levels;
+                    ensure!(
+                        rec_coeff.contains_key(levels),
+                        "recovery piece for grid {grid} outside the recovered scheme: {}",
+                        CommError::CorruptFrame
+                    );
+                    let expected: usize =
+                        (0..dim).map(|ax| levels.level(ax) as usize).product();
+                    ensure!(
+                        part.subspace_count() == expected,
+                        "recovery piece for grid {grid}: {} of {expected} subspaces: {}",
+                        part.subspace_count(),
+                        CommError::CorruptFrame
+                    );
+                    ensure!(
+                        bucket.insert(grid, part).is_none(),
+                        "duplicate recovery piece for grid {grid}: {}",
+                        CommError::CorruptFrame
+                    );
+                    got += 1;
+                }
+                Message::Done { pieces } => {
+                    ensure!(
+                        got == pieces,
+                        "recovery collect: got {got}, done says {pieces}: {}",
+                        CommError::CorruptFrame
+                    );
+                    break;
+                }
+                other => {
+                    bail!("recovery collect: unexpected {other:?}: {}", CommError::CorruptFrame)
+                }
+            }
+        }
+    }
+    // every recovered component needs a source before the canonical merge
+    for c in rec.components() {
+        match orig_index.get(&c.levels) {
+            Some(i) => ensure!(
+                bucket.contains_key(i),
+                "recovered component {} (original grid {i}) missing from the survivors: {}",
+                c.levels,
+                CommError::CorruptFrame
+            ),
+            None => ensure!(
+                opts.recovery_seed.is_some(),
+                "re-planned component {} is outside the original scheme and no recovery \
+                 seed is set — cannot regenerate it deterministically",
+                c.levels
+            ),
+        }
+    }
+    // canonical merge over the RECOVERED scheme
+    let rw = weights(&rec);
+    let bopts = batch_opts(opts, false);
+    let t0 = Instant::now();
+    let full = canon_partial(&rw, 0, rec.len(), &mut |j| {
+        let c = &rec.components()[j];
+        match orig_index.get(&c.levels) {
+            Some(i) => bucket.remove(i).expect("validated above"),
+            None => {
+                // inclusion–exclusion on the shrunk index set can activate
+                // interior grids the original scheme weighted zero — no
+                // rank ever computed them; rebuild from the seed
+                let g = seeded_component_grid(&c.levels, opts.recovery_seed.expect("validated"));
+                let mut block = [g];
+                hierarchize_slice(&rec, j, &mut block, &bopts);
+                let mut sg = SparseGrid::new();
+                sg.gather(&block[0], c.coeff);
+                sg
+            }
+        }
+    })
+    .unwrap_or_default();
+    debug_assert!(bucket.is_empty(), "unconsumed recovery pieces");
+    m.compute_secs += t0.elapsed().as_secs_f64();
+    Ok((full, report))
+}
+
 /// Run one rank of the reduction: local compute, gather up the tree,
 /// broadcast down, optional local scatter + dehierarchize.  Returns the
-/// reduced sparse grid (every rank holds it after the broadcast) plus this
-/// rank's measurements.
+/// reduced sparse grid (every surviving rank holds it after the
+/// broadcast) plus this rank's measurements; a degraded run carries the
+/// root's [`FaultReport`] in [`Measured::fault`].
 ///
 /// `grids` is this rank's canonical block (`rank_ranges`), nodal values in
 /// position layout; with `scatter_back` they end nodal in position layout
-/// again, holding the combined solution.
+/// again, holding the combined solution (after a re-plan: its projection
+/// onto the recovered index set — dropped subspaces scatter as zeros).
 pub fn run_rank(
     scheme: &CombinationScheme,
     rank: usize,
@@ -534,10 +1003,25 @@ pub fn run_rank(
     );
     let w = weights(scheme);
     let dim = scheme.dim();
+    let timeout = opts.timeout();
+    // the scatter wait spans the whole tree (the root may still be
+    // collecting other branches, or re-planning): one deadline per level
+    let leash = timeout.saturating_mul(topo.n_rounds() as u32 + 2);
     let mut m = Measured { rank, grids: grids.len(), ..Default::default() };
 
+    // a dead peer must not wedge us on send backpressure either
+    if let Some(p) = links.parent.as_mut() {
+        p.set_send_deadline(Some(leash))?;
+    }
+    for c in links.children.iter_mut() {
+        c.set_send_deadline(Some(leash))?;
+    }
+
+    let victim = opts.chaos.filter(|s| s.rank == rank);
+
     // ---- local compute (streaming ranks overlap their sends with it) ----
-    let streaming = opts.overlap && links.children.is_empty() && links.parent.is_some();
+    let streaming =
+        opts.overlap && links.children.is_empty() && links.parent.is_some() && victim.is_none();
     let mut mine: Option<SparseGrid> = None;
     if streaming {
         stream_and_send(links.parent.as_mut().unwrap().as_mut(), scheme, lo, grids, opts, &mut m)?;
@@ -550,15 +1034,47 @@ pub fn run_rank(
         mine = gather_partial(scheme, lo, hi, grids);
     }
 
-    // ---- gather: merge children (round order), send up ----
+    // ---- gather: merge children (round order), detect failures ----
     let child_ids = topo.children(rank);
+    let mut dead: Vec<usize> = Vec::new();
     for (link, &child) in links.children.iter_mut().zip(&child_ids) {
-        let sub = recv_subtree(link.as_mut(), scheme, &w, ranges[child], &mut m)?;
-        // receiver (lower canonical range) stays the left operand
-        mine = merge_opt(mine, sub);
+        match recv_subtree(link.as_mut(), scheme, &w, ranges[child], timeout, &mut m) {
+            Ok(Gathered::Partial(sub)) => {
+                // receiver (lower canonical range) stays the left operand
+                mine = merge_opt(mine, sub);
+            }
+            Ok(Gathered::Failed(d)) => dead.extend(d),
+            Err(e) => {
+                if CommError::classify(&e).is_none() {
+                    // not a peer-liveness failure: an internal error, which
+                    // must propagate instead of triggering a re-plan
+                    return Err(e.context(format!("rank {rank}: receiving from child {child}")));
+                }
+                // slow, dead or garbling child: its whole subtree is lost
+                dead.extend(subtree_ranks(&topo, child));
+            }
+        }
     }
+    dead.sort_unstable();
+    dead.dedup();
+    // a dead subtree owning no components needs no re-plan: the lost
+    // contribution was empty and the reduction proceeds undamaged
+    let replan = !failed_component_indices(&ranges, &dead).is_empty();
+
     if let Some(parent) = links.parent.as_mut() {
-        if !streaming {
+        if replan {
+            let payload = wire::encode_failed(&dead, dim);
+            let t0 = Instant::now();
+            parent.send(&payload).with_context(|| format!("rank {rank}: fault report"))?;
+            m.gather_comm_secs += t0.elapsed().as_secs_f64();
+            m.gather_sent_bytes += payload.len();
+            m.messages += 1;
+        } else if let Some(spec) = victim {
+            // the injection point: this rank's subtree contribution is due
+            let empty = SparseGrid::new();
+            let payload = wire::encode_partial(mine.as_ref().unwrap_or(&empty), dim);
+            return Err(chaos::die(&spec, &payload, timeout, &mut |b| parent.send(b)));
+        } else if !streaming {
             let empty = SparseGrid::new();
             let payload = wire::encode_partial(mine.as_ref().unwrap_or(&empty), dim);
             let t0 = Instant::now();
@@ -569,24 +1085,57 @@ pub fn run_rank(
         }
     }
 
-    // ---- scatter: receive the reduced grid, broadcast down reversed ----
-    let full = if let Some(parent) = links.parent.as_mut() {
-        let t0 = Instant::now();
-        let buf = parent.recv()?;
-        m.scatter_comm_secs += t0.elapsed().as_secs_f64();
-        m.scatter_recv_bytes += buf.len();
-        m.messages += 1;
-        match wire::decode(&buf)? {
-            Message::Partial(sg) => sg,
-            other => bail!("scatter expected a partial, got {other:?}"),
+    // ---- scatter: receive the reduced grid (or a re-plan), broadcast ----
+    let mut fault: Option<FaultReport> = None;
+    let full = if topo.parent(rank).is_some() {
+        loop {
+            let buf = {
+                let parent = links.parent.as_mut().unwrap();
+                let t0 = Instant::now();
+                let buf = parent
+                    .recv_timeout(leash)
+                    .with_context(|| format!("rank {rank}: waiting for the scatter"))?;
+                m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+                m.scatter_recv_bytes += buf.len();
+                m.messages += 1;
+                buf
+            };
+            match wire::decode(&buf).map_err(|e| corrupt(e, "scatter decode"))? {
+                Message::Partial(sg) => break sg,
+                Message::Replan { dead: plan } => {
+                    ensure!(
+                        fault.is_none(),
+                        "second re-plan in one reduction: {}",
+                        CommError::CorruptFrame
+                    );
+                    ensure!(!plan.is_empty(), "empty re-plan: {}", CommError::CorruptFrame);
+                    fault = Some(child_recovery(
+                        scheme, &topo, rank, lo, grids, links, &plan, timeout, &mut m,
+                    )?);
+                }
+                other => bail!(
+                    "scatter expected a partial or re-plan, got {other:?}: {}",
+                    CommError::CorruptFrame
+                ),
+            }
         }
+    } else if replan {
+        let (f, report) =
+            root_recover(scheme, &topo, &ranges, lo, grids, links, opts, &dead, timeout, &mut m)?;
+        fault = Some(report);
+        f
     } else {
         mine.take().unwrap_or_default()
     };
+    let dead_now: Vec<usize> =
+        fault.as_ref().map(|f| f.dead_ranks.clone()).unwrap_or_else(|| dead.clone());
     let payload = wire::encode_partial(&full, dim);
-    for link in links.children.iter_mut().rev() {
+    for (link, &child) in links.children.iter_mut().zip(&child_ids).rev() {
+        if dead_now.contains(&child) {
+            continue;
+        }
         let t0 = Instant::now();
-        link.send(&payload)?;
+        link.send(&payload).with_context(|| format!("rank {rank}: scatter to child {child}"))?;
         m.scatter_comm_secs += t0.elapsed().as_secs_f64();
         m.scatter_sent_bytes += payload.len();
         m.messages += 1;
@@ -603,6 +1152,7 @@ pub fn run_rank(
         dehierarchize_slice(scheme, lo, grids, &batch_opts(opts, true));
         m.dehier_secs = t0.elapsed().as_secs_f64();
     }
+    m.fault = fault;
     Ok((full, m))
 }
 
@@ -610,8 +1160,12 @@ pub fn run_rank(
 
 /// Run the whole reduction in one process: `ranks` worker threads connected
 /// by [`InProcess`] channel pairs, grids partitioned by [`rank_ranges`].
-/// Returns the reduced sparse grid and every rank's measurements (rank
-/// order).  With `scatter_back`, `grids` end holding the combined solution.
+/// Returns the reduced sparse grid and the surviving ranks' measurements
+/// (rank order; dead ranks are absent and listed in the root's
+/// [`FaultReport`]).  With `scatter_back`, surviving blocks end holding
+/// the combined solution.  Rank failures are tolerated exactly when the
+/// root's fault report accounts for them (or they are the injected chaos
+/// victim); anything else propagates.
 pub fn reduce_in_process(
     scheme: &CombinationScheme,
     grids: &mut [FullGrid],
@@ -678,18 +1232,37 @@ pub fn reduce_in_process(
         debug_assert_eq!(zero_rank, 0);
         for (rank, (block, mut rl)) in rank_inputs {
             let measured = &measured;
-            handles.push(s.spawn(move || -> Result<()> {
-                let (_, m) = run_rank(scheme, rank, ranks, block, &mut rl, opts)?;
-                measured.lock().unwrap().push(m);
-                Ok(())
-            }));
+            handles.push((
+                rank,
+                s.spawn(move || -> Result<()> {
+                    let (_, m) = run_rank(scheme, rank, ranks, block, &mut rl, opts)?;
+                    measured.lock().unwrap().push(m);
+                    Ok(())
+                }),
+            ));
         }
-        let (sparse, m0) = run_rank(scheme, 0, ranks, zero_block, &mut zero_links, opts)?;
+        let root_res = run_rank(scheme, 0, ranks, zero_block, &mut zero_links, opts);
+        // join everyone first — the per-receive deadlines bound every
+        // block, so this terminates even when ranks died mid-protocol
+        let mut failures: Vec<(usize, anyhow::Error)> = Vec::new();
+        for (rank, h) in handles {
+            if let Err(e) = h.join().expect("rank thread panicked") {
+                failures.push((rank, e));
+            }
+        }
+        let (sparse, m0) = root_res?;
+        let dead: Vec<usize> =
+            m0.fault.as_ref().map(|f| f.dead_ranks.clone()).unwrap_or_default();
+        for (rank, e) in failures {
+            let injected = opts.chaos.is_some_and(|spec| spec.rank == rank);
+            if !injected && !dead.contains(&rank) {
+                return Err(
+                    e.context(format!("rank {rank} failed without a matching fault report"))
+                );
+            }
+        }
         measured.lock().unwrap().push(m0);
         *root_ref = Some(sparse);
-        for h in handles {
-            h.join().expect("rank thread panicked")?;
-        }
         Ok(())
     })?;
     let mut ms = measured.into_inner().unwrap();
@@ -701,6 +1274,18 @@ pub fn reduce_in_process(
 /// exactly one parent edge; the parent binds, the child connects).
 pub fn edge_path(dir: &Path, child: usize) -> PathBuf {
     dir.join(format!("edge_{child}.sock"))
+}
+
+static RUN_NONCE: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh per-run Unix-socket endpoint directory (pid + seed + nonce):
+/// two reduces — back-to-back or concurrent — can never collide on socket
+/// paths, so `UnixSocket::bind`'s refusal to clobber a live socket only
+/// ever fires on a genuine configuration error.  Callers remove the dir
+/// on orderly shutdown.
+pub fn unique_run_dir(seed: u64) -> PathBuf {
+    let nonce = RUN_NONCE.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("sgct_comm_{}_{seed}_{nonce}", std::process::id()))
 }
 
 /// Establish this rank's Unix-socket links inside `dir`: bind listeners
@@ -746,6 +1331,7 @@ pub fn seeded_block(scheme: &CombinationScheme, lo: usize, hi: usize, seed: u64)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::chaos::ChaosKind;
     use crate::util::rng::SplitMix64;
 
     #[test]
@@ -766,6 +1352,32 @@ mod tests {
         assert_eq!(t.n_rounds(), 3);
         assert_eq!(t.rounds()[0], vec![(3, 0), (4, 1)]);
         assert_eq!(Topology::new(1).n_rounds(), 0);
+    }
+
+    #[test]
+    fn subtrees_are_closed_and_span_contiguously() {
+        let topo = Topology::new(8);
+        assert_eq!(subtree_ranks(&topo, 0), vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(subtree_ranks(&topo, 1), vec![1, 3, 5, 7]);
+        assert_eq!(subtree_ranks(&topo, 3), vec![3, 7]);
+        assert_eq!(subtree_ranks(&topo, 6), vec![6]);
+        // a subtree's member ranges tile one contiguous canonical span
+        let scheme = CombinationScheme::regular(3, 5);
+        let ranges = rank_ranges(&scheme, 8);
+        for rank in 0..8 {
+            let (slo, shi) = subtree_span(&topo, &ranges, rank);
+            let mut member: Vec<(usize, usize)> = subtree_ranks(&topo, rank)
+                .into_iter()
+                .map(|r| ranges[r])
+                .filter(|&(lo, hi)| hi > lo)
+                .collect();
+            member.sort();
+            let covered: usize = member.iter().map(|&(lo, hi)| hi - lo).sum();
+            assert_eq!(covered, shi - slo, "rank {rank}: span not tiled");
+            for w in member.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "rank {rank}: gap inside the subtree span");
+            }
+        }
     }
 
     #[test]
@@ -810,6 +1422,7 @@ mod tests {
                 let (got, ms) = reduce_in_process(&scheme, &mut grids, ranks, &opts).unwrap();
                 assert!(got.bitwise_eq(&want), "x{ranks} {transport:?} diverged");
                 assert_eq!(ms.len(), ranks);
+                assert!(ms.iter().all(|m| m.fault.is_none()), "phantom fault report");
                 // hierarchized grids equal the reference's, block by block
                 for (g, r) in grids.iter().zip(&reference) {
                     assert_eq!(g.as_slice(), r.as_slice(), "x{ranks} {transport:?}");
@@ -872,5 +1485,100 @@ mod tests {
         let rand: Vec<u64> = (0..9).map(|_| rng.next_range(1, 1000)).collect();
         let m = canon_mid(&rand, 0, 9);
         assert!((1..9).contains(&m));
+    }
+
+    /// Satellite audit: `wire` rejects duplicate subspaces only within one
+    /// message; a child repeating a subspace across two piece messages is
+    /// a real cross-message hazard.  Pin that the parent-side reassembly
+    /// rejects it as a corrupt frame instead of silently double-adding.
+    #[test]
+    fn duplicate_piece_across_messages_is_a_corrupt_frame() {
+        let scheme = CombinationScheme::regular(2, 2);
+        let w = weights(&scheme);
+        let (mut parent_end, mut child_end) = InProcess::pair(8);
+        let mut sg = SparseGrid::new();
+        sg.subspace_mut(&LevelVector::new(&[1, 1]))[0] = 1.0;
+        let piece = wire::encode_piece(0, 2, &sg, 2);
+        child_end.send(&piece).unwrap();
+        child_end.send(&piece).unwrap(); // same subspace again, new message
+        child_end.send(&wire::encode_done(2, 2)).unwrap();
+        let mut m = Measured::default();
+        let err = recv_subtree(
+            &mut parent_end,
+            &scheme,
+            &w,
+            (0, scheme.len()),
+            Duration::from_secs(5),
+            &mut m,
+        )
+        .unwrap_err();
+        assert_eq!(CommError::classify(&err), Some(CommError::CorruptFrame), "{err:#}");
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+    }
+
+    /// Every chaos kind at a fixed tree position: the reduction completes,
+    /// reports the victim, and the degraded sparse grid is bitwise equal
+    /// to `reduce_local` on the recovered scheme with the deterministic
+    /// recovery inputs.
+    #[test]
+    fn chaos_kills_recover_bitwise_to_the_recovered_reference() {
+        let scheme = CombinationScheme::regular(2, 4);
+        let n = scheme.len();
+        let seed = 4242u64;
+        let ranks = 4usize;
+        for kind in ChaosKind::ALL {
+            let spec = ChaosSpec { seed: 9, kind, rank: 2 };
+            let opts = ReduceOptions {
+                scatter_back: false,
+                timeout_ms: Some(250),
+                chaos: Some(spec),
+                recovery_seed: Some(seed),
+                ..Default::default()
+            };
+            let mut grids = seeded_block(&scheme, 0, n, seed);
+            let (got, ms) = reduce_in_process(&scheme, &mut grids, ranks, &opts)
+                .unwrap_or_else(|e| panic!("{kind:?}: {e:#}"));
+            let root = ms.iter().find(|m| m.rank == 0).expect("root measured");
+            let report = root.fault.as_ref().unwrap_or_else(|| panic!("{kind:?}: no report"));
+            assert!(report.dead_ranks.contains(&2), "{kind:?}: {:?}", report.dead_ranks);
+            assert!(!report.failed.is_empty(), "{kind:?}: no failed grids");
+            let (rec, _) = recovered_scheme(&scheme, ranks, &report.dead_ranks).unwrap();
+            let mut reference = seeded_recovery_block(&scheme, &rec, seed);
+            let want = reduce_local(&rec, &mut reference, &ReduceOptions {
+                scatter_back: false,
+                ..Default::default()
+            });
+            assert!(got.bitwise_eq(&want), "{kind:?}: degraded result diverged");
+        }
+    }
+
+    /// Losing a rank whose canonical block is empty (ranks > grids) needs
+    /// no re-plan: the result stays bitwise the fault-free reference.
+    #[test]
+    fn a_dead_empty_rank_needs_no_replan() {
+        let scheme = CombinationScheme::regular(2, 2); // 3 grids
+        let ranks = 8usize;
+        let topo = Topology::new(ranks);
+        let ranges = rank_ranges(&scheme, ranks);
+        // an empty LEAF: an empty interior rank would orphan alive
+        // descendants, whose deaths are only accounted for when a re-plan
+        // carries a fault report — without one they rightly fail the run
+        let victim = (1..ranks)
+            .find(|&r| ranges[r].0 == ranges[r].1 && topo.children(r).is_empty())
+            .expect("an empty leaf rank");
+        let mut reference = seeded_block(&scheme, 0, scheme.len(), 77);
+        let base = ReduceOptions { scatter_back: false, ..Default::default() };
+        let want = reduce_local(&scheme, &mut reference, &base);
+        let opts = ReduceOptions {
+            timeout_ms: Some(250),
+            chaos: Some(ChaosSpec { seed: 1, kind: ChaosKind::KillBeforeSend, rank: victim }),
+            recovery_seed: Some(77),
+            ..base
+        };
+        let mut grids = seeded_block(&scheme, 0, scheme.len(), 77);
+        let (got, ms) = reduce_in_process(&scheme, &mut grids, ranks, &opts).unwrap();
+        assert!(got.bitwise_eq(&want), "empty-rank death perturbed the sum");
+        let root = ms.iter().find(|m| m.rank == 0).unwrap();
+        assert!(root.fault.is_none(), "no components lost, no re-plan expected");
     }
 }

@@ -12,31 +12,105 @@
 //! Frames are `u32 le` length + payload; the payload is a `comm::wire`
 //! message, which is itself versioned and self-validating — the frame
 //! length is transport plumbing, not the format's integrity story.
+//!
+//! **Failure classes.**  Every deadline-aware receive surfaces a typed
+//! [`CommError`] so the reduction tree can distinguish a *slow* peer
+//! ([`CommError::PeerTimeout`]) from a *dead* one
+//! ([`CommError::PeerClosed`]) from one sending *garbage*
+//! ([`CommError::CorruptFrame`]).  The vendored `anyhow` is a plain
+//! message chain (no downcast), so the class travels as a stable tag
+//! inside the chain text and [`CommError::classify`] recovers it from any
+//! wrapping depth.
 
+use std::fmt;
 use std::io::{Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::Path;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::time::{Duration, Instant};
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 /// Largest accepted frame (1 GiB) — rejects garbage length prefixes before
 /// they become allocations.
 pub const MAX_FRAME: usize = 1 << 30;
 
+/// Typed failure class of a transport operation, carried as a stable tag
+/// inside the error chain (the offline `anyhow` subset has no downcast).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommError {
+    /// The peer produced nothing before the deadline — slow or wedged.
+    PeerTimeout,
+    /// The peer's endpoint is gone — process death or dropped link.
+    PeerClosed,
+    /// The peer sent bytes that failed frame or `wire` validation.
+    CorruptFrame,
+}
+
+impl CommError {
+    /// The stable chain marker [`classify`](Self::classify) scans for.
+    pub const fn tag(self) -> &'static str {
+        match self {
+            CommError::PeerTimeout => "[comm: peer-timeout]",
+            CommError::PeerClosed => "[comm: peer-closed]",
+            CommError::CorruptFrame => "[comm: corrupt-frame]",
+        }
+    }
+
+    /// Recover the failure class from an error chain, however deeply the
+    /// reduction code wrapped it with context.  `None` for errors that did
+    /// not originate in the transport/wire layer (internal bugs propagate
+    /// instead of being mistaken for a dead peer).
+    pub fn classify(e: &anyhow::Error) -> Option<CommError> {
+        let chain = format!("{e:#}");
+        [CommError::PeerTimeout, CommError::PeerClosed, CommError::CorruptFrame]
+            .into_iter()
+            .find(|c| chain.contains(c.tag()))
+    }
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::PeerTimeout => write!(f, "{} peer deadline expired", self.tag()),
+            CommError::PeerClosed => write!(f, "{} peer endpoint closed", self.tag()),
+            CommError::CorruptFrame => write!(f, "{} frame failed validation", self.tag()),
+        }
+    }
+}
+
+/// Default receive/send deadline of the reduction tree:
+/// `SGCT_COMM_TIMEOUT_MS` (generous 30 s when unset or unparsable).
+pub fn default_timeout() -> Duration {
+    std::env::var("SGCT_COMM_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_secs(30))
+}
+
 /// A bidirectional, ordered, reliable message link between two ranks.
 pub trait Transport: Send {
-    /// Send one message (blocking; backpressure applies).
+    /// Send one message (blocking; backpressure applies, bounded by the
+    /// send deadline when one is set).
     fn send(&mut self, msg: &[u8]) -> Result<()>;
-    /// Receive the next message (blocking).
+    /// Receive the next message (blocking, no deadline).
     fn recv(&mut self) -> Result<Vec<u8>>;
+    /// Receive the next message or fail with [`CommError::PeerTimeout`]
+    /// once `timeout` elapses.  Every tree receive in `comm::reduce` goes
+    /// through this — a dead peer can no longer wedge the reduction.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Vec<u8>>;
+    /// Bound how long `send` may block on backpressure (`None` = forever).
+    /// Sender threads (overlap streaming) set this so a dead parent cannot
+    /// wedge them either.
+    fn set_send_deadline(&mut self, deadline: Option<Duration>) -> Result<()>;
 }
 
 /// In-process transport: a pair of bounded byte-vector channels.
 pub struct InProcess {
     tx: SyncSender<Vec<u8>>,
     rx: Receiver<Vec<u8>>,
+    send_deadline: Option<Duration>,
 }
 
 impl InProcess {
@@ -45,17 +119,82 @@ impl InProcess {
     pub fn pair(capacity: usize) -> (InProcess, InProcess) {
         let (atx, brx) = sync_channel(capacity.max(1));
         let (btx, arx) = sync_channel(capacity.max(1));
-        (InProcess { tx: atx, rx: arx }, InProcess { tx: btx, rx: brx })
+        (
+            InProcess { tx: atx, rx: arx, send_deadline: None },
+            InProcess { tx: btx, rx: brx, send_deadline: None },
+        )
     }
 }
 
 impl Transport for InProcess {
     fn send(&mut self, msg: &[u8]) -> Result<()> {
-        self.tx.send(msg.to_vec()).map_err(|_| anyhow::anyhow!("peer endpoint dropped"))
+        let Some(d) = self.send_deadline else {
+            return self
+                .tx
+                .send(msg.to_vec())
+                .map_err(|_| anyhow::anyhow!("in-process send: {}", CommError::PeerClosed));
+        };
+        // SyncSender has no send_timeout: poll try_send against the deadline
+        let deadline = Instant::now() + d;
+        let mut v = msg.to_vec();
+        loop {
+            match self.tx.try_send(v) {
+                Ok(()) => return Ok(()),
+                Err(TrySendError::Full(back)) => {
+                    if Instant::now() >= deadline {
+                        bail!("in-process send: {}", CommError::PeerTimeout);
+                    }
+                    v = back;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    bail!("in-process send: {}", CommError::PeerClosed)
+                }
+            }
+        }
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        self.rx.recv().map_err(|_| anyhow::anyhow!("peer endpoint dropped"))
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("in-process recv: {}", CommError::PeerClosed))
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Vec<u8>> {
+        use std::sync::mpsc::RecvTimeoutError;
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => {
+                anyhow::anyhow!("in-process recv after {timeout:?}: {}", CommError::PeerTimeout)
+            }
+            RecvTimeoutError::Disconnected => {
+                anyhow::anyhow!("in-process recv: {}", CommError::PeerClosed)
+            }
+        })
+    }
+
+    fn set_send_deadline(&mut self, deadline: Option<Duration>) -> Result<()> {
+        self.send_deadline = deadline;
+        Ok(())
+    }
+}
+
+/// Map an io failure to its comm class (`None` = not a peer-liveness
+/// signal; the caller keeps the raw error).
+fn io_class(e: &std::io::Error) -> Option<CommError> {
+    use std::io::ErrorKind::*;
+    match e.kind() {
+        WouldBlock | TimedOut => Some(CommError::PeerTimeout),
+        UnexpectedEof | BrokenPipe | ConnectionReset | ConnectionAborted | NotConnected => {
+            Some(CommError::PeerClosed)
+        }
+        _ => None,
+    }
+}
+
+fn io_err(e: std::io::Error, what: &str) -> anyhow::Error {
+    match io_class(&e) {
+        Some(c) => anyhow::anyhow!("{what}: {c}"),
+        None => anyhow::Error::from(e).context(what.to_string()),
     }
 }
 
@@ -70,7 +209,8 @@ impl UnixSocket {
     }
 
     /// Connect to `path`, retrying until the listener exists (the peer
-    /// rank may still be starting up) or `timeout` elapses.
+    /// rank may still be starting up) or `timeout` elapses — a
+    /// never-appearing listener surfaces [`CommError::PeerTimeout`].
     pub fn connect_retry(path: &Path, timeout: Duration) -> Result<Self> {
         let start = Instant::now();
         loop {
@@ -78,9 +218,11 @@ impl UnixSocket {
                 Ok(s) => return Ok(Self { stream: s }),
                 Err(e) => {
                     if start.elapsed() > timeout {
-                        return Err(e).with_context(|| {
-                            format!("connect {} (gave up after {timeout:?})", path.display())
-                        });
+                        return Err(anyhow::anyhow!(
+                            "connect {} (gave up after {timeout:?}, last: {e}): {}",
+                            path.display(),
+                            CommError::PeerTimeout
+                        ));
                     }
                     std::thread::sleep(Duration::from_millis(10));
                 }
@@ -88,10 +230,20 @@ impl UnixSocket {
         }
     }
 
-    /// Bind a fresh listener at `path` (any stale socket file is removed —
-    /// paths live in a per-run temp directory).
+    /// Bind a listener at `path`.  A connectable socket already there has
+    /// a live owner — refuse to hijack it (two runs must not share an
+    /// endpoint dir); a non-connectable leftover is stale and is cleared.
     pub fn bind(path: &Path) -> Result<UnixListener> {
-        let _ = std::fs::remove_file(path);
+        if path.exists() {
+            if UnixStream::connect(path).is_ok() {
+                bail!(
+                    "socket {} is owned by a live listener; refusing to clobber it \
+                     (is another reduce sharing this endpoint dir?)",
+                    path.display()
+                );
+            }
+            let _ = std::fs::remove_file(path);
+        }
         UnixListener::bind(path).with_context(|| format!("bind {}", path.display()))
     }
 
@@ -100,25 +252,40 @@ impl UnixSocket {
         let (stream, _) = listener.accept().context("accept")?;
         Ok(Self { stream })
     }
+
+    fn recv_inner(&mut self) -> Result<Vec<u8>> {
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len).map_err(|e| io_err(e, "read frame length"))?;
+        let len = u32::from_le_bytes(len) as usize;
+        ensure!(len <= MAX_FRAME, "frame length {len} > MAX_FRAME: {}", CommError::CorruptFrame);
+        let mut buf = vec![0u8; len];
+        self.stream.read_exact(&mut buf).map_err(|e| io_err(e, "read frame body"))?;
+        Ok(buf)
+    }
 }
 
 impl Transport for UnixSocket {
     fn send(&mut self, msg: &[u8]) -> Result<()> {
         ensure!(msg.len() <= MAX_FRAME, "frame {} > MAX_FRAME", msg.len());
         let len = (msg.len() as u32).to_le_bytes();
-        self.stream.write_all(&len).context("write frame length")?;
-        self.stream.write_all(msg).context("write frame body")?;
+        self.stream.write_all(&len).map_err(|e| io_err(e, "write frame length"))?;
+        self.stream.write_all(msg).map_err(|e| io_err(e, "write frame body"))?;
         Ok(())
     }
 
     fn recv(&mut self) -> Result<Vec<u8>> {
-        let mut len = [0u8; 4];
-        self.stream.read_exact(&mut len).context("read frame length")?;
-        let len = u32::from_le_bytes(len) as usize;
-        ensure!(len <= MAX_FRAME, "frame length {len} > MAX_FRAME");
-        let mut buf = vec![0u8; len];
-        self.stream.read_exact(&mut buf).context("read frame body")?;
-        Ok(buf)
+        self.recv_inner()
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Vec<u8>> {
+        self.stream.set_read_timeout(Some(timeout)).context("set read timeout")?;
+        let out = self.recv_inner();
+        let _ = self.stream.set_read_timeout(None);
+        out
+    }
+
+    fn set_send_deadline(&mut self, deadline: Option<Duration>) -> Result<()> {
+        self.stream.set_write_timeout(deadline).context("set write timeout")
     }
 }
 
@@ -141,8 +308,42 @@ mod tests {
     fn in_process_dropped_peer_errors() {
         let (mut a, b) = InProcess::pair(1);
         drop(b);
-        assert!(a.send(b"x").is_err());
-        assert!(a.recv().is_err());
+        let e = a.send(b"x").unwrap_err();
+        assert_eq!(CommError::classify(&e), Some(CommError::PeerClosed));
+        let e = a.recv().unwrap_err();
+        assert_eq!(CommError::classify(&e), Some(CommError::PeerClosed));
+    }
+
+    #[test]
+    fn in_process_stalled_peer_times_out() {
+        // the peer exists but never sends: recv_timeout must classify a
+        // PeerTimeout instead of blocking forever
+        let (mut a, b) = InProcess::pair(1);
+        let t0 = Instant::now();
+        let e = a.recv_timeout(Duration::from_millis(50)).unwrap_err();
+        assert_eq!(CommError::classify(&e), Some(CommError::PeerTimeout), "{e:#}");
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        // once the peer dies the class changes
+        drop(b);
+        let e = a.recv_timeout(Duration::from_millis(50)).unwrap_err();
+        assert_eq!(CommError::classify(&e), Some(CommError::PeerClosed), "{e:#}");
+    }
+
+    #[test]
+    fn in_process_send_deadline_bounds_backpressure() {
+        let (mut a, _b) = InProcess::pair(1);
+        a.set_send_deadline(Some(Duration::from_millis(30))).unwrap();
+        a.send(b"fills the buffer").unwrap();
+        let e = a.send(b"blocked").unwrap_err();
+        assert_eq!(CommError::classify(&e), Some(CommError::PeerTimeout), "{e:#}");
+    }
+
+    #[test]
+    fn classify_survives_context_wrapping() {
+        let e = anyhow::anyhow!("x: {}", CommError::CorruptFrame);
+        let wrapped = e.context("while receiving from child 3").context("rank 0");
+        assert_eq!(CommError::classify(&wrapped), Some(CommError::CorruptFrame));
+        assert_eq!(CommError::classify(&anyhow::anyhow!("unrelated")), None);
     }
 
     #[test]
@@ -183,8 +384,54 @@ mod tests {
             s.write_all(&(2u32 << 30).to_le_bytes()).unwrap();
         });
         let mut server = UnixSocket::accept_one(&listener).unwrap();
-        assert!(server.recv().is_err());
+        let e = server.recv().unwrap_err();
+        assert_eq!(CommError::classify(&e), Some(CommError::CorruptFrame), "{e:#}");
         client.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn unix_socket_timeouts_and_closure_classify() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let mut a = UnixSocket::from_stream(a);
+        // silent peer: deadline expires, classifies as a timeout
+        let e = a.recv_timeout(Duration::from_millis(50)).unwrap_err();
+        assert_eq!(CommError::classify(&e), Some(CommError::PeerTimeout), "{e:#}");
+        // dead peer: classifies as closed
+        drop(b);
+        let e = a.recv_timeout(Duration::from_millis(50)).unwrap_err();
+        assert_eq!(CommError::classify(&e), Some(CommError::PeerClosed), "{e:#}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn connect_retry_gives_up_within_deadline_when_no_listener_appears() {
+        let dir = std::env::temp_dir().join(format!("sgct_tnc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let t0 = Instant::now();
+        let e = UnixSocket::connect_retry(&dir.join("never.sock"), Duration::from_millis(80))
+            .err()
+            .expect("no listener must not connect");
+        assert_eq!(CommError::classify(&e), Some(CommError::PeerTimeout), "{e:#}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "connect_retry hung");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn bind_refuses_a_live_socket_but_clears_a_stale_one() {
+        let dir = std::env::temp_dir().join(format!("sgct_tbind_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.sock");
+        let live = UnixSocket::bind(&path).unwrap();
+        let e = UnixSocket::bind(&path).unwrap_err();
+        assert!(format!("{e:#}").contains("refusing to clobber"), "{e:#}");
+        // dropping the listener leaves a stale file behind — rebinding
+        // over *that* must succeed
+        drop(live);
+        assert!(path.exists(), "expected a stale socket file");
+        let _rebound = UnixSocket::bind(&path).unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 }

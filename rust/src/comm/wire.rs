@@ -19,6 +19,13 @@
 //!   fused tile groups still hierarchize: `grid u32`, `axes_done u8`,
 //!   `count u32`, blocks.  The overlap engine's unit.
 //! * **done** — end of a piece stream: `pieces u32` (validation count).
+//! * **failed** — a parent's fault report travelling *up* the gather tree:
+//!   `count u32`, then `count` dead rank ids (`u32`, strictly increasing).
+//!   Sent instead of a partial when a subtree lost ranks.
+//! * **replan** — the root's recovery order travelling *down*: the same
+//!   dead-rank-id payload.  Receivers re-derive the recovered scheme from
+//!   it deterministically (`combi::fault::recover`) and switch the gather
+//!   to piece mode.
 //!
 //! A subspace block is `dim` level bytes (each `1..=30`) followed by the
 //! dense row-major surplus payload, `prod 2^(l_i - 1)` f64 little-endian —
@@ -45,6 +52,8 @@ pub const VERSION: u16 = 1;
 const KIND_PARTIAL: u8 = 1;
 const KIND_PIECE: u8 = 2;
 const KIND_DONE: u8 = 3;
+const KIND_FAILED: u8 = 4;
+const KIND_REPLAN: u8 = 5;
 
 /// Fixed header length in bytes.
 pub const HEADER_LEN: usize = 12;
@@ -58,6 +67,11 @@ pub enum Message {
     Piece { grid: usize, axes_done: usize, part: SparseGrid },
     /// End of a piece stream; `pieces` counts the preceding piece messages.
     Done { pieces: usize },
+    /// Fault report up the tree: the dead ranks of the sender's subtree.
+    Failed { dead: Vec<usize> },
+    /// Recovery order down the tree: the authoritative dead-rank set the
+    /// root re-planned around.
+    Replan { dead: Vec<usize> },
 }
 
 fn header(kind: u8, dim: usize) -> Vec<u8> {
@@ -110,6 +124,28 @@ pub fn encode_piece(grid: usize, axes_done: usize, part: &SparseGrid, dim: usize
 pub fn encode_done(pieces: usize, dim: usize) -> Vec<u8> {
     let mut out = header(KIND_DONE, dim);
     out.extend_from_slice(&u32::try_from(pieces).unwrap().to_le_bytes());
+    seal(out)
+}
+
+fn push_ranks(out: &mut Vec<u8>, dead: &[usize]) {
+    debug_assert!(dead.windows(2).all(|w| w[0] < w[1]), "dead ranks must be sorted unique");
+    out.extend_from_slice(&u32::try_from(dead.len()).unwrap().to_le_bytes());
+    for &r in dead {
+        out.extend_from_slice(&u32::try_from(r).unwrap().to_le_bytes());
+    }
+}
+
+/// Encode a fault report (`dead` sorted, strictly increasing).
+pub fn encode_failed(dead: &[usize], dim: usize) -> Vec<u8> {
+    let mut out = header(KIND_FAILED, dim);
+    push_ranks(&mut out, dead);
+    seal(out)
+}
+
+/// Encode the root's recovery order (`dead` sorted, strictly increasing).
+pub fn encode_replan(dead: &[usize], dim: usize) -> Vec<u8> {
+    let mut out = header(KIND_REPLAN, dim);
+    push_ranks(&mut out, dead);
     seal(out)
 }
 
@@ -198,6 +234,23 @@ pub fn decode(buf: &[u8]) -> Result<Message> {
             ensure!(r.pos == buf.len(), "trailing bytes after done marker");
             Ok(Message::Done { pieces })
         }
+        KIND_FAILED | KIND_REPLAN => {
+            let count = r.u32()? as usize;
+            let mut dead = Vec::with_capacity(count.min(1 << 16));
+            for _ in 0..count {
+                let id = r.u32()? as usize;
+                if let Some(&last) = dead.last() {
+                    ensure!(id > last, "dead rank list not strictly increasing at {id}");
+                }
+                dead.push(id);
+            }
+            ensure!(r.pos == buf.len(), "trailing bytes after dead rank list");
+            if kind == KIND_FAILED {
+                Ok(Message::Failed { dead })
+            } else {
+                Ok(Message::Replan { dead })
+            }
+        }
         other => bail!("unknown message kind {other}"),
     }
 }
@@ -256,6 +309,36 @@ mod tests {
         match decode(&encode_done(7, 2)).unwrap() {
             Message::Done { pieces } => assert_eq!(pieces, 7),
             other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn failed_and_replan_roundtrip_and_validate() {
+        match decode(&encode_failed(&[1, 3, 7], 3)).unwrap() {
+            Message::Failed { dead } => assert_eq!(dead, vec![1, 3, 7]),
+            other => panic!("wrong kind {other:?}"),
+        }
+        match decode(&encode_replan(&[2], 2)).unwrap() {
+            Message::Replan { dead } => assert_eq!(dead, vec![2]),
+            other => panic!("wrong kind {other:?}"),
+        }
+        // empty dead list is legal on the wire (callers never send it)
+        match decode(&encode_replan(&[], 2)).unwrap() {
+            Message::Replan { dead } => assert!(dead.is_empty()),
+            other => panic!("wrong kind {other:?}"),
+        }
+        // unsorted / duplicate rank ids are rejected
+        let mut forged = encode_failed(&[1, 3], 2);
+        // swap the two rank ids in place (offsets: header + count u32)
+        let a = HEADER_LEN + 4;
+        forged.copy_within(a + 4..a + 8, a);
+        forged[a + 4..a + 8].copy_from_slice(&3u32.to_le_bytes());
+        // now reads [3, 3] — not strictly increasing
+        assert!(decode(&forged).is_err(), "duplicate rank ids accepted");
+        // truncated rank list
+        let good = encode_failed(&[0, 5], 1);
+        for cut in HEADER_LEN..good.len() {
+            assert!(decode(&good[..cut]).is_err(), "cut at {cut} accepted");
         }
     }
 

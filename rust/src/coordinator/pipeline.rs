@@ -43,6 +43,15 @@ pub struct PipelineConfig {
     /// gather/scatter, as the pipeline always did), and `FusedInOut`'s
     /// restore-to-position folds into the dehierarchize phase.
     pub fuse: FuseParams,
+    /// Run every iteration's combination step over the **comm data plane**
+    /// ([`Coordinator::combine_via_comm`]) with this many in-process tree
+    /// ranks instead of the thread-pool gather.  The comm plane is
+    /// canonically grouped, so the iterated solution is bitwise identical
+    /// for every rank count — and it carries the fault-tolerance machinery:
+    /// a rank death mid-combination re-plans online and the iteration
+    /// completes degraded, reporting the [`FaultReport`](crate::comm::FaultReport)
+    /// in its [`IterationReport`].
+    pub comm_ranks: Option<usize>,
 }
 
 impl PipelineConfig {
@@ -55,6 +64,7 @@ impl PipelineConfig {
             gather_queue: 4,
             shard: ShardStrategy::Grid,
             fuse: FuseParams::AUTO,
+            comm_ranks: None,
         }
     }
 
@@ -88,6 +98,9 @@ pub struct IterationReport {
     pub scatter_dehierarchize_secs: f64,
     /// Surpluses held by the assembled sparse grid.
     pub sparse_points: usize,
+    /// Set when a comm-plane combination survived rank deaths by
+    /// re-planning (`comm_ranks` runs only).
+    pub comm_fault: Option<crate::comm::FaultReport>,
 }
 
 /// The iterated combination technique coordinator.
@@ -304,7 +317,15 @@ impl Coordinator {
         let solve_secs = t_solve.elapsed_secs();
 
         let t_hg = CycleTimer::start();
-        self.hierarchize_and_gather();
+        let mut comm_fault = None;
+        match self.cfg.comm_ranks {
+            Some(ranks) => {
+                let opts = self.comm_opts(ranks);
+                let ms = self.combine_via_comm(ranks, &opts)?;
+                comm_fault = ms.into_iter().find(|m| m.rank == 0).and_then(|m| m.fault);
+            }
+            None => self.hierarchize_and_gather(),
+        }
         let hierarchize_gather_secs = t_hg.elapsed_secs();
 
         let t_sd = CycleTimer::start();
@@ -317,6 +338,7 @@ impl Coordinator {
             hierarchize_gather_secs,
             scatter_dehierarchize_secs,
             sparse_points: self.sparse.point_count(),
+            comm_fault,
         })
     }
 
@@ -353,6 +375,18 @@ impl Coordinator {
     /// [`Coordinator::hierarchize_and_gather`]), so the regular
     /// [`Coordinator::scatter_and_dehierarchize`] can follow.
     ///
+    /// The reduce options an iterated comm-plane combination runs with:
+    /// the pipeline's variant and (hierarchize-phase) fuse parameters, the
+    /// worker budget split across the rank threads.
+    fn comm_opts(&self, ranks: usize) -> crate::comm::ReduceOptions {
+        crate::comm::ReduceOptions {
+            threads: (self.cfg.workers / ranks.max(1)).max(1),
+            variant: Some(self.cfg.variant),
+            fuse: self.cfg.hier_fuse(),
+            ..Default::default()
+        }
+    }
+
     /// Unlike the thread-pool gather (arrival order), the reduced grid is
     /// canonically grouped: bitwise identical for every rank count and to
     /// `comm::reduce::reduce_local` with the same options.
@@ -559,6 +593,51 @@ mod tests {
         b.scatter_and_dehierarchize();
         b.hierarchize_and_gather();
         assert_eq!(a.sparse.subspace_count(), b.sparse.subspace_count());
+    }
+
+    /// The iterated loop over the comm data plane: `comm_ranks` routes the
+    /// combination step of every iteration through the reduction tree, and
+    /// because that tree is canonically grouped the *iterated* solution —
+    /// solver steps interleaved with combinations — is bitwise identical
+    /// for every rank count.  The thread-pool gather (arrival order) only
+    /// agrees up to FP reassociation.
+    #[test]
+    #[cfg_attr(miri, ignore)] // the comm engine is not a miri target
+    fn comm_backed_iterations_are_bitwise_stable_across_rank_counts() {
+        let init =
+            |x: &[f64]| x.iter().map(|&xi| (std::f64::consts::PI * xi).sin()).product::<f64>();
+        let run = |ranks: Option<usize>| {
+            let scheme = CombinationScheme::regular(2, 4);
+            let dt =
+                crate::solver::stable_dt(&scheme.components()[0].levels.clone(), 1.0, 0.5) * 0.1;
+            let mut cfg = PipelineConfig { steps_per_iter: 2, ..PipelineConfig::new(scheme) };
+            cfg.comm_ranks = ranks;
+            let mut c = Coordinator::new(cfg, init);
+            let solver = HeatSolver { alpha: 1.0, dt };
+            let reports = c.run(&solver, 2, |_| {}).unwrap();
+            assert!(reports.iter().all(|r| r.comm_fault.is_none()), "phantom fault report");
+            let mut subs: Vec<(crate::grid::LevelVector, Vec<u64>)> = c
+                .sparse
+                .iter()
+                .map(|(l, v)| (l.clone(), v.iter().map(|x| x.to_bits()).collect()))
+                .collect();
+            subs.sort_by(|a, b| a.0.cmp(&b.0));
+            subs
+        };
+        let one = run(Some(1));
+        let three = run(Some(3));
+        assert_eq!(one, three, "iterated comm solution depends on the rank count");
+        let pool = run(None);
+        assert_eq!(one.len(), pool.len());
+        for ((l, a), (lp, b)) in one.iter().zip(&pool) {
+            assert_eq!(l, lp);
+            for (x, y) in a.iter().zip(b) {
+                assert!(
+                    (f64::from_bits(*x) - f64::from_bits(*y)).abs() < 1e-10,
+                    "subspace {l}: comm vs pool gather"
+                );
+            }
+        }
     }
 
     #[test]

@@ -46,6 +46,17 @@
 //! [`coordinator::distributed`] remains the prediction layer: `sgct reduce`
 //! reports its `alpha + bytes/beta` estimates next to measured bytes/time.
 //!
+//! The data plane **survives rank death**: every tree receive carries a
+//! deadline, peer failures are typed ([`comm::CommError`]: timeout /
+//! closed / corrupt frame), and a parent that loses a child marks the
+//! whole subtree dead and escalates.  The root re-plans the combination
+//! scheme online ([`combi::fault::recover`]), broadcasts the re-plan down
+//! the surviving tree, and completes the reduction degraded without
+//! restarting — bitwise equal to [`comm::reduce_local`] on the recovered
+//! scheme.  A seeded chaos injector ([`comm::chaos`]) kills, truncates, or
+//! stalls any rank to prove it, in-process and across real worker
+//! processes (CI's `chaos-smoke` job).
+//!
 //! Both levels stand on one unsafe core, `grid::cells`, which keeps the
 //! shared-buffer access inside the Rust aliasing model: a [`grid::GridCells`]
 //! handle owns the exclusive borrow of a grid buffer and hands out *checked*

@@ -72,6 +72,7 @@ USAGE:
   sgct distributed --dim D --level N [--max-nodes K]
   sgct reduce --dim D --level N --ranks R [--transport inprocess|unix] [--overlap]
               [--seed S] [--check] [--threads N] [--fuse-depth K] [--tile-kb KB]
+              [--timeout-ms MS] [--chaos SEED:KIND:RANK]
 
   --transport ...          reduce: inprocess = tree ranks as worker threads,
                            unix = real `comm-worker` processes over
@@ -80,7 +81,15 @@ USAGE:
   --overlap                reduce: stream finished subspaces while later
                            fused tile groups still hierarchize
   --check                  reduce: verify the reduced grid bitwise against
-                           the single-process canonical reference
+                           the single-process canonical reference (on the
+                           online-recovered scheme when ranks died)
+  --timeout-ms MS          reduce: per-receive deadline; a dead or wedged
+                           peer fails over instead of hanging the tree
+                           (default SGCT_COMM_TIMEOUT_MS or 30000)
+  --chaos SEED:KIND:RANK   reduce: inject one seeded fault — RANK dies as
+                           KIND (kill-before-send | kill-mid-frame | stall)
+                           at its gather-send point; the reduction re-plans
+                           online and completes degraded
   --threads N|auto         worker threads (auto = all hardware threads)
   --shard-strategy ...     grid = one component grid per work item,
                            pole = shard each grid pole-wise across the pool,
@@ -469,10 +478,25 @@ fn distributed(args: &Args) -> Result<()> {
 
 /// Parse the reduce/comm-worker options shared by both subcommands.
 fn reduce_opts(args: &Args) -> Result<sgct::comm::ReduceOptions> {
+    let chaos = match args.opt("chaos") {
+        Some(s) => Some(sgct::comm::ChaosSpec::parse(&s).context("--chaos")?),
+        None => None,
+    };
+    let timeout_ms = match args.opt("timeout-ms") {
+        Some(s) => Some(
+            s.parse::<u64>().map_err(|_| anyhow::anyhow!("--timeout-ms wants milliseconds"))?,
+        ),
+        None => None,
+    };
     Ok(sgct::comm::ReduceOptions {
         threads: args.threads("threads", 1)?,
         overlap: args.flag("overlap"),
         fuse: fuse_opts(args)?,
+        timeout_ms,
+        chaos,
+        // the seeded problem is regenerable, so a re-plan may activate
+        // components nobody computed and still complete deterministically
+        recovery_seed: Some(args.get("seed", 42u64)?),
         ..Default::default()
     })
 }
@@ -507,7 +531,11 @@ fn reduce_cmd(args: &Args) -> Result<()> {
         "inprocess" | "in-process" => {
             let mut grids = sgct::comm::seeded_block(&scheme, 0, scheme.len(), seed);
             let out = sgct::comm::reduce_in_process(&scheme, &mut grids, ranks, &opts)?;
-            if args.flag("check") {
+            // under injected faults the dead blocks were never scattered
+            // and dropped components leave the survivors' subspace sets
+            // wider than the degraded sparse grid — the projection
+            // fixpoint only applies to the fault-free run
+            if args.flag("check") && opts.chaos.is_none() {
                 verify_projection(&scheme, 0, &grids, &out.0)?;
             }
             out
@@ -537,6 +565,18 @@ fn reduce_cmd(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    let fault = measured.iter().find(|m| m.rank == 0).and_then(|m| m.fault.clone());
+    if let Some(f) = &fault {
+        println!(
+            "FAULT SURVIVED: lost ranks {:?} -> {} failed + {} cascaded grids; \
+             re-planned online to {} components ({} grids were in the original scheme)",
+            f.dead_ranks,
+            f.failed.len(),
+            f.cascaded.len(),
+            f.components.len(),
+            scheme.len(),
+        );
+    }
     let gather_meas: usize = measured.iter().map(|m| m.gather_sent_bytes).sum();
     let scatter_meas: usize = measured.iter().map(|m| m.scatter_sent_bytes).sum();
     println!(
@@ -558,13 +598,33 @@ fn reduce_cmd(args: &Args) -> Result<()> {
         human_time(wall),
     );
     if args.flag("check") {
-        let mut reference = sgct::comm::seeded_block(&scheme, 0, scheme.len(), seed);
-        let want = sgct::comm::reduce_local(&scheme, &mut reference, &opts);
-        anyhow::ensure!(
-            sparse.bitwise_eq(&want),
-            "reduced sparse grid differs from the single-process reference"
-        );
-        println!("check: bitwise identical to the single-process canonical reference — OK");
+        match &fault {
+            None => {
+                let mut reference = sgct::comm::seeded_block(&scheme, 0, scheme.len(), seed);
+                let want = sgct::comm::reduce_local(&scheme, &mut reference, &opts);
+                anyhow::ensure!(
+                    sparse.bitwise_eq(&want),
+                    "reduced sparse grid differs from the single-process reference"
+                );
+                println!(
+                    "check: bitwise identical to the single-process canonical reference — OK"
+                );
+            }
+            Some(f) => {
+                // degraded run: the contract is bitwise equality with the
+                // canonical reference on the RECOVERED scheme
+                let (rec, _) = sgct::comm::recovered_scheme(&scheme, ranks, &f.dead_ranks)?;
+                let mut reference = sgct::comm::seeded_recovery_block(&scheme, &rec, seed);
+                let want = sgct::comm::reduce_local(&rec, &mut reference, &opts);
+                anyhow::ensure!(
+                    sparse.bitwise_eq(&want),
+                    "degraded sparse grid differs from the recovered-scheme reference"
+                );
+                println!(
+                    "check: bitwise identical to the recovered-scheme canonical reference — OK"
+                );
+            }
+        }
     }
     Ok(())
 }
@@ -582,7 +642,9 @@ fn reduce_unix(
     opts: &sgct::comm::ReduceOptions,
     args: &Args,
 ) -> Result<(sgct::sparse::SparseGrid, Vec<sgct::comm::Measured>)> {
-    let dir = std::env::temp_dir().join(format!("sgct_comm_{}", std::process::id()));
+    // per-run unique endpoint dir (pid + seed + nonce): back-to-back or
+    // concurrent reduces can never collide on socket paths
+    let dir = sgct::comm::unique_run_dir(seed);
     std::fs::create_dir_all(&dir)?;
     let exe = std::env::current_exe()?;
     let mut children = Vec::new();
@@ -606,8 +668,15 @@ fn reduce_unix(
         if opts.overlap {
             cmd.arg("--overlap");
         }
-        if args.flag("check") {
+        // the projection fixpoint only holds fault-free (see reduce_cmd)
+        if args.flag("check") && opts.chaos.is_none() {
             cmd.arg("--check");
+        }
+        if let Some(spec) = &opts.chaos {
+            cmd.arg("--chaos").arg(spec.to_arg());
+        }
+        if let Some(ms) = opts.timeout_ms {
+            cmd.arg("--timeout-ms").arg(ms.to_string());
         }
         for key in ["fuse-depth", "tile-kb", "convert"] {
             if let Some(v) = args.opt(key) {
@@ -622,7 +691,7 @@ fn reduce_unix(
         let mut links =
             sgct::comm::unix_links(&dir, 0, ranks, std::time::Duration::from_secs(30))?;
         let (sparse, m0) = sgct::comm::run_rank(scheme, 0, ranks, &mut grids, &mut links, opts)?;
-        if args.flag("check") {
+        if args.flag("check") && opts.chaos.is_none() {
             verify_projection(scheme, lo, &grids, &sparse)?;
         }
         Ok((sparse, vec![m0]))
@@ -639,7 +708,12 @@ fn reduce_unix(
     // the root's own error is the root cause (its dropped sockets are what
     // made the workers fail) — surface it first, workers second
     let out = out.with_context(|| format!("root rank failed (workers down: {failed:?})"))?;
-    anyhow::ensure!(failed.is_empty(), "comm workers failed: ranks {failed:?}");
+    // dead workers the root accounted for (fault report) or that we killed
+    // ourselves (chaos injection) are expected; anything else is a failure
+    let dead: Vec<usize> =
+        out.1.first().and_then(|m| m.fault.as_ref()).map(|f| f.dead_ranks.clone()).unwrap_or_default();
+    failed.retain(|r| !dead.contains(r) && opts.chaos.map_or(true, |s| s.rank != *r));
+    anyhow::ensure!(failed.is_empty(), "comm workers failed unexpectedly: ranks {failed:?}");
     Ok(out)
 }
 

@@ -21,13 +21,37 @@
 
 use sgct::combi::CombinationScheme;
 use sgct::comm::wire::{self, Message};
-use sgct::comm::{reduce_in_process, reduce_local, seeded_block, PairTransport, ReduceOptions};
+use sgct::comm::{
+    chaos, rank_ranges, recovered_scheme, reduce_in_process, reduce_local, seeded_block,
+    seeded_recovery_block, ChaosKind, ChaosSpec, PairTransport, ReduceOptions,
+};
 use sgct::coordinator::{Coordinator, PipelineConfig};
 use sgct::grid::{FullGrid, LevelVector};
 use sgct::hierarchize::{func::Func, Hierarchizer, Variant};
 use sgct::sparse::SparseGrid;
 use sgct::util::proptest::{check, random_levels, Config};
 use sgct::util::rng::SplitMix64;
+
+/// Run `f` under a hard wall-clock deadline: every comm test must finish
+/// even when the failure path it exercises would have hung a deadline-less
+/// implementation.  Panics (test failure) if the deadline passes.
+fn within_deadline<T: Send + 'static>(
+    secs: u64,
+    name: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(std::time::Duration::from_secs(secs)) {
+        Ok(v) => {
+            h.join().expect("deadline worker panicked");
+            v
+        }
+        Err(_) => panic!("{name}: exceeded the {secs}s hard deadline — the reduction hung"),
+    }
+}
 
 /// Random sparse grid: 1..=3 random grids of one dimension, hierarchized
 /// (serial `Func`), gathered with random +-1/+-2 coefficients; grids are
@@ -222,6 +246,120 @@ fn overlap_reduce_is_bitwise_and_ships_early_pieces() {
     }
 }
 
+// ------------------------------------------------------ chaos (faults)
+
+/// One chaos case: inject `spec` into an in-process reduction and verify
+/// the two-sided contract — when the re-plan fires, the degraded result
+/// is **bitwise** `reduce_local` on the recovered scheme over the
+/// deterministic recovery inputs; when the dead subtree owned no
+/// components, the result is bitwise the *original* fault-free reference.
+fn chaos_case(ranks: usize, transport: PairTransport, spec: ChaosSpec, seed: u64) {
+    let scheme = CombinationScheme::regular(3, 4); // 19 grids
+    let base = ReduceOptions { scatter_back: false, ..Default::default() };
+    let opts = ReduceOptions {
+        pair_transport: transport,
+        timeout_ms: Some(200),
+        chaos: Some(spec),
+        recovery_seed: Some(seed),
+        ..base
+    };
+    let mut grids = seeded_block(&scheme, 0, scheme.len(), seed);
+    let (got, ms) = reduce_in_process(&scheme, &mut grids, ranks, &opts)
+        .unwrap_or_else(|e| panic!("x{ranks} {transport:?} {spec:?}: {e:#}"));
+    let fault = ms.iter().find(|m| m.rank == 0).expect("root measured").fault.clone();
+    match fault {
+        Some(f) => {
+            assert!(
+                f.dead_ranks.contains(&spec.rank),
+                "x{ranks} {transport:?} {spec:?}: report misses the victim: {:?}",
+                f.dead_ranks
+            );
+            let (rec, _) = recovered_scheme(&scheme, ranks, &f.dead_ranks).unwrap();
+            let mut reference = seeded_recovery_block(&scheme, &rec, seed);
+            let want = reduce_local(&rec, &mut reference, &base);
+            assert!(
+                got.bitwise_eq(&want),
+                "x{ranks} {transport:?} {spec:?}: degraded result is not bitwise the \
+                 recovered-scheme reference"
+            );
+        }
+        None => {
+            // legal only when the victim's whole subtree owned nothing
+            let ranges = rank_ranges(&scheme, ranks);
+            let owned: usize = sgct::comm::subtree_ranks(&sgct::comm::Topology::new(ranks), spec.rank)
+                .iter()
+                .map(|&r| ranges[r].1 - ranges[r].0)
+                .sum();
+            assert_eq!(owned, 0, "x{ranks} {transport:?} {spec:?}: fault report missing");
+            let mut reference = seeded_block(&scheme, 0, scheme.len(), seed);
+            let want = reduce_local(&scheme, &mut reference, &base);
+            assert!(got.bitwise_eq(&want), "empty-subtree death perturbed the sum");
+        }
+    }
+}
+
+/// The chaos matrix: every failure kind x both in-process transports x
+/// tree sizes {2, 4, 8} x 3 seeds (the seed also moves the victim across
+/// tree positions — leaves, intermediates with orphaned subtrees).  Every
+/// case runs under a hard wall-clock deadline: surviving a fault must not
+/// cost an unbounded wait.
+#[test]
+fn chaos_matrix_recovers_bitwise_on_all_transports_and_tree_sizes() {
+    for kind in ChaosKind::ALL {
+        for transport in [PairTransport::Channel, PairTransport::UnixPair] {
+            for ranks in [2usize, 4, 8] {
+                for seed in [11u64, 12, 13] {
+                    let victim = 1 + (seed as usize) % (ranks - 1).max(1);
+                    let spec = ChaosSpec { seed, kind, rank: victim };
+                    let name = format!("chaos {kind:?} {transport:?} x{ranks} seed {seed}");
+                    within_deadline(60, &name, move || chaos_case(ranks, transport, spec, seed));
+                }
+            }
+        }
+    }
+}
+
+/// Property form: random victims and seeds; the degraded reduction always
+/// completes inside its deadline budget and always lands bitwise on the
+/// recovered-scheme (or untouched-original) reference.
+#[test]
+fn chaos_prop_random_kill_sites_recover_bitwise() {
+    check("chaos-kill-sites", Config { cases: 12, ..Default::default() }, |rng, _| {
+        let ranks = [2usize, 4, 8][rng.next_below(3) as usize];
+        let kind = ChaosKind::ALL[rng.next_below(3) as usize];
+        let victim = 1 + rng.next_below((ranks - 1) as u64) as usize;
+        let seed = rng.next_u64() % 10_000;
+        let spec = ChaosSpec { seed, kind, rank: victim };
+        let name = format!("chaos prop {kind:?} x{ranks} victim {victim}");
+        within_deadline(60, &name, move || chaos_case(ranks, PairTransport::Channel, spec, seed));
+        Ok(())
+    });
+}
+
+/// Mid-reassembly corruption (the `wire` side of kill-mid-frame): a
+/// seeded truncation of any message body — partials and overlap pieces —
+/// still travels as a complete transport frame but never decodes, for
+/// every cut the seed can pick.
+#[test]
+fn prop_wire_rejects_seeded_mid_frame_truncation() {
+    check("wire-mid-frame", Config { cases: 24, ..Default::default() }, |rng, size| {
+        let (sg, d) = random_sparse(rng, size);
+        let bytes = if rng.next_below(2) == 0 {
+            wire::encode_partial(&sg, d)
+        } else {
+            wire::encode_piece(rng.next_below(100) as usize, d, &sg, d)
+        };
+        let cut = chaos::truncate_frame(&bytes, rng.next_u64());
+        if cut.len() >= bytes.len() {
+            return Err("truncation did not shorten the frame".into());
+        }
+        if wire::decode(&cut).is_ok() {
+            return Err(format!("accepted a truncated frame ({} of {} bytes)", cut.len(), bytes.len()));
+        }
+        Ok(())
+    });
+}
+
 // ------------------------------------------------- multi-process (unix)
 
 /// Drive the real binary: `sgct reduce --transport unix --ranks R --check`
@@ -278,4 +416,95 @@ fn unix_multiprocess_overlap_reduce_is_bitwise() {
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(out.status.success(), "stdout:\n{stdout}\nstderr:\n{stderr}");
     assert!(stdout.contains("bitwise identical"), "{stdout}");
+}
+
+/// Spawn one `sgct reduce` with extra args, polling `try_wait` against a
+/// hard deadline (a hung child must fail the test, not wedge the suite).
+fn run_reduce_cli(extra: &[&str], deadline_secs: u64) -> (bool, String, String) {
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_sgct"))
+        .args(["reduce", "--transport", "unix", "--dim", "3", "--level", "4"])
+        .args(extra)
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn sgct reduce");
+    let t0 = std::time::Instant::now();
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(_) => break,
+            None if t0.elapsed().as_secs() >= deadline_secs => {
+                child.kill().ok();
+                child.wait().ok();
+                panic!("sgct reduce {extra:?}: exceeded the {deadline_secs}s hard deadline");
+            }
+            None => std::thread::sleep(std::time::Duration::from_millis(50)),
+        }
+    }
+    let out = child.wait_with_output().expect("collect output");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+/// The multi-process plane of the chaos matrix: real `comm-worker`
+/// processes die (or stall, or ship a truncated frame) and the root
+/// re-plans online — `--check` then verifies bitwise equality with the
+/// recovered-scheme reference, and the expected worker deaths do not fail
+/// the run.
+#[test]
+#[cfg_attr(miri, ignore)] // spawns processes and sockets
+fn chaos_unix_multiprocess_kill_matrix() {
+    for (kind, victim) in [("kill-before-send", 1), ("kill-mid-frame", 2), ("stall", 3)] {
+        let chaos = format!("7:{kind}:{victim}");
+        let (ok, stdout, stderr) = run_reduce_cli(
+            &["--ranks", "4", "--check", "--timeout-ms", "400", "--chaos", &chaos],
+            120,
+        );
+        assert!(ok, "{kind}: run failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+        assert!(stdout.contains("FAULT SURVIVED"), "{kind}: no fault line\n{stdout}");
+        assert!(
+            stdout.contains("recovered-scheme canonical reference — OK"),
+            "{kind}: degraded check missing\n{stdout}"
+        );
+    }
+}
+
+/// Zero injected faults: the chaos plumbing at rest changes nothing — the
+/// same command without `--chaos` still reports bitwise equality with the
+/// *original* reference (the no-fault conformance line).
+#[test]
+#[cfg_attr(miri, ignore)]
+fn chaos_free_run_is_bitwise_unchanged() {
+    let (ok, stdout, stderr) =
+        run_reduce_cli(&["--ranks", "4", "--check", "--timeout-ms", "4000"], 120);
+    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(!stdout.contains("FAULT"), "phantom fault:\n{stdout}");
+    assert!(
+        stdout.contains("single-process canonical reference — OK"),
+        "missing check line\n{stdout}"
+    );
+}
+
+/// Socket-path hygiene: back-to-back runs reuse nothing (per-run unique
+/// endpoint dirs), so the second run cannot trip over the first one's
+/// leftovers — and two *concurrent* reduces from the same parent pid
+/// cannot collide either.
+#[test]
+#[cfg_attr(miri, ignore)]
+fn unix_back_to_back_and_concurrent_reduces_do_not_collide() {
+    // back-to-back, same seed (the old pid-only dir naming collided here
+    // when a crashed run left its sockets behind)
+    for _ in 0..2 {
+        let (ok, stdout, stderr) = run_reduce_cli(&["--ranks", "2", "--check"], 120);
+        assert!(ok, "back-to-back run failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    }
+    // concurrent: both runs own disjoint socket dirs, both must succeed
+    let a = std::thread::spawn(|| run_reduce_cli(&["--ranks", "2", "--check"], 120));
+    let b = std::thread::spawn(|| run_reduce_cli(&["--ranks", "2", "--check"], 120));
+    for (name, h) in [("a", a), ("b", b)] {
+        let (ok, stdout, stderr) = h.join().expect("concurrent runner panicked");
+        assert!(ok, "concurrent run {name} failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    }
 }
