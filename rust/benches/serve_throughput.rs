@@ -1,0 +1,145 @@
+//! Serve-path throughput: what the arena pool and the long-lived daemon
+//! buy over the one-shot path.
+//!
+//! Three series over the same mixed job burst (hierarchize / combine /
+//! solve, the integration suite's shapes):
+//!
+//! * **one-shot** — `serve::job::reference` per job: allocate every
+//!   component grid, compute, free.  The per-invocation CLI cost.
+//! * **arena** — `serve::job::execute` against a warmed `GridArena` in
+//!   this process: same math, recycled buffers, no daemon in the loop.
+//!   Isolates what buffer reuse alone is worth.
+//! * **served** — the full daemon loop (in-process `ServerHandle`, Unix
+//!   socket, wire encode/decode, scheduler): what a tenant actually
+//!   observes, including the transport tax.
+//!
+//! Environment knobs: SGCT_BENCH_QUICK=1 (smaller burst), SGCT_SERVE_WORKERS
+//! (daemon worker threads for the served series; default 4).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{emit, quick};
+use sgct::comm::{unique_run_dir, JobKind, JobSpec};
+use sgct::coordinator::GridArena;
+use sgct::grid::LevelVector;
+use sgct::perf::BenchRecord;
+use sgct::serve::{job, ServeClient, ServeConfig, ServerHandle};
+use sgct::util::table::{human_time, Table};
+
+fn burst(n: usize) -> Vec<JobSpec> {
+    (0..n as u32)
+        .map(|i| {
+            let (kind, levels, tau, steps): (JobKind, &[u8], u8, u16) = match i % 4 {
+                0 => (JobKind::Hierarchize, &[6, 5], 1, 0),
+                1 => (JobKind::Combine, &[5, 5], 1, 0),
+                2 => (JobKind::Combine, &[4, 4, 4], 2, 0),
+                _ => (JobKind::Solve, &[4, 4], 1, 4),
+            };
+            JobSpec { id: i, kind, levels: LevelVector::new(levels), tau, steps, seed: i as u64 }
+        })
+        .collect()
+}
+
+fn main() {
+    let n = if quick() { 16 } else { 64 };
+    let rounds = if quick() { 2 } else { 4 };
+    let workers: usize = std::env::var("SGCT_SERVE_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let jobs = burst(n);
+    println!("\n== serve throughput: {n}-job mixed burst x {rounds} rounds ==");
+
+    // one-shot: allocate-per-job reference path
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for s in &jobs {
+            let _ = job::reference(s).unwrap();
+        }
+    }
+    let oneshot = t0.elapsed().as_secs_f64() / rounds as f64;
+
+    // arena: same jobs on recycled buffers (one warmup round first)
+    let arena = Arc::new(GridArena::new());
+    for s in &jobs {
+        let _ = job::execute(s, &arena, 1).unwrap();
+    }
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for s in &jobs {
+            let _ = job::execute(s, &arena, 1).unwrap();
+        }
+    }
+    let pooled = t0.elapsed().as_secs_f64() / rounds as f64;
+
+    // served: the full daemon loop, one connection per concurrent client
+    let dir = unique_run_dir(0x5e21);
+    std::fs::create_dir_all(&dir).unwrap();
+    let socket = dir.join("serve.sock");
+    let mut cfg = ServeConfig::new(socket.clone());
+    cfg.workers = workers;
+    let handle = ServerHandle::start(cfg).unwrap();
+    let run_burst = |jobs: &[JobSpec]| {
+        let threads: Vec<_> = jobs
+            .chunks(jobs.len().div_ceil(workers))
+            .map(|chunk| {
+                let chunk = chunk.to_vec();
+                let socket = socket.clone();
+                std::thread::spawn(move || {
+                    let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+                    for s in &chunk {
+                        let _ = c.run(s).unwrap();
+                    }
+                })
+            })
+            .collect();
+        threads.into_iter().for_each(|t| t.join().unwrap());
+    };
+    run_burst(&jobs); // warm the daemon's arena
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        run_burst(&jobs);
+    }
+    let served = t0.elapsed().as_secs_f64() / rounds as f64;
+    let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+    let stats = c.stats().unwrap();
+    c.shutdown().unwrap();
+    handle.join();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut t = Table::new(vec!["series", "burst", "jobs/s", "vs one-shot"]);
+    for (name, secs) in [("one-shot", oneshot), ("arena", pooled), ("served", served)] {
+        t.row(vec![
+            name.to_string(),
+            human_time(secs),
+            format!("{:.1}", n as f64 / secs),
+            format!("{:.2}x", oneshot / secs),
+        ]);
+    }
+    t.print();
+    println!(
+        "daemon counters: {} jobs, arena {} fresh / {} reused, {} grid allocations",
+        stats.jobs_done, stats.arena_fresh, stats.arena_reuses, stats.grid_buffer_allocs
+    );
+
+    let record = |name: &str, secs: f64| BenchRecord {
+        name: name.to_string(),
+        variant: "serve".to_string(),
+        threads: workers,
+        levels: format!("burst{n}"),
+        grid_bytes: 0,
+        cycles: 0.0,
+        secs,
+        gflops: 0.0,
+        flops_per_cycle: 0.0,
+        speedup_vs_baseline: oneshot / secs,
+        extra: vec![("jobs_per_sec".to_string(), n as f64 / secs)],
+    };
+    emit(
+        "serve_throughput",
+        &[record("one-shot", oneshot), record("arena", pooled), record("served", served)],
+    );
+}

@@ -38,6 +38,12 @@
 //! completes the reduction degraded — bitwise equal to [`reduce_local`]
 //! on the recovered scheme — and [`chaos`] injects each failure mode at
 //! every tree position, seeded, to prove it.
+//!
+//! The same [`wire`] + [`transport`] stack also carries a second,
+//! adversarial workload: `sgct serve` (`crate::serve`) frames whole
+//! *jobs* over it — many small frames, many concurrent peers, clients
+//! that die mid-job — which is what flushed out the bind-probe,
+//! accept-deadline, and timeout-parsing fixes in [`transport`].
 
 pub mod chaos;
 pub mod overlap;
@@ -52,4 +58,8 @@ pub use reduce::{
     seeded_component_grid, seeded_recovery_block, subtree_ranks, unique_run_dir, unix_links,
     FaultReport, Measured, PairTransport, RankLinks, ReduceOptions, Topology,
 };
-pub use transport::{default_timeout, CommError, InProcess, Transport, UnixSocket};
+pub use transport::{
+    default_timeout, resolve_timeout_ms, BoundListener, CommError, InProcess, Transport,
+    UnixSocket,
+};
+pub use wire::{JobKind, JobSpec, RejectReason, ServeStats};

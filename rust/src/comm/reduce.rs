@@ -1308,7 +1308,9 @@ pub fn unix_links(dir: &Path, rank: usize, ranks: usize, timeout: Duration) -> R
     };
     let children = listeners
         .iter()
-        .map(|l| UnixSocket::accept_one(l).map(|s| Box::new(s) as Box<dyn Transport>))
+        .map(|l| {
+            UnixSocket::accept_timeout(l, timeout).map(|s| Box::new(s) as Box<dyn Transport>)
+        })
         .collect::<Result<_>>()?;
     Ok(RankLinks { parent, children })
 }

@@ -25,8 +25,9 @@
 use std::fmt;
 use std::io::{Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Once;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
@@ -79,14 +80,57 @@ impl fmt::Display for CommError {
     }
 }
 
+/// The deadline used when `SGCT_COMM_TIMEOUT_MS` is unset or unusable.
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Resolve a raw `SGCT_COMM_TIMEOUT_MS` value to the deadline it means,
+/// plus the warning (if any) the caller should surface.  Pure — callable
+/// from table tests without mutating the process environment (`set_var`
+/// racing `getenv` across test threads is UB).
+///
+/// Two footguns this rejects instead of honoring:
+///
+/// * `0` — a zero `Duration` makes every `recv_timeout` fail *instantly*
+///   (`SO_RCVTIMEO` treats 0 as "no timeout" but the in-process transport
+///   does not, and a 0 ms deadline is never what an operator meant), so
+///   zero falls back to the default, with a warning;
+/// * garbage (`"5s"`, `"fast"`, negative) — previously a **silent** fall
+///   back to 30 s, which hid typos; now it warns.
+pub fn resolve_timeout_ms(raw: Option<&str>) -> (Duration, Option<String>) {
+    let Some(raw) = raw else { return (DEFAULT_TIMEOUT, None) };
+    let t = raw.trim();
+    match t.parse::<u64>() {
+        Ok(0) => (
+            DEFAULT_TIMEOUT,
+            Some(
+                "SGCT_COMM_TIMEOUT_MS=0 would make every receive fail instantly; \
+                 using the 30 s default"
+                    .to_string(),
+            ),
+        ),
+        Ok(ms) => (Duration::from_millis(ms), None),
+        Err(_) => (
+            DEFAULT_TIMEOUT,
+            Some(format!(
+                "SGCT_COMM_TIMEOUT_MS={t:?} is not a millisecond count; \
+                 using the 30 s default"
+            )),
+        ),
+    }
+}
+
 /// Default receive/send deadline of the reduction tree:
-/// `SGCT_COMM_TIMEOUT_MS` (generous 30 s when unset or unparsable).
+/// `SGCT_COMM_TIMEOUT_MS` (30 s when unset; zero and unparsable values
+/// fall back to 30 s **with a warning**, emitted once per process — see
+/// [`resolve_timeout_ms`]).
 pub fn default_timeout() -> Duration {
-    std::env::var("SGCT_COMM_TIMEOUT_MS")
-        .ok()
-        .and_then(|v| v.trim().parse::<u64>().ok())
-        .map(Duration::from_millis)
-        .unwrap_or(Duration::from_secs(30))
+    static WARN_ONCE: Once = Once::new();
+    let raw = std::env::var("SGCT_COMM_TIMEOUT_MS").ok();
+    let (d, warning) = resolve_timeout_ms(raw.as_deref());
+    if let Some(msg) = warning {
+        WARN_ONCE.call_once(|| eprintln!("warning: {msg}"));
+    }
+    d
 }
 
 /// A bidirectional, ordered, reliable message link between two ranks.
@@ -198,6 +242,59 @@ fn io_err(e: std::io::Error, what: &str) -> anyhow::Error {
     }
 }
 
+/// A bound listener plus the lockfile that marks its endpoint as owned.
+///
+/// [`UnixSocket::bind`] returns this instead of a bare [`UnixListener`] so
+/// the liveness story needs **no probe connection**: ownership of the
+/// endpoint is the existence of `<path>.lock` (holding the owner's pid),
+/// checked against `/proc`.  The old probe — `UnixStream::connect` against
+/// a live listener — injected a spurious connection into the owner's
+/// accept queue, which the owner then accepted as a peer and promptly
+/// failed on with `PeerClosed`/`CorruptFrame`.  A lockfile is unobservable
+/// to the listener.
+///
+/// Dropping removes both the socket file and the lockfile, so an orderly
+/// shutdown leaves nothing stale behind.
+pub struct BoundListener {
+    listener: UnixListener,
+    path: PathBuf,
+    lock_path: PathBuf,
+}
+
+impl std::ops::Deref for BoundListener {
+    type Target = UnixListener;
+    fn deref(&self) -> &UnixListener {
+        &self.listener
+    }
+}
+
+impl Drop for BoundListener {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+        let _ = std::fs::remove_file(&self.lock_path);
+    }
+}
+
+/// Lockfile path of a socket endpoint: `<path>.lock` beside the socket.
+fn lock_path_of(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".lock");
+    PathBuf::from(os)
+}
+
+/// Is the process holding a lockfile still alive?  Our own pid is always
+/// live (two binds of one path inside one process are a config error, not
+/// staleness).  Without `/proc` (non-Linux), err on the side of liveness.
+fn lock_owner_alive(pid: u32) -> bool {
+    if pid == std::process::id() {
+        return true;
+    }
+    if !Path::new("/proc").exists() {
+        return true;
+    }
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
 /// Unix-domain-socket transport: length-prefixed frames over one stream.
 pub struct UnixSocket {
     stream: UnixStream,
@@ -230,27 +327,105 @@ impl UnixSocket {
         }
     }
 
-    /// Bind a listener at `path`.  A connectable socket already there has
-    /// a live owner — refuse to hijack it (two runs must not share an
-    /// endpoint dir); a non-connectable leftover is stale and is cleared.
-    pub fn bind(path: &Path) -> Result<UnixListener> {
-        if path.exists() {
-            if UnixStream::connect(path).is_ok() {
-                bail!(
-                    "socket {} is owned by a live listener; refusing to clobber it \
-                     (is another reduce sharing this endpoint dir?)",
-                    path.display()
-                );
+    /// Bind a listener at `path`.  An endpoint whose lockfile names a live
+    /// owner is refused (two runs must not share an endpoint dir); a
+    /// leftover from a dead process is stale and is cleared.
+    ///
+    /// Liveness is decided **without touching the socket**: a pid-bearing
+    /// `<path>.lock` created with `O_EXCL` is the ownership claim, and
+    /// staleness is "that pid no longer exists".  The previous
+    /// implementation probed with `UnixStream::connect`, which a *live*
+    /// owner observed as a real peer in its accept queue — and then failed
+    /// on with `PeerClosed`/`CorruptFrame` when the probe hung up.  See
+    /// [`BoundListener`].
+    pub fn bind(path: &Path) -> Result<BoundListener> {
+        let lock_path = lock_path_of(path);
+        // ≤ 2 attempts: the second runs only after clearing a stale lock,
+        // and losing *that* race means a genuinely live contender appeared.
+        for _ in 0..2 {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&lock_path) {
+                Ok(mut lock) => {
+                    let _ = write!(lock, "{}", std::process::id());
+                    // The lock is ours; any socket file left at `path` is
+                    // debris from an owner that died without cleanup.
+                    let _ = std::fs::remove_file(path);
+                    match UnixListener::bind(path) {
+                        Ok(listener) => {
+                            return Ok(BoundListener {
+                                listener,
+                                path: path.to_path_buf(),
+                                lock_path,
+                            })
+                        }
+                        Err(e) => {
+                            let _ = std::fs::remove_file(&lock_path);
+                            return Err(anyhow::Error::from(e))
+                                .with_context(|| format!("bind {}", path.display()));
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let owner = std::fs::read_to_string(&lock_path)
+                        .ok()
+                        .and_then(|s| s.trim().parse::<u32>().ok());
+                    // An unreadable/empty lock is a bind in progress —
+                    // treat as live rather than clobber a racing owner.
+                    let alive = owner.map_or(true, lock_owner_alive);
+                    if alive {
+                        bail!(
+                            "socket {} is owned by a live listener{}; refusing to clobber it \
+                             (is another reduce sharing this endpoint dir?)",
+                            path.display(),
+                            owner.map_or(String::new(), |p| format!(" (pid {p})")),
+                        );
+                    }
+                    let _ = std::fs::remove_file(&lock_path);
+                    let _ = std::fs::remove_file(path);
+                }
+                Err(e) => {
+                    return Err(anyhow::Error::from(e))
+                        .with_context(|| format!("create lock {}", lock_path.display()))
+                }
             }
-            let _ = std::fs::remove_file(path);
         }
-        UnixListener::bind(path).with_context(|| format!("bind {}", path.display()))
+        bail!(
+            "socket {}: lost the lockfile race twice; refusing to clobber the new owner",
+            path.display()
+        );
     }
 
-    /// Accept one connection.
-    pub fn accept_one(listener: &UnixListener) -> Result<Self> {
-        let (stream, _) = listener.accept().context("accept")?;
+    /// Accept one connection, or fail with [`CommError::PeerTimeout`] once
+    /// `timeout` elapses.  A worker that dies between spawn and connect
+    /// previously hung the parent forever — `accept` sits *before* any
+    /// `recv_timeout` applies, so it needs its own deadline.
+    pub fn accept_timeout(listener: &UnixListener, timeout: Duration) -> Result<Self> {
+        listener.set_nonblocking(true).context("set listener nonblocking")?;
+        let deadline = Instant::now() + timeout;
+        let out = loop {
+            match listener.accept() {
+                Ok((stream, _)) => break Ok(stream),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        break Err(anyhow::anyhow!(
+                            "accept: no peer connected within {timeout:?}: {}",
+                            CommError::PeerTimeout
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => break Err(io_err(e, "accept")),
+            }
+        };
+        let _ = listener.set_nonblocking(false);
+        let stream = out?;
+        stream.set_nonblocking(false).context("set stream blocking")?;
         Ok(Self { stream })
+    }
+
+    /// Accept one connection under the default deadline
+    /// ([`default_timeout`]).
+    pub fn accept_one(listener: &UnixListener) -> Result<Self> {
+        Self::accept_timeout(listener, default_timeout())
     }
 
     fn recv_inner(&mut self) -> Result<Vec<u8>> {
@@ -419,19 +594,112 @@ mod tests {
     }
 
     #[test]
+    fn resolve_timeout_ms_table() {
+        // pure helper — no env mutation (set_var racing getenv is UB)
+        let cases: &[(Option<&str>, u64, bool)] = &[
+            (None, 30_000, false),            // unset: default, silent
+            (Some("250"), 250, false),        // plain milliseconds
+            (Some(" 1500 "), 1500, false),    // whitespace tolerated
+            (Some("0"), 30_000, true),        // zero would fail instantly: default + warn
+            (Some("5s"), 30_000, true),       // garbage: default + warn (was silent)
+            (Some("-10"), 30_000, true),      // negative is garbage too
+            (Some("fast"), 30_000, true),
+        ];
+        for &(raw, ms, warns) in cases {
+            let (d, warning) = resolve_timeout_ms(raw);
+            assert_eq!(d, Duration::from_millis(ms), "raw={raw:?}");
+            assert_eq!(warning.is_some(), warns, "raw={raw:?}: {warning:?}");
+        }
+    }
+
+    #[test]
     #[cfg_attr(miri, ignore)]
     fn bind_refuses_a_live_socket_but_clears_a_stale_one() {
         let dir = std::env::temp_dir().join(format!("sgct_tbind_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("b.sock");
         let live = UnixSocket::bind(&path).unwrap();
+        // the endpoint has a live owner (us): a second bind must refuse
         let e = UnixSocket::bind(&path).unwrap_err();
         assert!(format!("{e:#}").contains("refusing to clobber"), "{e:#}");
-        // dropping the listener leaves a stale file behind — rebinding
-        // over *that* must succeed
+        // an orderly drop cleans up both files, so rebinding succeeds
         drop(live);
-        assert!(path.exists(), "expected a stale socket file");
-        let _rebound = UnixSocket::bind(&path).unwrap();
+        assert!(!path.exists(), "drop must remove the socket file");
+        assert!(!lock_path_of(&path).exists(), "drop must remove the lockfile");
+        let rebound = UnixSocket::bind(&path).unwrap();
+        drop(rebound);
+        // a *crashed* owner leaves both files with a dead pid in the lock:
+        // that is stale, and bind clears it
+        std::fs::write(lock_path_of(&path), format!("{}", u32::MAX)).unwrap();
+        std::fs::write(&path, b"").unwrap();
+        let _over_stale = UnixSocket::bind(&path)
+            .expect("a lockfile naming a dead pid is stale and must be cleared");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn probed_listener_still_serves_its_real_peer() {
+        // the bug this pins: the old bind probed a live endpoint with
+        // UnixStream::connect, so the owner's next accept returned the
+        // probe (which had already hung up) instead of its real peer, and
+        // the owner died with PeerClosed.  The lockfile probe must be
+        // unobservable: after a refused second bind, the first listener's
+        // accept queue holds exactly its real client.
+        let dir = std::env::temp_dir().join(format!("sgct_tprobe_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.sock");
+        let listener = UnixSocket::bind(&path).unwrap();
+        // a contender probes the endpoint and is refused
+        let e = UnixSocket::bind(&path).unwrap_err();
+        assert!(format!("{e:#}").contains("refusing to clobber"), "{e:#}");
+        // the owner now serves its real peer: the FIRST accepted
+        // connection must be the client, not probe debris
+        let path2 = path.clone();
+        let client = std::thread::spawn(move || {
+            let mut t = UnixSocket::connect_retry(&path2, Duration::from_secs(5)).unwrap();
+            t.send(b"real peer").unwrap();
+            assert_eq!(t.recv().unwrap(), b"served");
+        });
+        let mut server =
+            UnixSocket::accept_timeout(&listener, Duration::from_secs(5)).unwrap();
+        assert_eq!(
+            server.recv().unwrap(),
+            b"real peer",
+            "first accepted connection was not the real client — a probe leaked \
+             into the accept queue"
+        );
+        server.send(b"served").unwrap();
+        client.join().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn accept_timeout_fails_typed_when_no_worker_ever_connects() {
+        // a worker that dies between spawn and connect must not hang the
+        // parent's accept forever: hard wall clock around the deadline
+        let dir = std::env::temp_dir().join(format!("sgct_tacc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let listener = UnixSocket::bind(&dir.join("a.sock")).unwrap();
+        let t0 = Instant::now();
+        let e = UnixSocket::accept_timeout(&listener, Duration::from_millis(100))
+            .err()
+            .expect("no peer must not yield a connection");
+        assert_eq!(CommError::classify(&e), Some(CommError::PeerTimeout), "{e:#}");
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= Duration::from_millis(100), "returned before the deadline");
+        assert!(elapsed < Duration::from_secs(5), "accept_timeout hung: {elapsed:?}");
+        // the listener itself is still usable after a timeout
+        let path2 = dir.join("a.sock");
+        let client = std::thread::spawn(move || {
+            let mut t = UnixSocket::connect_retry(&path2, Duration::from_secs(5)).unwrap();
+            t.send(b"late").unwrap();
+        });
+        let mut server =
+            UnixSocket::accept_timeout(&listener, Duration::from_secs(5)).unwrap();
+        assert_eq!(server.recv().unwrap(), b"late");
+        client.join().unwrap();
         std::fs::remove_dir_all(&dir).ok();
     }
 }

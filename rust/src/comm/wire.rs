@@ -26,6 +26,20 @@
 //!   dead-rank-id payload.  Receivers re-derive the recovered scheme from
 //!   it deterministically (`combi::fault::recover`) and switch the gather
 //!   to piece mode.
+//! * **job** — a `sgct serve` request: `id u32`, `job u8`
+//!   (hierarchize / combine / solve / stats / shutdown), `tau u8`,
+//!   `steps u16`, `seed u64`, then `dim` level bytes.  Jobs carry seeds,
+//!   not data: client and daemon re-derive identical component grids from
+//!   the seed (the `comm-worker` convention), so a request is ~32 bytes
+//!   however big the grids are.
+//! * **job-ok** — a finished job travelling back: `id u32` + the result
+//!   sparse grid as subspace blocks.
+//! * **job-err** — a typed rejection: `id u32`, `reason u8` (busy /
+//!   too-large / unsupported / internal), `detail u64` (the budget figure
+//!   that tripped — queue depth, predicted flops or reply bytes).
+//! * **stats** — the daemon's counters: `id u32` + seven `u64`s
+//!   ([`ServeStats`]).  How the integration suite pins "zero steady-state
+//!   grid allocations" across a process boundary.
 //!
 //! A subspace block is `dim` level bytes (each `1..=30`) followed by the
 //! dense row-major surplus payload, `prod 2^(l_i - 1)` f64 little-endian —
@@ -54,9 +68,138 @@ const KIND_PIECE: u8 = 2;
 const KIND_DONE: u8 = 3;
 const KIND_FAILED: u8 = 4;
 const KIND_REPLAN: u8 = 5;
+const KIND_JOB: u8 = 6;
+const KIND_JOB_OK: u8 = 7;
+const KIND_JOB_ERR: u8 = 8;
+const KIND_STATS: u8 = 9;
 
 /// Fixed header length in bytes.
 pub const HEADER_LEN: usize = 12;
+
+/// What a serve job asks the daemon to compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Hierarchize one seeded grid at exactly the spec's levels, gather
+    /// with coefficient 1.0.
+    Hierarchize,
+    /// Reduce the truncated scheme `(dim, max level, tau)` over seeded
+    /// component grids (bitwise equal to `comm::reduce_local`).
+    Combine,
+    /// Run `steps` heat-solver steps through the iterated-CT pipeline and
+    /// return the assembled sparse grid.
+    Solve,
+    /// Return the daemon's [`ServeStats`] counters.
+    Stats,
+    /// Ask the daemon to stop accepting and drain.
+    Shutdown,
+}
+
+impl JobKind {
+    pub const fn code(self) -> u8 {
+        match self {
+            JobKind::Hierarchize => 1,
+            JobKind::Combine => 2,
+            JobKind::Solve => 3,
+            JobKind::Stats => 4,
+            JobKind::Shutdown => 5,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            1 => JobKind::Hierarchize,
+            2 => JobKind::Combine,
+            3 => JobKind::Solve,
+            4 => JobKind::Stats,
+            5 => JobKind::Shutdown,
+            other => bail!("unknown job kind {other}"),
+        })
+    }
+}
+
+/// One serve request.  Jobs are *specs*, not data: the grids are
+/// re-derived from `seed` on the daemon (`comm::reduce::seeded_block`'s
+/// convention), which keeps requests tiny and results independently
+/// checkable by the client.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    /// Client-chosen correlation id, echoed on every reply.
+    pub id: u32,
+    pub kind: JobKind,
+    /// Target levels: the grid itself (hierarchize) or the per-axis
+    /// ceiling of the scheme (combine/solve use `max(levels)` as the
+    /// scheme level).  `Stats`/`Shutdown` carry a dummy `[1]`.
+    pub levels: LevelVector,
+    /// Truncation parameter of the combination scheme (`>= 1`).
+    pub tau: u8,
+    /// Solver steps (`Solve` jobs).
+    pub steps: u16,
+    /// Fill seed for the component grids.
+    pub seed: u64,
+}
+
+impl JobSpec {
+    /// A `Stats`/`Shutdown` frame: no grid content, dummy `[1]` levels.
+    pub fn control(kind: JobKind) -> Self {
+        JobSpec { id: 0, kind, levels: LevelVector::new(&[1]), tau: 1, steps: 0, seed: 0 }
+    }
+}
+
+/// Why the daemon refused a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The admission queue is full — back off and retry.
+    Busy,
+    /// The job exceeds the daemon's flop budget or its result could not
+    /// fit a `MAX_FRAME` reply.
+    TooLarge,
+    /// The daemon cannot run this job kind.
+    Unsupported,
+    /// The job was admitted but failed while executing.
+    Internal,
+}
+
+impl RejectReason {
+    pub const fn code(self) -> u8 {
+        match self {
+            RejectReason::Busy => 1,
+            RejectReason::TooLarge => 2,
+            RejectReason::Unsupported => 3,
+            RejectReason::Internal => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Self> {
+        Ok(match c {
+            1 => RejectReason::Busy,
+            2 => RejectReason::TooLarge,
+            3 => RejectReason::Unsupported,
+            4 => RejectReason::Internal,
+            other => bail!("unknown reject reason {other}"),
+        })
+    }
+}
+
+/// The daemon's observable counters (a `Stats` job's reply).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Jobs completed successfully.
+    pub jobs_done: u64,
+    /// Jobs refused with [`RejectReason::Busy`].
+    pub rejected_busy: u64,
+    /// Jobs refused with [`RejectReason::TooLarge`].
+    pub rejected_too_large: u64,
+    /// Arena slots created (`GridArena::fresh_allocations`).
+    pub arena_fresh: u64,
+    /// Arena checkouts served from parked buffers (`GridArena::reuses`).
+    pub arena_reuses: u64,
+    /// Process-global fresh grid-buffer allocations
+    /// (`grid::grid_buffer_allocs`) — the serve smoke pins this flat
+    /// across a warmed-up job burst.
+    pub grid_buffer_allocs: u64,
+    /// Jobs currently queued or executing.
+    pub in_flight: u64,
+}
 
 /// A decoded message.
 #[derive(Debug)]
@@ -72,6 +215,15 @@ pub enum Message {
     /// Recovery order down the tree: the authoritative dead-rank set the
     /// root re-planned around.
     Replan { dead: Vec<usize> },
+    /// A serve request.
+    JobRequest(JobSpec),
+    /// A finished serve job: the result sparse grid.
+    JobOk { id: u32, result: SparseGrid },
+    /// A typed serve rejection; `detail` is the budget figure that
+    /// tripped (queue depth, predicted flops or bytes).
+    JobErr { id: u32, reason: RejectReason, detail: u64 },
+    /// The daemon's counters.
+    Stats { id: u32, stats: ServeStats },
 }
 
 fn header(kind: u8, dim: usize) -> Vec<u8> {
@@ -149,6 +301,53 @@ pub fn encode_replan(dead: &[usize], dim: usize) -> Vec<u8> {
     seal(out)
 }
 
+/// Encode a serve request.
+pub fn encode_job(spec: &JobSpec) -> Vec<u8> {
+    let mut out = header(KIND_JOB, spec.levels.dim());
+    out.extend_from_slice(&spec.id.to_le_bytes());
+    out.push(spec.kind.code());
+    out.push(spec.tau);
+    out.extend_from_slice(&spec.steps.to_le_bytes());
+    out.extend_from_slice(&spec.seed.to_le_bytes());
+    out.extend_from_slice(spec.levels.as_slice());
+    seal(out)
+}
+
+/// Encode a finished job's result.
+pub fn encode_job_ok(id: u32, result: &SparseGrid, dim: usize) -> Vec<u8> {
+    let mut out = header(KIND_JOB_OK, dim);
+    out.extend_from_slice(&id.to_le_bytes());
+    push_subspaces(&mut out, result, dim);
+    seal(out)
+}
+
+/// Encode a typed rejection.
+pub fn encode_job_err(id: u32, reason: RejectReason, detail: u64, dim: usize) -> Vec<u8> {
+    let mut out = header(KIND_JOB_ERR, dim);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.push(reason.code());
+    out.extend_from_slice(&detail.to_le_bytes());
+    seal(out)
+}
+
+/// Encode the daemon's counters.
+pub fn encode_stats(id: u32, stats: &ServeStats, dim: usize) -> Vec<u8> {
+    let mut out = header(KIND_STATS, dim);
+    out.extend_from_slice(&id.to_le_bytes());
+    for v in [
+        stats.jobs_done,
+        stats.rejected_busy,
+        stats.rejected_too_large,
+        stats.arena_fresh,
+        stats.arena_reuses,
+        stats.grid_buffer_allocs,
+        stats.in_flight,
+    ] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    seal(out)
+}
+
 struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -177,6 +376,10 @@ impl<'a> Reader<'a> {
 
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn f64(&mut self) -> Result<f64> {
@@ -250,6 +453,46 @@ pub fn decode(buf: &[u8]) -> Result<Message> {
             } else {
                 Ok(Message::Replan { dead })
             }
+        }
+        KIND_JOB => {
+            let id = r.u32()?;
+            let kind = JobKind::from_code(r.u8()?)?;
+            let tau = r.u8()?;
+            ensure!((1..=30).contains(&tau), "tau {tau} out of range");
+            let steps = r.u16()?;
+            let seed = r.u64()?;
+            let levels = r.take(dim)?;
+            for (i, &l) in levels.iter().enumerate() {
+                ensure!((1..=30).contains(&l), "job level l_{} = {l} out of range", i + 1);
+            }
+            let levels = LevelVector::new(levels);
+            ensure!(r.pos == buf.len(), "trailing bytes after job spec");
+            Ok(Message::JobRequest(JobSpec { id, kind, levels, tau, steps, seed }))
+        }
+        KIND_JOB_OK => {
+            let id = r.u32()?;
+            Ok(Message::JobOk { id, result: decode_subspaces(&mut r, dim)? })
+        }
+        KIND_JOB_ERR => {
+            let id = r.u32()?;
+            let reason = RejectReason::from_code(r.u8()?)?;
+            let detail = r.u64()?;
+            ensure!(r.pos == buf.len(), "trailing bytes after rejection");
+            Ok(Message::JobErr { id, reason, detail })
+        }
+        KIND_STATS => {
+            let id = r.u32()?;
+            let stats = ServeStats {
+                jobs_done: r.u64()?,
+                rejected_busy: r.u64()?,
+                rejected_too_large: r.u64()?,
+                arena_fresh: r.u64()?,
+                arena_reuses: r.u64()?,
+                grid_buffer_allocs: r.u64()?,
+                in_flight: r.u64()?,
+            };
+            ensure!(r.pos == buf.len(), "trailing bytes after stats");
+            Ok(Message::Stats { id, stats })
         }
         other => bail!("unknown message kind {other}"),
     }
@@ -384,6 +627,112 @@ mod tests {
         let mut long = good.clone();
         long.extend_from_slice(&[0; 8]);
         assert!(decode(&long).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn job_frames_roundtrip() {
+        let spec = JobSpec {
+            id: 0xDEAD_BEEF,
+            kind: JobKind::Combine,
+            levels: LevelVector::new(&[4, 4, 4]),
+            tau: 2,
+            steps: 12,
+            seed: 0x1234_5678_9ABC_DEF0,
+        };
+        let bytes = encode_job(&spec);
+        let Message::JobRequest(back) = decode(&bytes).unwrap() else { panic!("wrong kind") };
+        assert_eq!(back, spec);
+        // every job kind survives the code mapping
+        for k in
+            [JobKind::Hierarchize, JobKind::Combine, JobKind::Solve, JobKind::Stats, JobKind::Shutdown]
+        {
+            assert_eq!(JobKind::from_code(k.code()).unwrap(), k);
+        }
+        assert!(JobKind::from_code(0).is_err());
+        assert!(JobKind::from_code(6).is_err());
+
+        let sg = sample_sparse(&[3, 2], 11, 1.0);
+        let ok = encode_job_ok(7, &sg, 2);
+        match decode(&ok).unwrap() {
+            Message::JobOk { id, result } => {
+                assert_eq!(id, 7);
+                assert!(result.bitwise_eq(&sg));
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+        // canonical order: re-encoding the decoded result is the identity
+        let Message::JobOk { result, .. } = decode(&ok).unwrap() else { unreachable!() };
+        assert_eq!(encode_job_ok(7, &result, 2), ok);
+
+        let err = encode_job_err(9, RejectReason::TooLarge, 123_456, 2);
+        match decode(&err).unwrap() {
+            Message::JobErr { id, reason, detail } => {
+                assert_eq!((id, reason, detail), (9, RejectReason::TooLarge, 123_456));
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+        for r in
+            [RejectReason::Busy, RejectReason::TooLarge, RejectReason::Unsupported, RejectReason::Internal]
+        {
+            assert_eq!(RejectReason::from_code(r.code()).unwrap(), r);
+        }
+        assert!(RejectReason::from_code(0).is_err());
+
+        let stats = ServeStats {
+            jobs_done: 1,
+            rejected_busy: 2,
+            rejected_too_large: 3,
+            arena_fresh: 4,
+            arena_reuses: 5,
+            grid_buffer_allocs: 6,
+            in_flight: 7,
+        };
+        match decode(&encode_stats(3, &stats, 1)).unwrap() {
+            Message::Stats { id, stats: back } => {
+                assert_eq!(id, 3);
+                assert_eq!(back, stats);
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn job_frames_reject_truncation_and_garbage() {
+        let spec = JobSpec {
+            id: 1,
+            kind: JobKind::Solve,
+            levels: LevelVector::new(&[3, 2]),
+            tau: 1,
+            steps: 4,
+            seed: 42,
+        };
+        let good = encode_job(&spec);
+        for cut in 0..good.len() {
+            assert!(decode(&good[..cut]).is_err(), "cut at {cut} accepted");
+        }
+        // bad job kind byte (offset: header + id)
+        let mut b = good.clone();
+        b[HEADER_LEN + 4] = 99;
+        assert!(decode(&b).is_err(), "job kind 99 accepted");
+        // tau 0
+        let mut b = good.clone();
+        b[HEADER_LEN + 5] = 0;
+        assert!(decode(&b).is_err(), "tau 0 accepted");
+        // level byte out of range (offset: header + id + kind + tau + steps + seed)
+        let mut b = good.clone();
+        b[HEADER_LEN + 16] = 31;
+        assert!(decode(&b).is_err(), "level 31 accepted");
+        // trailing garbage after a rejection
+        let mut e = encode_job_err(1, RejectReason::Busy, 0, 2);
+        e.push(0);
+        let len = e.len() as u32;
+        e[8..12].copy_from_slice(&len.to_le_bytes());
+        assert!(decode(&e).is_err(), "trailing bytes accepted");
+        // stats truncation
+        let s = encode_stats(1, &ServeStats::default(), 1);
+        for cut in 0..s.len() {
+            assert!(decode(&s[..cut]).is_err(), "stats cut at {cut} accepted");
+        }
     }
 
     #[test]

@@ -1,0 +1,379 @@
+//! Slab/arena grid pool with generation-checked handles.
+//!
+//! `sgct serve` keeps many small jobs in flight; allocating every
+//! component grid per job (the old `coordinator::pool` pattern) turns the
+//! allocator into the contention point and the page fault into the hot
+//! path.  The arena recycles grid storage across jobs instead:
+//!
+//! * **Chunked slots.**  Slot metadata lives in fixed-size chunks
+//!   (`CHUNK` slots each) that are never reallocated, so a slot id is
+//!   stable for the arena's lifetime and the pool grows by whole chunks,
+//!   not by reallocating one big vector under the lock.
+//! * **Capacity-binned free list.**  Parked buffers are indexed by
+//!   capacity in a `BTreeMap`; a checkout takes the *smallest* parked
+//!   buffer that fits (best fit), so one big job cannot strand all the
+//!   large buffers under small requests.
+//! * **Generation-checked handles.**  A [`GridHandle`] is `(slot,
+//!   generation)`; the slot's generation bumps on every checkout *and*
+//!   every checkin, so a stale handle — double checkin, checkin after the
+//!   slot was recycled to another job — is rejected with
+//!   [`ArenaError::StaleHandle`] instead of silently corrupting another
+//!   tenant's grid.
+//!
+//! The reuse contract is observable two ways: per-instance counters
+//! ([`GridArena::fresh_allocations`] / [`GridArena::reuses`]) for unit
+//! tests that share a process with unrelated allocations, and the
+//! process-global [`crate::grid::grid_buffer_allocs`] for the serve
+//! integration pin, whose daemon process does nothing but serve.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::grid::{FullGrid, LevelVector};
+
+/// Slots per metadata chunk (chunks are allocated whole and never moved).
+const CHUNK: usize = 64;
+
+/// A checked-out grid's claim ticket: which slot holds its buffer's
+/// identity, and at which generation.  `Copy` — handles travel through
+/// job structs freely; only [`GridArena::checkin`] consumes the claim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GridHandle {
+    slot: u32,
+    generation: u32,
+}
+
+/// Why a checkin was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArenaError {
+    /// The handle's generation does not match the slot — the grid was
+    /// already checked in (double checkin) or the slot has since been
+    /// recycled to another tenant.  The offered buffer is dropped, not
+    /// parked: honoring a stale claim is exactly the corruption the
+    /// generations exist to prevent.
+    StaleHandle,
+    /// The handle names a slot this arena never created.
+    UnknownSlot,
+}
+
+impl fmt::Display for ArenaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArenaError::StaleHandle => write!(f, "stale grid handle (wrong generation)"),
+            ArenaError::UnknownSlot => write!(f, "grid handle from a different arena"),
+        }
+    }
+}
+
+enum SlotState {
+    /// Parked buffer awaiting reuse (registered in the free index).
+    Free(Vec<f64>),
+    /// Buffer currently out with a tenant.
+    Lent,
+}
+
+struct Slot {
+    generation: u32,
+    state: SlotState,
+}
+
+struct Inner {
+    /// Slot metadata; slot id `s` lives at `chunks[s / CHUNK][s % CHUNK]`.
+    chunks: Vec<Vec<Slot>>,
+    /// Total slots created (== sum of chunk lengths).
+    slots: u32,
+    /// Free index: buffer capacity -> slot ids parked at that capacity.
+    free_by_cap: BTreeMap<usize, Vec<u32>>,
+}
+
+impl Inner {
+    fn slot_mut(&mut self, id: u32) -> Option<&mut Slot> {
+        if id >= self.slots {
+            return None;
+        }
+        let id = id as usize;
+        Some(&mut self.chunks[id / CHUNK][id % CHUNK])
+    }
+
+    /// Create a slot (growing by a whole chunk when needed) and return its id.
+    fn new_slot(&mut self, state: SlotState) -> u32 {
+        let id = self.slots;
+        if (id as usize) % CHUNK == 0 {
+            self.chunks.push(Vec::with_capacity(CHUNK));
+        }
+        self.chunks.last_mut().expect("chunk just ensured").push(Slot { generation: 1, state });
+        self.slots += 1;
+        id
+    }
+
+    /// Pop the smallest parked slot whose capacity covers `need`.
+    fn take_fitting(&mut self, need: usize) -> Option<u32> {
+        let cap = *self.free_by_cap.range(need..).next()?.0;
+        let bin = self.free_by_cap.get_mut(&cap).expect("bin exists");
+        let id = bin.pop().expect("bins are never left empty");
+        if bin.is_empty() {
+            self.free_by_cap.remove(&cap);
+        }
+        Some(id)
+    }
+}
+
+/// Thread-safe recycling pool of grid buffers.  See the module docs.
+pub struct GridArena {
+    inner: Mutex<Inner>,
+    fresh: AtomicU64,
+    reuses: AtomicU64,
+    lent: AtomicU64,
+}
+
+impl Default for GridArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GridArena {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                chunks: Vec::new(),
+                slots: 0,
+                free_by_cap: BTreeMap::new(),
+            }),
+            fresh: AtomicU64::new(0),
+            reuses: AtomicU64::new(0),
+            lent: AtomicU64::new(0),
+        }
+    }
+
+    /// Check out a zeroed `(levels, align)` grid, recycling a parked
+    /// buffer when one fits (no allocation) and allocating a fresh slot
+    /// otherwise.  The handle must come back through
+    /// [`checkin`](Self::checkin) for the buffer to be reused.
+    pub fn checkout(&self, levels: &LevelVector, align: usize) -> (GridHandle, FullGrid) {
+        let need = FullGrid::buffer_len(levels, align);
+        let mut inner = self.inner.lock().expect("arena lock poisoned");
+        let (id, buf) = match inner.take_fitting(need) {
+            Some(id) => {
+                let slot = inner.slot_mut(id).expect("free index holds live ids");
+                let buf = match std::mem::replace(&mut slot.state, SlotState::Lent) {
+                    SlotState::Free(buf) => buf,
+                    SlotState::Lent => unreachable!("free index held a lent slot"),
+                };
+                slot.generation = slot.generation.wrapping_add(1);
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                (id, buf)
+            }
+            None => {
+                let id = inner.new_slot(SlotState::Lent);
+                self.fresh.fetch_add(1, Ordering::Relaxed);
+                (id, Vec::new())
+            }
+        };
+        let generation = inner.slot_mut(id).expect("slot just touched").generation;
+        self.lent.fetch_add(1, Ordering::Relaxed);
+        drop(inner);
+        // buffer construction happens outside the lock: zeroing a large
+        // grid must not serialize the whole pool
+        (GridHandle { slot: id, generation }, FullGrid::with_buffer(levels.clone(), align, buf))
+    }
+
+    /// Return a checked-out grid; its buffer parks for reuse.  The handle
+    /// is dead afterwards — a second checkin (or one raced against a
+    /// recycle) fails with [`ArenaError::StaleHandle`].
+    pub fn checkin(&self, handle: GridHandle, grid: FullGrid) -> Result<(), ArenaError> {
+        let buf = grid.into_buffer();
+        let cap = buf.capacity();
+        let mut inner = self.inner.lock().expect("arena lock poisoned");
+        let slot = inner.slot_mut(handle.slot).ok_or(ArenaError::UnknownSlot)?;
+        if slot.generation != handle.generation || !matches!(slot.state, SlotState::Lent) {
+            return Err(ArenaError::StaleHandle);
+        }
+        slot.generation = slot.generation.wrapping_add(1);
+        slot.state = SlotState::Free(buf);
+        inner.free_by_cap.entry(cap).or_default().push(handle.slot);
+        self.lent.fetch_sub(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Park an orphan buffer (e.g. a dissolved sparse grid's subspace
+    /// storage, [`crate::sparse::SparseGrid::into_buffers`]) as a new free
+    /// slot.  Zero-capacity buffers are dropped — nothing to recycle.
+    pub fn park(&self, buf: Vec<f64>) {
+        let cap = buf.capacity();
+        if cap == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("arena lock poisoned");
+        let id = inner.new_slot(SlotState::Free(buf));
+        inner.free_by_cap.entry(cap).or_default().push(id);
+    }
+
+    /// Slots created because no parked buffer fit (the counter the reuse
+    /// contract pins flat after warmup).
+    pub fn fresh_allocations(&self) -> u64 {
+        self.fresh.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts served from a parked buffer.
+    pub fn reuses(&self) -> u64 {
+        self.reuses.load(Ordering::Relaxed)
+    }
+
+    /// Grids currently out with tenants.
+    pub fn in_flight(&self) -> u64 {
+        self.lent.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+    use std::sync::Arc;
+
+    fn lv(levels: &[u8]) -> LevelVector {
+        LevelVector::new(levels)
+    }
+
+    #[test]
+    fn checkout_checkin_roundtrip_reuses_the_buffer() {
+        let arena = GridArena::new();
+        let (h, mut g) = arena.checkout(&lv(&[3, 2]), 4);
+        assert_eq!(arena.fresh_allocations(), 1);
+        assert_eq!(arena.in_flight(), 1);
+        g.fill_with(|c| c[0] + c[1]); // dirty it
+        let ptr = g.as_slice().as_ptr();
+        arena.checkin(h, g).unwrap();
+        assert_eq!(arena.in_flight(), 0);
+        // same shape again: same storage, zeroed, no fresh slot
+        let (h2, g2) = arena.checkout(&lv(&[3, 2]), 4);
+        assert_eq!(g2.as_slice().as_ptr(), ptr, "must recycle the parked buffer");
+        assert!(g2.as_slice().iter().all(|&v| v == 0.0), "reuse must hand out zeros");
+        assert_eq!(arena.fresh_allocations(), 1, "no second allocation");
+        assert_eq!(arena.reuses(), 1);
+        arena.checkin(h2, g2).unwrap();
+    }
+
+    #[test]
+    fn stale_handles_are_rejected() {
+        let arena = GridArena::new();
+        let (h, g) = arena.checkout(&lv(&[2, 2]), 1);
+        arena.checkin(h, g).unwrap();
+        // double checkin: the handle died with the first checkin
+        let decoy = FullGrid::new(lv(&[2, 2]));
+        assert_eq!(arena.checkin(h, decoy), Err(ArenaError::StaleHandle));
+        // the slot has been recycled to a new tenant: the old handle must
+        // not be able to clobber it
+        let (h2, g2) = arena.checkout(&lv(&[2, 2]), 1);
+        assert_ne!(h, h2, "recycled slot must carry a new generation");
+        let decoy = FullGrid::new(lv(&[2, 2]));
+        assert_eq!(arena.checkin(h, decoy), Err(ArenaError::StaleHandle));
+        // the legitimate tenant is unaffected
+        arena.checkin(h2, g2).unwrap();
+        // a handle from a different arena is unknown here
+        let other = GridArena::new();
+        let (h_other, g_other) = {
+            let (h, g) = other.checkout(&lv(&[2]), 1);
+            // drive the foreign slot id out of this arena's range
+            (GridHandle { slot: h.slot + 1000, generation: h.generation }, g)
+        };
+        assert_eq!(arena.checkin(h_other, g_other), Err(ArenaError::UnknownSlot));
+    }
+
+    #[test]
+    fn allocation_counter_is_flat_after_warmup() {
+        let arena = GridArena::new();
+        let shapes = [lv(&[3, 2]), lv(&[2, 3]), lv(&[4, 1]), lv(&[2, 2])];
+        // warmup: every shape once
+        for s in &shapes {
+            let (h, g) = arena.checkout(s, 4);
+            arena.checkin(h, g).unwrap();
+        }
+        let after_warmup = arena.fresh_allocations();
+        // steady state: many jobs, zero new slots
+        for round in 0..50 {
+            let s = &shapes[round % shapes.len()];
+            let (h, mut g) = arena.checkout(s, 4);
+            g.fill_with(|c| c[0] * round as f64);
+            arena.checkin(h, g).unwrap();
+        }
+        assert_eq!(
+            arena.fresh_allocations(),
+            after_warmup,
+            "steady-state checkouts must all be reuses"
+        );
+        assert!(arena.reuses() >= 50);
+        assert_eq!(arena.in_flight(), 0);
+    }
+
+    #[test]
+    fn best_fit_leaves_big_buffers_for_big_jobs() {
+        let arena = GridArena::new();
+        // park a small and a big buffer
+        let (hs, gs) = arena.checkout(&lv(&[2, 2]), 1); // 9 points
+        let (hb, gb) = arena.checkout(&lv(&[4, 4]), 1); // 225 points
+        arena.checkin(hs, gs).unwrap();
+        arena.checkin(hb, gb).unwrap();
+        let fresh = arena.fresh_allocations();
+        // a small request must take the small buffer...
+        let (h1, g1) = arena.checkout(&lv(&[2, 2]), 1);
+        // ...so the big request still finds the big one parked
+        let (h2, g2) = arena.checkout(&lv(&[4, 4]), 1);
+        assert_eq!(arena.fresh_allocations(), fresh, "best fit must avoid both allocations");
+        arena.checkin(h1, g1).unwrap();
+        arena.checkin(h2, g2).unwrap();
+    }
+
+    #[test]
+    fn parked_orphan_buffers_join_the_pool() {
+        let arena = GridArena::new();
+        arena.park(vec![1.0; 100]);
+        arena.park(Vec::new()); // capacity 0: dropped, not a slot
+        let (h, g) = arena.checkout(&lv(&[3, 2]), 1); // needs 21 <= 100
+        assert_eq!(arena.fresh_allocations(), 0, "orphan buffer must serve the checkout");
+        assert_eq!(arena.reuses(), 1);
+        assert!(g.as_slice().iter().all(|&v| v == 0.0), "orphan values must not leak");
+        arena.checkin(h, g).unwrap();
+    }
+
+    #[test]
+    fn concurrent_checkout_checkin_chaos() {
+        // hammer one arena from many threads with seeded shape choices;
+        // the invariants: no panic, every checkin accepted, in_flight
+        // drains to zero, and the slot count stays bounded by the peak
+        // concurrency (not the job count)
+        let (threads, rounds) = if cfg!(miri) { (3, 8) } else { (8, 200) };
+        let arena = Arc::new(GridArena::new());
+        let shapes = [lv(&[2, 2]), lv(&[3, 2]), lv(&[2, 3]), lv(&[4, 1]), lv(&[3, 3])];
+        let workers: Vec<_> = (0..threads)
+            .map(|t| {
+                let arena = Arc::clone(&arena);
+                let shapes = shapes.to_vec();
+                std::thread::spawn(move || {
+                    let mut rng = SplitMix64::new(0x9e3779b9 ^ t as u64);
+                    for _ in 0..rounds {
+                        let s = &shapes[rng.next_below(shapes.len() as u64) as usize];
+                        let (h, mut g) = arena.checkout(s, 4);
+                        g.fill_with(|c| c[0] - c[1]);
+                        arena.checkin(h, g).expect("valid handle must check in");
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(arena.in_flight(), 0);
+        // each thread holds at most one grid at a time, so the pool can
+        // never have needed more slots than `threads` (plus none orphaned)
+        assert!(
+            arena.fresh_allocations() <= threads as u64,
+            "slot count {} exceeds peak concurrency {threads}",
+            arena.fresh_allocations()
+        );
+        assert_eq!(arena.reuses() + arena.fresh_allocations(), (threads * rounds) as u64);
+    }
+}

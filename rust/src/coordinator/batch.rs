@@ -121,6 +121,19 @@ fn check_batch(scheme: &CombinationScheme, offset: usize, grids: &[FullGrid]) {
     }
 }
 
+/// Flop-weighted LPT (longest-processing-time-first) order: indices of
+/// `weights` sorted heaviest first, ties kept in input order (the sort is
+/// stable, so the order — and therefore the pool's execution schedule — is
+/// a pure function of the weights).  This is the scheduling policy of both
+/// the batched hierarchizer below and `serve`'s cross-job dispatcher: the
+/// greedy heaviest-first rule bounds makespan at 4/3 · OPT, and starting
+/// the big grids first keeps the pool's tail short.
+pub fn lpt_order(weights: &[u64]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by_cached_key(|&i| std::cmp::Reverse(weights[i]));
+    order
+}
+
 fn run_batch(
     scheme: &CombinationScheme,
     offset: usize,
@@ -140,8 +153,8 @@ fn run_batch(
         }
     }
     // LPT within the block (the whole-scheme balance_order for offset 0)
-    let mut order: Vec<usize> = (0..grids.len()).collect();
-    order.sort_by_cached_key(|&i| std::cmp::Reverse(tasks[i].flops));
+    let weights: Vec<u64> = tasks.iter().map(|t| t.flops).collect();
+    let order = lpt_order(&weights);
     let fuse = effective_fuse(opts);
     let t = CycleTimer::start();
     match strategy {

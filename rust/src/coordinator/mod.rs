@@ -23,14 +23,16 @@
 //! `hierarchize::parallel`) — see [`PipelineConfig::shard`] and the
 //! standalone batched entry point [`hierarchize_scheme`].
 
+pub mod arena;
 mod batch;
 pub mod distributed;
 mod metrics;
 mod pipeline;
 mod pool;
 
+pub use arena::{ArenaError, GridArena, GridHandle};
 pub use batch::{
-    dehierarchize_scheme, dehierarchize_slice, hierarchize_scheme, hierarchize_slice,
+    dehierarchize_scheme, dehierarchize_slice, hierarchize_scheme, hierarchize_slice, lpt_order,
     BatchOptions, BatchReport, GridTask,
 };
 pub use metrics::Metrics;

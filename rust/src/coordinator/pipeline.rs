@@ -108,6 +108,11 @@ pub struct Coordinator {
     cfg: PipelineConfig,
     grids: Vec<FullGrid>,
     coeffs: Vec<f64>,
+    /// When built by [`with_arena`](Self::with_arena): the pool the grids
+    /// were checked out of, plus their claim tickets (scheme order).  The
+    /// `Drop` impl returns every grid, so a serve job's coordinator gives
+    /// its buffers back even on an error path.
+    arena: Option<(std::sync::Arc<super::GridArena>, Vec<super::GridHandle>)>,
     pub sparse: SparseGrid,
     pub metrics: Metrics,
 }
@@ -124,7 +129,37 @@ impl Coordinator {
             grids.push(g);
             coeffs.push(c.coeff);
         }
-        Self { cfg, grids, coeffs, sparse: SparseGrid::new(), metrics: Metrics::new() }
+        Self { cfg, grids, coeffs, arena: None, sparse: SparseGrid::new(), metrics: Metrics::new() }
+    }
+
+    /// Like [`new`](Self::new), but every combination grid is checked out
+    /// of `arena` instead of freshly allocated — the serve path, where the
+    /// same scheme shapes recur across jobs and a warmed-up pool makes the
+    /// whole construction allocation-free.  Grids are checked back in when
+    /// the coordinator drops.
+    pub fn with_arena(
+        cfg: PipelineConfig,
+        init: impl Fn(&[f64]) -> f64,
+        arena: std::sync::Arc<super::GridArena>,
+    ) -> Self {
+        let mut grids = Vec::with_capacity(cfg.scheme.len());
+        let mut handles = Vec::with_capacity(cfg.scheme.len());
+        let mut coeffs = Vec::with_capacity(cfg.scheme.len());
+        for c in cfg.scheme.components() {
+            let (h, mut g) = arena.checkout(&c.levels, 1);
+            g.fill_with(&init);
+            grids.push(g);
+            handles.push(h);
+            coeffs.push(c.coeff);
+        }
+        Self {
+            cfg,
+            grids,
+            coeffs,
+            arena: Some((arena, handles)),
+            sparse: SparseGrid::new(),
+            metrics: Metrics::new(),
+        }
     }
 
     pub fn grids(&self) -> &[FullGrid] {
@@ -413,6 +448,21 @@ impl Coordinator {
     /// sampled at `samples` low-discrepancy points.
     pub fn error_vs(&self, f: impl Fn(&[f64]) -> f64, samples: usize) -> f64 {
         self.sparse.max_error(f, self.cfg.scheme.dim(), samples)
+    }
+}
+
+impl Drop for Coordinator {
+    /// An arena-backed coordinator returns every checked-out grid, so the
+    /// pool recycles job buffers even when the job errors out mid-phase.
+    fn drop(&mut self) {
+        if let Some((arena, handles)) = self.arena.take() {
+            for (h, g) in handles.into_iter().zip(std::mem::take(&mut self.grids)) {
+                // a stale handle here would mean the coordinator's claim
+                // was forged elsewhere — unreachable by construction, and
+                // dropping the buffer is the safe failure
+                let _ = arena.checkin(h, g);
+            }
+        }
     }
 }
 

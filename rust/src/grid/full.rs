@@ -1,9 +1,24 @@
 //! The anisotropic full-grid container.
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::bfs::LayoutMap;
 use super::level::LevelVector;
+
+/// Fresh `f64` grid-buffer allocations performed by this process — one per
+/// constructed/cloned [`FullGrid`] whose storage could not be recycled.
+/// The arena contract (`coordinator::arena`) is that a warmed-up service
+/// leaves this flat: every job runs on checked-out buffers, so the serve
+/// integration suite pins a zero delta across a job burst.  Process-global
+/// (not thread-local) on purpose — grids cross threads, and the daemon pin
+/// runs in a process whose only activity is serving.
+static BUFFER_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Total fresh grid-buffer allocations so far (see [`BUFFER_ALLOCS`]).
+pub fn grid_buffer_allocs() -> u64 {
+    BUFFER_ALLOCS.load(Ordering::Relaxed)
+}
 
 thread_local! {
     /// Whole-buffer conversion sweeps performed *by this thread* (one per
@@ -45,7 +60,6 @@ pub enum AxisLayout {
 /// vectorized kernels can use aligned loads — the paper pads one point per
 /// pole; we round up to the AVX width.  Padding slots hold 0.0 and stay 0.0
 /// under every (linear) grid operation.
-#[derive(Clone)]
 pub struct FullGrid {
     levels: LevelVector,
     layouts: Vec<AxisLayout>,
@@ -65,6 +79,12 @@ impl FullGrid {
     /// Zero-initialized grid whose x1 rows are padded to a multiple of
     /// `align` elements (e.g. 4 for 32-byte AVX alignment of f64 rows).
     pub fn with_padding(levels: LevelVector, align: usize) -> Self {
+        Self::with_buffer(levels, align, Vec::new())
+    }
+
+    /// Storage geometry of a `(levels, align)` grid:
+    /// `(row_len, strides, total storage length)`.
+    fn geometry(levels: &LevelVector, align: usize) -> (usize, Vec<usize>, usize) {
         assert!(align >= 1);
         let n1 = levels.axis_points(0);
         let row_len = n1.div_ceil(align) * align;
@@ -81,13 +101,42 @@ impl FullGrid {
         } else {
             strides[d - 1] * levels.axis_points(d - 1)
         };
+        (row_len, strides, total)
+    }
+
+    /// Storage length (in `f64`s, padding included) a `(levels, align)`
+    /// grid occupies — what [`with_buffer`](Self::with_buffer) needs the
+    /// recycled buffer's capacity to reach to avoid a fresh allocation.
+    pub fn buffer_len(levels: &LevelVector, align: usize) -> usize {
+        Self::geometry(levels, align).2
+    }
+
+    /// Zero-initialized grid built on a **recycled** buffer: `buf` is
+    /// cleared, resized, and becomes the storage.  If its capacity already
+    /// covers [`buffer_len`](Self::buffer_len) no allocation happens and
+    /// the process-global counter ([`grid_buffer_allocs`]) stays flat —
+    /// the arena pool's reuse contract.  Undersized buffers reallocate
+    /// (and count), so the counter is an honest witness either way.
+    pub fn with_buffer(levels: LevelVector, align: usize, mut buf: Vec<f64>) -> Self {
+        let (row_len, strides, total) = Self::geometry(&levels, align);
+        if buf.capacity() < total {
+            BUFFER_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        buf.clear();
+        buf.resize(total, 0.0);
         Self {
-            layouts: vec![AxisLayout::Position; d],
+            layouts: vec![AxisLayout::Position; levels.dim()],
             row_len,
             strides,
-            data: vec![0.0; total],
+            data: buf,
             levels,
         }
+    }
+
+    /// Dissolve into the raw storage buffer for recycling (values are NOT
+    /// cleared here; [`with_buffer`](Self::with_buffer) zeroes on reuse).
+    pub fn into_buffer(self) -> Vec<f64> {
+        self.data
     }
 
     #[inline]
@@ -393,6 +442,22 @@ impl FullGrid {
     }
 }
 
+impl Clone for FullGrid {
+    /// Cloning allocates a fresh storage buffer, so it ticks
+    /// [`grid_buffer_allocs`] — the derive would hide exactly the
+    /// allocations the serve counter pin exists to catch.
+    fn clone(&self) -> Self {
+        BUFFER_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        Self {
+            levels: self.levels.clone(),
+            layouts: self.layouts.clone(),
+            row_len: self.row_len,
+            strides: self.strides.clone(),
+            data: self.data.clone(),
+        }
+    }
+}
+
 impl std::fmt::Debug for FullGrid {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("FullGrid")
@@ -529,6 +594,48 @@ mod tests {
         h.convert_all(AxisLayout::Bfs);
         assert_eq!(super::convert_sweeps_on_thread(), before + 3);
         assert!(h.layouts().iter().all(|&l| l == AxisLayout::Bfs));
+    }
+
+    /// Reuse is pinned by **pointer identity** (a resize within capacity
+    /// keeps the allocation), not the global counter — tier-1 tests run in
+    /// parallel threads of one process, so other tests tick
+    /// `grid_buffer_allocs` concurrently.  The flat-counter pin lives in
+    /// the serve integration suite, whose daemon process does nothing else.
+    #[test]
+    fn recycled_buffer_is_zeroed_and_allocation_free() {
+        let lv = LevelVector::new(&[3, 2]);
+        let mut g = FullGrid::with_padding(lv.clone(), 4);
+        g.fill_with(|c| c[0] + c[1]); // dirty the storage
+        let buf = g.into_buffer();
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        // same shape, recycled buffer: same allocation, storage zeroed
+        let g2 = FullGrid::with_buffer(lv.clone(), 4, buf);
+        assert_eq!(g2.as_slice().as_ptr(), ptr, "recycling must not reallocate");
+        assert!(g2.as_slice().iter().all(|&v| v == 0.0), "reuse must zero");
+        assert_eq!(g2.as_slice().len(), FullGrid::buffer_len(&lv, 4));
+        // a *smaller* shape also fits in place
+        let small = LevelVector::new(&[2, 2]);
+        let g3 = FullGrid::with_buffer(small, 1, g2.into_buffer());
+        assert_eq!(g3.as_slice().as_ptr(), ptr);
+        // an undersized buffer must grow (and is counted; monotonicity is
+        // the strongest counter claim safe under parallel tests)
+        let big = LevelVector::new(&[4, 4]);
+        assert!(FullGrid::buffer_len(&big, 1) > cap);
+        let before = grid_buffer_allocs();
+        let g4 = FullGrid::with_buffer(big, 1, g3.into_buffer());
+        assert_ne!(g4.as_slice().as_ptr(), ptr, "growth is a real allocation");
+        assert!(grid_buffer_allocs() > before, "growth must tick the counter");
+    }
+
+    #[test]
+    fn clone_ticks_the_allocation_counter() {
+        let g = FullGrid::new(LevelVector::new(&[2, 2]));
+        let before = grid_buffer_allocs();
+        let c = g.clone();
+        assert!(grid_buffer_allocs() > before, "clone allocates and must count");
+        assert_eq!(c.as_slice(), g.as_slice());
+        assert_eq!(c.levels(), g.levels());
     }
 
     #[test]

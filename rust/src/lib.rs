@@ -57,6 +57,17 @@
 //! stalls any rank to prove it, in-process and across real worker
 //! processes (CI's `chaos-smoke` job).
 //!
+//! The same transport and wire layers back a **multi-tenant grid
+//! service** ([`serve`]): `sgct serve` runs a long-lived daemon that
+//! accepts concurrent hierarchize / combine / solve jobs over Unix
+//! sockets, admits them against typed flop and frame budgets
+//! (`Busy`/`TooLarge` rejections), schedules them heaviest-first on a
+//! worker pool (the online form of [`coordinator::lpt_order`]), and
+//! executes them on a slab arena of recycled grid buffers
+//! ([`coordinator::GridArena`]: generation-checked handles, zero
+//! steady-state grid allocations) — every served result bitwise equal to
+//! the one-shot CLI path.
+//!
 //! Both levels stand on one unsafe core, `grid::cells`, which keeps the
 //! shared-buffer access inside the Rust aliasing model: a [`grid::GridCells`]
 //! handle owns the exclusive borrow of a grid buffer and hands out *checked*
@@ -80,6 +91,7 @@ pub mod grid;
 pub mod hierarchize;
 pub mod perf;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod sgpp;
 pub mod sparse;

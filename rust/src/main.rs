@@ -6,6 +6,8 @@
 //! sgct combine --dim 2 --level 5             plain CT interpolation + error
 //! sgct solve --dim 2 --level 5 --iters 4 --steps 8 [--pjrt] [--workers N]
 //! sgct bench --levels 5,4 [--all]            one-off variant timing
+//! sgct serve --socket PATH                   multi-tenant grid daemon
+//! sgct serve-client --socket PATH --job ...  one request against it
 //! ```
 
 use anyhow::{bail, Context as _, Result};
@@ -39,6 +41,8 @@ fn main() {
         "bench" => run(bench_cmd(&args)),
         "distributed" => run(distributed(&args)),
         "reduce" => run(reduce_cmd(&args)),
+        "serve" => run(serve_cmd(&args)),
+        "serve-client" => run(serve_client_cmd(&args)),
         // hidden: one rank of a multi-process `sgct reduce --transport unix`
         "comm-worker" => run(comm_worker(&args)),
         "" | "help" | "--help" => {
@@ -73,7 +77,18 @@ USAGE:
   sgct reduce --dim D --level N --ranks R [--transport inprocess|unix] [--overlap]
               [--seed S] [--check] [--threads N] [--fuse-depth K] [--tile-kb KB]
               [--timeout-ms MS] [--chaos SEED:KIND:RANK]
+  sgct serve --socket PATH [--workers W] [--queue Q] [--max-flops F] [--job-threads N]
+  sgct serve-client --socket PATH [--job hierarchize|combine|solve|stats|shutdown]
+                    [--levels L1,L2,...] [--tau T] [--steps T] [--seed S] [--id N]
+                    [--check]
 
+  --socket PATH            serve: Unix-socket endpoint (daemon claims
+                           PATH.lock; a live owner refuses a second daemon)
+  --workers W              serve: concurrent job executions
+  --queue Q                serve: admitted-job cap before Busy rejections
+  --max-flops F            serve: per-job flop budget before TooLarge
+  --job hierarchize|combine|solve|stats|shutdown
+                           serve-client: what to ask the daemon
   --transport ...          reduce: inprocess = tree ranks as worker threads,
                            unix = real `comm-worker` processes over
                            Unix-domain sockets (same reduction code)
@@ -771,6 +786,102 @@ fn verify_projection(
                     "grid {} subspace {l}: {a} vs {b}",
                     lo + k
                 );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `sgct serve` — the long-running multi-tenant daemon: bind the socket,
+/// serve concurrent jobs from the arena pool until a shutdown frame
+/// arrives, then drain and report the final counters.
+fn serve_cmd(args: &Args) -> Result<()> {
+    use sgct::serve::{ServeConfig, ServerHandle};
+    let socket = std::path::PathBuf::from(args.opt_or("socket", "/tmp/sgct-serve.sock"));
+    let mut cfg = ServeConfig::new(socket);
+    cfg.workers = args.threads("workers", cfg.workers)?;
+    cfg.queue = args.get("queue", cfg.queue)?;
+    cfg.max_flops = args.get("max-flops", cfg.max_flops)?;
+    cfg.job_threads = args.threads("job-threads", cfg.job_threads)?;
+    println!(
+        "sgct serve: {} — {} workers, queue {}, max {} flops/job",
+        cfg.socket.display(),
+        cfg.workers,
+        cfg.queue,
+        cfg.max_flops
+    );
+    let handle = ServerHandle::start(cfg)?;
+    let stats = handle.join();
+    println!(
+        "served {} jobs (busy {}, too-large {}); arena: {} fresh / {} reused buffers",
+        stats.jobs_done,
+        stats.rejected_busy,
+        stats.rejected_too_large,
+        stats.arena_fresh,
+        stats.arena_reuses
+    );
+    Ok(())
+}
+
+/// `sgct serve-client` — one request against a running daemon: submit a
+/// job spec (or a stats/shutdown control frame) and print the typed
+/// reply; `--check` re-derives the result locally and compares bitwise.
+fn serve_client_cmd(args: &Args) -> Result<()> {
+    use sgct::comm::{JobKind, JobSpec};
+    use sgct::serve::ServeClient;
+    let socket = std::path::PathBuf::from(args.opt_or("socket", "/tmp/sgct-serve.sock"));
+    let mut client =
+        ServeClient::connect(&socket, std::time::Duration::from_secs(30)).with_context(|| {
+            format!("connecting to daemon at {} (is `sgct serve` running?)", socket.display())
+        })?;
+    let job = args.opt_or("job", "combine");
+    match job.as_str() {
+        "stats" => {
+            let s = client.stats()?;
+            println!(
+                "jobs done {} | rejected busy {} too-large {} | in flight {}",
+                s.jobs_done, s.rejected_busy, s.rejected_too_large, s.in_flight
+            );
+            println!(
+                "arena: {} fresh / {} reused buffers; process grid allocations {}",
+                s.arena_fresh, s.arena_reuses, s.grid_buffer_allocs
+            );
+        }
+        "shutdown" => {
+            client.shutdown()?;
+            println!("daemon at {} is draining", socket.display());
+        }
+        kind => {
+            let kind = match kind {
+                "hierarchize" => JobKind::Hierarchize,
+                "combine" => JobKind::Combine,
+                "solve" => JobKind::Solve,
+                other => bail!("unknown job {other:?} (hierarchize|combine|solve|stats|shutdown)"),
+            };
+            let spec = JobSpec {
+                id: args.get("id", 1u32)?,
+                kind,
+                levels: LevelVector::parse(&args.opt_or("levels", "4,4"))?,
+                tau: args.get("tau", 1u8)?,
+                steps: args.get("steps", 2u16)?,
+                seed: args.get("seed", 42u64)?,
+            };
+            let t0 = std::time::Instant::now();
+            let result = client.run(&spec)?;
+            println!(
+                "job {}: {} subspaces, {} points in {}",
+                spec.id,
+                result.subspace_count(),
+                result.point_count(),
+                human_time(t0.elapsed().as_secs_f64())
+            );
+            if args.flag("check") {
+                let want = sgct::serve::job::reference(&spec)?;
+                anyhow::ensure!(
+                    result.bitwise_eq(&want),
+                    "served result differs from the local one-shot reference"
+                );
+                println!("check: bitwise identical to the local one-shot path — OK");
             }
         }
     }

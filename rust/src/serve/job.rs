@@ -1,0 +1,207 @@
+//! Job semantics: what a [`JobSpec`] computes, what it costs, and the
+//! plain-allocation reference the bitwise contract compares against.
+//!
+//! Jobs carry seeds, not grid data (the `comm-worker` convention): the
+//! daemon re-derives every component grid from `spec.seed` exactly like
+//! [`crate::comm::seeded_block`], so [`execute`] on the daemon's arena and
+//! [`reference`] on plain allocations are the *same* computation on the
+//! same inputs — the serve integration suite asserts their results are
+//! bitwise equal, which makes buffer recycling observably lossless.
+
+use anyhow::{bail, ensure, Result};
+use std::sync::Arc;
+
+use crate::combi::{CombinationScheme, Component};
+use crate::comm::wire::{JobKind, JobSpec, HEADER_LEN};
+use crate::comm::{reduce_local, ReduceOptions};
+use crate::coordinator::{Coordinator, GridArena, PipelineConfig};
+use crate::grid::LevelVector;
+use crate::solver::{stable_dt, HeatSolver};
+use crate::sparse::SparseGrid;
+use crate::util::rng::SplitMix64;
+
+/// The combination scheme a compute job runs over.  Control jobs
+/// (`Stats`/`Shutdown`) have none.
+pub fn scheme_of(spec: &JobSpec) -> Result<CombinationScheme> {
+    let d = spec.levels.dim();
+    let n = (0..d).map(|i| spec.levels.level(i)).max().expect("dim >= 1");
+    match spec.kind {
+        JobKind::Hierarchize => Ok(CombinationScheme::from_components(
+            d,
+            n,
+            1,
+            vec![Component { levels: spec.levels.clone(), coeff: 1.0 }],
+        )),
+        JobKind::Combine | JobKind::Solve => {
+            ensure!(
+                spec.tau >= 1 && spec.tau <= n,
+                "truncation tau={} outside 1..={n}",
+                spec.tau
+            );
+            Ok(CombinationScheme::truncated(d, n, spec.tau))
+        }
+        JobKind::Stats | JobKind::Shutdown => bail!("control job has no scheme"),
+    }
+}
+
+/// The job's admission weight: the scheme-wide corrected-Eq.-1 flop
+/// estimate — the same measure `coordinator::batch`'s LPT planner
+/// balances on, so admission control and scheduling speak one unit.
+pub fn weight(spec: &JobSpec) -> Result<u64> {
+    Ok(scheme_of(spec)?.total_flops())
+}
+
+/// Exact size of the job-ok reply frame this scheme produces: header +
+/// id + subspace count + one block (`dim` level bytes + 8 bytes per
+/// surplus) per union subspace.  Admission rejects a job whose reply
+/// could not fit `MAX_FRAME` *before* computing it.
+pub fn predicted_reply_bytes(scheme: &CombinationScheme) -> u64 {
+    let d = scheme.dim() as u64;
+    let mut bytes = (HEADER_LEN + 4 + 4) as u64;
+    for s in scheme.sparse_subspaces() {
+        let pts: u64 = (0..s.dim()).map(|i| 1u64 << (s.level(i) - 1)).product();
+        bytes += d + 8 * pts;
+    }
+    bytes
+}
+
+/// The deterministic seeded nodal fill of component `i` — byte-for-byte
+/// the [`crate::comm::seeded_block`] convention.
+fn seeded_fill(g: &mut crate::grid::FullGrid, seed: u64, i: usize) {
+    let mut rng = SplitMix64::new(seed.wrapping_add(i as u64));
+    g.fill_with(|_| rng.next_f64() - 0.5);
+}
+
+/// Pipeline configuration of a `Solve` job.  One worker on purpose: the
+/// thread-pool gather sums in arrival order, so a single sequential
+/// worker is what makes the solve result a pure function of the spec —
+/// concurrency comes from many jobs in flight, not from inside one.
+fn solve_cfg(spec: &JobSpec, scheme: CombinationScheme) -> PipelineConfig {
+    let mut cfg = PipelineConfig::new(scheme);
+    cfg.steps_per_iter = (spec.steps as usize).max(1);
+    cfg.workers = 1;
+    cfg
+}
+
+/// The solve phases' initial condition (the CLI `solve` default).
+fn sin_product(x: &[f64]) -> f64 {
+    x.iter().map(|&v| (std::f64::consts::PI * v).sin()).product()
+}
+
+fn solve_solver(spec: &JobSpec) -> HeatSolver {
+    let d = spec.levels.dim();
+    let n = (0..d).map(|i| spec.levels.level(i)).max().expect("dim >= 1");
+    let finest = LevelVector::isotropic(d, n);
+    HeatSolver { alpha: 1.0, dt: stable_dt(&finest, 1.0, 0.5) }
+}
+
+/// Run one compute job on `arena`-recycled grids.  After warmup every
+/// checkout reuses a parked buffer — zero fresh grid allocations, pinned
+/// by [`crate::grid::grid_buffer_allocs`] in the serve integration suite.
+pub fn execute(spec: &JobSpec, arena: &Arc<GridArena>, threads: usize) -> Result<SparseGrid> {
+    match spec.kind {
+        JobKind::Hierarchize | JobKind::Combine => {
+            let scheme = scheme_of(spec)?;
+            let mut handles = Vec::with_capacity(scheme.len());
+            let mut grids = Vec::with_capacity(scheme.len());
+            for (i, c) in scheme.components().iter().enumerate() {
+                let (h, mut g) = arena.checkout(&c.levels, 1);
+                seeded_fill(&mut g, spec.seed, i);
+                handles.push(h);
+                grids.push(g);
+            }
+            let opts =
+                ReduceOptions { threads: threads.max(1), scatter_back: false, ..Default::default() };
+            let sg = reduce_local(&scheme, &mut grids, &opts);
+            for (h, g) in handles.into_iter().zip(grids) {
+                // a failed checkin would mean a forged handle — impossible
+                // here; dropping the buffer is the safe failure
+                let _ = arena.checkin(h, g);
+            }
+            Ok(sg)
+        }
+        JobKind::Solve => {
+            let scheme = scheme_of(spec)?;
+            let solver = solve_solver(spec);
+            let mut c =
+                Coordinator::with_arena(solve_cfg(spec, scheme), sin_product, Arc::clone(arena));
+            c.iteration(&solver, 0)?;
+            // taking the sparse grid leaves the coordinator to check its
+            // component grids back in on drop
+            Ok(std::mem::take(&mut c.sparse))
+        }
+        JobKind::Stats | JobKind::Shutdown => bail!("control job reached the worker pool"),
+    }
+}
+
+/// The same computation as [`execute`] on freshly allocated grids — the
+/// one-shot CLI path.  The integration suite asserts
+/// `reference(spec).bitwise_eq(&serve_result)` for every job of a burst.
+pub fn reference(spec: &JobSpec) -> Result<SparseGrid> {
+    match spec.kind {
+        JobKind::Hierarchize | JobKind::Combine => {
+            let scheme = scheme_of(spec)?;
+            let mut grids = crate::comm::seeded_block(&scheme, 0, scheme.len(), spec.seed);
+            let opts = ReduceOptions { threads: 1, scatter_back: false, ..Default::default() };
+            Ok(reduce_local(&scheme, &mut grids, &opts))
+        }
+        JobKind::Solve => {
+            let scheme = scheme_of(spec)?;
+            let solver = solve_solver(spec);
+            let mut c = Coordinator::new(solve_cfg(spec, scheme), sin_product);
+            c.iteration(&solver, 0)?;
+            Ok(std::mem::take(&mut c.sparse))
+        }
+        JobKind::Stats | JobKind::Shutdown => bail!("control job has no result"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::transport::MAX_FRAME;
+
+    fn spec(kind: JobKind, levels: &[u8], tau: u8, seed: u64) -> JobSpec {
+        JobSpec { id: 1, kind, levels: LevelVector::new(levels), tau, steps: 2, seed }
+    }
+
+    #[test]
+    fn arena_execution_is_bitwise_equal_to_the_reference() {
+        let arena = Arc::new(GridArena::new());
+        let jobs = [
+            spec(JobKind::Hierarchize, &[4, 3], 1, 11),
+            spec(JobKind::Combine, &[4, 4], 1, 22),
+            spec(JobKind::Combine, &[3, 3, 3], 2, 33),
+            spec(JobKind::Solve, &[3, 3], 1, 44),
+        ];
+        for s in &jobs {
+            let got = execute(s, &arena, 1).unwrap();
+            let want = reference(s).unwrap();
+            assert!(got.bitwise_eq(&want), "{:?} diverged from the one-shot path", s.kind);
+        }
+        // run the burst again: every grid checkout must now be a reuse
+        let fresh = arena.fresh_allocations();
+        for s in &jobs {
+            let got = execute(s, &arena, 1).unwrap();
+            assert!(got.bitwise_eq(&reference(s).unwrap()));
+        }
+        assert_eq!(arena.fresh_allocations(), fresh, "warm burst must not grow the arena");
+        assert_eq!(arena.in_flight(), 0, "every job must return its grids");
+    }
+
+    #[test]
+    fn weight_and_reply_prediction() {
+        let s = spec(JobKind::Combine, &[5, 5], 1, 0);
+        let scheme = scheme_of(&s).unwrap();
+        assert_eq!(weight(&s).unwrap(), scheme.total_flops());
+        // the prediction is exact: encode the real result and compare
+        let result = reference(&s).unwrap();
+        let encoded = crate::comm::wire::encode_job_ok(1, &result, scheme.dim());
+        assert_eq!(predicted_reply_bytes(&scheme), encoded.len() as u64);
+        assert!(predicted_reply_bytes(&scheme) < MAX_FRAME as u64);
+        // control jobs have no scheme
+        assert!(scheme_of(&spec(JobKind::Stats, &[1], 1, 0)).is_err());
+        // tau beyond the level is rejected, not asserted
+        assert!(scheme_of(&spec(JobKind::Combine, &[2, 2], 3, 0)).is_err());
+    }
+}

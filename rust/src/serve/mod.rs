@@ -1,0 +1,108 @@
+//! `sgct serve`: a multi-tenant grid service on an arena pool.
+//!
+//! The one-shot CLI pays the full setup bill — allocate every component
+//! grid, hierarchize, reduce, free — per invocation.  A combination
+//! -technique *service* amortizes it: one long-running daemon owns a
+//! [`GridArena`](crate::coordinator::GridArena) of recycled grid buffers
+//! and accepts hierarchize / combine / solve jobs over the same
+//! [`comm::transport`](crate::comm::transport) Unix sockets the
+//! distributed reduction uses, so the transport and wire layers are
+//! exercised by a second, adversarial workload (many small frames, many
+//! concurrent peers, clients that die mid-job) instead of only the
+//! well-behaved reduction tree.
+//!
+//! Contracts, in order of importance:
+//!
+//! 1. **Bitwise service equality** — a job served from recycled arena
+//!    buffers returns the same bytes as [`job::reference`], the plain
+//!    -allocation one-shot path.  Buffer recycling is invisible in the
+//!    numbers or it is a bug.
+//! 2. **Zero steady-state grid allocations** — after a warmup burst the
+//!    daemon's [`grid_buffer_allocs`](crate::grid::grid_buffer_allocs)
+//!    counter pins flat; the integration suite reads it over the wire
+//!    (`Stats` frame) from the *daemon* process, so the pin crosses the
+//!    process boundary.
+//! 3. **Typed admission** — a job is rejected *before* any grid work
+//!    with [`RejectReason::Busy`](crate::comm::wire::RejectReason) (queue
+//!    full) or `TooLarge` (flop budget, or a reply that could not fit
+//!    `MAX_FRAME`), with the tripping figure in the `detail` field.
+//! 4. **Failure containment** — a client killed mid-job costs the daemon
+//!    nothing but the discarded reply; see [`server`]'s module docs.
+//!
+//! Scheduling is the online form of the batch planner's LPT rule: the
+//! admitted-job queue is a max-heap on the corrected-Eq.-1 flop weight
+//! ([`crate::coordinator::lpt_order`] makes the same greedy decision
+//! offline), so a free worker always takes the heaviest waiting job.
+
+pub mod job;
+mod server;
+
+pub use server::{ServeConfig, ServerHandle};
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::comm::transport::{Transport, UnixSocket};
+use crate::comm::wire::{self, JobSpec, Message, ServeStats};
+use crate::sparse::SparseGrid;
+
+/// A blocking client for one daemon connection: send a spec, wait for
+/// the typed reply.  One in-flight job per connection — client-side
+/// concurrency is "open more connections", which is exactly the load
+/// shape the integration suite drives.
+pub struct ServeClient {
+    sock: UnixSocket,
+    timeout: Duration,
+}
+
+impl ServeClient {
+    /// Connect to a daemon's endpoint, retrying until `timeout` (covers
+    /// the daemon still binding its socket).
+    pub fn connect(path: &Path, timeout: Duration) -> Result<ServeClient> {
+        let sock = UnixSocket::connect_retry(path, timeout)?;
+        Ok(ServeClient { sock, timeout })
+    }
+
+    /// Submit one job and decode whatever comes back.
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<Message> {
+        self.sock.send(&wire::encode_job(spec))?;
+        let frame = self.sock.recv_timeout(self.timeout)?;
+        wire::decode(&frame)
+    }
+
+    /// Submit a compute job and insist on success.
+    pub fn run(&mut self, spec: &JobSpec) -> Result<SparseGrid> {
+        match self.submit(spec)? {
+            Message::JobOk { id, result } => {
+                if id != spec.id {
+                    bail!("daemon answered job {id}, expected {}", spec.id);
+                }
+                Ok(result)
+            }
+            Message::JobErr { reason, detail, .. } => {
+                bail!("job {} rejected: {reason:?} (detail {detail})", spec.id)
+            }
+            other => bail!("unexpected reply to job {}: {other:?}", spec.id),
+        }
+    }
+
+    /// Fetch the daemon's counters.
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        let spec = JobSpec::control(wire::JobKind::Stats);
+        match self.submit(&spec)? {
+            Message::Stats { stats, .. } => Ok(stats),
+            other => bail!("unexpected reply to stats: {other:?}"),
+        }
+    }
+
+    /// Ask the daemon to stop and drain.
+    pub fn shutdown(&mut self) -> Result<()> {
+        let spec = JobSpec::control(wire::JobKind::Shutdown);
+        match self.submit(&spec)? {
+            Message::JobOk { .. } => Ok(()),
+            other => bail!("unexpected reply to shutdown: {other:?}"),
+        }
+    }
+}

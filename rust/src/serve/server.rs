@@ -1,0 +1,394 @@
+//! The daemon: accept loop, per-connection sessions, and the LPT-greedy
+//! worker pool, all sharing one [`GridArena`].
+//!
+//! ```text
+//!   accept thread ──spawns──▶ session threads (one per connection)
+//!        │                        │  admission: weight / reply-size gate,
+//!        │                        │  bounded queue (Busy / TooLarge)
+//!        ▼                        ▼
+//!   BoundListener          Mutex<BinaryHeap<Pending>> + Condvar
+//!                                 ▲
+//!                                 │  pop-heaviest == LPT greedy
+//!                          worker threads ──▶ job::execute on the arena
+//! ```
+//!
+//! Popping the heaviest admitted job is the online form of
+//! [`crate::coordinator::lpt_order`]: with the whole batch in hand the
+//! planner sorts once; with jobs arriving live, a max-heap keyed on the
+//! same corrected-Eq.-1 flop weight makes the identical greedy decision
+//! each time a worker frees up (ties broken oldest-first so light jobs
+//! cannot starve behind a stream of equals).
+//!
+//! Failure containment, per layer: a client that dies mid-job only tears
+//! down its session thread (the worker's reply lands in a dropped channel
+//! and is discarded); a job that panics is caught at the worker and
+//! answered with `RejectReason::Internal`; the daemon itself only stops
+//! on an explicit shutdown frame or [`ServerHandle::shutdown`].
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::comm::transport::{default_timeout, BoundListener, Transport, UnixSocket, MAX_FRAME};
+use crate::comm::wire::{self, JobKind, JobSpec, Message, RejectReason, ServeStats};
+use crate::coordinator::GridArena;
+use crate::grid::grid_buffer_allocs;
+use crate::sparse::SparseGrid;
+
+use super::job;
+
+/// How often blocked threads re-check the shutdown flag.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Daemon knobs.  The defaults serve the integration suite; the CLI maps
+/// `--workers/--queue/--max-flops` straight onto them.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Endpoint path; [`UnixSocket::bind`] claims `<socket>.lock` beside it.
+    pub socket: PathBuf,
+    /// Compute worker threads (jobs executing concurrently).
+    pub workers: usize,
+    /// Admitted-but-unstarted job cap; beyond it clients get `Busy`.
+    pub queue: usize,
+    /// Per-job flop ceiling; beyond it clients get `TooLarge`.
+    pub max_flops: u64,
+    /// Threads *inside* one job's reduce (hierarchization is bitwise
+    /// thread-count-invariant, so this is a pure knob).
+    pub job_threads: usize,
+    /// How long an idle connection may sit between requests.
+    pub idle_timeout: Duration,
+}
+
+impl ServeConfig {
+    pub fn new(socket: PathBuf) -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(4);
+        ServeConfig {
+            socket,
+            workers,
+            queue: 64,
+            max_flops: 50_000_000_000,
+            job_threads: 1,
+            idle_timeout: default_timeout(),
+        }
+    }
+}
+
+/// An admitted job waiting for a worker, ordered heaviest-first (the
+/// online LPT decision), oldest-first among equals.
+struct Pending {
+    weight: u64,
+    seq: u64,
+    spec: JobSpec,
+    reply: SyncSender<Vec<u8>>,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == CmpOrdering::Equal
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // max-heap: larger weight wins; on ties the *smaller* seq must
+        // surface first, so compare seqs reversed
+        self.weight.cmp(&other.weight).then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct Queue {
+    heap: BinaryHeap<Pending>,
+    seq: u64,
+}
+
+struct Shared {
+    cfg: ServeConfig,
+    arena: Arc<GridArena>,
+    queue: Mutex<Queue>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    jobs_done: AtomicU64,
+    rejected_busy: AtomicU64,
+    rejected_too_large: AtomicU64,
+    in_flight: AtomicU64,
+}
+
+impl Shared {
+    fn stats(&self) -> ServeStats {
+        ServeStats {
+            jobs_done: self.jobs_done.load(Ordering::SeqCst),
+            rejected_busy: self.rejected_busy.load(Ordering::SeqCst),
+            rejected_too_large: self.rejected_too_large.load(Ordering::SeqCst),
+            arena_fresh: self.arena.fresh_allocations(),
+            arena_reuses: self.arena.reuses(),
+            grid_buffer_allocs: grid_buffer_allocs(),
+            in_flight: self.in_flight.load(Ordering::SeqCst),
+        }
+    }
+
+    fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.available.notify_all();
+    }
+}
+
+/// A running daemon.  Dropping the handle does *not* stop it — call
+/// [`ServerHandle::shutdown`] (or send a shutdown frame) then
+/// [`ServerHandle::join`].
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Bind the endpoint and start the accept loop and worker pool.
+    pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
+        let listener = UnixSocket::bind(&cfg.socket)
+            .with_context(|| format!("sgct serve: binding {}", cfg.socket.display()))?;
+        let workers_n = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            cfg,
+            arena: Arc::new(GridArena::new()),
+            queue: Mutex::new(Queue { heap: BinaryHeap::new(), seq: 0 }),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            jobs_done: AtomicU64::new(0),
+            rejected_busy: AtomicU64::new(0),
+            rejected_too_large: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+        });
+        let workers = (0..workers_n)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sgct-serve-worker-{i}"))
+                    .spawn(move || worker(s))
+                    .expect("spawn worker")
+            })
+            .collect();
+        let accept = {
+            let s = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("sgct-serve-accept".into())
+                .spawn(move || accept_loop(s, listener))
+                .expect("spawn accept loop")
+        };
+        Ok(ServerHandle { shared, accept: Some(accept), workers })
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.shared.stats()
+    }
+
+    pub fn arena(&self) -> &Arc<GridArena> {
+        &self.shared.arena
+    }
+
+    /// Ask the daemon to stop: the accept loop exits on its next poll,
+    /// workers drain the queue then exit.
+    pub fn shutdown(&self) {
+        self.shared.stop();
+    }
+
+    /// Wait for the accept loop and every worker to finish (idle session
+    /// threads are detached and die with the process); returns the final
+    /// counters.
+    pub fn join(mut self) -> ServeStats {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        self.shared.stats()
+    }
+}
+
+/// Accept connections until shutdown; the short poll keeps the loop
+/// responsive to the flag.  Dropping `listener` on exit removes the
+/// socket and its lockfile.
+fn accept_loop(shared: Arc<Shared>, listener: BoundListener) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match UnixSocket::accept_timeout(&listener, POLL) {
+            Ok(sock) => {
+                let s = Arc::clone(&shared);
+                let _ = std::thread::Builder::new()
+                    .name("sgct-serve-session".into())
+                    .spawn(move || session(s, sock));
+            }
+            // PeerTimeout = no client this poll; anything else (listener
+            // torn down underneath us) also just re-checks the flag
+            Err(_) => continue,
+        }
+    }
+}
+
+/// One connection: decode requests, answer control frames inline, gate
+/// and enqueue compute jobs, relay the worker's reply.  Any transport
+/// error (client gone, garbage frame) ends only this session.
+fn session(shared: Arc<Shared>, mut sock: UnixSocket) {
+    loop {
+        let frame = match sock.recv_timeout(shared.cfg.idle_timeout) {
+            Ok(f) => f,
+            Err(_) => return,
+        };
+        let spec = match wire::decode(&frame) {
+            Ok(Message::JobRequest(spec)) => spec,
+            // any other frame kind is a protocol violation from a client
+            Ok(_) | Err(_) => return,
+        };
+        let (id, dim) = (spec.id, spec.levels.dim());
+        match spec.kind {
+            JobKind::Stats => {
+                if sock.send(&wire::encode_stats(id, &shared.stats(), dim)).is_err() {
+                    return;
+                }
+            }
+            JobKind::Shutdown => {
+                shared.stop();
+                let _ = sock.send(&wire::encode_job_ok(id, &SparseGrid::new(), dim));
+                return;
+            }
+            JobKind::Hierarchize | JobKind::Combine | JobKind::Solve => {
+                // admission: malformed specs and oversized jobs are
+                // rejected typed, *before* any grid is touched
+                let (weight, reply_bytes) = match job::scheme_of(&spec) {
+                    Ok(scheme) => (scheme.total_flops(), job::predicted_reply_bytes(&scheme)),
+                    Err(_) => {
+                        if sock
+                            .send(&wire::encode_job_err(id, RejectReason::Unsupported, 0, dim))
+                            .is_err()
+                        {
+                            return;
+                        }
+                        continue;
+                    }
+                };
+                if weight > shared.cfg.max_flops || reply_bytes > MAX_FRAME as u64 {
+                    shared.rejected_too_large.fetch_add(1, Ordering::SeqCst);
+                    if sock
+                        .send(&wire::encode_job_err(id, RejectReason::TooLarge, weight, dim))
+                        .is_err()
+                    {
+                        return;
+                    }
+                    continue;
+                }
+                let (tx, rx) = sync_channel::<Vec<u8>>(1);
+                let admitted = {
+                    let mut q = shared.queue.lock().expect("serve queue poisoned");
+                    if shared.shutdown.load(Ordering::SeqCst)
+                        || q.heap.len() >= shared.cfg.queue.max(1)
+                    {
+                        false
+                    } else {
+                        q.seq += 1;
+                        let seq = q.seq;
+                        q.heap.push(Pending { weight, seq, spec, reply: tx });
+                        shared.in_flight.fetch_add(1, Ordering::SeqCst);
+                        shared.available.notify_one();
+                        true
+                    }
+                };
+                if !admitted {
+                    shared.rejected_busy.fetch_add(1, Ordering::SeqCst);
+                    let depth = shared.cfg.queue as u64;
+                    if sock
+                        .send(&wire::encode_job_err(id, RejectReason::Busy, depth, dim))
+                        .is_err()
+                    {
+                        return;
+                    }
+                    continue;
+                }
+                // the worker always answers or drops tx; either unblocks us
+                match rx.recv() {
+                    Ok(reply) => {
+                        if sock.send(&reply).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+            }
+        }
+    }
+}
+
+/// Pop the heaviest admitted job, run it, reply.  Workers drain the
+/// queue even after shutdown so every admitted client gets an answer.
+fn worker(shared: Arc<Shared>) {
+    loop {
+        let pending = {
+            let mut q = shared.queue.lock().expect("serve queue poisoned");
+            loop {
+                if let Some(p) = q.heap.pop() {
+                    break p;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _) =
+                    shared.available.wait_timeout(q, POLL).expect("serve queue poisoned");
+                q = guard;
+            }
+        };
+        let (id, dim) = (pending.spec.id, pending.spec.levels.dim());
+        let arena = Arc::clone(&shared.arena);
+        let threads = shared.cfg.job_threads;
+        let spec = pending.spec;
+        // a panicking job must cost one reply, not one worker
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            job::execute(&spec, &arena, threads)
+        }));
+        let reply = match outcome {
+            Ok(Ok(sg)) => {
+                shared.jobs_done.fetch_add(1, Ordering::SeqCst);
+                wire::encode_job_ok(id, &sg, dim)
+            }
+            Ok(Err(_)) | Err(_) => wire::encode_job_err(id, RejectReason::Internal, 0, dim),
+        };
+        shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+        // a dead client's session dropped the receiver; discarding the
+        // reply is the whole containment story
+        let _ = pending.reply.send(reply);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pending_orders_heaviest_first_then_oldest() {
+        let mut heap = BinaryHeap::new();
+        let spec = JobSpec {
+            id: 0,
+            kind: JobKind::Combine,
+            levels: crate::grid::LevelVector::new(&[2, 2]),
+            tau: 1,
+            steps: 1,
+            seed: 0,
+        };
+        for (weight, seq) in [(10u64, 1u64), (30, 2), (30, 3), (5, 4)] {
+            let (tx, _rx) = sync_channel(1);
+            heap.push(Pending { weight, seq, spec: spec.clone(), reply: tx });
+        }
+        let order: Vec<(u64, u64)> = std::iter::from_fn(|| heap.pop().map(|p| (p.weight, p.seq)))
+            .collect();
+        assert_eq!(order, vec![(30, 2), (30, 3), (10, 1), (5, 4)]);
+    }
+}

@@ -102,6 +102,14 @@ impl SparseGrid {
         self.subspaces.clear();
     }
 
+    /// Dissolve into the per-subspace surplus buffers, for recycling into
+    /// a buffer pool (`coordinator::arena::GridArena::park`) once a serve
+    /// job's result has been encoded onto the wire.  Order is unspecified
+    /// — the buffers are about to lose their identity anyway.
+    pub fn into_buffers(self) -> Vec<Vec<f64>> {
+        self.subspaces.into_values().collect()
+    }
+
     /// Ensure subspace `l` exists (zero-filled) and return it mutably.
     pub fn subspace_mut(&mut self, l: &LevelVector) -> &mut Vec<f64> {
         self.subspaces

@@ -1,0 +1,365 @@
+//! Integration suite for `sgct serve` — the multi-tenant grid service.
+//!
+//! The contracts under test (see `serve`'s module docs):
+//!
+//! * **bitwise service equality** — every job served from recycled arena
+//!   buffers equals `serve::job::reference`, the plain-allocation
+//!   one-shot path, byte for byte — under 32-way client concurrency;
+//! * **typed admission** — `TooLarge` (flop budget), `Busy` (queue full
+//!   or draining) and `Unsupported` (malformed spec) come back as typed
+//!   `job-err` frames before any grid work, and the daemon's counters
+//!   account for every accepted and rejected job exactly;
+//! * **failure containment** — a client that vanishes mid-job (dropped
+//!   connection, killed process) costs the daemon nothing but the
+//!   discarded reply;
+//! * **zero steady-state grid allocations** — after a warmup burst the
+//!   daemon's process-global `grid_buffer_allocs` counter pins flat,
+//!   read over the wire (`stats` frame) from a *real daemon process*,
+//!   so the pin crosses the process boundary.
+//!
+//! Tests are named `serve_*`; CI's `serve-smoke` job runs exactly this
+//! filter (and `comm-smoke` excludes it).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use sgct::comm::transport::{Transport, UnixSocket};
+use sgct::comm::wire::{self, Message, RejectReason};
+use sgct::comm::{unique_run_dir, JobKind, JobSpec};
+use sgct::grid::LevelVector;
+use sgct::serve::{job, ServeClient, ServeConfig, ServerHandle};
+
+/// Run `f` under a hard wall-clock deadline (same guard as the comm
+/// conformance suite): a wedged daemon must fail the test, not hang it.
+fn within_deadline<T: Send + 'static>(
+    secs: u64,
+    name: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            h.join().expect("deadline worker panicked");
+            v
+        }
+        Err(_) => panic!("{name}: exceeded the {secs}s hard deadline — the daemon hung"),
+    }
+}
+
+fn spec(id: u32, kind: JobKind, levels: &[u8], tau: u8, steps: u16, seed: u64) -> JobSpec {
+    JobSpec { id, kind, levels: LevelVector::new(levels), tau, steps, seed }
+}
+
+/// A deterministic mixed burst: hierarchize / combine (two shapes and
+/// truncations) / solve, seeds varied per job.
+fn mixed_jobs(n: usize) -> Vec<JobSpec> {
+    (0..n as u32)
+        .map(|i| match i % 4 {
+            0 => spec(i, JobKind::Hierarchize, &[4, 3], 1, 0, 100 + i as u64),
+            1 => spec(i, JobKind::Combine, &[4, 4], 1, 0, 200 + i as u64),
+            2 => spec(i, JobKind::Combine, &[3, 3, 3], 2, 0, 300 + i as u64),
+            _ => spec(i, JobKind::Solve, &[3, 3], 1, 2, 400 + i as u64),
+        })
+        .collect()
+}
+
+/// Fresh endpoint in a per-test unique dir; returns (dir, socket path).
+fn endpoint(seed: u64) -> (PathBuf, PathBuf) {
+    let dir = unique_run_dir(seed);
+    std::fs::create_dir_all(&dir).unwrap();
+    let socket = dir.join("serve.sock");
+    (dir, socket)
+}
+
+fn lockfile(socket: &Path) -> PathBuf {
+    let mut os = socket.as_os_str().to_owned();
+    os.push(".lock");
+    PathBuf::from(os)
+}
+
+#[test]
+fn serve_concurrent_mixed_jobs_are_bitwise_equal_to_one_shot() {
+    within_deadline(180, "serve-concurrent", || {
+        let (dir, socket) = endpoint(9101);
+        let mut cfg = ServeConfig::new(socket.clone());
+        cfg.workers = 4;
+        let handle = ServerHandle::start(cfg).unwrap();
+
+        // 32 clients, one connection each, all in flight together
+        let threads: Vec<_> = mixed_jobs(32)
+            .into_iter()
+            .map(|s| {
+                let socket = socket.clone();
+                std::thread::spawn(move || {
+                    let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+                    let got = c.run(&s).unwrap();
+                    (s, got)
+                })
+            })
+            .collect();
+        for t in threads {
+            let (s, got) = t.join().unwrap();
+            let want = job::reference(&s).unwrap();
+            assert!(
+                got.bitwise_eq(&want),
+                "job {} ({:?}) served from the arena diverged from the one-shot path",
+                s.id,
+                s.kind
+            );
+        }
+
+        let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+        let s = c.stats().unwrap();
+        assert_eq!(s.jobs_done, 32);
+        assert_eq!(s.rejected_busy + s.rejected_too_large, 0);
+        assert_eq!(s.in_flight, 0, "all replies delivered yet jobs still in flight");
+        assert!(s.arena_reuses > 0, "32 overlapping shapes and not one buffer reuse");
+
+        c.shutdown().unwrap();
+        handle.join();
+        assert!(!socket.exists(), "daemon exit must remove its socket");
+        assert!(!lockfile(&socket).exists(), "daemon exit must release its lockfile");
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn serve_typed_rejections_before_any_grid_work() {
+    within_deadline(60, "serve-rejections", || {
+        let (dir, socket) = endpoint(9202);
+        let mut cfg = ServeConfig::new(socket.clone());
+        cfg.workers = 1;
+        cfg.max_flops = 10_000; // tiny budget: big schemes must bounce
+        let handle = ServerHandle::start(cfg).unwrap();
+        let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+
+        // far over the flop budget -> TooLarge, detail = the weight
+        let big = spec(1, JobKind::Combine, &[6, 6, 6], 1, 0, 1);
+        match c.submit(&big).unwrap() {
+            Message::JobErr { id, reason, detail } => {
+                assert_eq!(id, 1);
+                assert_eq!(reason, RejectReason::TooLarge);
+                assert!(detail > 10_000, "detail must carry the tripping weight");
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+
+        // tau exceeding the scheme level -> Unsupported (decodes fine,
+        // fails spec validation, never touches a grid)
+        let bad = spec(2, JobKind::Combine, &[2, 2], 3, 0, 1);
+        match c.submit(&bad).unwrap() {
+            Message::JobErr { reason, .. } => assert_eq!(reason, RejectReason::Unsupported),
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+
+        // a draining daemon admits nothing: Busy on a job that passes
+        // every other gate
+        handle.shutdown();
+        let tiny = spec(3, JobKind::Hierarchize, &[2], 1, 0, 1);
+        match c.submit(&tiny).unwrap() {
+            Message::JobErr { reason, .. } => assert_eq!(reason, RejectReason::Busy),
+            other => panic!("expected Busy while draining, got {other:?}"),
+        }
+
+        let s = c.stats().unwrap();
+        assert_eq!(s.jobs_done, 0);
+        assert_eq!(s.rejected_too_large, 1);
+        assert_eq!(s.rejected_busy, 1);
+        drop(c);
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn serve_survives_a_client_that_vanishes_mid_job() {
+    within_deadline(120, "serve-client-death", || {
+        let (dir, socket) = endpoint(9303);
+        let mut cfg = ServeConfig::new(socket.clone());
+        cfg.workers = 1;
+        let handle = ServerHandle::start(cfg).unwrap();
+
+        // send a job and vanish without reading the reply: the worker
+        // computes it anyway and its reply lands in a dead session
+        {
+            let mut t = UnixSocket::connect_retry(&socket, Duration::from_secs(30)).unwrap();
+            let orphan = spec(7, JobKind::Solve, &[4, 4], 1, 4, 77);
+            t.send(&wire::encode_job(&orphan)).unwrap();
+        }
+
+        // the daemon still serves, bitwise
+        let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+        let s = spec(8, JobKind::Combine, &[4, 4], 1, 0, 88);
+        let got = c.run(&s).unwrap();
+        assert!(got.bitwise_eq(&job::reference(&s).unwrap()));
+
+        // both jobs complete (the orphan counts too) and nothing leaks
+        let deadline = std::time::Instant::now() + Duration::from_secs(60);
+        loop {
+            let st = c.stats().unwrap();
+            if st.jobs_done == 2 && st.in_flight == 0 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "orphan job never completed: {st:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+
+        c.shutdown().unwrap();
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+#[test]
+fn serve_flood_accounting_is_exact() {
+    within_deadline(120, "serve-flood", || {
+        let (dir, socket) = endpoint(9404);
+        let mut cfg = ServeConfig::new(socket.clone());
+        cfg.workers = 1;
+        cfg.queue = 2; // tiny admission queue: a 16-client flood must bounce
+        let handle = ServerHandle::start(cfg).unwrap();
+
+        let threads: Vec<_> = (0..16u32)
+            .map(|i| {
+                let socket = socket.clone();
+                std::thread::spawn(move || {
+                    let s = spec(i, JobKind::Combine, &[4, 4], 1, 0, 500 + i as u64);
+                    let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+                    let reply = c.submit(&s).unwrap();
+                    (s, reply)
+                })
+            })
+            .collect();
+        let (mut ok, mut busy) = (0u64, 0u64);
+        for t in threads {
+            let (s, reply) = t.join().unwrap();
+            match reply {
+                Message::JobOk { id, result } => {
+                    assert_eq!(id, s.id);
+                    assert!(result.bitwise_eq(&job::reference(&s).unwrap()));
+                    ok += 1;
+                }
+                Message::JobErr { reason, .. } => {
+                    assert_eq!(reason, RejectReason::Busy, "only Busy may bounce this flood");
+                    busy += 1;
+                }
+                other => panic!("unexpected reply {other:?}"),
+            }
+        }
+        assert_eq!(ok + busy, 16);
+        assert!(ok >= 1, "a 1-worker daemon must still serve some of the flood");
+
+        let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+        let s = c.stats().unwrap();
+        assert_eq!(s.jobs_done, ok, "every accepted job accounted");
+        assert_eq!(s.rejected_busy, busy, "every bounced job accounted");
+        c.shutdown().unwrap();
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// The acceptance pin, across a real process boundary: a daemon process
+/// (`CARGO_BIN_EXE_sgct serve`) is warmed up, then its process-global
+/// grid-buffer allocation counter — read over the wire via `stats`
+/// frames — must not move across three more full bursts.  A killed
+/// `serve-client` process rides along to prove process-level client
+/// death doesn't disturb the daemon either.
+#[test]
+fn serve_daemon_process_pins_zero_steady_state_grid_allocations() {
+    within_deadline(300, "serve-daemon-pin", || {
+        let (dir, socket) = endpoint(9505);
+        let mut daemon = std::process::Command::new(env!("CARGO_BIN_EXE_sgct"))
+            .args(["serve", "--socket"])
+            .arg(&socket)
+            // one worker: execution is serialized, so the warmed pool
+            // state is reproducible and the flat pin is deterministic
+            .args(["--workers", "1"])
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn sgct serve");
+
+        let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+        let jobs = mixed_jobs(8);
+
+        // a client process killed mid-flight; its job (heaviest in the
+        // queue) drains through the worker before our later bursts
+        let mut victim = std::process::Command::new(env!("CARGO_BIN_EXE_sgct"))
+            .args(["serve-client", "--socket"])
+            .arg(&socket)
+            .args(["--job", "solve", "--levels", "5,5", "--steps", "200", "--seed", "9"])
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn sgct serve-client");
+        std::thread::sleep(Duration::from_millis(150));
+        let _ = victim.kill();
+        let _ = victim.wait();
+
+        // warmup: two full bursts populate the arena (first one also
+        // pins cross-process bitwise equality)
+        for round in 0..2 {
+            for s in &jobs {
+                let got = c.run(s).unwrap();
+                if round == 0 {
+                    assert!(
+                        got.bitwise_eq(&job::reference(s).unwrap()),
+                        "daemon-process result for job {} differs from the local one-shot path",
+                        s.id
+                    );
+                }
+            }
+        }
+
+        let warm = c.stats().unwrap();
+        for _ in 0..3 {
+            for s in &jobs {
+                c.run(s).unwrap();
+            }
+        }
+        let after = c.stats().unwrap();
+        assert_eq!(
+            after.grid_buffer_allocs, warm.grid_buffer_allocs,
+            "daemon allocated fresh grid buffers after warmup: {warm:?} -> {after:?}"
+        );
+        assert_eq!(after.arena_fresh, warm.arena_fresh, "arena grew after warmup");
+        assert_eq!(after.jobs_done, warm.jobs_done + 24);
+        assert!(after.arena_reuses > warm.arena_reuses);
+        assert_eq!(after.in_flight, 0);
+
+        c.shutdown().unwrap();
+        let status = daemon.wait().unwrap();
+        assert!(status.success(), "daemon exited nonzero: {status:?}");
+        assert!(!socket.exists(), "daemon exit must remove its socket");
+        assert!(!lockfile(&socket).exists(), "daemon exit must release its lockfile");
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// A second daemon refusing a live endpoint must not disturb the first
+/// (the transport bind fix, observed end to end through the service).
+#[test]
+fn serve_second_daemon_refuses_live_endpoint_without_disturbing_it() {
+    within_deadline(60, "serve-double-bind", || {
+        let (dir, socket) = endpoint(9606);
+        let mut cfg = ServeConfig::new(socket.clone());
+        cfg.workers = 1;
+        let handle = ServerHandle::start(cfg.clone()).unwrap();
+
+        let err = ServerHandle::start(cfg).expect_err("second daemon must refuse a live socket");
+        assert!(
+            format!("{err:#}").contains("refusing to clobber"),
+            "unexpected refusal: {err:#}"
+        );
+
+        // the probe left nothing behind: the first daemon still serves
+        let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+        let s = spec(1, JobKind::Hierarchize, &[3, 3], 1, 0, 5);
+        assert!(c.run(&s).unwrap().bitwise_eq(&job::reference(&s).unwrap()));
+        c.shutdown().unwrap();
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
