@@ -24,7 +24,8 @@ mod common;
 use common::*;
 use sgct::combi::CombinationScheme;
 use sgct::comm::{
-    reduce_in_process, seeded_block, ChaosKind, ChaosSpec, Measured, PairTransport, ReduceOptions,
+    reduce_in_process, seeded_block, ChaosKind, ChaosSet, ChaosSpec, Measured, PairTransport,
+    ReduceOptions,
 };
 use sgct::coordinator::distributed::{estimate, place, NetModel};
 use sgct::perf::bench::BenchRecord;
@@ -49,21 +50,28 @@ fn run_once(
     (t0.elapsed().as_secs_f64(), measured)
 }
 
-/// One reduction with a rank killed mid-gather: wall time of detect +
-/// online re-plan + degraded completion, for the recovery-overhead record.
-fn run_chaos(scheme: &CombinationScheme, ranks: usize, seed: u64) -> f64 {
+/// One reduction with injected faults: wall time of detect + online
+/// re-plan + degraded completion, plus the number of recovery epochs the
+/// root actually ran, for the recovery-overhead-per-epoch record.
+fn run_chaos(scheme: &CombinationScheme, ranks: usize, set: ChaosSet, seed: u64) -> (f64, u32) {
     let opts = ReduceOptions {
         scatter_back: false,
         pair_transport: PairTransport::UnixPair,
         timeout_ms: Some(500),
-        chaos: Some(ChaosSpec { seed, kind: ChaosKind::KillBeforeSend, rank: ranks / 2 }),
+        chaos: set,
         recovery_seed: Some(seed),
         ..Default::default()
     };
     let mut grids = seeded_block(scheme, 0, scheme.len(), seed);
     let t0 = std::time::Instant::now();
-    reduce_in_process(scheme, &mut grids, ranks, &opts).expect("degraded reduce failed");
-    t0.elapsed().as_secs_f64()
+    let (_sparse, ms) =
+        reduce_in_process(scheme, &mut grids, ranks, &opts).expect("degraded reduce failed");
+    let epochs = ms
+        .iter()
+        .find(|m| m.rank == 0)
+        .and_then(|m| m.fault.as_ref())
+        .map_or(0, |f| f.epochs);
+    (t0.elapsed().as_secs_f64(), epochs)
 }
 
 fn record(name: &str, levels: &str, threads: usize, secs: f64) -> BenchRecord {
@@ -174,9 +182,11 @@ fn main() {
     // fault-recovery overhead: kill an interior rank mid-gather and time
     // the detect -> re-plan -> degraded-completion path against the clean
     // run (the overhead is dominated by the detection timeout)
-    let wall_chaos = run_chaos(&scheme, ranks, seed);
+    let one = ChaosSet::one(ChaosSpec { seed, kind: ChaosKind::KillBeforeSend, rank: ranks / 2 });
+    let (wall_chaos, epochs_one) = run_chaos(&scheme, ranks, one, seed);
     println!(
-        "fault recovery: degraded wall {} vs clean {} (rank {} killed, 500 ms detect timeout)",
+        "fault recovery: degraded wall {} vs clean {} (rank {} killed, 500 ms detect timeout, \
+         {epochs_one} epoch(s))",
         human_time(wall_chaos),
         human_time(wall_plain),
         ranks / 2,
@@ -185,6 +195,29 @@ fn main() {
     chaos_rec.extra.push(("clean_secs".into(), wall_plain));
     chaos_rec.extra.push(("recovery_overhead_secs".into(), (wall_chaos - wall_plain).max(0.0)));
     chaos_rec.extra.push(("detect_timeout_ms".into(), 500.0));
+    chaos_rec.extra.push(("recovery_epochs".into(), epochs_one as f64));
     records.push(chaos_rec);
+
+    // two faults in distinct epochs (a gather kill plus a scatter-phase
+    // corpse the re-plan flushes out): the per-epoch cost of the epoch
+    // loop, on the record CI diffs across PRs
+    let mut two = ChaosSet::one(ChaosSpec { seed, kind: ChaosKind::KillBeforeSend, rank: 2 });
+    two.push(ChaosSpec { seed, kind: ChaosKind::KillDuringScatter, rank: 3 })
+        .expect("two chaos specs fit");
+    let (wall_two, epochs_two) = run_chaos(&scheme, ranks, two, seed);
+    let overhead_two = (wall_two - wall_plain).max(0.0);
+    println!(
+        "two-fault recovery: degraded wall {} ({epochs_two} epochs, {} per epoch)",
+        human_time(wall_two),
+        human_time(overhead_two / f64::from(epochs_two.max(1))),
+    );
+    let mut two_rec = record("chaos-two-fault-total", &tag, ranks, wall_two);
+    two_rec.extra.push(("clean_secs".into(), wall_plain));
+    two_rec.extra.push(("recovery_overhead_secs".into(), overhead_two));
+    two_rec.extra.push(("recovery_epochs".into(), epochs_two as f64));
+    two_rec
+        .extra
+        .push(("recovery_overhead_per_epoch_secs".into(), overhead_two / f64::from(epochs_two.max(1))));
+    records.push(two_rec);
     emit("comm_overlap", &records);
 }

@@ -38,7 +38,15 @@ fn burst(n: usize) -> Vec<JobSpec> {
                 2 => (JobKind::Combine, &[4, 4, 4], 2, 0),
                 _ => (JobKind::Solve, &[4, 4], 1, 4),
             };
-            JobSpec { id: i, kind, levels: LevelVector::new(levels), tau, steps, seed: i as u64 }
+            JobSpec {
+                id: i,
+                kind,
+                levels: LevelVector::new(levels),
+                tau,
+                steps,
+                seed: i as u64,
+                deadline_ms: 0,
+            }
         })
         .collect()
 }

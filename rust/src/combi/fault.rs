@@ -12,6 +12,15 @@
 //! grid keeps closure; losing an interior grid forces dropping the grids
 //! above it), then recompute coefficients with the general
 //! inclusion–exclusion formula.
+//!
+//! **Multi-epoch composition** (what `comm::reduce`'s bounded epoch loop
+//! leans on): remove-then-close is a closure operator, so recovering from
+//! the *original* scheme over the union of every epoch's failures yields
+//! exactly the same scheme as recovering epoch by epoch from each
+//! intermediate recovered scheme.  The engine therefore re-derives each
+//! epoch's plan from the original scheme over the accumulated dead set —
+//! one code path, no drift between "first fault" and "later fault" — and
+//! `two_epoch_recovery_composes_with_union_recovery` pins the equivalence.
 
 use std::collections::HashSet;
 
@@ -354,6 +363,49 @@ mod tests {
         assert!(scheme.validate().is_ok(), "recovered scheme fails inclusion–exclusion");
         for (a, b) in scheme.components().iter().zip(&rec.components) {
             assert_eq!(a, b, "component order must be preserved");
+        }
+    }
+
+    /// Two fault epochs compose: recovering the union of both epochs'
+    /// losses from the ORIGINAL scheme equals recovering epoch 1's losses,
+    /// materializing the survivor scheme, and recovering epoch 2's losses
+    /// from it.  This is the property that lets `comm::reduce` re-plan
+    /// every epoch from the original scheme over the accumulated dead set.
+    #[test]
+    fn two_epoch_recovery_composes_with_union_recovery() {
+        let cases: &[(&[&[u8]], &[&[u8]])] = &[
+            // two maximal losses in separate epochs
+            (&[&[4, 1, 1]], &[&[1, 1, 4], &[2, 3, 1]]),
+            // epoch 1 interior (cascades), epoch 2 maximal
+            (&[&[3, 1, 1]], &[&[1, 4, 1]]),
+            // epoch 2 loses a grid epoch 1 already cascaded away (no-op)
+            (&[&[3, 1, 1]], &[&[4, 1, 1], &[2, 2, 2]]),
+        ];
+        let s = CombinationScheme::regular(3, 4);
+        for (a, b) in cases {
+            let lv = |ls: &[&[u8]]| ls.iter().map(|l| LevelVector::new(l)).collect::<Vec<_>>();
+            let (a, b) = (lv(a), lv(b));
+            let union: Vec<LevelVector> = a.iter().chain(&b).cloned().collect();
+            let rec_union = recover(&s, &union).unwrap();
+            validate(&rec_union).unwrap();
+            let epoch1 = recover(&s, &a).unwrap();
+            let rec_two_step = recover(&epoch1.to_scheme(&s), &b).unwrap();
+            validate(&rec_two_step).unwrap();
+            assert_eq!(
+                rec_union.components.len(),
+                rec_two_step.components.len(),
+                "lost {a:?} then {b:?}"
+            );
+            for (u, t) in rec_union.components.iter().zip(&rec_two_step.components) {
+                assert_eq!(u.levels, t.levels, "lost {a:?} then {b:?}");
+                assert!(
+                    (u.coeff - t.coeff).abs() < 1e-12,
+                    "{}: union {} vs two-step {}",
+                    u.levels,
+                    u.coeff,
+                    t.coeff
+                );
+            }
         }
     }
 

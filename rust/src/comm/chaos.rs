@@ -1,8 +1,11 @@
 //! Seeded fault injection for the reduction tree.
 //!
-//! A [`ChaosSpec`] names one victim rank and the way it dies at its
-//! gather-send point — the moment its subtree's contribution would travel
-//! up the tree, which is where a real crash hurts the most:
+//! A [`ChaosSpec`] names one victim rank and the way it dies; a
+//! [`ChaosSet`] carries up to [`MAX_FAULTS`] of them under one seed, so a
+//! single run can lose ranks in *different* phases (the multi-epoch
+//! recovery loop exists for exactly that).  The gather-phase kinds fire at
+//! the victim's gather-send point — the moment its subtree's contribution
+//! would travel up the tree, which is where a real crash hurts the most:
 //!
 //! * [`ChaosKind::KillBeforeSend`] — the rank exits without sending
 //!   anything; its links drop and the parent sees
@@ -19,11 +22,22 @@
 //!   [`CommError::PeerTimeout`](super::CommError::PeerTimeout), the
 //!   wedged-not-dead failure mode the deadline work exists for.
 //!
+//! Two kinds target the *later* phases the multi-epoch loop recovers:
+//!
+//! * [`ChaosKind::KillDuringReplan`] — the rank survives the gather, then
+//!   dies the moment a re-plan reaches it: its retained pieces are lost
+//!   and its parent condemns the subtree in the **next** fault epoch.
+//! * [`ChaosKind::KillDuringScatter`] — the rank sends its gather partial
+//!   (so its data is safe in the result), then dies before the scatter
+//!   wait: its parent's broadcast send fails typed and the payload is
+//!   re-routed to the victim's surviving descendants.
+//!
 //! The spec travels through `ReduceOptions` (in-process harness) and the
-//! `sgct comm-worker --chaos seed:kind:rank` flag (multi-process), so one
-//! matrix covers both planes.  The seed makes every run reproducible: it
-//! picks the truncation cut, nothing else — victim and kind are explicit
-//! so the conformance matrix can enumerate them.
+//! `sgct comm-worker --chaos seed:kind:rank[,kind:rank...]` flag
+//! (multi-process), so one matrix covers both planes.  The seed makes
+//! every run reproducible: it picks the truncation cut, nothing else —
+//! victims and kinds are explicit so the conformance matrix can enumerate
+//! them.
 
 use std::time::Duration;
 
@@ -37,18 +51,51 @@ pub enum ChaosKind {
     KillBeforeSend,
     KillMidFrame,
     StallPastDeadline,
+    KillDuringReplan,
+    KillDuringScatter,
 }
 
 impl ChaosKind {
-    pub const ALL: [ChaosKind; 3] =
+    /// The gather-send kinds — the original single-epoch matrix.
+    pub const GATHER: [ChaosKind; 3] =
         [ChaosKind::KillBeforeSend, ChaosKind::KillMidFrame, ChaosKind::StallPastDeadline];
+
+    /// Every kind, for parse/print roundtrips and randomized soaks.
+    pub const ALL: [ChaosKind; 5] = [
+        ChaosKind::KillBeforeSend,
+        ChaosKind::KillMidFrame,
+        ChaosKind::StallPastDeadline,
+        ChaosKind::KillDuringReplan,
+        ChaosKind::KillDuringScatter,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             ChaosKind::KillBeforeSend => "kill-before-send",
             ChaosKind::KillMidFrame => "kill-mid-frame",
             ChaosKind::StallPastDeadline => "stall",
+            ChaosKind::KillDuringReplan => "kill-during-replan",
+            ChaosKind::KillDuringScatter => "kill-during-scatter",
         }
+    }
+
+    fn from_name(s: &str) -> Result<ChaosKind> {
+        ChaosKind::ALL.into_iter().find(|k| k.name() == s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown chaos kind {s:?} \
+                 (kill-before-send|kill-mid-frame|stall|kill-during-replan|kill-during-scatter)"
+            )
+        })
+    }
+
+    /// Does this kind fire at the victim's gather-send point?  The other
+    /// kinds fire later (re-plan receipt / scatter wait) and send their
+    /// gather partial normally.
+    pub fn at_gather_send(self) -> bool {
+        matches!(
+            self,
+            ChaosKind::KillBeforeSend | ChaosKind::KillMidFrame | ChaosKind::StallPastDeadline
+        )
     }
 }
 
@@ -61,20 +108,14 @@ pub struct ChaosSpec {
 }
 
 impl ChaosSpec {
-    /// Parse the CLI form `seed:kind:rank` (kinds: `kill-before-send`,
-    /// `kill-mid-frame`, `stall`).  Rank 0 is the root and cannot die —
-    /// there is no parent left to re-plan.
+    /// Parse the single-fault CLI form `seed:kind:rank`.  Rank 0 is the
+    /// root and cannot die — there is no parent left to re-plan.
     pub fn parse(s: &str) -> Result<ChaosSpec> {
         let parts: Vec<&str> = s.split(':').collect();
         ensure!(parts.len() == 3, "--chaos wants seed:kind:rank, got {s:?}");
         let seed: u64 =
             parts[0].parse().map_err(|_| anyhow::anyhow!("bad chaos seed {:?}", parts[0]))?;
-        let kind = match parts[1] {
-            "kill-before-send" => ChaosKind::KillBeforeSend,
-            "kill-mid-frame" => ChaosKind::KillMidFrame,
-            "stall" => ChaosKind::StallPastDeadline,
-            other => bail!("unknown chaos kind {other:?} (kill-before-send|kill-mid-frame|stall)"),
-        };
+        let kind = ChaosKind::from_name(parts[1])?;
         let rank: usize =
             parts[2].parse().map_err(|_| anyhow::anyhow!("bad chaos rank {:?}", parts[2]))?;
         ensure!(rank != 0, "chaos rank 0 is the root; it cannot be killed");
@@ -85,6 +126,110 @@ impl ChaosSpec {
     /// `comm-worker` children.
     pub fn to_arg(&self) -> String {
         format!("{}:{}:{}", self.seed, self.kind.name(), self.rank)
+    }
+}
+
+/// Most faults one run can inject — a fixed bound keeps [`ChaosSet`]
+/// `Copy` so it rides in `ReduceOptions` unchanged.
+pub const MAX_FAULTS: usize = 4;
+
+/// Up to [`MAX_FAULTS`] injected faults sharing one seed — the CLI form is
+/// `seed:kind:rank[,kind:rank...]`.  At most one fault per rank: a rank
+/// dies once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ChaosSet {
+    faults: [Option<ChaosSpec>; MAX_FAULTS],
+}
+
+impl ChaosSet {
+    /// The empty set — no injection (what `ReduceOptions::default` carries).
+    pub fn none() -> ChaosSet {
+        ChaosSet::default()
+    }
+
+    /// A single-fault set.
+    pub fn one(spec: ChaosSpec) -> ChaosSet {
+        let mut set = ChaosSet::default();
+        set.faults[0] = Some(spec);
+        set
+    }
+
+    /// Add a fault.  Fails past [`MAX_FAULTS`] or on a duplicate rank.
+    pub fn push(&mut self, spec: ChaosSpec) -> Result<()> {
+        ensure!(self.for_rank(spec.rank).is_none(), "duplicate chaos rank {}", spec.rank);
+        let slot = self
+            .faults
+            .iter_mut()
+            .find(|f| f.is_none())
+            .ok_or_else(|| anyhow::anyhow!("more than {MAX_FAULTS} chaos faults"))?;
+        *slot = Some(spec);
+        Ok(())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.iter().all(Option::is_none)
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.iter().filter(|f| f.is_some()).count()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = ChaosSpec> + '_ {
+        self.faults.iter().filter_map(|f| *f)
+    }
+
+    /// The fault injected at `rank`, if any.
+    pub fn for_rank(&self, rank: usize) -> Option<ChaosSpec> {
+        self.iter().find(|s| s.rank == rank)
+    }
+
+    /// Parse the CLI form `seed:kind:rank[,kind:rank...]` — the first
+    /// element names the shared seed, later elements reuse it.
+    pub fn parse(s: &str) -> Result<ChaosSet> {
+        let mut parts = s.split(',');
+        let head = parts.next().unwrap_or("");
+        let first = ChaosSpec::parse(head)?;
+        let mut set = ChaosSet::one(first);
+        for extra in parts {
+            let fields: Vec<&str> = extra.split(':').collect();
+            ensure!(
+                fields.len() == 2,
+                "--chaos extra fault wants kind:rank, got {extra:?} \
+                 (the seed is shared with the first fault)"
+            );
+            let kind = ChaosKind::from_name(fields[0])?;
+            let rank: usize = fields[1]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad chaos rank {:?}", fields[1]))?;
+            ensure!(rank != 0, "chaos rank 0 is the root; it cannot be killed");
+            set.push(ChaosSpec { seed: first.seed, kind, rank })?;
+        }
+        Ok(set)
+    }
+
+    /// The CLI form `parse` accepts — what `sgct reduce` forwards to its
+    /// `comm-worker` children.  Empty sets print as `""` (callers skip the
+    /// flag entirely).
+    pub fn to_arg(&self) -> String {
+        let mut it = self.iter();
+        let Some(first) = it.next() else { return String::new() };
+        let mut out = first.to_arg();
+        for spec in it {
+            out.push(',');
+            out.push_str(&format!("{}:{}", spec.kind.name(), spec.rank));
+        }
+        out
+    }
+
+    /// Every victim rank in the set.
+    pub fn ranks(&self) -> Vec<usize> {
+        self.iter().map(|s| s.rank).collect()
+    }
+}
+
+impl From<ChaosSpec> for ChaosSet {
+    fn from(spec: ChaosSpec) -> ChaosSet {
+        ChaosSet::one(spec)
     }
 }
 
@@ -100,7 +245,7 @@ pub fn truncate_frame(payload: &[u8], seed: u64) -> Vec<u8> {
     payload[..cut].to_vec()
 }
 
-/// Execute the injected fault at the victim's gather-send point.  Returns
+/// Execute a gather-send fault at the victim's gather-send point.  Returns
 /// the error the rank dies with; `payload` is the message it would have
 /// sent, `send` ships bytes to the parent (best effort — the parent may
 /// already have given up on us).
@@ -119,8 +264,15 @@ pub(crate) fn die(
             std::thread::sleep(timeout * 3 + Duration::from_millis(100));
             let _ = send(payload);
         }
+        // late-phase kinds never reach the gather-send site
+        ChaosKind::KillDuringReplan | ChaosKind::KillDuringScatter => {}
     }
     anyhow::anyhow!("chaos: rank {} injected {}", spec.rank, spec.kind.name())
+}
+
+/// The error a late-phase victim dies with (`phase` names where).
+pub(crate) fn die_at(spec: &ChaosSpec, phase: &str) -> anyhow::Error {
+    anyhow::anyhow!("chaos: rank {} injected {} during {phase}", spec.rank, spec.kind.name())
 }
 
 #[cfg(test)]
@@ -137,6 +289,50 @@ mod tests {
         assert!(ChaosSpec::parse("1:explode:2").is_err(), "unknown kind");
         assert!(ChaosSpec::parse("1:stall").is_err(), "missing field");
         assert!(ChaosSpec::parse("x:stall:2").is_err(), "bad seed");
+    }
+
+    #[test]
+    fn multi_fault_sets_parse_and_print_roundtrip() {
+        let arg = "7:kill-before-send:2,kill-during-scatter:5,stall:3";
+        let set = ChaosSet::parse(arg).unwrap();
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.to_arg(), arg);
+        assert_eq!(
+            set.for_rank(5),
+            Some(ChaosSpec { seed: 7, kind: ChaosKind::KillDuringScatter, rank: 5 })
+        );
+        assert_eq!(set.for_rank(2).unwrap().kind, ChaosKind::KillBeforeSend);
+        assert_eq!(set.for_rank(3).unwrap().kind, ChaosKind::StallPastDeadline);
+        assert_eq!(set.for_rank(4), None);
+        assert_eq!(set.ranks(), vec![2, 5, 3]);
+        // single-fault sets stay compatible with the old syntax
+        let one = ChaosSet::parse("42:stall:1").unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one.to_arg(), "42:stall:1");
+        // every fault shares the head seed
+        assert!(set.iter().all(|s| s.seed == 7));
+    }
+
+    #[test]
+    fn multi_fault_sets_reject_bad_shapes() {
+        assert!(ChaosSet::parse("7:stall:1,stall:1").is_err(), "duplicate rank");
+        assert!(ChaosSet::parse("7:stall:1,kill-before-send:0").is_err(), "root victim");
+        assert!(ChaosSet::parse("7:stall:1,8:stall:2").is_err(), "extra seed not allowed");
+        assert!(ChaosSet::parse("7:stall:1,explode:2").is_err(), "unknown kind");
+        assert!(
+            ChaosSet::parse("7:stall:1,stall:2,stall:3,stall:4,stall:5").is_err(),
+            "past MAX_FAULTS"
+        );
+        assert!(ChaosSet::parse("").is_err(), "empty spec");
+    }
+
+    #[test]
+    fn gather_kinds_partition_the_injection_sites() {
+        for kind in ChaosKind::GATHER {
+            assert!(kind.at_gather_send(), "{}", kind.name());
+        }
+        assert!(!ChaosKind::KillDuringReplan.at_gather_send());
+        assert!(!ChaosKind::KillDuringScatter.at_gather_send());
     }
 
     #[test]

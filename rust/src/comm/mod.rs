@@ -33,11 +33,16 @@
 //!
 //! **Fault tolerance** rides on the same layers: [`transport`] types every
 //! peer failure ([`CommError`]: timeout / closed / corrupt frame) and
-//! bounds every receive with a deadline, [`reduce`] converts a dead
-//! child's silence into an online re-plan (`combi::fault::recover`) and
-//! completes the reduction degraded — bitwise equal to [`reduce_local`]
-//! on the recovered scheme — and [`chaos`] injects each failure mode at
-//! every tree position, seeded, to prove it.
+//! bounds every receive with a deadline, [`reduce`] converts dead ranks'
+//! silence into a bounded **loop** of online re-plans
+//! (`combi::fault::recover`, one epoch per detection wave, capped by
+//! `ReduceOptions::max_fault_epochs`) and completes the reduction
+//! degraded — bitwise equal to [`reduce_local`] on the *final* recovered
+//! scheme.  A rank dying in the scatter phase costs no data at all: the
+//! broadcast is re-routed to its surviving descendants over per-rank
+//! adoption endpoints ([`RecoveryHub`]).  [`chaos`] injects each failure
+//! mode — including multi-fault specs across distinct phases — at every
+//! tree position, seeded, to prove all of it.
 //!
 //! The same [`wire`] + [`transport`] stack also carries a second,
 //! adversarial workload: `sgct serve` (`crate::serve`) frames whole
@@ -51,12 +56,13 @@ pub mod reduce;
 pub mod transport;
 pub mod wire;
 
-pub use chaos::{ChaosKind, ChaosSpec};
+pub use chaos::{ChaosKind, ChaosSet, ChaosSpec, MAX_FAULTS};
 pub use overlap::OverlapStats;
 pub use reduce::{
-    rank_ranges, recovered_scheme, reduce_in_process, reduce_local, run_rank, seeded_block,
-    seeded_component_grid, seeded_recovery_block, subtree_ranks, unique_run_dir, unix_links,
-    FaultReport, Measured, PairTransport, RankLinks, ReduceOptions, Topology,
+    adopt_path, rank_ranges, recovered_scheme, reduce_in_process, reduce_local, run_rank,
+    seeded_block, seeded_component_grid, seeded_recovery_block, subtree_ranks, unique_run_dir,
+    unix_links, FaultEvent, FaultPhase, FaultReport, Measured, PairTransport, RankLinks,
+    RecoveryHub, ReduceOptions, Topology,
 };
 pub use transport::{
     default_timeout, resolve_timeout_ms, BoundListener, CommError, InProcess, Transport,

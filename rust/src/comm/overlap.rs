@@ -31,6 +31,7 @@
 
 use std::time::Instant;
 
+use super::transport::CommError;
 use crate::grid::{AxisLayout, FullGrid, LevelVector};
 use crate::hierarchize::fused::{self, FuseParams};
 use crate::sparse::SparseGrid;
@@ -186,6 +187,10 @@ pub struct OverlapStats {
     pub pieces: Vec<PieceStat>,
     /// Local hierarchization wall time (the window sends can hide in).
     pub compute_secs: f64,
+    /// Typed comm class of a mid-stream send failure (the sender runs under
+    /// `set_send_deadline`, so a dead parent surfaces here as a bounded
+    /// timeout/closed instead of a hang).  `None` means every piece landed.
+    pub send_error: Option<CommError>,
 }
 
 impl OverlapStats {
@@ -328,6 +333,7 @@ mod tests {
                 piece(0.9, 0, 0.1, 400), // nothing left to hide behind
             ],
             compute_secs: 1.0,
+            send_error: None,
         };
         assert_eq!(stats.hidden_pieces(), 1);
         assert_eq!(stats.hidden_bytes(), 100);

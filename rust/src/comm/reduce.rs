@@ -42,25 +42,49 @@
 //! surfaces as a typed [`CommError`] at its parent instead of hanging the
 //! reduction.  The parent marks the child's whole subtree dead, reports
 //! the dead ranks up the tree (`Failed`), and the root re-plans the scheme
-//! online with `combi::fault::recover` — then the gather runs a second,
-//! *piece-mode* epoch: the root broadcasts the authoritative dead set
-//! (`Replan`), every surviving rank re-gathers its retained hierarchized
-//! grids with the recovered coefficients and ships them as per-component
-//! pieces (relayed unmerged through the tree), and the root alone applies
-//! the canonical grouping over the *recovered* scheme.  Components the
-//! re-plan activates that no rank ever owned (inclusion–exclusion on the
-//! shrunk index set can introduce them) are regenerated at the root from
-//! [`ReduceOptions::recovery_seed`].  By construction the degraded result
-//! is **bitwise equal to [`reduce_local`] on the recovered scheme** — no
-//! retained grid is re-hierarchized, no lost grid is recomputed.  The
-//! seeded chaos harness ([`super::chaos`]) injects each failure mode at
-//! every tree position to hold that claim.
+//! online with `combi::fault::recover` — then the gather runs a
+//! *piece-mode* recovery epoch: the root broadcasts the authoritative dead
+//! set (`Replan`), every surviving rank re-gathers its retained
+//! hierarchized grids with the recovered coefficients and ships them as
+//! per-component pieces (relayed unmerged through the tree), and the root
+//! alone applies the canonical grouping over the *recovered* scheme.
+//! Components the re-plan activates that no rank ever owned
+//! (inclusion–exclusion on the shrunk index set can introduce them) are
+//! regenerated at the root from [`ReduceOptions::recovery_seed`].  By
+//! construction the degraded result is **bitwise equal to
+//! [`reduce_local`] on the recovered scheme** — no retained grid is
+//! re-hierarchized, no lost grid is recomputed.
+//!
+//! Recovery is a bounded **epoch loop**, not a single pass: a rank dying
+//! while the re-plan is broadcast, while pieces are re-gathered, or while
+//! streams are relayed simply grows the dead set, and the root re-plans
+//! again over the larger set — each epoch discards the previous epoch's
+//! pieces (their coefficients are stale) and re-derives everything from
+//! the original scheme, which stays correct because [`recovered_scheme`]
+//! is a pure function of `(scheme, ranks, dead)`.  The loop is capped by
+//! [`ReduceOptions::max_fault_epochs`]; exceeding it fails with the typed
+//! [`CommError::EpochsExhausted`], never a hang.  The final
+//! [`FaultReport`] logs every detection as a per-epoch, per-phase
+//! [`FaultEvent`].
+//!
+//! The **scatter phase** recovers too: when a parent's broadcast send to a
+//! child fails typed (the child died after contributing its gather
+//! partial — its data is *in* the result), the parent re-routes the
+//! payload to the child's surviving descendants over per-rank adoption
+//! endpoints ([`RecoveryHub`]), and an orphan whose scatter wait dies
+//! falls back to its adoption inbox instead of failing.  Scatter deaths
+//! never touch the scheme — they are routing repairs, recorded as
+//! [`FaultPhase::Scatter`] events with the adopted ranks.
+//!
+//! The seeded chaos harness ([`super::chaos`]) injects each failure mode —
+//! including multi-fault specs with kills during re-plan and scatter — at
+//! every tree position to hold those claims.
 
 use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::sync_channel;
-use std::sync::Mutex;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
@@ -71,9 +95,11 @@ use crate::grid::{FullGrid, LevelVector};
 use crate::hierarchize::{FuseParams, ShardStrategy, Variant};
 use crate::sparse::SparseGrid;
 
-use super::chaos::{self, ChaosSpec};
+use super::chaos::{self, ChaosKind, ChaosSet};
 use super::overlap::{self, OverlapStats, PieceStat};
-use super::transport::{default_timeout, CommError, InProcess, Transport, UnixSocket};
+use super::transport::{
+    default_timeout, BoundListener, CommError, InProcess, Transport, UnixSocket,
+};
 use super::wire::{self, Message};
 
 // ------------------------------------------------------------- topology
@@ -305,9 +331,16 @@ pub struct ReduceOptions {
     /// `SGCT_COMM_TIMEOUT_MS`, default 30 s).  Every tree receive and send
     /// is bounded by it — a dead peer fails the rank, never wedges it.
     pub timeout_ms: Option<u64>,
-    /// Seeded fault injection (testing): the named rank dies at its
-    /// gather-send point.
-    pub chaos: Option<ChaosSpec>,
+    /// Seeded fault injection (testing): each named rank dies at its
+    /// kind's injection point (empty set = no injection).
+    pub chaos: ChaosSet,
+    /// Most recovery epochs one reduction may run: each rank death
+    /// detected *during* recovery (re-plan broadcast, piece re-gather,
+    /// relay) grows the dead set and starts another `combi::fault::recover`
+    /// pass; past this cap the run fails with the typed
+    /// [`CommError::EpochsExhausted`] instead of looping.  (Values below 1
+    /// are treated as 1 — the first fault always gets its recovery pass.)
+    pub max_fault_epochs: u32,
     /// Deterministic regeneration seed for re-planned components that no
     /// rank ever computed (the seed the input grids were built from, in
     /// seeded runs).  Without it, a re-plan needing such a component fails
@@ -326,7 +359,8 @@ impl Default for ReduceOptions {
             channel_capacity: 8,
             pair_transport: PairTransport::Channel,
             timeout_ms: None,
-            chaos: None,
+            chaos: ChaosSet::none(),
+            max_fault_epochs: 3,
             recovery_seed: None,
         }
     }
@@ -399,13 +433,55 @@ pub fn reduce_local(
 
 // --------------------------------------------------------- fault re-plan
 
+/// Which protocol phase a fault was detected in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPhase {
+    /// The first gather pass (partial merge up the tree).
+    Gather,
+    /// Broadcasting/forwarding a re-plan to a child.
+    Replan,
+    /// Re-gathering or relaying recovery piece streams.
+    Collect,
+    /// Broadcasting the reduced grid back down (a routing repair —
+    /// the victim's data is already in the result, so the scheme is
+    /// untouched and [`FaultReport::dead_ranks`] excludes it).
+    Scatter,
+}
+
+impl FaultPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPhase::Gather => "gather",
+            FaultPhase::Replan => "replan",
+            FaultPhase::Collect => "collect",
+            FaultPhase::Scatter => "scatter",
+        }
+    }
+}
+
+/// One fault detection: which ranks were declared dead, in which phase of
+/// which recovery epoch (epoch 0 = before any recovery pass ran).
+#[derive(Debug, Clone)]
+pub struct FaultEvent {
+    pub epoch: u32,
+    pub phase: FaultPhase,
+    /// The ranks this detection declared dead (subtree-closed for
+    /// data-phase faults; the single unreachable child for scatter).
+    pub dead: Vec<usize>,
+    /// Scatter only: surviving descendants the broadcast was re-routed to.
+    pub adopted: Vec<usize>,
+}
+
 /// What a completed-but-degraded reduction reports: which ranks died,
 /// which component grids died with them, and what the re-plan combines
 /// instead.
 #[derive(Debug, Clone)]
 pub struct FaultReport {
-    /// Dead ranks (subtree-closed: a dead parent takes its orphaned
+    /// Data-dead ranks (subtree-closed: a dead parent takes its orphaned
     /// descendants' blocks with it — their partials have nowhere to go).
+    /// Scatter-phase deaths are *not* listed here: their gather
+    /// contribution survived, so the scheme keeps their components (see
+    /// [`FaultEvent`] entries with [`FaultPhase::Scatter`]).
     pub dead_ranks: Vec<usize>,
     /// Component grids lost with the dead ranks (original-scheme levels).
     pub failed: Vec<LevelVector>,
@@ -414,6 +490,25 @@ pub struct FaultReport {
     pub cascaded: Vec<LevelVector>,
     /// The recovered scheme's components with re-planned coefficients.
     pub components: Vec<Component>,
+    /// Per-epoch, per-phase detection log (chronological).
+    pub events: Vec<FaultEvent>,
+    /// Recovery epochs the run needed (0 = scatter-only repairs).
+    pub epochs: u32,
+}
+
+impl FaultReport {
+    /// A report carrying only routing events (scatter repairs) — no
+    /// components were lost and no re-plan ran.
+    fn routing_only() -> FaultReport {
+        FaultReport {
+            dead_ranks: Vec::new(),
+            failed: Vec::new(),
+            cascaded: Vec::new(),
+            components: Vec::new(),
+            events: Vec::new(),
+            epochs: 0,
+        }
+    }
 }
 
 /// Original-scheme component indices owned by the `dead` ranks' blocks.
@@ -451,6 +546,8 @@ pub fn recovered_scheme(
         failed,
         cascaded: rec.cascaded,
         components: recovered.components().to_vec(),
+        events: Vec::new(),
+        epochs: 0,
     };
     Ok((recovered, report))
 }
@@ -494,11 +591,113 @@ pub fn seeded_recovery_block(
 
 // ------------------------------------------------------------- the ranks
 
+/// Per-rank adoption endpoints for scatter-phase recovery: when a rank's
+/// broadcast parent dies, the payload is re-routed here by whichever
+/// ancestor detected the death.  Wired once at setup (channel fan-in for
+/// in-process ranks, an eagerly bound per-rank Unix listener for
+/// processes), so adoption needs no topology surgery mid-protocol.
+pub enum RecoveryHub {
+    /// No adoption endpoints wired (single-rank runs, unit harnesses):
+    /// orphans fail typed instead of waiting.
+    None,
+    /// In-process: every rank holds clones of every rank's inbox sender.
+    InProcess {
+        inbox: Receiver<Vec<u8>>,
+        peers: Arc<Vec<SyncSender<Vec<u8>>>>,
+    },
+    /// Processes: rank `r` accepts adoptions on `adopt_path(dir, r)`;
+    /// adopters dial that path.  The root keeps no listener (it has no
+    /// parent to lose).
+    Unix {
+        dir: PathBuf,
+        listener: Option<BoundListener>,
+    },
+}
+
+impl Default for RecoveryHub {
+    fn default() -> Self {
+        RecoveryHub::None
+    }
+}
+
+impl RecoveryHub {
+    /// Ship `payload` to `rank`'s adoption inbox, bounded by `timeout`.
+    /// Fails typed when the rank is gone — the caller then descends to the
+    /// rank's children instead.
+    fn adopt(&self, rank: usize, payload: &[u8], timeout: Duration) -> Result<()> {
+        match self {
+            RecoveryHub::None => {
+                bail!("no recovery hub wired for adoption: {}", CommError::PeerClosed)
+            }
+            RecoveryHub::InProcess { peers, .. } => {
+                let deadline = Instant::now() + timeout;
+                let mut v = payload.to_vec();
+                loop {
+                    match peers[rank].try_send(v) {
+                        Ok(()) => return Ok(()),
+                        Err(TrySendError::Full(back)) => {
+                            if Instant::now() >= deadline {
+                                bail!("adopt rank {rank}: {}", CommError::PeerTimeout);
+                            }
+                            v = back;
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(TrySendError::Disconnected(_)) => {
+                            bail!("adopt rank {rank}: {}", CommError::PeerClosed)
+                        }
+                    }
+                }
+            }
+            RecoveryHub::Unix { dir, .. } => {
+                let mut s = UnixSocket::connect_retry(&adopt_path(dir, rank), timeout)
+                    .with_context(|| format!("adopt rank {rank}"))?;
+                s.set_send_deadline(Some(timeout))?;
+                s.send(payload).with_context(|| format!("adopt rank {rank}"))
+            }
+        }
+    }
+
+    /// Wait for an adoption payload (the orphan side), bounded by
+    /// `timeout`.  Typed [`CommError::PeerTimeout`] when no adopter comes.
+    fn recv(&mut self, timeout: Duration) -> Result<Vec<u8>> {
+        match self {
+            RecoveryHub::None => {
+                bail!("orphaned with no recovery hub wired: {}", CommError::PeerTimeout)
+            }
+            RecoveryHub::InProcess { inbox, .. } => {
+                use std::sync::mpsc::RecvTimeoutError;
+                inbox.recv_timeout(timeout).map_err(|e| match e {
+                    RecvTimeoutError::Timeout => {
+                        anyhow::anyhow!("adoption wait {timeout:?}: {}", CommError::PeerTimeout)
+                    }
+                    RecvTimeoutError::Disconnected => {
+                        anyhow::anyhow!("adoption inbox: {}", CommError::PeerClosed)
+                    }
+                })
+            }
+            RecoveryHub::Unix { listener, .. } => {
+                let l = listener
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("the root cannot be orphaned"))?;
+                let mut s = UnixSocket::accept_timeout(l, timeout).context("adoption accept")?;
+                s.recv_timeout(timeout).context("adoption payload")
+            }
+        }
+    }
+}
+
+/// Socket path of `rank`'s adoption endpoint inside a run dir.
+pub fn adopt_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("adopt_{rank}.sock"))
+}
+
 /// A rank's tree links: one parent edge (none at the root), child edges in
-/// gather-round order.
+/// gather-round order, plus the adoption endpoints scatter recovery
+/// re-routes through.
 pub struct RankLinks {
     pub parent: Option<Box<dyn Transport>>,
     pub children: Vec<Box<dyn Transport>>,
+    pub recovery: RecoveryHub,
 }
 
 /// Measured bytes and seconds of one rank's participation — what the
@@ -639,6 +838,7 @@ fn stream_and_send(
     lo: usize,
     grids: &mut [FullGrid],
     opts: &ReduceOptions,
+    timeout: Duration,
     m: &mut Measured,
 ) -> Result<()> {
     let dim = scheme.dim();
@@ -653,15 +853,26 @@ fn stream_and_send(
         groups_remaining_batch: usize,
         enqueued_secs: f64,
     }
+    // a parent that dies mid-stream must not wedge the sender thread on
+    // backpressure while the sweep finishes: every piece send is bounded
+    parent.set_send_deadline(Some(timeout))?;
     let (tx, rx) = sync_channel::<(Meta, Vec<u8>)>(opts.channel_capacity.max(1));
     let start = Instant::now();
+    // the sender returns its stats *next to* any error instead of inside a
+    // Result: a dead parent ends the rank, but the pieces shipped before
+    // the failure (and the typed error itself) still reach OverlapStats
+    type SenderEnd = (Vec<PieceStat>, usize, f64, Option<anyhow::Error>);
     let (compute_secs, sent) = std::thread::scope(|s| {
-        let sender = s.spawn(move || -> Result<(Vec<PieceStat>, usize, f64)> {
+        let sender = s.spawn(move || -> SenderEnd {
             let mut stats = Vec::new();
             let (mut bytes, mut secs) = (0usize, 0.0f64);
             for (meta, buf) in rx {
                 let t0 = Instant::now();
-                parent.send(&buf)?;
+                if let Err(e) = parent.send(&buf) {
+                    // breaking drops `rx`: the compute side's enqueues fail
+                    // fast instead of filling a channel nobody drains
+                    return (stats, bytes, secs, Some(e));
+                }
                 let send_secs = t0.elapsed().as_secs_f64();
                 bytes += buf.len();
                 secs += send_secs;
@@ -679,10 +890,12 @@ fn stream_and_send(
             }
             let done = wire::encode_done(stats.len(), dim);
             let t0 = Instant::now();
-            parent.send(&done)?;
+            if let Err(e) = parent.send(&done) {
+                return (stats, bytes, secs, Some(e));
+            }
             bytes += done.len();
             secs += t0.elapsed().as_secs_f64();
-            Ok((stats, bytes, secs))
+            (stats, bytes, secs, None)
         });
         let compute_secs =
             overlap::stream_block(grids, lo, &coeffs, opts.fuse, opts.threads, start, &mut |p| {
@@ -702,13 +915,23 @@ fn stream_and_send(
         drop(tx);
         (compute_secs, sender.join().expect("sender thread panicked"))
     });
-    let (stats, bytes, secs) = sent?;
+    let (stats, bytes, secs, send_err) = sent;
     m.compute_secs = compute_secs;
     m.gather_sent_bytes += bytes;
     m.gather_comm_secs += secs;
-    m.messages += stats.len() + 1;
-    m.overlap = Some(OverlapStats { pieces: stats, compute_secs });
-    Ok(())
+    // the done marker only went out on the clean path
+    m.messages += stats.len() + usize::from(send_err.is_none());
+    m.overlap = Some(OverlapStats {
+        pieces: stats,
+        compute_secs,
+        send_error: send_err.as_ref().and_then(CommError::classify_any),
+    });
+    match send_err {
+        None => Ok(()),
+        // the parent is gone: this rank is done for (its subtree gets
+        // condemned upstream), but the stats above survive in `m`
+        Some(e) => Err(e.context(format!("overlap stream to the parent of block {lo}"))),
+    }
 }
 
 /// The recovery epoch of a non-root rank: forward the re-plan to alive
@@ -717,6 +940,12 @@ fn stream_and_send(
 /// component index), relay the children's piece streams unmerged, close
 /// with a `done` marker.  Only the root merges — that is what keeps the
 /// degraded result bitwise equal to the recovered-scheme reference.
+///
+/// A child dying *during* this epoch (re-plan forward or relay) does not
+/// fail the rank: its subtree is condemned locally, the remaining streams
+/// are still relayed, and the epoch closes with a `Failed` report instead
+/// of `Done` — the root grows the dead set and starts the next epoch.
+/// Detections are appended to `events` under `epoch`.
 #[allow(clippy::too_many_arguments)]
 fn child_recovery(
     scheme: &CombinationScheme,
@@ -726,6 +955,8 @@ fn child_recovery(
     grids: &[FullGrid],
     links: &mut RankLinks,
     dead: &[usize],
+    epoch: u32,
+    events: &mut Vec<FaultEvent>,
     timeout: Duration,
     m: &mut Measured,
 ) -> Result<FaultReport> {
@@ -734,23 +965,40 @@ fn child_recovery(
     let rec_coeff: HashMap<&LevelVector, f64> =
         rec.components().iter().map(|c| (&c.levels, c.coeff)).collect();
     let child_ids = topo.children(rank);
-    let RankLinks { parent, children } = links;
+    let RankLinks { parent, children, .. } = links;
     let parent = parent.as_mut().expect("child recovery needs a parent");
     // forward the re-plan first: children re-gather while we ship our block
     let replan_msg = wire::encode_replan(dead, dim);
+    let mut new_dead: Vec<usize> = Vec::new();
     let mut alive: Vec<usize> = Vec::new();
     for (i, &c) in child_ids.iter().enumerate() {
         if dead.contains(&c) {
             continue;
         }
         let t0 = Instant::now();
-        children[i]
-            .send(&replan_msg)
-            .with_context(|| format!("rank {rank}: re-plan to child {c}"))?;
-        m.scatter_comm_secs += t0.elapsed().as_secs_f64();
-        m.scatter_sent_bytes += replan_msg.len();
-        m.messages += 1;
-        alive.push(i);
+        match children[i].send(&replan_msg) {
+            Ok(()) => {
+                m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+                m.scatter_sent_bytes += replan_msg.len();
+                m.messages += 1;
+                alive.push(i);
+            }
+            Err(e) => {
+                if CommError::classify(&e).is_none() {
+                    return Err(e.context(format!("rank {rank}: re-plan to child {c}")));
+                }
+                // the child died after its gather: the pieces its subtree
+                // retained are gone — condemn it and report up
+                let lost = subtree_ranks(topo, c);
+                events.push(FaultEvent {
+                    epoch,
+                    phase: FaultPhase::Replan,
+                    dead: lost.clone(),
+                    adopted: Vec::new(),
+                });
+                new_dead.extend(lost);
+            }
+        }
     }
     // the recovered coefficient is applied at gather time: summing
     // `coeff * v` into an empty subspace is not bitwise `coeff * (0 + v)`
@@ -770,49 +1018,96 @@ fn child_recovery(
         sent += 1;
     }
     for idx in alive {
+        let child = child_ids[idx];
         let mut got = 0usize;
-        loop {
+        // None = clean stream end; Some(d) = the subtree is lost / lost d.
+        // Every alive stream is consumed to its end even after a failure
+        // elsewhere — a half-read stream would leak stale pieces into the
+        // next epoch's traffic.
+        let outcome: Option<Vec<usize>> = loop {
             let t0 = Instant::now();
-            let buf = children[idx].recv_timeout(timeout).with_context(|| {
-                format!("rank {rank}: recovery relay from child {}", child_ids[idx])
-            })?;
+            let buf = match children[idx].recv_timeout(timeout) {
+                Ok(b) => b,
+                Err(e) => {
+                    if CommError::classify(&e).is_none() {
+                        return Err(e.context(format!(
+                            "rank {rank}: recovery relay from child {child}"
+                        )));
+                    }
+                    break Some(subtree_ranks(topo, child));
+                }
+            };
             m.gather_comm_secs += t0.elapsed().as_secs_f64();
             m.gather_recv_bytes += buf.len();
             m.messages += 1;
-            match wire::decode(&buf).map_err(|e| corrupt(e, "recovery relay decode"))? {
-                Message::Piece { .. } => {
+            match wire::decode(&buf) {
+                Ok(Message::Piece { .. }) => {
+                    // parent-side failures stay fatal: with the parent gone
+                    // this rank has nowhere to report anything
                     parent.send(&buf).context("relaying recovery piece")?;
                     m.gather_sent_bytes += buf.len();
                     m.messages += 1;
                     got += 1;
                     sent += 1;
                 }
-                Message::Done { pieces } => {
-                    ensure!(
-                        got == pieces,
-                        "recovery relay: got {got}, done says {pieces}: {}",
-                        CommError::CorruptFrame
-                    );
-                    break;
+                Ok(Message::Done { pieces }) if got == pieces => break None,
+                Ok(Message::Failed { dead: d }) if !d.is_empty() => {
+                    // the child survived but lost descendants mid-epoch;
+                    // merge its report into ours
+                    break Some(d);
                 }
-                other => {
-                    bail!("recovery relay: unexpected {other:?}: {}", CommError::CorruptFrame)
-                }
+                // piece-count mismatch, garbage, or a protocol violation:
+                // a garbling subtree is a dead subtree
+                Ok(_) | Err(_) => break Some(subtree_ranks(topo, child)),
             }
+        };
+        if let Some(d) = outcome {
+            events.push(FaultEvent {
+                epoch,
+                phase: FaultPhase::Collect,
+                dead: d.clone(),
+                adopted: Vec::new(),
+            });
+            new_dead.extend(d);
         }
     }
-    let done = wire::encode_done(sent, dim);
-    parent.send(&done).context("recovery done marker")?;
-    m.gather_sent_bytes += done.len();
-    m.messages += 1;
+    if new_dead.is_empty() {
+        let done = wire::encode_done(sent, dim);
+        parent.send(&done).context("recovery done marker")?;
+        m.gather_sent_bytes += done.len();
+        m.messages += 1;
+    } else {
+        new_dead.sort_unstable();
+        new_dead.dedup();
+        new_dead.retain(|r| !dead.contains(r));
+        ensure!(
+            !new_dead.is_empty(),
+            "recovery epoch {epoch} failed without new dead ranks: {}",
+            CommError::CorruptFrame
+        );
+        // this epoch is void: hand the larger dead set up instead of a
+        // done marker; the root re-plans and broadcasts the next epoch
+        let payload = wire::encode_failed(&new_dead, dim);
+        parent.send(&payload).with_context(|| format!("rank {rank}: recovery fault report"))?;
+        m.gather_sent_bytes += payload.len();
+        m.messages += 1;
+    }
     Ok(report)
 }
 
-/// The root's recovery: broadcast the re-plan, collect every surviving
-/// component as a piece (own block + the alive subtrees' streams),
-/// regenerate re-planned components nobody owned, and apply the canonical
-/// grouping over the *recovered* scheme — by construction bitwise equal
-/// to [`reduce_local`] on that scheme with the same inputs and options.
+/// The root's recovery: a bounded **epoch loop**.  Each epoch broadcasts
+/// the current dead set as a re-plan, collects every surviving component
+/// as a piece (own block + the alive subtrees' streams), regenerates
+/// re-planned components nobody owned, and applies the canonical grouping
+/// over the *recovered* scheme — by construction bitwise equal to
+/// [`reduce_local`] on that scheme with the same inputs and options.
+///
+/// Any death detected mid-epoch (a re-plan send failing, a stream dying,
+/// a child reporting `Failed`) voids the epoch: the dead set grows and
+/// the loop re-plans from the original scheme — correct because
+/// [`recovered_scheme`] is pure in `(scheme, ranks, dead)`.  Past
+/// [`ReduceOptions::max_fault_epochs`] the run fails with the typed
+/// [`CommError::EpochsExhausted`].
 #[allow(clippy::too_many_arguments)]
 fn root_recover(
     scheme: &CombinationScheme,
@@ -822,145 +1117,239 @@ fn root_recover(
     grids: &[FullGrid],
     links: &mut RankLinks,
     opts: &ReduceOptions,
-    dead: &[usize],
+    initial_dead: &[usize],
     timeout: Duration,
+    events: &mut Vec<FaultEvent>,
     m: &mut Measured,
 ) -> Result<(SparseGrid, FaultReport)> {
     let dim = scheme.dim();
-    let (rec, report) = recovered_scheme(scheme, topo.ranks(), dead)?;
-    let rec_coeff: HashMap<&LevelVector, f64> =
-        rec.components().iter().map(|c| (&c.levels, c.coeff)).collect();
-    let orig_index: HashMap<&LevelVector, usize> =
-        scheme.components().iter().enumerate().map(|(i, c)| (&c.levels, i)).collect();
-    let failed_set: HashSet<usize> = failed_component_indices(ranges, dead).into_iter().collect();
     let child_ids = topo.children(0);
     let children = &mut links.children;
-    let replan_msg = wire::encode_replan(dead, dim);
-    let mut alive: Vec<usize> = Vec::new();
-    for (i, &c) in child_ids.iter().enumerate() {
-        // a dead child gets nothing; its orphaned descendants time out on
-        // their scatter wait and exit — their blocks are in `dead`
-        if dead.contains(&c) {
+    let cap = opts.max_fault_epochs.max(1);
+    let mut dead: Vec<usize> = initial_dead.to_vec();
+    let mut epoch: u32 = 0;
+    'epoch: loop {
+        epoch += 1;
+        ensure!(
+            epoch <= cap,
+            "fault recovery needs epoch {epoch} but max_fault_epochs is {cap}: {}",
+            CommError::EpochsExhausted
+        );
+        let (rec, mut report) = recovered_scheme(scheme, topo.ranks(), &dead)?;
+        let rec_coeff: HashMap<&LevelVector, f64> =
+            rec.components().iter().map(|c| (&c.levels, c.coeff)).collect();
+        let orig_index: HashMap<&LevelVector, usize> =
+            scheme.components().iter().enumerate().map(|(i, c)| (&c.levels, i)).collect();
+        let failed_set: HashSet<usize> =
+            failed_component_indices(ranges, &dead).into_iter().collect();
+        let replan_msg = wire::encode_replan(&dead, dim);
+        let mut new_dead: Vec<usize> = Vec::new();
+        let mut alive: Vec<usize> = Vec::new();
+        for (i, &c) in child_ids.iter().enumerate() {
+            // a dead child gets nothing; its orphaned descendants time out
+            // on their scatter wait and exit — their blocks are in `dead`
+            if dead.contains(&c) {
+                continue;
+            }
+            let t0 = Instant::now();
+            match children[i].send(&replan_msg) {
+                Ok(()) => {
+                    m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+                    m.scatter_sent_bytes += replan_msg.len();
+                    m.messages += 1;
+                    alive.push(i);
+                }
+                Err(e) => {
+                    if CommError::classify(&e).is_none() {
+                        return Err(e.context(format!("re-plan to child {c}")));
+                    }
+                    // the child died since the gather: everything its
+                    // subtree retained is gone — next epoch
+                    let lost = subtree_ranks(topo, c);
+                    events.push(FaultEvent {
+                        epoch,
+                        phase: FaultPhase::Replan,
+                        dead: lost.clone(),
+                        adopted: Vec::new(),
+                    });
+                    new_dead.extend(lost);
+                }
+            }
+        }
+        // bucket per ORIGINAL component index, own block first
+        let mut bucket: HashMap<usize, SparseGrid> = HashMap::new();
+        for (k, g) in grids.iter().enumerate() {
+            let i = lo + k;
+            if let Some(&coeff) = rec_coeff.get(&scheme.components()[i].levels) {
+                let mut sg = SparseGrid::new();
+                sg.gather(g, coeff);
+                bucket.insert(i, sg);
+            }
+        }
+        // every alive stream is consumed to its end even after a failure
+        // elsewhere — a half-read stream would leak stale pieces into the
+        // next epoch's collect (the bucket itself is rebuilt per epoch, so
+        // pieces of a voided epoch are simply discarded)
+        for idx in alive {
+            let child = child_ids[idx];
+            let (slo, shi) = subtree_span(topo, ranges, child);
+            let mut got = 0usize;
+            // None = clean stream end; Some(d) = the subtree is lost/lost d
+            let outcome: Option<Vec<usize>> = loop {
+                let t0 = Instant::now();
+                let buf = match children[idx].recv_timeout(timeout) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        if CommError::classify(&e).is_none() {
+                            return Err(
+                                e.context(format!("recovery collect from child {child}"))
+                            );
+                        }
+                        break Some(subtree_ranks(topo, child));
+                    }
+                };
+                m.gather_comm_secs += t0.elapsed().as_secs_f64();
+                m.gather_recv_bytes += buf.len();
+                m.messages += 1;
+                match wire::decode(&buf) {
+                    Ok(Message::Piece { grid, part, .. }) => {
+                        // && short-circuits: `grid` is bounds-checked by the
+                        // span test before it indexes the components
+                        let valid = (slo..shi).contains(&grid)
+                            && !failed_set.contains(&grid)
+                            && rec_coeff.contains_key(&scheme.components()[grid].levels)
+                            && part.subspace_count()
+                                == (0..dim)
+                                    .map(|ax| {
+                                        scheme.components()[grid].levels.level(ax) as usize
+                                    })
+                                    .product::<usize>();
+                        if !valid || bucket.insert(grid, part).is_some() {
+                            // out-of-span, failed, incomplete or duplicate
+                            // piece: a garbling subtree is a dead subtree
+                            break Some(subtree_ranks(topo, child));
+                        }
+                        got += 1;
+                    }
+                    Ok(Message::Done { pieces }) if got == pieces => break None,
+                    Ok(Message::Failed { dead: d }) if !d.is_empty() => {
+                        // the child survived but lost descendants mid-epoch
+                        break Some(d);
+                    }
+                    Ok(_) | Err(_) => break Some(subtree_ranks(topo, child)),
+                }
+            };
+            if let Some(d) = outcome {
+                events.push(FaultEvent {
+                    epoch,
+                    phase: FaultPhase::Collect,
+                    dead: d.clone(),
+                    adopted: Vec::new(),
+                });
+                new_dead.extend(d);
+            }
+        }
+        if !new_dead.is_empty() {
+            new_dead.sort_unstable();
+            new_dead.dedup();
+            new_dead.retain(|r| !dead.contains(r));
+            ensure!(
+                !new_dead.is_empty(),
+                "recovery epoch {epoch} failed without new dead ranks: {}",
+                CommError::CorruptFrame
+            );
+            dead.extend(new_dead);
+            dead.sort_unstable();
+            continue 'epoch;
+        }
+        // every recovered component needs a source before the canonical merge
+        for c in rec.components() {
+            match orig_index.get(&c.levels) {
+                Some(i) => ensure!(
+                    bucket.contains_key(i),
+                    "recovered component {} (original grid {i}) missing from the survivors: {}",
+                    c.levels,
+                    CommError::CorruptFrame
+                ),
+                None => ensure!(
+                    opts.recovery_seed.is_some(),
+                    "re-planned component {} is outside the original scheme and no recovery \
+                     seed is set — cannot regenerate it deterministically",
+                    c.levels
+                ),
+            }
+        }
+        // canonical merge over the RECOVERED scheme
+        let rw = weights(&rec);
+        let bopts = batch_opts(opts, false);
+        let t0 = Instant::now();
+        let full = canon_partial(&rw, 0, rec.len(), &mut |j| {
+            let c = &rec.components()[j];
+            match orig_index.get(&c.levels) {
+                Some(i) => bucket.remove(i).expect("validated above"),
+                None => {
+                    // inclusion–exclusion on the shrunk index set can activate
+                    // interior grids the original scheme weighted zero — no
+                    // rank ever computed them; rebuild from the seed
+                    let g =
+                        seeded_component_grid(&c.levels, opts.recovery_seed.expect("validated"));
+                    let mut block = [g];
+                    hierarchize_slice(&rec, j, &mut block, &bopts);
+                    let mut sg = SparseGrid::new();
+                    sg.gather(&block[0], c.coeff);
+                    sg
+                }
+            }
+        })
+        .unwrap_or_default();
+        debug_assert!(bucket.is_empty(), "unconsumed recovery pieces");
+        m.compute_secs += t0.elapsed().as_secs_f64();
+        report.epochs = epoch;
+        return Ok((full, report));
+    }
+}
+
+/// Re-route a broadcast payload around a child that died *in the scatter
+/// phase*: walk the dead child's subtree top-down and hand the payload to
+/// each highest surviving descendant over its adoption endpoint — an
+/// adopted rank forwards onward through its own normal links, so one
+/// adoption repairs its whole live subtree.  A frontier rank that cannot
+/// be adopted (it died too, unreported) is descended past, which makes
+/// the repair recursive.  Returns the adopted ranks.
+fn reroute_scatter(
+    topo: &Topology,
+    dead_child: usize,
+    dead_now: &[usize],
+    payload: &[u8],
+    recovery: &RecoveryHub,
+    timeout: Duration,
+    m: &mut Measured,
+) -> Vec<usize> {
+    let mut adopted = Vec::new();
+    let mut frontier: Vec<usize> = topo.children(dead_child);
+    while let Some(r) = frontier.pop() {
+        if dead_now.contains(&r) {
+            // data-dead: its subtree died with it (subtree-closed), nobody
+            // below is waiting for the payload
             continue;
         }
         let t0 = Instant::now();
-        children[i].send(&replan_msg).with_context(|| format!("re-plan to child {c}"))?;
-        m.scatter_comm_secs += t0.elapsed().as_secs_f64();
-        m.scatter_sent_bytes += replan_msg.len();
-        m.messages += 1;
-        alive.push(i);
-    }
-    // bucket per ORIGINAL component index, own block first
-    let mut bucket: HashMap<usize, SparseGrid> = HashMap::new();
-    for (k, g) in grids.iter().enumerate() {
-        let i = lo + k;
-        if let Some(&coeff) = rec_coeff.get(&scheme.components()[i].levels) {
-            let mut sg = SparseGrid::new();
-            sg.gather(g, coeff);
-            bucket.insert(i, sg);
-        }
-    }
-    for idx in alive {
-        let child = child_ids[idx];
-        let (slo, shi) = subtree_span(topo, ranges, child);
-        let mut got = 0usize;
-        loop {
-            let t0 = Instant::now();
-            let buf = children[idx]
-                .recv_timeout(timeout)
-                .with_context(|| format!("recovery collect from child {child}"))?;
-            m.gather_comm_secs += t0.elapsed().as_secs_f64();
-            m.gather_recv_bytes += buf.len();
-            m.messages += 1;
-            match wire::decode(&buf).map_err(|e| corrupt(e, "recovery decode"))? {
-                Message::Piece { grid, part, .. } => {
-                    ensure!(
-                        (slo..shi).contains(&grid),
-                        "recovery piece for grid {grid} outside subtree span [{slo},{shi}): {}",
-                        CommError::CorruptFrame
-                    );
-                    ensure!(
-                        !failed_set.contains(&grid),
-                        "recovery piece for failed grid {grid}: {}",
-                        CommError::CorruptFrame
-                    );
-                    let levels = &scheme.components()[grid].levels;
-                    ensure!(
-                        rec_coeff.contains_key(levels),
-                        "recovery piece for grid {grid} outside the recovered scheme: {}",
-                        CommError::CorruptFrame
-                    );
-                    let expected: usize =
-                        (0..dim).map(|ax| levels.level(ax) as usize).product();
-                    ensure!(
-                        part.subspace_count() == expected,
-                        "recovery piece for grid {grid}: {} of {expected} subspaces: {}",
-                        part.subspace_count(),
-                        CommError::CorruptFrame
-                    );
-                    ensure!(
-                        bucket.insert(grid, part).is_none(),
-                        "duplicate recovery piece for grid {grid}: {}",
-                        CommError::CorruptFrame
-                    );
-                    got += 1;
-                }
-                Message::Done { pieces } => {
-                    ensure!(
-                        got == pieces,
-                        "recovery collect: got {got}, done says {pieces}: {}",
-                        CommError::CorruptFrame
-                    );
-                    break;
-                }
-                other => {
-                    bail!("recovery collect: unexpected {other:?}: {}", CommError::CorruptFrame)
-                }
+        match recovery.adopt(r, payload, timeout) {
+            Ok(()) => {
+                m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+                m.scatter_sent_bytes += payload.len();
+                m.messages += 1;
+                adopted.push(r);
+            }
+            Err(_) => {
+                m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+                // gone too: its own children may still be alive and waiting
+                frontier.extend(topo.children(r));
             }
         }
     }
-    // every recovered component needs a source before the canonical merge
-    for c in rec.components() {
-        match orig_index.get(&c.levels) {
-            Some(i) => ensure!(
-                bucket.contains_key(i),
-                "recovered component {} (original grid {i}) missing from the survivors: {}",
-                c.levels,
-                CommError::CorruptFrame
-            ),
-            None => ensure!(
-                opts.recovery_seed.is_some(),
-                "re-planned component {} is outside the original scheme and no recovery \
-                 seed is set — cannot regenerate it deterministically",
-                c.levels
-            ),
-        }
-    }
-    // canonical merge over the RECOVERED scheme
-    let rw = weights(&rec);
-    let bopts = batch_opts(opts, false);
-    let t0 = Instant::now();
-    let full = canon_partial(&rw, 0, rec.len(), &mut |j| {
-        let c = &rec.components()[j];
-        match orig_index.get(&c.levels) {
-            Some(i) => bucket.remove(i).expect("validated above"),
-            None => {
-                // inclusion–exclusion on the shrunk index set can activate
-                // interior grids the original scheme weighted zero — no
-                // rank ever computed them; rebuild from the seed
-                let g = seeded_component_grid(&c.levels, opts.recovery_seed.expect("validated"));
-                let mut block = [g];
-                hierarchize_slice(&rec, j, &mut block, &bopts);
-                let mut sg = SparseGrid::new();
-                sg.gather(&block[0], c.coeff);
-                sg
-            }
-        }
-    })
-    .unwrap_or_default();
-    debug_assert!(bucket.is_empty(), "unconsumed recovery pieces");
-    m.compute_secs += t0.elapsed().as_secs_f64();
-    Ok((full, report))
+    adopted.sort_unstable();
+    adopted
 }
 
 /// Run one rank of the reduction: local compute, gather up the tree,
@@ -1017,14 +1406,22 @@ pub fn run_rank(
         c.set_send_deadline(Some(leash))?;
     }
 
-    let victim = opts.chaos.filter(|s| s.rank == rank);
+    let victim = opts.chaos.for_rank(rank);
 
     // ---- local compute (streaming ranks overlap their sends with it) ----
     let streaming =
         opts.overlap && links.children.is_empty() && links.parent.is_some() && victim.is_none();
     let mut mine: Option<SparseGrid> = None;
     if streaming {
-        stream_and_send(links.parent.as_mut().unwrap().as_mut(), scheme, lo, grids, opts, &mut m)?;
+        stream_and_send(
+            links.parent.as_mut().unwrap().as_mut(),
+            scheme,
+            lo,
+            grids,
+            opts,
+            leash,
+            &mut m,
+        )?;
     } else {
         let t0 = Instant::now();
         if !grids.is_empty() {
@@ -1037,13 +1434,22 @@ pub fn run_rank(
     // ---- gather: merge children (round order), detect failures ----
     let child_ids = topo.children(rank);
     let mut dead: Vec<usize> = Vec::new();
+    let mut events: Vec<FaultEvent> = Vec::new();
     for (link, &child) in links.children.iter_mut().zip(&child_ids) {
         match recv_subtree(link.as_mut(), scheme, &w, ranges[child], timeout, &mut m) {
             Ok(Gathered::Partial(sub)) => {
                 // receiver (lower canonical range) stays the left operand
                 mine = merge_opt(mine, sub);
             }
-            Ok(Gathered::Failed(d)) => dead.extend(d),
+            Ok(Gathered::Failed(d)) => {
+                events.push(FaultEvent {
+                    epoch: 0,
+                    phase: FaultPhase::Gather,
+                    dead: d.clone(),
+                    adopted: Vec::new(),
+                });
+                dead.extend(d);
+            }
             Err(e) => {
                 if CommError::classify(&e).is_none() {
                     // not a peer-liveness failure: an internal error, which
@@ -1051,7 +1457,14 @@ pub fn run_rank(
                     return Err(e.context(format!("rank {rank}: receiving from child {child}")));
                 }
                 // slow, dead or garbling child: its whole subtree is lost
-                dead.extend(subtree_ranks(&topo, child));
+                let lost = subtree_ranks(&topo, child);
+                events.push(FaultEvent {
+                    epoch: 0,
+                    phase: FaultPhase::Gather,
+                    dead: lost.clone(),
+                    adopted: Vec::new(),
+                });
+                dead.extend(lost);
             }
         }
     }
@@ -1069,7 +1482,7 @@ pub fn run_rank(
             m.gather_comm_secs += t0.elapsed().as_secs_f64();
             m.gather_sent_bytes += payload.len();
             m.messages += 1;
-        } else if let Some(spec) = victim {
+        } else if let Some(spec) = victim.filter(|s| s.kind.at_gather_send()) {
             // the injection point: this rank's subtree contribution is due
             let empty = SparseGrid::new();
             let payload = wire::encode_partial(mine.as_ref().unwrap_or(&empty), dim);
@@ -1084,34 +1497,91 @@ pub fn run_rank(
             m.messages += 1;
         }
     }
+    if let Some(spec) = victim.filter(|s| s.kind == ChaosKind::KillDuringScatter) {
+        // dies between its gather contribution and the scatter wait: the
+        // data is safe in the result, but the parent's broadcast send will
+        // fail typed and this rank's subtree must be adopted
+        return Err(chaos::die_at(&spec, "the scatter wait"));
+    }
 
     // ---- scatter: receive the reduced grid (or a re-plan), broadcast ----
     let mut fault: Option<FaultReport> = None;
+    let mut epochs_seen: u32 = 0;
+    let mut adopted_orphan = false;
     let full = if topo.parent(rank).is_some() {
         loop {
             let buf = {
                 let parent = links.parent.as_mut().unwrap();
                 let t0 = Instant::now();
-                let buf = parent
-                    .recv_timeout(leash)
-                    .with_context(|| format!("rank {rank}: waiting for the scatter"))?;
+                let got = parent.recv_timeout(leash);
                 m.scatter_comm_secs += t0.elapsed().as_secs_f64();
-                m.scatter_recv_bytes += buf.len();
-                m.messages += 1;
-                buf
+                match got {
+                    Ok(buf) => {
+                        m.scatter_recv_bytes += buf.len();
+                        m.messages += 1;
+                        buf
+                    }
+                    Err(e) => {
+                        if CommError::classify(&e).is_none() || adopted_orphan {
+                            return Err(
+                                e.context(format!("rank {rank}: waiting for the scatter"))
+                            );
+                        }
+                        // the parent died after merging our contribution:
+                        // if that happened during the broadcast, an
+                        // ancestor re-routes the payload to our adoption
+                        // inbox; if our whole subtree is condemned instead,
+                        // nobody comes and this wait fails typed
+                        let t0 = Instant::now();
+                        let buf = links.recovery.recv(leash).with_context(|| {
+                            format!("rank {rank}: orphaned in the scatter, no adopter came")
+                        })?;
+                        m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+                        m.scatter_recv_bytes += buf.len();
+                        m.messages += 1;
+                        adopted_orphan = true;
+                        buf
+                    }
+                }
             };
             match wire::decode(&buf).map_err(|e| corrupt(e, "scatter decode"))? {
                 Message::Partial(sg) => break sg,
                 Message::Replan { dead: plan } => {
                     ensure!(
-                        fault.is_none(),
-                        "second re-plan in one reduction: {}",
+                        !adopted_orphan,
+                        "re-plan through the adoption channel: {}",
                         CommError::CorruptFrame
                     );
                     ensure!(!plan.is_empty(), "empty re-plan: {}", CommError::CorruptFrame);
-                    fault = Some(child_recovery(
-                        scheme, &topo, rank, lo, grids, links, &plan, timeout, &mut m,
-                    )?);
+                    epochs_seen += 1;
+                    ensure!(
+                        epochs_seen <= opts.max_fault_epochs.max(1),
+                        "rank {rank}: re-plan epoch {epochs_seen} past max_fault_epochs {}: {}",
+                        opts.max_fault_epochs.max(1),
+                        CommError::EpochsExhausted
+                    );
+                    if let Some(spec) = victim.filter(|s| s.kind == ChaosKind::KillDuringReplan)
+                    {
+                        // dies with the re-plan in hand, before forwarding
+                        // it: the parent's next collect condemns this
+                        // subtree and the root starts another epoch
+                        return Err(chaos::die_at(&spec, "forwarding the re-plan"));
+                    }
+                    let mut report = child_recovery(
+                        scheme,
+                        &topo,
+                        rank,
+                        lo,
+                        grids,
+                        links,
+                        &plan,
+                        epochs_seen,
+                        &mut events,
+                        timeout,
+                        &mut m,
+                    )?;
+                    report.epochs = epochs_seen;
+                    fault = Some(report);
                 }
                 other => bail!(
                     "scatter expected a partial or re-plan, got {other:?}: {}",
@@ -1120,8 +1590,20 @@ pub fn run_rank(
             }
         }
     } else if replan {
-        let (f, report) =
-            root_recover(scheme, &topo, &ranges, lo, grids, links, opts, &dead, timeout, &mut m)?;
+        let (f, report) = root_recover(
+            scheme,
+            &topo,
+            &ranges,
+            lo,
+            grids,
+            links,
+            opts,
+            &dead,
+            timeout,
+            &mut events,
+            &mut m,
+        )?;
+        epochs_seen = report.epochs;
         fault = Some(report);
         f
     } else {
@@ -1130,15 +1612,40 @@ pub fn run_rank(
     let dead_now: Vec<usize> =
         fault.as_ref().map(|f| f.dead_ranks.clone()).unwrap_or_else(|| dead.clone());
     let payload = wire::encode_partial(&full, dim);
-    for (link, &child) in links.children.iter_mut().zip(&child_ids).rev() {
+    let RankLinks { children, recovery, .. } = links;
+    for (link, &child) in children.iter_mut().zip(&child_ids).rev() {
         if dead_now.contains(&child) {
+            // data-dead: the whole subtree is dead with it (subtree-closed),
+            // nobody below is waiting
             continue;
         }
         let t0 = Instant::now();
-        link.send(&payload).with_context(|| format!("rank {rank}: scatter to child {child}"))?;
-        m.scatter_comm_secs += t0.elapsed().as_secs_f64();
-        m.scatter_sent_bytes += payload.len();
-        m.messages += 1;
+        match link.send(&payload) {
+            Ok(()) => {
+                m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+                m.scatter_sent_bytes += payload.len();
+                m.messages += 1;
+            }
+            Err(e) => {
+                m.scatter_comm_secs += t0.elapsed().as_secs_f64();
+                if CommError::classify(&e).is_none() {
+                    return Err(
+                        e.context(format!("rank {rank}: scatter to child {child}"))
+                    );
+                }
+                // the child died after contributing its partial — the data
+                // is in the result, so this is purely a routing repair:
+                // hand the payload to its surviving descendants directly
+                let adopted =
+                    reroute_scatter(&topo, child, &dead_now, &payload, recovery, timeout, &mut m);
+                events.push(FaultEvent {
+                    epoch: epochs_seen,
+                    phase: FaultPhase::Scatter,
+                    dead: vec![child],
+                    adopted,
+                });
+            }
+        }
     }
 
     // ---- apply locally: per-grid sampling + dehierarchization ----
@@ -1151,6 +1658,17 @@ pub fn run_rank(
         }
         dehierarchize_slice(scheme, lo, grids, &batch_opts(opts, true));
         m.dehier_secs = t0.elapsed().as_secs_f64();
+    }
+    if let Some(f) = fault.as_mut() {
+        f.events = std::mem::take(&mut events);
+    } else if events.iter().any(|e| e.phase == FaultPhase::Scatter) {
+        // routing-only repairs: ranks died *after* contributing, so the
+        // result is bitwise the fault-free one — but the deaths and
+        // adoptions go on record.  (A replan-less gather event alone — an
+        // empty-block rank dying — stays silent, as before.)
+        let mut f = FaultReport::routing_only();
+        f.events = std::mem::take(&mut events);
+        fault = Some(f);
     }
     m.fault = fault;
     Ok((full, m))
@@ -1195,9 +1713,26 @@ pub fn reduce_in_process(
         debug_assert_eq!(cursor, scheme.len());
     }
 
+    // adoption endpoints: every rank gets an inbox plus clones of every
+    // sender, so any ancestor can re-route a scatter payload to any
+    // orphan; a dead rank's dropped inbox makes adoption fail fast
+    let mut adoption_senders: Vec<SyncSender<Vec<u8>>> = Vec::with_capacity(ranks);
+    let mut adoption_inboxes: Vec<Receiver<Vec<u8>>> = Vec::with_capacity(ranks);
+    for _ in 0..ranks {
+        let (tx, rx) = sync_channel::<Vec<u8>>(4);
+        adoption_senders.push(tx);
+        adoption_inboxes.push(rx);
+    }
+    let peers = Arc::new(adoption_senders);
+
     // transports per tree edge
-    let mut links: Vec<RankLinks> = (0..ranks)
-        .map(|_| RankLinks { parent: None, children: Vec::new() })
+    let mut links: Vec<RankLinks> = adoption_inboxes
+        .into_iter()
+        .map(|inbox| RankLinks {
+            parent: None,
+            children: Vec::new(),
+            recovery: RecoveryHub::InProcess { inbox, peers: Arc::clone(&peers) },
+        })
         .collect();
     for round in topo.rounds() {
         for &(s, r) in round {
@@ -1254,7 +1789,7 @@ pub fn reduce_in_process(
         let dead: Vec<usize> =
             m0.fault.as_ref().map(|f| f.dead_ranks.clone()).unwrap_or_default();
         for (rank, e) in failures {
-            let injected = opts.chaos.is_some_and(|spec| spec.rank == rank);
+            let injected = opts.chaos.for_rank(rank).is_some();
             if !injected && !dead.contains(&rank) {
                 return Err(
                     e.context(format!("rank {rank} failed without a matching fault report"))
@@ -1294,6 +1829,17 @@ pub fn unique_run_dir(seed: u64) -> PathBuf {
 /// accept the children in round order.
 pub fn unix_links(dir: &Path, rank: usize, ranks: usize, timeout: Duration) -> Result<RankLinks> {
     let topo = Topology::new(ranks);
+    // the adoption endpoint binds eagerly too: an ancestor may dial it the
+    // moment a scatter send fails, long before this rank notices it is
+    // orphaned — the listener backlog holds that connection until then
+    // (the root has no parent to lose, so it keeps no listener)
+    let recovery = RecoveryHub::Unix {
+        dir: dir.to_path_buf(),
+        listener: match topo.parent(rank) {
+            None => None,
+            Some(_) => Some(UnixSocket::bind(&adopt_path(dir, rank))?),
+        },
+    };
     let listeners: Vec<_> = topo
         .children(rank)
         .iter()
@@ -1312,7 +1858,7 @@ pub fn unix_links(dir: &Path, rank: usize, ranks: usize, timeout: Duration) -> R
             UnixSocket::accept_timeout(l, timeout).map(|s| Box::new(s) as Box<dyn Transport>)
         })
         .collect::<Result<_>>()?;
-    Ok(RankLinks { parent, children })
+    Ok(RankLinks { parent, children, recovery })
 }
 
 /// Build the deterministic component grids of one rank's block: the same
@@ -1333,7 +1879,7 @@ pub fn seeded_block(scheme: &CombinationScheme, lo: usize, hi: usize, seed: u64)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::chaos::ChaosKind;
+    use crate::comm::chaos::{ChaosKind, ChaosSpec};
     use crate::util::rng::SplitMix64;
 
     #[test]
@@ -1518,22 +2064,23 @@ mod tests {
         assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
     }
 
-    /// Every chaos kind at a fixed tree position: the reduction completes,
-    /// reports the victim, and the degraded sparse grid is bitwise equal
-    /// to `reduce_local` on the recovered scheme with the deterministic
-    /// recovery inputs.
+    /// Every gather-phase chaos kind at a fixed tree position: the
+    /// reduction completes, reports the victim, and the degraded sparse
+    /// grid is bitwise equal to `reduce_local` on the recovered scheme
+    /// with the deterministic recovery inputs.  (The late-phase kinds get
+    /// their own multi-epoch and scatter tests below.)
     #[test]
     fn chaos_kills_recover_bitwise_to_the_recovered_reference() {
         let scheme = CombinationScheme::regular(2, 4);
         let n = scheme.len();
         let seed = 4242u64;
         let ranks = 4usize;
-        for kind in ChaosKind::ALL {
+        for kind in ChaosKind::GATHER {
             let spec = ChaosSpec { seed: 9, kind, rank: 2 };
             let opts = ReduceOptions {
                 scatter_back: false,
                 timeout_ms: Some(250),
-                chaos: Some(spec),
+                chaos: ChaosSet::one(spec),
                 recovery_seed: Some(seed),
                 ..Default::default()
             };
@@ -1544,6 +2091,17 @@ mod tests {
             let report = root.fault.as_ref().unwrap_or_else(|| panic!("{kind:?}: no report"));
             assert!(report.dead_ranks.contains(&2), "{kind:?}: {:?}", report.dead_ranks);
             assert!(!report.failed.is_empty(), "{kind:?}: no failed grids");
+            assert_eq!(report.epochs, 1, "{kind:?}: one fault, one recovery epoch");
+            assert!(
+                report
+                    .events
+                    .iter()
+                    .any(|e| e.epoch == 0
+                        && e.phase == FaultPhase::Gather
+                        && e.dead.contains(&2)),
+                "{kind:?}: missing gather event: {:?}",
+                report.events
+            );
             let (rec, _) = recovered_scheme(&scheme, ranks, &report.dead_ranks).unwrap();
             let mut reference = seeded_recovery_block(&scheme, &rec, seed);
             let want = reduce_local(&rec, &mut reference, &ReduceOptions {
@@ -1573,7 +2131,11 @@ mod tests {
         let want = reduce_local(&scheme, &mut reference, &base);
         let opts = ReduceOptions {
             timeout_ms: Some(250),
-            chaos: Some(ChaosSpec { seed: 1, kind: ChaosKind::KillBeforeSend, rank: victim }),
+            chaos: ChaosSet::one(ChaosSpec {
+                seed: 1,
+                kind: ChaosKind::KillBeforeSend,
+                rank: victim,
+            }),
             recovery_seed: Some(77),
             ..base
         };
@@ -1582,5 +2144,143 @@ mod tests {
         assert!(got.bitwise_eq(&want), "empty-rank death perturbed the sum");
         let root = ms.iter().find(|m| m.rank == 0).unwrap();
         assert!(root.fault.is_none(), "no components lost, no re-plan expected");
+    }
+
+    /// A rank dying between its gather send and the scatter wait loses no
+    /// data — the broadcast is re-routed to its surviving descendants over
+    /// the adoption endpoints, the result stays bitwise the CLEAN
+    /// reference, and the report carries only routing events.
+    #[test]
+    fn kill_during_scatter_reroutes_to_surviving_descendants() {
+        let scheme = CombinationScheme::regular(3, 4);
+        let n = scheme.len();
+        let seed = 99u64;
+        let ranks = 8usize;
+        let base = ReduceOptions { scatter_back: false, ..Default::default() };
+        let mut reference = seeded_block(&scheme, 0, n, seed);
+        let want = reduce_local(&scheme, &mut reference, &base);
+        for transport in [PairTransport::Channel, PairTransport::UnixPair] {
+            // rank 1's subtree is {1,3,5,7}: killing it in the scatter
+            // orphans three alive ranks that must all still be served
+            let opts = ReduceOptions {
+                pair_transport: transport,
+                timeout_ms: Some(300),
+                chaos: ChaosSet::one(ChaosSpec {
+                    seed: 5,
+                    kind: ChaosKind::KillDuringScatter,
+                    rank: 1,
+                }),
+                recovery_seed: Some(seed),
+                ..base
+            };
+            let mut grids = seeded_block(&scheme, 0, n, seed);
+            let (got, ms) = reduce_in_process(&scheme, &mut grids, ranks, &opts)
+                .unwrap_or_else(|e| panic!("{transport:?}: {e:#}"));
+            assert!(got.bitwise_eq(&want), "{transport:?}: scatter kill perturbed the sum");
+            let root = ms.iter().find(|m| m.rank == 0).expect("root measured");
+            let report = root.fault.as_ref().expect("routing repair must be on record");
+            assert!(
+                report.dead_ranks.is_empty(),
+                "{transport:?}: a scatter death is not a data death: {:?}",
+                report.dead_ranks
+            );
+            assert_eq!(report.epochs, 0, "{transport:?}: no re-plan ran");
+            let scatter: Vec<&FaultEvent> =
+                report.events.iter().filter(|e| e.phase == FaultPhase::Scatter).collect();
+            assert_eq!(scatter.len(), 1, "{transport:?}: {:?}", report.events);
+            assert_eq!(scatter[0].dead, vec![1], "{transport:?}");
+            // the root adopts the victim's direct children; rank 7 is then
+            // served by its own (adopted) parent 3 over the normal link
+            assert_eq!(scatter[0].adopted, vec![3, 5], "{transport:?}");
+            for r in [3usize, 5, 7] {
+                assert!(ms.iter().any(|m| m.rank == r), "{transport:?}: rank {r} lost");
+            }
+        }
+    }
+
+    /// Two faults in two distinct epochs: a gather-phase kill triggers the
+    /// first re-plan, and a second rank dying the moment that re-plan
+    /// reaches it forces a second epoch over the grown dead set.  The
+    /// degraded result is bitwise `reduce_local` on the FINAL recovered
+    /// scheme.
+    #[test]
+    fn kill_during_replan_condemns_subtree_in_second_epoch() {
+        let scheme = CombinationScheme::regular(3, 4);
+        let n = scheme.len();
+        let seed = 314u64;
+        let ranks = 8usize;
+        let mut set =
+            ChaosSet::one(ChaosSpec { seed: 3, kind: ChaosKind::KillBeforeSend, rank: 4 });
+        set.push(ChaosSpec { seed: 3, kind: ChaosKind::KillDuringReplan, rank: 2 }).unwrap();
+        let opts = ReduceOptions {
+            scatter_back: false,
+            timeout_ms: Some(300),
+            chaos: set,
+            recovery_seed: Some(seed),
+            ..Default::default()
+        };
+        let mut grids = seeded_block(&scheme, 0, n, seed);
+        let (got, ms) = reduce_in_process(&scheme, &mut grids, ranks, &opts)
+            .unwrap_or_else(|e| panic!("{e:#}"));
+        let root = ms.iter().find(|m| m.rank == 0).expect("root measured");
+        let report = root.fault.as_ref().expect("two faults, no report");
+        // rank 2 takes its subtree {2,6} with it — rank 6 is alive but its
+        // pieces have no path to the root
+        assert_eq!(report.dead_ranks, vec![2, 4, 6]);
+        assert_eq!(report.epochs, 2, "the second fault must cost a second epoch");
+        assert!(
+            report
+                .events
+                .iter()
+                .any(|e| e.epoch == 0 && e.phase == FaultPhase::Gather && e.dead == vec![4]),
+            "missing the epoch-0 gather event: {:?}",
+            report.events
+        );
+        assert!(
+            report
+                .events
+                .iter()
+                .any(|e| e.epoch == 1 && e.phase == FaultPhase::Collect && e.dead == vec![2, 6]),
+            "missing the epoch-1 collect event: {:?}",
+            report.events
+        );
+        let (rec, _) = recovered_scheme(&scheme, ranks, &report.dead_ranks).unwrap();
+        let mut reference = seeded_recovery_block(&scheme, &rec, seed);
+        let want = reduce_local(&rec, &mut reference, &ReduceOptions {
+            scatter_back: false,
+            ..Default::default()
+        });
+        assert!(got.bitwise_eq(&want), "two-epoch degraded result diverged");
+    }
+
+    /// Exceeding the epoch budget fails with the typed
+    /// `CommError::EpochsExhausted` — never a hang, and never mistaken for
+    /// a dead peer by the fault-detection classifier.
+    #[test]
+    fn exceeding_max_fault_epochs_fails_typed() {
+        let scheme = CombinationScheme::regular(3, 4);
+        let n = scheme.len();
+        let mut set =
+            ChaosSet::one(ChaosSpec { seed: 3, kind: ChaosKind::KillBeforeSend, rank: 4 });
+        set.push(ChaosSpec { seed: 3, kind: ChaosKind::KillDuringReplan, rank: 2 }).unwrap();
+        let opts = ReduceOptions {
+            scatter_back: false,
+            timeout_ms: Some(200),
+            chaos: set,
+            // the second fault needs epoch 2 — over this budget
+            max_fault_epochs: 1,
+            recovery_seed: Some(11),
+            ..Default::default()
+        };
+        let mut grids = seeded_block(&scheme, 0, n, 11);
+        let err = reduce_in_process(&scheme, &mut grids, 8, &opts).unwrap_err();
+        assert_eq!(
+            CommError::classify_any(&err),
+            Some(CommError::EpochsExhausted),
+            "{err:#}"
+        );
+        // the liveness classifier must NOT see it (it would feed the abort
+        // back into fault detection as another dead peer)
+        assert_eq!(CommError::classify(&err), None, "{err:#}");
     }
 }

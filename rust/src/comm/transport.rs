@@ -46,6 +46,12 @@ pub enum CommError {
     PeerClosed,
     /// The peer sent bytes that failed frame or `wire` validation.
     CorruptFrame,
+    /// The run burned through `ReduceOptions::max_fault_epochs` recovery
+    /// passes without converging — too many ranks died.  **Not** a
+    /// peer-liveness class: [`classify`](Self::classify) ignores it, so a
+    /// capped-out recovery aborts typed instead of being mistaken for yet
+    /// another dead peer.
+    EpochsExhausted,
 }
 
 impl CommError {
@@ -55,18 +61,36 @@ impl CommError {
             CommError::PeerTimeout => "[comm: peer-timeout]",
             CommError::PeerClosed => "[comm: peer-closed]",
             CommError::CorruptFrame => "[comm: corrupt-frame]",
+            CommError::EpochsExhausted => "[comm: epochs-exhausted]",
         }
     }
 
-    /// Recover the failure class from an error chain, however deeply the
-    /// reduction code wrapped it with context.  `None` for errors that did
-    /// not originate in the transport/wire layer (internal bugs propagate
-    /// instead of being mistaken for a dead peer).
+    /// Recover the *peer-liveness* failure class from an error chain,
+    /// however deeply the reduction code wrapped it with context.  `None`
+    /// for errors that did not originate in the transport/wire layer
+    /// (internal bugs propagate instead of being mistaken for a dead
+    /// peer) — including [`CommError::EpochsExhausted`], which must abort
+    /// the run rather than feed back into fault detection.
     pub fn classify(e: &anyhow::Error) -> Option<CommError> {
         let chain = format!("{e:#}");
         [CommError::PeerTimeout, CommError::PeerClosed, CommError::CorruptFrame]
             .into_iter()
             .find(|c| chain.contains(c.tag()))
+    }
+
+    /// Recover *any* comm class from an error chain, including the
+    /// non-liveness [`CommError::EpochsExhausted`].  For reporting and
+    /// tests; fault-detection paths use [`classify`](Self::classify).
+    pub fn classify_any(e: &anyhow::Error) -> Option<CommError> {
+        let chain = format!("{e:#}");
+        [
+            CommError::PeerTimeout,
+            CommError::PeerClosed,
+            CommError::CorruptFrame,
+            CommError::EpochsExhausted,
+        ]
+        .into_iter()
+        .find(|c| chain.contains(c.tag()))
     }
 }
 
@@ -76,6 +100,9 @@ impl fmt::Display for CommError {
             CommError::PeerTimeout => write!(f, "{} peer deadline expired", self.tag()),
             CommError::PeerClosed => write!(f, "{} peer endpoint closed", self.tag()),
             CommError::CorruptFrame => write!(f, "{} frame failed validation", self.tag()),
+            CommError::EpochsExhausted => {
+                write!(f, "{} fault-epoch budget exhausted", self.tag())
+            }
         }
     }
 }
@@ -519,6 +546,14 @@ mod tests {
         let wrapped = e.context("while receiving from child 3").context("rank 0");
         assert_eq!(CommError::classify(&wrapped), Some(CommError::CorruptFrame));
         assert_eq!(CommError::classify(&anyhow::anyhow!("unrelated")), None);
+    }
+
+    #[test]
+    fn epochs_exhausted_is_typed_but_not_a_liveness_class() {
+        // the epoch cap must abort the run, not look like a dead peer
+        let e = anyhow::anyhow!("recovery: {}", CommError::EpochsExhausted).context("rank 0");
+        assert_eq!(CommError::classify(&e), None, "{e:#}");
+        assert_eq!(CommError::classify_any(&e), Some(CommError::EpochsExhausted), "{e:#}");
     }
 
     #[test]

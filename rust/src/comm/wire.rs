@@ -28,10 +28,13 @@
 //!   to piece mode.
 //! * **job** — a `sgct serve` request: `id u32`, `job u8`
 //!   (hierarchize / combine / solve / stats / shutdown), `tau u8`,
-//!   `steps u16`, `seed u64`, then `dim` level bytes.  Jobs carry seeds,
-//!   not data: client and daemon re-derive identical component grids from
-//!   the seed (the `comm-worker` convention), so a request is ~32 bytes
-//!   however big the grids are.
+//!   `steps u16`, `seed u64`, then `dim` level bytes, then
+//!   `deadline_ms u32` (0 = no deadline; otherwise the daemon drops the
+//!   job with a typed `expired` rejection if it cannot *start* within
+//!   that many milliseconds of arrival).  Jobs carry seeds, not data:
+//!   client and daemon re-derive identical component grids from the seed
+//!   (the `comm-worker` convention), so a request is ~36 bytes however
+//!   big the grids are.
 //! * **job-ok** — a finished job travelling back: `id u32` + the result
 //!   sparse grid as subspace blocks.
 //! * **job-err** — a typed rejection: `id u32`, `reason u8` (busy /
@@ -136,12 +139,25 @@ pub struct JobSpec {
     pub steps: u16,
     /// Fill seed for the component grids.
     pub seed: u64,
+    /// Per-job start deadline in milliseconds after arrival (0 = none).
+    /// A job still queued when its deadline lapses is rejected with
+    /// [`RejectReason::Expired`] instead of being computed — a slow
+    /// answer to a caller that stopped waiting is pure wasted flops.
+    pub deadline_ms: u32,
 }
 
 impl JobSpec {
     /// A `Stats`/`Shutdown` frame: no grid content, dummy `[1]` levels.
     pub fn control(kind: JobKind) -> Self {
-        JobSpec { id: 0, kind, levels: LevelVector::new(&[1]), tau: 1, steps: 0, seed: 0 }
+        JobSpec {
+            id: 0,
+            kind,
+            levels: LevelVector::new(&[1]),
+            tau: 1,
+            steps: 0,
+            seed: 0,
+            deadline_ms: 0,
+        }
     }
 }
 
@@ -157,6 +173,8 @@ pub enum RejectReason {
     Unsupported,
     /// The job was admitted but failed while executing.
     Internal,
+    /// The job's own `deadline_ms` lapsed while it was still queued.
+    Expired,
 }
 
 impl RejectReason {
@@ -166,6 +184,7 @@ impl RejectReason {
             RejectReason::TooLarge => 2,
             RejectReason::Unsupported => 3,
             RejectReason::Internal => 4,
+            RejectReason::Expired => 5,
         }
     }
 
@@ -175,6 +194,7 @@ impl RejectReason {
             2 => RejectReason::TooLarge,
             3 => RejectReason::Unsupported,
             4 => RejectReason::Internal,
+            5 => RejectReason::Expired,
             other => bail!("unknown reject reason {other}"),
         })
     }
@@ -310,6 +330,9 @@ pub fn encode_job(spec: &JobSpec) -> Vec<u8> {
     out.extend_from_slice(&spec.steps.to_le_bytes());
     out.extend_from_slice(&spec.seed.to_le_bytes());
     out.extend_from_slice(spec.levels.as_slice());
+    // appended after the level bytes so every pre-deadline field keeps its
+    // wire offset (the truncation tests pin those)
+    out.extend_from_slice(&spec.deadline_ms.to_le_bytes());
     seal(out)
 }
 
@@ -466,8 +489,9 @@ pub fn decode(buf: &[u8]) -> Result<Message> {
                 ensure!((1..=30).contains(&l), "job level l_{} = {l} out of range", i + 1);
             }
             let levels = LevelVector::new(levels);
+            let deadline_ms = r.u32()?;
             ensure!(r.pos == buf.len(), "trailing bytes after job spec");
-            Ok(Message::JobRequest(JobSpec { id, kind, levels, tau, steps, seed }))
+            Ok(Message::JobRequest(JobSpec { id, kind, levels, tau, steps, seed, deadline_ms }))
         }
         KIND_JOB_OK => {
             let id = r.u32()?;
@@ -638,6 +662,7 @@ mod tests {
             tau: 2,
             steps: 12,
             seed: 0x1234_5678_9ABC_DEF0,
+            deadline_ms: 2_500,
         };
         let bytes = encode_job(&spec);
         let Message::JobRequest(back) = decode(&bytes).unwrap() else { panic!("wrong kind") };
@@ -671,12 +696,17 @@ mod tests {
             }
             other => panic!("wrong kind {other:?}"),
         }
-        for r in
-            [RejectReason::Busy, RejectReason::TooLarge, RejectReason::Unsupported, RejectReason::Internal]
-        {
+        for r in [
+            RejectReason::Busy,
+            RejectReason::TooLarge,
+            RejectReason::Unsupported,
+            RejectReason::Internal,
+            RejectReason::Expired,
+        ] {
             assert_eq!(RejectReason::from_code(r.code()).unwrap(), r);
         }
         assert!(RejectReason::from_code(0).is_err());
+        assert!(RejectReason::from_code(6).is_err());
 
         let stats = ServeStats {
             jobs_done: 1,
@@ -705,6 +735,7 @@ mod tests {
             tau: 1,
             steps: 4,
             seed: 42,
+            deadline_ms: 0,
         };
         let good = encode_job(&spec);
         for cut in 0..good.len() {

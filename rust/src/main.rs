@@ -40,7 +40,7 @@ fn main() {
         "batch" => run(batch(&args)),
         "bench" => run(bench_cmd(&args)),
         "distributed" => run(distributed(&args)),
-        "reduce" => run(reduce_cmd(&args)),
+        "reduce" => run_code(reduce_cmd(&args)),
         "serve" => run(serve_cmd(&args)),
         "serve-client" => run(serve_client_cmd(&args)),
         // hidden: one rank of a multi-process `sgct reduce --transport unix`
@@ -75,12 +75,13 @@ USAGE:
   sgct bench --levels L1,L2,... [--all]
   sgct distributed --dim D --level N [--max-nodes K]
   sgct reduce --dim D --level N --ranks R [--transport inprocess|unix] [--overlap]
-              [--seed S] [--check] [--threads N] [--fuse-depth K] [--tile-kb KB]
-              [--timeout-ms MS] [--chaos SEED:KIND:RANK]
+              [--seed S] [--check] [--strict] [--threads N] [--fuse-depth K]
+              [--tile-kb KB] [--timeout-ms MS] [--max-fault-epochs E]
+              [--chaos SEED:KIND:RANK[,KIND:RANK...]]
   sgct serve --socket PATH [--workers W] [--queue Q] [--max-flops F] [--job-threads N]
   sgct serve-client --socket PATH [--job hierarchize|combine|solve|stats|shutdown]
                     [--levels L1,L2,...] [--tau T] [--steps T] [--seed S] [--id N]
-                    [--check]
+                    [--deadline-ms MS] [--retries R] [--check]
 
   --socket PATH            serve: Unix-socket endpoint (daemon claims
                            PATH.lock; a live owner refuses a second daemon)
@@ -89,6 +90,13 @@ USAGE:
   --max-flops F            serve: per-job flop budget before TooLarge
   --job hierarchize|combine|solve|stats|shutdown
                            serve-client: what to ask the daemon
+  --deadline-ms MS         serve-client: per-job start deadline; a job still
+                           queued when it lapses is rejected typed (Expired)
+                           instead of computed (0 = none)
+  --retries R              serve-client: absorb transient failures (Busy,
+                           connect failure, timeout) with up to R retries,
+                           exponential backoff + seeded jitter; permanent
+                           rejections still fail immediately
   --transport ...          reduce: inprocess = tree ranks as worker threads,
                            unix = real `comm-worker` processes over
                            Unix-domain sockets (same reduction code)
@@ -101,10 +109,20 @@ USAGE:
   --timeout-ms MS          reduce: per-receive deadline; a dead or wedged
                            peer fails over instead of hanging the tree
                            (default SGCT_COMM_TIMEOUT_MS or 30000)
-  --chaos SEED:KIND:RANK   reduce: inject one seeded fault — RANK dies as
-                           KIND (kill-before-send | kill-mid-frame | stall)
-                           at its gather-send point; the reduction re-plans
-                           online and completes degraded
+  --chaos SEED:KIND:RANK[,KIND:RANK...]
+                           reduce: inject seeded faults — each RANK dies as
+                           its KIND (kill-before-send | kill-mid-frame |
+                           stall | kill-during-replan | kill-during-scatter);
+                           the reduction re-plans online, over multiple
+                           epochs if deaths land in distinct phases, and
+                           completes degraded
+  --max-fault-epochs E     reduce: recovery re-plan passes before the run
+                           fails typed instead of looping (default 3)
+  --strict                 reduce: exit 1 instead of 3 when the run only
+                           completed by surviving a fault
+
+EXIT CODES (reduce): 0 = clean, 1 = failure, 3 = completed degraded or
+  re-routed around dead ranks (0/1 only under --strict)
   --threads N|auto         worker threads (auto = all hardware threads)
   --shard-strategy ...     grid = one component grid per work item,
                            pole = shard each grid pole-wise across the pool,
@@ -122,6 +140,22 @@ USAGE:
 fn run(r: Result<()>) -> i32 {
     match r {
         Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+/// `sgct reduce` completing despite rank deaths exits with this code, so
+/// scripts can tell "clean" (0) from "survived a fault" (3) from "failed"
+/// (1) without scraping stdout.  `--strict` turns 3 into 1.
+const EXIT_DEGRADED: i32 = 3;
+
+/// Like [`run`] for subcommands with a documented non-zero success code.
+fn run_code(r: Result<i32>) -> i32 {
+    match r {
+        Ok(code) => code,
         Err(e) => {
             eprintln!("error: {e:#}");
             1
@@ -494,8 +528,8 @@ fn distributed(args: &Args) -> Result<()> {
 /// Parse the reduce/comm-worker options shared by both subcommands.
 fn reduce_opts(args: &Args) -> Result<sgct::comm::ReduceOptions> {
     let chaos = match args.opt("chaos") {
-        Some(s) => Some(sgct::comm::ChaosSpec::parse(&s).context("--chaos")?),
-        None => None,
+        Some(s) => sgct::comm::ChaosSet::parse(&s).context("--chaos")?,
+        None => sgct::comm::ChaosSet::none(),
     };
     let timeout_ms = match args.opt("timeout-ms") {
         Some(s) => Some(
@@ -509,6 +543,7 @@ fn reduce_opts(args: &Args) -> Result<sgct::comm::ReduceOptions> {
         fuse: fuse_opts(args)?,
         timeout_ms,
         chaos,
+        max_fault_epochs: args.get("max-fault-epochs", 3u32)?,
         // the seeded problem is regenerable, so a re-plan may activate
         // components nobody computed and still complete deterministically
         recovery_seed: Some(args.get("seed", 42u64)?),
@@ -522,8 +557,10 @@ fn reduce_opts(args: &Args) -> Result<sgct::comm::ReduceOptions> {
 /// channels or Unix-domain sockets between spawned `comm-worker` ranks.
 /// Prints measured bytes/time next to the `coordinator::distributed`
 /// prediction; `--check` verifies bitwise equality with the single-process
-/// canonical reference.
-fn reduce_cmd(args: &Args) -> Result<()> {
+/// canonical reference.  Returns the documented exit code: 0 clean,
+/// [`EXIT_DEGRADED`] when the run only completed by surviving a fault
+/// (unless `--strict` turns that into a failure).
+fn reduce_cmd(args: &Args) -> Result<i32> {
     use sgct::coordinator::distributed::{estimate, place, NetModel};
 
     let dim = args.get("dim", 4usize)?;
@@ -550,7 +587,7 @@ fn reduce_cmd(args: &Args) -> Result<()> {
             // and dropped components leave the survivors' subspace sets
             // wider than the degraded sparse grid — the projection
             // fixpoint only applies to the fault-free run
-            if args.flag("check") && opts.chaos.is_none() {
+            if args.flag("check") && opts.chaos.is_empty() {
                 verify_projection(&scheme, 0, &grids, &out.0)?;
             }
             out
@@ -582,15 +619,32 @@ fn reduce_cmd(args: &Args) -> Result<()> {
     t.print();
     let fault = measured.iter().find(|m| m.rank == 0).and_then(|m| m.fault.clone());
     if let Some(f) = &fault {
-        println!(
-            "FAULT SURVIVED: lost ranks {:?} -> {} failed + {} cascaded grids; \
-             re-planned online to {} components ({} grids were in the original scheme)",
-            f.dead_ranks,
-            f.failed.len(),
-            f.cascaded.len(),
-            f.components.len(),
-            scheme.len(),
-        );
+        if f.dead_ranks.is_empty() {
+            println!(
+                "FAULT SURVIVED: scatter-phase death(s) re-routed to surviving \
+                 descendants; no data lost"
+            );
+        } else {
+            println!(
+                "FAULT SURVIVED: lost ranks {:?} over {} recovery epoch(s) -> {} failed \
+                 + {} cascaded grids; re-planned online to {} components ({} grids were \
+                 in the original scheme)",
+                f.dead_ranks,
+                f.epochs,
+                f.failed.len(),
+                f.cascaded.len(),
+                f.components.len(),
+                scheme.len(),
+            );
+        }
+        for e in &f.events {
+            let adopted = if e.adopted.is_empty() {
+                String::new()
+            } else {
+                format!(" -> adopted {:?}", e.adopted)
+            };
+            println!("  epoch {} [{}]: dead {:?}{adopted}", e.epoch, e.phase.name(), e.dead);
+        }
     }
     let gather_meas: usize = measured.iter().map(|m| m.gather_sent_bytes).sum();
     let scatter_meas: usize = measured.iter().map(|m| m.scatter_sent_bytes).sum();
@@ -625,9 +679,22 @@ fn reduce_cmd(args: &Args) -> Result<()> {
                     "check: bitwise identical to the single-process canonical reference — OK"
                 );
             }
+            Some(f) if f.dead_ranks.is_empty() => {
+                // scatter-only fault: the routing changed, the data did
+                // not — the clean reference is still the contract
+                let mut reference = sgct::comm::seeded_block(&scheme, 0, scheme.len(), seed);
+                let want = sgct::comm::reduce_local(&scheme, &mut reference, &opts);
+                anyhow::ensure!(
+                    sparse.bitwise_eq(&want),
+                    "re-routed sparse grid differs from the single-process reference"
+                );
+                println!(
+                    "check: bitwise identical to the single-process canonical reference — OK"
+                );
+            }
             Some(f) => {
                 // degraded run: the contract is bitwise equality with the
-                // canonical reference on the RECOVERED scheme
+                // canonical reference on the FINAL recovered scheme
                 let (rec, _) = sgct::comm::recovered_scheme(&scheme, ranks, &f.dead_ranks)?;
                 let mut reference = sgct::comm::seeded_recovery_block(&scheme, &rec, seed);
                 let want = sgct::comm::reduce_local(&rec, &mut reference, &opts);
@@ -641,7 +708,18 @@ fn reduce_cmd(args: &Args) -> Result<()> {
             }
         }
     }
-    Ok(())
+    if let Some(f) = &fault {
+        if args.flag("strict") {
+            bail!(
+                "--strict: the run only completed by surviving a fault (dead ranks {:?}, \
+                 {} recovery epoch(s))",
+                f.dead_ranks,
+                f.epochs
+            );
+        }
+        return Ok(EXIT_DEGRADED);
+    }
+    Ok(0)
 }
 
 /// Multi-process path of `sgct reduce --transport unix`: spawn ranks
@@ -684,16 +762,16 @@ fn reduce_unix(
             cmd.arg("--overlap");
         }
         // the projection fixpoint only holds fault-free (see reduce_cmd)
-        if args.flag("check") && opts.chaos.is_none() {
+        if args.flag("check") && opts.chaos.is_empty() {
             cmd.arg("--check");
         }
-        if let Some(spec) = &opts.chaos {
-            cmd.arg("--chaos").arg(spec.to_arg());
+        if !opts.chaos.is_empty() {
+            cmd.arg("--chaos").arg(opts.chaos.to_arg());
         }
         if let Some(ms) = opts.timeout_ms {
             cmd.arg("--timeout-ms").arg(ms.to_string());
         }
-        for key in ["fuse-depth", "tile-kb", "convert"] {
+        for key in ["fuse-depth", "tile-kb", "convert", "max-fault-epochs"] {
             if let Some(v) = args.opt(key) {
                 cmd.arg(format!("--{key}")).arg(v);
             }
@@ -706,7 +784,7 @@ fn reduce_unix(
         let mut links =
             sgct::comm::unix_links(&dir, 0, ranks, std::time::Duration::from_secs(30))?;
         let (sparse, m0) = sgct::comm::run_rank(scheme, 0, ranks, &mut grids, &mut links, opts)?;
-        if args.flag("check") && opts.chaos.is_none() {
+        if args.flag("check") && opts.chaos.is_empty() {
             verify_projection(scheme, lo, &grids, &sparse)?;
         }
         Ok((sparse, vec![m0]))
@@ -727,7 +805,7 @@ fn reduce_unix(
     // ourselves (chaos injection) are expected; anything else is a failure
     let dead: Vec<usize> =
         out.1.first().and_then(|m| m.fault.as_ref()).map(|f| f.dead_ranks.clone()).unwrap_or_default();
-    failed.retain(|r| !dead.contains(r) && opts.chaos.map_or(true, |s| s.rank != *r));
+    failed.retain(|r| !dead.contains(r) && opts.chaos.for_rank(*r).is_none());
     anyhow::ensure!(failed.is_empty(), "comm workers failed unexpectedly: ranks {failed:?}");
     Ok(out)
 }
@@ -865,9 +943,18 @@ fn serve_client_cmd(args: &Args) -> Result<()> {
                 tau: args.get("tau", 1u8)?,
                 steps: args.get("steps", 2u16)?,
                 seed: args.get("seed", 42u64)?,
+                deadline_ms: args.get("deadline-ms", 0u32)?,
             };
             let t0 = std::time::Instant::now();
-            let result = client.run(&spec)?;
+            let result = if args.opt("retries").is_some() {
+                let policy = sgct::serve::RetryPolicy {
+                    max_retries: args.get("retries", 5u32)?,
+                    ..Default::default()
+                };
+                client.run_retry(&spec, &policy)?
+            } else {
+                client.run(&spec)?
+            };
             println!(
                 "job {}: {} subspaces, {} points in {}",
                 spec.id,

@@ -162,7 +162,7 @@ mod tests {
     use crate::comm::transport::MAX_FRAME;
 
     fn spec(kind: JobKind, levels: &[u8], tau: u8, seed: u64) -> JobSpec {
-        JobSpec { id: 1, kind, levels: LevelVector::new(levels), tau, steps: 2, seed }
+        JobSpec { id: 1, kind, levels: LevelVector::new(levels), tau, steps: 2, seed, deadline_ms: 0 }
     }
 
     #[test]

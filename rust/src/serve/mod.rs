@@ -39,14 +39,57 @@ mod server;
 
 pub use server::{ServeConfig, ServerHandle};
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::comm::transport::{Transport, UnixSocket};
-use crate::comm::wire::{self, JobSpec, Message, ServeStats};
+use crate::comm::wire::{self, JobSpec, Message, RejectReason, ServeStats};
 use crate::sparse::SparseGrid;
+use crate::util::rng::SplitMix64;
+
+/// How a client rides out transient daemon failures: bounded retries
+/// with exponential backoff and seeded jitter.  Only *transient*
+/// outcomes are retried — a `Busy` rejection, a connect failure, a
+/// receive timeout, a connection the daemon closed.  Permanent verdicts
+/// (`TooLarge`, `Unsupported`, `Internal`, `Expired`) surface
+/// immediately: retrying a job the daemon will reject again, or one
+/// whose own deadline lapsed, only adds load where backoff should be
+/// shedding it.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Retries *after* the first attempt; 0 makes every call one-shot.
+    pub max_retries: u32,
+    /// Backoff before retry `k` is `base_delay * 2^k`, capped below.
+    pub base_delay: Duration,
+    /// Ceiling of the exponential curve.
+    pub max_delay: Duration,
+    /// Jitter seed.  The delay is drawn from `[d/2, d)` with a
+    /// [`SplitMix64`] stream per client, so a herd of clients rejected
+    /// together does not come back together.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 5,
+            base_delay: Duration::from_millis(20),
+            max_delay: Duration::from_secs(1),
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The jittered backoff before retry `attempt` (0-based).
+    fn delay(&self, attempt: u32, rng: &mut SplitMix64) -> Duration {
+        let exp = self.base_delay.saturating_mul(1u32 << attempt.min(20));
+        let cap = exp.min(self.max_delay);
+        cap.mul_f64(0.5 + 0.5 * rng.next_f64())
+    }
+}
 
 /// A blocking client for one daemon connection: send a spec, wait for
 /// the typed reply.  One in-flight job per connection — client-side
@@ -54,6 +97,7 @@ use crate::sparse::SparseGrid;
 /// shape the integration suite drives.
 pub struct ServeClient {
     sock: UnixSocket,
+    path: PathBuf,
     timeout: Duration,
 }
 
@@ -62,7 +106,7 @@ impl ServeClient {
     /// the daemon still binding its socket).
     pub fn connect(path: &Path, timeout: Duration) -> Result<ServeClient> {
         let sock = UnixSocket::connect_retry(path, timeout)?;
-        Ok(ServeClient { sock, timeout })
+        Ok(ServeClient { sock, path: path.to_path_buf(), timeout })
     }
 
     /// Submit one job and decode whatever comes back.
@@ -85,6 +129,47 @@ impl ServeClient {
                 bail!("job {} rejected: {reason:?} (detail {detail})", spec.id)
             }
             other => bail!("unexpected reply to job {}: {other:?}", spec.id),
+        }
+    }
+
+    /// [`run`](Self::run), but transient failures are absorbed by
+    /// `policy`: `Busy` rejections back off and resubmit; transport
+    /// errors (timeout, daemon restart, connection reset) additionally
+    /// reconnect before the retry.  Permanent rejections and the retry
+    /// budget running out surface as errors with the last cause attached.
+    pub fn run_retry(&mut self, spec: &JobSpec, policy: &RetryPolicy) -> Result<SparseGrid> {
+        // one jitter stream per (client, job): clients flooded together
+        // must not retry in lockstep
+        let mut rng = SplitMix64::new(policy.seed ^ u64::from(spec.id));
+        let mut attempt = 0u32;
+        loop {
+            let (err, reconnect) = match self.submit(spec) {
+                Ok(Message::JobOk { id, result }) if id == spec.id => return Ok(result),
+                Ok(Message::JobOk { id, .. }) => {
+                    bail!("daemon answered job {id}, expected {}", spec.id)
+                }
+                Ok(Message::JobErr { reason: RejectReason::Busy, detail, .. }) => {
+                    (anyhow::anyhow!("job {} rejected: Busy (detail {detail})", spec.id), false)
+                }
+                Ok(Message::JobErr { reason, detail, .. }) => {
+                    bail!("job {} rejected: {reason:?} (detail {detail})", spec.id)
+                }
+                Ok(other) => bail!("unexpected reply to job {}: {other:?}", spec.id),
+                Err(e) => (e, true),
+            };
+            if attempt >= policy.max_retries {
+                return Err(err.context(format!(
+                    "job {}: retry budget exhausted after {attempt} retries",
+                    spec.id
+                )));
+            }
+            std::thread::sleep(policy.delay(attempt, &mut rng));
+            attempt += 1;
+            if reconnect {
+                // the old socket may hold a half-finished exchange;
+                // a fresh connection is the only clean slate
+                self.sock = UnixSocket::connect_retry(&self.path, self.timeout)?;
+            }
         }
     }
 

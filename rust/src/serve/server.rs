@@ -32,7 +32,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -87,6 +87,8 @@ struct Pending {
     seq: u64,
     spec: JobSpec,
     reply: SyncSender<Vec<u8>>,
+    /// When the job entered the queue — the anchor of its `deadline_ms`.
+    arrived: Instant,
 }
 
 impl PartialEq for Pending {
@@ -297,7 +299,13 @@ fn session(shared: Arc<Shared>, mut sock: UnixSocket) {
                     } else {
                         q.seq += 1;
                         let seq = q.seq;
-                        q.heap.push(Pending { weight, seq, spec, reply: tx });
+                        q.heap.push(Pending {
+                            weight,
+                            seq,
+                            spec,
+                            reply: tx,
+                            arrived: Instant::now(),
+                        });
                         shared.in_flight.fetch_add(1, Ordering::SeqCst);
                         shared.available.notify_one();
                         true
@@ -347,6 +355,18 @@ fn worker(shared: Arc<Shared>) {
             }
         };
         let (id, dim) = (pending.spec.id, pending.spec.levels.dim());
+        // the job's own deadline: if it lapsed while queued, answering
+        // `Expired` without computing is strictly better than a slow
+        // answer the caller has already stopped waiting for
+        let deadline = pending.spec.deadline_ms;
+        if deadline > 0 && pending.arrived.elapsed() >= Duration::from_millis(deadline as u64) {
+            shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+            let waited = pending.arrived.elapsed().as_millis() as u64;
+            let _ = pending
+                .reply
+                .send(wire::encode_job_err(id, RejectReason::Expired, waited, dim));
+            continue;
+        }
         let arena = Arc::clone(&shared.arena);
         let threads = shared.cfg.job_threads;
         let spec = pending.spec;
@@ -382,10 +402,17 @@ mod tests {
             tau: 1,
             steps: 1,
             seed: 0,
+            deadline_ms: 0,
         };
         for (weight, seq) in [(10u64, 1u64), (30, 2), (30, 3), (5, 4)] {
             let (tx, _rx) = sync_channel(1);
-            heap.push(Pending { weight, seq, spec: spec.clone(), reply: tx });
+            heap.push(Pending {
+                weight,
+                seq,
+                spec: spec.clone(),
+                reply: tx,
+                arrived: Instant::now(),
+            });
         }
         let order: Vec<(u64, u64)> = std::iter::from_fn(|| heap.pop().map(|p| (p.weight, p.seq)))
             .collect();

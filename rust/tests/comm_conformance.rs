@@ -23,7 +23,7 @@ use sgct::combi::CombinationScheme;
 use sgct::comm::wire::{self, Message};
 use sgct::comm::{
     chaos, rank_ranges, recovered_scheme, reduce_in_process, reduce_local, seeded_block,
-    seeded_recovery_block, ChaosKind, ChaosSpec, PairTransport, ReduceOptions,
+    seeded_recovery_block, ChaosKind, ChaosSet, ChaosSpec, PairTransport, ReduceOptions,
 };
 use sgct::coordinator::{Coordinator, PipelineConfig};
 use sgct::grid::{FullGrid, LevelVector};
@@ -259,7 +259,7 @@ fn chaos_case(ranks: usize, transport: PairTransport, spec: ChaosSpec, seed: u64
     let opts = ReduceOptions {
         pair_transport: transport,
         timeout_ms: Some(200),
-        chaos: Some(spec),
+        chaos: ChaosSet::one(spec),
         recovery_seed: Some(seed),
         ..base
     };
@@ -298,14 +298,17 @@ fn chaos_case(ranks: usize, transport: PairTransport, spec: ChaosSpec, seed: u64
     }
 }
 
-/// The chaos matrix: every failure kind x both in-process transports x
-/// tree sizes {2, 4, 8} x 3 seeds (the seed also moves the victim across
-/// tree positions — leaves, intermediates with orphaned subtrees).  Every
-/// case runs under a hard wall-clock deadline: surviving a fault must not
-/// cost an unbounded wait.
+/// The chaos matrix: every gather-phase failure kind x both in-process
+/// transports x tree sizes {2, 4, 8} x 3 seeds (the seed also moves the
+/// victim across tree positions — leaves, intermediates with orphaned
+/// subtrees).  The replan/scatter kinds have different contracts (a
+/// condemned subtree, or a routing-only report) and are exercised by the
+/// two-fault tests below plus the in-module suite.  Every case runs
+/// under a hard wall-clock deadline: surviving a fault must not cost an
+/// unbounded wait.
 #[test]
 fn chaos_matrix_recovers_bitwise_on_all_transports_and_tree_sizes() {
-    for kind in ChaosKind::ALL {
+    for kind in ChaosKind::GATHER {
         for transport in [PairTransport::Channel, PairTransport::UnixPair] {
             for ranks in [2usize, 4, 8] {
                 for seed in [11u64, 12, 13] {
@@ -326,7 +329,7 @@ fn chaos_matrix_recovers_bitwise_on_all_transports_and_tree_sizes() {
 fn chaos_prop_random_kill_sites_recover_bitwise() {
     check("chaos-kill-sites", Config { cases: 12, ..Default::default() }, |rng, _| {
         let ranks = [2usize, 4, 8][rng.next_below(3) as usize];
-        let kind = ChaosKind::ALL[rng.next_below(3) as usize];
+        let kind = ChaosKind::GATHER[rng.next_below(3) as usize];
         let victim = 1 + rng.next_below((ranks - 1) as u64) as usize;
         let seed = rng.next_u64() % 10_000;
         let spec = ChaosSpec { seed, kind, rank: victim };
@@ -334,6 +337,81 @@ fn chaos_prop_random_kill_sites_recover_bitwise() {
         within_deadline(60, &name, move || chaos_case(ranks, PairTransport::Channel, spec, seed));
         Ok(())
     });
+}
+
+/// The acceptance scenario for multi-epoch recovery: TWO injected faults
+/// in distinct epochs, one of them in the scatter phase, across both
+/// in-process transports x ranks {4, 8}.  A gather-phase kill triggers
+/// the first re-plan; the scatter-phase victim (a leaf that died right
+/// after its gather send) is flushed out when the re-plan broadcast
+/// cannot reach it, condemning it in a SECOND epoch.  The degraded
+/// result must be bitwise `reduce_local` on the FINAL recovered scheme,
+/// under a hard wall-clock deadline.
+#[test]
+fn chaos_two_faults_in_distinct_epochs_recover_bitwise() {
+    // (ranks, gather victim = root child, scatter victim = leaf under
+    //  rank 1, expected final dead set)
+    let cases = [(4usize, 2usize, 3usize, vec![2usize, 3]), (8, 4, 5, vec![4, 5])];
+    for transport in [PairTransport::Channel, PairTransport::UnixPair] {
+        for (ranks, gather_victim, scatter_victim, expect_dead) in cases.clone() {
+            let seed = 4242u64;
+            let mut set =
+                ChaosSet::one(ChaosSpec { seed, kind: ChaosKind::KillBeforeSend, rank: gather_victim });
+            set.push(ChaosSpec { seed, kind: ChaosKind::KillDuringScatter, rank: scatter_victim })
+                .unwrap();
+            let name = format!("two-fault {transport:?} x{ranks}");
+            let (got, report) = within_deadline(60, &name, move || {
+                let scheme = CombinationScheme::regular(3, 4);
+                let opts = ReduceOptions {
+                    pair_transport: transport,
+                    scatter_back: false,
+                    timeout_ms: Some(300),
+                    chaos: set,
+                    recovery_seed: Some(seed),
+                    ..Default::default()
+                };
+                let mut grids = seeded_block(&scheme, 0, scheme.len(), seed);
+                let (got, ms) = reduce_in_process(&scheme, &mut grids, ranks, &opts)
+                    .unwrap_or_else(|e| panic!("x{ranks} {transport:?}: {e:#}"));
+                let report = ms
+                    .iter()
+                    .find(|m| m.rank == 0)
+                    .expect("root measured")
+                    .fault
+                    .clone()
+                    .expect("two faults, no report");
+                (got, report)
+            });
+            assert_eq!(
+                report.dead_ranks, expect_dead,
+                "x{ranks} {transport:?}: wrong final dead set"
+            );
+            assert!(
+                report.epochs >= 2,
+                "x{ranks} {transport:?}: two faults in distinct epochs must cost >= 2 \
+                 recovery epochs, got {}",
+                report.epochs
+            );
+            // one fault detected at gather, the other only after a re-plan
+            // (distinct epochs by construction)
+            let epochs: Vec<u32> = report.events.iter().map(|e| e.epoch).collect();
+            assert!(
+                epochs.iter().any(|&e| e != epochs[0]),
+                "x{ranks} {transport:?}: faults landed in one epoch: {:?}",
+                report.events
+            );
+            let scheme = CombinationScheme::regular(3, 4);
+            let (rec, _) = recovered_scheme(&scheme, ranks, &report.dead_ranks).unwrap();
+            let mut reference = seeded_recovery_block(&scheme, &rec, seed);
+            let base = ReduceOptions { scatter_back: false, ..Default::default() };
+            let want = reduce_local(&rec, &mut reference, &base);
+            assert!(
+                got.bitwise_eq(&want),
+                "x{ranks} {transport:?}: two-epoch degraded result is not bitwise the \
+                 final recovered-scheme reference"
+            );
+        }
+    }
 }
 
 /// Mid-reassembly corruption (the `wire` side of kill-mid-frame): a
@@ -420,7 +498,9 @@ fn unix_multiprocess_overlap_reduce_is_bitwise() {
 
 /// Spawn one `sgct reduce` with extra args, polling `try_wait` against a
 /// hard deadline (a hung child must fail the test, not wedge the suite).
-fn run_reduce_cli(extra: &[&str], deadline_secs: u64) -> (bool, String, String) {
+/// Returns the exit code (-1 if killed by a signal) — the reduce CLI has
+/// a three-way contract: 0 clean, 1 failure, 3 survived-degraded.
+fn run_reduce_cli(extra: &[&str], deadline_secs: u64) -> (i32, String, String) {
     let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_sgct"))
         .args(["reduce", "--transport", "unix", "--dim", "3", "--level", "4"])
         .args(extra)
@@ -442,27 +522,34 @@ fn run_reduce_cli(extra: &[&str], deadline_secs: u64) -> (bool, String, String) 
     }
     let out = child.wait_with_output().expect("collect output");
     (
-        out.status.success(),
+        out.status.code().unwrap_or(-1),
         String::from_utf8_lossy(&out.stdout).into_owned(),
         String::from_utf8_lossy(&out.stderr).into_owned(),
     )
 }
 
+/// Exit code of a `reduce` run that survived a fault (`main.rs`'s
+/// `EXIT_DEGRADED`): distinguishable from both clean (0) and failed (1).
+const EXIT_DEGRADED: i32 = 3;
+
 /// The multi-process plane of the chaos matrix: real `comm-worker`
 /// processes die (or stall, or ship a truncated frame) and the root
 /// re-plans online — `--check` then verifies bitwise equality with the
-/// recovered-scheme reference, and the expected worker deaths do not fail
-/// the run.
+/// recovered-scheme reference, the expected worker deaths do not fail
+/// the run, and the root exits with the documented degraded code (3).
 #[test]
 #[cfg_attr(miri, ignore)] // spawns processes and sockets
 fn chaos_unix_multiprocess_kill_matrix() {
     for (kind, victim) in [("kill-before-send", 1), ("kill-mid-frame", 2), ("stall", 3)] {
         let chaos = format!("7:{kind}:{victim}");
-        let (ok, stdout, stderr) = run_reduce_cli(
+        let (code, stdout, stderr) = run_reduce_cli(
             &["--ranks", "4", "--check", "--timeout-ms", "400", "--chaos", &chaos],
             120,
         );
-        assert!(ok, "{kind}: run failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+        assert_eq!(
+            code, EXIT_DEGRADED,
+            "{kind}: wrong exit code\nstdout:\n{stdout}\nstderr:\n{stderr}"
+        );
         assert!(stdout.contains("FAULT SURVIVED"), "{kind}: no fault line\n{stdout}");
         assert!(
             stdout.contains("recovered-scheme canonical reference — OK"),
@@ -471,15 +558,63 @@ fn chaos_unix_multiprocess_kill_matrix() {
     }
 }
 
+/// Two faults through the real multi-process plane — one gather kill and
+/// one scatter-phase kill, injected with the comma `--chaos` syntax.
+/// The run completes degraded over two recovery epochs, passes the
+/// recovered-scheme bitwise check, and exits with the degraded code.
+#[test]
+#[cfg_attr(miri, ignore)] // spawns processes and sockets
+fn chaos_unix_two_faults_in_distinct_epochs() {
+    let (code, stdout, stderr) = run_reduce_cli(
+        &[
+            "--ranks",
+            "4",
+            "--check",
+            "--timeout-ms",
+            "500",
+            "--chaos",
+            "7:kill-before-send:2,kill-during-scatter:3",
+        ],
+        120,
+    );
+    assert_eq!(code, EXIT_DEGRADED, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("FAULT SURVIVED"), "no fault line\n{stdout}");
+    assert!(
+        stdout.contains("recovered-scheme canonical reference — OK"),
+        "degraded check missing\n{stdout}"
+    );
+    // the per-event log names both recovery epochs
+    assert!(
+        stdout.contains("epoch 0 [gather]") && stdout.contains("epoch 1 ["),
+        "missing the two-epoch event log\n{stdout}"
+    );
+}
+
+/// `--strict` turns survival into failure: the same chaos run that exits
+/// 3 above must exit 1 (plain error) when degraded results are not
+/// acceptable to the caller.
+#[test]
+#[cfg_attr(miri, ignore)] // spawns processes and sockets
+fn chaos_unix_strict_turns_survival_into_failure() {
+    let (code, stdout, stderr) = run_reduce_cli(
+        &[
+            "--ranks", "4", "--strict", "--timeout-ms", "400", "--chaos", "7:kill-before-send:1",
+        ],
+        120,
+    );
+    assert_eq!(code, 1, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stderr.contains("--strict"), "error must name the flag\n{stderr}");
+}
+
 /// Zero injected faults: the chaos plumbing at rest changes nothing — the
 /// same command without `--chaos` still reports bitwise equality with the
 /// *original* reference (the no-fault conformance line).
 #[test]
 #[cfg_attr(miri, ignore)]
 fn chaos_free_run_is_bitwise_unchanged() {
-    let (ok, stdout, stderr) =
+    let (code, stdout, stderr) =
         run_reduce_cli(&["--ranks", "4", "--check", "--timeout-ms", "4000"], 120);
-    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert_eq!(code, 0, "stdout:\n{stdout}\nstderr:\n{stderr}");
     assert!(!stdout.contains("FAULT"), "phantom fault:\n{stdout}");
     assert!(
         stdout.contains("single-process canonical reference — OK"),
@@ -497,14 +632,14 @@ fn unix_back_to_back_and_concurrent_reduces_do_not_collide() {
     // back-to-back, same seed (the old pid-only dir naming collided here
     // when a crashed run left its sockets behind)
     for _ in 0..2 {
-        let (ok, stdout, stderr) = run_reduce_cli(&["--ranks", "2", "--check"], 120);
-        assert!(ok, "back-to-back run failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+        let (code, stdout, stderr) = run_reduce_cli(&["--ranks", "2", "--check"], 120);
+        assert_eq!(code, 0, "back-to-back run failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
     }
     // concurrent: both runs own disjoint socket dirs, both must succeed
     let a = std::thread::spawn(|| run_reduce_cli(&["--ranks", "2", "--check"], 120));
     let b = std::thread::spawn(|| run_reduce_cli(&["--ranks", "2", "--check"], 120));
     for (name, h) in [("a", a), ("b", b)] {
-        let (ok, stdout, stderr) = h.join().expect("concurrent runner panicked");
-        assert!(ok, "concurrent run {name} failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+        let (code, stdout, stderr) = h.join().expect("concurrent runner panicked");
+        assert_eq!(code, 0, "concurrent run {name} failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
     }
 }

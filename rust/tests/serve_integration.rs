@@ -27,7 +27,7 @@ use sgct::comm::transport::{Transport, UnixSocket};
 use sgct::comm::wire::{self, Message, RejectReason};
 use sgct::comm::{unique_run_dir, JobKind, JobSpec};
 use sgct::grid::LevelVector;
-use sgct::serve::{job, ServeClient, ServeConfig, ServerHandle};
+use sgct::serve::{job, RetryPolicy, ServeClient, ServeConfig, ServerHandle};
 
 /// Run `f` under a hard wall-clock deadline (same guard as the comm
 /// conformance suite): a wedged daemon must fail the test, not hang it.
@@ -50,7 +50,7 @@ fn within_deadline<T: Send + 'static>(
 }
 
 fn spec(id: u32, kind: JobKind, levels: &[u8], tau: u8, steps: u16, seed: u64) -> JobSpec {
-    JobSpec { id, kind, levels: LevelVector::new(levels), tau, steps, seed }
+    JobSpec { id, kind, levels: LevelVector::new(levels), tau, steps, seed, deadline_ms: 0 }
 }
 
 /// A deterministic mixed burst: hierarchize / combine (two shapes and
@@ -256,6 +256,103 @@ fn serve_flood_accounting_is_exact() {
         let s = c.stats().unwrap();
         assert_eq!(s.jobs_done, ok, "every accepted job accounted");
         assert_eq!(s.rejected_busy, busy, "every bounced job accounted");
+        c.shutdown().unwrap();
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// The same flood, but every client rides a [`RetryPolicy`]: `Busy`
+/// rejections back off (seeded jitter, so the herd does not return in
+/// lockstep) and resubmit until the 1-worker daemon drains the queue.
+/// All 16 jobs must eventually succeed bitwise — the daemon still
+/// bounced (the counters prove the retry path was actually exercised),
+/// the clients just no longer see it.
+#[test]
+fn serve_flood_retry_policy_absorbs_every_busy_rejection() {
+    within_deadline(180, "serve-flood-retry", || {
+        let (dir, socket) = endpoint(9707);
+        let mut cfg = ServeConfig::new(socket.clone());
+        cfg.workers = 1;
+        cfg.queue = 2; // same tiny queue as the accounting flood above
+        let handle = ServerHandle::start(cfg).unwrap();
+
+        let threads: Vec<_> = (0..16u32)
+            .map(|i| {
+                let socket = socket.clone();
+                std::thread::spawn(move || {
+                    let s = spec(i, JobKind::Combine, &[4, 4], 1, 0, 700 + i as u64);
+                    let policy =
+                        RetryPolicy { max_retries: 12, seed: 0xF100D, ..Default::default() };
+                    let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+                    let got = c.run_retry(&s, &policy).unwrap();
+                    (s, got)
+                })
+            })
+            .collect();
+        for t in threads {
+            let (s, got) = t.join().unwrap();
+            assert!(
+                got.bitwise_eq(&job::reference(&s).unwrap()),
+                "retried job {} diverged from the one-shot path",
+                s.id
+            );
+        }
+
+        let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+        let st = c.stats().unwrap();
+        assert_eq!(st.jobs_done, 16, "every flooded job must eventually run");
+        assert!(
+            st.rejected_busy > 0,
+            "a 16-client flood into queue=2 must bounce at least once, \
+             or the retry path went unexercised: {st:?}"
+        );
+        c.shutdown().unwrap();
+        handle.join();
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// The job deadline is enforced at the queue: a job whose `deadline_ms`
+/// lapses while it waits behind a long-running job is answered with a
+/// typed `Expired` rejection (detail = the milliseconds it waited) and
+/// never computed.
+#[test]
+fn serve_job_deadline_expires_in_queue_with_typed_reject() {
+    within_deadline(120, "serve-deadline", || {
+        let (dir, socket) = endpoint(9808);
+        let mut cfg = ServeConfig::new(socket.clone());
+        cfg.workers = 1;
+        let handle = ServerHandle::start(cfg).unwrap();
+
+        // occupy the single worker with a long solve (its reply lands in
+        // a dropped session, same pattern as the containment test)
+        {
+            let mut t = UnixSocket::connect_retry(&socket, Duration::from_secs(30)).unwrap();
+            let heavy = spec(1, JobKind::Solve, &[6, 6], 1, u16::MAX, 9);
+            t.send(&wire::encode_job(&heavy)).unwrap();
+            std::thread::sleep(Duration::from_millis(50)); // let the worker pop it
+        }
+
+        // a 1ms-deadline job queued behind it must expire at pop time
+        let mut c = ServeClient::connect(&socket, Duration::from_secs(30)).unwrap();
+        let short = JobSpec { deadline_ms: 1, ..spec(2, JobKind::Combine, &[4, 4], 1, 0, 11) };
+        match c.submit(&short).unwrap() {
+            Message::JobErr { id, reason, detail } => {
+                assert_eq!(id, 2);
+                assert_eq!(reason, RejectReason::Expired);
+                assert!(detail >= 1, "detail must carry the waited ms, got {detail}");
+            }
+            other => panic!("expected Expired, got {other:?}"),
+        }
+
+        // with the worker free again, the same shape with no deadline
+        // (and one with ample headroom) completes normally
+        let fine = spec(3, JobKind::Combine, &[4, 4], 1, 0, 11);
+        assert!(c.run(&fine).unwrap().bitwise_eq(&job::reference(&fine).unwrap()));
+        let roomy = JobSpec { deadline_ms: 60_000, ..spec(4, JobKind::Combine, &[4, 4], 1, 0, 12) };
+        assert!(c.run(&roomy).unwrap().bitwise_eq(&job::reference(&roomy).unwrap()));
+
         c.shutdown().unwrap();
         handle.join();
         std::fs::remove_dir_all(&dir).ok();
