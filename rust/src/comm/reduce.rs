@@ -1819,6 +1819,8 @@ static RUN_NONCE: AtomicU64 = AtomicU64::new(0);
 /// ever fires on a genuine configuration error.  Callers remove the dir
 /// on orderly shutdown.
 pub fn unique_run_dir(seed: u64) -> PathBuf {
+    // ORDERING: Relaxed — the nonce only needs distinct values, which RMW
+    // atomicity guarantees per location; nothing is published through it
     let nonce = RUN_NONCE.fetch_add(1, Ordering::Relaxed);
     std::env::temp_dir().join(format!("sgct_comm_{}_{seed}_{nonce}", std::process::id()))
 }

@@ -163,16 +163,21 @@ impl GridArena {
                     SlotState::Lent => unreachable!("free index held a lent slot"),
                 };
                 slot.generation = slot.generation.wrapping_add(1);
+                // ORDERING: Relaxed — stats counters only; every slot-state
+                // transition is already serialized by the inner mutex, and
+                // readers tolerate a momentarily stale count
                 self.reuses.fetch_add(1, Ordering::Relaxed);
                 (id, buf)
             }
             None => {
-                let id = inner.new_slot(SlotState::Lent);
+                // ORDERING: Relaxed — stats counter; see `reuses` above
                 self.fresh.fetch_add(1, Ordering::Relaxed);
+                let id = inner.new_slot(SlotState::Lent);
                 (id, Vec::new())
             }
         };
         let generation = inner.slot_mut(id).expect("slot just touched").generation;
+        // ORDERING: Relaxed — stats counter; see `reuses` above
         self.lent.fetch_add(1, Ordering::Relaxed);
         drop(inner);
         // buffer construction happens outside the lock: zeroing a large
@@ -194,6 +199,8 @@ impl GridArena {
         slot.generation = slot.generation.wrapping_add(1);
         slot.state = SlotState::Free(buf);
         inner.free_by_cap.entry(cap).or_default().push(handle.slot);
+        // ORDERING: Relaxed — stats counter; transitions serialize on the
+        // inner mutex
         self.lent.fetch_sub(1, Ordering::Relaxed);
         Ok(())
     }
@@ -214,16 +221,20 @@ impl GridArena {
     /// Slots created because no parked buffer fit (the counter the reuse
     /// contract pins flat after warmup).
     pub fn fresh_allocations(&self) -> u64 {
+        // ORDERING: Relaxed — stats read; callers that need a quiesced
+        // value (the reuse-contract tests) read after joining the workers
         self.fresh.load(Ordering::Relaxed)
     }
 
     /// Checkouts served from a parked buffer.
     pub fn reuses(&self) -> u64 {
+        // ORDERING: Relaxed — stats read; see fresh_allocations
         self.reuses.load(Ordering::Relaxed)
     }
 
     /// Grids currently out with tenants.
     pub fn in_flight(&self) -> u64 {
+        // ORDERING: Relaxed — stats read; see fresh_allocations
         self.lent.load(Ordering::Relaxed)
     }
 }

@@ -242,15 +242,20 @@ impl Coordinator {
         let shared = crate::grid::SharedSlice::new(&mut self.grids);
         let next = AtomicUsize::new(0);
         std::thread::scope(|s| {
-            for _ in 0..workers {
+            for w in 0..workers {
                 let tx = tx.clone();
                 let (shared, next, order) = (&shared, &next, &order);
                 s.spawn(move || loop {
+                    // ORDERING: Relaxed — the cursor only partitions k (RMW
+                    // atomicity); the leader's read of a finished grid is
+                    // ordered by the channel send/recv below, not by this
+                    // atomic
                     let k = next.fetch_add(1, Ordering::Relaxed);
                     if k >= n {
                         break;
                     }
                     let i = order[k];
+                    crate::grid::set_claim_owner(w, i);
                     // SAFETY: order is a permutation, so i is claimed
                     // exactly once -> unique &mut
                     let g = unsafe { shared.claim_mut(i) };

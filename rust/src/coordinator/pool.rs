@@ -30,13 +30,18 @@ where
     let next = AtomicUsize::new(0);
     let shared = SharedSlice::new(grids);
     std::thread::scope(|s| {
-        for _ in 0..workers.min(n) {
+        for w in 0..workers.min(n) {
             let (shared, next, f) = (&shared, &next, &f);
             s.spawn(move || loop {
+                // ORDERING: Relaxed — the cursor only partitions indices
+                // (RMW atomicity hands each worker a distinct i); the grids
+                // written under those indices are published to the caller
+                // by the scope join, not through this atomic
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
+                crate::grid::set_claim_owner(w, i);
                 // SAFETY: the atomic cursor yields each index exactly once
                 let g = unsafe { shared.claim_mut(i) };
                 f(i, g);
@@ -72,14 +77,18 @@ where
     let next = AtomicUsize::new(0);
     let shared = SharedSlice::new(grids);
     std::thread::scope(|s| {
-        for _ in 0..workers.min(n) {
+        for w in 0..workers.min(n) {
             let (shared, next, f) = (&shared, &next, &f);
             s.spawn(move || loop {
+                // ORDERING: Relaxed — index partitioning only, as in
+                // parallel_grids: distinct k per RMW, publication via the
+                // scope join
                 let k = next.fetch_add(1, Ordering::Relaxed);
                 if k >= n {
                     break;
                 }
                 let i = order[k];
+                crate::grid::set_claim_owner(w, i);
                 // SAFETY: `order` is a verified permutation, so index i is
                 // claimed exactly once
                 let g = unsafe { shared.claim_mut(i) };
@@ -113,14 +122,18 @@ pub fn parallel_grids_streamed<F>(
     let next = AtomicUsize::new(0);
     let shared = SharedSlice::new(grids);
     std::thread::scope(|s| {
-        for _ in 0..workers.min(n) {
+        for w in 0..workers.min(n) {
             let done = done.clone();
             let (shared, next, f) = (&shared, &next, &f);
             s.spawn(move || loop {
+                // ORDERING: Relaxed — index partitioning only; the consumer
+                // of `done` gets its happens-before edge from the channel
+                // send/recv pair, not from this cursor
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
+                crate::grid::set_claim_owner(w, i);
                 // SAFETY: the atomic cursor yields each index exactly once
                 let g = unsafe { shared.claim_mut(i) };
                 f(i, g);

@@ -14,10 +14,14 @@
 //! * [`PoleView`] / [`BlockView`] are checked carve-outs: a pole (arithmetic
 //!   sequence `base + j * stride`) or a contiguous block.  Carving is the
 //!   one `unsafe` operation — its contract is that no live view overlaps —
-//!   and it asserts in-bounds always; debug builds additionally claim every
-//!   slot in an atomic claim map, so two live views overlapping by even one
-//!   slot panic at the second carve, on whichever thread performs it.
-//!   Release builds carry no claim map and compile to the same code shape
+//!   and it asserts in-bounds always; tracked builds (debug, or release with
+//!   the `claimcheck` feature) additionally claim every slot in an
+//!   owner-tagged atomic claim map: a claim records *who* carved the slot
+//!   (worker + work-unit tag, see [`set_claim_owner`]), so two live views
+//!   overlapping by even one slot panic at the second carve naming BOTH
+//!   claimants — `first=w3:u17 second=w5:u12` pins the colliding plan units
+//!   directly, where a boolean map could only say "someone".  Untracked
+//!   release builds carry no claim map and compile to the same code shape
 //!   as before the port: pole accessors keep the bounds check slice
 //!   indexing had, row pointers stay unchecked like the old `rows!` macro.
 //! * [`TileView`] is the cache-blocking work unit of `hierarchize::fused`: a
@@ -42,8 +46,84 @@
 //! job.
 
 use std::marker::PhantomData;
-#[cfg(debug_assertions)]
-use std::sync::atomic::{AtomicBool, Ordering};
+#[cfg(any(debug_assertions, feature = "claimcheck"))]
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Claim-owner tagging for the tracked claim maps (debug builds, or release
+/// builds with the `claimcheck` feature).
+///
+/// A tag packs `(worker + 1, unit)` into a `u32`; 0 means "free slot".
+/// Threads that never call [`set_claim_owner`] draw an anonymous worker id
+/// on their first claim so a collision diagnostic can still tell two
+/// untagged threads apart.
+#[cfg(any(debug_assertions, feature = "claimcheck"))]
+mod owner {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    /// Unit field value for "no unit set" — rendered as `u?`.
+    pub(super) const UNIT_NONE: u32 = 0xffff;
+    /// Anonymous worker ids start well above any real pool size.
+    const ANON_BASE: u32 = 0x4000;
+
+    // ORDERING: Relaxed — the counter only has to hand out *distinct* ids
+    // (guaranteed by RMW atomicity per location); no data is published
+    // through it.
+    static NEXT_ANON: AtomicU32 = AtomicU32::new(ANON_BASE);
+
+    thread_local! {
+        static TAG: Cell<u32> = const { Cell::new(0) };
+    }
+
+    pub(super) fn encode(worker: u32, unit: u32) -> u32 {
+        (((worker & 0x7fff) + 1) << 16) | (unit & 0xffff)
+    }
+
+    pub(super) fn set(worker: usize, unit: usize) {
+        TAG.with(|t| t.set(encode(worker as u32, unit as u32)));
+    }
+
+    /// The calling thread's tag, drawing an anonymous id on first use.
+    pub(super) fn current() -> u32 {
+        TAG.with(|t| {
+            let tag = t.get();
+            if tag != 0 {
+                return tag;
+            }
+            // ORDERING: Relaxed — see NEXT_ANON above: uniqueness only.
+            let anon = encode(NEXT_ANON.fetch_add(1, Ordering::Relaxed), UNIT_NONE);
+            t.set(anon);
+            anon
+        })
+    }
+
+    /// Render a tag for diagnostics: `w3:u17`, or `w16384:u?` for an
+    /// anonymous thread.
+    pub(super) fn format(tag: u32) -> String {
+        let worker = (tag >> 16) - 1;
+        let unit = tag & 0xffff;
+        if unit == UNIT_NONE {
+            format!("w{worker}:u?")
+        } else {
+            format!("w{worker}:u{unit}")
+        }
+    }
+}
+
+/// Tag the calling thread as pool worker `worker` currently executing work
+/// unit `unit`, for the tracked claim maps' collision diagnostics.  The
+/// parallel engine calls this per worker and per unit; an overlapping carve
+/// then panics naming both claimants (`first=w1:u7 second=w2:u9`) instead of
+/// an anonymous "already owned".  No-op in untracked release builds.
+#[cfg(any(debug_assertions, feature = "claimcheck"))]
+pub fn set_claim_owner(worker: usize, unit: usize) {
+    owner::set(worker, unit);
+}
+
+/// Untracked builds: no claim map, nothing to tag.
+#[cfg(not(any(debug_assertions, feature = "claimcheck")))]
+#[inline(always)]
+pub fn set_claim_owner(_worker: usize, _unit: usize) {}
 
 /// Shared, alias-clean handle to one grid buffer.
 ///
@@ -56,17 +136,20 @@ use std::sync::atomic::{AtomicBool, Ordering};
 pub struct GridCells<'a> {
     ptr: *mut f64,
     len: usize,
-    /// Debug-only claim map: slot -> "owned by a live view".
-    #[cfg(debug_assertions)]
-    claims: Vec<AtomicBool>,
+    /// Tracked-build claim map: slot -> owner tag (0 = free; see [`owner`]).
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
+    claims: Vec<AtomicU32>,
     _borrow: PhantomData<&'a mut [f64]>,
 }
 
 // SAFETY: the only mutation path is through carved views, and carving is an
-// `unsafe fn` whose contract is slot disjointness among live views (debug
+// `unsafe fn` whose contract is slot disjointness among live views (tracked
 // builds verify it on the claim map), so concurrent access from several
 // threads never races on a slot.
 unsafe impl Send for GridCells<'_> {}
+// SAFETY: as for Send directly above — shared references only reach slots
+// through pairwise-disjoint carved views, so `&GridCells` is race-free
+// across threads.
 unsafe impl Sync for GridCells<'_> {}
 
 impl<'a> GridCells<'a> {
@@ -76,8 +159,8 @@ impl<'a> GridCells<'a> {
         Self {
             ptr: data.as_mut_ptr(),
             len: data.len(),
-            #[cfg(debug_assertions)]
-            claims: (0..data.len()).map(|_| AtomicBool::new(false)).collect(),
+            #[cfg(any(debug_assertions, feature = "claimcheck"))]
+            claims: (0..data.len()).map(|_| AtomicU32::new(0)).collect(),
             _borrow: PhantomData,
         }
     }
@@ -110,7 +193,7 @@ impl<'a> GridCells<'a> {
             "pole carve out of bounds: base={base} stride={stride} len={len} buf={}",
             self.len
         );
-        #[cfg(debug_assertions)]
+        #[cfg(any(debug_assertions, feature = "claimcheck"))]
         for j in 0..len {
             self.claim(base + j * stride);
         }
@@ -119,7 +202,7 @@ impl<'a> GridCells<'a> {
             base,
             stride,
             len,
-            #[cfg(debug_assertions)]
+            #[cfg(any(debug_assertions, feature = "claimcheck"))]
             owned: true,
         }
     }
@@ -138,7 +221,7 @@ impl<'a> GridCells<'a> {
             "block carve out of bounds: start={start} len={len} buf={}",
             self.len
         );
-        #[cfg(debug_assertions)]
+        #[cfg(any(debug_assertions, feature = "claimcheck"))]
         for slot in start..start + len {
             self.claim(slot);
         }
@@ -146,11 +229,11 @@ impl<'a> GridCells<'a> {
             cells: self,
             start,
             len,
-            #[cfg(debug_assertions)]
+            #[cfg(any(debug_assertions, feature = "claimcheck"))]
             owned: true,
-            #[cfg(debug_assertions)]
+            #[cfg(any(debug_assertions, feature = "claimcheck"))]
             run_stride: len.max(1),
-            #[cfg(debug_assertions)]
+            #[cfg(any(debug_assertions, feature = "claimcheck"))]
             run_len: len,
         }
     }
@@ -186,7 +269,7 @@ impl<'a> GridCells<'a> {
              run_len={run_len} buf={}",
             self.len
         );
-        #[cfg(debug_assertions)]
+        #[cfg(any(debug_assertions, feature = "claimcheck"))]
         for r in 0..runs {
             for i in 0..run_len {
                 self.claim(base + r * run_stride + i);
@@ -195,17 +278,33 @@ impl<'a> GridCells<'a> {
         TileView { cells: self, base, runs, run_stride, run_len }
     }
 
-    #[cfg(debug_assertions)]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
     fn claim(&self, slot: usize) {
-        assert!(
-            !self.claims[slot].swap(true, Ordering::Relaxed),
-            "overlapping carve: slot {slot} is already owned by a live view"
-        );
+        let me = owner::current();
+        // ORDERING: Relaxed — detection rides on RMW atomicity alone: the
+        // per-slot modification order admits exactly one 0 -> tag winner, so
+        // one of two overlapping carves is guaranteed to observe the other's
+        // tag and panic.  Legitimate claim-after-release pairs are ordered
+        // by the pool's happens-before edges (scope join / channel recv),
+        // never by this CAS, so no stronger ordering is owed.
+        if let Err(prev) =
+            self.claims[slot].compare_exchange(0, me, Ordering::Relaxed, Ordering::Relaxed)
+        {
+            panic!(
+                "overlapping carve: slot {slot} is already owned by a live view \
+                 (first={} second={})",
+                owner::format(prev),
+                owner::format(me),
+            );
+        }
     }
 
-    #[cfg(debug_assertions)]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
     fn release(&self, slot: usize) {
-        self.claims[slot].store(false, Ordering::Relaxed);
+        // ORDERING: Relaxed — the matching claim that may follow is ordered
+        // after this store by the view-drop-then-handoff happens-before
+        // edge (scope join / channel recv), not by the atomic itself.
+        self.claims[slot].store(0, Ordering::Relaxed);
     }
 }
 
@@ -221,7 +320,7 @@ pub struct PoleView<'c, 'a> {
     len: usize,
     /// False for sub-views handed out by a [`TileView`]: the tile holds the
     /// claims, so the sub-view must not release them on drop.
-    #[cfg(debug_assertions)]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
     owned: bool,
 }
 
@@ -274,7 +373,7 @@ impl PoleView<'_, '_> {
     }
 }
 
-#[cfg(debug_assertions)]
+#[cfg(any(debug_assertions, feature = "claimcheck"))]
 impl Drop for PoleView<'_, '_> {
     fn drop(&mut self) {
         if !self.owned {
@@ -296,14 +395,15 @@ pub struct BlockView<'c, 'a> {
     len: usize,
     /// False for the addressing window of a [`TileView`] (the tile holds
     /// the claims; dropping the window releases nothing).
-    #[cfg(debug_assertions)]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
     owned: bool,
-    /// Run geometry for the debug row check: rows must stay inside one run
-    /// of `run_len` slots repeating every `run_stride`.  A directly carved
-    /// block is one run covering itself (`run_stride == run_len == len`).
-    #[cfg(debug_assertions)]
+    /// Run geometry for the tracked-build row check: rows must stay inside
+    /// one run of `run_len` slots repeating every `run_stride`.  A directly
+    /// carved block is one run covering itself
+    /// (`run_stride == run_len == len`).
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
     run_stride: usize,
-    #[cfg(debug_assertions)]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
     run_len: usize,
 }
 
@@ -335,9 +435,11 @@ impl BlockView<'_, '_> {
         );
         // tile windows additionally reject rows crossing the gap between
         // two runs (slots the tile does not own); for a plain block the
-        // whole block is one run and this reduces to the check above
-        #[cfg(debug_assertions)]
-        debug_assert!(
+        // whole block is one run and this reduces to the check above.
+        // A hard assert, not debug_assert: `claimcheck` release builds keep
+        // the run-geometry check alongside the claim map.
+        #[cfg(any(debug_assertions, feature = "claimcheck"))]
+        assert!(
             n == 0 || (off % self.run_stride) + n <= self.run_len,
             "row leaves the tile's runs: off={off} n={n} run_stride={} run_len={}",
             self.run_stride,
@@ -400,7 +502,7 @@ impl BlockView<'_, '_> {
     }
 }
 
-#[cfg(debug_assertions)]
+#[cfg(any(debug_assertions, feature = "claimcheck"))]
 impl Drop for BlockView<'_, '_> {
     fn drop(&mut self) {
         if !self.owned {
@@ -484,9 +586,9 @@ impl<'c, 'a> TileView<'c, 'a> {
     /// In debug builds, if any slot of the pole falls outside the tile's
     /// runs.
     pub unsafe fn pole(&self, off: usize, stride: usize, len: usize) -> PoleView<'c, 'a> {
-        #[cfg(debug_assertions)]
+        #[cfg(any(debug_assertions, feature = "claimcheck"))]
         for j in 0..len {
-            debug_assert!(
+            assert!(
                 self.contains_row(off + j * stride, 1),
                 "pole sub-view leaves the tile: off={off} stride={stride} j={j}"
             );
@@ -496,7 +598,7 @@ impl<'c, 'a> TileView<'c, 'a> {
             base: self.base + off,
             stride,
             len,
-            #[cfg(debug_assertions)]
+            #[cfg(any(debug_assertions, feature = "claimcheck"))]
             owned: false,
         }
     }
@@ -514,17 +616,17 @@ impl<'c, 'a> TileView<'c, 'a> {
             cells: self.cells,
             start: self.base,
             len: self.span_len(),
-            #[cfg(debug_assertions)]
+            #[cfg(any(debug_assertions, feature = "claimcheck"))]
             owned: false,
-            #[cfg(debug_assertions)]
+            #[cfg(any(debug_assertions, feature = "claimcheck"))]
             run_stride: self.run_stride,
-            #[cfg(debug_assertions)]
+            #[cfg(any(debug_assertions, feature = "claimcheck"))]
             run_len: self.run_len,
         }
     }
 }
 
-#[cfg(debug_assertions)]
+#[cfg(any(debug_assertions, feature = "claimcheck"))]
 impl Drop for TileView<'_, '_> {
     fn drop(&mut self) {
         for r in 0..self.runs {
@@ -552,16 +654,17 @@ impl Drop for TileView<'_, '_> {
 pub struct SharedSlice<'a, T> {
     ptr: *mut T,
     len: usize,
-    #[cfg(debug_assertions)]
-    claims: Vec<AtomicBool>,
+    /// Tracked-build claim map: element -> owner tag (0 = free).
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
+    claims: Vec<AtomicU32>,
     _borrow: PhantomData<&'a mut [T]>,
 }
 
 // SAFETY: hands out &mut T to distinct elements only (claim-once
-// discipline), which needs T: Send to cross threads; `read` additionally
-// allows concurrent &T from several threads once the writer is done, which
-// needs T: Sync.
+// discipline), which needs T: Send to cross threads.
 unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+// SAFETY: as for Send directly above; `read` additionally allows concurrent
+// &T from several threads once the writer is done, which needs T: Sync.
 unsafe impl<T: Send + Sync> Sync for SharedSlice<'_, T> {}
 
 impl<'a, T> SharedSlice<'a, T> {
@@ -569,8 +672,8 @@ impl<'a, T> SharedSlice<'a, T> {
         Self {
             ptr: data.as_mut_ptr(),
             len: data.len(),
-            #[cfg(debug_assertions)]
-            claims: (0..data.len()).map(|_| AtomicBool::new(false)).collect(),
+            #[cfg(any(debug_assertions, feature = "claimcheck"))]
+            claims: (0..data.len()).map(|_| AtomicU32::new(0)).collect(),
             _borrow: PhantomData,
         }
     }
@@ -595,11 +698,23 @@ impl<'a, T> SharedSlice<'a, T> {
     #[allow(clippy::mut_from_ref)] // the claim-once contract is the point
     pub unsafe fn claim_mut(&self, i: usize) -> &mut T {
         assert!(i < self.len, "claim out of bounds: {i} >= {}", self.len);
-        #[cfg(debug_assertions)]
-        assert!(
-            !self.claims[i].swap(true, Ordering::Relaxed),
-            "element {i} claimed twice"
-        );
+        #[cfg(any(debug_assertions, feature = "claimcheck"))]
+        {
+            let me = owner::current();
+            // ORDERING: Relaxed — same argument as GridCells::claim: RMW
+            // atomicity alone guarantees one 0 -> tag winner per element,
+            // which is all detection needs; data handoff happens-before
+            // edges come from the pool (scope join / channel recv).
+            if let Err(prev) =
+                self.claims[i].compare_exchange(0, me, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                panic!(
+                    "element {i} claimed twice (first={} second={})",
+                    owner::format(prev),
+                    owner::format(me),
+                );
+            }
+        }
         // SAFETY: i is in bounds; uniqueness is the caller's contract above
         unsafe { &mut *self.ptr.add(i) }
     }
@@ -649,6 +764,7 @@ mod tests {
         let cells = GridCells::new(&mut buf);
         // SAFETY: even and odd slots are disjoint
         let a = unsafe { cells.pole(0, 2, 5) }; // evens
+        // SAFETY: the odd slots are disjoint from `a`'s even slots
         let b = unsafe { cells.pole(1, 2, 5) }; // odds
         a.set(0, 1.0);
         b.set(0, 2.0);
@@ -660,13 +776,14 @@ mod tests {
     }
 
     #[test]
-    #[cfg(debug_assertions)]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
     #[should_panic(expected = "overlapping carve")]
-    fn overlapping_carve_panics_in_debug() {
+    fn overlapping_carve_panics_when_tracked() {
         let mut buf = vec![0f64; 8];
         let cells = GridCells::new(&mut buf);
-        // SAFETY: debug builds catch the deliberate overlap below
+        // SAFETY: tracked builds catch the deliberate overlap below
         let _a = unsafe { cells.block(0, 5) };
+        // SAFETY: overlaps on purpose — the claim map panics before any use
         let _b = unsafe { cells.pole(4, 2, 2) }; // slot 4 collides with the block
     }
 
@@ -675,6 +792,7 @@ mod tests {
     fn carve_past_the_buffer_panics() {
         let mut buf = vec![0f64; 8];
         let cells = GridCells::new(&mut buf);
+        // SAFETY: the carve asserts bounds before any slot can be touched
         let _ = unsafe { cells.pole(0, 3, 4) }; // would touch slot 9
     }
 
@@ -745,6 +863,7 @@ mod tests {
             assert_eq!(p.get(2), 9.0);
             p.set(0, -5.0);
             drop(p);
+            // SAFETY: the pole sub-view was dropped; one sub-view at a time
             let w = unsafe { t.window() };
             assert_eq!(w.get(1), -5.0);
             w.set(0, 40.0);
@@ -757,6 +876,7 @@ mod tests {
             assert_eq!(t.span_len(), 10);
             assert!(t.contains_row(4, 2)); // second run
             assert!(!t.contains_row(1, 2)); // would cross into the gap
+            // SAFETY: single-threaded, no other sub-view is live
             let w = unsafe { t.window() };
             w.set(8, -20.0); // slot 20
         }
@@ -766,13 +886,14 @@ mod tests {
     }
 
     #[test]
-    #[cfg(debug_assertions)]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
     #[should_panic(expected = "overlapping carve")]
-    fn overlapping_tile_panics_in_debug() {
+    fn overlapping_tile_panics_when_tracked() {
         let mut buf = vec![0f64; 16];
         let cells = GridCells::new(&mut buf);
-        // SAFETY: debug builds catch the deliberate overlap below
+        // SAFETY: tracked builds catch the deliberate overlap below
         let _a = unsafe { cells.tile(0, 2, 8, 4) }; // slots 0..4, 8..12
+        // SAFETY: overlaps on purpose — the claim map panics before any use
         let _b = unsafe { cells.pole(2, 3, 2) }; // slot 2 collides with run 0
     }
 
@@ -783,8 +904,10 @@ mod tests {
         let cells = GridCells::new(&mut buf);
         // SAFETY: runs (0..2, 8..10) and the gap block (2..8) are disjoint
         let t = unsafe { cells.tile(0, 2, 8, 2) };
+        // SAFETY: the gap block is disjoint from the tile's runs (above)
         let gap = unsafe { cells.block(2, 6) };
         gap.set(0, 1.0);
+        // SAFETY: single-threaded, the window is used for one store only
         unsafe { t.window() }.set(0, 2.0);
         drop((t, gap));
         assert_eq!(buf[2], 1.0);
@@ -796,17 +919,19 @@ mod tests {
     fn tile_past_the_buffer_panics() {
         let mut buf = vec![0f64; 16];
         let cells = GridCells::new(&mut buf);
+        // SAFETY: the carve asserts bounds before any slot can be touched
         let _ = unsafe { cells.tile(0, 3, 8, 2) }; // last run would end at 18
     }
 
     #[test]
-    #[cfg(debug_assertions)]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
     #[should_panic(expected = "row leaves the tile's runs")]
     fn window_row_crossing_a_run_gap_panics() {
         let mut buf = vec![0f64; 16];
         let cells = GridCells::new(&mut buf);
         // SAFETY: no other view is live
         let t = unsafe { cells.tile(0, 2, 8, 4) };
+        // SAFETY: single-threaded, the tile's only sub-view
         let w = unsafe { t.window() };
         let _ = w.row_ptr(2, 4); // [2, 6) crosses out of run 0 ([0, 4))
     }
@@ -830,6 +955,7 @@ mod tests {
                         // SAFETY: tile t owns runs starting at t * w —
                         // pairwise disjoint across t
                         let tile = unsafe { cells.tile(t * w, runs, run_stride, w) };
+                        // SAFETY: this thread drives the tile alone
                         let win = unsafe { tile.window() };
                         for r in 0..runs {
                             for i in 0..w {
@@ -889,6 +1015,7 @@ mod tests {
             let cells = GridCells::new(&mut buf);
             // SAFETY: no other view is live
             let t = unsafe { cells.tile(0, 3, 4, 2) };
+            // SAFETY: single-threaded, the tile's only sub-view
             let w = unsafe { t.window() };
             let mut scratch = vec![0.0; 6];
             w.permute_rows(0, 4, 2, &[1, 2, 0], &mut scratch);
@@ -903,13 +1030,14 @@ mod tests {
     }
 
     #[test]
-    #[cfg(debug_assertions)]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
     #[should_panic(expected = "row leaves the tile's runs")]
     fn permute_rows_crossing_a_run_gap_panics() {
         let mut buf = vec![0f64; 16];
         let cells = GridCells::new(&mut buf);
         // SAFETY: no other view is live
         let t = unsafe { cells.tile(0, 2, 8, 4) };
+        // SAFETY: single-threaded, the tile's only sub-view
         let w = unsafe { t.window() };
         let mut scratch = vec![0.0; 12];
         // width-6 rows cross out of the width-4 runs
@@ -949,6 +1077,7 @@ mod tests {
                         // SAFETY: tile t owns runs starting at t * w —
                         // pairwise disjoint across t
                         let tile = unsafe { cells.tile(t * w, runs, run_stride, w) };
+                        // SAFETY: this thread drives the tile alone
                         let win = unsafe { tile.window() };
                         let mut scratch = vec![0.0; runs * w];
                         win.permute_rows(0, run_stride, w, &[1, 2, 0], &mut scratch);
@@ -983,12 +1112,109 @@ mod tests {
     }
 
     #[test]
-    #[cfg(debug_assertions)]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
     #[should_panic(expected = "claimed twice")]
-    fn shared_slice_double_claim_panics_in_debug() {
+    fn shared_slice_double_claim_panics_when_tracked() {
         let mut xs = vec![0u8; 4];
         let shared = SharedSlice::new(&mut xs);
+        // SAFETY: tracked builds catch the deliberate double claim below
         let _a = unsafe { shared.claim_mut(2) };
+        // SAFETY: claims twice on purpose — the claim map panics
         let _b = unsafe { shared.claim_mut(2) };
+    }
+
+    /// The owner-tag diagnostic the tracked claim map exists for: an
+    /// overlapping carve names BOTH claimants (worker + unit), so a
+    /// collision between two plan units pins the offending pair directly.
+    #[test]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
+    #[should_panic(expected = "first=w1:u7 second=w2:u9")]
+    fn overlapping_pole_names_both_claimants() {
+        let mut buf = vec![0f64; 8];
+        let cells = GridCells::new(&mut buf);
+        set_claim_owner(1, 7);
+        // SAFETY: tracked builds catch the deliberate overlap below
+        let _a = unsafe { cells.pole(0, 2, 4) }; // evens
+        set_claim_owner(2, 9);
+        // SAFETY: overlaps on purpose — the claim map panics before any use
+        let _b = unsafe { cells.pole(0, 4, 2) }; // slot 0 collides
+    }
+
+    #[test]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
+    #[should_panic(expected = "first=w3:u11 second=w4:u12")]
+    fn overlapping_block_names_both_claimants() {
+        let mut buf = vec![0f64; 8];
+        let cells = GridCells::new(&mut buf);
+        set_claim_owner(3, 11);
+        // SAFETY: tracked builds catch the deliberate overlap below
+        let _a = unsafe { cells.block(0, 5) };
+        set_claim_owner(4, 12);
+        // SAFETY: overlaps on purpose — the claim map panics before any use
+        let _b = unsafe { cells.block(4, 2) }; // slot 4 collides
+    }
+
+    #[test]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
+    #[should_panic(expected = "first=w5:u1 second=w6:u2")]
+    fn overlapping_tile_names_both_claimants() {
+        let mut buf = vec![0f64; 16];
+        let cells = GridCells::new(&mut buf);
+        set_claim_owner(5, 1);
+        // SAFETY: tracked builds catch the deliberate overlap below
+        let _a = unsafe { cells.tile(0, 2, 8, 4) }; // slots 0..4, 8..12
+        set_claim_owner(6, 2);
+        // SAFETY: overlaps on purpose — the claim map panics before any use
+        let _b = unsafe { cells.tile(8, 1, 4, 4) }; // slots 8..12 collide
+    }
+
+    #[test]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
+    #[should_panic(expected = "first=w7:u3 second=w8:u4")]
+    fn shared_slice_double_claim_names_both_claimants() {
+        let mut xs = vec![0u8; 4];
+        let shared = SharedSlice::new(&mut xs);
+        set_claim_owner(7, 3);
+        // SAFETY: tracked builds catch the deliberate double claim below
+        let _a = unsafe { shared.claim_mut(1) };
+        set_claim_owner(8, 4);
+        // SAFETY: claims twice on purpose — the claim map panics
+        let _b = unsafe { shared.claim_mut(1) };
+    }
+
+    /// Threads that never tag themselves still get distinguishable ids in
+    /// the diagnostic (anonymous workers, unit `u?`).
+    #[test]
+    #[cfg(any(debug_assertions, feature = "claimcheck"))]
+    fn anonymous_claimants_are_distinguishable() {
+        let mut buf = vec![0f64; 4];
+        let cells = GridCells::new(&mut buf);
+        let cells = &cells;
+        let msg = std::thread::scope(|s| {
+            // claim slot 0 from an untagged helper thread...
+            let first = s
+                .spawn(move || {
+                    // SAFETY: the view leaks (forget), so the claim stays
+                    // live after the thread exits — intentional here
+                    std::mem::forget(unsafe { cells.pole(0, 1, 1) });
+                })
+                .join();
+            assert!(first.is_ok());
+            // ...then collide from a second untagged thread
+            s.spawn(move || {
+                // SAFETY: overlaps on purpose — the claim map panics
+                let _ = unsafe { cells.block(0, 2) };
+            })
+            .join()
+            .unwrap_err()
+        });
+        let text = msg
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("panic payload should be the formatted claim diagnostic");
+        assert!(text.contains("overlapping carve"), "got: {text}");
+        // both claimants drew anonymous tags: w<anon-id>:u?
+        let anon = text.matches(":u?").count();
+        assert_eq!(anon, 2, "expected two anonymous claimants in: {text}");
     }
 }

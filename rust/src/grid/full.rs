@@ -17,6 +17,9 @@ static BUFFER_ALLOCS: AtomicU64 = AtomicU64::new(0);
 
 /// Total fresh grid-buffer allocations so far (see [`BUFFER_ALLOCS`]).
 pub fn grid_buffer_allocs() -> u64 {
+    // ORDERING: Relaxed — telemetry counter; the reuse-contract tests read
+    // it only after joining the threads that allocate (happens-before via
+    // the join), so no ordering is carried by the atomic itself
     BUFFER_ALLOCS.load(Ordering::Relaxed)
 }
 
@@ -120,6 +123,7 @@ impl FullGrid {
     pub fn with_buffer(levels: LevelVector, align: usize, mut buf: Vec<f64>) -> Self {
         let (row_len, strides, total) = Self::geometry(&levels, align);
         if buf.capacity() < total {
+            // ORDERING: Relaxed — telemetry counter; see grid_buffer_allocs
             BUFFER_ALLOCS.fetch_add(1, Ordering::Relaxed);
         }
         buf.clear();
@@ -447,6 +451,7 @@ impl Clone for FullGrid {
     /// [`grid_buffer_allocs`] — the derive would hide exactly the
     /// allocations the serve counter pin exists to catch.
     fn clone(&self) -> Self {
+        // ORDERING: Relaxed — telemetry counter; see grid_buffer_allocs
         BUFFER_ALLOCS.fetch_add(1, Ordering::Relaxed);
         Self {
             levels: self.levels.clone(),

@@ -18,7 +18,7 @@ mod point;
 mod pole;
 
 pub use bfs::{bfs_from_position, bfs_to_position, BfsNav, LayoutMap};
-pub use cells::{BlockView, GridCells, PoleView, SharedSlice, TileView};
+pub use cells::{set_claim_owner, BlockView, GridCells, PoleView, SharedSlice, TileView};
 pub use full::{convert_sweeps_on_thread, grid_buffer_allocs, AxisLayout, FullGrid};
 pub use level::{LevelVector, MAX_DIM};
 pub use point::{hier_coords, position_of, predecessors, HierCoord1d};

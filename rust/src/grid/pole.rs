@@ -181,9 +181,10 @@ mod tests {
         for ax in 0..3 {
             let poles = Poles::of(&g, ax);
             let cells = g.cells();
-            // SAFETY: poles of one decomposition are pairwise disjoint
-            let views: Vec<_> =
-                (0..poles.count()).map(|q| unsafe { poles.pole_view(&cells, q) }).collect();
+            let views: Vec<_> = (0..poles.count())
+                // SAFETY: poles of one decomposition are pairwise disjoint
+                .map(|q| unsafe { poles.pole_view(&cells, q) })
+                .collect();
             let covered: usize = views.iter().map(|v| v.len()).sum();
             assert_eq!(covered, total, "axis {ax}");
         }
@@ -196,9 +197,10 @@ mod tests {
         for ax in 1..3 {
             let poles = Poles::of(&g, ax);
             let cells = g.cells();
-            // SAFETY: outer blocks are pairwise disjoint
-            let views: Vec<_> =
-                (0..poles.outer).map(|ob| unsafe { poles.block_view(&cells, ob) }).collect();
+            let views: Vec<_> = (0..poles.outer)
+                // SAFETY: outer blocks are pairwise disjoint
+                .map(|ob| unsafe { poles.block_view(&cells, ob) })
+                .collect();
             let covered: usize = views.iter().map(|v| v.len()).sum();
             assert_eq!(covered, total, "axis {ax}");
         }

@@ -394,7 +394,10 @@ where
     let workers = threads.min(n_units);
     if workers <= 1 {
         for k in 0..n_units {
-            f(unit(k));
+            let u = unit(k);
+            // tracked builds: claim-map diagnostics name worker 0 + unit u
+            crate::grid::set_claim_owner(0, u);
+            f(u);
         }
         return;
     }
@@ -403,16 +406,27 @@ where
     let chunk = (n_units / (workers * 8)).max(1);
     let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
-        for _ in 0..workers {
+        for w in 0..workers {
             let (next, f, unit) = (&next, f, &unit);
             s.spawn(move || loop {
+                // ORDERING: Relaxed — the cursor only partitions indices:
+                // RMW atomicity gives every fetch_add a distinct range, so
+                // no unit runs twice.  The grid data the units write is
+                // published to the caller by the scope join below (a full
+                // happens-before edge), not through this cursor, and
+                // claim/release pairs across dimensions are ordered by the
+                // same join — Relaxed loses nothing.
                 let start = next.fetch_add(chunk, Ordering::Relaxed);
                 if start >= n_units {
                     break;
                 }
                 let end = (start + chunk).min(n_units);
                 for kk in start..end {
-                    f(unit(kk));
+                    let u = unit(kk);
+                    // tracked builds: tag this worker + unit so an
+                    // overlapping carve names both colliding units
+                    crate::grid::set_claim_owner(w, u);
+                    f(u);
                 }
             });
         }

@@ -27,10 +27,17 @@ use crate::grid::BlockView;
 
 /// True if the AVX fast paths are in use on this machine.  Forced off under
 /// Miri: the interpreter has no AVX, and the scalar paths are the ones whose
-/// aliasing discipline the `miri` CI job checks.
+/// aliasing discipline the `miri` CI job checks.  Setting `SGCT_NO_AVX` to
+/// anything but `0` also forces the scalar paths — the sanitizer CI jobs
+/// (TSan/ASan) use it, since `-Zbuild-std` + `#[target_feature]` dispatch is
+/// exactly the corner sanitizer runtimes are touchy about.  Callers cache
+/// the answer (see [`kernels`]), so flip the variable before first use.
 pub fn avx_available() -> bool {
     #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
+        if std::env::var_os("SGCT_NO_AVX").is_some_and(|v| v != "0") {
+            return false;
+        }
         std::arch::is_x86_feature_detected!("avx")
     }
     #[cfg(not(all(target_arch = "x86_64", not(miri))))]
@@ -139,17 +146,21 @@ pub mod avx {
         super::check_disjoint(dst, a, len);
         let x = b.row_ptr(dst, len);
         let pa = b.row_const(a, len);
-        let half = _mm256_set1_pd(0.5);
-        let mut i = 0;
-        while i + 4 <= len {
-            let va = _mm256_loadu_pd(pa.add(i));
-            let vx = _mm256_loadu_pd(x.add(i));
-            _mm256_storeu_pd(x.add(i), _mm256_sub_pd(vx, _mm256_mul_pd(half, va)));
-            i += 4;
-        }
-        while i < len {
-            *x.add(i) -= 0.5 * *pa.add(i);
-            i += 1;
+        // SAFETY: AVX is the fn's documented precondition; the row pointers
+        // come from the carved view, which bounds them against the buffer
+        unsafe {
+            let half = _mm256_set1_pd(0.5);
+            let mut i = 0;
+            while i + 4 <= len {
+                let va = _mm256_loadu_pd(pa.add(i));
+                let vx = _mm256_loadu_pd(x.add(i));
+                _mm256_storeu_pd(x.add(i), _mm256_sub_pd(vx, _mm256_mul_pd(half, va)));
+                i += 4;
+            }
+            while i < len {
+                *x.add(i) -= 0.5 * *pa.add(i);
+                i += 1;
+            }
         }
     }
 
@@ -164,19 +175,22 @@ pub mod avx {
         let x = b.row_ptr(dst, len);
         let pa = b.row_const(a, len);
         let pb = b.row_const(bb, len);
-        let half = _mm256_set1_pd(0.5);
-        let mut i = 0;
-        while i + 4 <= len {
-            let va = _mm256_loadu_pd(pa.add(i));
-            let vb = _mm256_loadu_pd(pb.add(i));
-            let vx = _mm256_loadu_pd(x.add(i));
-            let t = _mm256_sub_pd(vx, _mm256_mul_pd(half, va));
-            _mm256_storeu_pd(x.add(i), _mm256_sub_pd(t, _mm256_mul_pd(half, vb)));
-            i += 4;
-        }
-        while i < len {
-            *x.add(i) = (*x.add(i) - 0.5 * *pa.add(i)) - 0.5 * *pb.add(i);
-            i += 1;
+        // SAFETY: as in sub1 — AVX precondition + view-bounded rows
+        unsafe {
+            let half = _mm256_set1_pd(0.5);
+            let mut i = 0;
+            while i + 4 <= len {
+                let va = _mm256_loadu_pd(pa.add(i));
+                let vb = _mm256_loadu_pd(pb.add(i));
+                let vx = _mm256_loadu_pd(x.add(i));
+                let t = _mm256_sub_pd(vx, _mm256_mul_pd(half, va));
+                _mm256_storeu_pd(x.add(i), _mm256_sub_pd(t, _mm256_mul_pd(half, vb)));
+                i += 4;
+            }
+            while i < len {
+                *x.add(i) = (*x.add(i) - 0.5 * *pa.add(i)) - 0.5 * *pb.add(i);
+                i += 1;
+            }
         }
     }
 
@@ -191,17 +205,20 @@ pub mod avx {
         let x = b.row_ptr(dst, len);
         let pa = b.row_const(a, len);
         let pb = b.row_const(bb, len);
-        let half = _mm256_set1_pd(0.5);
-        let mut i = 0;
-        while i + 4 <= len {
-            let s = _mm256_add_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)));
-            let vx = _mm256_loadu_pd(x.add(i));
-            _mm256_storeu_pd(x.add(i), _mm256_sub_pd(vx, _mm256_mul_pd(half, s)));
-            i += 4;
-        }
-        while i < len {
-            *x.add(i) -= 0.5 * (*pa.add(i) + *pb.add(i));
-            i += 1;
+        // SAFETY: as in sub1 — AVX precondition + view-bounded rows
+        unsafe {
+            let half = _mm256_set1_pd(0.5);
+            let mut i = 0;
+            while i + 4 <= len {
+                let s = _mm256_add_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)));
+                let vx = _mm256_loadu_pd(x.add(i));
+                _mm256_storeu_pd(x.add(i), _mm256_sub_pd(vx, _mm256_mul_pd(half, s)));
+                i += 4;
+            }
+            while i < len {
+                *x.add(i) -= 0.5 * (*pa.add(i) + *pb.add(i));
+                i += 1;
+            }
         }
     }
 
@@ -214,17 +231,20 @@ pub mod avx {
         super::check_disjoint(dst, a, len);
         let x = b.row_ptr(dst, len);
         let pa = b.row_const(a, len);
-        let half = _mm256_set1_pd(0.5);
-        let mut i = 0;
-        while i + 4 <= len {
-            let va = _mm256_loadu_pd(pa.add(i));
-            let vx = _mm256_loadu_pd(x.add(i));
-            _mm256_storeu_pd(x.add(i), _mm256_add_pd(vx, _mm256_mul_pd(half, va)));
-            i += 4;
-        }
-        while i < len {
-            *x.add(i) += 0.5 * *pa.add(i);
-            i += 1;
+        // SAFETY: as in sub1 — AVX precondition + view-bounded rows
+        unsafe {
+            let half = _mm256_set1_pd(0.5);
+            let mut i = 0;
+            while i + 4 <= len {
+                let va = _mm256_loadu_pd(pa.add(i));
+                let vx = _mm256_loadu_pd(x.add(i));
+                _mm256_storeu_pd(x.add(i), _mm256_add_pd(vx, _mm256_mul_pd(half, va)));
+                i += 4;
+            }
+            while i < len {
+                *x.add(i) += 0.5 * *pa.add(i);
+                i += 1;
+            }
         }
     }
 
@@ -239,19 +259,22 @@ pub mod avx {
         let x = b.row_ptr(dst, len);
         let pa = b.row_const(a, len);
         let pb = b.row_const(bb, len);
-        let half = _mm256_set1_pd(0.5);
-        let mut i = 0;
-        while i + 4 <= len {
-            let va = _mm256_loadu_pd(pa.add(i));
-            let vb = _mm256_loadu_pd(pb.add(i));
-            let vx = _mm256_loadu_pd(x.add(i));
-            let t = _mm256_add_pd(vx, _mm256_mul_pd(half, va));
-            _mm256_storeu_pd(x.add(i), _mm256_add_pd(t, _mm256_mul_pd(half, vb)));
-            i += 4;
-        }
-        while i < len {
-            *x.add(i) = (*x.add(i) + 0.5 * *pa.add(i)) + 0.5 * *pb.add(i);
-            i += 1;
+        // SAFETY: as in sub1 — AVX precondition + view-bounded rows
+        unsafe {
+            let half = _mm256_set1_pd(0.5);
+            let mut i = 0;
+            while i + 4 <= len {
+                let va = _mm256_loadu_pd(pa.add(i));
+                let vb = _mm256_loadu_pd(pb.add(i));
+                let vx = _mm256_loadu_pd(x.add(i));
+                let t = _mm256_add_pd(vx, _mm256_mul_pd(half, va));
+                _mm256_storeu_pd(x.add(i), _mm256_add_pd(t, _mm256_mul_pd(half, vb)));
+                i += 4;
+            }
+            while i < len {
+                *x.add(i) = (*x.add(i) + 0.5 * *pa.add(i)) + 0.5 * *pb.add(i);
+                i += 1;
+            }
         }
     }
 }
@@ -275,18 +298,23 @@ mod shims {
 
     // safe shims: only ever installed after a successful runtime check
     pub fn sub1(b: &BlockView, x: usize, a: usize, n: usize) {
+        // SAFETY: kernels() installs this shim only when avx_available()
         unsafe { super::avx::sub1(b, x, a, n) }
     }
     pub fn sub2(b: &BlockView, x: usize, a: usize, bb: usize, n: usize) {
+        // SAFETY: kernels() installs this shim only when avx_available()
         unsafe { super::avx::sub2(b, x, a, bb, n) }
     }
     pub fn sub2_reduced(b: &BlockView, x: usize, a: usize, bb: usize, n: usize) {
+        // SAFETY: kernels() installs this shim only when avx_available()
         unsafe { super::avx::sub2_reduced(b, x, a, bb, n) }
     }
     pub fn add1(b: &BlockView, x: usize, a: usize, n: usize) {
+        // SAFETY: kernels() installs this shim only when avx_available()
         unsafe { super::avx::add1(b, x, a, n) }
     }
     pub fn add2(b: &BlockView, x: usize, a: usize, bb: usize, n: usize) {
+        // SAFETY: kernels() installs this shim only when avx_available()
         unsafe { super::avx::add2(b, x, a, bb, n) }
     }
 }

@@ -72,12 +72,24 @@
 //! shared-buffer access inside the Rust aliasing model: a [`grid::GridCells`]
 //! handle owns the exclusive borrow of a grid buffer and hands out *checked*
 //! [`grid::PoleView`]/[`grid::BlockView`] carve-outs (disjointness asserted
-//! on an atomic claim map in debug builds), while the coordinator pools
-//! claim whole grids through [`grid::SharedSlice`].  No kernel ever
-//! materializes a `&mut [f64]` that another thread can observe; the CI
-//! `miri` job runs the unsafe-core unit tests and a scoped-down conformance
-//! suite under the interpreter to hold that claim (see the README's
-//! "aliasing model & safety argument").
+//! on an owner-tagged atomic claim map in tracked builds — debug, or the
+//! `claimcheck` feature in optimized builds — whose overlap panic names
+//! *both* claimants by worker and unit), while the coordinator pools claim
+//! whole grids through [`grid::SharedSlice`].  No kernel ever materializes
+//! a `&mut [f64]` that another thread can observe; the CI `miri` job runs
+//! the unsafe-core unit tests and a scoped-down conformance suite under the
+//! interpreter, and the `tsan`/`asan` jobs re-run the concurrent engine
+//! under ThreadSanitizer/AddressSanitizer with the claim map compiled in.
+//!
+//! That discipline is machine-checked, not aspirational: the dependency-free
+//! workspace tool `rust/xtask` (`cargo xtask analyze`, CI's `analysis` job)
+//! lexes the tree and enforces SAFETY comments plus a per-module allowlist
+//! and pinned budgets for every `unsafe` site (`rust/xtask/analyze.toml`,
+//! `rust/xtask/unsafe_budget.toml`), bans `&mut [f64]`/`.as_mut_ptr()`
+//! regressions in the view-form layers, requires an `// ORDERING:`
+//! justification on every atomic `Ordering::` use, and cross-checks the
+//! wire constants (frame kinds, `RejectReason` codes, `MAX_FRAME`).  The
+//! unsafe census lands in `rust/ANALYSIS_unsafe_inventory.json`.
 //!
 //! See `README.md` for the engine walkthrough and the strong-scaling bench,
 //! `DESIGN.md` for the system inventory and the per-figure experiment

@@ -12,6 +12,8 @@ use std::time::Instant;
 #[inline(always)]
 pub fn now_cycles() -> u64 {
     #[cfg(target_arch = "x86_64")]
+    // SAFETY: RDTSC is baseline x86_64 — unconditionally executable, no
+    // memory access; the intrinsic is only `unsafe` for uniformity
     unsafe {
         core::arch::x86_64::_rdtsc()
     }

@@ -130,17 +130,26 @@ struct Shared {
 impl Shared {
     fn stats(&self) -> ServeStats {
         ServeStats {
+            // ORDERING: SeqCst — off the hot path (a stats frame per
+            // client request at most); the single total order keeps the
+            // counters mutually consistent enough for the smoke tests
+            // without reasoning about per-counter pairs
             jobs_done: self.jobs_done.load(Ordering::SeqCst),
             rejected_busy: self.rejected_busy.load(Ordering::SeqCst),
             rejected_too_large: self.rejected_too_large.load(Ordering::SeqCst),
             arena_fresh: self.arena.fresh_allocations(),
             arena_reuses: self.arena.reuses(),
             grid_buffer_allocs: grid_buffer_allocs(),
+            // ORDERING: SeqCst — same argument as the counters above
             in_flight: self.in_flight.load(Ordering::SeqCst),
         }
     }
 
     fn stop(&self) {
+        // ORDERING: SeqCst — the shutdown flag is a cross-thread control
+        // signal read by the accept loop, sessions, and workers; SeqCst
+        // makes "stop then notify" totally ordered against every check,
+        // and shutdown happens once — cost is irrelevant
         self.shutdown.store(true, Ordering::SeqCst);
         self.available.notify_all();
     }
@@ -223,6 +232,7 @@ impl ServerHandle {
 /// responsive to the flag.  Dropping `listener` on exit removes the
 /// socket and its lockfile.
 fn accept_loop(shared: Arc<Shared>, listener: BoundListener) {
+    // ORDERING: SeqCst — shutdown flag; see Shared::stop
     while !shared.shutdown.load(Ordering::SeqCst) {
         match UnixSocket::accept_timeout(&listener, POLL) {
             Ok(sock) => {
@@ -280,6 +290,8 @@ fn session(shared: Arc<Shared>, mut sock: UnixSocket) {
                     }
                 };
                 if weight > shared.cfg.max_flops || reply_bytes > MAX_FRAME as u64 {
+                    // ORDERING: SeqCst — stats counter, off the hot path;
+                    // see Shared::stats
                     shared.rejected_too_large.fetch_add(1, Ordering::SeqCst);
                     if sock
                         .send(&wire::encode_job_err(id, RejectReason::TooLarge, weight, dim))
@@ -292,6 +304,7 @@ fn session(shared: Arc<Shared>, mut sock: UnixSocket) {
                 let (tx, rx) = sync_channel::<Vec<u8>>(1);
                 let admitted = {
                     let mut q = shared.queue.lock().expect("serve queue poisoned");
+                    // ORDERING: SeqCst — shutdown flag; see Shared::stop
                     if shared.shutdown.load(Ordering::SeqCst)
                         || q.heap.len() >= shared.cfg.queue.max(1)
                     {
@@ -306,12 +319,15 @@ fn session(shared: Arc<Shared>, mut sock: UnixSocket) {
                             reply: tx,
                             arrived: Instant::now(),
                         });
+                        // ORDERING: SeqCst — stats counter under the queue
+                        // lock; see Shared::stats
                         shared.in_flight.fetch_add(1, Ordering::SeqCst);
                         shared.available.notify_one();
                         true
                     }
                 };
                 if !admitted {
+                    // ORDERING: SeqCst — stats counter; see Shared::stats
                     shared.rejected_busy.fetch_add(1, Ordering::SeqCst);
                     let depth = shared.cfg.queue as u64;
                     if sock
@@ -346,6 +362,7 @@ fn worker(shared: Arc<Shared>) {
                 if let Some(p) = q.heap.pop() {
                     break p;
                 }
+                // ORDERING: SeqCst — shutdown flag; see Shared::stop
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
@@ -360,6 +377,7 @@ fn worker(shared: Arc<Shared>) {
         // answer the caller has already stopped waiting for
         let deadline = pending.spec.deadline_ms;
         if deadline > 0 && pending.arrived.elapsed() >= Duration::from_millis(deadline as u64) {
+            // ORDERING: SeqCst — stats counter; see Shared::stats
             shared.in_flight.fetch_sub(1, Ordering::SeqCst);
             let waited = pending.arrived.elapsed().as_millis() as u64;
             let _ = pending
@@ -376,11 +394,13 @@ fn worker(shared: Arc<Shared>) {
         }));
         let reply = match outcome {
             Ok(Ok(sg)) => {
+                // ORDERING: SeqCst — stats counter; see Shared::stats
                 shared.jobs_done.fetch_add(1, Ordering::SeqCst);
                 wire::encode_job_ok(id, &sg, dim)
             }
             Ok(Err(_)) | Err(_) => wire::encode_job_err(id, RejectReason::Internal, 0, dim),
         };
+        // ORDERING: SeqCst — stats counter; see Shared::stats
         shared.in_flight.fetch_sub(1, Ordering::SeqCst);
         // a dead client's session dropped the receiver; discarding the
         // reply is the whole containment story

@@ -1,0 +1,30 @@
+// Fixture: wire-constant violations. Never compiled.
+
+pub const KIND_HELLO: u8 = 1;
+// BAD: same value as KIND_HELLO.
+pub const KIND_GOODBYE: u8 = 1;
+// BAD: outside the 0..=9 wire range.
+pub const KIND_OVERFLOW: u8 = 12;
+
+pub enum RejectReason {
+    Busy,
+    TooLarge,
+}
+
+impl RejectReason {
+    pub fn code(&self) -> u8 {
+        match self {
+            RejectReason::Busy => 1,
+            RejectReason::TooLarge => 2,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<RejectReason> {
+        Some(match code {
+            1 => RejectReason::Busy,
+            // BAD: encodes to 2 but decodes from 3 — not a bijection.
+            3 => RejectReason::TooLarge,
+            _ => return None,
+        })
+    }
+}

@@ -1,0 +1,14 @@
+// Fixture: aliasing-guard violations inside a scoped dir. Never compiled.
+
+// BAD: whole-buffer `&mut [f64]` in hierarchize/ — the pre-view-form shape.
+pub fn hierarchize_in_place(values: &mut [f64], stride: usize) {
+    let n = values.len() / stride.max(1);
+    for i in 0..n {
+        values[i * stride] += 1.0;
+    }
+}
+
+pub fn leak_a_pointer(buffer: &mut Vec<f64>) -> *mut f64 {
+    // BAD: raw grid pointer from a slice instead of a carved view.
+    buffer.as_mut_ptr()
+}

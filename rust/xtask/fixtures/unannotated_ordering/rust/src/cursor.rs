@@ -1,0 +1,20 @@
+// Fixture: atomics-audit violation. Never compiled.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct Cursor {
+    next: AtomicUsize,
+}
+
+impl Cursor {
+    pub fn good(&self) -> usize {
+        // ORDERING: Relaxed — the cursor only partitions indices; data it
+        // guards is published by the enclosing scope join. This site must
+        // NOT fire.
+        self.next.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn bad(&self) -> usize {
+        self.next.fetch_add(1, Ordering::SeqCst)
+    }
+}

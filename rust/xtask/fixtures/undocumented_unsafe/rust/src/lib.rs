@@ -1,0 +1,12 @@
+// Fixture: unsafe-discipline violations. Never compiled.
+
+pub fn read_first(xs: &[f64]) -> f64 {
+    // BAD: no SAFETY comment on the unsafe block.
+    unsafe { *xs.as_ptr() }
+}
+
+// SAFETY: documented, but this fixture tree has no analyze.toml, so the
+// module is not on the unsafe allowlist — the allowlist rule must fire.
+pub unsafe fn documented_but_unallowed(p: *const f64) -> f64 {
+    unsafe { *p }
+}

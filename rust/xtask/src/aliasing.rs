@@ -1,0 +1,50 @@
+//! Lint family 2: aliasing-contract regression guard.
+//!
+//! PR 2 replaced whole-buffer `&mut [f64]` sharing with the checked
+//! `PoleView` / `BlockView` / `TileView` / `SharedSlice` carve-outs of
+//! `grid::cells`.  This guard machine-enforces that discipline where it
+//! matters — the kernel, coordinator, and comm layers: any `&mut [f64]`
+//! or `.as_mut_ptr()` appearing in those directories outside the
+//! view-form allowlist is a regression toward the pre-PR-2 pattern and
+//! fails the build.
+
+use crate::config::Config;
+use crate::scan::{SourceFile, Violation};
+
+const PATTERNS: &[(&str, &str)] = &[
+    (
+        "&mut[f64]",
+        "`&mut [f64]` in a view-form layer — carve a PoleView/BlockView/TileView or \
+         share through SharedSlice instead (grid::cells)",
+    ),
+    (
+        ".as_mut_ptr",
+        "`.as_mut_ptr()` outside grid::cells — raw grid pointers must come from a \
+         carved view, not a slice",
+    ),
+];
+
+pub fn check(files: &[SourceFile], cfg: &Config) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for file in files {
+        let scoped = cfg.aliasing_scoped.iter().any(|d| file.rel.starts_with(d.as_str()));
+        if !scoped || cfg.aliasing_allowed.iter().any(|f| f == &file.rel) {
+            continue;
+        }
+        for (idx, line) in file.lines.iter().enumerate() {
+            // whitespace-insensitive match: `&mut [f64]` == `&mut  [ f64 ]`
+            let squashed: String = line.code.chars().filter(|c| !c.is_whitespace()).collect();
+            for (pattern, message) in PATTERNS {
+                if squashed.contains(pattern) {
+                    out.push(Violation::new(
+                        "aliasing",
+                        &file.rel,
+                        idx + 1,
+                        (*message).to_string(),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}

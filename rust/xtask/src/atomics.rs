@@ -1,0 +1,66 @@
+//! Lint family 3a: atomics audit.
+//!
+//! Every use of a `std::sync::atomic` memory ordering must carry an
+//! `// ORDERING:` justification comment on the same line or within the
+//! configured window of lines above it.  The claim-map and cursor
+//! `Relaxed`s are correct for subtle reasons (RMW totality, external
+//! happens-before edges) — the comment convention pins those arguments to
+//! the sites so a future edit cannot silently weaken or cargo-cult them.
+
+use crate::config::Config;
+use crate::scan::{SourceFile, Violation};
+
+/// The atomic orderings; `Ordering::Equal` & friends (cmp) never match.
+const ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+fn uses_atomic_ordering(code: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("Ordering::") {
+        let rest = &code[from + pos + "Ordering::".len()..];
+        if ORDERINGS.iter().any(|o| {
+            rest.strip_prefix(o).is_some_and(|t| !t.starts_with(char::is_alphanumeric))
+        }) {
+            return true;
+        }
+        from += pos + "Ordering::".len();
+    }
+    false
+}
+
+pub fn check(files: &[SourceFile], cfg: &Config) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for file in files {
+        for (idx, line) in file.lines.iter().enumerate() {
+            if !uses_atomic_ordering(&line.code) {
+                continue;
+            }
+            let lo = idx.saturating_sub(cfg.ordering_window);
+            let justified =
+                file.lines[lo..=idx].iter().any(|l| l.comment.contains("ORDERING:"));
+            if !justified {
+                out.push(Violation::new(
+                    "atomics",
+                    &file.rel,
+                    idx + 1,
+                    "atomic `Ordering::` use without an `// ORDERING:` justification \
+                     comment (same line or the lines directly above)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::uses_atomic_ordering;
+
+    #[test]
+    fn cmp_ordering_is_ignored() {
+        assert!(!uses_atomic_ordering("self.cmp(other) == Ordering::Equal"));
+        assert!(uses_atomic_ordering("x.load(Ordering::SeqCst)"));
+        assert!(uses_atomic_ordering("atomic::Ordering::Relaxed"));
+        assert!(!uses_atomic_ordering("Ordering::Less.then(Ordering::Greater)"));
+    }
+}

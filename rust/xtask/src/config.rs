@@ -1,0 +1,197 @@
+//! Analysis configuration: `rust/xtask/analyze.toml` (allowlists, scopes)
+//! and `rust/xtask/unsafe_budget.toml` (per-module unsafe budgets).
+//!
+//! Both files are parsed by a tiny TOML-subset reader — sections, string /
+//! integer / string-array values, `#` comments — so the gate stays free of
+//! registry dependencies.  Missing files fall back to empty allowlists and
+//! budgets, which is exactly what the known-bad fixture trees rely on:
+//! with nothing allowlisted, every planted violation fires.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Str(String),
+    List(Vec<String>),
+}
+
+/// `section -> key -> value`, in file order within a section.
+pub type Toml = BTreeMap<String, Vec<(String, Value)>>;
+
+/// Parse the TOML subset.  Unknown shapes fail loudly — a silently
+/// misread allowlist would turn the gate off.
+pub fn parse_toml(text: &str, origin: &str) -> Result<Toml, String> {
+    let mut out: Toml = BTreeMap::new();
+    let mut section = String::new();
+    let mut lines = text.lines().enumerate();
+    while let Some((n, raw)) = lines.next() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, mut value) = line
+            .split_once('=')
+            .map(|(k, v)| (unquote(k.trim()), v.trim().to_string()))
+            .ok_or_else(|| format!("{origin}:{}: expected `key = value`", n + 1))?;
+        // multi-line arrays: keep consuming lines until the bracket closes
+        if value.starts_with('[') && !value.ends_with(']') {
+            for (_, more) in lines.by_ref() {
+                value.push(' ');
+                value.push_str(strip_comment(more).trim());
+                if value.ends_with(']') {
+                    break;
+                }
+            }
+        }
+        let parsed = parse_value(&value)
+            .ok_or_else(|| format!("{origin}:{}: cannot parse value `{value}`", n + 1))?;
+        out.entry(section.clone()).or_default().push((key, parsed));
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` never appears inside the string values these files use
+    line.split_once('#').map_or(line, |(head, _)| head)
+}
+
+fn unquote(s: &str) -> String {
+    s.strip_prefix('"')
+        .and_then(|t| t.strip_suffix('"'))
+        .unwrap_or(s)
+        .to_string()
+}
+
+fn parse_value(v: &str) -> Option<Value> {
+    let v = v.trim();
+    if let Some(body) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+        let items = body
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(unquote)
+            .collect();
+        return Some(Value::List(items));
+    }
+    if v.starts_with('"') {
+        return Some(Value::Str(unquote(v)));
+    }
+    v.replace('_', "").parse::<i64>().ok().map(Value::Int)
+}
+
+/// Everything `analyze` needs to know about the tree under `--root`.
+#[derive(Debug)]
+pub struct Config {
+    /// Modules allowed to contain `unsafe` at all.
+    pub unsafe_allowed: Vec<String>,
+    /// Per-module unsafe-site budgets (site = `unsafe fn|impl|{`).
+    pub budgets: BTreeMap<String, i64>,
+    /// Directory prefixes (repo-relative) the aliasing guard patrols.
+    pub aliasing_scoped: Vec<String>,
+    /// Files (repo-relative) exempt from the aliasing guard — the
+    /// view-form allowlist.
+    pub aliasing_allowed: Vec<String>,
+    /// How many lines above an `Ordering::` use an `ORDERING:` comment
+    /// may sit.
+    pub ordering_window: usize,
+    /// The wire-format source of truth (repo-relative), if present.
+    pub wire_file: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            unsafe_allowed: Vec::new(),
+            budgets: BTreeMap::new(),
+            aliasing_scoped: vec![
+                "rust/src/hierarchize".into(),
+                "rust/src/coordinator".into(),
+                "rust/src/comm".into(),
+            ],
+            aliasing_allowed: Vec::new(),
+            ordering_window: 4,
+            wire_file: "rust/src/comm/wire.rs".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Load `rust/xtask/analyze.toml` + `rust/xtask/unsafe_budget.toml`
+    /// under `root`; missing files leave the defaults in place.
+    pub fn load(root: &Path) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let analyze = root.join("rust/xtask/analyze.toml");
+        if let Ok(text) = std::fs::read_to_string(&analyze) {
+            let toml = parse_toml(&text, &analyze.display().to_string())?;
+            for (key, value) in toml.get("unsafe").into_iter().flatten() {
+                match (key.as_str(), value) {
+                    ("allowed_modules", Value::List(xs)) => cfg.unsafe_allowed = xs.clone(),
+                    _ => return Err(format!("analyze.toml: unknown [unsafe] key `{key}`")),
+                }
+            }
+            for (key, value) in toml.get("aliasing").into_iter().flatten() {
+                match (key.as_str(), value) {
+                    ("scoped_dirs", Value::List(xs)) => cfg.aliasing_scoped = xs.clone(),
+                    ("allowed_files", Value::List(xs)) => cfg.aliasing_allowed = xs.clone(),
+                    _ => return Err(format!("analyze.toml: unknown [aliasing] key `{key}`")),
+                }
+            }
+            for (key, value) in toml.get("atomics").into_iter().flatten() {
+                match (key.as_str(), value) {
+                    ("window", Value::Int(n)) => cfg.ordering_window = *n as usize,
+                    _ => return Err(format!("analyze.toml: unknown [atomics] key `{key}`")),
+                }
+            }
+            for (key, value) in toml.get("wire").into_iter().flatten() {
+                match (key.as_str(), value) {
+                    ("file", Value::Str(s)) => cfg.wire_file = s.clone(),
+                    _ => return Err(format!("analyze.toml: unknown [wire] key `{key}`")),
+                }
+            }
+        }
+        let budget = root.join("rust/xtask/unsafe_budget.toml");
+        if let Ok(text) = std::fs::read_to_string(&budget) {
+            let toml = parse_toml(&text, &budget.display().to_string())?;
+            for (key, value) in toml.get("budget").into_iter().flatten() {
+                match value {
+                    Value::Int(n) => {
+                        cfg.budgets.insert(key.clone(), *n);
+                    }
+                    _ => return Err(format!("unsafe_budget.toml: `{key}` must be an integer")),
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_lists_and_ints() {
+        let text = "# header\n[unsafe]\nallowed_modules = [\n  \"grid::cells\", # ok\n  \
+                    \"perf::cycles\",\n]\n[atomics]\nwindow = 6\n[budget]\n\"grid::cells\" = 31\n";
+        let toml = parse_toml(text, "test").unwrap();
+        assert_eq!(
+            toml["unsafe"][0].1,
+            Value::List(vec!["grid::cells".into(), "perf::cycles".into()])
+        );
+        assert_eq!(toml["atomics"][0], ("window".into(), Value::Int(6)));
+        assert_eq!(toml["budget"][0], ("grid::cells".into(), Value::Int(31)));
+    }
+
+    #[test]
+    fn bad_lines_fail_loudly() {
+        assert!(parse_toml("[x]\njust a bare line\n", "test").is_err());
+    }
+}

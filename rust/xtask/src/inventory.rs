@@ -1,0 +1,91 @@
+//! `ANALYSIS_unsafe_inventory.json` — the machine-readable unsafe census,
+//! written next to the `BENCH_*.json` artifacts under `rust/` and uploaded
+//! by the CI `analysis` job.  Hand-rolled serialization (the xtask crate is
+//! dependency-free by design).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::Config;
+use crate::unsafe_lint::UnsafeSite;
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the inventory document.
+pub fn render(sites: &[UnsafeSite], cfg: &Config) -> String {
+    let mut by_module: BTreeMap<&str, Vec<&UnsafeSite>> = BTreeMap::new();
+    for site in sites {
+        by_module.entry(site.module.as_str()).or_default().push(site);
+    }
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"total_sites\": {},\n", sites.len()));
+    out.push_str("  \"modules\": [\n");
+    let n = by_module.len();
+    for (i, (module, sites)) in by_module.iter().enumerate() {
+        let budget = cfg.budgets.get(*module).copied().unwrap_or(0);
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"module\": \"{}\",\n", json_escape(module)));
+        out.push_str(&format!("      \"count\": {},\n", sites.len()));
+        out.push_str(&format!("      \"budget\": {budget},\n"));
+        out.push_str("      \"sites\": [\n");
+        for (j, site) in sites.iter().enumerate() {
+            out.push_str(&format!(
+                "        {{\"file\": \"{}\", \"line\": {}, \"kind\": \"{}\", \
+                 \"documented\": {}}}{}\n",
+                json_escape(&site.file),
+                site.line,
+                site.kind,
+                site.documented,
+                if j + 1 < sites.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("      ]\n");
+        out.push_str(&format!("    }}{}\n", if i + 1 < n { "," } else { "" }));
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+pub fn write(path: &Path, sites: &[UnsafeSite], cfg: &Config) -> Result<(), String> {
+    std::fs::write(path, render(sites, cfg))
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn renders_valid_shape() {
+        let sites = vec![UnsafeSite {
+            file: "rust/src/grid/cells.rs".into(),
+            module: "grid::cells".into(),
+            line: 42,
+            kind: "fn",
+            documented: true,
+        }];
+        let mut cfg = Config::default();
+        cfg.budgets.insert("grid::cells".into(), 3);
+        let doc = render(&sites, &cfg);
+        assert!(doc.contains("\"total_sites\": 1"));
+        assert!(doc.contains("\"module\": \"grid::cells\""));
+        assert!(doc.contains("\"budget\": 3"));
+        assert!(doc.contains("\"documented\": true"));
+    }
+}

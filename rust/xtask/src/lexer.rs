@@ -1,0 +1,249 @@
+//! Line-level Rust lexer: just enough tokenization for the analyze lints.
+//!
+//! Each source line is split into a *code* part (string/char-literal
+//! contents removed, comments removed) and a *comment* part (the text of
+//! every comment on the line).  The lints only need word-level pattern
+//! matches on the code part and marker searches (`SAFETY:`, `ORDERING:`)
+//! on the comment part, so a full AST — and with it the syn/proc-macro
+//! dependency tree — is deliberately out of scope.
+//!
+//! Handled: line comments (`//`, `///`, `//!`), nested block comments,
+//! plain/byte strings (including multi-line), raw strings (`r"…"`,
+//! `r#"…"#`, any hash depth), and the char-literal vs. lifetime ambiguity
+//! (`'a'` is stripped, `<'a>` is kept — a heuristic, but one that only has
+//! to be right enough that literal contents never masquerade as code).
+
+/// One lexed source line.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// Code with comments removed and literal contents blanked.
+    pub code: String,
+    /// Concatenated text of every comment on the line.
+    pub comment: String,
+}
+
+impl Line {
+    /// True if the line carries no code (comment-only or blank).
+    pub fn is_code_free(&self) -> bool {
+        self.code.trim().is_empty()
+    }
+
+    /// True if the code part is an attribute (`#[…]` / `#![…]`).
+    pub fn is_attr(&self) -> bool {
+        let t = self.code.trim();
+        t.starts_with("#[") || t.starts_with("#![")
+    }
+}
+
+#[derive(Clone, Copy)]
+enum State {
+    Normal,
+    /// Inside a `"…"` (or `b"…"`) string literal.
+    Str,
+    /// Inside a raw string; the payload is the number of `#` marks.
+    RawStr(usize),
+    /// Inside a (possibly nested) block comment; payload is the depth.
+    Block(usize),
+}
+
+/// Lex a whole file into per-line code/comment parts.
+pub fn lex(source: &str) -> Vec<Line> {
+    let mut state = State::Normal;
+    let mut out = Vec::new();
+    for raw in source.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut line = Line::default();
+        let mut i = 0;
+        while i < chars.len() {
+            match state {
+                State::Block(depth) => {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(depth + 1);
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        state = if depth == 1 { State::Normal } else { State::Block(depth - 1) };
+                        i += 2;
+                    } else {
+                        line.comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if chars[i] == '\\' {
+                        i += 2; // skip the escaped char (may run off the line: fine)
+                    } else if chars[i] == '"' {
+                        line.code.push('"');
+                        state = State::Normal;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if chars[i] == '"' && closes_raw(&chars, i, hashes) {
+                        line.code.push('"');
+                        state = State::Normal;
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::Normal => {
+                    let c = chars[i];
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        // line comment: the rest of the line is comment text
+                        line.comment.extend(&chars[i + 2..]);
+                        i = chars.len();
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        line.code.push('"');
+                        state = State::Str;
+                        i += 1;
+                    } else if let Some(hashes) = raw_string_at(&chars, i) {
+                        line.code.push('"');
+                        state = State::RawStr(hashes);
+                        // skip past `r`/`br`, the hashes, and the quote
+                        let prefix = if c == 'b' { 2 } else { 1 };
+                        i += prefix + hashes + 1;
+                    } else if c == '\'' {
+                        i += strip_char_literal(&chars, i, &mut line.code);
+                    } else {
+                        line.code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(line);
+    }
+    out
+}
+
+/// Does the `"` at `chars[i]` close a raw string with `hashes` hash marks?
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// If a raw (byte) string literal starts at `chars[i]`, return its hash
+/// count.  `i` must not be in the middle of an identifier (`xr"…"` is not
+/// a raw string).
+fn raw_string_at(chars: &[char], i: usize) -> Option<usize> {
+    let c = chars[i];
+    if c != 'r' && c != 'b' {
+        return None;
+    }
+    if i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_') {
+        return None;
+    }
+    let mut j = i + 1;
+    if c == 'b' {
+        if chars.get(j) != Some(&'r') {
+            return None;
+        }
+        j += 1;
+    }
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (chars.get(j) == Some(&'"')).then_some(hashes)
+}
+
+/// Handle a `'` in code position: skip char literals (so a `'"'` cannot
+/// derail the string tracker), keep lifetimes.  Returns how many chars
+/// were consumed.
+fn strip_char_literal(chars: &[char], i: usize, code: &mut String) -> usize {
+    if chars.get(i + 1) == Some(&'\\') {
+        // escaped char literal: '\n', '\'', '\u{1F600}', …
+        let mut j = i + 2;
+        while j < chars.len() && chars[j] != '\'' {
+            j += 1;
+        }
+        code.push('\'');
+        code.push('\'');
+        return j.saturating_sub(i) + 1;
+    }
+    if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+        // plain char literal 'x' (incl. '"')
+        code.push('\'');
+        code.push('\'');
+        return 3;
+    }
+    // lifetime (or label): keep it, it cannot contain a quote
+    code.push('\'');
+    1
+}
+
+/// Word-boundary search: every start index of `word` in `code` where the
+/// match is not part of a larger identifier.
+pub fn word_positions(code: &str, word: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len();
+    }
+    out
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_stripped() {
+        let lines = lex("let x = \"unsafe { }\"; // unsafe { trailing }\n");
+        assert_eq!(lines.len(), 1);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].comment.contains("unsafe { trailing }"));
+    }
+
+    #[test]
+    fn multiline_and_raw_strings_survive() {
+        let src = "let a = \"first\nsecond unsafe {\";\nlet b = r#\"Ordering::SeqCst\"#;\n";
+        let lines = lex(src);
+        assert!(!lines[1].code.contains("unsafe"));
+        assert!(lines[1].code.contains(';'));
+        assert!(!lines[2].code.contains("Ordering"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let lines = lex("/* a /* b */ still comment */ let y = 1;\n");
+        assert!(lines[0].code.contains("let y = 1;"));
+        assert!(lines[0].comment.contains("still comment"));
+    }
+
+    #[test]
+    fn char_literal_with_quote_does_not_open_a_string() {
+        let lines = lex("let q = '\"'; let z = 2; // tail\n");
+        assert!(lines[0].code.contains("let z = 2;"));
+        assert!(lines[0].comment.contains("tail"));
+    }
+
+    #[test]
+    fn lifetimes_are_kept() {
+        let lines = lex("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert!(lines[0].code.contains("<'a>"));
+    }
+
+    #[test]
+    fn word_positions_respect_boundaries() {
+        assert_eq!(word_positions("unsafe_fn unsafe {", "unsafe"), vec![10]);
+        assert_eq!(word_positions("unsafe fn f()", "unsafe"), vec![0]);
+    }
+}

@@ -1,0 +1,233 @@
+//! `cargo xtask analyze` — the repo-local static-analysis pass.
+//!
+//! Dependency-free by design (no syn, no proc-macro: the container builds
+//! offline), so the "parser" is a line-level lexer that strips comments and
+//! string literals and the lints are structural rules over the result:
+//!
+//! * `unsafe` discipline — SAFETY comments, module allowlist, pinned
+//!   per-module budgets (`unsafe_budget.toml`);
+//! * aliasing guard — no `&mut [f64]` / `.as_mut_ptr()` in the view-form
+//!   layers outside the allowlist;
+//! * atomics audit — every `Ordering::` use justified by an `// ORDERING:`
+//!   comment, plus wire-constant cross-checks.
+//!
+//! Exit code 1 on any violation; stale budgets are warnings.  The unsafe
+//! census is emitted as `rust/ANALYSIS_unsafe_inventory.json`.
+
+#![forbid(unsafe_code)]
+
+mod aliasing;
+mod atomics;
+mod config;
+mod inventory;
+mod lexer;
+mod scan;
+mod unsafe_lint;
+mod wire_check;
+
+use std::path::{Path, PathBuf};
+
+use config::Config;
+use scan::Violation;
+
+pub struct Report {
+    pub violations: Vec<Violation>,
+    pub warnings: Vec<String>,
+    pub unsafe_sites: Vec<unsafe_lint::UnsafeSite>,
+    pub files_scanned: usize,
+}
+
+/// Run every lint family over the tree at `root`.
+pub fn analyze(root: &Path) -> Result<Report, String> {
+    let cfg = Config::load(root)?;
+    let files = scan::scan(root)?;
+    let mut violations = Vec::new();
+    let (mut unsafe_violations, warnings, unsafe_sites) = unsafe_lint::check(&files, &cfg);
+    violations.append(&mut unsafe_violations);
+    violations.extend(aliasing::check(&files, &cfg));
+    violations.extend(atomics::check(&files, &cfg));
+    violations.extend(wire_check::check(&files, &cfg));
+    Ok(Report { violations, warnings, unsafe_sites, files_scanned: files.len() })
+}
+
+fn print_report(report: &Report) {
+    for v in &report.violations {
+        if v.line == 0 {
+            eprintln!("error[{}]: {}: {}", v.family, v.file, v.message);
+        } else {
+            eprintln!("error[{}]: {}:{}: {}", v.family, v.file, v.line, v.message);
+        }
+    }
+    for w in &report.warnings {
+        eprintln!("warning: {w}");
+    }
+    eprintln!(
+        "analyze: {} files, {} unsafe sites, {} violation(s), {} warning(s)",
+        report.files_scanned,
+        report.unsafe_sites.len(),
+        report.violations.len(),
+        report.warnings.len(),
+    );
+}
+
+fn usage() -> ! {
+    eprintln!("usage: cargo xtask analyze [--root PATH] [--json PATH]");
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) != Some("analyze") {
+        usage();
+    }
+    // Default to the workspace root the binary was built in, so the alias
+    // works from any cwd; --root points the pass at fixture trees.
+    let mut root =
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../.."));
+    let mut root_overridden = false;
+    let mut json: Option<PathBuf> = None;
+    let mut it = args[1..].iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => match it.next() {
+                Some(p) => {
+                    root = PathBuf::from(p);
+                    root_overridden = true;
+                }
+                None => usage(),
+            },
+            "--json" => match it.next() {
+                Some(p) => json = Some(PathBuf::from(p)),
+                None => usage(),
+            },
+            _ => usage(),
+        }
+    }
+
+    let report = match analyze(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("analyze: {e}");
+            std::process::exit(2);
+        }
+    };
+    // Emit the census next to BENCH_*.json — but only for the real tree,
+    // never when --root points at a fixture.
+    let json = json.or_else(|| {
+        (!root_overridden).then(|| root.join("rust/ANALYSIS_unsafe_inventory.json"))
+    });
+    if let Some(path) = json {
+        let cfg = Config::load(&root).expect("config loaded once already");
+        if let Err(e) = inventory::write(&path, &report.unsafe_sites, &cfg) {
+            eprintln!("analyze: {e}");
+            std::process::exit(2);
+        }
+        eprintln!("analyze: inventory written to {}", path.display());
+    }
+    print_report(&report);
+    std::process::exit(if report.violations.is_empty() { 0 } else { 1 });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name)
+    }
+
+    fn families(report: &Report) -> Vec<&'static str> {
+        report.violations.iter().map(|v| v.family).collect()
+    }
+
+    #[test]
+    fn fixture_undocumented_unsafe_fires() {
+        let report = analyze(&fixture("undocumented_unsafe")).unwrap();
+        assert!(
+            families(&report).contains(&"unsafe"),
+            "undocumented unsafe fixture must trip the unsafe lint: {:?}",
+            report.violations.iter().map(|v| &v.message).collect::<Vec<_>>()
+        );
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| v.family == "unsafe" && v.message.contains("SAFETY")));
+        // the documented-but-unallowlisted site trips the module allowlist
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| v.family == "unsafe" && v.message.contains("allowlist")));
+    }
+
+    #[test]
+    fn fixture_mut_slice_fires() {
+        let report = analyze(&fixture("mut_slice")).unwrap();
+        assert!(
+            report.violations.iter().any(|v| v.family == "aliasing"
+                && v.message.contains("&mut [f64]")),
+            "mut-slice fixture must trip the aliasing lint: {:?}",
+            report.violations.iter().map(|v| &v.message).collect::<Vec<_>>()
+        );
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| v.family == "aliasing" && v.message.contains("as_mut_ptr")));
+    }
+
+    #[test]
+    fn fixture_unannotated_ordering_fires() {
+        let report = analyze(&fixture("unannotated_ordering")).unwrap();
+        let atomics: Vec<_> =
+            report.violations.iter().filter(|v| v.family == "atomics").collect();
+        assert_eq!(
+            atomics.len(),
+            1,
+            "exactly the unannotated site must fire (the ORDERING-commented one \
+             must not): {:?}",
+            report.violations.iter().map(|v| &v.message).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fixture_duplicate_wire_fires() {
+        let report = analyze(&fixture("duplicate_wire")).unwrap();
+        assert!(
+            report
+                .violations
+                .iter()
+                .any(|v| v.family == "wire" && v.message.contains("duplicate frame kind")),
+            "duplicate-wire fixture must trip the wire check: {:?}",
+            report.violations.iter().map(|v| &v.message).collect::<Vec<_>>()
+        );
+        assert!(report
+            .violations
+            .iter()
+            .any(|v| v.family == "wire" && v.message.contains("out of sync")));
+    }
+
+    /// The contract this whole PR pins: the real tree is clean — zero
+    /// violations AND zero stale-budget warnings.  Any new unsafe site,
+    /// naked `Ordering::`, or view-form regression fails `cargo test`.
+    #[test]
+    fn real_tree_is_clean() {
+        let root = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../.."));
+        let report = analyze(&root).unwrap();
+        assert!(
+            report.violations.is_empty(),
+            "real tree has violations:\n{}",
+            report
+                .violations
+                .iter()
+                .map(|v| format!("  [{}] {}:{}: {}", v.family, v.file, v.line, v.message))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        assert!(
+            report.warnings.is_empty(),
+            "real tree has stale budgets:\n  {}",
+            report.warnings.join("\n  ")
+        );
+        assert!(report.files_scanned > 20, "scan found too few files — wrong root?");
+        assert!(!report.unsafe_sites.is_empty(), "inventory should not be empty");
+    }
+}

@@ -1,0 +1,120 @@
+//! File discovery and shared lint types.
+
+use std::path::{Path, PathBuf};
+
+use crate::lexer::{lex, Line};
+
+/// Directories scanned under the analysis root.  The xtask crate itself is
+/// excluded on purpose: it is `#![forbid(unsafe_code)]` (compiler-enforced)
+/// and its fixtures are deliberately-bad snippets that must never count
+/// against the real tree.
+pub const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// One lexed source file.
+pub struct SourceFile {
+    /// Path relative to the analysis root, with `/` separators.
+    pub rel: String,
+    /// Module label derived from the path (e.g. `grid::cells`,
+    /// `tests::properties`, `examples::quickstart`).
+    pub module: String,
+    pub lines: Vec<Line>,
+}
+
+/// One lint finding.  `family` is the lint group (`unsafe`, `aliasing`,
+/// `atomics`, `wire`), `file`/`line` anchor it, `message` says what broke.
+pub struct Violation {
+    pub family: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Violation {
+    pub fn new(family: &'static str, file: &str, line: usize, message: String) -> Self {
+        Violation { family, file: file.to_string(), line, message }
+    }
+}
+
+/// Collect and lex every `.rs` file under the scan dirs, sorted by path so
+/// reports and the inventory are deterministic.
+pub fn scan(root: &Path) -> Result<Vec<SourceFile>, String> {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for dir in SCAN_DIRS {
+        collect(&root.join(dir), &mut paths)?;
+    }
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for path in paths {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let rel = relative(root, &path);
+        let module = module_label(&rel);
+        files.push(SourceFile { rel, module, lines: lex(&text) });
+    }
+    Ok(files)
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(()), // missing scan dir (fixture trees): skip
+    };
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("walk {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn relative(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Map a repo-relative path to the module label the allowlist/budget files
+/// key on: `rust/src/a/b.rs` -> `a::b`, `rust/src/a/mod.rs` -> `a`,
+/// `rust/src/lib.rs` -> `lib`, `rust/tests/x.rs` -> `tests::x`,
+/// `examples/x.rs` -> `examples::x`.
+pub fn module_label(rel: &str) -> String {
+    let (prefix, stripped) = if let Some(s) = rel.strip_prefix("rust/src/") {
+        ("", s)
+    } else if let Some(s) = rel.strip_prefix("rust/tests/") {
+        ("tests::", s)
+    } else if let Some(s) = rel.strip_prefix("rust/benches/") {
+        ("benches::", s)
+    } else if let Some(s) = rel.strip_prefix("examples/") {
+        ("examples::", s)
+    } else {
+        ("", rel)
+    };
+    let no_ext = stripped.strip_suffix(".rs").unwrap_or(stripped);
+    let mut parts: Vec<&str> = no_ext.split('/').collect();
+    if parts.last() == Some(&"mod") {
+        parts.pop();
+    }
+    format!("{prefix}{}", parts.join("::"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::module_label;
+
+    #[test]
+    fn module_labels_match_the_budget_keys() {
+        assert_eq!(module_label("rust/src/grid/cells.rs"), "grid::cells");
+        assert_eq!(module_label("rust/src/grid/mod.rs"), "grid");
+        assert_eq!(module_label("rust/src/lib.rs"), "lib");
+        assert_eq!(module_label("rust/tests/properties.rs"), "tests::properties");
+        assert_eq!(module_label("rust/benches/common/mod.rs"), "benches::common");
+        assert_eq!(module_label("examples/quickstart.rs"), "examples::quickstart");
+    }
+}

@@ -1,0 +1,155 @@
+//! Lint family 1: unsafe discipline.
+//!
+//! Every `unsafe fn` / `unsafe impl` / `unsafe {` must
+//!
+//! 1. carry a safety comment — `// SAFETY:` immediately above (possibly
+//!    behind attributes), or a `# Safety` doc section for `unsafe fn` —
+//! 2. live in a module on the `[unsafe] allowed_modules` allowlist, and
+//! 3. keep its module's total site count within `unsafe_budget.toml`.
+//!
+//! Growth fails the build; shrinkage is a warning asking for the budget to
+//! be re-pinned.  Clippy's `undocumented_unsafe_blocks` covers (1) for
+//! blocks in compiled code; this pass re-checks it uniformly (including
+//! files clippy does not compile) and adds (2)/(3), which no clippy lint
+//! can express.
+
+use std::collections::BTreeMap;
+
+use crate::config::Config;
+use crate::lexer::{word_positions, Line};
+use crate::scan::{SourceFile, Violation};
+
+/// One `unsafe` occurrence.
+pub struct UnsafeSite {
+    pub file: String,
+    pub module: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// `fn`, `impl`, `trait`, or `block`.
+    pub kind: &'static str,
+    pub documented: bool,
+}
+
+/// Find every unsafe site in `files`.
+pub fn sites(files: &[SourceFile]) -> Vec<UnsafeSite> {
+    let mut out = Vec::new();
+    for file in files {
+        for (idx, line) in file.lines.iter().enumerate() {
+            for pos in word_positions(&line.code, "unsafe") {
+                let rest = line.code[pos + "unsafe".len()..].trim_start();
+                let kind = classify(rest);
+                out.push(UnsafeSite {
+                    file: file.rel.clone(),
+                    module: file.module.clone(),
+                    line: idx + 1,
+                    kind,
+                    documented: has_safety_comment(&file.lines, idx),
+                });
+            }
+        }
+    }
+    out
+}
+
+fn classify(rest: &str) -> &'static str {
+    for kind in ["fn", "impl", "trait"] {
+        if rest.strip_prefix(kind).is_some_and(|t| !t.starts_with(char::is_alphanumeric)) {
+            return kind;
+        }
+    }
+    "block"
+}
+
+/// Walk upward over contiguous comment/attribute lines (plus the site
+/// line's own trailing comment) looking for a safety marker.
+fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
+    let marked = |l: &Line| l.comment.contains("SAFETY:") || l.comment.contains("# Safety");
+    if marked(&lines[idx]) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let line = &lines[j];
+        if line.is_code_free() && !line.comment.is_empty() || line.is_attr() {
+            if marked(line) {
+                return true;
+            }
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+/// Apply allowlist + budget rules.  Returns violations, warnings, and the
+/// full site inventory (for the JSON artifact).
+pub fn check(
+    files: &[SourceFile],
+    cfg: &Config,
+) -> (Vec<Violation>, Vec<String>, Vec<UnsafeSite>) {
+    let all = sites(files);
+    let mut violations = Vec::new();
+    let mut warnings = Vec::new();
+    let mut counts: BTreeMap<&str, i64> = BTreeMap::new();
+    for site in &all {
+        *counts.entry(site.module.as_str()).or_default() += 1;
+        if !site.documented {
+            violations.push(Violation::new(
+                "unsafe",
+                &site.file,
+                site.line,
+                format!(
+                    "`unsafe {}` without a SAFETY comment (// SAFETY: above the site, \
+                     or a `# Safety` doc section for unsafe fn)",
+                    site.kind
+                ),
+            ));
+        }
+        if !cfg.unsafe_allowed.iter().any(|m| m == &site.module) {
+            violations.push(Violation::new(
+                "unsafe",
+                &site.file,
+                site.line,
+                format!(
+                    "module `{}` is not on the unsafe allowlist \
+                     (rust/xtask/analyze.toml [unsafe] allowed_modules)",
+                    site.module
+                ),
+            ));
+        }
+    }
+    for (module, count) in &counts {
+        let budget = cfg.budgets.get(*module).copied().unwrap_or(0);
+        if *count > budget {
+            let file = all
+                .iter()
+                .find(|s| s.module == *module)
+                .map(|s| s.file.clone())
+                .unwrap_or_default();
+            violations.push(Violation::new(
+                "unsafe",
+                &file,
+                0,
+                format!(
+                    "module `{module}` has {count} unsafe sites, budget is {budget} \
+                     (rust/xtask/unsafe_budget.toml) — new unsafe needs a reviewed budget bump"
+                ),
+            ));
+        } else if *count < budget {
+            warnings.push(format!(
+                "unsafe budget stale: module `{module}` pins {budget} but has {count} \
+                 sites — shrink the budget to lock in the win"
+            ));
+        }
+    }
+    for module in cfg.budgets.keys() {
+        if !counts.contains_key(module.as_str()) {
+            warnings.push(format!(
+                "unsafe budget stale: module `{module}` has no unsafe sites left — \
+                 remove its budget line"
+            ));
+        }
+    }
+    (violations, warnings, all)
+}

@@ -1,0 +1,188 @@
+//! Lint family 3b: wire-constant cross-check.
+//!
+//! The wire format is the one contract two processes must agree on, so its
+//! constants are checked structurally:
+//!
+//! * frame kinds (`const KIND_*: u8`) must be unique and within 0..=9;
+//! * a `KIND_*` name redefined anywhere else in the tree (tests, benches)
+//!   must carry the same value as the wire source of truth;
+//! * `RejectReason`'s `code()` / `from_code()` match arms must be a
+//!   bijection (every `Variant => n` paired with `n => Variant`);
+//! * `MAX_FRAME` must have exactly one definition text across the tree.
+
+use std::collections::BTreeMap;
+
+use crate::config::Config;
+use crate::scan::{SourceFile, Violation};
+
+/// `const KIND_X: u8 = n;` occurrences in one file.
+fn kind_consts(file: &SourceFile) -> Vec<(String, i64, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        let code = line.code.trim();
+        let Some(pos) = code.find("const KIND_") else { continue };
+        let decl = &code[pos + "const ".len()..];
+        let Some((name, rest)) = decl.split_once(':') else { continue };
+        let Some((ty, value)) = rest.split_once('=') else { continue };
+        if ty.trim() != "u8" {
+            continue;
+        }
+        let digits = value.trim().trim_end_matches(';').trim().replace('_', "");
+        if let Ok(v) = digits.parse::<i64>() {
+            out.push((name.trim().to_string(), v, idx + 1));
+        }
+    }
+    out
+}
+
+/// `RejectReason::X => n,` / `n => RejectReason::X,` match arms.
+fn reject_arms(file: &SourceFile) -> (Vec<(String, i64, usize)>, Vec<(i64, String, usize)>) {
+    let mut to_code = Vec::new();
+    let mut from_code = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        let code = line.code.trim().trim_end_matches(',');
+        if let Some((lhs, rhs)) = code.split_once("=>") {
+            let (lhs, rhs) = (lhs.trim(), rhs.trim());
+            if let Some(variant) = lhs.strip_prefix("RejectReason::") {
+                if let Ok(n) = rhs.replace('_', "").parse::<i64>() {
+                    to_code.push((variant.to_string(), n, idx + 1));
+                }
+            } else if let Some(variant) = rhs.strip_prefix("RejectReason::") {
+                if let Ok(n) = lhs.replace('_', "").parse::<i64>() {
+                    from_code.push((n, variant.to_string(), idx + 1));
+                }
+            }
+        }
+    }
+    (to_code, from_code)
+}
+
+/// `const MAX_FRAME` definitions with their normalized value text.
+fn max_frame_defs(file: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        let code = line.code.trim();
+        let Some(pos) = code.find("const MAX_FRAME") else { continue };
+        let Some((_, value)) = code[pos..].split_once('=') else { continue };
+        let normalized: String =
+            value.trim_end_matches(';').chars().filter(|c| !c.is_whitespace()).collect();
+        out.push((normalized, idx + 1));
+    }
+    out
+}
+
+pub fn check(files: &[SourceFile], cfg: &Config) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let Some(wire) = files.iter().find(|f| f.rel == cfg.wire_file) else {
+        return out; // tree without a wire layer: nothing to cross-check
+    };
+
+    // frame kinds: in-range and unique within the source of truth
+    let kinds = kind_consts(wire);
+    let mut by_value: BTreeMap<i64, &str> = BTreeMap::new();
+    for (name, value, line) in &kinds {
+        if !(0..=9).contains(value) {
+            out.push(Violation::new(
+                "wire",
+                &wire.rel,
+                *line,
+                format!("frame kind {name} = {value} outside the wire range 0..=9"),
+            ));
+        }
+        if let Some(first) = by_value.insert(*value, name) {
+            out.push(Violation::new(
+                "wire",
+                &wire.rel,
+                *line,
+                format!("duplicate frame kind value {value}: {first} and {name}"),
+            ));
+        }
+    }
+
+    // cross-file consistency: same KIND_ name, same value everywhere
+    let truth: BTreeMap<&str, i64> =
+        kinds.iter().map(|(n, v, _)| (n.as_str(), *v)).collect();
+    for file in files {
+        if file.rel == wire.rel {
+            continue;
+        }
+        for (name, value, line) in kind_consts(file) {
+            if let Some(expected) = truth.get(name.as_str()) {
+                if *expected != value {
+                    out.push(Violation::new(
+                        "wire",
+                        &file.rel,
+                        line,
+                        format!(
+                            "{name} = {value} disagrees with {} ({name} = {expected})",
+                            wire.rel
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // RejectReason code()/from_code() bijection
+    let (to_code, from_code) = reject_arms(wire);
+    let mut code_of: BTreeMap<&str, i64> = BTreeMap::new();
+    for (variant, n, line) in &to_code {
+        if let Some(prev) = code_of.insert(variant.as_str(), *n) {
+            if prev != *n {
+                out.push(Violation::new(
+                    "wire",
+                    &wire.rel,
+                    *line,
+                    format!("RejectReason::{variant} maps to both {prev} and {n}"),
+                ));
+            }
+        }
+    }
+    let mut seen_codes: BTreeMap<i64, &str> = BTreeMap::new();
+    for (n, variant, line) in &from_code {
+        if let Some(first) = seen_codes.insert(*n, variant.as_str()) {
+            out.push(Violation::new(
+                "wire",
+                &wire.rel,
+                *line,
+                format!("reject code {n} decodes to both {first} and {variant}"),
+            ));
+        }
+        match code_of.get(variant.as_str()) {
+            Some(enc) if enc != n => out.push(Violation::new(
+                "wire",
+                &wire.rel,
+                *line,
+                format!(
+                    "RejectReason::{variant} encodes to {enc} but decodes from {n} — \
+                     code()/from_code() are out of sync"
+                ),
+            )),
+            _ => {}
+        }
+    }
+
+    // MAX_FRAME: one definition text, tree-wide
+    let mut frame_defs: Vec<(String, String, usize)> = Vec::new();
+    for file in files {
+        for (text, line) in max_frame_defs(file) {
+            frame_defs.push((file.rel.clone(), text, line));
+        }
+    }
+    if let Some((first_file, first_text, _)) = frame_defs.first().cloned() {
+        for (file, text, line) in &frame_defs[1..] {
+            if *text != first_text {
+                out.push(Violation::new(
+                    "wire",
+                    file,
+                    *line,
+                    format!(
+                        "MAX_FRAME defined as `{text}` here but `{first_text}` in \
+                         {first_file}"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
