@@ -108,6 +108,15 @@ fn main() {
     let fused_serial = measure_variant(Variant::BfsOverVectorizedFused, &levels);
     let unfused_par = measure_parallel(Variant::BfsOverVectorized, &levels, threads);
     let fused_par = measure_parallel(Variant::BfsOverVectorizedFused, &levels, threads);
+    // the same tile-sharded case with the tracer recording: the
+    // observability plane's cost on the bandwidth-bound hot path, kept on
+    // the perf trajectory (the rings wrap drop-oldest, so a long bench
+    // run stays in bounded memory)
+    sgct::perf::trace::enable();
+    let fused_par_traced = measure_parallel(Variant::BfsOverVectorizedFused, &levels, threads);
+    sgct::perf::trace::disable();
+    sgct::perf::trace::reset();
+    let tracing_overhead = fused_par_traced.secs / fused_par.secs;
     // conversion-inclusive series: the position -> kernel -> position round
     // trip every batch pipeline pays, eager vs folded into the tile passes
     let conv_eager = measure_fused_with_convert(&levels, 1, ConvertPolicy::Eager);
@@ -165,6 +174,10 @@ fn main() {
         measured_bw / 1e9,
         measured_bw
     );
+    println!(
+        "tracing overhead (fused tile-sharded, tracer recording): x{tracing_overhead:.3} \
+         traced vs untraced"
+    );
 
     let rec = |r: &BenchResult, v: Variant, threads: usize, bytes: u64| {
         sgct::perf::BenchRecord::of(r, v.paper_name(), threads, f)
@@ -197,6 +210,9 @@ fn main() {
             rec(&fused_serial, Variant::BfsOverVectorizedFused, 1, fused_bytes),
             rec(&unfused_par, Variant::BfsOverVectorized, threads, unfused_bytes),
             rec(&fused_par, Variant::BfsOverVectorizedFused, threads, fused_bytes),
+            rec(&fused_par_traced, Variant::BfsOverVectorizedFused, threads, fused_bytes)
+                .with_extra("tracing_enabled", 1.0)
+                .with_extra("tracing_overhead_ratio", tracing_overhead),
             rec_conv(&conv_eager, ConvertPolicy::Eager, conv_eager_bytes),
             rec_conv(&conv_fused, ConvertPolicy::FusedInOut, conv_fused_bytes),
         ],

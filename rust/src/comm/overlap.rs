@@ -133,6 +133,7 @@ pub fn stream_block(
         .sum();
     let mut done_groups = 0usize;
     for (gi, g) in grids.iter_mut().enumerate() {
+        let _grid_span = crate::trace_span!("stream-grid", (first_index + gi) as u64);
         let params = fused::resolve_params(g.levels(), fuse);
         let bounds = stage_bounds(g.dim(), params.fuse_depth);
         let stages = stage_subspaces(g.levels(), &bounds);
@@ -148,6 +149,7 @@ pub fn stream_block(
             debug_assert_eq!(bounds[stage_idx], axes_done, "observer/stage bounds diverged");
             *done_groups_ref += 1;
             if !stages[stage_idx].is_empty() {
+                let _span = crate::trace_span!("extract-piece", axes_done as u64);
                 let part = extract_stage(mid, coeff, &stages[stage_idx]);
                 emit_ref(StreamedPiece {
                     grid: first_index + gi,

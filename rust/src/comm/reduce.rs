@@ -93,6 +93,7 @@ use crate::combi::{fault, CombinationScheme, Component};
 use crate::coordinator::{dehierarchize_slice, hierarchize_slice, BatchOptions};
 use crate::grid::{FullGrid, LevelVector};
 use crate::hierarchize::{FuseParams, ShardStrategy, Variant};
+use crate::perf::trace;
 use crate::sparse::SparseGrid;
 
 use super::chaos::{self, ChaosKind, ChaosSet};
@@ -470,6 +471,20 @@ pub struct FaultEvent {
     pub dead: Vec<usize>,
     /// Scatter only: surviving descendants the broadcast was re-routed to.
     pub adopted: Vec<usize>,
+}
+
+/// Append a detection to the event log and, when tracing, drop an instant
+/// event (`fault: <phase>`) on this rank's track so a chaos run's recovery
+/// is visible on the timeline (arg = `epoch << 32 | first dead rank`).
+/// Phase names are dynamic, so this interns directly instead of going
+/// through the `trace_instant!` per-call-site cache.
+fn log_fault(events: &mut Vec<FaultEvent>, ev: FaultEvent) {
+    if trace::enabled() {
+        let name = trace::intern(&format!("fault: {}", ev.phase.name()));
+        let arg = (ev.epoch as u64) << 32 | ev.dead.first().copied().unwrap_or(0) as u64;
+        trace::instant(name, arg);
+    }
+    events.push(ev);
 }
 
 /// What a completed-but-degraded reduction reports: which ranks died,
@@ -864,9 +879,13 @@ fn stream_and_send(
     type SenderEnd = (Vec<PieceStat>, usize, f64, Option<anyhow::Error>);
     let (compute_secs, sent) = std::thread::scope(|s| {
         let sender = s.spawn(move || -> SenderEnd {
+            if trace::enabled() {
+                trace::label_thread("overlap-sender");
+            }
             let mut stats = Vec::new();
             let (mut bytes, mut secs) = (0usize, 0.0f64);
             for (meta, buf) in rx {
+                let _piece_span = crate::trace_span!("send-piece", buf.len() as u64);
                 let t0 = Instant::now();
                 if let Err(e) = parent.send(&buf) {
                     // breaking drops `rx`: the compute side's enqueues fail
@@ -889,6 +908,7 @@ fn stream_and_send(
                 });
             }
             let done = wire::encode_done(stats.len(), dim);
+            let _done_span = crate::trace_span!("send-done", done.len() as u64);
             let t0 = Instant::now();
             if let Err(e) = parent.send(&done) {
                 return (stats, bytes, secs, Some(e));
@@ -960,6 +980,7 @@ fn child_recovery(
     timeout: Duration,
     m: &mut Measured,
 ) -> Result<FaultReport> {
+    let _span = crate::trace_span!("recovery-epoch", epoch as u64);
     let dim = scheme.dim();
     let (rec, report) = recovered_scheme(scheme, topo.ranks(), dead)?;
     let rec_coeff: HashMap<&LevelVector, f64> =
@@ -990,12 +1011,15 @@ fn child_recovery(
                 // the child died after its gather: the pieces its subtree
                 // retained are gone — condemn it and report up
                 let lost = subtree_ranks(topo, c);
-                events.push(FaultEvent {
-                    epoch,
-                    phase: FaultPhase::Replan,
-                    dead: lost.clone(),
-                    adopted: Vec::new(),
-                });
+                log_fault(
+                    events,
+                    FaultEvent {
+                        epoch,
+                        phase: FaultPhase::Replan,
+                        dead: lost.clone(),
+                        adopted: Vec::new(),
+                    },
+                );
                 new_dead.extend(lost);
             }
         }
@@ -1062,12 +1086,15 @@ fn child_recovery(
             }
         };
         if let Some(d) = outcome {
-            events.push(FaultEvent {
-                epoch,
-                phase: FaultPhase::Collect,
-                dead: d.clone(),
-                adopted: Vec::new(),
-            });
+            log_fault(
+                events,
+                FaultEvent {
+                    epoch,
+                    phase: FaultPhase::Collect,
+                    dead: d.clone(),
+                    adopted: Vec::new(),
+                },
+            );
             new_dead.extend(d);
         }
     }
@@ -1130,6 +1157,7 @@ fn root_recover(
     let mut epoch: u32 = 0;
     'epoch: loop {
         epoch += 1;
+        let _epoch_span = crate::trace_span!("recovery-epoch", epoch as u64);
         ensure!(
             epoch <= cap,
             "fault recovery needs epoch {epoch} but max_fault_epochs is {cap}: {}",
@@ -1166,12 +1194,15 @@ fn root_recover(
                     // the child died since the gather: everything its
                     // subtree retained is gone — next epoch
                     let lost = subtree_ranks(topo, c);
-                    events.push(FaultEvent {
-                        epoch,
-                        phase: FaultPhase::Replan,
-                        dead: lost.clone(),
-                        adopted: Vec::new(),
-                    });
+                    log_fault(
+                        events,
+                        FaultEvent {
+                            epoch,
+                            phase: FaultPhase::Replan,
+                            dead: lost.clone(),
+                            adopted: Vec::new(),
+                        },
+                    );
                     new_dead.extend(lost);
                 }
             }
@@ -1240,12 +1271,15 @@ fn root_recover(
                 }
             };
             if let Some(d) = outcome {
-                events.push(FaultEvent {
-                    epoch,
-                    phase: FaultPhase::Collect,
-                    dead: d.clone(),
-                    adopted: Vec::new(),
-                });
+                log_fault(
+                    events,
+                    FaultEvent {
+                        epoch,
+                        phase: FaultPhase::Collect,
+                        dead: d.clone(),
+                        adopted: Vec::new(),
+                    },
+                );
                 new_dead.extend(d);
             }
         }
@@ -1408,27 +1442,34 @@ pub fn run_rank(
 
     let victim = opts.chaos.for_rank(rank);
 
+    if trace::enabled() {
+        trace::label_thread(&format!("rank {rank}"));
+    }
+
     // ---- local compute (streaming ranks overlap their sends with it) ----
     let streaming =
         opts.overlap && links.children.is_empty() && links.parent.is_some() && victim.is_none();
     let mut mine: Option<SparseGrid> = None;
-    if streaming {
-        stream_and_send(
-            links.parent.as_mut().unwrap().as_mut(),
-            scheme,
-            lo,
-            grids,
-            opts,
-            leash,
-            &mut m,
-        )?;
-    } else {
-        let t0 = Instant::now();
-        if !grids.is_empty() {
-            hierarchize_block(scheme, lo, grids, opts);
+    {
+        let _span = crate::trace_span!("local-compute", grids.len() as u64);
+        if streaming {
+            stream_and_send(
+                links.parent.as_mut().unwrap().as_mut(),
+                scheme,
+                lo,
+                grids,
+                opts,
+                leash,
+                &mut m,
+            )?;
+        } else {
+            let t0 = Instant::now();
+            if !grids.is_empty() {
+                hierarchize_block(scheme, lo, grids, opts);
+            }
+            m.compute_secs = t0.elapsed().as_secs_f64();
+            mine = gather_partial(scheme, lo, hi, grids);
         }
-        m.compute_secs = t0.elapsed().as_secs_f64();
-        mine = gather_partial(scheme, lo, hi, grids);
     }
 
     // ---- gather: merge children (round order), detect failures ----
@@ -1436,18 +1477,22 @@ pub fn run_rank(
     let mut dead: Vec<usize> = Vec::new();
     let mut events: Vec<FaultEvent> = Vec::new();
     for (link, &child) in links.children.iter_mut().zip(&child_ids) {
+        let _recv_span = crate::trace_span!("gather-recv", child as u64);
         match recv_subtree(link.as_mut(), scheme, &w, ranges[child], timeout, &mut m) {
             Ok(Gathered::Partial(sub)) => {
                 // receiver (lower canonical range) stays the left operand
                 mine = merge_opt(mine, sub);
             }
             Ok(Gathered::Failed(d)) => {
-                events.push(FaultEvent {
-                    epoch: 0,
-                    phase: FaultPhase::Gather,
-                    dead: d.clone(),
-                    adopted: Vec::new(),
-                });
+                log_fault(
+                    &mut events,
+                    FaultEvent {
+                        epoch: 0,
+                        phase: FaultPhase::Gather,
+                        dead: d.clone(),
+                        adopted: Vec::new(),
+                    },
+                );
                 dead.extend(d);
             }
             Err(e) => {
@@ -1458,12 +1503,15 @@ pub fn run_rank(
                 }
                 // slow, dead or garbling child: its whole subtree is lost
                 let lost = subtree_ranks(&topo, child);
-                events.push(FaultEvent {
-                    epoch: 0,
-                    phase: FaultPhase::Gather,
-                    dead: lost.clone(),
-                    adopted: Vec::new(),
-                });
+                log_fault(
+                    &mut events,
+                    FaultEvent {
+                        epoch: 0,
+                        phase: FaultPhase::Gather,
+                        dead: lost.clone(),
+                        adopted: Vec::new(),
+                    },
+                );
                 dead.extend(lost);
             }
         }
@@ -1475,6 +1523,7 @@ pub fn run_rank(
     let replan = !failed_component_indices(&ranges, &dead).is_empty();
 
     if let Some(parent) = links.parent.as_mut() {
+        let _send_span = crate::trace_span!("gather-send");
         if replan {
             let payload = wire::encode_failed(&dead, dim);
             let t0 = Instant::now();
@@ -1505,6 +1554,8 @@ pub fn run_rank(
     }
 
     // ---- scatter: receive the reduced grid (or a re-plan), broadcast ----
+    // recovery epochs (their own nested spans) run inside this interval
+    let scatter_span = crate::trace_span!("scatter");
     let mut fault: Option<FaultReport> = None;
     let mut epochs_seen: u32 = 0;
     let mut adopted_orphan = false;
@@ -1638,18 +1689,24 @@ pub fn run_rank(
                 // hand the payload to its surviving descendants directly
                 let adopted =
                     reroute_scatter(&topo, child, &dead_now, &payload, recovery, timeout, &mut m);
-                events.push(FaultEvent {
-                    epoch: epochs_seen,
-                    phase: FaultPhase::Scatter,
-                    dead: vec![child],
-                    adopted,
-                });
+                log_fault(
+                    &mut events,
+                    FaultEvent {
+                        epoch: epochs_seen,
+                        phase: FaultPhase::Scatter,
+                        dead: vec![child],
+                        adopted,
+                    },
+                );
             }
         }
     }
 
+    drop(scatter_span);
+
     // ---- apply locally: per-grid sampling + dehierarchization ----
     if opts.scatter_back && !grids.is_empty() {
+        let _span = crate::trace_span!("dehierarchize");
         let t0 = Instant::now();
         for g in grids.iter_mut() {
             // grids still hold the kernel layout from the hierarchization;

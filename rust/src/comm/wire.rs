@@ -42,7 +42,13 @@
 //!   that tripped — queue depth, predicted flops or reply bytes).
 //! * **stats** — the daemon's counters: `id u32` + seven `u64`s
 //!   ([`ServeStats`]).  How the integration suite pins "zero steady-state
-//!   grid allocations" across a process boundary.
+//!   grid allocations" across a process boundary.  Since the observability
+//!   pass the body carries an *extension* after the legacy seven words:
+//!   `queue_depth u64`, then three latency histograms (queue-wait /
+//!   execute / reply, nanoseconds), each as
+//!   `sum u64, count u64, nbuckets u64, nbuckets × u64`.  The decoder
+//!   accepts the legacy 7-word body unchanged (extension fields default to
+//!   zero), so old clients and old daemons interoperate both ways.
 //!
 //! A subspace block is `dim` level bytes (each `1..=30`) followed by the
 //! dense row-major surplus payload, `prod 2^(l_i - 1)` f64 little-endian —
@@ -59,6 +65,7 @@
 use anyhow::{bail, ensure, Result};
 
 use crate::grid::{LevelVector, MAX_DIM};
+use crate::perf::registry::{HistogramSnapshot, HIST_BUCKETS};
 use crate::sparse::SparseGrid;
 
 /// Wire magic: "Sparse Grid Combination Wire".
@@ -219,6 +226,16 @@ pub struct ServeStats {
     pub grid_buffer_allocs: u64,
     /// Jobs currently queued or executing.
     pub in_flight: u64,
+    /// Jobs admitted and still waiting for a worker (wire extension;
+    /// zero when talking to a pre-extension daemon).
+    pub queue_depth: u64,
+    /// Admission-to-worker-pop latency, nanoseconds (wire extension).
+    pub queue_wait_ns: HistogramSnapshot,
+    /// `job::execute` wall time, nanoseconds (wire extension).
+    pub execute_ns: HistogramSnapshot,
+    /// Worker-reply-to-session handoff latency, nanoseconds (wire
+    /// extension).
+    pub reply_ns: HistogramSnapshot,
 }
 
 /// A decoded message.
@@ -353,7 +370,17 @@ pub fn encode_job_err(id: u32, reason: RejectReason, detail: u64, dim: usize) ->
     seal(out)
 }
 
-/// Encode the daemon's counters.
+fn push_hist(out: &mut Vec<u8>, h: &HistogramSnapshot) {
+    out.extend_from_slice(&h.sum.to_le_bytes());
+    out.extend_from_slice(&h.count.to_le_bytes());
+    out.extend_from_slice(&(HIST_BUCKETS as u64).to_le_bytes());
+    for b in &h.buckets {
+        out.extend_from_slice(&b.to_le_bytes());
+    }
+}
+
+/// Encode the daemon's counters: the legacy seven words, then the
+/// observability extension (queue depth + three latency histograms).
 pub fn encode_stats(id: u32, stats: &ServeStats, dim: usize) -> Vec<u8> {
     let mut out = header(KIND_STATS, dim);
     out.extend_from_slice(&id.to_le_bytes());
@@ -368,6 +395,10 @@ pub fn encode_stats(id: u32, stats: &ServeStats, dim: usize) -> Vec<u8> {
     ] {
         out.extend_from_slice(&v.to_le_bytes());
     }
+    out.extend_from_slice(&stats.queue_depth.to_le_bytes());
+    push_hist(&mut out, &stats.queue_wait_ns);
+    push_hist(&mut out, &stats.execute_ns);
+    push_hist(&mut out, &stats.reply_ns);
     seal(out)
 }
 
@@ -408,6 +439,18 @@ impl<'a> Reader<'a> {
     fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
+}
+
+fn read_hist(r: &mut Reader<'_>) -> Result<HistogramSnapshot> {
+    let sum = r.u64()?;
+    let count = r.u64()?;
+    let n = r.u64()? as usize;
+    ensure!(n <= HIST_BUCKETS, "histogram with {n} buckets (max {HIST_BUCKETS})");
+    let mut h = HistogramSnapshot { sum, count, ..Default::default() };
+    for b in h.buckets.iter_mut().take(n) {
+        *b = r.u64()?;
+    }
+    Ok(h)
 }
 
 fn decode_subspaces(r: &mut Reader<'_>, dim: usize) -> Result<SparseGrid> {
@@ -506,7 +549,7 @@ pub fn decode(buf: &[u8]) -> Result<Message> {
         }
         KIND_STATS => {
             let id = r.u32()?;
-            let stats = ServeStats {
+            let mut stats = ServeStats {
                 jobs_done: r.u64()?,
                 rejected_busy: r.u64()?,
                 rejected_too_large: r.u64()?,
@@ -514,7 +557,16 @@ pub fn decode(buf: &[u8]) -> Result<Message> {
                 arena_reuses: r.u64()?,
                 grid_buffer_allocs: r.u64()?,
                 in_flight: r.u64()?,
+                ..Default::default()
             };
+            // a legacy (pre-extension) body ends here; the extension fields
+            // keep their zero defaults
+            if r.pos < buf.len() {
+                stats.queue_depth = r.u64()?;
+                stats.queue_wait_ns = read_hist(&mut r)?;
+                stats.execute_ns = read_hist(&mut r)?;
+                stats.reply_ns = read_hist(&mut r)?;
+            }
             ensure!(r.pos == buf.len(), "trailing bytes after stats");
             Ok(Message::Stats { id, stats })
         }
@@ -708,6 +760,15 @@ mod tests {
         assert!(RejectReason::from_code(0).is_err());
         assert!(RejectReason::from_code(6).is_err());
 
+        let mut wait = HistogramSnapshot::default();
+        wait.buckets[0] = 2;
+        wait.buckets[20] = 1;
+        wait.sum = 1_048_578;
+        wait.count = 3;
+        let mut exec = HistogramSnapshot::default();
+        exec.buckets[HIST_BUCKETS - 1] = 1;
+        exec.sum = u64::MAX / 2;
+        exec.count = 1;
         let stats = ServeStats {
             jobs_done: 1,
             rejected_busy: 2,
@@ -716,6 +777,10 @@ mod tests {
             arena_reuses: 5,
             grid_buffer_allocs: 6,
             in_flight: 7,
+            queue_depth: 8,
+            queue_wait_ns: wait,
+            execute_ns: exec,
+            reply_ns: HistogramSnapshot::default(),
         };
         match decode(&encode_stats(3, &stats, 1)).unwrap() {
             Message::Stats { id, stats: back } => {
@@ -723,6 +788,35 @@ mod tests {
                 assert_eq!(back, stats);
             }
             other => panic!("wrong kind {other:?}"),
+        }
+    }
+
+    #[test]
+    fn legacy_stats_frame_still_decodes() {
+        // a pre-extension daemon's frame: id + exactly seven u64s
+        let mut legacy = encode_stats(5, &ServeStats::default(), 1);
+        legacy.truncate(HEADER_LEN + 4 + 7 * 8);
+        let len = legacy.len() as u32;
+        legacy[8..12].copy_from_slice(&len.to_le_bytes());
+        // overwrite a counter so the acceptance is observable
+        legacy[HEADER_LEN + 4..HEADER_LEN + 12].copy_from_slice(&42u64.to_le_bytes());
+        match decode(&legacy).unwrap() {
+            Message::Stats { id, stats } => {
+                assert_eq!(id, 5);
+                assert_eq!(stats.jobs_done, 42);
+                // extension fields keep their defaults
+                assert_eq!(stats.queue_depth, 0);
+                assert_eq!(stats.queue_wait_ns, HistogramSnapshot::default());
+            }
+            other => panic!("wrong kind {other:?}"),
+        }
+        // but a *partial* extension is still a truncation error
+        let full = encode_stats(5, &ServeStats::default(), 1);
+        for cut in legacy.len() + 1..full.len() {
+            let mut b = full[..cut].to_vec();
+            let len = b.len() as u32;
+            b[8..12].copy_from_slice(&len.to_le_bytes());
+            assert!(decode(&b).is_err(), "partial extension cut at {cut} accepted");
         }
     }
 

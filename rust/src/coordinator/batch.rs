@@ -165,6 +165,7 @@ fn run_batch(
             let fused_override = fused::BfsOverVectorizedFused::with_params(fuse);
             let fused_override = &fused_override;
             parallel_grids_ordered(grids, threads, &order, move |i, g| {
+                let _span = crate::trace_span!("batch-grid", (offset + i) as u64);
                 let v = tasks[i].variant;
                 let h: &dyn Hierarchizer = if v == Variant::BfsOverVectorizedFused {
                     fused_override
@@ -192,6 +193,7 @@ fn run_batch(
         // sequence, each sharded unit-wise across the full pool
         _ => {
             for &i in &order {
+                let _span = crate::trace_span!("batch-grid", (offset + i) as u64);
                 let p = ParallelHierarchizer::new(tasks[i].variant, threads).with_fuse(fuse);
                 let g = &mut grids[i];
                 if !fuse.folds_in_for(tasks[i].variant) {

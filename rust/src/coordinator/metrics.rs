@@ -1,15 +1,32 @@
 //! Per-phase timing and counter metrics.
+//!
+//! Backed by the lock-free cells of [`perf::registry`](crate::perf::registry):
+//! each phase owns a [`FloatSum`] (bit-cast CAS accumulator) and a
+//! [`Counter`], so concurrent `record()` calls from pool workers no longer
+//! serialize on a map-wide mutex — the map lock (an `RwLock`) is taken
+//! only to look up or create a phase cell, never while accumulating.
+//! [`Metrics::time`] additionally opens a [`perf::trace`](crate::perf::trace)
+//! span under the phase name, so every timed pipeline/batch phase shows up
+//! on the `--trace` timeline for free.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::RwLock;
 
-use crate::perf::CycleTimer;
+use crate::perf::registry::{Counter, FloatSum};
+use crate::perf::{trace, CycleTimer};
 use crate::util::table::{human_time, Table};
 
-/// Accumulated (seconds, count) per named phase; thread-safe.
+#[derive(Clone, Debug, Default)]
+struct PhaseCell {
+    secs: FloatSum,
+    count: Counter,
+}
+
+/// Accumulated (seconds, count) per named phase; thread-safe, and
+/// concurrent recordings on existing phases are wait-free on the map.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    phases: Mutex<BTreeMap<String, (f64, u64)>>,
+    phases: RwLock<BTreeMap<String, PhaseCell>>,
 }
 
 impl Metrics {
@@ -17,16 +34,34 @@ impl Metrics {
         Self::default()
     }
 
-    /// Record `secs` under `phase`.
-    pub fn record(&self, phase: &str, secs: f64) {
-        let mut m = self.phases.lock().unwrap();
-        let e = m.entry(phase.to_string()).or_insert((0.0, 0));
-        e.0 += secs;
-        e.1 += 1;
+    /// The phase's cell, created on first use.  Read-lock fast path;
+    /// write lock only for the first record of a new phase name.
+    fn cell(&self, phase: &str) -> PhaseCell {
+        if let Some(c) = self.phases.read().unwrap().get(phase) {
+            return c.clone();
+        }
+        let mut w = self.phases.write().unwrap();
+        w.entry(phase.to_string()).or_default().clone()
     }
 
-    /// Time a closure under `phase`.
+    /// Record `secs` under `phase`.
+    pub fn record(&self, phase: &str, secs: f64) {
+        let cell = self.cell(phase);
+        cell.secs.add(secs);
+        cell.count.inc();
+    }
+
+    /// Time a closure under `phase` (and, when tracing is enabled, emit a
+    /// span of the same name on the caller's track).
     pub fn time<T>(&self, phase: &str, f: impl FnOnce() -> T) -> T {
+        // dynamic phase names can't go through the `trace_span!` macro's
+        // per-call-site cache; interning here is fine — `time` wraps whole
+        // pipeline phases, not hot-loop iterations
+        let _span = if trace::enabled() {
+            trace::span(trace::intern(phase))
+        } else {
+            trace::SpanGuard::inert()
+        };
         let t = CycleTimer::start();
         let out = f();
         self.record(phase, t.elapsed_secs());
@@ -35,25 +70,25 @@ impl Metrics {
 
     /// Total seconds of one phase.
     pub fn secs(&self, phase: &str) -> f64 {
-        self.phases.lock().unwrap().get(phase).map(|e| e.0).unwrap_or(0.0)
+        self.phases.read().unwrap().get(phase).map(|c| c.secs.get()).unwrap_or(0.0)
     }
 
     pub fn count(&self, phase: &str) -> u64 {
-        self.phases.lock().unwrap().get(phase).map(|e| e.1).unwrap_or(0)
+        self.phases.read().unwrap().get(phase).map(|c| c.count.get()).unwrap_or(0)
     }
 
     /// Snapshot as (phase, secs, count), sorted by phase name.
     pub fn snapshot(&self) -> Vec<(String, f64, u64)> {
         self.phases
-            .lock()
+            .read()
             .unwrap()
             .iter()
-            .map(|(k, (s, c))| (k.clone(), *s, *c))
+            .map(|(k, c)| (k.clone(), c.secs.get(), c.count.get()))
             .collect()
     }
 
     pub fn reset(&self) {
-        self.phases.lock().unwrap().clear();
+        self.phases.write().unwrap().clear();
     }
 
     /// Render a phase table (for CLI / examples).
@@ -107,5 +142,41 @@ mod tests {
         let s = m.render();
         assert!(s.contains("alpha"));
         assert!(s.contains("phase"));
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        // the port's point: pool workers hammering one phase (and a few
+        // private ones) concurrently lose no counts and no seconds
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for w in 0..8 {
+                let m = &m;
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.record("shared", 0.5);
+                        m.record(&format!("worker-{w}"), 0.25);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.count("shared"), 8000);
+        // 0.5 is a power of two: f64 addition is exact in any order
+        assert_eq!(m.secs("shared"), 4000.0);
+        for w in 0..8 {
+            assert_eq!(m.count(&format!("worker-{w}")), 1000);
+            assert_eq!(m.secs(&format!("worker-{w}")), 250.0);
+        }
+        assert_eq!(m.snapshot().len(), 9);
+    }
+
+    #[test]
+    fn snapshot_stays_sorted() {
+        let m = Metrics::new();
+        m.record("b", 1.0);
+        m.record("a", 1.0);
+        m.record("c", 1.0);
+        let names: Vec<String> = m.snapshot().into_iter().map(|(n, _, _)| n).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
     }
 }

@@ -32,19 +32,24 @@ where
     std::thread::scope(|s| {
         for w in 0..workers.min(n) {
             let (shared, next, f) = (&shared, &next, &f);
-            s.spawn(move || loop {
-                // ORDERING: Relaxed — the cursor only partitions indices
-                // (RMW atomicity hands each worker a distinct i); the grids
-                // written under those indices are published to the caller
-                // by the scope join, not through this atomic
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(move || {
+                if crate::perf::trace::enabled() {
+                    crate::perf::trace::label_thread(&format!("pool {w}"));
                 }
-                crate::grid::set_claim_owner(w, i);
-                // SAFETY: the atomic cursor yields each index exactly once
-                let g = unsafe { shared.claim_mut(i) };
-                f(i, g);
+                loop {
+                    // ORDERING: Relaxed — the cursor only partitions indices
+                    // (RMW atomicity hands each worker a distinct i); the grids
+                    // written under those indices are published to the caller
+                    // by the scope join, not through this atomic
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    crate::grid::set_claim_owner(w, i);
+                    // SAFETY: the atomic cursor yields each index exactly once
+                    let g = unsafe { shared.claim_mut(i) };
+                    f(i, g);
+                }
             });
         }
     });
@@ -79,20 +84,25 @@ where
     std::thread::scope(|s| {
         for w in 0..workers.min(n) {
             let (shared, next, f) = (&shared, &next, &f);
-            s.spawn(move || loop {
-                // ORDERING: Relaxed — index partitioning only, as in
-                // parallel_grids: distinct k per RMW, publication via the
-                // scope join
-                let k = next.fetch_add(1, Ordering::Relaxed);
-                if k >= n {
-                    break;
+            s.spawn(move || {
+                if crate::perf::trace::enabled() {
+                    crate::perf::trace::label_thread(&format!("pool {w}"));
                 }
-                let i = order[k];
-                crate::grid::set_claim_owner(w, i);
-                // SAFETY: `order` is a verified permutation, so index i is
-                // claimed exactly once
-                let g = unsafe { shared.claim_mut(i) };
-                f(i, g);
+                loop {
+                    // ORDERING: Relaxed — index partitioning only, as in
+                    // parallel_grids: distinct k per RMW, publication via the
+                    // scope join
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= n {
+                        break;
+                    }
+                    let i = order[k];
+                    crate::grid::set_claim_owner(w, i);
+                    // SAFETY: `order` is a verified permutation, so index i is
+                    // claimed exactly once
+                    let g = unsafe { shared.claim_mut(i) };
+                    f(i, g);
+                }
             });
         }
     });
@@ -125,20 +135,25 @@ pub fn parallel_grids_streamed<F>(
         for w in 0..workers.min(n) {
             let done = done.clone();
             let (shared, next, f) = (&shared, &next, &f);
-            s.spawn(move || loop {
-                // ORDERING: Relaxed — index partitioning only; the consumer
-                // of `done` gets its happens-before edge from the channel
-                // send/recv pair, not from this cursor
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(move || {
+                if crate::perf::trace::enabled() {
+                    crate::perf::trace::label_thread(&format!("pool {w}"));
                 }
-                crate::grid::set_claim_owner(w, i);
-                // SAFETY: the atomic cursor yields each index exactly once
-                let g = unsafe { shared.claim_mut(i) };
-                f(i, g);
-                if done.send(i).is_err() {
-                    break;
+                loop {
+                    // ORDERING: Relaxed — index partitioning only; the consumer
+                    // of `done` gets its happens-before edge from the channel
+                    // send/recv pair, not from this cursor
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    crate::grid::set_claim_owner(w, i);
+                    // SAFETY: the atomic cursor yields each index exactly once
+                    let g = unsafe { shared.claim_mut(i) };
+                    f(i, g);
+                    if done.send(i).is_err() {
+                        break;
+                    }
                 }
             });
         }

@@ -718,6 +718,11 @@ pub(crate) fn sweep_fused(
             o
         });
         {
+            // one span per fused tile group on the sweep leader (arg packs
+            // the axis window): worker spans underneath come from
+            // `parallel_units`, the claim-wait/kernel split included
+            let _group_span =
+                crate::trace_span!("fused-group", (a as u64) << 32 | b as u64);
             let cells = g.cells();
             let (cells, tiles, geo, levels) = (&cells, &tiles, &geo, &levels);
             let (maps_in, maps_out) = (maps_in.as_deref(), maps_out.as_deref());

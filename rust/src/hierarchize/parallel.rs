@@ -343,6 +343,9 @@ fn sweep_parallel(g: &mut FullGrid, inner: Variant, threads: usize, up: bool, se
             SplitMix64::new(s ^ (dim as u64).wrapping_mul(0x9E3779B97F4A7C15)).shuffle(&mut o);
             o
         });
+        // one span per working dimension on the sweep's calling thread;
+        // the per-worker spans underneath come from `parallel_units`
+        let _dim_span = crate::trace_span!("sweep-dim", dim as u64);
         let cells = g.cells();
         let (poles, cells) = (&poles, &cells);
         let run = move |u: usize| match kernel {
@@ -392,13 +395,33 @@ where
 {
     let unit = move |k: usize| order.map_or(k, |o| o[k]);
     let workers = threads.min(n_units);
+    // With tracing on, each worker gets one span covering its whole claim
+    // loop; the span's arg carries the cycles spent *inside* the unit
+    // kernels, so a trace viewer can split span duration into kernel time
+    // vs claim-wait (cursor contention + chunk starvation).  With tracing
+    // off this folds to a constant-false branch per unit (and to nothing
+    // under the `trace_off` feature) — the kernels themselves are never
+    // touched, so results stay bitwise identical either way.
+    let tracing = cfg!(not(feature = "trace_off")) && crate::perf::trace::enabled();
+    let timed = move |u: usize, kernel_cycles: &mut u64| {
+        if tracing {
+            let t0 = crate::perf::now_cycles();
+            f(u);
+            *kernel_cycles += crate::perf::now_cycles().saturating_sub(t0);
+        } else {
+            f(u);
+        }
+    };
     if workers <= 1 {
+        let mut span = crate::trace_span!("sweep-worker");
+        let mut kernel_cycles = 0u64;
         for k in 0..n_units {
             let u = unit(k);
             // tracked builds: claim-map diagnostics name worker 0 + unit u
             crate::grid::set_claim_owner(0, u);
-            f(u);
+            timed(u, &mut kernel_cycles);
         }
+        span.set_arg(kernel_cycles);
         return;
     }
     // ~8 chunks per worker: fine enough to steal, coarse enough to keep the
@@ -407,27 +430,35 @@ where
     let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for w in 0..workers {
-            let (next, f, unit) = (&next, f, &unit);
-            s.spawn(move || loop {
-                // ORDERING: Relaxed — the cursor only partitions indices:
-                // RMW atomicity gives every fetch_add a distinct range, so
-                // no unit runs twice.  The grid data the units write is
-                // published to the caller by the scope join below (a full
-                // happens-before edge), not through this cursor, and
-                // claim/release pairs across dimensions are ordered by the
-                // same join — Relaxed loses nothing.
-                let start = next.fetch_add(chunk, Ordering::Relaxed);
-                if start >= n_units {
-                    break;
+            let (next, unit, timed) = (&next, &unit, &timed);
+            s.spawn(move || {
+                if tracing {
+                    crate::perf::trace::label_thread(&format!("worker {w}"));
                 }
-                let end = (start + chunk).min(n_units);
-                for kk in start..end {
-                    let u = unit(kk);
-                    // tracked builds: tag this worker + unit so an
-                    // overlapping carve names both colliding units
-                    crate::grid::set_claim_owner(w, u);
-                    f(u);
+                let mut span = crate::trace_span!("sweep-worker");
+                let mut kernel_cycles = 0u64;
+                loop {
+                    // ORDERING: Relaxed — the cursor only partitions indices:
+                    // RMW atomicity gives every fetch_add a distinct range, so
+                    // no unit runs twice.  The grid data the units write is
+                    // published to the caller by the scope join below (a full
+                    // happens-before edge), not through this cursor, and
+                    // claim/release pairs across dimensions are ordered by the
+                    // same join — Relaxed loses nothing.
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n_units {
+                        break;
+                    }
+                    let end = (start + chunk).min(n_units);
+                    for kk in start..end {
+                        let u = unit(kk);
+                        // tracked builds: tag this worker + unit so an
+                        // overlapping carve names both colliding units
+                        crate::grid::set_claim_owner(w, u);
+                        timed(u, &mut kernel_cycles);
+                    }
                 }
+                span.set_arg(kernel_cycles);
             });
         }
     });

@@ -68,6 +68,18 @@
 //! steady-state grid allocations) — every served result bitwise equal to
 //! the one-shot CLI path.
 //!
+//! Everything above is observable through a **zero-perturbation tracing
+//! and metrics plane** ([`perf::trace`], [`perf::registry`]): per-thread
+//! ring buffers of POD span events (no lock, no allocation on the record
+//! path; one relaxed load when disabled, compiled out entirely under the
+//! `trace_off` feature) drain to Chrome trace JSON (`--trace out.json`,
+//! Perfetto-loadable; `sgct trace-check` re-validates dumps with the
+//! crate's own parser), and atomic counters/gauges/histograms render as
+//! Prometheus text (serve's `stats` frame carries the latency
+//! histograms over the wire).  The contract is bitwise: a traced run
+//! equals an untraced run, across the parallel engine, the
+//! fault-injected reduction, and served jobs (`trace_conformance.rs`).
+//!
 //! Both levels stand on one unsafe core, `grid::cells`, which keeps the
 //! shared-buffer access inside the Rust aliasing model: a [`grid::GridCells`]
 //! handle owns the exclusive borrow of a grid buffer and hands out *checked*

@@ -43,6 +43,7 @@ fn main() {
         "reduce" => run_code(reduce_cmd(&args)),
         "serve" => run(serve_cmd(&args)),
         "serve-client" => run(serve_client_cmd(&args)),
+        "trace-check" => run(trace_check(&args)),
         // hidden: one rank of a multi-process `sgct reduce --transport unix`
         "comm-worker" => run(comm_worker(&args)),
         "" | "help" | "--help" => {
@@ -79,9 +80,24 @@ USAGE:
               [--tile-kb KB] [--timeout-ms MS] [--max-fault-epochs E]
               [--chaos SEED:KIND:RANK[,KIND:RANK...]]
   sgct serve --socket PATH [--workers W] [--queue Q] [--max-flops F] [--job-threads N]
+             [--flight-recorder PATH]
   sgct serve-client --socket PATH [--job hierarchize|combine|solve|stats|shutdown]
                     [--levels L1,L2,...] [--tau T] [--steps T] [--seed S] [--id N]
-                    [--deadline-ms MS] [--retries R] [--check]
+                    [--deadline-ms MS] [--retries R] [--check] [--stats-format text|prom]
+  sgct trace-check FILE...
+
+  --trace PATH             hierarchize/combine/solve/batch/reduce: record
+                           per-thread span events (bounded rings, zero
+                           perturbation — traced results stay bitwise equal)
+                           and write Chrome trace JSON to PATH at the end;
+                           load it in Perfetto / chrome://tracing.  Under
+                           `reduce --transport unix` only rank 0 is traced.
+  --flight-recorder PATH   serve: keep tracing on for the daemon's life and
+                           dump the rings to PATH on a job panic and at
+                           shutdown
+  --stats-format text|prom serve-client stats: human text (default) or
+                           Prometheus exposition (counters + latency
+                           histograms)
 
   --socket PATH            serve: Unix-socket endpoint (daemon claims
                            PATH.lock; a live owner refuses a second daemon)
@@ -163,6 +179,27 @@ fn run_code(r: Result<i32>) -> i32 {
     }
 }
 
+/// `--trace PATH`: switch the in-process tracer on for this run.  Returns
+/// the dump path so [`trace_end`] can write the Chrome trace JSON once the
+/// command finishes.  Tracing is zero-perturbation by contract — the traced
+/// run's numbers are bitwise identical to the untraced run's.
+fn trace_begin(args: &Args) -> Option<std::path::PathBuf> {
+    let path = args.opt("trace").map(std::path::PathBuf::from)?;
+    sgct::perf::trace::enable();
+    Some(path)
+}
+
+/// Dump the tracer's rings to the path [`trace_begin`] returned (no-op
+/// without `--trace`).
+fn trace_end(path: Option<std::path::PathBuf>) -> Result<()> {
+    if let Some(p) = path {
+        sgct::perf::trace::write_chrome_json(&p)
+            .with_context(|| format!("writing trace to {}", p.display()))?;
+        eprintln!("trace: wrote {}", p.display());
+    }
+    Ok(())
+}
+
 /// Parse the fused-sweep knobs (`--fuse-depth`, `--tile-kb`; 0 = autotune;
 /// `--convert eager|fused|fused-in` folds the layout conversion into the
 /// fused tile passes).
@@ -218,6 +255,7 @@ fn info(args: &Args) -> Result<()> {
 }
 
 fn hierarchize(args: &Args) -> Result<()> {
+    let trace = trace_begin(args);
     let levels = LevelVector::parse(&args.opt_or("levels", "5,4"))?;
     let vname = args.opt_or("variant", "BFS-OverVectorized");
     let Some(variant) = variant_by_name(&vname) else {
@@ -310,10 +348,11 @@ fn hierarchize(args: &Args) -> Result<()> {
         println!("check vs Func: max diff {diff:.3e}");
         anyhow::ensure!(diff < 1e-9, "verification failed");
     }
-    Ok(())
+    trace_end(trace)
 }
 
 fn combine(args: &Args) -> Result<()> {
+    let trace = trace_begin(args);
     let dim = args.get("dim", 2usize)?;
     let level = args.get("level", 5u8)?;
     let samples = args.get("samples", 500usize)?;
@@ -350,10 +389,11 @@ fn combine(args: &Args) -> Result<()> {
     );
     println!("max interpolation error vs f: {:.4e}", c.error_vs(f, samples));
     print!("{}", c.metrics.render());
-    Ok(())
+    trace_end(trace)
 }
 
 fn solve(args: &Args) -> Result<()> {
+    let trace = trace_begin(args);
     let dim = args.get("dim", 2usize)?;
     let level = args.get("level", 5u8)?;
     let iters = args.get("iters", 4usize)?;
@@ -395,7 +435,7 @@ fn solve(args: &Args) -> Result<()> {
     table.print();
     println!("total {}", human_time(t_total.elapsed_secs()));
     print!("{}", c.metrics.render());
-    Ok(())
+    trace_end(trace)
 }
 
 fn run_iters(
@@ -435,6 +475,7 @@ fn run_iters(
 fn batch(args: &Args) -> Result<()> {
     use std::collections::BTreeMap;
 
+    let trace = trace_begin(args);
     let dim = args.get("dim", 4usize)?;
     let level = args.get("level", 6u8)?;
     let threads = args.threads("threads", 1)?;
@@ -486,7 +527,7 @@ fn batch(args: &Args) -> Result<()> {
         human_time(report.secs),
         report.total_flops as f64 / report.secs.max(1e-12) / 1e9
     );
-    Ok(())
+    trace_end(trace)
 }
 
 /// Simulated multi-node communication phase (coordinator::distributed):
@@ -563,6 +604,9 @@ fn reduce_opts(args: &Args) -> Result<sgct::comm::ReduceOptions> {
 fn reduce_cmd(args: &Args) -> Result<i32> {
     use sgct::coordinator::distributed::{estimate, place, NetModel};
 
+    // under --transport unix only rank 0 (this process) is traced; the
+    // comm-worker children are separate processes with their own tracers
+    let trace = trace_begin(args);
     let dim = args.get("dim", 4usize)?;
     let level = args.get("level", 6u8)?;
     let ranks = args.get("ranks", 2usize)?;
@@ -708,6 +752,9 @@ fn reduce_cmd(args: &Args) -> Result<i32> {
             }
         }
     }
+    // dump before the --strict verdict so a failed-strict run still
+    // leaves its trace behind for the post-mortem
+    trace_end(trace)?;
     if let Some(f) = &fault {
         if args.flag("strict") {
             bail!(
@@ -881,6 +928,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
     cfg.queue = args.get("queue", cfg.queue)?;
     cfg.max_flops = args.get("max-flops", cfg.max_flops)?;
     cfg.job_threads = args.threads("job-threads", cfg.job_threads)?;
+    cfg.flight_recorder = args.opt("flight-recorder").map(std::path::PathBuf::from);
+    if let Some(p) = &cfg.flight_recorder {
+        println!("flight recorder: armed, dumps to {} on job panic / shutdown", p.display());
+    }
     println!(
         "sgct serve: {} — {} workers, queue {}, max {} flops/job",
         cfg.socket.display(),
@@ -916,14 +967,38 @@ fn serve_client_cmd(args: &Args) -> Result<()> {
     match job.as_str() {
         "stats" => {
             let s = client.stats()?;
-            println!(
-                "jobs done {} | rejected busy {} too-large {} | in flight {}",
-                s.jobs_done, s.rejected_busy, s.rejected_too_large, s.in_flight
-            );
-            println!(
-                "arena: {} fresh / {} reused buffers; process grid allocations {}",
-                s.arena_fresh, s.arena_reuses, s.grid_buffer_allocs
-            );
+            match args.opt_or("stats-format", "text").as_str() {
+                "prom" | "prometheus" => print!("{}", sgct::serve::render_prometheus(&s)),
+                "text" => {
+                    println!(
+                        "jobs done {} | rejected busy {} too-large {} | in flight {} | queued {}",
+                        s.jobs_done,
+                        s.rejected_busy,
+                        s.rejected_too_large,
+                        s.in_flight,
+                        s.queue_depth
+                    );
+                    println!(
+                        "arena: {} fresh / {} reused buffers; process grid allocations {}",
+                        s.arena_fresh, s.arena_reuses, s.grid_buffer_allocs
+                    );
+                    // p99 here is the histogram's bucket upper bound (the
+                    // buckets are powers of two), not an exact quantile
+                    for (name, h) in [
+                        ("queue wait", &s.queue_wait_ns),
+                        ("execute", &s.execute_ns),
+                        ("reply", &s.reply_ns),
+                    ] {
+                        println!(
+                            "{name}: {} samples, mean {}, p99 <= {}",
+                            h.count,
+                            human_time(h.mean() / 1e9),
+                            human_time(h.quantile_bound(0.99) as f64 / 1e9),
+                        );
+                    }
+                }
+                other => bail!("unknown --stats-format {other:?} (text|prom)"),
+            }
         }
         "shutdown" => {
             client.shutdown()?;
@@ -971,6 +1046,54 @@ fn serve_client_cmd(args: &Args) -> Result<()> {
                 println!("check: bitwise identical to the local one-shot path — OK");
             }
         }
+    }
+    Ok(())
+}
+
+/// `sgct trace-check FILE...` — validate Chrome trace JSON dumps with the
+/// crate's own parser: well-formed JSON, every event carries the fields
+/// Perfetto needs, span durations non-negative.  CI runs this over the
+/// traces the smoke jobs produce.
+fn trace_check(args: &Args) -> Result<()> {
+    use std::collections::BTreeSet;
+    anyhow::ensure!(!args.positional().is_empty(), "usage: sgct trace-check FILE...");
+    for path in args.positional() {
+        let doc = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let events = sgct::perf::trace::parse_chrome_json(&doc)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let mut tracks = BTreeSet::new();
+        let (mut spans, mut instants, mut counters) = (0usize, 0usize, 0usize);
+        for e in &events {
+            match e.ph {
+                'X' => {
+                    anyhow::ensure!(
+                        e.dur >= 0.0,
+                        "{path}: span {:?} on track {} has negative duration {}",
+                        e.name,
+                        e.tid,
+                        e.dur
+                    );
+                    spans += 1;
+                    tracks.insert(e.tid);
+                }
+                'i' => {
+                    instants += 1;
+                    tracks.insert(e.tid);
+                }
+                'C' => {
+                    counters += 1;
+                    tracks.insert(e.tid);
+                }
+                // 'M' thread_name metadata and anything a future writer adds
+                _ => {}
+            }
+        }
+        println!(
+            "{path}: OK — {} events on {} tracks ({spans} spans, {instants} instants, \
+             {counters} counters)",
+            events.len(),
+            tracks.len(),
+        );
     }
     Ok(())
 }

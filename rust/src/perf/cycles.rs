@@ -4,28 +4,66 @@
 //! states), so `rdtsc` deltas divided by the calibrated TSC frequency give
 //! wall time, and raw deltas are the "cycles" the paper's flops/cycle plots
 //! use.  Calibration measures the TSC against `Instant` once (cached).
+//!
+//! On non-x86_64 targets — and under `SGCT_NO_RDTSC=1` (mirroring
+//! `SGCT_NO_AVX`) — the counter degrades to the monotonic clock at 1
+//! "cycle" = 1 ns, and [`cycles_per_second`] reports exactly 1e9 without
+//! running the calibration spin.  Traces and benches then work unchanged
+//! on aarch64 CI runners; only the flops/*cycle* absolute numbers lose
+//! their hardware meaning (ratios and seconds stay valid).
 
+use std::ffi::OsStr;
 use std::sync::OnceLock;
 use std::time::Instant;
+
+/// Pure resolver for the `SGCT_NO_RDTSC` override (table-tested without
+/// mutating the environment — `set_var` racing `getenv` across test
+/// threads is UB, see `fused::resolve_tile_bytes`): any set value other
+/// than `"0"` disables the TSC.
+fn resolve_no_rdtsc(var: Option<&OsStr>) -> bool {
+    var.is_some_and(|v| v != OsStr::new("0"))
+}
+
+/// True when cycle timestamps come from the monotonic clock (1 "cycle" =
+/// 1 ns) instead of `rdtsc`: always on non-x86_64, and when
+/// `SGCT_NO_RDTSC` is set to anything but `0`.  Cached on first use —
+/// every timestamp in a process must come from one clock, so flip the
+/// variable before the first measurement, like `SGCT_NO_AVX`.
+pub fn tsc_disabled() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static OFF: OnceLock<bool> = OnceLock::new();
+        *OFF.get_or_init(|| resolve_no_rdtsc(std::env::var_os("SGCT_NO_RDTSC").as_deref()))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        true
+    }
+}
+
+/// Monotonic-clock fallback: nanoseconds since first use.
+fn monotonic_ns() -> u64 {
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
 
 /// Read the cycle counter.
 #[inline(always)]
 pub fn now_cycles() -> u64 {
     #[cfg(target_arch = "x86_64")]
-    // SAFETY: RDTSC is baseline x86_64 — unconditionally executable, no
-    // memory access; the intrinsic is only `unsafe` for uniformity
-    unsafe {
-        core::arch::x86_64::_rdtsc()
+    if !tsc_disabled() {
+        // SAFETY: RDTSC is baseline x86_64 — unconditionally executable, no
+        // memory access; the intrinsic is only `unsafe` for uniformity
+        return unsafe { core::arch::x86_64::_rdtsc() };
     }
-    #[cfg(not(target_arch = "x86_64"))]
-    {
-        // fall back to nanoseconds (1 "cycle" = 1 ns)
-        static START: OnceLock<Instant> = OnceLock::new();
-        START.get_or_init(Instant::now).elapsed().as_nanos() as u64
-    }
+    monotonic_ns()
 }
 
 fn calibrate() -> f64 {
+    if tsc_disabled() {
+        // the fallback clock IS nanoseconds: exact by definition, no spin
+        return 1e9;
+    }
     // two-phase: short warmup, then a 50 ms measurement window
     let _ = (now_cycles(), Instant::now());
     let t0 = Instant::now();
@@ -39,6 +77,7 @@ fn calibrate() -> f64 {
 }
 
 /// Calibrated TSC frequency (cycles per second), cached after first call.
+/// Exactly `1e9` in fallback mode ([`tsc_disabled`]).
 pub fn cycles_per_second() -> f64 {
     static HZ: OnceLock<f64> = OnceLock::new();
     *HZ.get_or_init(calibrate)
@@ -84,10 +123,14 @@ mod tests {
     #[test]
     fn calibration_is_plausible() {
         let hz = cycles_per_second();
-        // any machine this runs on is between 0.2 and 10 GHz
+        // any machine this runs on is between 0.2 and 10 GHz; the fallback
+        // clock reports exactly 1 "GHz" (1 cycle = 1 ns)
         assert!(hz > 2e8 && hz < 1e10, "hz = {hz}");
         // cached: second call identical
         assert_eq!(hz, cycles_per_second());
+        if tsc_disabled() {
+            assert_eq!(hz, 1e9);
+        }
     }
 
     #[test]
@@ -96,5 +139,37 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(10));
         let s = t.elapsed_secs();
         assert!(s > 0.005 && s < 1.0, "s = {s}");
+    }
+
+    #[test]
+    fn no_rdtsc_override_resolution() {
+        // pure table test: the resolver never touches the real environment
+        let cases: &[(Option<&str>, bool)] = &[
+            (None, false),      // unset: use the TSC
+            (Some("0"), false), // explicit opt-out of the override
+            (Some("1"), true),
+            (Some(""), true), // set-but-empty counts as set (mirrors SGCT_NO_AVX)
+            (Some("yes"), true),
+            (Some("00"), true), // only the exact string "0" opts out
+        ];
+        for &(var, expect) in cases {
+            assert_eq!(
+                resolve_no_rdtsc(var.map(OsStr::new)),
+                expect,
+                "SGCT_NO_RDTSC={var:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fallback_clock_is_monotonic_and_ns_scaled() {
+        // exercise the monotonic path directly, whatever the build target
+        let a = monotonic_ns();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = monotonic_ns();
+        assert!(b > a);
+        // ~2 ms sleep must land in [1 ms, 1 s] of nanoseconds
+        let dt = b - a;
+        assert!(dt > 1_000_000 && dt < 1_000_000_000, "dt = {dt}");
     }
 }

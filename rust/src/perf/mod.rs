@@ -7,14 +7,22 @@
 //!   sizing, trimmed medians (criterion is not in the offline crate set);
 //! * [`stream`] — STREAM-like bandwidth probe (the paper takes the roofline
 //!   memory bound from the stream benchmark [11]);
-//! * [`roofline`] — the ceilings and the operational-intensity bookkeeping.
+//! * [`roofline`] — the ceilings and the operational-intensity bookkeeping;
+//! * [`trace`] — zero-perturbation tracing: per-track ring buffers of POD
+//!   span events with cycle timestamps, drained to Chrome trace-event JSON
+//!   (Perfetto-loadable `TRACE_*.json`, CLI `--trace`);
+//! * [`registry`] — atomic counters/gauges/log2-latency-histograms with a
+//!   Prometheus text exposition (the serve daemon's stats backend).
 
 pub mod bench;
 pub mod cycles;
+pub mod registry;
 pub mod roofline;
 pub mod stats;
 pub mod stream;
+pub mod trace;
 
 pub use bench::{bench, write_bench_json, BenchRecord, BenchResult, Config};
 pub use cycles::{cycles_per_second, now_cycles, CycleTimer};
+pub use registry::{Counter, FloatSum, Gauge, Histogram, HistogramSnapshot, Registry};
 pub use stats::Summary;

@@ -1,0 +1,510 @@
+//! Metrics registry: atomic counters, gauges, float sums, and fixed-bucket
+//! log2 histograms with a Prometheus-style text exposition.
+//!
+//! Registration (name lookup) takes a lock; *recording never does* — every
+//! metric handle is a cheap `Arc` around atomics, cloned out of the
+//! registry once and cached by the instrumented code (the serve daemon
+//! holds its histograms in `Shared`, `coordinator::Metrics` holds a cell
+//! per phase).  This is what lets pool workers record concurrently without
+//! serializing on the old `Mutex<BTreeMap>`.
+//!
+//! Histograms use power-of-two buckets: bucket `i` counts observations
+//! `v` with `2^(i-1) < v <= 2^i` (bucket 0 holds `v <= 1`, the last bucket
+//! is unbounded).  Exact enough for latency work at 64 * 8 bytes per
+//! histogram, and the cumulative `le="2^i"` rendering is native Prometheus.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Fixed bucket count of every [`Histogram`] (one per power of two of u64).
+pub const HIST_BUCKETS: usize = 64;
+
+/// Monotonic counter.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        // ORDERING: Relaxed — a pure statistic: no other memory is
+        // published through it, and totals are read after the recording
+        // threads are joined (or approximately, for live exposition).
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        // ORDERING: Relaxed — see `add`.
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Settable signed value (e.g. a queue depth).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        // ORDERING: Relaxed — a pure statistic, see `Counter::add`.
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        // ORDERING: Relaxed — a pure statistic, see `Counter::add`.
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> i64 {
+        // ORDERING: Relaxed — see `set`.
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free f64 accumulator (bit-cast CAS).  The sum of every `add` in
+/// *some* arrival order — identical to a mutexed `+=` when calls don't
+/// race, which keeps `coordinator::Metrics`' exact-sum semantics.
+#[derive(Clone, Debug, Default)]
+pub struct FloatSum(Arc<AtomicU64>);
+
+impl FloatSum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, v: f64) {
+        // ORDERING: Relaxed on both — the CAS only needs atomicity of the
+        // read-modify-write on this one cell (a pure statistic, read after
+        // the recording threads quiesce); it publishes no other memory.
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        // ORDERING: Relaxed — see `add`.
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct HistInner {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Fixed-bucket log2 latency histogram.  Unit-agnostic `u64` observations;
+/// the serve daemon records nanoseconds.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistInner>);
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self(Arc::new(HistInner {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }))
+    }
+}
+
+/// Bucket index for an observation: `v <= 1` lands in bucket 0, otherwise
+/// the smallest `i` with `v <= 2^i` (clamped to the last bucket).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        (u64::BITS - (v - 1).leading_zeros()).min(HIST_BUCKETS as u32 - 1) as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (`u64::MAX` for the last).
+#[inline]
+pub fn bucket_bound(i: usize) -> u64 {
+    if i >= HIST_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        1u64 << i
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        // ORDERING: Relaxed on all three — pure statistics (see
+        // `Counter::add`); a reader racing an observation may see the
+        // bucket before the sum or vice versa, which snapshot consumers
+        // tolerate by construction (monotone counters, no invariants
+        // across cells).
+        self.0.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        // ORDERING: Relaxed — see `observe`.
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        // ORDERING: Relaxed — see `observe`.
+        self.0.sum.load(Ordering::Relaxed)
+    }
+
+    /// Consistent-enough point-in-time copy (per-cell atomic reads).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            // ORDERING: Relaxed — see `observe`.
+            buckets: std::array::from_fn(|i| self.0.buckets[i].load(Ordering::Relaxed)),
+            sum: self.sum(),
+            count: self.count(),
+        }
+    }
+}
+
+/// Plain-data copy of a [`Histogram`] (what travels in the serve stats
+/// frame and renders to Prometheus text).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        Self { buckets: [0; HIST_BUCKETS], sum: 0, count: 0 }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Mean observation (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing quantile `q` in [0, 1] —
+    /// a log2-resolution percentile, good enough for "p99 is ~2^21 ns".
+    pub fn quantile_bound(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return bucket_bound(i);
+            }
+        }
+        u64::MAX
+    }
+
+    /// Render as a Prometheus histogram (cumulative `le` buckets up to the
+    /// highest non-empty one, then `+Inf`, `_sum`, `_count`).
+    pub fn render_prometheus(&self, name: &str, out: &mut String) {
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let last = self.buckets.iter().rposition(|&b| b > 0).unwrap_or(0);
+        let mut cum = 0u64;
+        for i in 0..=last.min(HIST_BUCKETS - 2) {
+            cum += self.buckets[i];
+            out.push_str(&format!("{name}_bucket{{le=\"{}\"}} {cum}\n", bucket_bound(i)));
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", self.count));
+        out.push_str(&format!("{name}_sum {}\n", self.sum));
+        out.push_str(&format!("{name}_count {}\n", self.count));
+    }
+}
+
+// --------------------------------------------------------------- registry
+
+#[derive(Clone, Debug)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    FloatSum(FloatSum),
+    Histogram(Histogram),
+}
+
+/// Named metrics.  `counter/gauge/histogram/float_sum` get-or-register
+/// under a lock and hand back a lock-free recording handle; asking for an
+/// existing name with a different type panics (a programming error).
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn get_or<T: Clone>(
+        &self,
+        name: &str,
+        make: impl FnOnce() -> (T, Metric),
+        pick: impl FnOnce(&Metric) -> Option<T>,
+    ) -> T {
+        let mut m = self.metrics.lock().unwrap();
+        if let Some(existing) = m.get(name) {
+            return pick(existing)
+                .unwrap_or_else(|| panic!("metric '{name}' already registered with another type"));
+        }
+        let (handle, metric) = make();
+        m.insert(name.to_string(), metric);
+        handle
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        self.get_or(
+            name,
+            || {
+                let c = Counter::new();
+                (c.clone(), Metric::Counter(c))
+            },
+            |m| match m {
+                Metric::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.get_or(
+            name,
+            || {
+                let g = Gauge::new();
+                (g.clone(), Metric::Gauge(g))
+            },
+            |m| match m {
+                Metric::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    pub fn float_sum(&self, name: &str) -> FloatSum {
+        self.get_or(
+            name,
+            || {
+                let f = FloatSum::new();
+                (f.clone(), Metric::FloatSum(f))
+            },
+            |m| match m {
+                Metric::FloatSum(f) => Some(f.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.get_or(
+            name,
+            || {
+                let h = Histogram::new();
+                (h.clone(), Metric::Histogram(h))
+            },
+            |m| match m {
+                Metric::Histogram(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.metrics.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Drop every metric (handles already cloned out keep working but are
+    /// no longer rendered).
+    pub fn reset(&self) {
+        self.metrics.lock().unwrap().clear();
+    }
+
+    /// Prometheus text exposition of every registered metric.
+    pub fn render_prometheus(&self) -> String {
+        let metrics: Vec<(String, Metric)> =
+            self.metrics.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        let mut out = String::new();
+        for (name, metric) in metrics {
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+                }
+                Metric::FloatSum(f) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", f.get()));
+                }
+                Metric::Histogram(h) => h.snapshot().render_prometheus(&name, &mut out),
+            }
+        }
+        out
+    }
+}
+
+/// The process-wide registry (what `--trace`-adjacent exposition and the
+/// serve daemon use unless they carry their own instance).
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_record() {
+        let r = Registry::new();
+        let c = r.counter("jobs");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // get-or-register returns the same cell
+        assert_eq!(r.counter("jobs").get(), 5);
+        let g = r.gauge("depth");
+        g.set(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+    }
+
+    #[test]
+    fn float_sum_accumulates_exactly_when_sequential() {
+        let f = FloatSum::new();
+        f.add(1.0);
+        f.add(0.5);
+        assert_eq!(f.get(), 1.5);
+        f.add(-0.25);
+        assert_eq!(f.get(), 1.25);
+    }
+
+    #[test]
+    fn bucket_math_is_a_partition() {
+        // every value lands in exactly one bucket whose bound contains it
+        for v in [0u64, 1, 2, 3, 4, 5, 7, 8, 9, 1023, 1024, 1025, u64::MAX / 2, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_bound(i), "v={v} i={i}");
+            if i > 0 {
+                assert!(v > bucket_bound(i - 1), "v={v} i={i}");
+            }
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(1025), 11);
+    }
+
+    #[test]
+    fn histogram_observes_and_snapshots() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 1000, 1_000_000] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.sum, 1_001_003);
+        assert_eq!(s.buckets.iter().sum::<u64>(), 4);
+        assert!((s.mean() - 250_250.75).abs() < 1e-9);
+        // p100 bound contains the max observation
+        assert!(s.quantile_bound(1.0) >= 1_000_000);
+        // p25 is the smallest bucket
+        assert_eq!(s.quantile_bound(0.25), 1);
+        assert_eq!(HistogramSnapshot::default().quantile_bound(0.5), 0);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let r = Registry::new();
+        let c = r.counter("hits");
+        let f = r.float_sum("secs");
+        let h = r.histogram("lat");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let (c, f, h) = (c.clone(), f.clone(), h.clone());
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        c.inc();
+                        f.add(0.5);
+                        h.observe(i);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8000);
+        // 0.5 is a power of two: addition in any order is exact
+        assert_eq!(f.get(), 4000.0);
+        let s = h.snapshot();
+        assert_eq!(s.count, 8000);
+        assert_eq!(s.sum, 8 * (999 * 1000 / 2));
+        assert_eq!(s.buckets.iter().sum::<u64>(), 8000);
+    }
+
+    #[test]
+    fn prometheus_rendering_shape() {
+        let r = Registry::new();
+        r.counter("sgct_jobs_done").add(7);
+        r.gauge("sgct_queue_depth").set(2);
+        let h = r.histogram("sgct_wait_ns");
+        h.observe(3);
+        h.observe(100);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE sgct_jobs_done counter\nsgct_jobs_done 7\n"), "{text}");
+        assert!(text.contains("# TYPE sgct_queue_depth gauge\nsgct_queue_depth 2\n"), "{text}");
+        assert!(text.contains("# TYPE sgct_wait_ns histogram\n"), "{text}");
+        assert!(text.contains("sgct_wait_ns_bucket{le=\"+Inf\"} 2\n"), "{text}");
+        assert!(text.contains("sgct_wait_ns_sum 103\n"), "{text}");
+        assert!(text.contains("sgct_wait_ns_count 2\n"), "{text}");
+        // cumulative buckets are monotone
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{le=") && !l.contains("+Inf")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "{text}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "another type")]
+    fn type_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter("x");
+        let _ = r.gauge("x");
+    }
+}

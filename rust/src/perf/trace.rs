@@ -1,0 +1,994 @@
+//! Zero-perturbation tracing: per-track ring buffers of POD span events.
+//!
+//! The engine's contracts are measured in flops/cycle and pinned bitwise, so
+//! the tracer must not perturb what it observes.  The record path is built
+//! around that constraint:
+//!
+//! * **One relaxed load when disabled.**  [`enabled`] is a single
+//!   `AtomicBool` check; every recording entry point returns immediately
+//!   (an inert [`SpanGuard`]) when tracing is off.  The [`trace_span!`]
+//!   macro additionally compiles to the inert guard under the `trace_off`
+//!   cargo feature, removing even that load from the binary.
+//! * **No allocation or locking while recording.**  Each thread owns a
+//!   fixed-capacity ring of POD slots (`{start, end, kind|name, arg}` as
+//!   four `AtomicU64` words).  Recording is a handful of relaxed stores
+//!   plus one release store of the ring cursor.  Names are interned once
+//!   ([`intern`], cached in `OnceLock` statics by [`trace_span!`]); the
+//!   only locks are on the cold paths: first record of a new thread
+//!   (ring claim), interning, and [`label_thread`].
+//! * **Bounded memory.**  A full ring wraps and overwrites its oldest
+//!   slots; the overwritten count is reported as the track's `dropped`
+//!   stat.  This is what makes the serve flight recorder affordable: the
+//!   ring stays on for the daemon's whole life and holds the last N events
+//!   per track, dumped only when a job panics or the daemon shuts down.
+//!
+//! Tracks are recycled: when a thread exits, its ring returns to a free
+//! list and the next new thread reuses it (the sweep engine spawns scoped
+//! workers per dimension/group, so tracks would otherwise grow without
+//! bound).  A ring has at most one live writer, so per-track spans form a
+//! proper stack (disjoint or nested, never partially overlapping) — the
+//! wellformedness property the conformance suite checks.
+//!
+//! Timestamps are [`super::cycles::now_cycles`] cycles, converted to
+//! microseconds on export.  [`write_chrome_json`] emits the Chrome
+//! trace-event format (load `TRACE_*.json` in Perfetto / `chrome://tracing`);
+//! [`parse_chrome_json`] is the dependency-free validating parser the tests
+//! and `sgct trace-check` run over that output.
+
+use std::cell::RefCell;
+use std::io::{self, Write as _};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::cycles::{cycles_per_second, now_cycles};
+
+/// Default per-track ring capacity (events).  At 32 bytes per slot this is
+/// ~1 MiB per live track — cheap enough to leave on for a daemon.
+pub const DEFAULT_CAPACITY: usize = 32 * 1024;
+
+/// Interned event name.  Intern once (cold), record by id (hot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NameId(u16);
+
+/// What a recorded slot means.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Closed interval `[start, end]` on one track (`ph:"X"`).
+    Span,
+    /// A point in time (`ph:"i"`); `end == start`.
+    Instant,
+    /// A sampled value (`ph:"C"`), e.g. a queue depth; value in `arg`.
+    Counter,
+}
+
+const KIND_SPAN: u64 = 0;
+const KIND_INSTANT: u64 = 1;
+const KIND_COUNTER: u64 = 2;
+
+// ------------------------------------------------------------- global state
+
+// ORDERING: Relaxed is enough for the enable flag — it gates *whether* new
+// events are recorded, never *which data* another thread reads; the rings
+// themselves do their own publication (release cursor stores).
+static ENABLED: AtomicBool = AtomicBool::new(false);
+// ORDERING: Relaxed — capacity is a configuration hint read when a ring is
+// created under the registry lock; the lock orders it with enable/reset.
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
+// ORDERING: Relaxed — the generation only invalidates thread-local cached
+// ring handles after `reset()`; a stale read means one extra claim through
+// the registry lock, never a data race.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+
+struct Slot {
+    start: AtomicU64,
+    end: AtomicU64,
+    /// `kind << 48 | name_id`.
+    meta: AtomicU64,
+    arg: AtomicU64,
+}
+
+impl Slot {
+    fn zeroed() -> Self {
+        Self {
+            start: AtomicU64::new(0),
+            end: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+            arg: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Ring {
+    slots: Box<[Slot]>,
+    /// Total events ever recorded on this ring (monotonic; slot index is
+    /// `cursor % capacity`).  Written only by the owning thread.
+    cursor: AtomicU64,
+    /// Claimed by a live thread?  Free rings are recycled.
+    in_use: AtomicBool,
+    /// Perfetto thread name; cold path only ([`label_thread`]).
+    label: Mutex<String>,
+}
+
+impl Ring {
+    fn new(capacity: usize) -> Self {
+        let slots: Vec<Slot> = (0..capacity.max(2)).map(|_| Slot::zeroed()).collect();
+        Self {
+            slots: slots.into_boxed_slice(),
+            cursor: AtomicU64::new(0),
+            in_use: AtomicBool::new(true),
+            label: Mutex::new(String::new()),
+        }
+    }
+
+    /// Record one event.  Single writer: only the claiming thread calls this.
+    #[inline]
+    fn record(&self, kind: u64, name: NameId, start: u64, end: u64, arg: u64) {
+        // ORDERING: Relaxed loads/stores on the slot words are safe because
+        // this ring has exactly one writer (the claiming thread; the claim
+        // handoff in `claim_ring` is an Acquire CAS pairing with the Release
+        // store in `TrackHandle::drop`).  Readers never look at a slot until
+        // the Release cursor store below publishes it.
+        let i = self.cursor.load(Ordering::Relaxed);
+        let slot = &self.slots[(i % self.slots.len() as u64) as usize];
+        slot.start.store(start, Ordering::Relaxed);
+        slot.end.store(end, Ordering::Relaxed);
+        // ORDERING: Relaxed — same single-writer contract as above.
+        slot.meta.store(kind << 48 | name.0 as u64, Ordering::Relaxed);
+        slot.arg.store(arg, Ordering::Relaxed);
+        // ORDERING: Release publishes the slot words above to any drainer
+        // that Acquire-loads the cursor (snapshot); pairs with those loads.
+        self.cursor.store(i + 1, Ordering::Release);
+    }
+
+    /// Read the ring without disturbing it.  Returns `(events, dropped)`:
+    /// the last `<= capacity` events plus how many older ones the wrap
+    /// overwrote.  Safe against a concurrent writer: slots that could have
+    /// been overwritten while we read (cursor advanced past them) are
+    /// discarded and counted as dropped.
+    fn snapshot(&self) -> (Vec<RawEvent>, u64) {
+        let cap = self.slots.len() as u64;
+        // ORDERING: Acquire pairs with the writer's Release cursor store —
+        // every slot with index < cursor is fully written before we read it.
+        let end = self.cursor.load(Ordering::Acquire);
+        let first = end.saturating_sub(cap);
+        let mut out = Vec::with_capacity((end - first) as usize);
+        for i in first..end {
+            let slot = &self.slots[(i % cap) as usize];
+            // ORDERING: Relaxed — the Acquire cursor load above already
+            // ordered these reads after the writer's stores for index < end.
+            let meta = slot.meta.load(Ordering::Relaxed);
+            out.push(RawEvent {
+                index: i,
+                start: slot.start.load(Ordering::Relaxed),
+                end: slot.end.load(Ordering::Relaxed),
+                kind: meta >> 48,
+                name: NameId((meta & 0xffff) as u16),
+                // ORDERING: Relaxed — ordered by the Acquire cursor load above.
+                arg: slot.arg.load(Ordering::Relaxed),
+            });
+        }
+        // ORDERING: Acquire — re-read the cursor; a live writer may have
+        // lapped slots we just read (their words would be torn), so anything
+        // older than the new window is discarded and counted as dropped.
+        let end2 = self.cursor.load(Ordering::Acquire);
+        let live_first = end2.saturating_sub(cap);
+        out.retain(|e| e.index >= live_first);
+        (out, live_first)
+    }
+}
+
+struct RawEvent {
+    index: u64,
+    start: u64,
+    end: u64,
+    kind: u64,
+    name: NameId,
+    arg: u64,
+}
+
+struct Tracer {
+    rings: Mutex<Vec<Arc<Ring>>>,
+    /// Interned names.  Never cleared: `NameId`s are cached in `OnceLock`
+    /// statics at call sites and must stay valid across `reset()`.
+    names: Mutex<Vec<String>>,
+}
+
+fn tracer() -> &'static Tracer {
+    static TRACER: OnceLock<Tracer> = OnceLock::new();
+    TRACER.get_or_init(|| Tracer { rings: Mutex::new(Vec::new()), names: Mutex::new(Vec::new()) })
+}
+
+/// Is tracing currently recording?  One relaxed atomic load.
+#[inline(always)]
+pub fn enabled() -> bool {
+    // ORDERING: Relaxed — see the ENABLED declaration; purely a gate.
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start recording with the default per-track capacity.
+pub fn enable() {
+    enable_with_capacity(DEFAULT_CAPACITY);
+}
+
+/// Start recording with `capacity` events per track (existing tracks keep
+/// their rings; the capacity applies to tracks claimed after this call).
+pub fn enable_with_capacity(capacity: usize) {
+    // ORDERING: Relaxed on both — configuration writes; consumers treat any
+    // interleaving as "tracing was toggled around my event", which is benign.
+    CAPACITY.store(capacity.max(2), Ordering::Relaxed);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording.  Events already in the rings stay drainable.
+pub fn disable() {
+    // ORDERING: Relaxed — see the ENABLED declaration.
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Drop every ring and all recorded events (interned names are kept so
+/// cached `NameId`s stay valid).  Live threads re-claim fresh rings on
+/// their next record via the generation bump.
+pub fn reset() {
+    let t = tracer();
+    let mut rings = t.rings.lock().unwrap();
+    rings.clear();
+    // ORDERING: Relaxed — see the GENERATION declaration.
+    GENERATION.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Intern `name`, returning a compact id for the record path.  Idempotent;
+/// takes the intern lock, so hot call sites should cache the id (the
+/// [`trace_span!`] macro does this with a `OnceLock` static).
+pub fn intern(name: &str) -> NameId {
+    let mut names = tracer().names.lock().unwrap();
+    if let Some(i) = names.iter().position(|n| n == name) {
+        return NameId(i as u16);
+    }
+    assert!(names.len() < u16::MAX as usize, "trace name table full");
+    names.push(name.to_string());
+    NameId((names.len() - 1) as u16)
+}
+
+fn name_of(id: NameId) -> String {
+    let names = tracer().names.lock().unwrap();
+    names.get(id.0 as usize).cloned().unwrap_or_else(|| format!("name#{}", id.0))
+}
+
+// ------------------------------------------------------ per-thread tracks
+
+struct TrackHandle {
+    ring: Arc<Ring>,
+    generation: u64,
+}
+
+impl Drop for TrackHandle {
+    fn drop(&mut self) {
+        // ORDERING: Release returns the ring to the free list; pairs with
+        // the Acquire CAS in `claim_ring`, so the next claimant observes
+        // every slot/cursor write this thread made before exiting.
+        self.ring.in_use.store(false, Ordering::Release);
+    }
+}
+
+thread_local! {
+    static TRACK: RefCell<Option<TrackHandle>> = const { RefCell::new(None) };
+}
+
+fn claim_ring() -> TrackHandle {
+    let t = tracer();
+    let mut rings = t.rings.lock().unwrap();
+    for ring in rings.iter() {
+        // ORDERING: Acquire on success pairs with the Release store in
+        // `TrackHandle::drop` — the previous owner's writes (cursor, slots)
+        // happen-before ours, keeping the single-writer invariant sound
+        // across the recycle.  Relaxed on failure: we just try the next ring.
+        if ring.in_use.compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed).is_ok() {
+            return TrackHandle {
+                ring: Arc::clone(ring),
+                // ORDERING: Relaxed — see the GENERATION declaration.
+                generation: GENERATION.load(Ordering::Relaxed),
+            };
+        }
+    }
+    // ORDERING: Relaxed — see the CAPACITY declaration.
+    let ring = Arc::new(Ring::new(CAPACITY.load(Ordering::Relaxed)));
+    rings.push(Arc::clone(&ring));
+    // ORDERING: Relaxed — see the GENERATION declaration.
+    TrackHandle { ring, generation: GENERATION.load(Ordering::Relaxed) }
+}
+
+/// Run `f` with this thread's ring, claiming one if needed.
+fn with_ring(f: impl FnOnce(&Ring)) {
+    TRACK.with(|cell| {
+        let mut h = cell.borrow_mut();
+        // ORDERING: Relaxed — see the GENERATION declaration.
+        let current = GENERATION.load(Ordering::Relaxed);
+        let stale = match h.as_ref() {
+            Some(handle) => handle.generation != current,
+            None => true,
+        };
+        if stale {
+            *h = Some(claim_ring());
+        }
+        f(&h.as_ref().unwrap().ring);
+    });
+}
+
+/// Name this thread's track in the exported trace (e.g. `"rank 3"`).
+/// Claims a track if the thread has none yet; no-op when disabled.
+pub fn label_thread(label: &str) {
+    if !enabled() {
+        return;
+    }
+    with_ring(|ring| {
+        *ring.label.lock().unwrap() = label.to_string();
+    });
+}
+
+// --------------------------------------------------------- recording API
+
+/// RAII span: records `[construction, drop]` on the current thread's track.
+/// Bind it (`let _span = ...`); `let _ =` drops immediately.
+pub struct SpanGuard {
+    name: NameId,
+    start: u64,
+    arg: u64,
+    active: bool,
+}
+
+impl SpanGuard {
+    /// The no-op guard returned when tracing is disabled or compiled out.
+    #[inline(always)]
+    pub const fn inert() -> Self {
+        Self { name: NameId(0), start: 0, arg: 0, active: false }
+    }
+
+    /// Attach/replace the span's argument (shown in the trace viewer) —
+    /// e.g. bytes sent, kernel cycles, a rank id.
+    #[inline]
+    pub fn set_arg(&mut self, arg: u64) {
+        self.arg = arg;
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if self.active {
+            let end = now_cycles();
+            with_ring(|ring| ring.record(KIND_SPAN, self.name, self.start, end, self.arg));
+        }
+    }
+}
+
+/// Open a span under an interned name.  Inert when tracing is disabled.
+#[inline]
+pub fn span(name: NameId) -> SpanGuard {
+    span_with_arg(name, 0)
+}
+
+/// Open a span carrying an argument value.
+#[inline]
+pub fn span_with_arg(name: NameId, arg: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::inert();
+    }
+    SpanGuard { name, start: now_cycles(), arg, active: true }
+}
+
+/// Record a point event (e.g. a fault) on the current thread's track.
+#[inline]
+pub fn instant(name: NameId, arg: u64) {
+    if !enabled() {
+        return;
+    }
+    let now = now_cycles();
+    with_ring(|ring| ring.record(KIND_INSTANT, name, now, now, arg));
+}
+
+/// Record a sampled counter value (e.g. a queue depth) at the current time.
+#[inline]
+pub fn counter_value(name: NameId, value: u64) {
+    if !enabled() {
+        return;
+    }
+    let now = now_cycles();
+    with_ring(|ring| ring.record(KIND_COUNTER, name, now, now, value));
+}
+
+/// Open a span under a static name, interning on first use per call site
+/// and caching the [`NameId`] in a hidden `OnceLock`.  Expands to the inert
+/// guard (no atomic load, no timestamp) under the `trace_off` feature.
+///
+/// ```ignore
+/// let _span = trace_span!("gather");
+/// let mut s = trace_span!("send-piece", bytes as u64);
+/// ```
+#[macro_export]
+macro_rules! trace_span {
+    ($name:expr) => {
+        $crate::trace_span!($name, 0u64)
+    };
+    ($name:expr, $arg:expr) => {{
+        #[cfg(not(feature = "trace_off"))]
+        {
+            if $crate::perf::trace::enabled() {
+                static NAME: ::std::sync::OnceLock<$crate::perf::trace::NameId> =
+                    ::std::sync::OnceLock::new();
+                let id = *NAME.get_or_init(|| $crate::perf::trace::intern($name));
+                $crate::perf::trace::span_with_arg(id, $arg)
+            } else {
+                $crate::perf::trace::SpanGuard::inert()
+            }
+        }
+        #[cfg(feature = "trace_off")]
+        {
+            let _ = &$name;
+            let _ = &$arg;
+            $crate::perf::trace::SpanGuard::inert()
+        }
+    }};
+}
+
+/// Record an instant event under a static name (cached like [`trace_span!`]).
+#[macro_export]
+macro_rules! trace_instant {
+    ($name:expr, $arg:expr) => {{
+        #[cfg(not(feature = "trace_off"))]
+        if $crate::perf::trace::enabled() {
+            static NAME: ::std::sync::OnceLock<$crate::perf::trace::NameId> =
+                ::std::sync::OnceLock::new();
+            let id = *NAME.get_or_init(|| $crate::perf::trace::intern($name));
+            $crate::perf::trace::instant(id, $arg);
+        }
+        #[cfg(feature = "trace_off")]
+        {
+            let _ = &$name;
+            let _ = &$arg;
+        }
+    }};
+}
+
+// ----------------------------------------------------------- drain/export
+
+/// One drained event, names resolved.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub track: u32,
+    pub name: String,
+    pub kind: EventKind,
+    pub start_cycles: u64,
+    pub end_cycles: u64,
+    pub arg: u64,
+}
+
+/// Per-track stats from a snapshot.
+#[derive(Debug, Clone)]
+pub struct TrackInfo {
+    pub track: u32,
+    pub label: String,
+    /// Events overwritten by ring wrap (drop-oldest).
+    pub dropped: u64,
+    /// Events currently readable.
+    pub recorded: u64,
+}
+
+/// A non-destructive snapshot of every track.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    pub tracks: Vec<TrackInfo>,
+}
+
+impl Trace {
+    /// Total events dropped to ring wrap across all tracks.
+    pub fn dropped(&self) -> u64 {
+        self.tracks.iter().map(|t| t.dropped).sum()
+    }
+}
+
+/// Snapshot all tracks without clearing them (safe while threads record:
+/// possibly-torn wrapped slots are discarded, see [`Ring::snapshot`]).
+pub fn snapshot() -> Trace {
+    let t = tracer();
+    let rings: Vec<Arc<Ring>> = t.rings.lock().unwrap().clone();
+    let mut trace = Trace::default();
+    for (track, ring) in rings.iter().enumerate() {
+        let (raw, dropped) = ring.snapshot();
+        trace.tracks.push(TrackInfo {
+            track: track as u32,
+            label: ring.label.lock().unwrap().clone(),
+            dropped,
+            recorded: raw.len() as u64,
+        });
+        for e in raw {
+            trace.events.push(TraceEvent {
+                track: track as u32,
+                name: name_of(e.name),
+                kind: match e.kind {
+                    KIND_INSTANT => EventKind::Instant,
+                    KIND_COUNTER => EventKind::Counter,
+                    _ => EventKind::Span,
+                },
+                start_cycles: e.start,
+                end_cycles: e.end,
+                arg: e.arg,
+            });
+        }
+    }
+    trace
+}
+
+/// Serialize a [`Trace`] as Chrome trace-event JSON (Perfetto-loadable).
+/// Timestamps are microseconds relative to the earliest event.
+pub fn chrome_json(trace: &Trace) -> String {
+    let hz = cycles_per_second();
+    let t0 = trace.events.iter().map(|e| e.start_cycles).min().unwrap_or(0);
+    let us = |cycles: u64| cycles.saturating_sub(t0) as f64 / hz * 1e6;
+    let mut out = String::new();
+    out.push_str("{\"displayTimeUnit\": \"ms\", \"traceEvents\": [\n");
+    let mut first = true;
+    let mut push = |out: &mut String, line: String| {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&line);
+    };
+    for t in &trace.tracks {
+        let label = if t.label.is_empty() { format!("track {}", t.track) } else { t.label.clone() };
+        push(
+            &mut out,
+            format!(
+                "{{\"ph\": \"M\", \"pid\": 1, \"tid\": {}, \"name\": \"thread_name\", \
+                 \"args\": {{\"name\": \"{}\"}}}}",
+                t.track,
+                json_escape(&label)
+            ),
+        );
+        if t.dropped > 0 {
+            push(
+                &mut out,
+                format!(
+                    "{{\"ph\": \"M\", \"pid\": 1, \"tid\": {}, \"name\": \"process_labels\", \
+                     \"args\": {{\"labels\": \"dropped {} events\"}}}}",
+                    t.track, t.dropped
+                ),
+            );
+        }
+    }
+    for e in &trace.events {
+        let common = format!(
+            "\"pid\": 1, \"tid\": {}, \"name\": \"{}\", \"cat\": \"sgct\", \"ts\": {:.3}",
+            e.track,
+            json_escape(&e.name),
+            us(e.start_cycles)
+        );
+        let line = match e.kind {
+            EventKind::Span => format!(
+                "{{\"ph\": \"X\", {common}, \"dur\": {:.3}, \"args\": {{\"arg\": {}}}}}",
+                e.end_cycles.saturating_sub(e.start_cycles) as f64 / hz * 1e6,
+                e.arg
+            ),
+            EventKind::Instant => {
+                format!("{{\"ph\": \"i\", {common}, \"s\": \"t\", \"args\": {{\"arg\": {}}}}}", e.arg)
+            }
+            EventKind::Counter => {
+                format!("{{\"ph\": \"C\", {common}, \"args\": {{\"value\": {}}}}}", e.arg)
+            }
+        };
+        push(&mut out, line);
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Snapshot every track and write Chrome trace-event JSON to `path`.
+pub fn write_chrome_json(path: &Path) -> io::Result<()> {
+    let doc = chrome_json(&snapshot());
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(doc.as_bytes())
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------- minimal parser
+
+/// One event read back from Chrome trace JSON by [`parse_chrome_json`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedEvent {
+    pub ph: char,
+    pub tid: u64,
+    pub name: String,
+    /// Microseconds; 0 for metadata events.
+    pub ts: f64,
+    /// Microseconds; 0 unless `ph == 'X'`.
+    pub dur: f64,
+    /// The `args.arg` / `args.value` / `args.name` payload, stringified.
+    pub arg: String,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+    fn num(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    fn str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.pos < self.b.len() && self.b[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8, String> {
+        self.ws();
+        self.b.get(self.pos).copied().ok_or_else(|| "unexpected end of input".into())
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek()? != c {
+            return Err(format!("expected '{}' at byte {}", c as char, self.pos));
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.expect(b':')?;
+            kv.push((k, self.value()?));
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                c => return Err(format!("expected ',' or '}}', got '{}'", c as char)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => return Err(format!("expected ',' or ']', got '{}'", c as char)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        // accumulate raw UTF-8 bytes; decoded escapes are re-encoded so
+        // multi-byte characters survive intact
+        let mut out: Vec<u8> = Vec::new();
+        let mut buf = [0u8; 4];
+        loop {
+            let c = *self.b.get(self.pos).ok_or("unterminated string")?;
+            self.pos += 1;
+            match c {
+                b'"' => return String::from_utf8(out).map_err(|_| "invalid UTF-8".into()),
+                b'\\' => {
+                    let e = *self.b.get(self.pos).ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    let decoded = match e {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'n' => '\n',
+                        b'r' => '\r',
+                        b't' => '\t',
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.pos..self.pos + 4)
+                                .ok_or("truncated \\u escape")?;
+                            self.pos += 4;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?,
+                                16,
+                            )
+                            .map_err(|_| "bad \\u escape")?;
+                            char::from_u32(code).unwrap_or('\u{fffd}')
+                        }
+                        _ => return Err(format!("bad escape '\\{}'", e as char)),
+                    };
+                    out.extend_from_slice(decoded.encode_utf8(&mut buf).as_bytes());
+                }
+                _ => out.push(c),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.ws();
+        let start = self.pos;
+        while self
+            .b
+            .get(self.pos)
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos]).map_err(|_| "bad number")?;
+        s.parse::<f64>().map(Json::Num).map_err(|_| format!("bad number '{s}' at byte {start}"))
+    }
+}
+
+/// Parse Chrome trace-event JSON (the format [`chrome_json`] writes; also
+/// accepts the bare-array form) and validate its shape: every event needs
+/// `ph`/`pid`/`tid`/`name`, `X` events need finite non-negative `ts`/`dur`.
+/// Returns the events; `Err` on malformed JSON or shape violations.
+pub fn parse_chrome_json(doc: &str) -> Result<Vec<ParsedEvent>, String> {
+    let mut p = Parser { b: doc.as_bytes(), pos: 0 };
+    let root = p.value()?;
+    p.ws();
+    if p.pos != p.b.len() {
+        return Err(format!("trailing bytes after JSON document at byte {}", p.pos));
+    }
+    let events = match &root {
+        Json::Arr(_) => &root,
+        Json::Obj(_) => root.get("traceEvents").ok_or("missing traceEvents array")?,
+        _ => return Err("root must be an object or array".into()),
+    };
+    let Json::Arr(items) = events else {
+        return Err("traceEvents must be an array".into());
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for (i, item) in items.iter().enumerate() {
+        let fail = |msg: &str| Err(format!("event {i}: {msg}"));
+        let ph = match item.get("ph").and_then(Json::str) {
+            Some(s) if s.chars().count() == 1 => s.chars().next().unwrap(),
+            _ => return fail("missing or malformed ph"),
+        };
+        if item.get("pid").and_then(Json::num).is_none() {
+            return fail("missing pid");
+        }
+        let Some(tid) = item.get("tid").and_then(Json::num) else {
+            return fail("missing tid");
+        };
+        let Some(name) = item.get("name").and_then(Json::str) else {
+            return fail("missing name");
+        };
+        let ts = item.get("ts").and_then(Json::num).unwrap_or(0.0);
+        let dur = item.get("dur").and_then(Json::num).unwrap_or(0.0);
+        if ph != 'M' && item.get("ts").is_none() {
+            return fail("non-metadata event missing ts");
+        }
+        if ph == 'X' && item.get("dur").is_none() {
+            return fail("X event missing dur");
+        }
+        if !ts.is_finite() || ts < 0.0 || !dur.is_finite() || dur < 0.0 {
+            return fail("ts/dur must be finite and non-negative");
+        }
+        let arg = item
+            .get("args")
+            .and_then(|a| a.get("arg").or_else(|| a.get("value")).or_else(|| a.get("name")))
+            .map(|v| match v {
+                Json::Num(n) => format!("{n}"),
+                Json::Str(s) => s.clone(),
+                _ => String::new(),
+            })
+            .unwrap_or_default();
+        out.push(ParsedEvent { ph, tid: tid as u64, name: name.to_string(), ts, dur, arg });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Global tracer state (enable/reset/record) is exercised by the
+    // serialized integration suite in `tests/trace_conformance.rs`; the
+    // unit tests here stay on the pure paths so they can run concurrently
+    // with the rest of the lib suite.
+
+    fn synthetic_trace() -> Trace {
+        Trace {
+            events: vec![
+                TraceEvent {
+                    track: 0,
+                    name: "gather".into(),
+                    kind: EventKind::Span,
+                    start_cycles: 1000,
+                    end_cycles: 5000,
+                    arg: 7,
+                },
+                TraceEvent {
+                    track: 1,
+                    name: "fault \"quoted\"".into(),
+                    kind: EventKind::Instant,
+                    start_cycles: 2000,
+                    end_cycles: 2000,
+                    arg: 2,
+                },
+                TraceEvent {
+                    track: 1,
+                    name: "queue-depth".into(),
+                    kind: EventKind::Counter,
+                    start_cycles: 3000,
+                    end_cycles: 3000,
+                    arg: 4,
+                },
+            ],
+            tracks: vec![
+                TrackInfo { track: 0, label: "rank 0".into(), dropped: 0, recorded: 1 },
+                TrackInfo { track: 1, label: String::new(), dropped: 3, recorded: 2 },
+            ],
+        }
+    }
+
+    #[test]
+    fn chrome_json_round_trips_through_the_parser() {
+        let doc = chrome_json(&synthetic_trace());
+        let events = parse_chrome_json(&doc).expect("writer output must parse");
+        // 2 thread_name metadata + 1 dropped label + 3 events
+        assert_eq!(events.len(), 6, "{doc}");
+        let spans: Vec<_> = events.iter().filter(|e| e.ph == 'X').collect();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "gather");
+        assert_eq!(spans[0].tid, 0);
+        assert!(spans[0].dur > 0.0);
+        assert_eq!(spans[0].arg, "7");
+        let instants: Vec<_> = events.iter().filter(|e| e.ph == 'i').collect();
+        assert_eq!(instants.len(), 1);
+        assert_eq!(instants[0].name, "fault \"quoted\"");
+        let counters: Vec<_> = events.iter().filter(|e| e.ph == 'C').collect();
+        assert_eq!(counters.len(), 1);
+        assert_eq!(counters[0].arg, "4");
+        let meta: Vec<_> = events.iter().filter(|e| e.ph == 'M').collect();
+        assert_eq!(meta.len(), 3);
+        assert!(meta.iter().any(|e| e.name == "thread_name" && e.arg == "rank 0"));
+    }
+
+    #[test]
+    fn timestamps_are_relative_and_ordered() {
+        let doc = chrome_json(&synthetic_trace());
+        let events = parse_chrome_json(&doc).unwrap();
+        let gather = events.iter().find(|e| e.name == "gather").unwrap();
+        // earliest event is at ts 0
+        assert_eq!(gather.ts, 0.0);
+        let fault = events.iter().find(|e| e.name.starts_with("fault")).unwrap();
+        assert!(fault.ts > 0.0);
+    }
+
+    #[test]
+    fn empty_trace_serializes_and_parses() {
+        let doc = chrome_json(&Trace::default());
+        let events = parse_chrome_json(&doc).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn parser_rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "{\"traceEvents\": }",
+            "{\"traceEvents\": [{}]}",                           // missing ph/pid/tid/name
+            "{\"traceEvents\": [{\"ph\": \"X\", \"pid\": 1}]}",  // missing tid/name
+            "not json at all",
+            "{\"traceEvents\": []} trailing",
+        ] {
+            assert!(parse_chrome_json(bad).is_err(), "accepted: {bad:?}");
+        }
+        // X without dur is malformed
+        let no_dur = "{\"traceEvents\": [{\"ph\": \"X\", \"pid\": 1, \"tid\": 0, \
+                      \"name\": \"a\", \"ts\": 1.0}]}";
+        assert!(parse_chrome_json(no_dur).is_err());
+    }
+
+    #[test]
+    fn parser_accepts_bare_array_form() {
+        let doc = "[{\"ph\": \"i\", \"pid\": 1, \"tid\": 3, \"name\": \"x\", \"ts\": 0.5, \
+                   \"s\": \"t\"}]";
+        let events = parse_chrome_json(doc).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].tid, 3);
+    }
+
+    #[test]
+    fn inert_guard_is_free_standing() {
+        // the disabled path's guard: constructible in const context, no-op drop
+        const G: SpanGuard = SpanGuard::inert();
+        drop(G);
+        let mut g = SpanGuard::inert();
+        g.set_arg(7); // harmless on an inert guard
+    }
+
+    #[test]
+    fn name_table_is_append_only_and_idempotent() {
+        let a = intern("trace-unit-test-name-a");
+        let b = intern("trace-unit-test-name-b");
+        assert_ne!(a, b);
+        assert_eq!(a, intern("trace-unit-test-name-a"));
+        assert_eq!(name_of(a), "trace-unit-test-name-a");
+    }
+}

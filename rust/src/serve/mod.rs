@@ -91,6 +91,36 @@ impl RetryPolicy {
     }
 }
 
+/// Render a stats frame as Prometheus text exposition: the daemon's
+/// counters and gauges as plain series, the three latency histograms
+/// (queue wait, execute, reply) as cumulative `_bucket` series.  Backs
+/// `sgct serve-client stats --stats-format prom`, so a scrape job can
+/// sit on the client side of the socket without the daemon speaking
+/// HTTP.
+pub fn render_prometheus(stats: &ServeStats) -> String {
+    let mut out = String::new();
+    for (name, value) in [
+        ("sgct_serve_jobs_done", stats.jobs_done),
+        ("sgct_serve_rejected_busy", stats.rejected_busy),
+        ("sgct_serve_rejected_too_large", stats.rejected_too_large),
+        ("sgct_serve_arena_fresh", stats.arena_fresh),
+        ("sgct_serve_arena_reuses", stats.arena_reuses),
+        ("sgct_serve_grid_buffer_allocs", stats.grid_buffer_allocs),
+    ] {
+        out.push_str(&format!("# TYPE {name} counter\n{name} {value}\n"));
+    }
+    for (name, value) in [
+        ("sgct_serve_in_flight", stats.in_flight),
+        ("sgct_serve_queue_depth", stats.queue_depth),
+    ] {
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {value}\n"));
+    }
+    stats.queue_wait_ns.render_prometheus("sgct_serve_queue_wait_ns", &mut out);
+    stats.execute_ns.render_prometheus("sgct_serve_execute_ns", &mut out);
+    stats.reply_ns.render_prometheus("sgct_serve_reply_ns", &mut out);
+    out
+}
+
 /// A blocking client for one daemon connection: send a spec, wait for
 /// the typed reply.  One in-flight job per connection — client-side
 /// concurrency is "open more connections", which is exactly the load

@@ -40,6 +40,8 @@ use crate::comm::transport::{default_timeout, BoundListener, Transport, UnixSock
 use crate::comm::wire::{self, JobKind, JobSpec, Message, RejectReason, ServeStats};
 use crate::coordinator::GridArena;
 use crate::grid::grid_buffer_allocs;
+use crate::perf::registry::{Gauge, Histogram};
+use crate::perf::trace;
 use crate::sparse::SparseGrid;
 
 use super::job;
@@ -64,6 +66,11 @@ pub struct ServeConfig {
     pub job_threads: usize,
     /// How long an idle connection may sit between requests.
     pub idle_timeout: Duration,
+    /// Flight-recorder dump path: when set, tracing stays enabled for the
+    /// daemon's whole life (bounded per-track rings, drop-oldest) and the
+    /// ring contents are written as Chrome trace JSON on a job panic and
+    /// at shutdown.
+    pub flight_recorder: Option<PathBuf>,
 }
 
 impl ServeConfig {
@@ -76,6 +83,7 @@ impl ServeConfig {
             max_flops: 50_000_000_000,
             job_threads: 1,
             idle_timeout: default_timeout(),
+            flight_recorder: None,
         }
     }
 }
@@ -125,6 +133,12 @@ struct Shared {
     rejected_busy: AtomicU64,
     rejected_too_large: AtomicU64,
     in_flight: AtomicU64,
+    /// Admitted-and-waiting jobs, updated under the queue lock (the
+    /// registry gauge type, so the value is lock-free to read).
+    queue_depth: Gauge,
+    queue_wait_ns: Histogram,
+    execute_ns: Histogram,
+    reply_ns: Histogram,
 }
 
 impl Shared {
@@ -142,6 +156,29 @@ impl Shared {
             grid_buffer_allocs: grid_buffer_allocs(),
             // ORDERING: SeqCst — same argument as the counters above
             in_flight: self.in_flight.load(Ordering::SeqCst),
+            queue_depth: self.queue_depth.get().max(0) as u64,
+            queue_wait_ns: self.queue_wait_ns.snapshot(),
+            execute_ns: self.execute_ns.snapshot(),
+            reply_ns: self.reply_ns.snapshot(),
+        }
+    }
+
+    /// Best-effort flight-recorder dump (a job panicked, or shutdown).
+    fn dump_flight(&self, why: &str) {
+        if let Some(path) = &self.cfg.flight_recorder {
+            if let Err(e) = trace::write_chrome_json(path) {
+                eprintln!("sgct serve: flight recorder dump ({why}) failed: {e}");
+            }
+        }
+    }
+
+    /// Sample the queue depth into the gauge (and, when tracing, a counter
+    /// track).  Call with the queue lock held so samples are exact.
+    fn sample_depth(&self, depth: usize) {
+        self.queue_depth.set(depth as i64);
+        if trace::enabled() {
+            // cold path (once per admission/pop) — interning inline is fine
+            trace::counter_value(trace::intern("queue-depth"), depth as u64);
         }
     }
 
@@ -169,6 +206,11 @@ impl ServerHandle {
     pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         let listener = UnixSocket::bind(&cfg.socket)
             .with_context(|| format!("sgct serve: binding {}", cfg.socket.display()))?;
+        if cfg.flight_recorder.is_some() {
+            // the always-on ring: bounded memory (drop-oldest), dumped on
+            // a job panic or at shutdown
+            trace::enable();
+        }
         let workers_n = cfg.workers.max(1);
         let shared = Arc::new(Shared {
             cfg,
@@ -180,6 +222,10 @@ impl ServerHandle {
             rejected_busy: AtomicU64::new(0),
             rejected_too_large: AtomicU64::new(0),
             in_flight: AtomicU64::new(0),
+            queue_depth: Gauge::new(),
+            queue_wait_ns: Histogram::new(),
+            execute_ns: Histogram::new(),
+            reply_ns: Histogram::new(),
         });
         let workers = (0..workers_n)
             .map(|i| {
@@ -224,6 +270,7 @@ impl ServerHandle {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        self.shared.dump_flight("shutdown");
         self.shared.stats()
     }
 }
@@ -322,6 +369,7 @@ fn session(shared: Arc<Shared>, mut sock: UnixSocket) {
                         // ORDERING: SeqCst — stats counter under the queue
                         // lock; see Shared::stats
                         shared.in_flight.fetch_add(1, Ordering::SeqCst);
+                        shared.sample_depth(q.heap.len());
                         shared.available.notify_one();
                         true
                     }
@@ -355,11 +403,17 @@ fn session(shared: Arc<Shared>, mut sock: UnixSocket) {
 /// Pop the heaviest admitted job, run it, reply.  Workers drain the
 /// queue even after shutdown so every admitted client gets an answer.
 fn worker(shared: Arc<Shared>) {
+    if trace::enabled() {
+        if let Some(name) = std::thread::current().name() {
+            trace::label_thread(name);
+        }
+    }
     loop {
         let pending = {
             let mut q = shared.queue.lock().expect("serve queue poisoned");
             loop {
                 if let Some(p) = q.heap.pop() {
+                    shared.sample_depth(q.heap.len());
                     break p;
                 }
                 // ORDERING: SeqCst — shutdown flag; see Shared::stop
@@ -372,6 +426,7 @@ fn worker(shared: Arc<Shared>) {
             }
         };
         let (id, dim) = (pending.spec.id, pending.spec.levels.dim());
+        shared.queue_wait_ns.observe(pending.arrived.elapsed().as_nanos() as u64);
         // the job's own deadline: if it lapsed while queued, answering
         // `Expired` without computing is strictly better than a slow
         // answer the caller has already stopped waiting for
@@ -389,9 +444,15 @@ fn worker(shared: Arc<Shared>) {
         let threads = shared.cfg.job_threads;
         let spec = pending.spec;
         // a panicking job must cost one reply, not one worker
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            job::execute(&spec, &arena, threads)
-        }));
+        let started = Instant::now();
+        let outcome = {
+            let _span = crate::trace_span!("job-execute", id as u64);
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                job::execute(&spec, &arena, threads)
+            }))
+        };
+        shared.execute_ns.observe(started.elapsed().as_nanos() as u64);
+        let panicked = outcome.is_err();
         let reply = match outcome {
             Ok(Ok(sg)) => {
                 // ORDERING: SeqCst — stats counter; see Shared::stats
@@ -400,11 +461,17 @@ fn worker(shared: Arc<Shared>) {
             }
             Ok(Err(_)) | Err(_) => wire::encode_job_err(id, RejectReason::Internal, 0, dim),
         };
+        if panicked {
+            crate::trace_instant!("job-panic", id as u64);
+            shared.dump_flight("job panic");
+        }
         // ORDERING: SeqCst — stats counter; see Shared::stats
         shared.in_flight.fetch_sub(1, Ordering::SeqCst);
         // a dead client's session dropped the receiver; discarding the
         // reply is the whole containment story
+        let reply_started = Instant::now();
         let _ = pending.reply.send(reply);
+        shared.reply_ns.observe(reply_started.elapsed().as_nanos() as u64);
     }
 }
 

@@ -1,0 +1,290 @@
+//! Conformance suite for the tracing plane (`perf::trace`).
+//!
+//! The tracer is process-global state (one ring registry, one enable
+//! flag), so every test here serializes on one mutex and starts from
+//! `reset()` — putting these in separate integration files would let
+//! cargo run them in separate processes, but inside this file the harness
+//! runs them on a shared thread pool and they would race on the flag.
+//!
+//! The load-bearing property is **zero perturbation**: a traced run must
+//! produce bitwise identical numbers to an untraced run, across the
+//! parallel hierarchizer, the fused sweep, the fault-injected reduction,
+//! and a served job.  The rest is plumbing conformance: spans well-formed
+//! (per-track disjoint-or-nested), ring overflow drops oldest first, and
+//! the Chrome JSON export survives the crate's own parser.
+
+use std::sync::{Mutex, MutexGuard};
+
+use sgct::combi::CombinationScheme;
+use sgct::grid::{FullGrid, LevelVector};
+use sgct::hierarchize::{FuseParams, ParallelHierarchizer, Variant};
+use sgct::perf::trace::{self, EventKind};
+use sgct::util::rng::SplitMix64;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize tests on the global tracer; a panicked holder must not
+/// poison the rest of the suite.
+fn tracer_lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Clean slate: recording off, all rings dropped.
+fn fresh() {
+    trace::disable();
+    trace::reset();
+}
+
+fn seeded_grid(levels: &[u8], seed: u64) -> FullGrid {
+    let mut g = FullGrid::new(LevelVector::new(levels));
+    let mut rng = SplitMix64::new(seed);
+    g.fill_with(|_| rng.next_f64() - 0.5);
+    g
+}
+
+fn bits_of(g: &FullGrid) -> Vec<u64> {
+    g.as_slice().iter().map(|v| v.to_bits()).collect()
+}
+
+// ------------------------------------------------------------ wellformedness
+
+/// Every span on one track must be disjoint from or properly nested in
+/// its predecessors — what a sane per-thread RAII discipline guarantees
+/// and what trace viewers assume.
+fn assert_wellformed(t: &trace::Trace) {
+    for e in &t.events {
+        assert!(
+            e.end_cycles >= e.start_cycles,
+            "event {:?} on track {} runs backwards: [{}, {}]",
+            e.name,
+            e.track,
+            e.start_cycles,
+            e.end_cycles
+        );
+    }
+    let track_ids: Vec<u32> = t.tracks.iter().map(|ti| ti.track).collect();
+    for track in track_ids {
+        let mut spans: Vec<&trace::TraceEvent> = t
+            .events
+            .iter()
+            .filter(|e| e.track == track && e.kind == EventKind::Span)
+            .collect();
+        // outer spans first among equals: start ascending, end descending
+        spans.sort_by(|a, b| {
+            a.start_cycles
+                .cmp(&b.start_cycles)
+                .then(b.end_cycles.cmp(&a.end_cycles))
+        });
+        let mut stack: Vec<&trace::TraceEvent> = Vec::new();
+        for s in spans {
+            while stack.last().is_some_and(|top| top.end_cycles <= s.start_cycles) {
+                stack.pop();
+            }
+            if let Some(top) = stack.last() {
+                assert!(
+                    s.end_cycles <= top.end_cycles,
+                    "track {track}: span {:?} [{}, {}] partially overlaps {:?} [{}, {}]",
+                    s.name,
+                    s.start_cycles,
+                    s.end_cycles,
+                    top.name,
+                    top.start_cycles,
+                    top.end_cycles
+                );
+            }
+            stack.push(s);
+        }
+    }
+}
+
+#[test]
+fn traced_hierarchize_spans_are_wellformed() {
+    let _g = tracer_lock();
+    fresh();
+    trace::enable();
+    let mut grid = seeded_grid(&[5, 4, 3], 11);
+    ParallelHierarchizer::new(Variant::BfsOverVectorized, 4).hierarchize(&mut grid);
+    let t = trace::snapshot();
+    fresh();
+    assert!(!t.events.is_empty(), "traced run recorded nothing");
+    assert_eq!(t.dropped(), 0, "default capacity overflowed on a small run");
+    assert!(
+        t.events.iter().any(|e| e.kind == EventKind::Span),
+        "no spans in a traced hierarchize"
+    );
+    assert_wellformed(&t);
+}
+
+// ------------------------------------------------------------- ring overflow
+
+#[test]
+fn ring_overflow_drops_oldest_and_counts_them() {
+    let _g = tracer_lock();
+    fresh();
+    trace::enable_with_capacity(16);
+    let name = trace::intern("overflow-probe");
+    for i in 0..100u64 {
+        trace::instant(name, i);
+    }
+    let t = trace::snapshot();
+    fresh();
+    assert_eq!(t.dropped(), 84, "100 events through a 16-slot ring drop 84");
+    let mut args: Vec<u64> = t.events.iter().map(|e| e.arg).collect();
+    args.sort_unstable();
+    assert_eq!(args, (84..100).collect::<Vec<u64>>(), "survivors must be the newest");
+}
+
+// -------------------------------------------------------------- export/parse
+
+#[test]
+fn chrome_json_roundtrips_through_own_parser() {
+    let _g = tracer_lock();
+    fresh();
+    trace::enable();
+    trace::label_thread("conformance \"main\"");
+    {
+        let _outer = sgct::trace_span!("outer");
+        let _inner = sgct::trace_span!("inner", 7u64);
+    }
+    sgct::trace_instant!("tick", 3u64);
+    trace::counter_value(trace::intern("depth"), 5);
+    let doc = trace::chrome_json(&trace::snapshot());
+    fresh();
+
+    let events = trace::parse_chrome_json(&doc).expect("own export must parse");
+    let spans: Vec<&trace::ParsedEvent> = events.iter().filter(|e| e.ph == 'X').collect();
+    assert_eq!(spans.len(), 2);
+    assert!(spans.iter().any(|e| e.name == "outer"));
+    assert!(spans.iter().any(|e| e.name == "inner" && e.arg == "7"));
+    assert!(events.iter().any(|e| e.ph == 'i' && e.name == "tick"));
+    assert!(events.iter().any(|e| e.ph == 'C' && e.name == "depth" && e.arg == "5"));
+    // the thread label must survive JSON escaping and come back verbatim
+    assert!(
+        events
+            .iter()
+            .any(|e| e.ph == 'M' && e.arg == "conformance \"main\""),
+        "thread_name metadata lost or mangled"
+    );
+    for e in &events {
+        assert!(e.dur >= 0.0, "negative duration on {:?}", e.name);
+    }
+}
+
+#[test]
+fn disabled_tracer_records_nothing() {
+    let _g = tracer_lock();
+    fresh();
+    let mut grid = seeded_grid(&[4, 4], 3);
+    ParallelHierarchizer::new(Variant::BfsOverVectorized, 2).hierarchize(&mut grid);
+    sgct::trace_instant!("should-not-appear", 1u64);
+    let t = trace::snapshot();
+    assert!(t.events.is_empty(), "disabled tracer still recorded {} events", t.events.len());
+}
+
+// ------------------------------------------------------- zero perturbation
+
+#[test]
+fn hierarchize_bitwise_equal_with_tracing_on() {
+    let _g = tracer_lock();
+    fresh();
+    for (variant, fuse) in [
+        (Variant::BfsOverVectorized, FuseParams::AUTO),
+        (Variant::BfsOverVectorizedFused, FuseParams::AUTO),
+    ] {
+        let p = ParallelHierarchizer::new(variant, 4).with_fuse(fuse);
+        let mut off = seeded_grid(&[5, 4, 3], 42);
+        p.hierarchize(&mut off);
+
+        trace::enable();
+        let mut on = seeded_grid(&[5, 4, 3], 42);
+        p.hierarchize(&mut on);
+        let t = trace::snapshot();
+        fresh();
+
+        assert!(!t.events.is_empty(), "{variant:?}: traced run recorded nothing");
+        assert_eq!(
+            bits_of(&off),
+            bits_of(&on),
+            "{variant:?}: tracing perturbed the hierarchization"
+        );
+    }
+}
+
+#[test]
+fn chaos_reduce_bitwise_equal_with_tracing_on() {
+    let _g = tracer_lock();
+    fresh();
+    let scheme = CombinationScheme::regular(3, 5);
+    let ranks = 4;
+    let opts = sgct::comm::ReduceOptions {
+        threads: 1,
+        chaos: sgct::comm::ChaosSet::parse("7:kill-during-scatter:2").unwrap(),
+        recovery_seed: Some(42),
+        ..Default::default()
+    };
+
+    let mut grids = sgct::comm::seeded_block(&scheme, 0, scheme.len(), 42);
+    let (off, m_off) =
+        sgct::comm::reduce_in_process(&scheme, &mut grids, ranks, &opts).expect("untraced reduce");
+
+    trace::enable();
+    let mut grids = sgct::comm::seeded_block(&scheme, 0, scheme.len(), 42);
+    let (on, m_on) =
+        sgct::comm::reduce_in_process(&scheme, &mut grids, ranks, &opts).expect("traced reduce");
+    let t = trace::snapshot();
+    fresh();
+
+    assert!(on.bitwise_eq(&off), "tracing perturbed the fault-injected reduction");
+    let fault_off = m_off.iter().find(|m| m.rank == 0).and_then(|m| m.fault.clone());
+    let fault_on = m_on.iter().find(|m| m.rank == 0).and_then(|m| m.fault.clone());
+    assert_eq!(
+        fault_off.as_ref().map(|f| f.dead_ranks.clone()),
+        fault_on.as_ref().map(|f| f.dead_ranks.clone()),
+        "tracing changed the fault outcome"
+    );
+    // the acceptance shape: per-rank tracks, the reduction phases as
+    // spans, the injected fault as an instant
+    assert!(
+        t.tracks.iter().any(|ti| ti.label.starts_with("rank ")),
+        "no rank-labelled tracks in a traced reduction"
+    );
+    for want in ["local-compute", "scatter"] {
+        assert!(
+            t.events.iter().any(|e| e.kind == EventKind::Span && e.name == want),
+            "missing {want:?} span in a traced reduction"
+        );
+    }
+    assert!(
+        t.events
+            .iter()
+            .any(|e| e.kind == EventKind::Instant && e.name.starts_with("fault: ")),
+        "injected fault left no instant event"
+    );
+    assert_wellformed(&t);
+}
+
+#[test]
+fn served_job_bitwise_equal_with_tracing_on() {
+    let _g = tracer_lock();
+    fresh();
+    let spec = sgct::comm::JobSpec {
+        id: 9,
+        kind: sgct::comm::JobKind::Combine,
+        levels: LevelVector::new(&[4, 4]),
+        tau: 1,
+        steps: 1,
+        seed: 42,
+        deadline_ms: 0,
+    };
+    let arena = std::sync::Arc::new(sgct::coordinator::GridArena::new());
+    let off = sgct::serve::job::execute(&spec, &arena, 1).expect("untraced job");
+
+    trace::enable();
+    let arena = std::sync::Arc::new(sgct::coordinator::GridArena::new());
+    let on = sgct::serve::job::execute(&spec, &arena, 1).expect("traced job");
+    let t = trace::snapshot();
+    fresh();
+
+    assert!(on.bitwise_eq(&off), "tracing perturbed a served job");
+    assert!(!t.events.is_empty(), "traced served job recorded nothing");
+}
